@@ -1,0 +1,66 @@
+//! Growth-operator zoo tour: grow the same pretrained BERT-Small into
+//! BERT-Base with every operator in the zoo (plus LiGO) and compare the
+//! *immediate* quality of each initialization — a concrete look at the
+//! paper's §3.1 taxonomy and Prop. 1.
+//!
+//! Run: cargo run --release --example operator_zoo
+
+use anyhow::Result;
+
+use ligo::config::{artifacts_dir, Registry};
+use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
+use ligo::coordinator::trainer::{eval_store, Trainer};
+use ligo::data::batches::mlm_batch;
+use ligo::data::corpus::Corpus;
+use ligo::experiments::common::{recipe_for, text_batches};
+use ligo::growth;
+use ligo::runtime::Runtime;
+use ligo::util::rng::Rng;
+
+fn main() -> Result<()> {
+    ligo::util::logging::init_from_env();
+    let rt = Runtime::cpu(artifacts_dir())?;
+    let reg = Registry::load(&artifacts_dir())?;
+    let small = reg.model("bert_small")?.clone();
+    let large = reg.model("bert_base")?.clone();
+    let corpus = Corpus::new(small.vocab, 0);
+
+    println!("pretraining {} (250 steps)...", small.name);
+    let params = Trainer::scratch_params(&rt, &small, 0)?;
+    let mut tr = Trainer::new(&rt, &small, recipe_for(&small, 250), params)?;
+    let mut b = text_batches(&corpus, &small, 1);
+    let c = tr.run("small", &mut b, 250)?;
+    let small_params = tr.params.clone();
+    println!("small model loss: {:.4}\n", c.final_loss());
+
+    let fwd = rt.load(&format!("fwd_{}", large.name))?;
+    let c2 = corpus.clone();
+    let l2 = large.clone();
+    let mut eval = move |i: usize| mlm_batch(&c2, &l2, &mut Rng::new(0xEEAA_0000 + i as u64));
+
+    println!("{:<16} {:>12} {:>14}", "operator", "init loss", "vs scratch");
+    let scratch = Trainer::scratch_params(&rt, &large, 5)?;
+    let (scratch_loss, _) = eval_store(&fwd, &scratch, &mut eval, 8)?;
+    println!("{:<16} {:>12.4} {:>14}", "scratch", scratch_loss, "-");
+    for name in growth::ALL {
+        let op = growth::by_name(name).unwrap();
+        let grown = op.grow(&small_params, &small, &large);
+        let (loss, _) = eval_store(&fwd, &grown, &mut eval, 8)?;
+        println!("{:<16} {:>12.4} {:>13.1}%", name, loss,
+            (1.0 - loss / scratch_loss) * 100.0);
+    }
+    // the learned operator
+    let c3 = corpus.clone();
+    let l3 = large.clone();
+    let mut mk = move |s: usize| mlm_batch(&c3, &l3, &mut Rng::new(0x700 + s as u64));
+    for m_steps in [0usize, 25, 100] {
+        let grown = ligo_grow(&rt, &small, &large, &small_params, &mut mk,
+            &LigoOptions { steps: m_steps, ..Default::default() })?;
+        let (loss, _) = eval_store(&fwd, &grown.params, &mut eval, 8)?;
+        println!("{:<16} {:>12.4} {:>13.1}%", format!("ligo@{m_steps}"), loss,
+            (1.0 - loss / scratch_loss) * 100.0);
+    }
+    println!("\n(ligo@0 = the stacking+duplication pattern of Prop. 1; the gap to");
+    println!(" ligo@100 is what 100 steps of M-learning buys before training begins)");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Quickstart: the LiGO pipeline end to end in ~a minute on one CPU core.
+//!
+//! 1. pretrain a small BERT on the synthetic corpus,
+//! 2. learn the LiGO growth operator M with 100 SGD steps,
+//! 3. initialize BERT-Base as M(Theta_small) and keep training,
+//! 4. compare against training BERT-Base from scratch and report the
+//!    FLOPs savings (the paper's headline number).
+//!
+//! Run: cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use ligo::config::{artifacts_dir, Registry};
+use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
+use ligo::coordinator::metrics::savings;
+use ligo::coordinator::trainer::Trainer;
+use ligo::data::batches::mlm_batch;
+use ligo::data::corpus::Corpus;
+use ligo::experiments::common::{recipe_for, text_batches};
+use ligo::runtime::Runtime;
+use ligo::util::rng::Rng;
+
+fn main() -> Result<()> {
+    ligo::util::logging::init_from_env();
+    let rt = Runtime::cpu(artifacts_dir())?;
+    let reg = Registry::load(&artifacts_dir())?;
+    println!("platform: {}", rt.platform());
+
+    let small = reg.model("bert_small")?.clone();
+    let large = reg.model("bert_base")?.clone();
+    let corpus = Corpus::new(small.vocab, 0);
+
+    // --- 1. pretrain the small model -------------------------------------
+    println!("\n[1/4] pretraining {} ({} params)...", small.name,
+        reg.param_counts.get(&small.name).unwrap_or(&0));
+    let params = Trainer::scratch_params(&rt, &small, 0)?;
+    let mut tr_small = Trainer::new(&rt, &small, recipe_for(&small, 150), params)?;
+    let mut b_small = text_batches(&corpus, &small, 1);
+    let c_small = tr_small.run("small", &mut b_small, 150)?;
+    println!("      small loss: {:.3} -> {:.3}", c_small.loss[0], c_small.final_loss());
+
+    // --- 2. learn the growth operator M (the paper's 100 steps) ----------
+    println!("\n[2/4] learning LiGO operator M (100 SGD steps)...");
+    let c2 = corpus.clone();
+    let l2 = large.clone();
+    let mut mk = move |s: usize| mlm_batch(&c2, &l2, &mut Rng::new(500 + s as u64));
+    let grown = ligo_grow(&rt, &small, &large, &tr_small.params, &mut mk, &LigoOptions::default())?;
+    println!("      M-loss {:.3}, +{:.2e} FLOPs overhead", grown.final_m_loss, grown.extra_flops);
+
+    // --- 3. train the grown large model ----------------------------------
+    println!("\n[3/4] training {} from LiGO init...", large.name);
+    let steps = 250;
+    let mut tr_ligo = Trainer::new(&rt, &large, recipe_for(&large, steps), grown.params)?;
+    tr_ligo.flops_offset = grown.extra_flops;
+    let mut b1 = text_batches(&corpus, &large, 2);
+    let mut curve_ligo = tr_ligo.run("LiGO", &mut b1, steps)?;
+    curve_ligo.name = "LiGO".into();
+
+    // --- 4. baseline: train from scratch ----------------------------------
+    println!("\n[4/4] training {} from scratch...", large.name);
+    let scratch = Trainer::scratch_params(&rt, &large, 9)?;
+    let mut tr_scr = Trainer::new(&rt, &large, recipe_for(&large, steps), scratch)?;
+    let mut b2 = text_batches(&corpus, &large, 2);
+    let mut curve_scr = tr_scr.run("Scratch", &mut b2, steps)?;
+    curve_scr.name = "Scratch".into();
+
+    println!("\n==== results =========================================");
+    println!("scratch final loss: {:.4}", curve_scr.final_loss());
+    println!("LiGO    final loss: {:.4}", curve_ligo.final_loss());
+    match savings(&curve_scr, &curve_ligo, false, false) {
+        Some(s) => println!(
+            "FLOPs savings to reach scratch-final loss: {:+.1}%  (paper: +44.7%)",
+            s * 100.0
+        ),
+        None => println!("LiGO did not reach the scratch loss in this short run"),
+    }
+    ligo::coordinator::metrics::write_report(
+        std::path::Path::new("reports"),
+        "quickstart",
+        &[curve_scr, curve_ligo],
+    )?;
+    println!("curves written to reports/quickstart.json");
+    Ok(())
+}

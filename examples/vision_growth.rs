@@ -1,0 +1,74 @@
+//! Vision-transformer growth (the paper's DeiT-S -> DeiT-B scenario, Fig. 4)
+//! on the procedural-shapes ImageNet analog: pretrain ViT-S, grow to ViT-B
+//! with both bert2BERT (AKI) and LiGO, and compare accuracy-vs-FLOPs.
+//!
+//! Run: cargo run --release --example vision_growth -- [--steps N]
+
+use anyhow::Result;
+
+use ligo::config::{artifacts_dir, Registry};
+use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
+use ligo::coordinator::metrics::savings;
+use ligo::coordinator::trainer::Trainer;
+use ligo::data::vision::VisionTask;
+use ligo::experiments::common::{recipe_for, vision_batches};
+use ligo::growth;
+use ligo::runtime::Runtime;
+use ligo::util::cli::Args;
+use ligo::util::rng::Rng;
+
+fn main() -> Result<()> {
+    ligo::util::logging::init_from_env();
+    let args = Args::from_env();
+    let steps = args.get_usize("steps", 300);
+    let pre = args.get_usize("pre", 200);
+
+    let rt = Runtime::cpu(artifacts_dir())?;
+    let reg = Registry::load(&artifacts_dir())?;
+    let small = reg.model("vit_s")?.clone();
+    let large = reg.model("vit_b")?.clone();
+    let task = VisionTask::pretrain();
+
+    println!("[1/3] pretraining {} on the shapes dataset ({pre} steps)", small.name);
+    let params = Trainer::scratch_params(&rt, &small, 0)?;
+    let mut tr = Trainer::new(&rt, &small, recipe_for(&small, pre), params)?;
+    let mut b = vision_batches(&task, &small, 3);
+    let c = tr.run("vit_s", &mut b, pre)?;
+    println!("    acc {:.3} -> {:.3}", c.metric[0], c.final_metric().unwrap());
+    let small_params = tr.params.clone();
+
+    println!("[2/3] growing to {} via AKI and LiGO", large.name);
+    let aki = growth::by_name("aki").unwrap().grow(&small_params, &small, &large);
+    let t2 = task.clone();
+    let l2 = large.clone();
+    let mut mk = move |s: usize| t2.batch(&l2, &mut Rng::new(0xCAFE + s as u64));
+    let grown = ligo_grow(&rt, &small, &large, &small_params, &mut mk,
+        &LigoOptions { steps: 30, ..Default::default() })?;
+
+    println!("[3/3] training {} from scratch / AKI / LiGO ({steps} steps each)", large.name);
+    let mut curves = Vec::new();
+    for (name, init, offset) in [
+        ("Scratch", Trainer::scratch_params(&rt, &large, 5)?, 0.0),
+        ("bert2BERT", aki, 0.0),
+        ("LiGO", grown.params, grown.extra_flops),
+    ] {
+        let mut tr = Trainer::new(&rt, &large, recipe_for(&large, steps), init)?;
+        tr.flops_offset = offset;
+        let mut b = vision_batches(&task, &large, 8);
+        let mut curve = tr.run(name, &mut b, steps)?;
+        curve.name = name.to_string();
+        println!("    {name:<10} start acc {:.3} final acc {:.3}",
+            curve.metric[0], curve.final_metric().unwrap());
+        curves.push(curve);
+    }
+    let scratch = curves[0].clone();
+    for c in &curves[1..] {
+        if let Some(s) = savings(&scratch, c, false, true) {
+            println!("{:<10} FLOPs savings at scratch-final accuracy: {:+.1}% (paper LiGO: +55.4%)",
+                c.name, s * 100.0);
+        }
+    }
+    ligo::coordinator::metrics::write_report(
+        std::path::Path::new("reports"), "vision_growth", &curves)?;
+    Ok(())
+}

@@ -1,0 +1,220 @@
+"""AOT compile path: lower every artifact to HLO *text* + a JSON manifest.
+
+HLO text (NOT HloModuleProto.serialize()) is the interchange format: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published `xla` 0.1.6 rust crate links) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Per artifact we write:
+  artifacts/{name}.hlo.txt        — the XLA computation
+  artifacts/{name}.manifest.json  — flattened input/output (name, shape, dtype)
+plus once:
+  artifacts/configs.json          — the model/pair registry (Rust presets)
+  artifacts/goldens.json          — deterministic input/output probes for
+                                    cross-language integration tests
+
+Incremental: each manifest records a hash of python/compile/**; unchanged
+artifacts are skipped. `--only REGEX` restricts the set; `--force` rebuilds.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+import time
+
+import numpy as np
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import configs as C
+from .detinit import det_fill
+
+
+def _src_hash() -> str:
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for dirpath, _dirs, files in sorted(os.walk(root)):
+        if "__pycache__" in dirpath:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _flat_entries(tree, prefixes):
+    """Flatten a tuple of dicts/leaves exactly the way jax.jit does (dicts in
+    sorted-key order), producing [(name, shape, dtype), ...]."""
+    out = []
+    for prefix, sub in zip(prefixes, tree):
+        if isinstance(sub, dict):
+            for k in sorted(sub.keys()):
+                v = sub[k]
+                out.append({"name": f"{prefix}/{k}",
+                            "shape": list(v.shape),
+                            "dtype": np.dtype(v.dtype).name})
+        else:
+            out.append({"name": prefix, "shape": list(sub.shape),
+                        "dtype": np.dtype(sub.dtype).name})
+    return out
+
+
+_ARG_PREFIXES = {
+    "fwd": ("params", "batch"),
+    "grad": ("params", "batch"),
+    "grad_gated": ("params", "batch"),
+    "kd_grad": ("params", "teacher", "batch"),
+    "ligo_grad": ("ligo", "small", "batch"),
+    "ligo_apply": ("ligo", "small"),
+    "span_fwd": ("params", "batch"),
+    "span_grad": ("params", "batch"),
+    "adapter_fwd": ("trainable", "frozen", "batch"),
+    "adapter_grad": ("trainable", "frozen", "batch"),
+}
+
+_OUT_PREFIXES = {
+    "fwd": ("loss", "metric"),
+    "grad": ("loss", "metric", "grads"),
+    "grad_gated": ("loss", "grads"),
+    "kd_grad": ("loss", "grads"),
+    "ligo_grad": ("loss", "grads"),
+    "ligo_apply": ("out",),
+    "span_fwd": ("loss", "metric"),
+    "span_grad": ("loss", "metric", "grads"),
+    "adapter_fwd": ("loss", "metric"),
+    "adapter_grad": ("loss", "metric", "grads"),
+}
+
+
+def _kind(name: str) -> str:
+    for k in sorted(_ARG_PREFIXES, key=len, reverse=True):
+        if name.startswith(k + "_"):
+            return k
+    raise ValueError(name)
+
+
+def lower_artifact(name, out_dir, src_hash, force=False):
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    man_path = os.path.join(out_dir, f"{name}.manifest.json")
+    if not force and os.path.exists(hlo_path) and os.path.exists(man_path):
+        try:
+            with open(man_path) as f:
+                if json.load(f).get("src_hash") == src_hash:
+                    return "cached"
+        except Exception:
+            pass
+    t0 = time.time()
+    fn, specs = M.build(name)
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    text = to_hlo_text(lowered)
+    kind = _kind(name)
+    inputs = _flat_entries(specs, _ARG_PREFIXES[kind])
+
+    out_shape = jax.eval_shape(fn, *specs)
+    if not isinstance(out_shape, tuple):
+        out_shape = (out_shape,)
+    out_prefixes = list(_OUT_PREFIXES[kind])[: len(out_shape)]
+    # variable-arity outputs: fwd/grad may or may not carry a metric
+    if kind in ("fwd", "grad") and len(out_shape) < len(_OUT_PREFIXES[kind]):
+        out_prefixes = (["loss", "grads"] if kind == "grad" else ["loss"])[: len(out_shape)]
+    outputs = _flat_entries(out_shape, out_prefixes)
+
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    with open(man_path, "w") as f:
+        json.dump({"name": name, "src_hash": src_hash,
+                   "inputs": inputs, "outputs": outputs}, f, indent=1)
+    return f"built in {time.time() - t0:.1f}s ({len(text) // 1024} KiB)"
+
+
+# ----------------------------------------------------------------------------
+# Goldens: run tiny graphs with deterministic fills, record probes so the Rust
+# integration tests can verify the runtime end-to-end with exact expectations.
+# ----------------------------------------------------------------------------
+
+def _det_batch(cfg, seed=7):
+    bs = M.batch_specs(cfg)
+    out = {}
+    for k in sorted(bs):
+        s = bs[k]
+        n = int(np.prod(s.shape)) if s.shape else 1
+        idx = np.arange(n, dtype=np.int64)
+        if np.dtype(s.dtype) == np.int32:
+            hi = cfg.vocab if k == "tokens" else max(cfg.n_classes, 2)
+            if k in ("starts", "ends"):
+                hi = cfg.seq
+            vals = ((idx * 2654435761 + seed) % hi).astype(np.int32)
+            if k == "labels" and cfg.family in ("bert", "gpt") and not cfg.n_classes:
+                vals = np.where(idx % 7 == 0, vals % cfg.vocab, -1).astype(np.int32)
+            out[k] = vals.reshape(s.shape)
+        else:
+            out[k] = (((idx * 1103515245 + seed) % 1000) / 1000.0 - 0.5).astype(
+                np.float32).reshape(s.shape)
+    return out
+
+
+def emit_goldens(out_dir):
+    """Golden fwd losses for the small graphs, with detinit params."""
+    goldens = {}
+    for name in ("bert_small", "gpt_base", "vit_s"):
+        cfg = C.REGISTRY[name]
+        shapes = M.param_shapes(cfg)
+        params = {k: det_fill(k, v) for k, v in shapes.items()}
+        batch = _det_batch(cfg)
+        fn, _ = M.build(f"fwd_{name}")
+        res = fn(params, batch)
+        goldens[f"fwd_{name}"] = {
+            "loss": float(res[0]),
+            "batch_seed": 7,
+            "probe_params": {
+                k: [float(x) for x in np.asarray(params[k]).reshape(-1)[:4]]
+                for k in list(sorted(shapes))[:3]
+            },
+        }
+    with open(os.path.join(out_dir, "goldens.json"), "w") as f:
+        json.dump(goldens, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    names = sorted(M.artifact_registry().keys())
+    if args.list:
+        print("\n".join(names))
+        return
+    if args.only:
+        names = [n for n in names if re.search(args.only, n)]
+    os.makedirs(args.out, exist_ok=True)
+    src = _src_hash()
+
+    with open(os.path.join(args.out, "configs.json"), "w") as f:
+        json.dump(C.to_json(), f, indent=1)
+
+    t0 = time.time()
+    for i, n in enumerate(names):
+        status = lower_artifact(n, args.out, src, force=args.force)
+        print(f"[{i + 1}/{len(names)}] {n}: {status}", flush=True)
+    emit_goldens(args.out)
+    print(f"configs.json + goldens.json written; total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Model configuration registry — single source of truth for both layers.
+
+`aot.py` exports this registry to `artifacts/configs.json`; the Rust
+coordinator reads that file for its presets, so python and rust can never
+disagree about shapes.
+
+Presets mirror the paper's Table 4 families at a scale that trains in
+minutes on one CPU core, preserving the growth *ratios* that drive every
+figure (depth 6->12 ~= 2x, width 512->768 = 1.5x), plus a ~100M-parameter
+`e2e` pair for the end-to-end driver.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str          # bert | gpt | vit | cait
+    layers: int
+    dim: int
+    heads: int
+    vocab: int = 0       # text families
+    seq: int = 0         # text: tokens; vision: derived
+    batch: int = 16      # the batch baked into this config's artifacts
+    img: int = 0         # vision: image side
+    patch: int = 0       # vision: patch side
+    channels: int = 3
+    n_classes: int = 0   # vision / probe heads
+    cls_layers: int = 0  # cait: class-attention layers
+    ffn_mult: int = 4
+
+    @property
+    def ffn(self) -> int:
+        return self.ffn_mult * self.dim
+
+    @property
+    def tokens(self) -> int:
+        """Sequence length seen by the transformer body."""
+        if self.family in ("vit", "cait"):
+            n = (self.img // self.patch) ** 2
+            return n + (1 if self.family == "vit" else 0)  # cait: cls joins later
+        return self.seq
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+
+# ----------------------------------------------------------------------------
+# Preset registry. Scale factor vs the paper: dims /~10, layers /2, vocab
+# synthetic. Ratios (the quantity the experiments measure) are preserved.
+# ----------------------------------------------------------------------------
+_P = [
+    # BERT family (paper: Small 6L/512, Base 12L/768, Large 24L/1024)
+    ModelConfig("bert_small", "bert", layers=3, dim=48, heads=4, vocab=512, seq=32, batch=16),
+    ModelConfig("bert_base", "bert", layers=6, dim=72, heads=6, vocab=512, seq=32, batch=16),
+    ModelConfig("bert_large", "bert", layers=12, dim=96, heads=8, vocab=512, seq=32, batch=16),
+    # Ablation sources: depth-only (same width as base) and width-only (same depth)
+    ModelConfig("bert_d3w72", "bert", layers=3, dim=72, heads=6, vocab=512, seq=32, batch=16),
+    ModelConfig("bert_d6w48", "bert", layers=6, dim=48, heads=4, vocab=512, seq=32, batch=16),
+    # GPT2 family (paper: Base 12L/768, Medium 24L/1024)
+    ModelConfig("gpt_base", "gpt", layers=6, dim=64, heads=4, vocab=512, seq=64, batch=8),
+    ModelConfig("gpt_medium", "gpt", layers=12, dim=96, heads=6, vocab=512, seq=64, batch=8),
+    # DeiT family (paper: S 12L/384, B 12L/768 — width-dominant growth)
+    ModelConfig("vit_s", "vit", layers=6, dim=48, heads=4, img=32, patch=8, n_classes=10, batch=16),
+    ModelConfig("vit_b", "vit", layers=6, dim=96, heads=8, img=32, patch=8, n_classes=10, batch=16),
+    # CaiT family (paper: XS 24L/288, S 24L/384) — has class-attention stage
+    ModelConfig("cait_xs", "cait", layers=6, dim=48, heads=4, img=32, patch=8, n_classes=10,
+                cls_layers=2, batch=16),
+    ModelConfig("cait_s", "cait", layers=6, dim=64, heads=4, img=32, patch=8, n_classes=10,
+                cls_layers=2, batch=16),
+    # End-to-end pair: ~25M -> ~91M params (the required ~100M driver)
+    ModelConfig("e2e_small", "bert", layers=6, dim=512, heads=8, vocab=8192, seq=64, batch=4),
+    ModelConfig("e2e_base", "bert", layers=12, dim=768, heads=12, vocab=8192, seq=64, batch=4),
+    # Transfer probes (bodies share bert/vit names; heads are task-specific)
+    ModelConfig("probe_bert_base", "bert", layers=6, dim=72, heads=6, vocab=512, seq=32,
+                n_classes=4, batch=16),
+    ModelConfig("probe_bert_small", "bert", layers=3, dim=48, heads=4, vocab=512, seq=32,
+                n_classes=4, batch=16),
+    ModelConfig("probe_vit_b", "vit", layers=6, dim=96, heads=8, img=32, patch=8,
+                n_classes=20, batch=16),
+]
+
+REGISTRY = {c.name: c for c in _P}
+
+# LiGO growth pairs (small -> large). Tuple: (source, target)
+PAIRS = [
+    ("bert_small", "bert_base"),
+    ("bert_small", "bert_large"),
+    ("bert_base", "bert_large"),
+    ("bert_d3w72", "bert_base"),   # depth-only: 3L->6L, width 72 fixed
+    ("bert_d6w48", "bert_base"),   # width-only: 48->72, depth 6 fixed
+    ("gpt_base", "gpt_medium"),
+    ("vit_s", "vit_b"),
+    ("cait_xs", "cait_s"),
+    ("e2e_small", "e2e_base"),
+]
+
+# Knowledge-distillation (KI baseline) pairs
+KD_PAIRS = [("bert_small", "bert_base"), ("vit_s", "vit_b")]
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (mirrors rust/src/config/flops.rs)."""
+    d, f, l = cfg.dim, cfg.ffn, cfg.layers
+    per_layer = 4 * d * d + 4 * d + d * f + f + f * d + d + 4 * d
+    n = l * per_layer
+    if cfg.family in ("bert", "gpt"):
+        n += cfg.vocab * d + cfg.seq * d + cfg.vocab  # tok+pos+mlm_bias (tied head)
+        n += 2 * d  # final/emb ln
+    if cfg.family in ("vit", "cait"):
+        pdim = cfg.patch * cfg.patch * cfg.channels
+        n += d * pdim + d + d + cfg.tokens * d  # patch w+b, cls, pos
+        n += cfg.n_classes * d + cfg.n_classes + 2 * d
+        if cfg.family == "cait":
+            n += cfg.cls_layers * per_layer + l * 2 * d  # cls layers + layerscale
+    if cfg.n_classes and cfg.family == "bert":
+        n += cfg.n_classes * d + cfg.n_classes
+    return n
+
+
+def to_json() -> dict:
+    return {
+        "models": {k: asdict(v) for k, v in REGISTRY.items()},
+        "pairs": PAIRS,
+        "kd_pairs": KD_PAIRS,
+        "param_counts": {k: param_count(v) for k, v in REGISTRY.items()},
+    }

@@ -1,0 +1,79 @@
+"""Deterministic, language-portable parameter initialization.
+
+The Rust coordinator initializes model parameters natively (python never runs
+at runtime), so both sides implement the SAME integer LCG scheme; goldens in
+`python/tests` and `rust/tests` assert bit-identical fills. The scheme:
+
+  seed  = low32(FNV-1a(name) ^ global_seed)
+  z_i   = mix32(seed + i * 0x9E3779B9)                 (counter-based, splitmix-style)
+  u_i   = z_i / 2^32                                   (in [0, 1))
+  value = (u_i - 0.5) * 2 * scale                      (uniform, exact in f32)
+
+mix32(z): z ^= z>>16; z *= 0x45D9F3B; z ^= z>>16; z *= 0x45D9F3B; z ^= z>>16
+(all mod 2^32). Counter-based => vectorizable in numpy and embarrassingly
+portable to Rust.
+
+Per-tensor scale rule (by name suffix):
+  *_g / *ln_g        -> constant 1.0
+  *ls1 / *ls2        -> constant 0.1
+  *_b / mlm_bias     -> constant 0.0
+  emb_* / head_w / span_w -> scale 0.02
+  matrices (2D)      -> sqrt(6/(fan_in+fan_out))  (uniform Glorot)
+"""
+
+import numpy as np
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+GOLDEN = 0x9E3779B9
+MIX = 0x45D9F3B
+
+
+def fnv1a(name: str) -> int:
+    h = FNV_OFFSET
+    for ch in name.encode("utf-8"):
+        h = ((h ^ ch) * FNV_PRIME) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def tensor_scale(name: str, shape) -> float:
+    """The per-tensor init scale (mirrors rust/src/tensor/init.rs)."""
+    if name.endswith("_g"):
+        return -1.0  # sentinel: constant one
+    if name.endswith("ls1") or name.endswith("ls2"):
+        return -2.0  # sentinel: constant 0.1
+    if name.endswith("_b") or name == "mlm_bias":
+        return 0.0
+    if name.startswith("emb_") or name in ("head_w", "span_w"):
+        return 0.02
+    if len(shape) == 2:
+        fan_out, fan_in = shape
+        return float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return 0.02
+
+
+def det_fill(name: str, shape, global_seed: int = 0) -> np.ndarray:
+    """Deterministic fill identical to the Rust implementation."""
+    scale = tensor_scale(name, shape)
+    n = int(np.prod(shape)) if len(shape) else 1
+    if scale == -1.0:
+        return np.ones(shape, np.float32)
+    if scale == -2.0:
+        return np.full(shape, 0.1, np.float32)
+    if scale == 0.0:
+        return np.zeros(shape, np.float32)
+    seed = np.uint32((fnv1a(name) ^ (global_seed & 0xFFFFFFFFFFFFFFFF)) & 0xFFFFFFFF)
+    with np.errstate(over="ignore"):
+        z = seed + np.arange(n, dtype=np.uint32) * np.uint32(GOLDEN)
+        z ^= z >> np.uint32(16)
+        z *= np.uint32(MIX)
+        z ^= z >> np.uint32(16)
+        z *= np.uint32(MIX)
+        z ^= z >> np.uint32(16)
+    u = z.astype(np.float64) / 4294967296.0
+    return (((u - 0.5) * 2.0 * scale).astype(np.float32)).reshape(shape)
+
+
+def det_params(shapes: dict, global_seed: int = 0) -> dict:
+    """Fill a whole {name: shape} spec."""
+    return {k: det_fill(k, v, global_seed) for k, v in sorted(shapes.items())}

@@ -1,0 +1,127 @@
+"""L1 Pallas kernel: flash-attention-style fused attention (forward).
+
+The training hot-spot of every transformer in the repo. Online-softmax
+schedule a la FlashAttention, re-thought for TPU (DESIGN.md
+"Hardware-Adaptation"): instead of a warp-level WMMA tiling, the grid walks
+(batch*heads, q_tiles) and an in-kernel fori_loop streams K/V tiles through
+VMEM, carrying the running (max, sum, accumulator) in registers/VMEM. Causal
+masking is applied per (q_tile, k_tile) pair with iota comparisons.
+
+Executed under interpret=True (CPU PJRT cannot run Mosaic custom-calls).
+
+The backward pass is delegated to the standard softmax-attention gradient in
+plain jnp via jax.custom_vjp: XLA fuses it well, and it keeps the kernel
+surface small while the forward (the inference/serving hot path and ~1/3 of
+training compute) exercises the Pallas schedule.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import attention_ref
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, s_k, causal, scale):
+    """One (bh, q_tile) grid step: stream K/V tiles with online softmax."""
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :].astype(jnp.float32) * scale  # (bq, dh)
+    dh = q.shape[-1]
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k_tile = pl.load(k_ref, (0, pl.ds(j * bk, bk), slice(None))).astype(jnp.float32)
+        v_tile = pl.load(v_ref, (0, pl.ds(j * bk, bk), slice(None))).astype(jnp.float32)
+        s = q @ k_tile.T  # (bq, bk)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v_tile
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((bq,), _NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, dh), dtype=jnp.float32)
+    n_k = s_k // bk
+    if causal:
+        # keys strictly after this q-tile's last row never contribute
+        n_k_eff = jnp.minimum(n_k, (qi + 1) * bq // bk + jnp.where((qi + 1) * bq % bk != 0, 1, 0))
+    else:
+        n_k_eff = n_k
+    m, l, acc = jax.lax.fori_loop(0, n_k_eff, body, (m0, l0, acc0))
+    o_ref[0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def _attention_pallas(q, k, v, causal=False, bq=64, bk=64):
+    """q, k, v: (BH, S, Dh) -> (BH, S, Dh)."""
+    bh, s, dh = q.shape
+    while s % bq != 0:
+        bq //= 2
+    while s % bk != 0:
+        bk //= 2
+    grid = (bh, s // bq)
+    scale = 1.0 / (dh ** 0.5)
+    kernel = functools.partial(
+        _attn_kernel, bq=bq, bk=bk, s_k=s, causal=causal, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q, k, v, causal=False):
+    """Fused attention over (BH, S, Dh) tensors. Differentiable."""
+    return _attention_pallas(q, k, v, causal=causal)
+
+
+def _fwd(q, k, v, causal):
+    return _attention_pallas(q, k, v, causal=causal), (q, k, v)
+
+
+def _bwd(causal, res, do):
+    q, k, v = res
+    # Standard softmax-attention backward in f32 jnp; recomputes probs
+    # (flash-style rematerialization: nothing quadratic was saved in fwd).
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[1], k.shape[1]), dtype=bool))
+        s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    do32 = do.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    dv = jnp.einsum("bqk,bqd->bkd", p, do32)
+    dp = jnp.einsum("bqd,bkd->bqk", do32, v32)
+    ds = p * (dp - (dp * p).sum(axis=-1, keepdims=True))
+    ds = ds / jnp.sqrt(jnp.float32(dh))
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k.astype(jnp.float32)).astype(q.dtype)
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q.astype(jnp.float32)).astype(k.dtype)
+    return dq, dk, dv.astype(v.dtype)
+
+
+attention.defvjp(_fwd, _bwd)
+
+
+def attention_oracle(q, k, v, causal=False):
+    """Re-export of the pure-jnp oracle for tests."""
+    return attention_ref(q, k, v, causal=causal)

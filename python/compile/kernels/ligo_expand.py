@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: fused LiGO width expansion Omega = B @ W @ A^T.
+
+This is the compute hot-spot of the LiGO growth operator (paper Eq. 6/7):
+during each of the M-learning steps, EVERY weight matrix of the small model
+is re-materialized into the large model's shape via the two-sided product
+B_l W_l A_l^T before the forward pass, so this triple product runs
+(#layers x #modules) times per LiGO gradient step.
+
+TPU-oriented schedule (executed here under interpret=True; see
+DESIGN.md "Hardware-Adaptation"):
+  - grid = (m_tiles, p_tiles, k_tiles); the k axis is the contraction over
+    the small model's output dim and is sequential ("arbitrary" semantics),
+    accumulating into the VMEM-resident output tile.
+  - per grid step the kernel holds a (bm, bk) tile of B, a (bk, n) strip of
+    W, a (bp, n) strip of A and the (bm, bp) output tile in VMEM; the inner
+    compute is two MXU-shaped matmuls: T = W_strip @ A_strip^T (bk x bp)
+    followed by B_tile @ T (bm x bp).
+  - the W @ A^T partial is NOT materialized in HBM -- it only ever exists as
+    a (bk, bp) VMEM tile, which is the point of fusing the triple product.
+
+The public entrypoint `ligo_expand` wraps the kernel in jax.custom_vjp so the
+LiGO M-parameters can be trained by jax.grad: all three cotangents are
+themselves triple products with the same structure, so the backward pass
+reuses this very kernel:
+    dB = dO @ A @ W^T = expand(dO, A,  W)
+    dW = B^T @ dO @ A = expand(B^T, dO, A^T)
+    dA = dO^T @ B @ W = expand(dO^T, B, W^T)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim, target):
+    """Largest divisor of `dim` that is <= target (keeps tiles aligned)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _expand_kernel(b_ref, w_ref, a_ref, o_ref):
+    """One (m, p, k) grid step: o[m_tile, p_tile] += B_tile @ (W_strip @ A_strip^T)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (bk, n) @ (n, bp) -> (bk, bp): the fused W A^T partial, VMEM-only.
+    t = jnp.dot(w_ref[...], a_ref[...].T, preferred_element_type=jnp.float32)
+    # (bm, bk) @ (bk, bp) -> (bm, bp) accumulation into the output tile.
+    o_ref[...] += jnp.dot(b_ref[...], t, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bp", "bk"))
+def _expand_pallas(b, w, a, bm=512, bp=512, bk=512):
+    # Default 512-blocks: ~7 MiB VMEM for the paper-scale FFN growth (fits
+    # the 16 MiB budget) and, crucially, a small grid under interpret=True,
+    # whose sequential while-loop emulation dominates CPU wallclock for the
+    # ~100M e2e pair (2304 grid steps at 128-blocks -> 48 at 512-blocks).
+    # On real TPU, 128-blocks (see compile.perf) trade VMEM for pipelining.
+    """Raw pallas_call wrapper: b (m, k), w (k, n), a (p, n) -> (m, p)."""
+    m, k = b.shape
+    k2, n = w.shape
+    p, n2 = a.shape
+    assert k == k2 and n == n2, f"shape mismatch: {b.shape} {w.shape} {a.shape}"
+    bm = _pick_block(m, bm)
+    bp = _pick_block(p, bp)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, p // bp, k // bk)
+    return pl.pallas_call(
+        _expand_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),   # B tile
+            pl.BlockSpec((bk, n), lambda i, j, kk: (kk, 0)),    # W strip
+            pl.BlockSpec((bp, n), lambda i, j, kk: (j, 0)),     # A strip
+        ],
+        out_specs=pl.BlockSpec((bm, bp), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, p), b.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(b, w, a)
+
+
+@jax.custom_vjp
+def ligo_expand(b, w, a):
+    """Omega = B @ W @ A^T via the fused Pallas kernel. Differentiable."""
+    return _expand_pallas(b, w, a)
+
+
+def _fwd(b, w, a):
+    return _expand_pallas(b, w, a), (b, w, a)
+
+
+def _bwd(res, do):
+    b, w, a = res
+    db = _expand_pallas(do, a, w)          # dO @ A @ W^T
+    dw = _expand_pallas(b.T, do, a.T)      # B^T @ dO @ A
+    da = _expand_pallas(do.T, b, w.T)      # dO^T @ B @ W
+    return db, dw, da
+
+
+ligo_expand.defvjp(_fwd, _bwd)
+
+
+def ligo_expand_batched(b, w, a):
+    """vmap over a stack of layers: w (L, k, n); b/a either (L, ., .) or shared (2D)."""
+    in_axes = (0 if b.ndim == 3 else None, 0, 0 if a.ndim == 3 else None)
+    return jax.vmap(ligo_expand, in_axes=in_axes)(b, w, a)

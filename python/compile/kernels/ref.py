@@ -1,0 +1,46 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy so that pytest can assert allclose between the
+kernel (interpret=True) and the oracle across shape/dtype sweeps. These are
+also the semantic definitions used by the L2 model docs.
+"""
+
+import jax.numpy as jnp
+
+
+def ligo_expand_ref(b, w, a):
+    """LiGO width expansion: Omega = B @ W @ A^T.
+
+    This is Eq. 6/7 of the paper: a layer's weight matrix ``w`` (out_s, in_s)
+    grows to (out_l, in_l) by taking learned linear combinations of its rows
+    (via ``b``: (out_l, out_s)) and columns (via ``a``: (in_l, in_s)).
+
+    Shapes are fully general: b (m, k), w (k, n), a (p, n) -> (m, p).
+    """
+    return b @ w @ a.T
+
+
+def attention_ref(q, k, v, causal=False):
+    """Scaled dot-product attention oracle.
+
+    q, k, v: (..., S, Dh). Softmax over the key axis in f32; optional causal
+    mask. Matches the Pallas flash-attention kernel's semantics exactly.
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        s_q, s_k = scores.shape[-2], scores.shape[-1]
+        mask = jnp.tril(jnp.ones((s_q, s_k), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("...qk,...kd->...qd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def layernorm_ref(x, g, b, eps=1e-5):
+    """LayerNorm oracle over the last axis."""
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b

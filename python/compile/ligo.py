@@ -1,0 +1,194 @@
+"""L2: the LiGO operator (paper Sections 3.2-3.3, Algorithm 1) in JAX.
+
+The growth map  vec(Theta_new) = (w (x) I) . blockdiag(A_l (x) B_l) vec(Theta)
+is implemented exactly as Algorithm 1: a width-expansion pass that grows every
+small-model tensor via the fused Pallas kernel `ligo_expand` (B @ W @ A^T),
+followed by a depth-expansion pass that forms each large layer as a learned
+linear blend of the width-grown small layers.
+
+Weight tying (Appendix B.1), which makes M learnable from ~100 steps:
+  * A^k = B_emb^T for k in {Q, K, V, fc1}   (residual-stream input alignment)
+  * A^O = B_V^T,  A^fc2 = B_fc1^T           (inner-dim alignment)
+  * B^O = B^fc2 = B_emb                     (residual-stream output alignment)
+  * biases / LayerNorms grow with their module's out-expansion matrix
+  * output head: A^out = B_emb^T, no out-expansion
+
+Learned LiGO parameters (flat dict):
+  B_emb (D2, D1); B_q, B_k, B_v (D2, D1); B_fc1 (F2, F1)  [shared across layers]
+  w_q, w_k, w_v, w_o, w_ln1, w_fc1, w_fc2, w_ln2 (L2, L1) [per-module depth blends]
+  (vision: same, plus nothing extra — patch/cls/pos/head all ride on B_emb)
+
+Special cases (Prop. 1): with B_* set to the Net2Net selection pattern and
+w set to the stacking pattern, M reproduces StackBERT / Interpolation /
+Net2Net exactly — that is also how we *initialize* M before the 100 SGD steps.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.ligo_expand import ligo_expand, ligo_expand_batched
+
+DEPTH_MODULES = ("q", "k", "v", "o", "ln1", "fc1", "fc2", "ln2")
+CAIT_EXTRA = ("ls1", "ls2")
+
+
+def expansion_ratio(small: ModelConfig, large: ModelConfig):
+    return large.layers // small.layers if small.layers else 1
+
+
+# ----------------------------------------------------------------------------
+# Initialization of M (stacking + neuron-duplication pattern, Prop. 1)
+# ----------------------------------------------------------------------------
+
+def _dup_expand_matrix(key, d2, d1, noise=0.01):
+    """(d2, d1) matrix whose row i selects small-row (i mod d1): the Net2Net
+    neuron-duplication pattern, plus symmetry-breaking noise."""
+    eye = jnp.eye(d1, dtype=jnp.float32)
+    m = jnp.tile(eye, ((d2 + d1 - 1) // d1, 1))[:d2]
+    return m + noise * jax.random.normal(key, (d2, d1), jnp.float32)
+
+
+def _stack_matrix(key, l2, l1, noise=0.01):
+    """(l2, l1) depth-blend init: StackBERT pattern w[i, i mod l1] = 1."""
+    rows = jnp.eye(l1, dtype=jnp.float32)
+    m = jnp.tile(rows, ((l2 + l1 - 1) // l1, 1))[:l2]
+    return m + noise * jax.random.normal(key, (l2, l1), jnp.float32)
+
+
+def ligo_init(key, small: ModelConfig, large: ModelConfig) -> dict:
+    """Initialize LiGO parameters M. Width params are omitted when D1 == D2
+    (depth-only growth); depth params are omitted when L1 == L2 (width-only),
+    matching the paper's ablations (Fig. 6)."""
+    keys = jax.random.split(key, 16)
+    p = {}
+    if small.dim != large.dim:
+        p["B_emb"] = _dup_expand_matrix(keys[0], large.dim, small.dim)
+        p["B_q"] = _dup_expand_matrix(keys[1], large.dim, small.dim)
+        p["B_k"] = _dup_expand_matrix(keys[2], large.dim, small.dim)
+        p["B_v"] = _dup_expand_matrix(keys[3], large.dim, small.dim)
+        p["B_fc1"] = _dup_expand_matrix(keys[4], large.ffn, small.ffn)
+    if small.layers != large.layers:
+        for i, m in enumerate(DEPTH_MODULES):
+            p[f"w_{m}"] = _stack_matrix(keys[5 + i], large.layers, small.layers)
+        if small.family == "cait":
+            for i, m in enumerate(CAIT_EXTRA):
+                p[f"w_{m}"] = _stack_matrix(keys[13 + i], large.layers, small.layers)
+    return p
+
+
+# ----------------------------------------------------------------------------
+# Applying M: width pass (Pallas kernel) + depth pass (learned blends)
+# ----------------------------------------------------------------------------
+
+def _get_b(lp, name, d2, d1):
+    """Width matrix or identity fallback (depth-only growth)."""
+    if name in lp:
+        return lp[name]
+    assert d2 == d1, f"missing {name} but dims differ: {d2} vs {d1}"
+    return jnp.eye(d1, dtype=jnp.float32)
+
+
+def _stack(small_p, small: ModelConfig, suffix, prefix="L"):
+    return jnp.stack([small_p[f"{prefix}{l:02d}_{suffix}"] for l in range(small.layers)])
+
+
+def _depth_blend(lp, name, stack, large_layers):
+    """stack: (L1, ...) width-grown module tensors -> (L2, ...) blended."""
+    if f"w_{name}" in lp:
+        w = lp[f"w_{name}"]
+        return jnp.einsum("ij,j...->i...", w, stack)
+    assert stack.shape[0] == large_layers
+    return stack
+
+
+def ligo_apply(lp: dict, small_p: dict, small: ModelConfig, large: ModelConfig,
+               prefix="L", n_layers_small=None, n_layers_large=None) -> dict:
+    """Materialize the large model's parameters: Theta_new = M(Theta).
+
+    Returns a flat dict with the large config's parameter names. Differentiable
+    w.r.t. `lp` (and `small_p`), so jax.grad can train M on the task loss.
+    """
+    d1, d2, f1, f2 = small.dim, large.dim, small.ffn, large.ffn
+    l1 = n_layers_small or small.layers
+    l2 = n_layers_large or large.layers
+    b_emb = _get_b(lp, "B_emb", d2, d1)
+    b_q = _get_b(lp, "B_q", d2, d1)
+    b_k = _get_b(lp, "B_k", d2, d1)
+    b_v = _get_b(lp, "B_v", d2, d1)
+    b_fc1 = _get_b(lp, "B_fc1", f2, f1)
+
+    out = {}
+    # ---- width pass: every per-layer matrix through the fused kernel ----
+    # (out_exp, W_stack, in_exp): Omega_l = B W_l A^T, A tied per App. B.1
+    wides = {
+        "q_w": ligo_expand_batched(b_q, _stack(small_p, small, "q_w", prefix), b_emb),
+        "k_w": ligo_expand_batched(b_k, _stack(small_p, small, "k_w", prefix), b_emb),
+        "v_w": ligo_expand_batched(b_v, _stack(small_p, small, "v_w", prefix), b_emb),
+        "o_w": ligo_expand_batched(b_emb, _stack(small_p, small, "o_w", prefix), b_v),
+        "fc1_w": ligo_expand_batched(b_fc1, _stack(small_p, small, "fc1_w", prefix), b_emb),
+        "fc2_w": ligo_expand_batched(b_emb, _stack(small_p, small, "fc2_w", prefix), b_fc1),
+        # biases / LN vectors: one-sided products with the out-expansion
+        "q_b": _stack(small_p, small, "q_b", prefix) @ b_q.T,
+        "k_b": _stack(small_p, small, "k_b", prefix) @ b_k.T,
+        "v_b": _stack(small_p, small, "v_b", prefix) @ b_v.T,
+        "o_b": _stack(small_p, small, "o_b", prefix) @ b_emb.T,
+        "fc1_b": _stack(small_p, small, "fc1_b", prefix) @ b_fc1.T,
+        "fc2_b": _stack(small_p, small, "fc2_b", prefix) @ b_emb.T,
+        "ln1_g": _stack(small_p, small, "ln1_g", prefix) @ b_emb.T,
+        "ln1_b": _stack(small_p, small, "ln1_b", prefix) @ b_emb.T,
+        "ln2_g": _stack(small_p, small, "ln2_g", prefix) @ b_emb.T,
+        "ln2_b": _stack(small_p, small, "ln2_b", prefix) @ b_emb.T,
+    }
+    if small.family == "cait" and prefix == "L":
+        wides["ls1"] = _stack(small_p, small, "ls1", prefix) @ b_emb.T
+        wides["ls2"] = _stack(small_p, small, "ls2", prefix) @ b_emb.T
+
+    # ---- depth pass: learned per-module blends ----
+    mod_to_w = {"q_w": "q", "q_b": "q", "k_w": "k", "k_b": "k", "v_w": "v",
+                "v_b": "v", "o_w": "o", "o_b": "o", "fc1_w": "fc1",
+                "fc1_b": "fc1", "fc2_w": "fc2", "fc2_b": "fc2",
+                "ln1_g": "ln1", "ln1_b": "ln1", "ln2_g": "ln2", "ln2_b": "ln2",
+                "ls1": "ls1", "ls2": "ls2"}
+    for suffix, stackv in wides.items():
+        blended = _depth_blend(lp, mod_to_w[suffix], stackv, l2)
+        for l in range(l2):
+            out[f"{prefix}{l:02d}_{suffix}"] = blended[l]
+
+    # ---- non-layer tensors ----
+    if small.family in ("bert", "gpt"):
+        out["emb_tok"] = small_p["emb_tok"] @ b_emb.T
+        out["emb_pos"] = small_p["emb_pos"] @ b_emb.T
+        out["mlm_bias"] = small_p["mlm_bias"]
+    else:
+        out["emb_patch_w"] = b_emb @ small_p["emb_patch_w"]
+        out["emb_patch_b"] = b_emb @ small_p["emb_patch_b"]
+        out["emb_cls"] = b_emb @ small_p["emb_cls"]
+        out["emb_pos"] = small_p["emb_pos"] @ b_emb.T
+        out["head_w"] = small_p["head_w"] @ b_emb.T
+        out["head_b"] = small_p["head_b"]
+    out["final_ln_g"] = small_p["final_ln_g"] @ b_emb.T
+    out["final_ln_b"] = small_p["final_ln_b"] @ b_emb.T
+    if small.n_classes and small.family == "bert" and "head_w" in small_p:
+        out["head_w"] = small_p["head_w"] @ b_emb.T
+        out["head_b"] = small_p["head_b"]
+
+    # CaiT class-attention stage: widths grow, depth is fixed (Lc1 == Lc2)
+    if small.family == "cait":
+        for l in range(small.cls_layers):
+            pre = f"C{l:02d}_"
+            out[f"{pre}q_w"] = ligo_expand(b_q, small_p[f"{pre}q_w"], b_emb)
+            out[f"{pre}k_w"] = ligo_expand(b_k, small_p[f"{pre}k_w"], b_emb)
+            out[f"{pre}v_w"] = ligo_expand(b_v, small_p[f"{pre}v_w"], b_emb)
+            out[f"{pre}o_w"] = ligo_expand(b_emb, small_p[f"{pre}o_w"], b_v)
+            out[f"{pre}fc1_w"] = ligo_expand(b_fc1, small_p[f"{pre}fc1_w"], b_emb)
+            out[f"{pre}fc2_w"] = ligo_expand(b_emb, small_p[f"{pre}fc2_w"], b_fc1)
+            out[f"{pre}q_b"] = b_q @ small_p[f"{pre}q_b"]
+            out[f"{pre}k_b"] = b_k @ small_p[f"{pre}k_b"]
+            out[f"{pre}v_b"] = b_v @ small_p[f"{pre}v_b"]
+            out[f"{pre}o_b"] = b_emb @ small_p[f"{pre}o_b"]
+            out[f"{pre}fc1_b"] = b_fc1 @ small_p[f"{pre}fc1_b"]
+            out[f"{pre}fc2_b"] = b_emb @ small_p[f"{pre}fc2_b"]
+            for ln in ("ln1_g", "ln1_b", "ln2_g", "ln2_b"):
+                out[f"{pre}{ln}"] = b_emb @ small_p[f"{pre}{ln}"]
+    return out

@@ -1,0 +1,229 @@
+"""L2: graph builders — one entry per AOT artifact.
+
+Each builder returns ``(fn, example_args)`` where ``example_args`` is a tuple
+of flat {name: ShapeDtypeStruct} dicts. `aot.py` lowers ``jax.jit(fn)`` on the
+examples, converts to HLO text, and emits a manifest describing the flattened
+input/output order (dicts flatten in sorted-key order) so the Rust runtime can
+bind its named tensor store positionally.
+
+Artifact taxonomy (names are the Rust-facing API):
+  fwd_{model}            (params, batch) -> (loss[, metric])        eval
+  grad_{model}           (params, batch) -> (loss[, metric], grads) training
+  grad_gated_{model}     + layer gates & token-keep mask            Fig. 5
+  kd_grad_{s}__{t}       (params_t, params_s, batch) -> (loss, grads_t)  KI baseline
+  ligo_grad_{s}__{t}     (ligo, params_s, batch) -> (loss, dligo)   the 100 M-steps
+  ligo_apply_{s}__{t}    (ligo, params_s) -> params_t               growth
+  span_/adapter_ variants for the transfer-learning tables
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as T
+from .configs import REGISTRY, PAIRS, KD_PAIRS, ModelConfig
+from .ligo import ligo_init, ligo_apply
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_shapes(cfg: ModelConfig, with_adapters=False, with_span=False) -> dict:
+    """{name: shape} for a config — derived via abstract eval (no FLOPs)."""
+    p = jax.eval_shape(
+        lambda k: T.init_params(k, cfg, with_adapters=with_adapters, with_span=with_span),
+        jax.random.PRNGKey(0),
+    )
+    return {k: v.shape for k, v in p.items()}
+
+
+def param_specs(cfg: ModelConfig, **kw) -> dict:
+    return {k: _spec(s) for k, s in param_shapes(cfg, **kw).items()}
+
+
+def batch_specs(cfg: ModelConfig) -> dict:
+    if cfg.family in ("vit", "cait"):
+        return {
+            "images": _spec((cfg.batch, cfg.img, cfg.img, cfg.channels)),
+            "labels": _spec((cfg.batch,), jnp.int32),
+        }
+    if cfg.n_classes:  # probe
+        return {
+            "tokens": _spec((cfg.batch, cfg.seq), jnp.int32),
+            "labels": _spec((cfg.batch,), jnp.int32),
+        }
+    return {
+        "tokens": _spec((cfg.batch, cfg.seq), jnp.int32),
+        "labels": _spec((cfg.batch, cfg.seq), jnp.int32),
+    }
+
+
+def ligo_specs(small: ModelConfig, large: ModelConfig) -> dict:
+    lp = jax.eval_shape(lambda k: ligo_init(k, small, large), jax.random.PRNGKey(0))
+    return {k: _spec(v.shape) for k, v in lp.items()}
+
+
+# ----------------------------------------------------------------------------
+# Loss dispatch
+# ----------------------------------------------------------------------------
+
+def _loss_fn(cfg: ModelConfig):
+    """Returns fn(params, batch) -> (loss, aux) with aux a dict of metrics."""
+    if cfg.family in ("vit", "cait"):
+        def f(p, b):
+            loss, acc = T.vision_loss(p, b, cfg)
+            return loss, {"acc": acc}
+        return f
+    if cfg.n_classes:
+        def f(p, b):
+            loss, acc = T.probe_loss(p, b, cfg)
+            return loss, {"acc": acc}
+        return f
+    def f(p, b):
+        return T.lm_loss(p, b, cfg), {}
+    return f
+
+
+# ----------------------------------------------------------------------------
+# Builders
+# ----------------------------------------------------------------------------
+
+def build_fwd(cfg):
+    lf = _loss_fn(cfg)
+    def fn(params, batch):
+        loss, aux = lf(params, batch)
+        return (loss, aux["acc"]) if "acc" in aux else (loss,)
+    return fn, (param_specs(cfg), batch_specs(cfg))
+
+
+def build_grad(cfg):
+    lf = _loss_fn(cfg)
+    def fn(params, batch):
+        (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(params, batch)
+        if "acc" in aux:
+            return loss, aux["acc"], grads
+        return loss, grads
+    return fn, (param_specs(cfg), batch_specs(cfg))
+
+
+def build_grad_gated(cfg):
+    def fn(params, batch):
+        def lf(p):
+            return T.lm_loss(p, batch, cfg, gates=batch["gates"],
+                             token_keep=batch["token_keep"])
+        loss, grads = jax.value_and_grad(lf)(params)
+        return loss, grads
+    bs = batch_specs(cfg)
+    bs["gates"] = _spec((cfg.layers,))
+    bs["token_keep"] = _spec((cfg.batch, cfg.seq))
+    return fn, (param_specs(cfg), bs)
+
+
+def build_kd_grad(small, large):
+    def fn(params_l, params_s, batch):
+        def lf(pl):
+            return T.kd_loss(params_s, pl, batch, small, large)
+        loss, grads = jax.value_and_grad(lf)(params_l)
+        return loss, grads
+    return fn, (param_specs(large), param_specs(small), batch_specs(large))
+
+
+def build_ligo_grad(small, large):
+    lf_large = _loss_fn(large)
+    def fn(lparams, params_s, batch):
+        def lf(lp):
+            grown = ligo_apply(lp, params_s, small, large)
+            loss, _aux = lf_large(grown, batch)
+            return loss
+        loss, dl = jax.value_and_grad(lf)(lparams)
+        return loss, dl
+    return fn, (ligo_specs(small, large), param_specs(small), batch_specs(large))
+
+
+def build_ligo_apply(small, large):
+    def fn(lparams, params_s):
+        return ligo_apply(lparams, params_s, small, large)
+    return fn, (ligo_specs(small, large), param_specs(small))
+
+
+def build_span_fwd(cfg):
+    def fn(params, batch):
+        loss, em = T.span_loss(params, batch, cfg)
+        return loss, em
+    bs = {
+        "tokens": _spec((cfg.batch, cfg.seq), jnp.int32),
+        "starts": _spec((cfg.batch,), jnp.int32),
+        "ends": _spec((cfg.batch,), jnp.int32),
+    }
+    return fn, (param_specs(cfg, with_span=True), bs)
+
+
+def build_span_grad(cfg):
+    def fn(params, batch):
+        def lf(p):
+            loss, em = T.span_loss(p, batch, cfg)
+            return loss, em
+        (loss, em), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        return loss, em, grads
+    _, (ps, bs) = build_span_fwd(cfg)
+    return fn, (ps, bs)
+
+
+def _is_adapter_key(k):
+    return ("_ad1_" in k) or ("_ad2_" in k) or k in ("head_w", "head_b")
+
+
+def build_adapter_grad(cfg):
+    """Adapter-tuning (Table 6): grads only for adapter + head parameters."""
+    def fn(trainable, frozen, batch):
+        def lf(tr):
+            p = dict(frozen)
+            p.update(tr)
+            return T.probe_loss(p, batch, cfg)
+        (loss, acc), grads = jax.value_and_grad(lf, has_aux=True)(trainable)
+        return loss, acc, grads
+    allp = param_specs(cfg, with_adapters=True)
+    trainable = {k: v for k, v in allp.items() if _is_adapter_key(k)}
+    frozen = {k: v for k, v in allp.items() if not _is_adapter_key(k)}
+    return fn, (trainable, frozen, batch_specs(cfg))
+
+
+def build_adapter_fwd(cfg):
+    def fn(trainable, frozen, batch):
+        p = dict(frozen)
+        p.update(trainable)
+        return T.probe_loss(p, batch, cfg)
+    _, (tr, fr, bs) = build_adapter_grad(cfg)
+    return fn, (tr, fr, bs)
+
+
+# ----------------------------------------------------------------------------
+# Full artifact registry
+# ----------------------------------------------------------------------------
+
+def artifact_registry() -> dict:
+    """name -> (builder, cfg...) for every artifact in the repo."""
+    arts = {}
+    for name, cfg in REGISTRY.items():
+        arts[f"fwd_{name}"] = (build_fwd, cfg)
+        arts[f"grad_{name}"] = (build_grad, cfg)
+    for s, t in PAIRS:
+        cs, ct = REGISTRY[s], REGISTRY[t]
+        arts[f"ligo_grad_{s}__{t}"] = (build_ligo_grad, cs, ct)
+        arts[f"ligo_apply_{s}__{t}"] = (build_ligo_apply, cs, ct)
+    for s, t in KD_PAIRS:
+        arts[f"kd_grad_{s}__{t}"] = (build_kd_grad, REGISTRY[s], REGISTRY[t])
+    for name in ("bert_small", "bert_base"):
+        arts[f"grad_gated_{name}"] = (build_grad_gated, REGISTRY[name])
+    arts["span_fwd_bert_base"] = (build_span_fwd, REGISTRY["probe_bert_base"])
+    arts["span_grad_bert_base"] = (build_span_grad, REGISTRY["probe_bert_base"])
+    arts["adapter_fwd_bert_base"] = (build_adapter_fwd, REGISTRY["probe_bert_base"])
+    arts["adapter_grad_bert_base"] = (build_adapter_grad, REGISTRY["probe_bert_base"])
+    return arts
+
+
+def build(name):
+    """Instantiate (fn, example_specs) for an artifact name."""
+    entry = artifact_registry()[name]
+    builder, *args = entry
+    return builder(*args)

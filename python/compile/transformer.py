@@ -1,0 +1,313 @@
+"""L2: the transformer family (BERT / GPT2 / DeiT / CaiT analogs) in JAX.
+
+Parameters live in a FLAT dict of name -> array with zero-padded layer
+prefixes ("L03_q_w"), so the sorted-key order (which is what jax.jit's pytree
+flattening and therefore the AOT manifests use) is stable and identical to
+the Rust tensor store's ordering.
+
+Weight convention: all projection matrices are stored (out_dim, in_dim),
+matching the paper's ``y = W x`` formulas (forward uses ``x @ w.T``), which
+keeps the LiGO expansion literally ``B @ W @ A^T``.
+
+Attention runs through the L1 Pallas kernel (`kernels.attention`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.attention import attention
+
+ADAPTER_DIM = 8
+
+
+# ----------------------------------------------------------------------------
+# Initialization
+# ----------------------------------------------------------------------------
+
+def _dense_init(key, out_dim, in_dim, scale=None):
+    scale = scale if scale is not None else (2.0 / (in_dim + out_dim)) ** 0.5
+    return jax.random.normal(key, (out_dim, in_dim), jnp.float32) * scale
+
+
+def _layer_params(key, d, f, prefix):
+    ks = jax.random.split(key, 8)
+    p = {}
+    for i, m in enumerate(("q", "k", "v", "o")):
+        p[f"{prefix}{m}_w"] = _dense_init(ks[i], d, d)
+        p[f"{prefix}{m}_b"] = jnp.zeros((d,), jnp.float32)
+    p[f"{prefix}fc1_w"] = _dense_init(ks[4], f, d)
+    p[f"{prefix}fc1_b"] = jnp.zeros((f,), jnp.float32)
+    p[f"{prefix}fc2_w"] = _dense_init(ks[5], d, f)
+    p[f"{prefix}fc2_b"] = jnp.zeros((d,), jnp.float32)
+    for ln in ("ln1", "ln2"):
+        p[f"{prefix}{ln}_g"] = jnp.ones((d,), jnp.float32)
+        p[f"{prefix}{ln}_b"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, with_adapters: bool = False,
+                with_span: bool = False) -> dict:
+    """Random init of the flat parameter dict for any family."""
+    d, f = cfg.dim, cfg.ffn
+    keys = jax.random.split(key, cfg.layers + cfg.cls_layers + 8)
+    p = {}
+    if cfg.family in ("bert", "gpt"):
+        p["emb_tok"] = _dense_init(keys[-1], cfg.vocab, d, scale=0.02)
+        p["emb_pos"] = _dense_init(keys[-2], cfg.seq, d, scale=0.02)
+        p["mlm_bias"] = jnp.zeros((cfg.vocab,), jnp.float32)
+        p["final_ln_g"] = jnp.ones((d,), jnp.float32)
+        p["final_ln_b"] = jnp.zeros((d,), jnp.float32)
+    else:
+        pdim = cfg.patch * cfg.patch * cfg.channels
+        p["emb_patch_w"] = _dense_init(keys[-1], d, pdim)
+        p["emb_patch_b"] = jnp.zeros((d,), jnp.float32)
+        p["emb_cls"] = _dense_init(keys[-2], 1, d, scale=0.02).reshape(d)
+        n_pos = cfg.tokens if cfg.family == "vit" else cfg.tokens
+        p["emb_pos"] = _dense_init(keys[-3], n_pos, d, scale=0.02)
+        p["final_ln_g"] = jnp.ones((d,), jnp.float32)
+        p["final_ln_b"] = jnp.zeros((d,), jnp.float32)
+        p["head_w"] = _dense_init(keys[-4], cfg.n_classes, d, scale=0.02)
+        p["head_b"] = jnp.zeros((cfg.n_classes,), jnp.float32)
+    for l in range(cfg.layers):
+        p.update(_layer_params(keys[l], d, f, f"L{l:02d}_"))
+        if cfg.family == "cait":
+            p[f"L{l:02d}_ls1"] = jnp.full((d,), 1e-1, jnp.float32)
+            p[f"L{l:02d}_ls2"] = jnp.full((d,), 1e-1, jnp.float32)
+    for l in range(cfg.cls_layers):
+        p.update(_layer_params(keys[cfg.layers + l], d, f, f"C{l:02d}_"))
+    if cfg.n_classes and cfg.family == "bert":
+        p["head_w"] = _dense_init(keys[-5], cfg.n_classes, d, scale=0.02)
+        p["head_b"] = jnp.zeros((cfg.n_classes,), jnp.float32)
+    if with_span:
+        p["span_w"] = _dense_init(keys[-6], 2, d, scale=0.02)
+        p["span_b"] = jnp.zeros((2,), jnp.float32)
+    if with_adapters:
+        for l in range(cfg.layers):
+            kk = jax.random.split(keys[l], 2)
+            p[f"L{l:02d}_ad1_w"] = _dense_init(kk[0], ADAPTER_DIM, d, scale=0.01)
+            p[f"L{l:02d}_ad1_b"] = jnp.zeros((ADAPTER_DIM,), jnp.float32)
+            p[f"L{l:02d}_ad2_w"] = _dense_init(kk[1], d, ADAPTER_DIM, scale=0.01)
+            p[f"L{l:02d}_ad2_b"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+# ----------------------------------------------------------------------------
+# Building blocks
+# ----------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _linear(x, p, name):
+    return x @ p[f"{name}_w"].T + p[f"{name}_b"]
+
+
+def _mha(x_q, x_kv, p, prefix, heads, causal):
+    """Multi-head attention through the Pallas kernel."""
+    bsz, s_q, d = x_q.shape
+    s_k = x_kv.shape[1]
+    dh = d // heads
+    q = _linear(x_q, p, f"{prefix}q").reshape(bsz, s_q, heads, dh)
+    k = _linear(x_kv, p, f"{prefix}k").reshape(bsz, s_k, heads, dh)
+    v = _linear(x_kv, p, f"{prefix}v").reshape(bsz, s_k, heads, dh)
+    q = q.transpose(0, 2, 1, 3).reshape(bsz * heads, s_q, dh)
+    k = k.transpose(0, 2, 1, 3).reshape(bsz * heads, s_k, dh)
+    v = v.transpose(0, 2, 1, 3).reshape(bsz * heads, s_k, dh)
+    o = attention(q, k, v, causal)
+    o = o.reshape(bsz, heads, s_q, dh).transpose(0, 2, 1, 3).reshape(bsz, s_q, d)
+    return _linear(o, p, f"{prefix}o")
+
+
+def _ffn(x, p, prefix):
+    h = jax.nn.gelu(_linear(x, p, f"{prefix}fc1"))
+    return _linear(h, p, f"{prefix}fc2")
+
+
+def _adapter(x, p, prefix):
+    if f"{prefix}ad1_w" not in p:
+        return x
+    h = jax.nn.gelu(_linear(x, p, f"{prefix}ad1"))
+    return x + _linear(h, p, f"{prefix}ad2")
+
+
+def _block_postln(x, p, prefix, heads, causal=False):
+    """BERT-style post-LN block."""
+    h = _mha(x, x, p, prefix, heads, causal)
+    h = _adapter(h, p, prefix)
+    x = layer_norm(x + h, p[f"{prefix}ln1_g"], p[f"{prefix}ln1_b"])
+    h = _ffn(x, p, prefix)
+    h = _adapter(h, p, prefix)
+    x = layer_norm(x + h, p[f"{prefix}ln2_g"], p[f"{prefix}ln2_b"])
+    return x
+
+
+def _block_preln(x, p, prefix, heads, causal=False, layerscale=False,
+                 gate=None, token_keep=None):
+    """GPT/ViT-style pre-LN block, optionally LayerScale'd (CaiT) and gated
+    (layer dropping / token dropping, Fig. 5)."""
+    h = _mha(layer_norm(x, p[f"{prefix}ln1_g"], p[f"{prefix}ln1_b"]),
+             layer_norm(x, p[f"{prefix}ln1_g"], p[f"{prefix}ln1_b"]), p, prefix, heads, causal)
+    if layerscale:
+        h = h * p[f"{prefix}ls1"]
+    if gate is not None:
+        h = h * gate
+    if token_keep is not None:
+        h = h * token_keep[..., None]
+    x = x + h
+    h = _ffn(layer_norm(x, p[f"{prefix}ln2_g"], p[f"{prefix}ln2_b"]), p, prefix)
+    if layerscale:
+        h = h * p[f"{prefix}ls2"]
+    if gate is not None:
+        h = h * gate
+    if token_keep is not None:
+        h = h * token_keep[..., None]
+    return x + h
+
+
+def _class_attn_block(cls_tok, patches, p, prefix, heads):
+    """CaiT class-attention: the CLS token attends to the (frozen) patch
+    sequence; only the CLS stream is updated."""
+    xs = jnp.concatenate([cls_tok, patches], axis=1)
+    h = _mha(layer_norm(cls_tok, p[f"{prefix}ln1_g"], p[f"{prefix}ln1_b"]),
+             layer_norm(xs, p[f"{prefix}ln1_g"], p[f"{prefix}ln1_b"]),
+             p, prefix, heads, causal=False)
+    cls_tok = cls_tok + h
+    h = _ffn(layer_norm(cls_tok, p[f"{prefix}ln2_g"], p[f"{prefix}ln2_b"]), p, prefix)
+    return cls_tok + h
+
+
+# ----------------------------------------------------------------------------
+# Family encoders
+# ----------------------------------------------------------------------------
+
+def encode_text(p, tokens, cfg: ModelConfig, gates=None, token_keep=None):
+    """BERT (post-LN, bidirectional) or GPT (pre-LN, causal) body -> (B,S,D).
+
+    gates: optional (L,) layer gate vector (layer dropping). token_keep:
+    optional (B,S) keep mask applied in the middle third of layers (token
+    dropping). Gated runs use pre-LN blocks (post-LN is incompatible with
+    stochastic depth; cf. Zhang & He 2020).
+    """
+    s = tokens.shape[1]
+    x = p["emb_tok"][tokens] + p["emb_pos"][:s]
+    causal = cfg.family == "gpt"
+    gated = gates is not None or token_keep is not None
+    lo, hi = cfg.layers // 3, 2 * cfg.layers // 3
+    # NOTE: both families use pre-LN blocks. The original BERT is post-LN,
+    # but post-LN depth-scaling instability (well documented; cf. Xiong et
+    # al. 2020) dominates the growth comparisons at this substrate's short
+    # step budgets, so the BERT analog is pre-LN (see DESIGN.md §4). The
+    # post-LN block is kept (`_block_postln`) for adapter probes and tests.
+    for l in range(cfg.layers):
+        prefix = f"L{l:02d}_"
+        if gated:
+            g = gates[l] if gates is not None else None
+            tk = token_keep if (token_keep is not None and lo <= l < hi) else None
+            x = _block_preln(x, p, prefix, cfg.heads, causal, gate=g, token_keep=tk)
+        else:
+            x = _block_preln(x, p, prefix, cfg.heads, causal)
+    return layer_norm(x, p["final_ln_g"], p["final_ln_b"])
+
+
+def _patchify(images, patch):
+    """(B, H, W, C) -> (B, T, patch*patch*C)."""
+    b, h, w, c = images.shape
+    nh, nw = h // patch, w // patch
+    x = images.reshape(b, nh, patch, nw, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(b, nh * nw, patch * patch * c)
+    return x
+
+
+def encode_vision(p, images, cfg: ModelConfig):
+    """ViT / CaiT body -> CLS representation (B, D)."""
+    x = _patchify(images, cfg.patch) @ p["emb_patch_w"].T + p["emb_patch_b"]
+    if cfg.family == "vit":
+        cls_tok = jnp.broadcast_to(p["emb_cls"], (x.shape[0], 1, cfg.dim))
+        x = jnp.concatenate([cls_tok, x], axis=1)
+        x = x + p["emb_pos"][: x.shape[1]]
+        for l in range(cfg.layers):
+            x = _block_preln(x, p, f"L{l:02d}_", cfg.heads)
+        x = layer_norm(x, p["final_ln_g"], p["final_ln_b"])
+        return x[:, 0]
+    # CaiT: patch self-attention stage (LayerScale), then class-attention
+    x = x + p["emb_pos"][: x.shape[1]]
+    for l in range(cfg.layers):
+        x = _block_preln(x, p, f"L{l:02d}_", cfg.heads, layerscale=True)
+    cls_tok = jnp.broadcast_to(p["emb_cls"], (x.shape[0], 1, cfg.dim))
+    for l in range(cfg.cls_layers):
+        cls_tok = _class_attn_block(cls_tok, x, p, f"C{l:02d}_", cfg.heads)
+    cls_tok = layer_norm(cls_tok, p["final_ln_g"], p["final_ln_b"])
+    return cls_tok[:, 0]
+
+
+# ----------------------------------------------------------------------------
+# Losses / task heads
+# ----------------------------------------------------------------------------
+
+def _masked_xent(logits, labels):
+    """Cross entropy over positions with label >= 0; mean over those."""
+    v = logits.shape[-1]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    mask = (labels >= 0).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def lm_loss(p, batch, cfg: ModelConfig, gates=None, token_keep=None):
+    """MLM (bert) / causal-LM (gpt) loss. batch: tokens (B,S) i32, labels (B,S) i32."""
+    h = encode_text(p, batch["tokens"], cfg, gates=gates, token_keep=token_keep)
+    logits = h @ p["emb_tok"].T + p["mlm_bias"]
+    return _masked_xent(logits, batch["labels"])
+
+
+def vision_loss(p, batch, cfg: ModelConfig):
+    """Image classification loss + accuracy. batch: images (B,H,W,C) f32, labels (B,) i32."""
+    h = encode_vision(p, batch["images"], cfg)
+    logits = h @ p["head_w"].T + p["head_b"]
+    loss = _masked_xent(logits, batch["labels"])
+    acc = (logits.argmax(-1) == batch["labels"]).astype(jnp.float32).mean()
+    return loss, acc
+
+
+def probe_loss(p, batch, cfg: ModelConfig):
+    """Sequence-classification probe (GLUE analog): mean-pool + linear head."""
+    h = encode_text(p, batch["tokens"], cfg).mean(axis=1)
+    logits = h @ p["head_w"].T + p["head_b"]
+    loss = _masked_xent(logits, batch["labels"])
+    acc = (logits.argmax(-1) == batch["labels"]).astype(jnp.float32).mean()
+    return loss, acc
+
+
+def span_loss(p, batch, cfg: ModelConfig):
+    """Span-extraction probe (SQuAD analog): per-token start/end logits."""
+    h = encode_text(p, batch["tokens"], cfg)
+    logits = h @ p["span_w"].T + p["span_b"]  # (B, S, 2)
+    ls, le = logits[..., 0], logits[..., 1]
+    loss = _masked_xent(ls, batch["starts"]) + _masked_xent(le, batch["ends"])
+    em = ((ls.argmax(-1) == batch["starts"]) & (le.argmax(-1) == batch["ends"]))
+    return loss * 0.5, em.astype(jnp.float32).mean()
+
+
+def kd_loss(p_small, p_large, batch, cfg_s: ModelConfig, cfg_l: ModelConfig, alpha=0.5):
+    """Knowledge-inheritance (KI, Qin et al. 2021) objective: task CE mixed
+    with KL to the small teacher's distribution. Works for text (token-level)
+    and vision (class-level) families."""
+    if cfg_s.family in ("vit", "cait"):
+        t_logits = encode_vision(p_small, batch["images"], cfg_s) @ p_small["head_w"].T + p_small["head_b"]
+        s_logits = encode_vision(p_large, batch["images"], cfg_l) @ p_large["head_w"].T + p_large["head_b"]
+    else:
+        h_t = encode_text(p_small, batch["tokens"], cfg_s)
+        t_logits = h_t @ p_small["emb_tok"].T + p_small["mlm_bias"]
+        h_s = encode_text(p_large, batch["tokens"], cfg_l)
+        s_logits = h_s @ p_large["emb_tok"].T + p_large["mlm_bias"]
+    ce = _masked_xent(s_logits, batch["labels"])
+    t_prob = jax.nn.softmax(jax.lax.stop_gradient(t_logits), axis=-1)
+    kl = (t_prob * (jnp.log(t_prob + 1e-9) - jax.nn.log_softmax(s_logits))).sum(-1)
+    mask = (batch["labels"] >= 0).astype(jnp.float32)
+    kl = (kl * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return alpha * ce + (1 - alpha) * kl

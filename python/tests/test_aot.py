@@ -1,0 +1,97 @@
+"""AOT pipeline consistency: registry completeness, manifest flattening
+order (the contract with the rust runtime), and HLO text production."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.configs import PAIRS, REGISTRY, param_count, to_json
+
+
+class TestRegistry:
+    def test_every_model_has_fwd_and_grad(self):
+        arts = M.artifact_registry()
+        for name in REGISTRY:
+            assert f"fwd_{name}" in arts
+            assert f"grad_{name}" in arts
+
+    def test_every_pair_has_ligo_artifacts(self):
+        arts = M.artifact_registry()
+        for s, t in PAIRS:
+            assert f"ligo_grad_{s}__{t}" in arts
+            assert f"ligo_apply_{s}__{t}" in arts
+
+    def test_param_count_matches_actual(self):
+        for name in ("bert_small", "gpt_base", "vit_s", "cait_xs"):
+            cfg = REGISTRY[name]
+            shapes = M.param_shapes(cfg)
+            actual = sum(int(np.prod(s)) for s in shapes.values())
+            assert param_count(cfg) == actual, name
+
+    def test_e2e_base_is_about_100m(self):
+        assert 60e6 < param_count(REGISTRY["e2e_base"]) < 150e6
+
+    def test_config_json_complete(self):
+        j = to_json()
+        assert set(j["models"]) == set(REGISTRY)
+        assert j["pairs"] == [list(p) for p in PAIRS] or j["pairs"] == PAIRS
+
+
+class TestManifestOrdering:
+    def test_flat_entries_sorted_by_key(self):
+        specs = (
+            {"b": jax.ShapeDtypeStruct((2,), np.float32),
+             "a": jax.ShapeDtypeStruct((3,), np.float32)},
+            {"z": jax.ShapeDtypeStruct((1,), np.int32)},
+        )
+        entries = aot._flat_entries(specs, ("params", "batch"))
+        names = [e["name"] for e in entries]
+        assert names == ["params/a", "params/b", "batch/z"]
+
+    def test_flatten_order_matches_jax(self):
+        """The manifest order must equal jax.jit's pytree flattening order."""
+        fn, specs = M.build("fwd_bert_small")
+        flat, _ = jax.tree_util.tree_flatten(specs)
+        entries = aot._flat_entries(specs, ("params", "batch"))
+        assert len(flat) == len(entries)
+        for leaf, e in zip(flat, entries):
+            assert list(leaf.shape) == e["shape"], e["name"]
+
+    def test_kind_dispatch(self):
+        assert aot._kind("fwd_bert_small") == "fwd"
+        assert aot._kind("grad_gated_bert_base") == "grad_gated"
+        assert aot._kind("ligo_apply_a__b") == "ligo_apply"
+        assert aot._kind("adapter_grad_bert_base") == "adapter_grad"
+        with pytest.raises(ValueError):
+            aot._kind("bogus_thing")
+
+
+class TestLowering:
+    def test_small_artifact_lowers_to_hlo_text(self):
+        fn, specs = M.build("fwd_bert_small")
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "f32" in text
+
+    def test_built_manifests_match_current_source(self, tmp_path=None):
+        """If artifacts exist, their manifests must parse and cover the
+        declared inputs/outputs."""
+        art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        man = os.path.join(art_dir, "fwd_bert_small.manifest.json")
+        if not os.path.exists(man):
+            pytest.skip("artifacts not built")
+        with open(man) as f:
+            m = json.load(f)
+        names = [e["name"] for e in m["inputs"]]
+        assert "params/emb_tok" in names
+        assert "batch/tokens" in names
+        assert m["outputs"][0]["name"] == "loss"
+        # count matches the current model definition
+        shapes = M.param_shapes(REGISTRY["bert_small"])
+        assert len([n for n in names if n.startswith("params/")]) == len(shapes)

@@ -1,0 +1,160 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes; every property asserts allclose against
+ref.py. This is the CORE correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ligo_expand import ligo_expand, ligo_expand_batched, _pick_block
+from compile.kernels.attention import attention
+from compile.kernels.ref import ligo_expand_ref, attention_ref, layernorm_ref
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 12, 16, 24, 48, 64, 96, 130])
+SMALL_DIMS = st.sampled_from([1, 2, 4, 8, 16, 32])
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestLigoExpand:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIMS, k=SMALL_DIMS, n=SMALL_DIMS, p=DIMS)
+    def test_matches_oracle_shapes(self, m, k, n, p):
+        b, w, a = _rand(1, m, k), _rand(2, k, n), _rand(3, p, n)
+        got = ligo_expand(b, w, a)
+        want = ligo_expand_ref(b, w, a)
+        assert got.shape == (m, p)
+        np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-4)
+
+    def test_identity_expansion_is_noop(self):
+        w = _rand(0, 48, 48)
+        eye = jnp.eye(48)
+        np.testing.assert_allclose(ligo_expand(eye, w, eye), w, atol=1e-5)
+
+    def test_paper_shapes_bert_small_to_base(self):
+        # D1=512 -> D2=768 at paper scale (the real growth shapes)
+        b, w, a = _rand(1, 768, 512), _rand(2, 512, 512), _rand(3, 768, 512)
+        np.testing.assert_allclose(
+            ligo_expand(b, w, a), ligo_expand_ref(b, w, a), atol=5e-2, rtol=1e-4
+        )
+
+    def test_rectangular_ffn_shapes(self):
+        # fc1: (F2, F1) x (F1, D1) x (D2, D1)^T
+        b, w, a = _rand(1, 288, 192), _rand(2, 192, 48), _rand(3, 72, 48)
+        np.testing.assert_allclose(
+            ligo_expand(b, w, a), ligo_expand_ref(b, w, a), atol=1e-3, rtol=1e-4
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.sampled_from([8, 48, 96]), layers=st.integers(1, 4))
+    def test_batched_matches_loop(self, m, layers):
+        b, a = _rand(1, m, 8), _rand(3, m, 8)
+        ws = _rand(2, layers, 8, 8)
+        got = ligo_expand_batched(b, ws, a)
+        want = jnp.stack([ligo_expand_ref(b, ws[i], a) for i in range(layers)])
+        np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-4)
+
+    def test_gradients_match_oracle(self):
+        b, w, a = _rand(1, 24, 8), _rand(2, 8, 8), _rand(3, 24, 8)
+
+        def loss_k(b, w, a):
+            return (ligo_expand(b, w, a) ** 2).sum()
+
+        def loss_r(b, w, a):
+            return (ligo_expand_ref(b, w, a) ** 2).sum()
+
+        gk = jax.grad(loss_k, argnums=(0, 1, 2))(b, w, a)
+        gr = jax.grad(loss_r, argnums=(0, 1, 2))(b, w, a)
+        for x, y in zip(gk, gr):
+            np.testing.assert_allclose(x, y, atol=1e-2, rtol=1e-3)
+
+    def test_grad_through_vmap(self):
+        b, a = _rand(1, 24, 8), _rand(3, 24, 8)
+        ws = _rand(2, 3, 8, 8)
+
+        def lk(b):
+            return (ligo_expand_batched(b, ws, a) ** 3).sum()
+
+        def lr(b):
+            return sum(((ligo_expand_ref(b, ws[i], a)) ** 3).sum() for i in range(3))
+
+        np.testing.assert_allclose(jax.grad(lk)(b), jax.grad(lr)(b), atol=1e-2, rtol=1e-3)
+
+    def test_pick_block_divides(self):
+        for dim in (1, 2, 3, 7, 48, 96, 130, 768):
+            for t in (8, 64, 128):
+                b = _pick_block(dim, t)
+                assert dim % b == 0 and 1 <= b <= max(dim, 1)
+
+    def test_linearity_in_w(self):
+        """The growth operator is linear in the small model's weights (Eq. 4)."""
+        b, a = _rand(1, 12, 8), _rand(3, 12, 8)
+        w1, w2 = _rand(2, 8, 8), _rand(4, 8, 8)
+        lhs = ligo_expand(b, w1 + 2.0 * w2, a)
+        rhs = ligo_expand(b, w1, a) + 2.0 * ligo_expand(b, w2, a)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-3, rtol=1e-4)
+
+
+class TestAttention:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        bh=st.sampled_from([1, 2, 6]),
+        s=st.sampled_from([4, 16, 32, 64, 96]),
+        dh=st.sampled_from([4, 8, 12, 16]),
+        causal=st.booleans(),
+    )
+    def test_matches_oracle(self, bh, s, dh, causal):
+        q, k, v = _rand(1, bh, s, dh), _rand(2, bh, s, dh), _rand(3, bh, s, dh)
+        got = attention(q, k, v, causal)
+        want = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(got, want, atol=2e-4, rtol=1e-4)
+
+    def test_causal_first_token_attends_self_only(self):
+        q, k, v = _rand(1, 1, 8, 4), _rand(2, 1, 8, 4), _rand(3, 1, 8, 4)
+        out = attention(q, k, v, True)
+        np.testing.assert_allclose(out[0, 0], v[0, 0], atol=1e-5)
+
+    def test_permutation_equivariance_noncausal(self):
+        """Bidirectional attention output is invariant to permuting K/V pairs."""
+        q, k, v = _rand(1, 1, 16, 4), _rand(2, 1, 16, 4), _rand(3, 1, 16, 4)
+        perm = jnp.array(np.random.RandomState(0).permutation(16))
+        out1 = attention(q, k, v, False)
+        out2 = attention(q, k[:, perm], v[:, perm], False)
+        np.testing.assert_allclose(out1, out2, atol=1e-4)
+
+    def test_uniform_values_passthrough(self):
+        """If V is constant, output equals that constant regardless of scores."""
+        q, k = _rand(1, 2, 16, 4), _rand(2, 2, 16, 4)
+        v = jnp.ones((2, 16, 4))
+        np.testing.assert_allclose(attention(q, k, v, False), v, atol=1e-5)
+
+    def test_grads_match_oracle(self):
+        q, k, v = _rand(1, 2, 16, 4), _rand(2, 2, 16, 4), _rand(3, 2, 16, 4)
+        for causal in (False, True):
+            gk = jax.grad(lambda q, k, v: (attention(q, k, v, causal) ** 2).sum(),
+                          argnums=(0, 1, 2))(q, k, v)
+            gr = jax.grad(lambda q, k, v: (attention_ref(q, k, v, causal=causal) ** 2).sum(),
+                          argnums=(0, 1, 2))(q, k, v)
+            for x, y in zip(gk, gr):
+                np.testing.assert_allclose(x, y, atol=1e-3, rtol=1e-3)
+
+    def test_odd_seq_falls_back_to_smaller_blocks(self):
+        # S=24 not divisible by 64: block-size fallback path
+        q, k, v = _rand(1, 1, 24, 8), _rand(2, 1, 24, 8), _rand(3, 1, 24, 8)
+        np.testing.assert_allclose(
+            attention(q, k, v, True), attention_ref(q, k, v, causal=True), atol=2e-4
+        )
+
+
+class TestLayerNormRef:
+    def test_normalizes(self):
+        x = _rand(1, 4, 32)
+        y = layernorm_ref(x, jnp.ones(32), jnp.zeros(32))
+        np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(y.std(-1), 1.0, atol=1e-2)

@@ -1,0 +1,147 @@
+"""LiGO operator correctness: the tying scheme (App. B.1), Prop. 1 special
+cases, linearity, and differentiability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import transformer as T
+from compile.configs import REGISTRY
+from compile.ligo import ligo_apply, ligo_init
+from compile.model import ligo_specs, param_shapes
+
+
+def setup(pair=("bert_small", "bert_base")):
+    small, large = REGISTRY[pair[0]], REGISTRY[pair[1]]
+    sp = T.init_params(jax.random.PRNGKey(1), small)
+    lp = ligo_init(jax.random.PRNGKey(2), small, large)
+    return small, large, sp, lp
+
+
+class TestShapes:
+    def test_apply_produces_large_shapes(self):
+        small, large, sp, lp = setup()
+        grown = ligo_apply(lp, sp, small, large)
+        want = param_shapes(large)
+        assert set(grown) == set(want)
+        for k, s in want.items():
+            assert grown[k].shape == s, k
+
+    def test_vision_pair(self):
+        small, large, sp, lp = (None,) * 4
+        s, l = REGISTRY["vit_s"], REGISTRY["vit_b"]
+        sp = T.init_params(jax.random.PRNGKey(1), s)
+        lp = ligo_init(jax.random.PRNGKey(2), s, l)
+        grown = ligo_apply(lp, sp, s, l)
+        want = param_shapes(l)
+        assert set(grown) == set(want)
+        for k, v in want.items():
+            assert grown[k].shape == v, k
+
+    def test_cait_pair_includes_cls_layers(self):
+        s, l = REGISTRY["cait_xs"], REGISTRY["cait_s"]
+        sp = T.init_params(jax.random.PRNGKey(1), s)
+        lp = ligo_init(jax.random.PRNGKey(2), s, l)
+        grown = ligo_apply(lp, sp, s, l)
+        assert grown["C01_q_w"].shape == (l.dim, l.dim)
+        assert grown["L00_ls1"].shape == (l.dim,)
+
+    def test_depth_only_pair_has_no_width_params(self):
+        s, l = REGISTRY["bert_d3w72"], REGISTRY["bert_base"]
+        lp = ligo_init(jax.random.PRNGKey(0), s, l)
+        assert not any(k.startswith("B_") for k in lp)
+        assert "w_q" in lp and lp["w_q"].shape == (l.layers, s.layers)
+
+    def test_width_only_pair_has_no_depth_params(self):
+        s, l = REGISTRY["bert_d6w48"], REGISTRY["bert_base"]
+        lp = ligo_init(jax.random.PRNGKey(0), s, l)
+        assert not any(k.startswith("w_") for k in lp)
+        assert lp["B_emb"].shape == (l.dim, s.dim)
+
+    def test_ligo_specs_match_init(self):
+        s, l = REGISTRY["bert_small"], REGISTRY["bert_large"]
+        specs = ligo_specs(s, l)
+        init = ligo_init(jax.random.PRNGKey(0), s, l)
+        assert set(specs) == set(init)
+
+
+class TestProp1SpecialCases:
+    def test_stackbert_is_special_case(self):
+        """With w = stacking pattern and B = I (D1 == D2), M(Theta) must
+        equal layer duplication exactly (Prop. 1)."""
+        s, l = REGISTRY["bert_d3w72"], REGISTRY["bert_base"]  # depth-only
+        sp = T.init_params(jax.random.PRNGKey(1), s)
+        lp = ligo_init(jax.random.PRNGKey(0), s, l)
+        # remove the init noise -> pure stacking pattern
+        lp = {k: jnp.round(v) for k, v in lp.items()}
+        grown = ligo_apply(lp, sp, s, l)
+        for i in range(l.layers):
+            src = i % s.layers
+            np.testing.assert_allclose(
+                grown[f"L{i:02d}_q_w"], sp[f"L{src:02d}_q_w"], atol=1e-5
+            )
+            np.testing.assert_allclose(
+                grown[f"L{i:02d}_fc1_b"], sp[f"L{src:02d}_fc1_b"], atol=1e-5
+            )
+
+    def test_neuron_duplication_is_special_case(self):
+        """With B = cyclic duplication and no depth growth, rows/cols of the
+        grown matrices are copies of small rows/cols (Net2Net pattern,
+        without the normalization term which M can learn)."""
+        s, l = REGISTRY["bert_d6w48"], REGISTRY["bert_base"]  # width-only
+        sp = T.init_params(jax.random.PRNGKey(1), s)
+        lp = ligo_init(jax.random.PRNGKey(0), s, l)
+        lp = {k: jnp.round(v) for k, v in lp.items()}
+        grown = ligo_apply(lp, sp, s, l)
+        q = np.asarray(grown["L00_q_w"])
+        qs = np.asarray(sp["L00_q_w"])
+        d1 = s.dim
+        # row j >= d1 equals row (j mod d1); same for columns
+        np.testing.assert_allclose(q[d1:, :d1], qs[: l.dim - d1, :], atol=1e-5)
+        np.testing.assert_allclose(q[:d1, d1:], qs[:, : l.dim - d1], atol=1e-5)
+
+
+class TestTying:
+    def test_residual_stream_alignment(self):
+        """B_emb ties the residual stream: with sp holding an identity-probe
+        pattern, emb growth and o_w out-growth must use the same matrix."""
+        small, large, sp, lp = setup()
+        grown = ligo_apply(lp, sp, small, large)
+        b_emb = np.asarray(lp["B_emb"])
+        # emb_tok growth is exactly emb_tok @ B_emb^T
+        want = np.asarray(sp["emb_tok"]) @ b_emb.T
+        np.testing.assert_allclose(grown["emb_tok"], want, atol=1e-4)
+        # final LN grows through the same matrix
+        want_ln = np.asarray(sp["final_ln_g"]) @ b_emb.T
+        np.testing.assert_allclose(grown["final_ln_g"], want_ln, atol=1e-4)
+
+    def test_linearity_in_small_params(self):
+        """vec(Theta_new) = M vec(Theta): doubling Theta doubles the output."""
+        small, large, sp, lp = setup()
+        g1 = ligo_apply(lp, sp, small, large)
+        sp2 = {k: 2.0 * v for k, v in sp.items()}
+        g2 = ligo_apply(lp, sp2, small, large)
+        for k in g1:
+            np.testing.assert_allclose(g2[k], 2.0 * g1[k], atol=1e-3, rtol=1e-4)
+
+    def test_grown_model_forward_finite(self):
+        small, large, sp, lp = setup()
+        grown = ligo_apply(lp, sp, small, large)
+        toks = jnp.array(np.random.RandomState(0).randint(4, 512, (2, large.seq)), jnp.int32)
+        labels = jnp.where(toks % 5 == 0, toks, -1)
+        loss = T.lm_loss(grown, {"tokens": toks, "labels": labels}, large)
+        assert np.isfinite(float(loss))
+
+    def test_m_is_differentiable(self):
+        small, large, sp, lp = setup()
+        toks = jnp.array(np.random.RandomState(0).randint(4, 512, (2, large.seq)), jnp.int32)
+        labels = jnp.where(toks % 5 == 0, toks, -1)
+
+        def loss_fn(lp):
+            grown = ligo_apply(lp, sp, small, large)
+            return T.lm_loss(grown, {"tokens": toks, "labels": labels}, large)
+
+        grads = jax.grad(loss_fn)(lp)
+        assert set(grads) == set(lp)
+        total = sum(float(jnp.abs(g).sum()) for g in grads.values())
+        assert np.isfinite(total) and total > 0.0

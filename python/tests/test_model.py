@@ -1,0 +1,173 @@
+"""L2 model correctness: shapes, losses, masking semantics, family paths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import transformer as T
+from compile.configs import REGISTRY
+from compile.model import batch_specs, param_shapes
+
+
+def mk_params(name, **kw):
+    cfg = REGISTRY[name]
+    return cfg, T.init_params(jax.random.PRNGKey(0), cfg, **kw)
+
+
+def rand_batch(cfg, key=0):
+    rng = np.random.RandomState(key)
+    specs = batch_specs(cfg)
+    out = {}
+    for k, s in specs.items():
+        if np.dtype(s.dtype) == np.int32:
+            hi = cfg.vocab if k == "tokens" else max(cfg.n_classes, 2)
+            if k in ("starts", "ends"):
+                hi = cfg.seq
+            out[k] = rng.randint(0, hi, s.shape).astype(np.int32)
+        else:
+            out[k] = rng.randn(*s.shape).astype(np.float32) * 0.5
+    return out
+
+
+class TestParamNaming:
+    def test_bert_small_has_expected_keys(self):
+        cfg, p = mk_params("bert_small")
+        assert "emb_tok" in p and "mlm_bias" in p
+        for l in range(cfg.layers):
+            for suf in ("q_w", "k_w", "v_w", "o_w", "fc1_w", "fc2_w", "ln1_g", "ln2_b"):
+                assert f"L{l:02d}_{suf}" in p
+
+    def test_weight_convention_out_in(self):
+        cfg, p = mk_params("bert_small")
+        assert p["L00_fc1_w"].shape == (cfg.ffn, cfg.dim)
+        assert p["L00_fc2_w"].shape == (cfg.dim, cfg.ffn)
+        assert p["emb_tok"].shape == (cfg.vocab, cfg.dim)
+
+    def test_shapes_match_param_shapes_helper(self):
+        cfg, p = mk_params("gpt_base")
+        shapes = param_shapes(cfg)
+        assert set(shapes) == set(p)
+        for k in p:
+            assert shapes[k] == p[k].shape
+
+    def test_cait_has_layerscale_and_cls_layers(self):
+        cfg, p = mk_params("cait_xs")
+        assert "L00_ls1" in p and "L05_ls2" in p
+        assert "C00_q_w" in p and "C01_fc2_w" in p
+
+    def test_adapters_and_span(self):
+        cfg, p = mk_params("probe_bert_base", with_adapters=True, with_span=True)
+        assert "L00_ad1_w" in p and p["L00_ad1_w"].shape == (T.ADAPTER_DIM, cfg.dim)
+        assert p["span_w"].shape == (2, cfg.dim)
+        assert p["head_w"].shape == (cfg.n_classes, cfg.dim)
+
+
+class TestLosses:
+    def test_mlm_loss_ignores_negative_labels(self):
+        cfg, p = mk_params("bert_small")
+        b = rand_batch(cfg)
+        all_ignored = dict(b, labels=np.full_like(b["labels"], -1))
+        loss = T.lm_loss(p, {k: jnp.array(v) for k, v in all_ignored.items()}, cfg)
+        assert float(loss) == 0.0
+
+    def test_mlm_loss_near_uniform_at_init(self):
+        cfg, p = mk_params("bert_small")
+        b = {k: jnp.array(v) for k, v in rand_batch(cfg).items()}
+        b["labels"] = jnp.where(b["labels"] % 3 == 0, b["tokens"], -1)
+        loss = float(T.lm_loss(p, b, cfg))
+        assert abs(loss - np.log(cfg.vocab)) < 0.5
+
+    def test_gpt_causal_masking_no_future_leak(self):
+        """Changing a future token must not change earlier positions' logits."""
+        cfg, p = mk_params("gpt_base")
+        toks = np.full((1, cfg.seq), 10, np.int32)
+        h1 = T.encode_text(p, jnp.array(toks), cfg)
+        toks2 = toks.copy()
+        toks2[0, -1] = 99
+        h2 = T.encode_text(p, jnp.array(toks2), cfg)
+        np.testing.assert_allclose(h1[0, : cfg.seq - 1], h2[0, : cfg.seq - 1], atol=1e-5)
+
+    def test_bert_bidirectional_context_leaks(self):
+        """BERT (non-causal) SHOULD see future tokens."""
+        cfg, p = mk_params("bert_small")
+        toks = np.full((1, cfg.seq), 10, np.int32)
+        h1 = T.encode_text(p, jnp.array(toks), cfg)
+        toks2 = toks.copy()
+        toks2[0, -1] = 99
+        h2 = T.encode_text(p, jnp.array(toks2), cfg)
+        assert not np.allclose(h1[0, 0], h2[0, 0], atol=1e-6)
+
+    def test_vision_loss_and_acc(self):
+        cfg, p = mk_params("vit_s")
+        b = {k: jnp.array(v) for k, v in rand_batch(cfg).items()}
+        loss, acc = T.vision_loss(p, b, cfg)
+        assert np.isfinite(float(loss))
+        assert 0.0 <= float(acc) <= 1.0
+        assert abs(float(loss) - np.log(cfg.n_classes)) < 1.0
+
+    def test_cait_forward_runs(self):
+        cfg, p = mk_params("cait_xs")
+        b = {k: jnp.array(v) for k, v in rand_batch(cfg).items()}
+        loss, acc = T.vision_loss(p, b, cfg)
+        assert np.isfinite(float(loss))
+
+    def test_probe_loss(self):
+        cfg, p = mk_params("probe_bert_base")
+        b = {k: jnp.array(v) for k, v in rand_batch(cfg).items()}
+        loss, acc = T.probe_loss(p, b, cfg)
+        assert np.isfinite(float(loss)) and 0 <= float(acc) <= 1
+
+    def test_span_loss(self):
+        cfg = REGISTRY["probe_bert_base"]
+        p = T.init_params(jax.random.PRNGKey(0), cfg, with_span=True)
+        rng = np.random.RandomState(0)
+        b = {
+            "tokens": jnp.array(rng.randint(0, cfg.vocab, (cfg.batch, cfg.seq)), jnp.int32),
+            "starts": jnp.array(rng.randint(0, cfg.seq, (cfg.batch,)), jnp.int32),
+            "ends": jnp.array(rng.randint(0, cfg.seq, (cfg.batch,)), jnp.int32),
+        }
+        loss, em = T.span_loss(p, b, cfg)
+        assert np.isfinite(float(loss))
+
+    def test_kd_loss_between_sizes(self):
+        cfg_s, ps = mk_params("bert_small")
+        cfg_l, pl = mk_params("bert_base")
+        b = {k: jnp.array(v) for k, v in rand_batch(cfg_l).items()}
+        b["labels"] = jnp.where(b["labels"] % 3 == 0, b["tokens"], -1)
+        loss = T.kd_loss(ps, pl, b, cfg_s, cfg_l)
+        assert np.isfinite(float(loss))
+
+
+class TestGating:
+    def test_zero_gates_reduce_to_embedding_readout(self):
+        """With all layer gates 0, the body is an identity + final LN."""
+        cfg, p = mk_params("bert_small")
+        toks = jnp.array(np.random.RandomState(0).randint(4, 512, (2, cfg.seq)), jnp.int32)
+        gates0 = jnp.zeros((cfg.layers,))
+        gates1 = jnp.ones((cfg.layers,))
+        h0 = T.encode_text(p, toks, cfg, gates=gates0)
+        h1 = T.encode_text(p, toks, cfg, gates=gates1)
+        emb = p["emb_tok"][toks] + p["emb_pos"][: cfg.seq]
+        want = T.layer_norm(emb, p["final_ln_g"], p["final_ln_b"])
+        np.testing.assert_allclose(h0, want, atol=1e-5)
+        assert not np.allclose(h0, h1, atol=1e-4)
+
+    def test_token_keep_masks_middle_layers(self):
+        cfg, p = mk_params("bert_base")  # 6 layers -> middle third is 2..4
+        toks = jnp.array(np.random.RandomState(0).randint(4, 512, (2, cfg.seq)), jnp.int32)
+        keep_all = jnp.ones((2, cfg.seq))
+        keep_none = jnp.zeros((2, cfg.seq))
+        h1 = T.encode_text(p, toks, cfg, token_keep=keep_all)
+        h2 = T.encode_text(p, toks, cfg, token_keep=keep_none)
+        assert not np.allclose(h1, h2, atol=1e-5)
+
+
+class TestPatchify:
+    def test_patchify_shapes_and_content(self):
+        img = jnp.arange(2 * 8 * 8 * 3, dtype=jnp.float32).reshape(2, 8, 8, 3)
+        p = T._patchify(img, 4)
+        assert p.shape == (2, 4, 48)
+        # first patch of first image = top-left 4x4 block
+        want = np.asarray(img[0, :4, :4, :]).reshape(-1)
+        np.testing.assert_array_equal(np.asarray(p[0, 0]), want)

@@ -1,0 +1,47 @@
+//! Bench: synthetic-data substrate throughput — corpus sampling, MLM
+//! masking, vision rendering, probe construction, and the prefetching
+//! loader's overhead vs inline generation.
+
+use ligo::config::{artifacts_dir, Registry};
+use ligo::data::batches::{gated_batch, lm_batch, mlm_batch};
+use ligo::data::corpus::Corpus;
+use ligo::data::downstream::{Probe, ProbeKind, SpanProbe};
+use ligo::data::loader::Loader;
+use ligo::data::vision::VisionTask;
+use ligo::util::bench::bench;
+use ligo::util::rng::Rng;
+
+fn main() {
+    let reg = Registry::load(&artifacts_dir()).unwrap();
+    let bert = reg.model("bert_base").unwrap().clone();
+    let gpt = reg.model("gpt_base").unwrap().clone();
+    let vit = reg.model("vit_b").unwrap().clone();
+    let corpus = Corpus::new(512, 0);
+    println!("== dataloader: batch construction throughput ==");
+    let tokens = (bert.batch * bert.seq) as f64;
+    let s = bench("mlm_batch(bert_base)", 5, 50, || {
+        mlm_batch(&corpus, &bert, &mut Rng::new(1))
+    });
+    s.report_throughput(tokens, "tok");
+    bench("lm_batch(gpt_base)", 5, 50, || lm_batch(&corpus, &gpt, &mut Rng::new(1)));
+    bench("gated_batch(bert_base)", 5, 50, || {
+        gated_batch(&corpus, &bert, &mut Rng::new(1), 0.1, 0.15)
+    });
+    let sv = bench("vision_batch(vit_b)", 3, 20, || {
+        VisionTask::pretrain().batch(&vit, &mut Rng::new(1))
+    });
+    sv.report_throughput(vit.batch as f64, "img");
+    let probe_cfg = reg.model("probe_bert_base").unwrap().clone();
+    bench("probe_batch(mnli)", 5, 50, || {
+        Probe::new(ProbeKind::Mnli, corpus.clone()).batch(&probe_cfg, &mut Rng::new(1))
+    });
+    bench("span_batch(v2)", 5, 50, || {
+        SpanProbe::v2(corpus.clone()).batch(&probe_cfg, &mut Rng::new(1))
+    });
+    // prefetching loader vs inline
+    let c2 = corpus.clone();
+    let b2 = bert.clone();
+    let loader = Loader::spawn(
+        Box::new(move |s| mlm_batch(&c2, &b2, &mut Rng::new(s as u64))), 8);
+    bench("loader.next() [prefetched]", 5, 50, || loader.next());
+}

@@ -1,0 +1,30 @@
+//! Bench: growth-operator application cost (pure rust, parameter-space) and
+//! the LiGO apply artifact, per pair. Growth is off the training hot path
+//! but bounds how cheaply a framework can restart from a smaller model.
+
+use ligo::config::{artifacts_dir, Registry};
+use ligo::growth;
+use ligo::runtime::Runtime;
+use ligo::tensor::store::Store;
+use ligo::util::bench::bench;
+
+fn main() {
+    let Ok(rt) = Runtime::cpu(artifacts_dir()) else { return };
+    let reg = Registry::load(&artifacts_dir()).unwrap();
+    let small = reg.model("bert_small").unwrap().clone();
+    let large = reg.model("bert_base").unwrap().clone();
+    let exe = rt.load("grad_bert_small").unwrap();
+    let params = Store::det_init(&exe.manifest.shapes_of("params"), 0);
+    println!("== growth_ops: bert_small -> bert_base ==");
+    for name in growth::ALL {
+        let op = growth::by_name(name).unwrap();
+        bench(&format!("grow/{name}"), 2, 15, || op.grow(&params, &small, &large));
+    }
+    // LiGO apply through the artifact (the learned-path equivalent)
+    let apply = rt.load("ligo_apply_bert_small__bert_base").unwrap();
+    let m = ligo::coordinator::growth_manager::ligo_init_store(
+        &apply.manifest.shapes_of("ligo"), 0.01, 0);
+    bench("grow/ligo_apply_artifact", 2, 15, || {
+        apply.run(&[("ligo", &m), ("small", &params)]).unwrap()
+    });
+}

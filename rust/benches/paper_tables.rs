@@ -1,0 +1,34 @@
+//! Bench: one end-to-end micro-run per paper table/figure — the cost of
+//! regenerating each result, and a regression guard that the experiment
+//! paths stay runnable. (Full reproductions: `ligo experiment <id>`.)
+
+use ligo::config::{artifacts_dir, Registry};
+use ligo::experiments;
+use ligo::runtime::Runtime;
+use ligo::util::bench::fmt_t;
+use ligo::util::timer::Timer;
+
+fn main() {
+    let Ok(rt) = Runtime::cpu(artifacts_dir()) else { return };
+    let reg = Registry::load(&artifacts_dir()).unwrap();
+    let out = std::env::temp_dir().join("ligo_bench_tables");
+    let _ = std::fs::remove_dir_all(&out);
+    println!("== paper_tables: micro-scale end-to-end per table/figure ==");
+    // scale 0.04 => ~24-step runs: exercises every code path cheaply.
+    // LIGO_BENCH_IDS=fig2,table3 restricts the set (CI time budgets).
+    let filter = std::env::var("LIGO_BENCH_IDS").ok();
+    let ids: Vec<&str> = match &filter {
+        Some(s) => s.split(',').collect(),
+        None => experiments::ALL.to_vec(),
+    };
+    for id in ids {
+        let t = Timer::new();
+        match experiments::run(&rt, &reg, id, 0.04, &out) {
+            Ok(()) => println!(">>> {id}: {}", fmt_t(t.elapsed())),
+            Err(e) => {
+                eprintln!(">>> {id}: FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

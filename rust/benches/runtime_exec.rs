@@ -1,0 +1,44 @@
+//! Bench: PJRT execute latency for the fwd/grad artifacts of each family —
+//! the L3 hot path. Reports per-call latency and effective FLOP/s.
+
+use ligo::config::{artifacts_dir, Registry};
+use ligo::coordinator::flops::{forward_flops, train_step_flops};
+use ligo::data::batches::mlm_batch;
+use ligo::data::corpus::Corpus;
+use ligo::runtime::Runtime;
+use ligo::tensor::store::Store;
+use ligo::util::bench::bench;
+use ligo::util::rng::Rng;
+
+fn main() {
+    let Ok(rt) = Runtime::cpu(artifacts_dir()) else {
+        eprintln!("no artifacts; run `make artifacts`");
+        return;
+    };
+    let reg = Registry::load(&artifacts_dir()).unwrap();
+    println!("== runtime_exec: PJRT execute latency per artifact ==");
+    for name in ["bert_small", "bert_base", "bert_large", "gpt_base", "vit_s"] {
+        let cfg = reg.model(name).unwrap().clone();
+        let corpus = Corpus::new(cfg.vocab.max(512), 0);
+        let batch = if cfg.is_vision() {
+            ligo::data::vision::VisionTask::pretrain().batch(&cfg, &mut Rng::new(0))
+        } else {
+            mlm_batch(&corpus, &cfg, &mut Rng::new(0))
+        };
+        for kind in ["fwd", "grad"] {
+            let exe = rt.load(&format!("{kind}_{name}")).unwrap();
+            let params = Store::det_init(&exe.manifest.shapes_of("params"), 0);
+            let stats = bench(&format!("{kind}_{name}"), 3, 20, || {
+                exe.run(&[("params", &params), ("batch", &batch)]).unwrap()
+            });
+            let flops = if kind == "fwd" { forward_flops(&cfg) } else { train_step_flops(&cfg) };
+            println!(
+                "{:<44} {:>10}  {:>10.2} GFLOP/s  ({} B in, {} B out)",
+                "", "",
+                flops / stats.mean_s / 1e9,
+                exe.input_bytes(),
+                exe.output_bytes()
+            );
+        }
+    }
+}

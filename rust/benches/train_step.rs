@@ -1,0 +1,50 @@
+//! Bench: full coordinator train step (grad artifact + AdamW + accounting),
+//! split into its components to show where time goes (the §Perf breakdown:
+//! PJRT execute should dominate; coordinator overhead <15%).
+
+use ligo::config::{artifacts_dir, Registry, TrainConfig};
+use ligo::coordinator::optim::AdamW;
+use ligo::coordinator::trainer::Trainer;
+use ligo::data::batches::mlm_batch;
+use ligo::data::corpus::Corpus;
+use ligo::runtime::Runtime;
+use ligo::tensor::store::Store;
+use ligo::util::bench::bench;
+use ligo::util::rng::Rng;
+
+fn main() {
+    let Ok(rt) = Runtime::cpu(artifacts_dir()) else { return };
+    let reg = Registry::load(&artifacts_dir()).unwrap();
+    println!("== train_step: coordinator step decomposition ==");
+    for name in ["bert_small", "bert_base", "gpt_base"] {
+        let cfg = reg.model(name).unwrap().clone();
+        let corpus = Corpus::new(cfg.vocab, 0);
+        let exe = rt.load(&format!("grad_{name}")).unwrap();
+        let mut params = Store::det_init(&exe.manifest.shapes_of("params"), 0);
+        let batch = mlm_batch(&corpus, &cfg, &mut Rng::new(0));
+        // component 1: PJRT execute only
+        let s_exec = bench(&format!("{name}/pjrt_execute"), 3, 15, || {
+            exe.run(&[("params", &params), ("batch", &batch)]).unwrap()
+        });
+        // component 2: optimizer update only
+        let out = exe.run(&[("params", &params), ("batch", &batch)]).unwrap();
+        let grads = out.groups.get("grads").unwrap().clone();
+        let mut opt = AdamW::new(&params, 0.9, 0.999, 1e-8, 0.01, 1.0);
+        let s_opt = bench(&format!("{name}/adamw_update"), 3, 15, || {
+            opt.step(&mut params, &grads, 1e-4)
+        });
+        // full trainer step
+        let tc = TrainConfig::bert(100);
+        let mut tr = Trainer::new(&rt, &cfg, tc, params.clone()).unwrap();
+        let c2 = corpus.clone();
+        let cfg2 = cfg.clone();
+        let s_full = bench(&format!("{name}/full_train_step"), 3, 15, || {
+            tr.train_step(&mut |s| mlm_batch(&c2, &cfg2, &mut Rng::new(s as u64))).unwrap()
+        });
+        let overhead = 1.0 - s_exec.mean_s / s_full.mean_s;
+        println!(
+            "{:<44} coordinator overhead: {:.1}% (optimizer {:.1}%)",
+            "", overhead * 100.0, s_opt.mean_s / s_full.mean_s * 100.0
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! Configuration: model presets (read from `artifacts/configs.json`, the
+//! single source of truth shared with the python compile path) and training
+//! recipes.
+
+pub mod presets;
+pub mod training;
+
+pub use presets::{ModelConfig, Registry};
+pub use training::TrainConfig;
+
+/// Locate the artifacts directory: $LIGO_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("LIGO_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

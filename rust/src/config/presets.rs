@@ -1,0 +1,190 @@
+//! Model presets, loaded from `artifacts/configs.json` (written by aot.py
+//! from python/compile/configs.py — the single source of truth).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Mirror of python `ModelConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub family: String,
+    pub layers: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub img: usize,
+    pub patch: usize,
+    pub channels: usize,
+    pub n_classes: usize,
+    pub cls_layers: usize,
+    pub ffn_mult: usize,
+}
+
+impl ModelConfig {
+    pub fn ffn(&self) -> usize {
+        self.ffn_mult * self.dim
+    }
+
+    /// Sequence length seen by the transformer body.
+    pub fn tokens(&self) -> usize {
+        if self.family == "vit" || self.family == "cait" {
+            let n = (self.img / self.patch) * (self.img / self.patch);
+            n + usize::from(self.family == "vit")
+        } else {
+            self.seq
+        }
+    }
+
+    pub fn is_vision(&self) -> bool {
+        self.family == "vit" || self.family == "cait"
+    }
+
+    /// Tokens processed per batch (for FLOPs/throughput accounting).
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.tokens()
+    }
+
+    fn from_json(j: &Json) -> Result<ModelConfig> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.get(k).and_then(Json::as_str).context(k.to_string())?.to_string())
+        };
+        let u = |k: &str| -> usize { j.get(k).and_then(Json::as_usize).unwrap_or(0) };
+        Ok(ModelConfig {
+            name: s("name")?,
+            family: s("family")?,
+            layers: u("layers"),
+            dim: u("dim"),
+            heads: u("heads"),
+            vocab: u("vocab"),
+            seq: u("seq"),
+            batch: u("batch").max(1),
+            img: u("img"),
+            patch: u("patch"),
+            channels: u("channels").max(1),
+            n_classes: u("n_classes"),
+            cls_layers: u("cls_layers"),
+            ffn_mult: u("ffn_mult").max(1),
+        })
+    }
+}
+
+/// The preset registry plus the LiGO growth pairs.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    pub models: BTreeMap<String, ModelConfig>,
+    pub pairs: Vec<(String, String)>,
+    pub kd_pairs: Vec<(String, String)>,
+    pub param_counts: BTreeMap<String, usize>,
+}
+
+impl Registry {
+    pub fn load(artifacts: &Path) -> Result<Registry> {
+        let path = artifacts.join("configs.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(anyhow::Error::msg)?;
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models").and_then(Json::as_obj).context("models")? {
+            models.insert(name.clone(), ModelConfig::from_json(mj)?);
+        }
+        let pairs = j
+            .get("pairs")
+            .and_then(Json::as_arr)
+            .context("pairs")?
+            .iter()
+            .filter_map(|p| {
+                let a = p.as_arr()?;
+                Some((a[0].as_str()?.to_string(), a[1].as_str()?.to_string()))
+            })
+            .collect();
+        let kd_pairs = j
+            .get("kd_pairs")
+            .and_then(Json::as_arr)
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|p| {
+                        let a = p.as_arr()?;
+                        Some((a[0].as_str()?.to_string(), a[1].as_str()?.to_string()))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let param_counts = j
+            .get("param_counts")
+            .and_then(Json::as_obj)
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, v)| Some((k.clone(), v.as_usize()?)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Registry { models, pairs, kd_pairs, param_counts })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelConfig> {
+        self.models
+            .get(name)
+            .with_context(|| format!("unknown model preset '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> &'static str {
+        r#"{
+          "models": {"bert_small": {"name": "bert_small", "family": "bert",
+            "layers": 3, "dim": 48, "heads": 4, "vocab": 512, "seq": 32,
+            "batch": 16, "img": 0, "patch": 0, "channels": 3, "n_classes": 0,
+            "cls_layers": 0, "ffn_mult": 4}},
+          "pairs": [["bert_small", "bert_base"]],
+          "kd_pairs": [["bert_small", "bert_base"]],
+          "param_counts": {"bert_small": 12345}
+        }"#
+    }
+
+    #[test]
+    fn parses_registry() {
+        let dir = std::env::temp_dir().join("ligo_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("configs.json"), sample_json()).unwrap();
+        let r = Registry::load(&dir).unwrap();
+        let m = r.model("bert_small").unwrap();
+        assert_eq!(m.layers, 3);
+        assert_eq!(m.ffn(), 192);
+        assert_eq!(m.tokens(), 32);
+        assert_eq!(r.pairs[0].1, "bert_base");
+        assert_eq!(r.param_counts["bert_small"], 12345);
+        assert!(r.model("nope").is_err());
+    }
+
+    #[test]
+    fn vision_tokens_include_cls() {
+        let m = ModelConfig {
+            name: "v".into(),
+            family: "vit".into(),
+            layers: 6,
+            dim: 48,
+            heads: 4,
+            vocab: 0,
+            seq: 0,
+            batch: 16,
+            img: 32,
+            patch: 8,
+            channels: 3,
+            n_classes: 10,
+            cls_layers: 0,
+            ffn_mult: 4,
+        };
+        assert_eq!(m.tokens(), 17);
+        assert!(m.is_vision());
+    }
+}

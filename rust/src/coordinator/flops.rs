@@ -1,0 +1,133 @@
+//! Analytic FLOPs model — the x-axis of every figure in the paper.
+//!
+//! Counts multiply-accumulates as 2 FLOPs. Backward ~= 2x forward, so a
+//! training step is ~3x forward (the convention the paper's FLOPs savings
+//! follow). The gated variants (layer/token dropping) and LiGO's own
+//! M-step overhead (Table 3) are accounted explicitly.
+
+use crate::config::ModelConfig;
+
+/// Forward FLOPs per *token* for one transformer layer.
+pub fn layer_flops_per_token(cfg: &ModelConfig) -> f64 {
+    let d = cfg.dim as f64;
+    let f = cfg.ffn() as f64;
+    let s = cfg.tokens() as f64;
+    // qkv + o projections: 4 matmuls (d x d)
+    let proj = 8.0 * d * d;
+    // attention scores + weighted values: 2 * (s * d) MACs per token
+    let attn = 4.0 * s * d;
+    // ffn: d->f and f->d
+    let ffn = 4.0 * d * f;
+    proj + attn + ffn
+}
+
+/// Forward FLOPs for one full batch.
+pub fn forward_flops(cfg: &ModelConfig) -> f64 {
+    let tokens = cfg.tokens_per_batch() as f64;
+    let layers = (cfg.layers + cfg.cls_layers) as f64;
+    let mut per_token = layers * layer_flops_per_token(cfg);
+    if cfg.is_vision() {
+        // patch embedding + head
+        let pdim = (cfg.patch * cfg.patch * cfg.channels) as f64;
+        per_token += 2.0 * pdim * cfg.dim as f64;
+        per_token += 2.0 * (cfg.n_classes as f64) * cfg.dim as f64 / cfg.tokens() as f64;
+    } else {
+        // tied LM head: d x vocab per token
+        per_token += 2.0 * cfg.dim as f64 * cfg.vocab as f64;
+    }
+    tokens * per_token
+}
+
+/// Training-step FLOPs (fwd + bwd ~ 3x fwd) for one batch.
+pub fn train_step_flops(cfg: &ModelConfig) -> f64 {
+    3.0 * forward_flops(cfg)
+}
+
+/// Training-step FLOPs with Fig. 5 gating: `layer_keep` = expected fraction
+/// of layers active, `token_keep` = expected fraction of tokens kept in the
+/// gated middle third.
+pub fn gated_train_step_flops(cfg: &ModelConfig, layer_keep: f64, token_keep: f64) -> f64 {
+    let body = train_step_flops(cfg) - head_flops(cfg);
+    // middle third of layers sees reduced tokens
+    let token_factor = (2.0 + token_keep) / 3.0;
+    body * layer_keep * token_factor + head_flops(cfg)
+}
+
+fn head_flops(cfg: &ModelConfig) -> f64 {
+    if cfg.is_vision() {
+        3.0 * 2.0 * (cfg.n_classes * cfg.dim * cfg.batch) as f64
+    } else {
+        3.0 * 2.0 * (cfg.dim * cfg.vocab) as f64 * cfg.tokens_per_batch() as f64
+    }
+}
+
+/// FLOPs of materializing the large model from (M, Theta_small) once:
+/// per layer, six fused triple products B W A^T (two matmul stages each).
+pub fn ligo_apply_flops(small: &ModelConfig, large: &ModelConfig) -> f64 {
+    let (d1, d2) = (small.dim as f64, large.dim as f64);
+    let (f1, f2) = (small.ffn() as f64, large.ffn() as f64);
+    let l1 = small.layers as f64;
+    // W A^T: (d1 x d1) @ (d1 x d2); B (...): (d2 x d1) @ (d1 x d2)
+    let square = 2.0 * d1 * d1 * d2 + 2.0 * d2 * d1 * d2;
+    let fc1 = 2.0 * f1 * d1 * d2 + 2.0 * f2 * f1 * d2;
+    let fc2 = 2.0 * d1 * f1 * f2 + 2.0 * d2 * d1 * f2;
+    let depth_blend = (large.layers as f64) * l1 * (4.0 * d2 * d2 + 2.0 * d2 * f2) * 2.0;
+    l1 * (4.0 * square + fc1 + fc2) + depth_blend
+        + 2.0 * (small.vocab as f64) * d1 * d2 // embedding growth
+}
+
+/// FLOPs of one LiGO M-gradient step (Table 3's "+FLOPs" column):
+/// apply + large-model fwd/bwd + backprop through the expansion (~apply x2).
+pub fn ligo_step_flops(small: &ModelConfig, large: &ModelConfig) -> f64 {
+    3.0 * ligo_apply_flops(small, large) + train_step_flops(large)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::mk_cfg;
+
+    #[test]
+    fn flops_monotonic_in_width_and_depth() {
+        let base = train_step_flops(&mk_cfg(6, 72, 6));
+        assert!(train_step_flops(&mk_cfg(6, 96, 6)) > base);
+        assert!(train_step_flops(&mk_cfg(12, 72, 6)) > base);
+        assert!(train_step_flops(&mk_cfg(3, 48, 4)) < base);
+    }
+
+    #[test]
+    fn bwd_is_twice_fwd() {
+        let cfg = mk_cfg(6, 72, 6);
+        assert!((train_step_flops(&cfg) / forward_flops(&cfg) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gating_reduces_flops() {
+        let cfg = mk_cfg(6, 72, 6);
+        let full = gated_train_step_flops(&cfg, 1.0, 1.0);
+        let dropped = gated_train_step_flops(&cfg, 0.9, 0.85);
+        assert!(dropped < full);
+        assert!((full - train_step_flops(&cfg)).abs() / full < 1e-9);
+    }
+
+    #[test]
+    fn ligo_step_overhead_is_modest_multiple_of_train_step() {
+        // Table 3's premise: 100 M-steps are negligible vs 100s of thousands
+        // of training steps; one M-step must be a small multiple of a train
+        // step.
+        let s = mk_cfg(3, 48, 4);
+        let l = mk_cfg(6, 72, 6);
+        let ratio = ligo_step_flops(&s, &l) / train_step_flops(&l);
+        assert!(ratio > 1.0 && ratio < 10.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn paper_scale_sanity() {
+        // BERT-Base-scale config: step FLOPs should be ~1e11-1e12 per batch
+        // of 16x32 tokens at dim 768 — the right order of magnitude.
+        let mut cfg = mk_cfg(12, 768, 12);
+        cfg.vocab = 30522;
+        let f = train_step_flops(&cfg);
+        assert!(f > 1e10 && f < 1e13, "{f:e}");
+    }
+}

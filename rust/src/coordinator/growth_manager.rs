@@ -1,0 +1,153 @@
+//! The LiGO growth manager — the paper's §3.2/3.3 pipeline at runtime:
+//!
+//! 1. initialize M with the stacking + neuron-duplication pattern
+//!    (Prop. 1: LiGO's family contains StackBERT/Net2Net, so this start
+//!    point *is* the best non-learned baseline);
+//! 2. run N (default 100) SGD-momentum steps on M through the
+//!    `ligo_grad_{s}__{t}` artifact (loss of the expanded model, gradients
+//!    w.r.t. M only — the small model's weights stay frozen);
+//! 3. materialize Theta_large = M(Theta_small) via `ligo_apply_{s}__{t}`;
+//! 4. account the extra FLOPs (Table 3) and hand the params to the trainer.
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::coordinator::flops;
+use crate::coordinator::optim::Sgd;
+use crate::runtime::Runtime;
+use crate::tensor::{store::Store, Tensor};
+use crate::util::rng::Rng;
+use crate::log_info;
+
+/// Hyperparameters of the M-learning phase.
+#[derive(Debug, Clone)]
+pub struct LigoOptions {
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub init_noise: f32,
+    pub seed: u64,
+}
+
+impl Default for LigoOptions {
+    fn default() -> Self {
+        // 100 steps of SGD, as in the paper (§3.2 "Training").
+        LigoOptions { steps: 100, lr: 0.02, momentum: 0.9, init_noise: 0.01, seed: 0 }
+    }
+}
+
+/// Result of a growth: the large params + cost accounting.
+pub struct Grown {
+    pub params: Store,
+    pub extra_flops: f64,
+    pub wall_s: f64,
+    pub final_m_loss: f32,
+}
+
+/// Initialize the LiGO parameter store M from manifest shapes: width
+/// matrices get the cyclic duplication pattern, depth matrices the stacking
+/// pattern (both + symmetry-breaking noise) — mirrors python ligo_init.
+pub fn ligo_init_store(shapes: &[(String, Vec<usize>)], noise: f32, seed: u64) -> Store {
+    let mut rng = Rng::new(seed ^ 0x11C0);
+    let mut store = Store::new();
+    for (name, shape) in shapes {
+        assert_eq!(shape.len(), 2, "LiGO params are matrices: {name}");
+        let (rows, cols) = (shape[0], shape[1]);
+        let mut data = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            data[r * cols + (r % cols)] = 1.0;
+        }
+        for v in data.iter_mut() {
+            *v += noise * rng.normal();
+        }
+        store.insert(name.clone(), Tensor::from_f32(shape, data));
+    }
+    store
+}
+
+/// Grow `small_params` into the target config by learning M on batches from
+/// `batches` (the pretraining distribution). Pure-baseline growth operators
+/// live in `crate::growth`; this is the learned one.
+pub fn ligo_grow(
+    rt: &Runtime,
+    small: &ModelConfig,
+    large: &ModelConfig,
+    small_params: &Store,
+    batches: &mut dyn FnMut(usize) -> Store,
+    opts: &LigoOptions,
+) -> Result<Grown> {
+    let pair = format!("{}__{}", small.name, large.name);
+    let grad = rt
+        .load(&format!("ligo_grad_{pair}"))
+        .with_context(|| format!("no ligo_grad artifact for pair {pair}"))?;
+    let apply = rt.load(&format!("ligo_apply_{pair}"))?;
+
+    let timer = crate::util::timer::Timer::new();
+    let mut m = ligo_init_store(&grad.manifest.shapes_of("ligo"), opts.init_noise, opts.seed);
+    let mut sgd = Sgd::new(&m, opts.momentum);
+    let mut last_loss = f32::NAN;
+    for step in 0..opts.steps {
+        let batch = batches(step);
+        let out = grad.run(&[("ligo", &m), ("small", small_params), ("batch", &batch)])?;
+        last_loss = out.scalar("loss").unwrap_or(f32::NAN);
+        let grads = out.groups.get("grads").expect("ligo grads");
+        // cosine-ish decay over the short M-learning phase
+        let lr = opts.lr * (1.0 - 0.5 * step as f32 / opts.steps.max(1) as f32);
+        sgd.step(&mut m, grads, lr);
+        if step % 25 == 0 {
+            log_info!("ligo M-step {step}: loss {last_loss:.4}");
+        }
+    }
+    let out = apply.run(&[("ligo", &m), ("small", small_params)])?;
+    let params = out
+        .groups
+        .get("out")
+        .expect("ligo_apply returns params")
+        .clone();
+    let extra_flops = opts.steps as f64 * flops::ligo_step_flops(small, large)
+        + flops::ligo_apply_flops(small, large);
+    Ok(Grown { params, extra_flops, wall_s: timer.elapsed(), final_m_loss: last_loss })
+}
+
+/// Depth-only / width-only variants (Fig. 6) use the same entry point with
+/// the ablation pairs (bert_d3w72 -> bert_base, bert_d6w48 -> bert_base);
+/// the artifact's M simply lacks the other direction's parameters.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_pattern_is_stack_plus_noise() {
+        let shapes = vec![
+            ("w_q".to_string(), vec![6, 3]),
+            ("B_emb".to_string(), vec![12, 8]),
+        ];
+        let m = ligo_init_store(&shapes, 0.0, 0);
+        let w = m.expect("w_q");
+        // rows 0..3 identity, rows 3..6 repeat (stacking pattern)
+        for r in 0..6 {
+            for c in 0..3 {
+                let want = if c == r % 3 { 1.0 } else { 0.0 };
+                assert_eq!(w.at2(r, c), want, "r{r} c{c}");
+            }
+        }
+        let b = m.expect("B_emb");
+        assert_eq!(b.at2(9, 1), 1.0); // 9 % 8 = 1
+    }
+
+    #[test]
+    fn noise_breaks_symmetry_deterministically() {
+        let shapes = vec![("B_emb".to_string(), vec![4, 2])];
+        let a = ligo_init_store(&shapes, 0.01, 7);
+        let b = ligo_init_store(&shapes, 0.01, 7);
+        let c = ligo_init_store(&shapes, 0.01, 8);
+        assert_eq!(a.expect("B_emb"), b.expect("B_emb"));
+        assert_ne!(a.expect("B_emb"), c.expect("B_emb"));
+    }
+
+    #[test]
+    fn default_options_match_paper() {
+        assert_eq!(LigoOptions::default().steps, 100);
+    }
+}

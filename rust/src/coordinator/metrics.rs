@@ -1,0 +1,202 @@
+//! Metrics: training curves over (step, FLOPs, wall time) and the paper's
+//! headline statistic — savings-% at the scratch baseline's final quality.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// One training curve: parallel series indexed by evaluation points.
+#[derive(Debug, Clone, Default)]
+pub struct Curve {
+    pub name: String,
+    pub steps: Vec<usize>,
+    pub flops: Vec<f64>,
+    pub wall: Vec<f64>,
+    pub loss: Vec<f32>,
+    /// Optional task metric (accuracy / EM) aligned with `loss`.
+    pub metric: Vec<f32>,
+}
+
+impl Curve {
+    pub fn new(name: impl Into<String>) -> Curve {
+        Curve { name: name.into(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, step: usize, flops: f64, wall: f64, loss: f32, metric: Option<f32>) {
+        self.steps.push(step);
+        self.flops.push(flops);
+        self.wall.push(wall);
+        self.loss.push(loss);
+        if let Some(m) = metric {
+            self.metric.push(m);
+        }
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        // average the last few points to de-noise the threshold
+        let n = self.loss.len();
+        let k = n.min(3);
+        self.loss[n - k..].iter().sum::<f32>() / k as f32
+    }
+
+    pub fn final_metric(&self) -> Option<f32> {
+        let n = self.metric.len();
+        if n == 0 {
+            return None;
+        }
+        let k = n.min(3);
+        Some(self.metric[n - k..].iter().sum::<f32>() / k as f32)
+    }
+
+    /// First x (from `xs`) at which loss reaches `target` (<=). None if never.
+    fn first_reach(&self, xs: &[f64], target: f32) -> Option<f64> {
+        self.loss.iter().zip(xs).find(|(l, _)| **l <= target).map(|(_, x)| *x)
+    }
+
+    pub fn flops_to_reach(&self, target: f32) -> Option<f64> {
+        self.first_reach(&self.flops, target)
+    }
+
+    pub fn wall_to_reach(&self, target: f32) -> Option<f64> {
+        self.first_reach(&self.wall, target)
+    }
+
+    /// CSV serialization (step,flops,wall,loss[,metric]).
+    pub fn to_csv(&self) -> String {
+        let has_metric = !self.metric.is_empty();
+        let mut out = String::from(if has_metric {
+            "step,flops,wall_s,loss,metric\n"
+        } else {
+            "step,flops,wall_s,loss\n"
+        });
+        for i in 0..self.steps.len() {
+            if has_metric {
+                let _ = writeln!(
+                    out,
+                    "{},{:.6e},{:.3},{:.6},{:.6}",
+                    self.steps[i], self.flops[i], self.wall[i], self.loss[i], self.metric[i]
+                );
+            } else {
+                let _ = writeln!(
+                    out,
+                    "{},{:.6e},{:.3},{:.6}",
+                    self.steps[i], self.flops[i], self.wall[i], self.loss[i]
+                );
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("steps", Json::Arr(self.steps.iter().map(|s| Json::Num(*s as f64)).collect())),
+            ("flops", Json::arr_f64(&self.flops)),
+            ("wall", Json::arr_f64(&self.wall)),
+            ("loss", Json::Arr(self.loss.iter().map(|l| Json::Num(*l as f64)).collect())),
+            ("metric", Json::Arr(self.metric.iter().map(|l| Json::Num(*l as f64)).collect())),
+        ])
+    }
+}
+
+/// The paper's savings statistic: 1 - cost(method)/cost(scratch), where cost
+/// is FLOPs (or wall time) to reach the scratch run's final quality. For
+/// `higher_better = true` (accuracy figures) the curve's `metric` series is
+/// used when present (falling back to `loss`), and "reach" means >=.
+pub fn savings(scratch: &Curve, method: &Curve, wall: bool, higher_better: bool) -> Option<f64> {
+    let series = |c: &Curve| -> Vec<f32> {
+        let raw = if higher_better && !c.metric.is_empty() { &c.metric } else { &c.loss };
+        raw.iter().map(|x| if higher_better { -x } else { *x }).collect()
+    };
+    let s_series = series(scratch);
+    let m_series = series(method);
+    let target = {
+        let n = s_series.len();
+        let k = n.min(3);
+        s_series[n - k..].iter().sum::<f32>() / k as f32
+    };
+    let xs_s: &[f64] = if wall { &scratch.wall } else { &scratch.flops };
+    let xs_m: &[f64] = if wall { &method.wall } else { &method.flops };
+    let reach = |vals: &[f32], xs: &[f64]| -> Option<f64> {
+        vals.iter().zip(xs).find(|(l, _)| **l <= target).map(|(_, x)| *x)
+    };
+    let cost_scratch = reach(&s_series, xs_s)?;
+    let cost_method = reach(&m_series, xs_m)?;
+    Some(1.0 - cost_method / cost_scratch)
+}
+
+/// Write a set of curves as a JSON report + per-curve CSVs under `dir`.
+pub fn write_report(dir: &std::path::Path, experiment: &str, curves: &[Curve]) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    for c in curves {
+        std::fs::write(dir.join(format!("{experiment}_{}.csv", c.name)), c.to_csv())?;
+    }
+    let j = Json::obj(vec![
+        ("experiment", Json::Str(experiment.to_string())),
+        ("curves", Json::Arr(curves.iter().map(Curve::to_json).collect())),
+    ]);
+    std::fs::write(dir.join(format!("{experiment}.json")), j.to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(name: &str, losses: &[f32], flops_per: f64) -> Curve {
+        let mut c = Curve::new(name);
+        for (i, l) in losses.iter().enumerate() {
+            c.push(i, flops_per * (i as f64 + 1.0), 0.1 * (i as f64 + 1.0), *l, None);
+        }
+        c
+    }
+
+    #[test]
+    fn savings_for_faster_method() {
+        // target = mean of scratch's last 3 losses = 1.1333; scratch reaches
+        // it at x=9 (loss 1.1), method at x=5 (loss 1.05) => 44.4% savings.
+        let scratch = mk("scratch", &[5.0, 4.0, 3.0, 2.5, 2.0, 1.8, 1.5, 1.3, 1.1, 1.0], 1.0);
+        let method = mk("ligo", &[3.0, 2.0, 1.5, 1.2, 1.05, 0.99, 0.9, 0.85, 0.8, 0.75], 1.0);
+        let s = savings(&scratch, &method, false, false).unwrap();
+        assert!((s - (1.0 - 5.0 / 9.0)).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn negative_savings_for_slower_method() {
+        let scratch = mk("scratch", &[2.0, 1.0], 1.0);
+        let slow = mk("kd", &[3.0, 2.0, 1.5, 1.0], 1.0);
+        let s = savings(&scratch, &slow, false, false).unwrap();
+        assert!(s < 0.0);
+    }
+
+    #[test]
+    fn savings_none_if_never_reached() {
+        let scratch = mk("scratch", &[2.0, 1.0], 1.0);
+        let bad = mk("bad", &[3.0, 2.9, 2.8], 1.0);
+        assert!(savings(&scratch, &bad, false, false).is_none());
+    }
+
+    #[test]
+    fn accuracy_mode_flips_comparison() {
+        // target acc = mean(0.2, 0.5, 0.8) = 0.5; scratch reaches at x=2,
+        // method at x=1 => 50% savings.
+        let scratch = mk("scratch", &[0.2, 0.5, 0.8], 1.0);
+        let fast = mk("ligo", &[0.8, 0.85, 0.9], 1.0);
+        let s = savings(&scratch, &fast, false, true).unwrap();
+        assert!((s - 0.5).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let c = mk("x", &[1.0, 0.5], 2.0);
+        let csv = c.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("step,flops"));
+    }
+
+    #[test]
+    fn final_loss_averages_tail() {
+        let c = mk("x", &[5.0, 1.0, 1.0, 1.0], 1.0);
+        assert!((c.final_loss() - 1.0).abs() < 1e-6);
+    }
+}

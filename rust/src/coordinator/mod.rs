@@ -1,0 +1,16 @@
+//! The L3 coordinator: everything that happens at runtime happens here.
+//!
+//! * [`optim`] — AdamW / SGD-momentum over the named tensor store
+//! * [`flops`] — the analytic FLOPs ledger behind every figure's x-axis
+//! * [`metrics`] — loss curves, savings-at-threshold, CSV/JSON reports
+//! * [`trainer`] — the step loop (accumulation, freezing, eval hooks)
+//! * [`growth_manager`] — LiGO: init M, run the 100 M-SGD steps through the
+//!   `ligo_grad` artifact, apply, hand off to the trainer
+//! * [`strategies`] — layer dropping / token dropping / staged training (Fig. 5)
+
+pub mod flops;
+pub mod growth_manager;
+pub mod metrics;
+pub mod optim;
+pub mod strategies;
+pub mod trainer;

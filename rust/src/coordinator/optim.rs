@@ -1,0 +1,251 @@
+//! Optimizers over the named tensor store. The AOT grad artifacts return
+//! raw gradients; parameter/moment state and the update rule live here in
+//! rust (so accumulation, freezing and growth re-initialization are
+//! coordinator decisions, not baked into HLO).
+
+use std::collections::BTreeSet;
+
+use crate::tensor::store::Store;
+use crate::tensor::{Tensor, TensorData};
+
+/// AdamW with decoupled weight decay (Loshchilov & Hutter), plus optional
+/// global-norm gradient clipping and per-name freezing.
+pub struct AdamW {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub grad_clip: f32,
+    /// Parameters excluded from weight decay (LN gains/biases, biases).
+    m: Store,
+    v: Store,
+    t: usize,
+    frozen: BTreeSet<String>,
+}
+
+/// Weight decay mask: decay only matrices (2D), never biases/LN vectors.
+fn decays(name: &str, t: &Tensor) -> bool {
+    t.shape.len() >= 2 && !name.ends_with("_b") && !name.ends_with("_g")
+}
+
+impl AdamW {
+    pub fn new(params: &Store, beta1: f32, beta2: f32, eps: f32, weight_decay: f32, grad_clip: f32) -> AdamW {
+        let mut m = Store::new();
+        let mut v = Store::new();
+        for (name, t) in params.iter() {
+            if matches!(t.data, TensorData::F32(_)) {
+                m.insert(name.clone(), Tensor::zeros(&t.shape));
+                v.insert(name.clone(), Tensor::zeros(&t.shape));
+            }
+        }
+        AdamW { beta1, beta2, eps, weight_decay, grad_clip, m, v, t: 0, frozen: BTreeSet::new() }
+    }
+
+    pub fn from_train_config(params: &Store, tc: &crate::config::TrainConfig) -> AdamW {
+        Self::new(params, tc.beta1, tc.beta2, tc.eps, tc.weight_decay, tc.grad_clip)
+    }
+
+    /// Freeze parameters matching a predicate (MSLT stages, adapter tuning).
+    pub fn freeze_where(&mut self, params: &Store, pred: impl Fn(&str) -> bool) {
+        self.frozen = params
+            .iter()
+            .filter(|(n, _)| pred(n))
+            .map(|(n, _)| n.clone())
+            .collect();
+    }
+
+    pub fn unfreeze_all(&mut self) {
+        self.frozen.clear();
+    }
+
+    pub fn frozen_count(&self) -> usize {
+        self.frozen.len()
+    }
+
+    /// One update step; `lr` comes from the schedule. Returns the global
+    /// gradient norm (pre-clip) for diagnostics.
+    pub fn step(&mut self, params: &mut Store, grads: &Store, lr: f32) -> f32 {
+        self.t += 1;
+        let gnorm = grads.global_norm();
+        let clip_scale = if self.grad_clip > 0.0 && gnorm > self.grad_clip {
+            self.grad_clip / (gnorm + 1e-12)
+        } else {
+            1.0
+        };
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for (name, g) in grads.iter() {
+            if self.frozen.contains(name) {
+                continue;
+            }
+            let Some(p) = params.get_mut(name) else { continue };
+            if !matches!(p.data, TensorData::F32(_)) {
+                continue;
+            }
+            let decay = if decays(name, p) { self.weight_decay } else { 0.0 };
+            let m = self.m.get_mut(name).expect("moment m").f32s_mut();
+            let v = self.v.get_mut(name).expect("moment v").f32s_mut();
+            let pv = p.f32s_mut();
+            let gs = g.f32s();
+            for i in 0..pv.len() {
+                let gi = gs[i] * clip_scale;
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gi;
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gi * gi;
+                let mh = m[i] / bc1;
+                let vh = v[i] / bc2;
+                pv[i] -= lr * (mh / (vh.sqrt() + self.eps) + decay * pv[i]);
+            }
+        }
+        gnorm
+    }
+}
+
+/// Plain SGD with momentum — what the paper uses for the 100 LiGO M-steps.
+pub struct Sgd {
+    pub momentum: f32,
+    vel: Store,
+}
+
+impl Sgd {
+    pub fn new(params: &Store, momentum: f32) -> Sgd {
+        let mut vel = Store::new();
+        for (name, t) in params.iter() {
+            vel.insert(name.clone(), Tensor::zeros(&t.shape));
+        }
+        Sgd { momentum, vel }
+    }
+
+    pub fn step(&mut self, params: &mut Store, grads: &Store, lr: f32) {
+        for (name, g) in grads.iter() {
+            let Some(p) = params.get_mut(name) else { continue };
+            let v = self.vel.get_mut(name).expect("velocity").f32s_mut();
+            let pv = p.f32s_mut();
+            for (i, gi) in g.f32s().iter().enumerate() {
+                v[i] = self.momentum * v[i] + gi;
+                pv[i] -= lr * v[i];
+            }
+        }
+    }
+}
+
+/// Accumulate `src` gradients into `acc` (scaled), creating missing slots.
+pub fn accumulate(acc: &mut Store, src: &Store, scale: f32) {
+    for (name, g) in src.iter() {
+        match acc.get_mut(name) {
+            Some(t) => {
+                for (a, s) in t.f32s_mut().iter_mut().zip(g.f32s()) {
+                    *a += scale * s;
+                }
+            }
+            None => {
+                let mut t = g.clone();
+                for x in t.f32s_mut() {
+                    *x *= scale;
+                }
+                acc.insert(name.clone(), t);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_param(v: f32) -> Store {
+        let mut s = Store::new();
+        s.insert("w", Tensor::from_f32(&[2, 1], vec![v, v]));
+        s
+    }
+
+    #[test]
+    fn adamw_first_step_matches_closed_form() {
+        // With g constant, first AdamW step is -lr * g/(|g| + eps) (+decay).
+        let mut p = one_param(1.0);
+        let mut g = Store::new();
+        g.insert("w", Tensor::from_f32(&[2, 1], vec![0.5, 0.5]));
+        let mut opt = AdamW::new(&p, 0.9, 0.999, 1e-8, 0.0, 0.0);
+        opt.step(&mut p, &g, 0.1);
+        // mh = g, vh = g^2 => update = lr * g/|g| = 0.1
+        for x in p.expect("w").f32s() {
+            assert!((x - 0.9).abs() < 1e-4, "{x}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_only_on_matrices() {
+        let mut p = Store::new();
+        p.insert("w", Tensor::from_f32(&[1, 1], vec![1.0]));
+        p.insert("ln_g", Tensor::from_f32(&[1], vec![1.0]));
+        let mut g = Store::new();
+        g.insert("w", Tensor::from_f32(&[1, 1], vec![0.0]));
+        g.insert("ln_g", Tensor::from_f32(&[1], vec![0.0]));
+        let mut opt = AdamW::new(&p, 0.9, 0.999, 1e-8, 0.1, 0.0);
+        opt.step(&mut p, &g, 1.0);
+        assert!(p.expect("w").f32s()[0] < 1.0); // decayed
+        assert_eq!(p.expect("ln_g").f32s()[0], 1.0); // not decayed
+    }
+
+    #[test]
+    fn clipping_bounds_update() {
+        let mut p = one_param(0.0);
+        let mut g = Store::new();
+        g.insert("w", Tensor::from_f32(&[2, 1], vec![100.0, 0.0]));
+        let mut opt = AdamW::new(&p, 0.0, 0.0, 1e-8, 0.0, 1.0);
+        let gnorm = opt.step(&mut p, &g, 0.001);
+        assert!((gnorm - 100.0).abs() < 1e-3);
+        // clipped g = 1.0 -> beta=0 Adam: update = lr * 1/(1+eps)
+        assert!(p.expect("w").f32s()[0].abs() <= 0.0011);
+    }
+
+    #[test]
+    fn frozen_params_do_not_move() {
+        let mut p = one_param(1.0);
+        let mut g = Store::new();
+        g.insert("w", Tensor::from_f32(&[2, 1], vec![1.0, 1.0]));
+        let mut opt = AdamW::new(&p, 0.9, 0.999, 1e-8, 0.0, 0.0);
+        opt.freeze_where(&p, |n| n == "w");
+        opt.step(&mut p, &g, 0.1);
+        assert_eq!(p.expect("w").f32s(), &[1.0, 1.0]);
+        opt.unfreeze_all();
+        opt.step(&mut p, &g, 0.1);
+        assert_ne!(p.expect("w").f32s(), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn sgd_momentum_accumulates() {
+        let mut p = one_param(0.0);
+        let mut g = Store::new();
+        g.insert("w", Tensor::from_f32(&[2, 1], vec![1.0, 1.0]));
+        let mut opt = Sgd::new(&p, 0.9);
+        opt.step(&mut p, &g, 0.1);
+        assert!((p.expect("w").f32s()[0] + 0.1).abs() < 1e-6);
+        opt.step(&mut p, &g, 0.1);
+        // velocity = 0.9*1 + 1 = 1.9 -> total -0.1-0.19
+        assert!((p.expect("w").f32s()[0] + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accumulate_sums_and_creates() {
+        let mut acc = Store::new();
+        let mut g = Store::new();
+        g.insert("w", Tensor::from_f32(&[2], vec![2.0, 4.0]));
+        accumulate(&mut acc, &g, 0.5);
+        accumulate(&mut acc, &g, 0.5);
+        assert_eq!(acc.expect("w").f32s(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn adamw_converges_on_quadratic() {
+        // minimize (w-3)^2: grad = 2(w-3)
+        let mut p = one_param(0.0);
+        let mut opt = AdamW::new(&p, 0.9, 0.999, 1e-8, 0.0, 0.0);
+        for _ in 0..500 {
+            let w = p.expect("w").f32s()[0];
+            let mut g = Store::new();
+            g.insert("w", Tensor::from_f32(&[2, 1], vec![2.0 * (w - 3.0); 2]));
+            opt.step(&mut p, &g, 0.05);
+        }
+        assert!((p.expect("w").f32s()[0] - 3.0).abs() < 0.05);
+    }
+}

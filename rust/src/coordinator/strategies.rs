@@ -1,0 +1,63 @@
+//! Orthogonal efficiency strategies (paper Fig. 5 / Appendix B.3):
+//!
+//! * **Progressive layer dropping** (Zhang & He 2020): per-step layer keep
+//!   probability ramps down to `1 - max_drop` along training; implemented by
+//!   sampling layer gates into the `grad_gated_*` artifact's batch.
+//! * **Token dropping** (Hou et al. 2022): a fixed fraction of tokens is
+//!   skipped in the middle third of layers.
+//! * **Staged training** (Shen et al. 2022): train the small model for the
+//!   first stage, grow (with any operator), train the large model for the
+//!   rest — orchestrated by the experiment harness using the trainer.
+
+use crate::config::ModelConfig;
+use crate::coordinator::flops;
+
+/// Progressive layer-dropping schedule: drop probability at `step`.
+/// Follows Zhang & He's ramp: theta(t) ramps from 0 to `max_drop` over the
+/// first half of training, then stays flat.
+pub fn layer_drop_p(step: usize, total: usize, max_drop: f32) -> f32 {
+    let ramp = (total / 2).max(1);
+    let frac = (step as f32 / ramp as f32).min(1.0);
+    max_drop * frac
+}
+
+/// Expected training FLOPs per step under the combined strategies.
+pub fn strategy_flops(
+    cfg: &ModelConfig,
+    step: usize,
+    total: usize,
+    max_layer_drop: f32,
+    token_drop: f32,
+) -> f64 {
+    let keep = 1.0 - layer_drop_p(step, total, max_layer_drop) as f64;
+    flops::gated_train_step_flops(cfg, keep, 1.0 - token_drop as f64)
+}
+
+/// Paper defaults: max layer-drop 0.1, token-drop 0.15 in the middle third.
+pub const MAX_LAYER_DROP: f32 = 0.1;
+pub const TOKEN_DROP: f32 = 0.15;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::mk_cfg;
+
+    #[test]
+    fn drop_probability_ramps_then_flattens() {
+        assert_eq!(layer_drop_p(0, 100, 0.1), 0.0);
+        let mid = layer_drop_p(25, 100, 0.1);
+        assert!(mid > 0.0 && mid < 0.1);
+        assert!((layer_drop_p(50, 100, 0.1) - 0.1).abs() < 1e-6);
+        assert!((layer_drop_p(99, 100, 0.1) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn strategy_flops_below_full() {
+        let cfg = mk_cfg(6, 72, 6);
+        let full = flops::train_step_flops(&cfg);
+        let late = strategy_flops(&cfg, 90, 100, MAX_LAYER_DROP, TOKEN_DROP);
+        assert!(late < full);
+        let early = strategy_flops(&cfg, 0, 100, MAX_LAYER_DROP, TOKEN_DROP);
+        assert!(late < early); // savings grow as dropping ramps
+    }
+}

@@ -1,0 +1,165 @@
+//! The training loop: runs the `grad_*` artifact per microbatch, accumulates,
+//! applies AdamW with the schedule, and records (step, FLOPs, wall, loss)
+//! into a [`Curve`]. Evaluation runs the `fwd_*` artifact on held-out
+//! batches.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{ModelConfig, TrainConfig};
+use crate::coordinator::flops;
+use crate::coordinator::metrics::Curve;
+use crate::coordinator::optim::{accumulate, AdamW};
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::store::Store;
+use crate::util::timer::Timer;
+
+/// Batch source abstraction: step -> batch Store (train) and eval batches.
+pub struct Batches {
+    pub train: Box<dyn FnMut(usize) -> Store>,
+    pub eval: Box<dyn FnMut(usize) -> Store>,
+}
+
+/// Trainer state for one model.
+pub struct Trainer {
+    pub cfg: ModelConfig,
+    pub tc: TrainConfig,
+    pub params: Store,
+    pub opt: AdamW,
+    grad_exe: Arc<Executable>,
+    fwd_exe: Arc<Executable>,
+    /// FLOPs already spent before step 0 (growth cost, prior training).
+    pub flops_offset: f64,
+    pub wall_offset: f64,
+    /// Override per-microbatch step FLOPs (gated strategies).
+    pub flops_per_microbatch: f64,
+    /// Extra input-group bindings (e.g. the KD teacher's parameters).
+    pub extra: Vec<(String, Store)>,
+    step: usize,
+}
+
+impl Trainer {
+    /// Build a trainer for a preset; params must already be initialized
+    /// (det-init for scratch, a growth operator's output otherwise).
+    pub fn new(rt: &Runtime, cfg: &ModelConfig, tc: TrainConfig, params: Store) -> Result<Trainer> {
+        let grad = format!("grad_{}", cfg.name);
+        let fwd = format!("fwd_{}", cfg.name);
+        Self::with_artifacts(rt, &grad, &fwd, cfg, tc, params)
+    }
+
+    /// Build against explicit artifact names (KD / gated variants).
+    pub fn with_artifacts(
+        rt: &Runtime,
+        grad_name: &str,
+        fwd_name: &str,
+        cfg: &ModelConfig,
+        tc: TrainConfig,
+        params: Store,
+    ) -> Result<Trainer> {
+        let grad_exe = rt.load(grad_name)?;
+        let fwd_exe = rt.load(fwd_name)?;
+        let opt = AdamW::from_train_config(&params, &tc);
+        Ok(Trainer {
+            cfg: cfg.clone(),
+            tc,
+            params,
+            opt,
+            grad_exe,
+            fwd_exe,
+            flops_offset: 0.0,
+            wall_offset: 0.0,
+            flops_per_microbatch: flops::train_step_flops(cfg),
+            extra: Vec::new(),
+            step: 0,
+        })
+    }
+
+    /// Scratch init from the artifact manifest shapes.
+    pub fn scratch_params(rt: &Runtime, cfg: &ModelConfig, seed: u64) -> Result<Store> {
+        let exe = rt.load(&format!("grad_{}", cfg.name))?;
+        Ok(Store::det_init(&exe.manifest.shapes_of("params"), seed))
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    /// One optimizer step (grad_accum microbatches). Returns mean loss.
+    pub fn train_step(&mut self, batches: &mut dyn FnMut(usize) -> Store) -> Result<f32> {
+        let accum = self.tc.grad_accum.max(1);
+        let mut grads = Store::new();
+        let mut loss_sum = 0.0f32;
+        for micro in 0..accum {
+            let batch = batches(self.step * accum + micro);
+            let mut bindings: Vec<(&str, &Store)> =
+                vec![("params", &self.params), ("batch", &batch)];
+            for (g, s) in &self.extra {
+                bindings.push((g.as_str(), s));
+            }
+            let out = self.grad_exe.run(&bindings)?;
+            loss_sum += out.scalar("loss").unwrap_or(f32::NAN);
+            let g = out.groups.get("grads").expect("grad artifact returns grads");
+            accumulate(&mut grads, g, 1.0 / accum as f32);
+        }
+        let lr = self.tc.lr_at(self.step);
+        self.opt.step(&mut self.params, &grads, lr);
+        self.step += 1;
+        Ok(loss_sum / accum as f32)
+    }
+
+    /// Held-out evaluation: mean loss (and mean metric if present).
+    pub fn evaluate(
+        &self,
+        eval_batches: &mut dyn FnMut(usize) -> Store,
+        n_batches: usize,
+    ) -> Result<(f32, Option<f32>)> {
+        eval_store(&self.fwd_exe, &self.params, eval_batches, n_batches)
+    }
+
+    /// Full training run: returns the curve, evaluating every
+    /// `tc.eval_every` steps.
+    pub fn run(&mut self, name: &str, batches: &mut Batches, steps: usize) -> Result<Curve> {
+        let mut curve = Curve::new(name);
+        let timer = Timer::new();
+        let accum = self.tc.grad_accum.max(1) as f64;
+        let mut spent = self.flops_offset;
+        // record the starting point (growth quality shows at step 0)
+        let (l0, m0) = self.evaluate(&mut batches.eval, 4)?;
+        curve.push(self.step, spent, self.wall_offset, l0, m0);
+        for s in 0..steps {
+            let _train_loss = self.train_step(&mut batches.train)?;
+            spent += self.flops_per_microbatch * accum;
+            if (s + 1) % self.tc.eval_every == 0 || s + 1 == steps {
+                let (loss, metric) = self.evaluate(&mut batches.eval, 4)?;
+                curve.push(self.step, spent, self.wall_offset + timer.elapsed(), loss, metric);
+            }
+        }
+        Ok(curve)
+    }
+}
+
+/// Evaluate a fwd artifact over n batches: mean loss + mean metric.
+pub fn eval_store(
+    fwd: &Executable,
+    params: &Store,
+    eval_batches: &mut dyn FnMut(usize) -> Store,
+    n_batches: usize,
+) -> Result<(f32, Option<f32>)> {
+    let mut loss = 0.0f32;
+    let mut metric = 0.0f32;
+    let mut has_metric = false;
+    for i in 0..n_batches {
+        let batch = eval_batches(i);
+        let out = fwd.run(&[("params", params), ("batch", &batch)])?;
+        loss += out.scalar("loss").unwrap_or(f32::NAN);
+        if let Some(m) = out.scalar("metric") {
+            metric += m;
+            has_metric = true;
+        }
+    }
+    Ok((
+        loss / n_batches as f32,
+        has_metric.then_some(metric / n_batches as f32),
+    ))
+}

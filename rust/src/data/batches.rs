@@ -1,0 +1,179 @@
+//! Batch builders: MLM masking (BERT), causal LM shifting (GPT), and the
+//! gated variants used by the Fig. 5 efficiency strategies.
+//!
+//! A batch is a [`Store`] whose keys match the artifact's "batch" group
+//! ("tokens", "labels", plus "gates"/"token_keep" for gated artifacts).
+
+use crate::config::ModelConfig;
+use crate::data::corpus::Corpus;
+use crate::data::special;
+use crate::tensor::{store::Store, Tensor};
+use crate::util::rng::Rng;
+
+/// Standard BERT masking ratios.
+pub const MASK_PROB: f32 = 0.15;
+const MASK_AS_MASK: f32 = 0.8;
+const MASK_AS_RANDOM: f32 = 0.1; // remaining 0.1 keeps the original token
+
+/// Build one MLM batch: 15% positions predicted; of those 80% -> [MASK],
+/// 10% -> random token, 10% unchanged. labels = original id or -1.
+pub fn mlm_batch(corpus: &Corpus, cfg: &ModelConfig, rng: &mut Rng) -> Store {
+    let (b, s) = (cfg.batch, cfg.seq);
+    let mut tokens = Vec::with_capacity(b * s);
+    let mut labels = Vec::with_capacity(b * s);
+    for _ in 0..b {
+        let (seq, _topic) = corpus.sample(s, rng);
+        for tok in seq {
+            if rng.coin(MASK_PROB) {
+                labels.push(tok);
+                let r = rng.next_f32();
+                if r < MASK_AS_MASK {
+                    tokens.push(special::MASK);
+                } else if r < MASK_AS_MASK + MASK_AS_RANDOM {
+                    tokens.push(special::CONTENT + rng.below(corpus.vocab - special::CONTENT as usize) as i32);
+                } else {
+                    tokens.push(tok);
+                }
+            } else {
+                tokens.push(tok);
+                labels.push(-1);
+            }
+        }
+    }
+    let mut st = Store::new();
+    st.insert("tokens", Tensor::from_i32(&[b, s], tokens));
+    st.insert("labels", Tensor::from_i32(&[b, s], labels));
+    st
+}
+
+/// Build one causal-LM batch: labels are the next token (last = -1).
+pub fn lm_batch(corpus: &Corpus, cfg: &ModelConfig, rng: &mut Rng) -> Store {
+    let (b, s) = (cfg.batch, cfg.seq);
+    let mut tokens = Vec::with_capacity(b * s);
+    let mut labels = Vec::with_capacity(b * s);
+    for _ in 0..b {
+        let (seq, _topic) = corpus.sample(s + 1, rng);
+        tokens.extend_from_slice(&seq[..s]);
+        labels.extend_from_slice(&seq[1..]);
+    }
+    let mut st = Store::new();
+    st.insert("tokens", Tensor::from_i32(&[b, s], tokens));
+    st.insert("labels", Tensor::from_i32(&[b, s], labels));
+    st
+}
+
+/// Attach layer gates + token-keep mask to an MLM batch (Fig. 5 strategies).
+/// `layer_drop_p` — probability a layer is dropped this step (progressive
+/// schedule computed by the caller); `token_drop_p` — fraction of tokens
+/// skipped in the middle third of layers.
+pub fn gated_batch(
+    corpus: &Corpus,
+    cfg: &ModelConfig,
+    rng: &mut Rng,
+    layer_drop_p: f32,
+    token_drop_p: f32,
+) -> Store {
+    let mut st = mlm_batch(corpus, cfg, rng);
+    let gates: Vec<f32> = (0..cfg.layers)
+        .map(|_| if rng.coin(layer_drop_p) { 0.0 } else { 1.0 })
+        .collect();
+    let keep: Vec<f32> = (0..cfg.batch * cfg.seq)
+        .map(|_| if rng.coin(token_drop_p) { 0.0 } else { 1.0 })
+        .collect();
+    st.insert("gates", Tensor::from_f32(&[cfg.layers], gates));
+    st.insert("token_keep", Tensor::from_f32(&[cfg.batch, cfg.seq], keep));
+    st
+}
+
+/// Fraction of positions whose labels are active (for FLOPs-per-label calc).
+pub fn active_label_fraction(batch: &Store) -> f32 {
+    let labels = batch.expect("labels").i32s();
+    labels.iter().filter(|&&l| l >= 0).count() as f32 / labels.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            family: "bert".into(),
+            layers: 3,
+            dim: 48,
+            heads: 4,
+            vocab: 512,
+            seq: 32,
+            batch: 16,
+            img: 0,
+            patch: 0,
+            channels: 3,
+            n_classes: 0,
+            cls_layers: 0,
+            ffn_mult: 4,
+        }
+    }
+
+    #[test]
+    fn mlm_shapes_and_mask_rate() {
+        let corpus = Corpus::new(512, 0);
+        let mut rng = Rng::new(0);
+        let b = mlm_batch(&corpus, &cfg(), &mut rng);
+        assert_eq!(b.expect("tokens").shape, vec![16, 32]);
+        let frac = active_label_fraction(&b);
+        assert!((0.08..0.25).contains(&frac), "mask rate {frac}");
+    }
+
+    #[test]
+    fn mlm_labels_match_originals_only_at_masked() {
+        let corpus = Corpus::new(512, 0);
+        let mut rng = Rng::new(1);
+        let b = mlm_batch(&corpus, &cfg(), &mut rng);
+        let tokens = b.expect("tokens").i32s();
+        let labels = b.expect("labels").i32s();
+        for (t, l) in tokens.iter().zip(labels) {
+            if *l >= 0 {
+                assert!(*l >= special::CONTENT);
+            } else {
+                assert!(*t >= special::CONTENT); // unmasked positions keep content
+            }
+        }
+    }
+
+    #[test]
+    fn lm_labels_are_shifted() {
+        let corpus = Corpus::new(512, 0);
+        let mut rng = Rng::new(2);
+        let mut c = cfg();
+        c.family = "gpt".into();
+        let b = lm_batch(&corpus, &c, &mut rng);
+        let tokens = b.expect("tokens").i32s();
+        let labels = b.expect("labels").i32s();
+        // labels[i] == tokens[i+1] within each row
+        for row in 0..c.batch {
+            for i in 0..c.seq - 1 {
+                assert_eq!(labels[row * c.seq + i], tokens[row * c.seq + i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn gated_batch_has_gates() {
+        let corpus = Corpus::new(512, 0);
+        let mut rng = Rng::new(3);
+        let b = gated_batch(&corpus, &cfg(), &mut rng, 0.5, 0.3);
+        assert_eq!(b.expect("gates").shape, vec![3]);
+        assert_eq!(b.expect("token_keep").shape, vec![16, 32]);
+        for g in b.expect("gates").f32s() {
+            assert!(*g == 0.0 || *g == 1.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let corpus = Corpus::new(512, 0);
+        let a = mlm_batch(&corpus, &cfg(), &mut Rng::new(5));
+        let b = mlm_batch(&corpus, &cfg(), &mut Rng::new(5));
+        assert_eq!(a.expect("tokens"), b.expect("tokens"));
+    }
+}

@@ -1,0 +1,324 @@
+//! Downstream probe suites — the GLUE/SQuAD stand-ins for Tables 1/5/6.
+//!
+//! Seven classification probes + two span probes, all derived from the same
+//! Markov corpus the models were pretrained on, each exercising a different
+//! capability (topic detection, pair similarity, corruption detection,
+//! span matching). What the tables measure is the *transfer delta between
+//! initialization methods*, which these probes preserve.
+
+use crate::config::ModelConfig;
+use crate::data::corpus::{Corpus, TOPICS};
+use crate::data::special;
+use crate::tensor::{store::Store, Tensor};
+use crate::util::rng::Rng;
+
+/// Classification probe kinds (GLUE analogs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeKind {
+    /// Binary topic polarity (SST-2 analog).
+    Sst2,
+    /// 3-way pair relation: same / adjacent / distant topic (MNLI analog).
+    Mnli,
+    /// Binary: is the second segment a noisy copy? (MRPC analog)
+    Mrpc,
+    /// Binary: was the sequence corrupted by shuffling? (CoLA analog)
+    Cola,
+    /// Binary: do the segments share a topic? (QNLI analog)
+    Qnli,
+    /// Binary near-duplicate detection with heavier noise (QQP analog)
+    Qqp,
+    /// 4-binned pair similarity (STS-B analog)
+    Stsb,
+}
+
+pub const GLUE_SUITE: [(ProbeKind, &str); 7] = [
+    (ProbeKind::Sst2, "SST-2"),
+    (ProbeKind::Mnli, "MNLI"),
+    (ProbeKind::Mrpc, "MRPC"),
+    (ProbeKind::Cola, "CoLA"),
+    (ProbeKind::Qnli, "QNLI"),
+    (ProbeKind::Qqp, "QQP"),
+    (ProbeKind::Stsb, "STS-B"),
+];
+
+/// A classification probe task bound to a corpus.
+#[derive(Debug, Clone)]
+pub struct Probe {
+    pub kind: ProbeKind,
+    pub corpus: Corpus,
+}
+
+impl Probe {
+    pub fn new(kind: ProbeKind, corpus: Corpus) -> Probe {
+        Probe { kind, corpus }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self.kind {
+            ProbeKind::Mnli => 3,
+            ProbeKind::Stsb => 4,
+            _ => 2,
+        }
+    }
+
+    /// One labeled example: (tokens of length `seq`, label).
+    fn example(&self, seq: usize, rng: &mut Rng) -> (Vec<i32>, i32) {
+        let half = (seq - 2) / 2;
+        match self.kind {
+            ProbeKind::Sst2 => {
+                let topic = rng.below(TOPICS);
+                let body = self.corpus.sample_with_topic(seq - 1, topic, rng);
+                let mut toks = vec![special::CLS];
+                toks.extend(body);
+                (toks, i32::from(topic >= TOPICS / 2))
+            }
+            ProbeKind::Mnli => {
+                let t1 = rng.below(TOPICS);
+                let (t2, label) = match rng.below(3) {
+                    0 => (t1, 0),                            // same
+                    1 => ((t1 + 1) % TOPICS, 1),             // adjacent
+                    _ => ((t1 + TOPICS / 2) % TOPICS, 2),    // distant
+                };
+                (self.pair(t1, t2, half, rng, 0.0), label)
+            }
+            ProbeKind::Mrpc | ProbeKind::Qqp => {
+                let noise = if self.kind == ProbeKind::Mrpc { 0.15 } else { 0.3 };
+                let t1 = rng.below(TOPICS);
+                let a = self.corpus.sample_with_topic(half, t1, rng);
+                let positive = rng.coin(0.5);
+                let b = if positive {
+                    // noisy copy
+                    a.iter()
+                        .map(|&tok| {
+                            if rng.coin(noise) {
+                                special::CONTENT
+                                    + rng.below(self.corpus.vocab - special::CONTENT as usize) as i32
+                            } else {
+                                tok
+                            }
+                        })
+                        .collect()
+                } else {
+                    self.corpus.sample_with_topic(half, rng.below(TOPICS), rng)
+                };
+                (Self::join(&a, &b, seq), i32::from(positive))
+            }
+            ProbeKind::Cola => {
+                let topic = rng.below(TOPICS);
+                let mut body = self.corpus.sample_with_topic(seq - 1, topic, rng);
+                let corrupted = rng.coin(0.5);
+                if corrupted {
+                    rng.shuffle(&mut body);
+                }
+                let mut toks = vec![special::CLS];
+                toks.extend(body);
+                (toks, i32::from(!corrupted))
+            }
+            ProbeKind::Qnli => {
+                let t1 = rng.below(TOPICS);
+                let same = rng.coin(0.5);
+                let t2 = if same { t1 } else { (t1 + 1 + rng.below(TOPICS - 1)) % TOPICS };
+                (self.pair(t1, t2, half, rng, 0.0), i32::from(same))
+            }
+            ProbeKind::Stsb => {
+                let t1 = rng.below(TOPICS);
+                let bin = rng.below(4);
+                // similarity bin 3 = same topic & low-noise copy ... 0 = unrelated
+                let a = self.corpus.sample_with_topic(half, t1, rng);
+                let b = match bin {
+                    3 => a.clone(),
+                    2 => a
+                        .iter()
+                        .map(|&tok| {
+                            if rng.coin(0.3) {
+                                special::CONTENT
+                                    + rng.below(self.corpus.vocab - special::CONTENT as usize) as i32
+                            } else {
+                                tok
+                            }
+                        })
+                        .collect(),
+                    1 => self.corpus.sample_with_topic(half, t1, rng),
+                    _ => self.corpus.sample_with_topic(half, (t1 + TOPICS / 2) % TOPICS, rng),
+                };
+                (Self::join(&a, &b, seq), bin as i32)
+            }
+        }
+    }
+
+    fn pair(&self, t1: usize, t2: usize, half: usize, rng: &mut Rng, _noise: f32) -> Vec<i32> {
+        let a = self.corpus.sample_with_topic(half, t1, rng);
+        let b = self.corpus.sample_with_topic(half, t2, rng);
+        Self::join(&a, &b, half * 2 + 2)
+    }
+
+    fn join(a: &[i32], b: &[i32], seq: usize) -> Vec<i32> {
+        let mut toks = Vec::with_capacity(seq);
+        toks.push(special::CLS);
+        toks.extend_from_slice(a);
+        toks.push(special::SEP);
+        toks.extend_from_slice(b);
+        toks.resize(seq, special::PAD);
+        toks
+    }
+
+    /// Build a probe batch: "tokens" (B,S) + "labels" (B,).
+    pub fn batch(&self, cfg: &ModelConfig, rng: &mut Rng) -> Store {
+        let (b, s) = (cfg.batch, cfg.seq);
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut labels = Vec::with_capacity(b);
+        for _ in 0..b {
+            let (mut toks, label) = self.example(s, rng);
+            toks.resize(s, special::PAD);
+            tokens.extend(toks);
+            labels.push(label);
+        }
+        let mut st = Store::new();
+        st.insert("tokens", Tensor::from_i32(&[b, s], tokens));
+        st.insert("labels", Tensor::from_i32(&[b], labels));
+        st
+    }
+}
+
+/// Span probe (SQuAD analog): the first content token after CLS is a query;
+/// the answer is the single span in the body where that token appears
+/// followed by its Markov continuation. Labels = start/end positions.
+#[derive(Debug, Clone)]
+pub struct SpanProbe {
+    pub corpus: Corpus,
+    /// SQuADv2 analog: fraction of unanswerable queries (span = CLS position).
+    pub unanswerable: f32,
+}
+
+impl SpanProbe {
+    pub fn v1(corpus: Corpus) -> SpanProbe {
+        SpanProbe { corpus, unanswerable: 0.0 }
+    }
+    pub fn v2(corpus: Corpus) -> SpanProbe {
+        SpanProbe { corpus, unanswerable: 0.33 }
+    }
+
+    /// "tokens" (B,S), "starts" (B,), "ends" (B,).
+    pub fn batch(&self, cfg: &ModelConfig, rng: &mut Rng) -> Store {
+        let (b, s) = (cfg.batch, cfg.seq);
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut starts = Vec::with_capacity(b);
+        let mut ends = Vec::with_capacity(b);
+        for _ in 0..b {
+            let topic = rng.below(TOPICS);
+            let mut body = self.corpus.sample_with_topic(s - 2, topic, rng);
+            let span_len = 2 + rng.below(3);
+            let answerable = !rng.coin(self.unanswerable);
+            // choose a span inside the body; the query token is its first token
+            let start_in_body = rng.below(body.len().saturating_sub(span_len + 1)).max(1);
+            let query = body[start_in_body];
+            if !answerable {
+                // remove the query token from the body entirely
+                for t in body.iter_mut() {
+                    if *t == query {
+                        *t = special::CONTENT;
+                    }
+                }
+            }
+            let mut toks = vec![special::CLS, query];
+            toks.extend(body);
+            toks.truncate(s);
+            toks.resize(s, special::PAD);
+            tokens.extend(toks);
+            if answerable {
+                starts.push((start_in_body + 2).min(s - 1) as i32);
+                ends.push((start_in_body + 2 + span_len - 1).min(s - 1) as i32);
+            } else {
+                starts.push(0);
+                ends.push(0);
+            }
+        }
+        let mut st = Store::new();
+        st.insert("tokens", Tensor::from_i32(&[b, s], tokens));
+        st.insert("starts", Tensor::from_i32(&[b], starts));
+        st.insert("ends", Tensor::from_i32(&[b], ends));
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "p".into(),
+            family: "bert".into(),
+            layers: 6,
+            dim: 72,
+            heads: 6,
+            vocab: 512,
+            seq: 32,
+            batch: 16,
+            img: 0,
+            patch: 0,
+            channels: 3,
+            n_classes: 4,
+            cls_layers: 0,
+            ffn_mult: 4,
+        }
+    }
+
+    #[test]
+    fn all_probes_produce_valid_labels() {
+        let corpus = Corpus::new(512, 0);
+        for (kind, _name) in GLUE_SUITE {
+            let p = Probe::new(kind, corpus.clone());
+            let b = p.batch(&cfg(), &mut Rng::new(1));
+            for l in b.expect("labels").i32s() {
+                assert!((0..p.n_classes() as i32).contains(l), "{kind:?} label {l}");
+            }
+            assert_eq!(b.expect("tokens").shape, vec![16, 32]);
+        }
+    }
+
+    #[test]
+    fn tokens_start_with_cls() {
+        let corpus = Corpus::new(512, 0);
+        let p = Probe::new(ProbeKind::Mnli, corpus);
+        let b = p.batch(&cfg(), &mut Rng::new(2));
+        let toks = b.expect("tokens").i32s();
+        for row in 0..16 {
+            assert_eq!(toks[row * 32], special::CLS);
+        }
+    }
+
+    #[test]
+    fn span_labels_in_range() {
+        let corpus = Corpus::new(512, 0);
+        for probe in [SpanProbe::v1(corpus.clone()), SpanProbe::v2(corpus)] {
+            let b = probe.batch(&cfg(), &mut Rng::new(3));
+            let starts = b.expect("starts").i32s();
+            let ends = b.expect("ends").i32s();
+            for (s, e) in starts.iter().zip(ends) {
+                assert!((0..32).contains(s));
+                assert!(e >= s);
+            }
+        }
+    }
+
+    #[test]
+    fn span_v2_has_unanswerable() {
+        let corpus = Corpus::new(512, 0);
+        let probe = SpanProbe::v2(corpus);
+        let mut zero_count = 0;
+        for seed in 0..10 {
+            let b = probe.batch(&cfg(), &mut Rng::new(seed));
+            zero_count += b.expect("starts").i32s().iter().filter(|&&s| s == 0).count();
+        }
+        assert!(zero_count > 10, "expected unanswerable examples, got {zero_count}");
+    }
+
+    #[test]
+    fn probe_classes_match_kind() {
+        let corpus = Corpus::new(512, 0);
+        assert_eq!(Probe::new(ProbeKind::Mnli, corpus.clone()).n_classes(), 3);
+        assert_eq!(Probe::new(ProbeKind::Stsb, corpus.clone()).n_classes(), 4);
+        assert_eq!(Probe::new(ProbeKind::Sst2, corpus).n_classes(), 2);
+    }
+}

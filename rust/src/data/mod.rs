@@ -1,0 +1,23 @@
+//! Data substrate: synthetic corpora, tokenization-level batch builders,
+//! procedural vision datasets, downstream probe suites, and a prefetching
+//! loader.
+//!
+//! The paper trains on Wikipedia/C4/ImageNet; offline we substitute seeded
+//! synthetic sources with *learnable, capacity-sensitive* structure (see
+//! DESIGN.md §4) so the growth-operator comparisons keep their shape.
+
+pub mod batches;
+pub mod corpus;
+pub mod downstream;
+pub mod loader;
+pub mod vision;
+
+/// Reserved token ids shared by every text task.
+pub mod special {
+    pub const PAD: i32 = 0;
+    pub const MASK: i32 = 1;
+    pub const CLS: i32 = 2;
+    pub const SEP: i32 = 3;
+    /// First content token id.
+    pub const CONTENT: i32 = 4;
+}

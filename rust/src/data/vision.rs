@@ -1,0 +1,189 @@
+//! Procedural vision dataset — the ImageNet stand-in for DeiT/CaiT runs.
+//!
+//! Each class is a distinct spatial pattern family (stripes, checker,
+//! blobs, rings, gradients, ...) drawn with class-conditioned parameters at
+//! a random position/phase over a noise background. Discriminating the
+//! classes requires genuinely spatial features, so ViT capacity matters —
+//! the property Fig. 4/8 need.
+
+use crate::config::ModelConfig;
+use crate::tensor::{store::Store, Tensor};
+use crate::util::rng::Rng;
+
+/// A task = (generator seed, number of classes, noise level). Transfer tasks
+/// (Table 2) are new seeds / class counts over the same generator family.
+#[derive(Debug, Clone)]
+pub struct VisionTask {
+    pub seed: u64,
+    pub n_classes: usize,
+    pub noise: f32,
+}
+
+impl VisionTask {
+    pub fn pretrain() -> VisionTask {
+        VisionTask { seed: 0xB16_CAFE, n_classes: 10, noise: 0.9 }
+    }
+
+    /// Named transfer tasks, analogs of the paper's Table 2 suite.
+    pub fn transfer(name: &str) -> VisionTask {
+        match name {
+            "cifar10" => VisionTask { seed: 0xC1FA_0010, n_classes: 10, noise: 0.3 },
+            "cifar100" => VisionTask { seed: 0xC1FA_0100, n_classes: 20, noise: 0.3 },
+            "flowers" => VisionTask { seed: 0xF10_3E25, n_classes: 20, noise: 0.2 },
+            "cars" => VisionTask { seed: 0xCA25_0001, n_classes: 20, noise: 0.35 },
+            "chestxray" => VisionTask { seed: 0xC4E5_7000, n_classes: 8, noise: 0.5 },
+            other => panic!("unknown vision task '{other}'"),
+        }
+    }
+
+    /// Render one image of class `label` into `img` (side x side x 3, HWC).
+    /// A lower-amplitude *distractor* pattern of a random other class is
+    /// blended in, so discrimination is genuinely capacity-bound.
+    fn render(&self, label: usize, side: usize, rng: &mut Rng, img: &mut [f32]) {
+        // background noise
+        for px in img.iter_mut() {
+            *px = rng.range_f32(-self.noise, self.noise);
+        }
+        self.paint(label, side, rng, img, 0.35);
+        let distractor = (label + 1 + rng.below(self.n_classes.saturating_sub(1).max(1)))
+            % self.n_classes;
+        self.paint(distractor, side, rng, img, 0.18);
+    }
+
+    fn paint(&self, label: usize, side: usize, rng: &mut Rng, img: &mut [f32], amp: f32) {
+        // class-conditioned pattern parameters (deterministic per class)
+        let mut crng = Rng::new(self.seed ^ (label as u64).wrapping_mul(0x9E37));
+        let kind = crng.below(5);
+        let freq = 1 + crng.below(3);
+        let color = [crng.range_f32(0.4, 1.0), crng.range_f32(0.4, 1.0), crng.range_f32(0.4, 1.0)];
+        // per-sample jitter
+        let (ox, oy) = (rng.below(side / 2), rng.below(side / 2));
+        let phase = rng.next_f32() * std::f32::consts::TAU;
+        for y in 0..side {
+            for x in 0..side {
+                let fx = (x + ox) as f32 / side as f32;
+                let fy = (y + oy) as f32 / side as f32;
+                let v = match kind {
+                    0 => ((fx * freq as f32 * std::f32::consts::TAU + phase).sin()).signum(), // stripes
+                    1 => {
+                        let cx = ((fx * 2.0 * freq as f32) as i32 + (fy * 2.0 * freq as f32) as i32) % 2;
+                        if cx == 0 { 1.0 } else { -1.0 } // checker
+                    }
+                    2 => {
+                        let dx = fx - 0.5;
+                        let dy = fy - 0.5;
+                        ((dx * dx + dy * dy).sqrt() * freq as f32 * 12.0 + phase).sin() // rings
+                    }
+                    3 => (fx * freq as f32 + fy * freq as f32 * 0.5 + phase).fract() * 2.0 - 1.0, // gradient
+                    _ => {
+                        let bx = (fx * freq as f32 * 4.0 + phase).sin();
+                        let by = (fy * freq as f32 * 4.0 + phase).cos();
+                        bx * by // blobs
+                    }
+                };
+                for c in 0..3 {
+                    img[(y * side + x) * 3 + c] += amp * v * color[c];
+                }
+            }
+        }
+    }
+
+    /// Build a batch Store with "images" (B,H,W,3) f32 and "labels" (B,) i32.
+    pub fn batch(&self, cfg: &ModelConfig, rng: &mut Rng) -> Store {
+        let side = cfg.img;
+        let b = cfg.batch;
+        let mut images = vec![0.0f32; b * side * side * 3];
+        let mut labels = Vec::with_capacity(b);
+        for i in 0..b {
+            let label = rng.below(self.n_classes);
+            labels.push(label as i32);
+            self.render(label, side, rng, &mut images[i * side * side * 3..(i + 1) * side * side * 3]);
+        }
+        let mut st = Store::new();
+        st.insert("images", Tensor::from_f32(&[b, side, side, 3], images));
+        st.insert("labels", Tensor::from_i32(&[b], labels));
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "v".into(),
+            family: "vit".into(),
+            layers: 6,
+            dim: 48,
+            heads: 4,
+            vocab: 0,
+            seq: 0,
+            batch: 8,
+            img: 32,
+            patch: 8,
+            channels: 3,
+            n_classes: 10,
+            cls_layers: 0,
+            ffn_mult: 4,
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let t = VisionTask::pretrain();
+        let b = t.batch(&cfg(), &mut Rng::new(0));
+        assert_eq!(b.expect("images").shape, vec![8, 32, 32, 3]);
+        assert_eq!(b.expect("labels").shape, vec![8]);
+        for l in b.expect("labels").i32s() {
+            assert!((0..10).contains(l));
+        }
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Mean intra-class L2 distance should be smaller than inter-class,
+        // averaged over samples (the distractor pattern adds within-class
+        // variance, so single pairs are noisy by design).
+        let t = VisionTask::pretrain();
+        let side = 16;
+        let render = |label: usize, seed: u64| {
+            let mut img = vec![0.0f32; side * side * 3];
+            t.render(label, side, &mut Rng::new(seed), &mut img);
+            img
+        };
+        let d = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>()
+        };
+        let (mut intra, mut inter) = (0.0f32, 0.0f32);
+        let n = 16;
+        for seed in 0..n {
+            intra += d(&render(0, seed), &render(0, seed + 100));
+            inter += d(&render(0, seed), &render(7, seed + 100));
+        }
+        assert!(intra < inter, "intra {intra} vs inter {inter}");
+    }
+
+    #[test]
+    fn transfer_tasks_resolve() {
+        for name in ["cifar10", "cifar100", "flowers", "cars", "chestxray"] {
+            let t = VisionTask::transfer(name);
+            assert!(t.n_classes >= 8 && t.n_classes <= 20);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_task_panics() {
+        VisionTask::transfer("imagenet22k");
+    }
+
+    #[test]
+    fn images_bounded() {
+        let t = VisionTask::pretrain();
+        let b = t.batch(&cfg(), &mut Rng::new(3));
+        for v in b.expect("images").f32s() {
+            assert!(v.abs() <= 2.0);
+        }
+    }
+}

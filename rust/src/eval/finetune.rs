@@ -1,0 +1,176 @@
+//! Downstream fine-tuning harnesses (GLUE/SQuAD/vision-transfer analogs).
+//!
+//! Each harness takes a pretrained *body* (the trainer's params), attaches a
+//! fresh task head (det-init), fine-tunes with the finetune recipe, and
+//! reports held-out accuracy — the numbers in Tables 1/2/5/6.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::optim::AdamW;
+use crate::coordinator::trainer::eval_store;
+use crate::runtime::Runtime;
+use crate::tensor::init::det_fill;
+use crate::tensor::store::Store;
+
+#[derive(Debug, Clone)]
+pub struct FinetuneResult {
+    pub task: String,
+    pub accuracy: f32,
+    pub final_loss: f32,
+}
+
+/// Assemble probe params: pretrained body tensors where names match, fresh
+/// det-init for task-head (and any other missing) tensors.
+pub fn attach_head(manifest_shapes: &[(String, Vec<usize>)], body: &Store, seed: u64) -> Store {
+    let mut out = Store::new();
+    for (name, shape) in manifest_shapes {
+        match body.get(name) {
+            Some(t) if &t.shape == shape => out.insert(name.clone(), t.clone()),
+            _ => out.insert(name.clone(), det_fill(name, shape, seed ^ 0x4EAD)),
+        }
+    }
+    out
+}
+
+/// Generic single-group fine-tune: artifact with (params, batch) signature.
+fn finetune_generic(
+    rt: &Runtime,
+    grad_name: &str,
+    fwd_name: &str,
+    task: &str,
+    body: &Store,
+    tc: &TrainConfig,
+    train_batches: &mut dyn FnMut(usize) -> Store,
+    eval_batches: &mut dyn FnMut(usize) -> Store,
+    eval_n: usize,
+) -> Result<FinetuneResult> {
+    let grad = rt.load(grad_name)?;
+    let fwd = rt.load(fwd_name)?;
+    let mut params = attach_head(&grad.manifest.shapes_of("params"), body, tc.seed);
+    let mut opt = AdamW::from_train_config(&params, tc);
+    for step in 0..tc.total_steps {
+        let batch = train_batches(step);
+        let out = grad.run(&[("params", &params), ("batch", &batch)])?;
+        let grads = out.groups.get("grads").expect("grads");
+        opt.step(&mut params, grads, tc.lr_at(step));
+    }
+    let (loss, metric) = eval_store(&fwd, &params, eval_batches, eval_n)?;
+    Ok(FinetuneResult {
+        task: task.to_string(),
+        accuracy: metric.unwrap_or(f32::NAN),
+        final_loss: loss,
+    })
+}
+
+/// Classification probe (GLUE analog) on a bert body.
+#[allow(clippy::too_many_arguments)]
+pub fn finetune_probe(
+    rt: &Runtime,
+    artifact_model: &str, // e.g. "probe_bert_base"
+    task: &str,
+    body: &Store,
+    tc: &TrainConfig,
+    train_batches: &mut dyn FnMut(usize) -> Store,
+    eval_batches: &mut dyn FnMut(usize) -> Store,
+) -> Result<FinetuneResult> {
+    finetune_generic(
+        rt,
+        &format!("grad_{artifact_model}"),
+        &format!("fwd_{artifact_model}"),
+        task,
+        body,
+        tc,
+        train_batches,
+        eval_batches,
+        8,
+    )
+}
+
+/// Span probe (SQuAD analog). Reports EM-style accuracy.
+pub fn finetune_span(
+    rt: &Runtime,
+    task: &str,
+    body: &Store,
+    tc: &TrainConfig,
+    train_batches: &mut dyn FnMut(usize) -> Store,
+    eval_batches: &mut dyn FnMut(usize) -> Store,
+) -> Result<FinetuneResult> {
+    finetune_generic(
+        rt,
+        "span_grad_bert_base",
+        "span_fwd_bert_base",
+        task,
+        body,
+        tc,
+        train_batches,
+        eval_batches,
+        8,
+    )
+}
+
+/// AdapterFusion-style tuning (Table 6): only adapters + head receive
+/// gradients; the pretrained body is a frozen input group.
+pub fn finetune_adapters(
+    rt: &Runtime,
+    task: &str,
+    body: &Store,
+    tc: &TrainConfig,
+    train_batches: &mut dyn FnMut(usize) -> Store,
+    eval_batches: &mut dyn FnMut(usize) -> Store,
+) -> Result<FinetuneResult> {
+    let grad = rt.load("adapter_grad_bert_base")?;
+    let fwd = rt.load("adapter_fwd_bert_base")?;
+    let frozen = attach_head(&grad.manifest.shapes_of("frozen"), body, tc.seed);
+    let mut trainable = Store::det_init(&grad.manifest.shapes_of("trainable"), tc.seed ^ 0xADA);
+    let mut opt = AdamW::from_train_config(&trainable, tc);
+    for step in 0..tc.total_steps {
+        let batch = train_batches(step);
+        let out = grad.run(&[("trainable", &trainable), ("frozen", &frozen), ("batch", &batch)])?;
+        let grads = out.groups.get("grads").expect("grads");
+        opt.step(&mut trainable, grads, tc.lr_at(step));
+    }
+    let mut loss = 0.0;
+    let mut acc = 0.0;
+    let n = 8;
+    for i in 0..n {
+        let batch = eval_batches(i);
+        let out = fwd.run(&[("trainable", &trainable), ("frozen", &frozen), ("batch", &batch)])?;
+        loss += out.scalar("loss").unwrap_or(f32::NAN);
+        acc += out.scalar("metric").unwrap_or(f32::NAN);
+    }
+    Ok(FinetuneResult {
+        task: task.to_string(),
+        accuracy: acc / n as f32,
+        final_loss: loss / n as f32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn attach_head_reuses_body_and_inits_head() {
+        let mut body = Store::new();
+        body.insert("L00_q_w", Tensor::from_f32(&[2, 2], vec![9.0; 4]));
+        let shapes = vec![
+            ("L00_q_w".to_string(), vec![2, 2]),
+            ("head_w".to_string(), vec![4, 2]),
+        ];
+        let p = attach_head(&shapes, &body, 0);
+        assert_eq!(p.expect("L00_q_w").f32s(), &[9.0; 4]);
+        assert_eq!(p.expect("head_w").shape, vec![4, 2]);
+    }
+
+    #[test]
+    fn attach_head_replaces_mismatched_shapes() {
+        let mut body = Store::new();
+        body.insert("L00_q_w", Tensor::from_f32(&[3, 3], vec![9.0; 9]));
+        let shapes = vec![("L00_q_w".to_string(), vec![2, 2])];
+        let p = attach_head(&shapes, &body, 0);
+        assert_eq!(p.expect("L00_q_w").shape, vec![2, 2]);
+        assert_ne!(p.expect("L00_q_w").f32s()[0], 9.0);
+    }
+}

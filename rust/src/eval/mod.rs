@@ -1,0 +1,5 @@
+//! Evaluation & transfer: the fine-tuning harnesses behind Tables 1/2/5/6.
+
+pub mod finetune;
+
+pub use finetune::{finetune_probe, finetune_span, finetune_adapters, FinetuneResult};

@@ -1,0 +1,295 @@
+//! Shared experiment machinery: pretrained-checkpoint cache, the method
+//! zoo (scratch / growth operators / KI / LiGO), figure runner, and
+//! paper-style report printing.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::{ModelConfig, Registry, TrainConfig};
+use crate::coordinator::growth_manager::{ligo_grow, LigoOptions};
+use crate::coordinator::metrics::{savings, write_report, Curve};
+use crate::coordinator::trainer::{Batches, Trainer};
+use crate::data::batches::{lm_batch, mlm_batch};
+use crate::data::corpus::Corpus;
+use crate::data::vision::VisionTask;
+use crate::growth;
+use crate::runtime::Runtime;
+use crate::tensor::{io, store::Store};
+use crate::util::rng::Rng;
+use crate::log_info;
+
+/// Default pretraining steps for source models (at scale=1.0).
+pub const SMALL_PRETRAIN_STEPS: usize = 300;
+/// Default large-model training steps (at scale=1.0).
+pub const LARGE_TRAIN_STEPS: usize = 600;
+
+/// A method column in a figure.
+#[derive(Debug, Clone)]
+pub enum Method {
+    Scratch,
+    /// A non-learned growth operator from the zoo by name.
+    Operator(&'static str),
+    /// Knowledge inheritance: train the large model with distillation from
+    /// the small one (extra compute, as the paper finds: negative savings).
+    Ki,
+    /// The paper's contribution.
+    Ligo(LigoOptions),
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Scratch => "Scratch".into(),
+            Method::Operator(n) => match *n {
+                "stackbert" => "StackBERT".into(),
+                "mslt" => "MSLT".into(),
+                "aki" => "bert2BERT".into(),
+                "net2net" => "Net2Net".into(),
+                "interpolation" => "InterBERT".into(),
+                "direct_copy" => "DirectCopy".into(),
+                other => other.into(),
+            },
+            Method::Ki => "KI".into(),
+            Method::Ligo(_) => "LiGO".into(),
+        }
+    }
+}
+
+/// LiGO options rescaled for this substrate's step budget: the paper's 100
+/// M-steps are 0.025% of its 400k-step training budget; at our ~600-step
+/// scale, 25 M-steps (~5% overhead) is the comparable operating point
+/// (Table 3 reproduces the full step-count/savings tradeoff).
+pub fn ligo_scaled() -> LigoOptions {
+    LigoOptions { steps: 25, ..Default::default() }
+}
+
+/// The paper's Fig. 2/3 method set.
+pub fn standard_methods() -> Vec<Method> {
+    vec![
+        Method::Scratch,
+        Method::Operator("stackbert"),
+        Method::Operator("mslt"),
+        Method::Ki,
+        Method::Operator("aki"),
+        Method::Ligo(ligo_scaled()),
+    ]
+}
+
+/// Batch generators for a text config (train/eval streams disjoint by seed).
+pub fn text_batches(corpus: &Corpus, cfg: &ModelConfig, seed: u64) -> Batches {
+    let is_lm = cfg.family == "gpt";
+    let c1 = corpus.clone();
+    let cfg1 = cfg.clone();
+    let c2 = corpus.clone();
+    let cfg2 = cfg.clone();
+    Batches {
+        train: Box::new(move |step| {
+            let mut rng = Rng::new(seed ^ (step as u64).wrapping_mul(0x9E37_79B9));
+            if is_lm { lm_batch(&c1, &cfg1, &mut rng) } else { mlm_batch(&c1, &cfg1, &mut rng) }
+        }),
+        eval: Box::new(move |i| {
+            let mut rng = Rng::new(0xEEAA_0000 + i as u64);
+            if is_lm { lm_batch(&c2, &cfg2, &mut rng) } else { mlm_batch(&c2, &cfg2, &mut rng) }
+        }),
+    }
+}
+
+/// Batch generators for a vision config.
+pub fn vision_batches(task: &VisionTask, cfg: &ModelConfig, seed: u64) -> Batches {
+    let t1 = task.clone();
+    let cfg1 = cfg.clone();
+    let t2 = task.clone();
+    let cfg2 = cfg.clone();
+    Batches {
+        train: Box::new(move |step| {
+            t1.batch(&cfg1, &mut Rng::new(seed ^ (step as u64).wrapping_mul(0x9E37_79B9)))
+        }),
+        eval: Box::new(move |i| t2.batch(&cfg2, &mut Rng::new(0xEEAA_1000 + i as u64))),
+    }
+}
+
+fn batches_for(cfg: &ModelConfig, corpus: &Corpus, seed: u64) -> Batches {
+    if cfg.is_vision() {
+        vision_batches(&VisionTask::pretrain(), cfg, seed)
+    } else {
+        text_batches(corpus, cfg, seed)
+    }
+}
+
+/// Recipe appropriate for a config's family.
+pub fn recipe_for(cfg: &ModelConfig, steps: usize) -> TrainConfig {
+    match cfg.family.as_str() {
+        "gpt" => TrainConfig::gpt(steps),
+        "vit" | "cait" => TrainConfig::vision(steps),
+        _ => TrainConfig::bert(steps),
+    }
+}
+
+fn ckpt_path(out_dir: &Path, cfg: &ModelConfig, steps: usize) -> PathBuf {
+    out_dir.join("ckpt").join(format!("{}_{}steps.lgck", cfg.name, steps))
+}
+
+/// Pretrain (or load a cached checkpoint of) a source model.
+pub fn ensure_pretrained(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    corpus: &Corpus,
+    steps: usize,
+    out_dir: &Path,
+) -> Result<Store> {
+    let path = ckpt_path(out_dir, cfg, steps);
+    if path.exists() {
+        log_info!("loading cached checkpoint {path:?}");
+        return io::load(&path);
+    }
+    log_info!("pretraining {} for {} steps", cfg.name, steps);
+    let params = Trainer::scratch_params(rt, cfg, 0)?;
+    let tc = recipe_for(cfg, steps);
+    let mut tr = Trainer::new(rt, cfg, tc, params)?;
+    let mut b = batches_for(cfg, corpus, 0x50A0);
+    tr.run(&format!("pretrain_{}", cfg.name), &mut b, steps)?;
+    io::save(&tr.params, &path)?;
+    Ok(tr.params)
+}
+
+/// Initialize the large model per `method`; returns (params, extra_flops,
+/// extra KD bindings for training).
+pub fn init_large(
+    rt: &Runtime,
+    method: &Method,
+    small: &ModelConfig,
+    large: &ModelConfig,
+    small_params: &Store,
+    corpus: &Corpus,
+) -> Result<(Store, f64, Vec<(String, Store)>)> {
+    match method {
+        Method::Scratch => Ok((Trainer::scratch_params(rt, large, 1)?, 0.0, vec![])),
+        Method::Operator(name) => {
+            let op = growth::by_name(name).expect("operator");
+            Ok((op.grow(small_params, small, large), 0.0, vec![]))
+        }
+        Method::Ki => Ok((
+            Trainer::scratch_params(rt, large, 1)?,
+            0.0,
+            vec![("teacher".to_string(), small_params.clone())],
+        )),
+        Method::Ligo(opts) => {
+            let mut mk = {
+                let c = corpus.clone();
+                let l = large.clone();
+                let is_vision = large.is_vision();
+                move |s: usize| {
+                    let mut rng = Rng::new(0x11C0_0000 + s as u64);
+                    if is_vision {
+                        VisionTask::pretrain().batch(&l, &mut rng)
+                    } else if l.family == "gpt" {
+                        lm_batch(&c, &l, &mut rng)
+                    } else {
+                        mlm_batch(&c, &l, &mut rng)
+                    }
+                }
+            };
+            let grown = ligo_grow(rt, small, large, small_params, &mut mk, opts)?;
+            log_info!(
+                "LiGO grew {}->{} in {:.1}s, M-loss {:.3}, +{:.2e} FLOPs",
+                small.name, large.name, grown.wall_s, grown.final_m_loss, grown.extra_flops
+            );
+            Ok((grown.params, grown.extra_flops, vec![]))
+        }
+    }
+}
+
+/// Train `methods` on the (small -> large) pair and return their curves.
+pub fn run_pair(
+    rt: &Runtime,
+    _reg: &Registry,
+    small: &ModelConfig,
+    large: &ModelConfig,
+    methods: &[Method],
+    steps: usize,
+    pretrain_steps: usize,
+    out_dir: &Path,
+) -> Result<Vec<Curve>> {
+    let corpus = Corpus::new(large.vocab.max(512), 0);
+    let small_params = ensure_pretrained(rt, small, &corpus, pretrain_steps, out_dir)?;
+    let mut curves = Vec::new();
+    for method in methods {
+        let label = method.label();
+        log_info!("=== method {} on {}->{} ({} steps)", label, small.name, large.name, steps);
+        let (params, extra_flops, extra) =
+            init_large(rt, method, small, large, &small_params, &corpus)?;
+        let tc = recipe_for(large, steps);
+        let mut tr = if matches!(method, Method::Ki) {
+            let grad = format!("kd_grad_{}__{}", small.name, large.name);
+            let fwd = format!("fwd_{}", large.name);
+            let mut t = Trainer::with_artifacts(rt, &grad, &fwd, large, tc, params)?;
+            // KD costs a teacher forward on top of the student step
+            t.flops_per_microbatch = crate::coordinator::flops::train_step_flops(large)
+                + crate::coordinator::flops::forward_flops(small);
+            t
+        } else {
+            Trainer::new(rt, large, tc, params)?
+        };
+        tr.flops_offset = extra_flops;
+        tr.extra = extra;
+        let mut b = batches_for(large, &corpus, 0x7A1A);
+        let curve = tr.run(&label, &mut b, steps)?;
+        curves.push(curve);
+    }
+    Ok(curves)
+}
+
+/// Print the paper-style savings table and write the report files.
+pub fn report(
+    experiment: &str,
+    title: &str,
+    curves: &[Curve],
+    paper_savings: &[(&str, f64)],
+    higher_better: bool,
+    out_dir: &Path,
+) -> Result<()> {
+    println!("\n================================================================");
+    println!("{experiment}: {title}");
+    println!("================================================================");
+    let scratch = curves.iter().find(|c| c.name == "Scratch");
+    println!(
+        "{:<12} {:>12} {:>14} {:>16} {:>16}",
+        "method", "final", "savings(FLOPs)", "savings(wall)", "paper(FLOPs)"
+    );
+    for c in curves {
+        let (s_f, s_w) = match scratch {
+            Some(s) if c.name != "Scratch" => (
+                savings(s, c, false, higher_better),
+                savings(s, c, true, higher_better),
+            ),
+            _ => (None, None),
+        };
+        let paper = paper_savings
+            .iter()
+            .find(|(n, _)| *n == c.name)
+            .map(|(_, v)| format!("{:+.1}%", v * 100.0))
+            .unwrap_or_else(|| "-".into());
+        let fin = if higher_better {
+            c.final_metric().unwrap_or(f32::NAN)
+        } else {
+            c.final_loss()
+        };
+        println!(
+            "{:<12} {:>12.4} {:>14} {:>16} {:>16}",
+            c.name,
+            fin,
+            s_f.map(|v| format!("{:+.1}%", v * 100.0)).unwrap_or_else(|| "-".into()),
+            s_w.map(|v| format!("{:+.1}%", v * 100.0)).unwrap_or_else(|| "-".into()),
+            paper,
+        );
+    }
+    write_report(out_dir, experiment, curves)?;
+    println!("curves written to {}", out_dir.display());
+    Ok(())
+}
+
+/// Scale a step count, keeping a sane floor.
+pub fn scaled(steps: usize, scale: f64) -> usize {
+    ((steps as f64 * scale) as usize).max(20)
+}

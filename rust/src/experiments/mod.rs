@@ -1,0 +1,48 @@
+//! The experiment harness: one module per paper table/figure (DESIGN.md §5).
+//!
+//! Each experiment trains the relevant method set on the scaled pairs,
+//! prints paper-style rows (including the savings-% headline next to the
+//! paper's number), and writes curves as CSV/JSON under `reports/`.
+
+pub mod common;
+pub mod figures;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Runtime;
+use crate::config::Registry;
+
+/// All experiment ids in paper order.
+pub const ALL: [&str; 14] = [
+    "fig2", "fig2c", "fig3", "fig3c", "fig4", "fig5", "fig6", "fig7", "fig8",
+    "table1", "table2", "table3", "table5", "table6",
+];
+
+/// Run one experiment by id. `scale` multiplies default step counts
+/// (0.2 = quick smoke, 1.0 = full reproduction).
+pub fn run(rt: &Runtime, reg: &Registry, id: &str, scale: f64, out_dir: &std::path::Path) -> Result<()> {
+    match id {
+        "fig2" => figures::fig2(rt, reg, scale, out_dir),
+        "fig2c" => figures::fig2c(rt, reg, scale, out_dir),
+        "fig3" => figures::fig3(rt, reg, scale, out_dir),
+        "fig3c" => figures::fig3c(rt, reg, scale, out_dir),
+        "fig4" => figures::fig4(rt, reg, scale, out_dir),
+        "fig5" => figures::fig5(rt, reg, scale, out_dir),
+        "fig6" => figures::fig6(rt, reg, scale, out_dir),
+        "fig7" => figures::fig7(rt, reg, scale, out_dir),
+        "fig8" => figures::fig8(rt, reg, scale, out_dir),
+        "table1" => tables::table1(rt, reg, scale, out_dir),
+        "table2" => tables::table2(rt, reg, scale, out_dir),
+        "table3" => tables::table3(rt, reg, scale, out_dir),
+        "table5" => tables::table5(rt, reg, scale, out_dir),
+        "table6" => tables::table6(rt, reg, scale, out_dir),
+        "all" => {
+            for id in ALL {
+                run(rt, reg, id, scale, out_dir)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}'; known: {ALL:?}"),
+    }
+}

@@ -1,0 +1,115 @@
+//! AKI — Advanced Knowledge Initialization (bert2BERT, Chen et al. 2021).
+//!
+//! Like FPI, but the *new* neurons of layer l are taken from layer l+1's
+//! (width-grown) weights instead of duplicating layer l's own: this breaks
+//! the symmetry that slows FPI convergence and injects "advanced" (deeper)
+//! knowledge. Depth growth duplicates the top blocks (stacking), as
+//! bert2BERT does.
+
+use crate::config::ModelConfig;
+use crate::tensor::{store::Store, Tensor};
+use crate::util::rng::Rng;
+
+use super::net2net::grow_width;
+use super::width::WidthMap;
+use super::{layer_key, layer_suffixes, GrowthOperator};
+
+#[derive(Debug, Default)]
+pub struct Aki;
+
+/// Overwrite the duplicated (j >= d_small) rows of layer `l`'s matrices
+/// with the same rows of layer `l+1` (clamped at the top).
+fn advance_new_rows(out: &mut Store, cfg_s: &ModelConfig, emb: &WidthMap, ffn: &WidthMap) {
+    let suffix_rows: &[(&str, bool)] = &[
+        ("q_w", false),
+        ("k_w", false),
+        ("v_w", false),
+        ("o_w", false),
+        ("fc1_w", true), // rows indexed by the FFN map
+        ("fc2_w", false),
+    ];
+    for l in 0..cfg_s.layers {
+        let next = (l + 1).min(cfg_s.layers - 1);
+        if next == l {
+            continue;
+        }
+        for (suffix, is_ffn_rows) in suffix_rows {
+            let map = if *is_ffn_rows { ffn } else { emb };
+            let donor = out.expect(&layer_key(next, suffix)).clone();
+            let t = out.get_mut(&layer_key(l, suffix)).unwrap();
+            let cols = t.shape[1];
+            let data = t.f32s_mut();
+            for (j, &src) in map.map.iter().enumerate() {
+                if j < map.d_small {
+                    continue; // original rows stay
+                }
+                let _ = src;
+                let donor_row = &donor.f32s()[j * cols..(j + 1) * cols];
+                data[j * cols..(j + 1) * cols].copy_from_slice(donor_row);
+            }
+        }
+    }
+}
+
+impl GrowthOperator for Aki {
+    fn name(&self) -> &'static str {
+        "aki"
+    }
+
+    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+        let mut rng = Rng::new(0xA41);
+        let emb = WidthMap::random(cfg_s.dim, cfg_l.dim, &mut rng);
+        let ffn = WidthMap::random(cfg_s.ffn(), cfg_l.ffn(), &mut rng);
+        let mut out = grow_width(small, cfg_s, cfg_l, &emb, &ffn, true);
+        advance_new_rows(&mut out, cfg_s, &emb, &ffn);
+        // depth: stack (duplicate from the bottom, as StackBERT does)
+        for l in cfg_s.layers..cfg_l.layers {
+            let src = l % cfg_s.layers;
+            for suffix in layer_suffixes(cfg_s) {
+                let t: Tensor = out.expect(&layer_key(src, suffix)).clone();
+                out.insert(layer_key(l, suffix), t);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::{mk_cfg, small_store};
+
+    #[test]
+    fn shapes_and_depth_stacking() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let big = Aki.grow(&small_store(&cs), &cs, &cl);
+        assert_eq!(big.expect(&layer_key(0, "q_w")).shape, vec![12, 12]);
+        // stacked layers duplicate lower ones
+        assert_eq!(
+            big.expect(&layer_key(2, "q_w")),
+            big.expect(&layer_key(0, "q_w"))
+        );
+        assert_eq!(
+            big.expect(&layer_key(3, "fc1_w")),
+            big.expect(&layer_key(1, "fc1_w"))
+        );
+    }
+
+    #[test]
+    fn new_rows_differ_from_fpi_duplication() {
+        // Layer 0's new rows should come from layer 1, so they differ from
+        // plain duplication of layer 0's own rows.
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(2, 12, 3);
+        let big = Aki.grow(&small_store(&cs), &cs, &cl);
+        let l0 = big.expect(&layer_key(0, "q_w"));
+        let l1 = big.expect(&layer_key(1, "q_w"));
+        // rows 8..12 of layer0 equal rows 8..12 of layer1 (donor copy)
+        for j in 8..12 {
+            for c in 0..12 {
+                assert_eq!(l0.at2(j, c), l1.at2(j, c));
+            }
+        }
+    }
+}

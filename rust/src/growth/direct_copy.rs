@@ -1,0 +1,132 @@
+//! DirectCopy (network morphism baseline; Wei et al. 2016, Fig. 6b):
+//! the small matrices are copied into the top-left corner of the large
+//! ones and the new entries are small random values — no duplication, no
+//! normalization, no learning.
+
+use crate::config::ModelConfig;
+use crate::tensor::{store::Store, Tensor};
+use crate::util::rng::Rng;
+
+use super::width::corner_embed;
+use super::{layer_key, layer_suffixes, GrowthOperator};
+
+#[derive(Debug)]
+pub struct DirectCopy {
+    pub noise: f32,
+}
+
+impl Default for DirectCopy {
+    fn default() -> Self {
+        DirectCopy { noise: 0.01 }
+    }
+}
+
+fn grow_vec(t: &Tensor, d2: usize, noise: f32, rng: &mut Rng) -> Tensor {
+    let mut out = t.f32s().to_vec();
+    while out.len() < d2 {
+        out.push(rng.range_f32(-noise, noise));
+    }
+    Tensor::from_f32(&[d2], out)
+}
+
+impl GrowthOperator for DirectCopy {
+    fn name(&self) -> &'static str {
+        "direct_copy"
+    }
+
+    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+        let mut rng = Rng::new(0xD1DC);
+        let d2 = cfg_l.dim;
+        let f2 = cfg_l.ffn();
+        let mut out = Store::new();
+        for (name, t) in small.iter() {
+            if name.starts_with('L') || name.starts_with('C') {
+                continue; // layers handled below
+            }
+            let grown = match name.as_str() {
+                "emb_tok" | "emb_pos" => corner_embed(t, t.shape[0], d2, self.noise, &mut rng),
+                "mlm_bias" | "head_b" | "span_b" => t.clone(),
+                "final_ln_g" => grow_ln(t, d2, 1.0),
+                "final_ln_b" => grow_ln(t, d2, 0.0),
+                "head_w" | "span_w" => corner_embed(t, t.shape[0], d2, self.noise, &mut rng),
+                "emb_patch_w" => corner_embed(t, d2, t.shape[1], self.noise, &mut rng),
+                "emb_patch_b" | "emb_cls" => grow_vec(t, d2, self.noise, &mut rng),
+                _ => t.clone(),
+            };
+            out.insert(name.clone(), grown);
+        }
+        for l in 0..cfg_l.layers {
+            let src = l % cfg_s.layers; // stack pattern for extra depth
+            for suffix in layer_suffixes(cfg_s) {
+                let t = small.expect(&layer_key(src, suffix));
+                let grown = match suffix {
+                    "q_w" | "k_w" | "v_w" | "o_w" => corner_embed(t, d2, d2, self.noise, &mut rng),
+                    "fc1_w" => corner_embed(t, f2, d2, self.noise, &mut rng),
+                    "fc2_w" => corner_embed(t, d2, f2, self.noise, &mut rng),
+                    "fc1_b" => grow_vec(t, f2, self.noise, &mut rng),
+                    "ln1_g" | "ln2_g" => grow_ln(t, d2, 1.0),
+                    "ln1_b" | "ln2_b" => grow_ln(t, d2, 0.0),
+                    _ => grow_vec(t, d2, self.noise, &mut rng),
+                };
+                out.insert(layer_key(l, suffix), grown);
+            }
+        }
+        out
+    }
+}
+
+/// LN parameters extend with their neutral element (gain 1, bias 0).
+fn grow_ln(t: &Tensor, d2: usize, neutral: f32) -> Tensor {
+    let mut out = t.f32s().to_vec();
+    out.resize(d2, neutral);
+    Tensor::from_f32(&[d2], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::{mk_cfg, small_store};
+
+    #[test]
+    fn corner_preserved_noise_bounded() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(2, 12, 3);
+        let small = small_store(&cs);
+        let big = DirectCopy::default().grow(&small, &cs, &cl);
+        let (s, b) = (small.expect("L00_q_w"), big.expect("L00_q_w"));
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(s.at2(i, j), b.at2(i, j));
+            }
+        }
+        assert!(b.at2(10, 10).abs() <= 0.01);
+    }
+
+    #[test]
+    fn ln_gains_extend_with_ones() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(2, 12, 3);
+        let big = DirectCopy::default().grow(&small_store(&cs), &cs, &cl);
+        let g = big.expect("L00_ln1_g");
+        assert_eq!(&g.f32s()[8..], &[1.0, 1.0, 1.0, 1.0]);
+        let b = big.expect("L01_ln2_b");
+        assert_eq!(&b.f32s()[8..], &[0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn depth_growth_stacks() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 8, 2);
+        let big = DirectCopy { noise: 0.0 }.grow(&small_store(&cs), &cs, &cl);
+        assert_eq!(big.expect("L02_fc1_b"), big.expect("L00_fc1_b"));
+    }
+
+    #[test]
+    fn all_target_tensors_present() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(3, 12, 3);
+        let big = DirectCopy::default().grow(&small_store(&cs), &cs, &cl);
+        assert_eq!(big.with_prefix("L02_").len(), 16);
+        assert_eq!(big.expect("emb_tok").shape, vec![64, 12]);
+    }
+}

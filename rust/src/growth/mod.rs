@@ -1,0 +1,89 @@
+//! The growth-operator zoo: every baseline the paper compares against,
+//! implemented natively on the named tensor store (§3.1 and Fig. 6).
+//!
+//! * [`direct_copy`] — copy into the top-left corner, random elsewhere (Wei et al. 2016)
+//! * [`net2net`] — function-preserving width expansion (FPI; Chen et al. 2015 / bert2BERT)
+//! * [`aki`] — advanced knowledge initialization (bert2BERT, Chen et al. 2021)
+//! * [`stacking`] — StackBERT / interpolation / MSLT depth growth (Gong et al. 2019 etc.)
+//!
+//! LiGO itself is *learned*, so its apply path runs through the
+//! `ligo_apply_*` artifact (see coordinator::growth_manager); Prop. 1 tests
+//! verify the zoo's operators are special cases of the LiGO family.
+
+pub mod aki;
+pub mod direct_copy;
+pub mod net2net;
+pub mod stacking;
+#[doc(hidden)]
+pub mod testutil;
+pub mod width;
+
+use crate::config::ModelConfig;
+use crate::tensor::store::Store;
+
+/// A parameter-space growth operator: small params -> large params.
+pub trait GrowthOperator {
+    fn name(&self) -> &'static str;
+    /// Grow `small` (trained under `small_cfg`) into `large_cfg`'s shapes.
+    fn grow(&self, small: &Store, small_cfg: &ModelConfig, large_cfg: &ModelConfig) -> Store;
+}
+
+/// Operator registry by CLI name.
+pub fn by_name(name: &str) -> Option<Box<dyn GrowthOperator>> {
+    match name {
+        "direct_copy" => Some(Box::new(direct_copy::DirectCopy::default())),
+        "net2net" | "fpi" => Some(Box::new(net2net::Net2Net::default())),
+        "aki" | "bert2bert" => Some(Box::new(aki::Aki::default())),
+        "stackbert" => Some(Box::new(stacking::StackBert)),
+        "interpolation" | "interbert" => Some(Box::new(stacking::Interpolation)),
+        "msl" | "mslt" => Some(Box::new(stacking::Mslt)),
+        _ => None,
+    }
+}
+
+/// All zoo names (for `ligo inspect operators`).
+pub const ALL: [&str; 6] = [
+    "direct_copy",
+    "net2net",
+    "aki",
+    "stackbert",
+    "interpolation",
+    "mslt",
+];
+
+/// Names of per-layer tensor suffixes for a family (used by every operator).
+pub fn layer_suffixes(cfg: &ModelConfig) -> Vec<&'static str> {
+    let mut v = vec![
+        "q_w", "q_b", "k_w", "k_b", "v_w", "v_b", "o_w", "o_b", "ln1_g", "ln1_b",
+        "fc1_w", "fc1_b", "fc2_w", "fc2_b", "ln2_g", "ln2_b",
+    ];
+    if cfg.family == "cait" {
+        v.push("ls1");
+        v.push("ls2");
+    }
+    v
+}
+
+pub fn layer_key(l: usize, suffix: &str) -> String {
+    format!("L{l:02}_{suffix}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all() {
+        for name in ALL {
+            assert!(by_name(name).is_some(), "{name}");
+        }
+        assert!(by_name("ligo").is_none()); // LiGO goes through the manager
+        assert!(by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn layer_keys_zero_padded() {
+        assert_eq!(layer_key(3, "q_w"), "L03_q_w");
+        assert_eq!(layer_key(11, "ln1_g"), "L11_ln1_g");
+    }
+}

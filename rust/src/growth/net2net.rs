@@ -1,0 +1,228 @@
+//! Net2Net / FPI (function-preserving initialization) — Chen et al. 2015,
+//! as adapted to transformers by bert2BERT (paper Eq. 2).
+//!
+//! Width: every feature dimension grows by neuron duplication through a
+//! selection map; in-dimensions are normalized by multiplicity (D^-1 in
+//! Eq. 2) so each layer's function is preserved. One map is used for the
+//! residual stream (like the paper's B_emb tying) and one for the FFN inner
+//! dim. LayerNorm makes preservation approximate at the model level
+//! (duplicated features shift LN statistics); tests assert closeness, not
+//! equality.
+//!
+//! Depth: new layers are near-identity blocks (zeroed output projections),
+//! the transformer analog of Net2Net's identity layers.
+
+use crate::config::ModelConfig;
+use crate::tensor::{store::Store, Tensor};
+use crate::util::rng::Rng;
+
+use super::width::WidthMap;
+use super::{layer_key, layer_suffixes, GrowthOperator};
+
+#[derive(Debug, Default)]
+pub struct Net2Net {
+    /// Use the deterministic cyclic map instead of random selection.
+    pub cyclic: bool,
+}
+
+/// Width-grow every tensor of `small` into the large dims, preserving layer
+/// count. Shared by Net2Net / AKI / the stacking family.
+pub fn grow_width(
+    small: &Store,
+    cfg_s: &ModelConfig,
+    cfg_l: &ModelConfig,
+    emb_map: &WidthMap,
+    ffn_map: &WidthMap,
+    normalize: bool,
+) -> Store {
+    let mut out = Store::new();
+    for (name, t) in small.iter() {
+        let grown = grow_width_tensor(name, t, cfg_s, emb_map, ffn_map, normalize);
+        out.insert(name.clone(), grown);
+    }
+    let _ = cfg_l;
+    out
+}
+
+/// Width-grow a single named tensor according to its role.
+pub fn grow_width_tensor(
+    name: &str,
+    t: &Tensor,
+    cfg_s: &ModelConfig,
+    emb: &WidthMap,
+    ffn: &WidthMap,
+    normalize: bool,
+) -> Tensor {
+    let d1 = cfg_s.dim;
+    let key = name.split_once('_').map(|(_, k)| k).unwrap_or(name);
+    match key {
+        // (V, D) / (S, D) / (T, D): grow the column (feature) dim
+        _ if name == "emb_tok" || name == "emb_pos" => emb.expand_cols(t, false),
+        _ if name == "mlm_bias" || name == "head_b" || name == "span_b" => t.clone(),
+        _ if name == "emb_cls" || name == "emb_patch_b" => emb.expand_vec(t),
+        _ if name == "emb_patch_w" => emb.expand_rows(t),
+        _ if name == "head_w" || name == "span_w" => emb.expand_cols(t, normalize),
+        _ if name == "final_ln_g" || name == "final_ln_b" => emb.expand_vec(t),
+        // per-layer tensors (prefix "Lxx_" / "Cxx_")
+        "q_w" | "k_w" | "v_w" => emb.expand_cols(&emb.expand_rows(t), normalize),
+        "o_w" => emb.expand_cols(&emb.expand_rows(t), normalize),
+        "q_b" | "k_b" | "v_b" | "o_b" | "ln1_g" | "ln1_b" | "ln2_g" | "ln2_b" | "ls1" | "ls2" => {
+            emb.expand_vec(t)
+        }
+        "fc1_w" => emb_then_ffn(t, emb, ffn, normalize),
+        "fc1_b" => ffn.expand_vec(t),
+        "fc2_w" => ffn_then_emb(t, emb, ffn, normalize),
+        "fc2_b" => emb.expand_vec(t),
+        other => panic!("grow_width: unknown tensor '{name}' (key '{other}', d1={d1})"),
+    }
+}
+
+fn emb_then_ffn(t: &Tensor, emb: &WidthMap, ffn: &WidthMap, normalize: bool) -> Tensor {
+    // (F, D): rows by ffn map, cols by emb map
+    ffn.expand_rows(&emb.expand_cols(t, normalize))
+}
+
+fn ffn_then_emb(t: &Tensor, emb: &WidthMap, ffn: &WidthMap, normalize: bool) -> Tensor {
+    // (D, F): rows by emb map, cols by ffn map
+    emb.expand_rows(&ffn.expand_cols(t, normalize))
+}
+
+/// Build a near-identity transformer block at layer `l` from a template:
+/// copies the template's LN/in-projections but zeroes the output
+/// projections, making the residual branch a no-op.
+fn identity_block(out: &mut Store, template_layer: usize, l: usize, cfg: &ModelConfig) {
+    for suffix in layer_suffixes(cfg) {
+        let src = out.expect(&layer_key(template_layer, suffix)).clone();
+        let t = if suffix == "o_w" || suffix == "fc2_w" || suffix == "o_b" || suffix == "fc2_b" {
+            Tensor::zeros(&src.shape)
+        } else {
+            src
+        };
+        out.insert(layer_key(l, suffix), t);
+    }
+}
+
+impl GrowthOperator for Net2Net {
+    fn name(&self) -> &'static str {
+        "net2net"
+    }
+
+    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+        let mut rng = Rng::new(0xFB1);
+        let emb_map = if self.cyclic {
+            WidthMap::cyclic(cfg_s.dim, cfg_l.dim)
+        } else {
+            WidthMap::random(cfg_s.dim, cfg_l.dim, &mut rng)
+        };
+        let ffn_map = if self.cyclic {
+            WidthMap::cyclic(cfg_s.ffn(), cfg_l.ffn())
+        } else {
+            WidthMap::random(cfg_s.ffn(), cfg_l.ffn(), &mut rng)
+        };
+        let mut out = grow_width(small, cfg_s, cfg_l, &emb_map, &ffn_map, true);
+        // depth: append near-identity blocks
+        for l in cfg_s.layers..cfg_l.layers {
+            identity_block(&mut out, cfg_s.layers - 1, l, cfg_s);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::init::det_fill;
+
+    fn cfgs() -> (ModelConfig, ModelConfig) {
+        let mk = |layers, dim, heads| ModelConfig {
+            name: "t".into(),
+            family: "bert".into(),
+            layers,
+            dim,
+            heads,
+            vocab: 64,
+            seq: 16,
+            batch: 4,
+            img: 0,
+            patch: 0,
+            channels: 3,
+            n_classes: 0,
+            cls_layers: 0,
+            ffn_mult: 4,
+        };
+        (mk(2, 8, 2), mk(4, 12, 3))
+    }
+
+    fn small_store(cfg: &ModelConfig) -> Store {
+        let mut s = Store::new();
+        s.insert("emb_tok", det_fill("emb_tok", &[cfg.vocab, cfg.dim], 0));
+        s.insert("emb_pos", det_fill("emb_pos", &[cfg.seq, cfg.dim], 0));
+        s.insert("mlm_bias", det_fill("mlm_bias", &[cfg.vocab], 0));
+        s.insert("final_ln_g", det_fill("final_ln_g", &[cfg.dim], 0));
+        s.insert("final_ln_b", det_fill("final_ln_b", &[cfg.dim], 0));
+        for l in 0..cfg.layers {
+            for suf in layer_suffixes(cfg) {
+                let shape: Vec<usize> = match suf {
+                    "q_w" | "k_w" | "v_w" | "o_w" => vec![cfg.dim, cfg.dim],
+                    "fc1_w" => vec![cfg.ffn(), cfg.dim],
+                    "fc2_w" => vec![cfg.dim, cfg.ffn()],
+                    "fc1_b" => vec![cfg.ffn()],
+                    _ => vec![cfg.dim],
+                };
+                s.insert(layer_key(l, suf), det_fill(&layer_key(l, suf), &shape, 0));
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn grows_to_target_shapes() {
+        let (cs, cl) = cfgs();
+        let small = small_store(&cs);
+        let big = Net2Net::default().grow(&small, &cs, &cl);
+        assert_eq!(big.expect("emb_tok").shape, vec![64, 12]);
+        assert_eq!(big.expect(&layer_key(3, "fc1_w")).shape, vec![48, 12]);
+        assert_eq!(big.expect(&layer_key(0, "q_w")).shape, vec![12, 12]);
+        // all 4 layers present
+        assert_eq!(big.with_prefix("L03_").len(), 16);
+    }
+
+    #[test]
+    fn new_layers_are_identity_blocks() {
+        let (cs, cl) = cfgs();
+        let big = Net2Net::default().grow(&small_store(&cs), &cs, &cl);
+        assert!(big.expect(&layer_key(2, "o_w")).f32s().iter().all(|&x| x == 0.0));
+        assert!(big.expect(&layer_key(2, "fc2_w")).f32s().iter().all(|&x| x == 0.0));
+        assert!(big.expect(&layer_key(2, "q_w")).f32s().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn width_growth_preserves_linear_function() {
+        // y = W x preserved through duplicate-inputs + normalized columns:
+        // simulate the residual stream: x_large[j] = x[map[j]]
+        let (cs, cl) = cfgs();
+        let small = small_store(&cs);
+        let emb = WidthMap::cyclic(cs.dim, cl.dim);
+        let ffn = WidthMap::cyclic(cs.ffn(), cl.ffn());
+        let grown = grow_width(&small, &cs, &cl, &emb, &ffn, true);
+        let w = small.expect(&layer_key(0, "q_w"));
+        let wl = grown.expect(&layer_key(0, "q_w"));
+        let x: Vec<f32> = (0..cs.dim).map(|i| (i as f32 * 0.37).sin()).collect();
+        let xl: Vec<f32> = emb.map.iter().map(|&s| x[s]).collect();
+        for i in 0..cs.dim {
+            let orig: f32 = (0..cs.dim).map(|j| w.at2(i, j) * x[j]).sum();
+            let grown_v: f32 = (0..cl.dim).map(|j| wl.at2(i, j) * xl[j]).sum();
+            assert!((orig - grown_v).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn cyclic_mode_is_deterministic() {
+        let (cs, cl) = cfgs();
+        let small = small_store(&cs);
+        let op = Net2Net { cyclic: true };
+        let a = op.grow(&small, &cs, &cl);
+        let b = op.grow(&small, &cs, &cl);
+        assert_eq!(a.expect("emb_tok"), b.expect("emb_tok"));
+    }
+}

@@ -1,0 +1,157 @@
+//! Depth-growth family (paper Eq. 1):
+//!
+//! * **StackBERT** (Gong et al. 2019): W_l_new = W_{l mod L1} — duplicate the
+//!   whole small model on top of itself.
+//! * **Interpolation** (InterBERT; Chang et al. 2017, Dong et al. 2020):
+//!   W_l_new = W_{floor(l/k)} — interleave each layer k times (the neural-ODE
+//!   "finer time-step" view).
+//! * **MSLT** (Yang et al. 2020): top-layer duplication; the multi-stage
+//!   freeze schedule lives in the trainer (`coordinator::strategies`), this
+//!   operator provides its initialization.
+//!
+//! When the pair also grows width (e.g. BERT-Small -> BERT-Base), these
+//! operators first apply deterministic cyclic FPI width growth — the
+//! convention the paper's baselines need to produce valid shapes.
+
+use crate::config::ModelConfig;
+use crate::tensor::store::Store;
+
+use super::net2net::grow_width;
+use super::width::WidthMap;
+use super::{layer_key, layer_suffixes, GrowthOperator};
+
+/// Width-grow first (cyclic FPI) if dims differ; identity otherwise.
+fn width_stage(small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+    if cfg_s.dim == cfg_l.dim && cfg_s.ffn() == cfg_l.ffn() {
+        return small.clone();
+    }
+    let emb = WidthMap::cyclic(cfg_s.dim, cfg_l.dim);
+    let ffn = WidthMap::cyclic(cfg_s.ffn(), cfg_l.ffn());
+    grow_width(small, cfg_s, cfg_l, &emb, &ffn, true)
+}
+
+/// Assemble the large store taking layer l from `src_layer(l)`.
+fn depth_map(wide: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig, src: impl Fn(usize) -> usize) -> Store {
+    let mut out = Store::new();
+    // non-layer tensors copy through
+    for (name, t) in wide.iter() {
+        if !name.starts_with('L') {
+            out.insert(name.clone(), t.clone());
+        }
+    }
+    for l in 0..cfg_l.layers {
+        let s = src(l).min(cfg_s.layers - 1);
+        for suffix in layer_suffixes(cfg_s) {
+            out.insert(layer_key(l, suffix), wide.expect(&layer_key(s, suffix)).clone());
+        }
+    }
+    out
+}
+
+/// StackBERT: duplicate the whole block stack (W_l = W_{l mod L1}).
+#[derive(Debug)]
+pub struct StackBert;
+
+impl GrowthOperator for StackBert {
+    fn name(&self) -> &'static str {
+        "stackbert"
+    }
+    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+        let wide = width_stage(small, cfg_s, cfg_l);
+        depth_map(&wide, cfg_s, cfg_l, |l| l % cfg_s.layers)
+    }
+}
+
+/// Interpolation: interleave (W_l = W_{floor(l/k)}).
+#[derive(Debug)]
+pub struct Interpolation;
+
+impl GrowthOperator for Interpolation {
+    fn name(&self) -> &'static str {
+        "interpolation"
+    }
+    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+        let wide = width_stage(small, cfg_s, cfg_l);
+        let k = (cfg_l.layers + cfg_s.layers - 1) / cfg_s.layers;
+        depth_map(&wide, cfg_s, cfg_l, move |l| l / k.max(1))
+    }
+}
+
+/// MSLT initialization: keep the small stack at the bottom, duplicate the
+/// *top* layer into the new slots (the layers MSLT's stages then train).
+#[derive(Debug)]
+pub struct Mslt;
+
+impl GrowthOperator for Mslt {
+    fn name(&self) -> &'static str {
+        "mslt"
+    }
+    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+        let wide = width_stage(small, cfg_s, cfg_l);
+        let top = cfg_s.layers - 1;
+        depth_map(&wide, cfg_s, cfg_l, move |l| l.min(top))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::{mk_cfg, small_store};
+
+    #[test]
+    fn stackbert_pattern() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 8, 2);
+        let big = StackBert.grow(&small_store(&cs), &cs, &cl);
+        assert_eq!(big.expect("L02_q_w"), big.expect("L00_q_w"));
+        assert_eq!(big.expect("L03_q_w"), big.expect("L01_q_w"));
+        assert_ne!(big.expect("L02_q_w"), big.expect("L03_q_w"));
+    }
+
+    #[test]
+    fn interpolation_pattern() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 8, 2);
+        let big = Interpolation.grow(&small_store(&cs), &cs, &cl);
+        // k = 2: layers [0,0,1,1]
+        assert_eq!(big.expect("L01_q_w"), big.expect("L00_q_w"));
+        assert_eq!(big.expect("L03_q_w"), big.expect("L02_q_w"));
+        assert_ne!(big.expect("L00_q_w"), big.expect("L02_q_w"));
+    }
+
+    #[test]
+    fn mslt_duplicates_top() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 8, 2);
+        let big = Mslt.grow(&small_store(&cs), &cs, &cl);
+        assert_eq!(big.expect("L02_q_w"), big.expect("L01_q_w"));
+        assert_eq!(big.expect("L03_q_w"), big.expect("L01_q_w"));
+    }
+
+    #[test]
+    fn combined_width_and_depth() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let big = StackBert.grow(&small_store(&cs), &cs, &cl);
+        assert_eq!(big.expect("L03_q_w").shape, vec![12, 12]);
+        assert_eq!(big.expect("emb_tok").shape, vec![64, 12]);
+        assert_eq!(big.expect("L03_fc1_w").shape, vec![48, 12]);
+    }
+
+    #[test]
+    fn depth_only_keeps_width_tensors_identical() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(6, 8, 2);
+        let small = small_store(&cs);
+        let big = StackBert.grow(&small, &cs, &cl);
+        assert_eq!(big.expect("emb_tok"), small.expect("emb_tok"));
+    }
+
+    #[test]
+    fn non_divisible_depth_ratio_clamps() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(5, 8, 2); // 2 -> 5 layers
+        let big = Interpolation.grow(&small_store(&cs), &cs, &cl);
+        assert_eq!(big.with_prefix("L04_").len(), 16);
+    }
+}

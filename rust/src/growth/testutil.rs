@@ -1,0 +1,52 @@
+//! Shared fixtures for growth-operator tests (and the operator benches):
+//! synthetic configs and deterministically-filled parameter stores with the
+//! exact naming scheme the L2 models use.
+
+use crate::config::ModelConfig;
+use crate::tensor::init::det_fill;
+use crate::tensor::store::Store;
+
+use super::{layer_key, layer_suffixes};
+
+/// A bert-family config with the given size.
+pub fn mk_cfg(layers: usize, dim: usize, heads: usize) -> ModelConfig {
+    ModelConfig {
+        name: format!("bert_{layers}x{dim}"),
+        family: "bert".into(),
+        layers,
+        dim,
+        heads,
+        vocab: 64,
+        seq: 16,
+        batch: 4,
+        img: 0,
+        patch: 0,
+        channels: 3,
+        n_classes: 0,
+        cls_layers: 0,
+        ffn_mult: 4,
+    }
+}
+
+/// Deterministic full parameter store for a bert-family config.
+pub fn small_store(cfg: &ModelConfig) -> Store {
+    let mut s = Store::new();
+    s.insert("emb_tok", det_fill("emb_tok", &[cfg.vocab, cfg.dim], 0));
+    s.insert("emb_pos", det_fill("emb_pos", &[cfg.seq, cfg.dim], 0));
+    s.insert("mlm_bias", det_fill("mlm_bias", &[cfg.vocab], 0));
+    s.insert("final_ln_g", det_fill("final_ln_g", &[cfg.dim], 0));
+    s.insert("final_ln_b", det_fill("final_ln_b", &[cfg.dim], 0));
+    for l in 0..cfg.layers {
+        for suf in layer_suffixes(cfg) {
+            let shape: Vec<usize> = match suf {
+                "q_w" | "k_w" | "v_w" | "o_w" => vec![cfg.dim, cfg.dim],
+                "fc1_w" => vec![cfg.ffn(), cfg.dim],
+                "fc2_w" => vec![cfg.dim, cfg.ffn()],
+                "fc1_b" => vec![cfg.ffn()],
+                _ => vec![cfg.dim],
+            };
+            s.insert(layer_key(l, suf), det_fill(&layer_key(l, suf), &shape, 0));
+        }
+    }
+    s
+}

@@ -1,0 +1,165 @@
+//! Width-expansion machinery shared by Net2Net/AKI/DirectCopy: selection
+//! maps over feature dimensions and row/column expansion with optional
+//! Net2Net multiplicity normalization (paper Eq. 2).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// A map from each of the `d_large` output features to a source feature in
+/// `[0, d_small)`. The first `d_small` entries are the identity; the
+/// remainder select which source neuron each new neuron duplicates.
+#[derive(Debug, Clone)]
+pub struct WidthMap {
+    pub d_small: usize,
+    pub map: Vec<usize>,
+    /// counts[i] = how many large features copy small feature i (>= 1).
+    pub counts: Vec<usize>,
+}
+
+impl WidthMap {
+    /// Random selection (Net2Net's random neuron duplication).
+    pub fn random(d_small: usize, d_large: usize, rng: &mut Rng) -> WidthMap {
+        assert!(d_large >= d_small);
+        let mut map: Vec<usize> = (0..d_small).collect();
+        for _ in d_small..d_large {
+            map.push(rng.below(d_small));
+        }
+        Self::from_map(d_small, map)
+    }
+
+    /// Deterministic cyclic selection (new feature j copies j mod d_small) —
+    /// the pattern LiGO's M is initialized with (Prop. 1).
+    pub fn cyclic(d_small: usize, d_large: usize) -> WidthMap {
+        let map = (0..d_large).map(|j| j % d_small).collect();
+        Self::from_map(d_small, map)
+    }
+
+    fn from_map(d_small: usize, map: Vec<usize>) -> WidthMap {
+        let mut counts = vec![0usize; d_small];
+        for &s in &map {
+            counts[s] += 1;
+        }
+        WidthMap { d_small, map, counts }
+    }
+
+    pub fn d_large(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Expand the row (out) dimension: new_row[j] = row[map[j]].
+    pub fn expand_rows(&self, t: &Tensor) -> Tensor {
+        let (r, c) = (t.shape[0], t.shape[1]);
+        assert_eq!(r, self.d_small, "row dim mismatch");
+        let src = t.f32s();
+        let mut out = Vec::with_capacity(self.d_large() * c);
+        for &s in &self.map {
+            out.extend_from_slice(&src[s * c..(s + 1) * c]);
+        }
+        Tensor::from_f32(&[self.d_large(), c], out)
+    }
+
+    /// Expand the column (in) dimension; if `normalize`, each copied column
+    /// is divided by its source's multiplicity (function preservation,
+    /// Eq. 2's D^-1).
+    pub fn expand_cols(&self, t: &Tensor, normalize: bool) -> Tensor {
+        let (r, c) = (t.shape[0], t.shape[1]);
+        assert_eq!(c, self.d_small, "col dim mismatch");
+        let src = t.f32s();
+        let dl = self.d_large();
+        let mut out = vec![0.0f32; r * dl];
+        for i in 0..r {
+            for (j, &s) in self.map.iter().enumerate() {
+                let v = src[i * c + s];
+                out[i * dl + j] = if normalize { v / self.counts[s] as f32 } else { v };
+            }
+        }
+        Tensor::from_f32(&[r, dl], out)
+    }
+
+    /// Expand a vector (bias / LN parameter) along its only dimension.
+    pub fn expand_vec(&self, t: &Tensor) -> Tensor {
+        assert_eq!(t.numel(), self.d_small);
+        let src = t.f32s();
+        let out: Vec<f32> = self.map.iter().map(|&s| src[s]).collect();
+        Tensor::from_f32(&[self.d_large()], out)
+    }
+}
+
+/// Grow a (rows, cols) matrix into (r2, c2) copying into the top-left corner
+/// and filling the rest with scaled uniform noise (DirectCopy).
+pub fn corner_embed(t: &Tensor, r2: usize, c2: usize, scale: f32, rng: &mut Rng) -> Tensor {
+    let (r, c) = (t.shape[0], t.shape[1]);
+    assert!(r2 >= r && c2 >= c);
+    let src = t.f32s();
+    let mut out = vec![0.0f32; r2 * c2];
+    for (i, row) in out.chunks_exact_mut(c2).enumerate() {
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = if i < r && j < c {
+                src[i * c + j]
+            } else {
+                rng.range_f32(-scale, scale)
+            };
+        }
+    }
+    Tensor::from_f32(&[r2, c2], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn cyclic_map_counts() {
+        let m = WidthMap::cyclic(4, 6);
+        assert_eq!(m.map, vec![0, 1, 2, 3, 0, 1]);
+        assert_eq!(m.counts, vec![2, 2, 1, 1]);
+    }
+
+    #[test]
+    fn expand_rows_copies() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let m = WidthMap::cyclic(2, 3);
+        let e = m.expand_rows(&t);
+        assert_eq!(e.shape, vec![3, 3]);
+        assert_eq!(&e.f32s()[6..9], &[1., 2., 3.]); // row 2 copies row 0
+    }
+
+    #[test]
+    fn expand_cols_normalized_preserves_rowsum_functionality() {
+        // sum over duplicated+normalized in-dims equals the original matvec
+        // against a duplicated input vector.
+        prop::check("net2net col normalization", 25, |g| {
+            let ds = g.usize_in(2, 6);
+            let dl = g.usize_in(ds, 10);
+            let r = g.usize_in(1, 5);
+            let m = WidthMap::random(ds, dl, &mut crate::util::rng::Rng::new(g.seed));
+            let t = Tensor::from_f32(&[r, ds], g.vec_f32(r * ds, -1.0, 1.0));
+            let x: Vec<f32> = g.vec_f32(ds, -1.0, 1.0);
+            // duplicated input: x_large[j] = x[map[j]]
+            let xl: Vec<f32> = m.map.iter().map(|&s| x[s]).collect();
+            let e = m.expand_cols(&t, true);
+            for i in 0..r {
+                let orig: f32 = (0..ds).map(|j| t.at2(i, j) * x[j]).sum();
+                let grown: f32 = (0..dl).map(|j| e.at2(i, j) * xl[j]).sum();
+                assert!((orig - grown).abs() < 1e-4, "{orig} vs {grown}");
+            }
+        });
+    }
+
+    #[test]
+    fn expand_vec_maps() {
+        let t = Tensor::from_f32(&[3], vec![7., 8., 9.]);
+        let m = WidthMap::cyclic(3, 5);
+        assert_eq!(m.expand_vec(&t).f32s(), &[7., 8., 9., 7., 8.]);
+    }
+
+    #[test]
+    fn corner_embed_preserves_block() {
+        let t = Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let e = corner_embed(&t, 3, 4, 0.01, &mut Rng::new(0));
+        assert_eq!(e.at2(0, 0), 1.0);
+        assert_eq!(e.at2(1, 1), 4.0);
+        assert!(e.at2(2, 3).abs() <= 0.01);
+    }
+}

@@ -1,0 +1,29 @@
+//! # LiGO — Learning to Grow Pretrained Models for Efficient Transformer Training
+//!
+//! A full-system reproduction of Wang et al. (ICLR 2023) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1 (Pallas)** — fused LiGO width-expansion and flash-attention kernels
+//!   (`python/compile/kernels/`), lowered AOT.
+//! * **L2 (JAX)** — the transformer families and the LiGO operator
+//!   (`python/compile/`), lowered once to HLO text artifacts.
+//! * **L3 (this crate)** — the coordinator: PJRT runtime, optimizer, data
+//!   pipeline, the growth-operator zoo, the LiGO growth manager, experiment
+//!   harness and CLI. Python never runs at runtime.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod growth;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use config::{ModelConfig, Registry, TrainConfig};
+pub use runtime::Runtime;
+pub use tensor::store::Store;
+pub use tensor::Tensor;

@@ -1,0 +1,187 @@
+//! `ligo` — the coordinator CLI.
+//!
+//! Subcommands:
+//!   train      --model NAME [--steps N --lr F --seed N --out DIR]
+//!   grow       --from SMALL --to LARGE [--op ligo|stackbert|...] [--m-steps N]
+//!   eval       --model NAME --ckpt PATH
+//!   experiment ID|all [--scale F --out DIR]     (fig2..fig8, table1..table6)
+//!   inspect    configs|operators|artifacts
+//!
+//! Python never runs here: artifacts must exist (run `make artifacts` once).
+
+use anyhow::{bail, Context, Result};
+
+use ligo::config::{artifacts_dir, Registry};
+use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
+use ligo::coordinator::trainer::Trainer;
+use ligo::data::corpus::Corpus;
+use ligo::experiments;
+use ligo::runtime::Runtime;
+use ligo::tensor::io;
+use ligo::util::cli::Args;
+
+fn main() {
+    ligo::util::logging::init_from_env();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: ligo <train|grow|eval|experiment|inspect> [options]\n\
+         \n\
+         ligo train --model bert_small --steps 300 --out reports\n\
+         ligo grow --from bert_small --to bert_base --op ligo --m-steps 100\n\
+         ligo eval --model bert_base --ckpt reports/ckpt/bert_base_LiGO_600steps.lgck\n\
+         ligo experiment fig2 --scale 1.0 --out reports\n\
+         ligo experiment all --scale 0.25\n\
+         ligo inspect configs"
+    );
+    std::process::exit(2);
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let Some(cmd) = args.positional.first().map(String::as_str) else { usage() };
+    let out_dir = std::path::PathBuf::from(args.get("out").unwrap_or("reports"));
+    match cmd {
+        "train" => {
+            let rt = Runtime::cpu(artifacts_dir())?;
+            let reg = Registry::load(&artifacts_dir())?;
+            let name = args.get("model").context("--model required")?;
+            let cfg = reg.model(name)?.clone();
+            let steps = args.get_usize("steps", 300);
+            let corpus = Corpus::new(cfg.vocab.max(512), args.get_u64("seed", 0));
+            let params = Trainer::scratch_params(&rt, &cfg, args.get_u64("seed", 0))?;
+            let mut tc = ligo::experiments::common::recipe_for(&cfg, steps);
+            if let Some(lr) = args.get("lr") {
+                tc.lr = lr.parse().context("--lr")?;
+            }
+            let mut tr = Trainer::new(&rt, &cfg, tc, params)?;
+            let mut b = if cfg.is_vision() {
+                ligo::experiments::common::vision_batches(
+                    &ligo::data::vision::VisionTask::pretrain(), &cfg, 1)
+            } else {
+                ligo::experiments::common::text_batches(&corpus, &cfg, 1)
+            };
+            let curve = tr.run(name, &mut b, steps)?;
+            let path = out_dir.join("ckpt").join(format!("{name}_{steps}steps.lgck"));
+            io::save(&tr.params, &path)?;
+            println!(
+                "trained {name} {steps} steps: loss {:.4} -> {:.4}; saved {}",
+                curve.loss.first().unwrap(),
+                curve.final_loss(),
+                path.display()
+            );
+            ligo::coordinator::metrics::write_report(&out_dir, &format!("train_{name}"), &[curve])?;
+        }
+        "grow" => {
+            let rt = Runtime::cpu(artifacts_dir())?;
+            let reg = Registry::load(&artifacts_dir())?;
+            let from = reg.model(args.get("from").context("--from required")?)?.clone();
+            let to = reg.model(args.get("to").context("--to required")?)?.clone();
+            let op = args.get("op").unwrap_or("ligo");
+            let corpus = Corpus::new(to.vocab.max(512), 0);
+            let ckpt = match args.get("ckpt") {
+                Some(p) => io::load(p)?,
+                None => ligo::experiments::common::ensure_pretrained(
+                    &rt, &from, &corpus, args.get_usize("pretrain", 300), &out_dir)?,
+            };
+            let grown = if op == "ligo" {
+                let opts = LigoOptions {
+                    steps: args.get_usize("m-steps", 100),
+                    lr: args.get_f32("m-lr", 0.02),
+                    ..Default::default()
+                };
+                let c = corpus.clone();
+                let t = to.clone();
+                let mut mk = move |s: usize| {
+                    ligo::data::batches::mlm_batch(
+                        &c, &t, &mut ligo::util::rng::Rng::new(7000 + s as u64))
+                };
+                let g = ligo_grow(&rt, &from, &to, &ckpt, &mut mk, &opts)?;
+                println!("LiGO M-loss {:.4}, +{:.3e} FLOPs, {:.1}s", g.final_m_loss, g.extra_flops, g.wall_s);
+                g.params
+            } else {
+                let oper = ligo::growth::by_name(op)
+                    .with_context(|| format!("unknown operator '{op}'"))?;
+                oper.grow(&ckpt, &from, &to)
+            };
+            let path = out_dir
+                .join("ckpt")
+                .join(format!("{}_from_{}_{op}.lgck", to.name, from.name));
+            io::save(&grown, &path)?;
+            println!("grew {} -> {} via {op}: {} params, saved {}",
+                from.name, to.name, grown.param_count(), path.display());
+        }
+        "eval" => {
+            let rt = Runtime::cpu(artifacts_dir())?;
+            let reg = Registry::load(&artifacts_dir())?;
+            let name = args.get("model").context("--model required")?;
+            let cfg = reg.model(name)?.clone();
+            let params = io::load(args.get("ckpt").context("--ckpt required")?)?;
+            let fwd = rt.load(&format!("fwd_{name}"))?;
+            let corpus = Corpus::new(cfg.vocab.max(512), 0);
+            let cfg2 = cfg.clone();
+            let mut eb = move |i: usize| {
+                if cfg2.is_vision() {
+                    ligo::data::vision::VisionTask::pretrain()
+                        .batch(&cfg2, &mut ligo::util::rng::Rng::new(0xEEAA_0000 + i as u64))
+                } else {
+                    ligo::data::batches::mlm_batch(
+                        &corpus, &cfg2, &mut ligo::util::rng::Rng::new(0xEEAA_0000 + i as u64))
+                }
+            };
+            let (loss, metric) =
+                ligo::coordinator::trainer::eval_store(&fwd, &params, &mut eb, 16)?;
+            println!("{name}: loss {loss:.4} ppl {:.2} metric {metric:?}", loss.exp());
+        }
+        "experiment" => {
+            let rt = Runtime::cpu(artifacts_dir())?;
+            let reg = Registry::load(&artifacts_dir())?;
+            let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
+            let scale = args.get_f32("scale", 0.25) as f64;
+            experiments::run(&rt, &reg, id, scale, &out_dir)?;
+        }
+        "inspect" => {
+            let what = args.positional.get(1).map(String::as_str).unwrap_or("configs");
+            match what {
+                "configs" => {
+                    let reg = Registry::load(&artifacts_dir())?;
+                    println!("{:<16} {:>7} {:>6} {:>6} {:>9} {:>6} {:>12}",
+                        "name", "family", "layers", "dim", "vocab/img", "seq", "params");
+                    for (name, m) in &reg.models {
+                        println!(
+                            "{:<16} {:>7} {:>6} {:>6} {:>9} {:>6} {:>12}",
+                            name, m.family, m.layers, m.dim,
+                            if m.is_vision() { m.img } else { m.vocab },
+                            m.tokens(),
+                            reg.param_counts.get(name).copied().unwrap_or(0)
+                        );
+                    }
+                    println!("\ngrowth pairs:");
+                    for (s, t) in &reg.pairs {
+                        println!("  {s} -> {t}");
+                    }
+                }
+                "operators" => {
+                    for op in ligo::growth::ALL {
+                        println!("{op}");
+                    }
+                    println!("ligo (learned; via `ligo grow --op ligo`)");
+                }
+                "artifacts" => {
+                    let rt = Runtime::cpu(artifacts_dir())?;
+                    for a in rt.available() {
+                        println!("{a}");
+                    }
+                }
+                other => bail!("unknown inspect target '{other}'"),
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! The PJRT CPU client plus a compile cache of loaded artifacts.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::executable::Executable;
+use super::manifest::Manifest;
+use crate::log_info;
+
+/// Owns the PJRT client and a name -> compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: PathBuf,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime rooted at the artifacts directory.
+    pub fn cpu(artifacts: impl Into<PathBuf>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifacts: artifacts.into(),
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Default runtime at ./artifacts (or $LIGO_ARTIFACTS).
+    pub fn default_cpu() -> Result<Runtime> {
+        Self::cpu(crate::config::artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let manifest = Manifest::load(&self.artifacts, name)?;
+        let hlo_path = self.artifacts.join(format!("{name}.hlo.txt"));
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .with_context(|| format!("parse HLO text {hlo_path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of artifact '{name}'"))?;
+        log_info!(
+            "compiled artifact '{}' in {:.2}s ({} inputs, {} outputs)",
+            name,
+            t0.elapsed().as_secs_f64(),
+            manifest.inputs.len(),
+            manifest.outputs.len()
+        );
+        let exe = std::sync::Arc::new(Executable::new(manifest, exe));
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Forget a compiled artifact (frees the executable).
+    pub fn evict(&self, name: &str) {
+        self.cache.lock().unwrap().remove(name);
+    }
+
+    pub fn artifacts_dir(&self) -> &std::path::Path {
+        &self.artifacts
+    }
+
+    /// Names of artifacts present on disk (for `ligo inspect`).
+    pub fn available(&self) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.artifacts)
+            .map(|rd| {
+                rd.filter_map(|e| {
+                    let f = e.ok()?.file_name().into_string().ok()?;
+                    f.strip_suffix(".hlo.txt").map(str::to_string)
+                })
+                .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        names
+    }
+}

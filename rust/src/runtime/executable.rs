@@ -1,0 +1,117 @@
+//! A compiled artifact: PJRT executable + manifest + literal binding.
+//!
+//! `run(&[(group, &Store)])` gathers inputs in manifest order from named
+//! stores, executes, and scatters outputs back into named stores by group.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Manifest, TensorSpec};
+use crate::tensor::store::Store;
+use crate::tensor::{DType, Tensor, TensorData};
+
+pub struct Executable {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Outputs of a run, grouped: scalars by bare name, tensors by group.
+#[derive(Debug, Default)]
+pub struct RunOutputs {
+    pub scalars: Vec<(String, f32)>,
+    pub groups: std::collections::BTreeMap<String, Store>,
+}
+
+impl RunOutputs {
+    pub fn scalar(&self, name: &str) -> Option<f32> {
+        self.scalars.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+    pub fn group(&self, name: &str) -> Option<&Store> {
+        self.groups.get(name)
+    }
+    pub fn take_group(&mut self, name: &str) -> Option<Store> {
+        self.groups.remove(name)
+    }
+}
+
+fn to_literal(spec: &TensorSpec, t: &Tensor) -> Result<xla::Literal> {
+    if t.shape != spec.shape {
+        bail!(
+            "tensor '{}' shape {:?} != manifest {:?}",
+            spec.name,
+            t.shape,
+            spec.shape
+        );
+    }
+    let dims: Vec<i64> = spec.shape.iter().map(|d| *d as i64).collect();
+    let lit = match (&t.data, spec.dtype) {
+        (TensorData::F32(v), DType::F32) => xla::Literal::vec1(v.as_slice()),
+        (TensorData::I32(v), DType::I32) => xla::Literal::vec1(v.as_slice()),
+        _ => bail!("tensor '{}' dtype mismatch with manifest", spec.name),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+fn from_literal(spec: &TensorSpec, lit: &xla::Literal) -> Result<Tensor> {
+    Ok(match spec.dtype {
+        DType::F32 => Tensor::from_f32(&spec.shape, lit.to_vec::<f32>()?),
+        DType::I32 => Tensor::from_i32(&spec.shape, lit.to_vec::<i32>()?),
+    })
+}
+
+impl Executable {
+    pub(super) fn new(manifest: Manifest, exe: xla::PjRtLoadedExecutable) -> Executable {
+        Executable { manifest, exe }
+    }
+
+    /// Execute with inputs gathered from `(group, store)` bindings.
+    /// Every manifest input must resolve: group must be bound and the store
+    /// must contain the key.
+    pub fn run(&self, bindings: &[(&str, &Store)]) -> Result<RunOutputs> {
+        let mut literals = Vec::with_capacity(self.manifest.inputs.len());
+        for spec in &self.manifest.inputs {
+            let store = bindings
+                .iter()
+                .find(|(g, _)| *g == spec.group())
+                .map(|(_, s)| *s)
+                .with_context(|| format!("no binding for input group '{}'", spec.group()))?;
+            let tensor = store
+                .get(spec.key())
+                .with_context(|| format!("store '{}' missing tensor '{}'", spec.group(), spec.key()))?;
+            literals.push(to_literal(spec, tensor)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple()?;
+        if parts.len() != self.manifest.outputs.len() {
+            bail!(
+                "artifact '{}': {} outputs but manifest lists {}",
+                self.manifest.name,
+                parts.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        let mut out = RunOutputs::default();
+        for (spec, lit) in self.manifest.outputs.iter().zip(parts.iter()) {
+            let t = from_literal(spec, lit)?;
+            if spec.group().is_empty() {
+                out.scalars.push((spec.name.clone(), t.item()));
+            } else {
+                out.groups
+                    .entry(spec.group().to_string())
+                    .or_default()
+                    .insert(spec.key().to_string(), t);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total input bytes per call (diagnostics / perf accounting).
+    pub fn input_bytes(&self) -> usize {
+        self.manifest.inputs.iter().map(|s| s.numel() * 4).sum()
+    }
+
+    pub fn output_bytes(&self) -> usize {
+        self.manifest.outputs.iter().map(|s| s.numel() * 4).sum()
+    }
+}

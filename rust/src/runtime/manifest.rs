@@ -1,0 +1,149 @@
+//! Artifact manifests: the flattened input/output signature emitted by
+//! `python/compile/aot.py` next to each HLO text file.
+//!
+//! A manifest entry name is "group/tensor" (e.g. "params/L00_q_w",
+//! "grads/B_emb", "batch/tokens", "loss"). The order of entries is the
+//! positional order of PJRT arguments/results.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+/// One input or output slot of an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    /// Fully-qualified name: "group/name" or a bare scalar name ("loss").
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    /// The group prefix ("params", "batch", ...) or "" for bare names.
+    pub fn group(&self) -> &str {
+        self.name.split_once('/').map(|(g, _)| g).unwrap_or("")
+    }
+
+    /// The tensor name with the group stripped.
+    pub fn key(&self) -> &str {
+        self.name.split_once('/').map(|(_, k)| k).unwrap_or(&self.name)
+    }
+
+    pub fn numel(&self) -> usize {
+        crate::tensor::numel(&self.shape)
+    }
+}
+
+/// Parsed manifest for one artifact.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().context("spec list")?;
+    arr.iter()
+        .map(|e| {
+            let name = e.get("name").and_then(Json::as_str).context("name")?.to_string();
+            let shape = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = DType::parse(e.get("dtype").and_then(Json::as_str).context("dtype")?)?;
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(anyhow::Error::msg)?;
+        Ok(Manifest {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            inputs: parse_specs(j.get("inputs").context("inputs")?)?,
+            outputs: parse_specs(j.get("outputs").context("outputs")?)?,
+        })
+    }
+
+    pub fn load(artifacts: &Path, artifact: &str) -> Result<Manifest> {
+        let path = artifacts.join(format!("{artifact}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} — run `make artifacts`"))?;
+        Self::parse(&text)
+    }
+
+    /// Input specs belonging to a group, in positional order.
+    pub fn inputs_of(&self, group: &str) -> Vec<&TensorSpec> {
+        self.inputs.iter().filter(|s| s.group() == group).collect()
+    }
+
+    pub fn outputs_of(&self, group: &str) -> Vec<&TensorSpec> {
+        self.outputs.iter().filter(|s| s.group() == group).collect()
+    }
+
+    /// {name -> shape} for a group (e.g. to det-init a parameter store).
+    pub fn shapes_of(&self, group: &str) -> Vec<(String, Vec<usize>)> {
+        self.inputs_of(group)
+            .into_iter()
+            .map(|s| (s.key().to_string(), s.shape.clone()))
+            .collect()
+    }
+
+    /// Positional index of a named output.
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "grad_bert_small", "src_hash": "x",
+      "inputs": [
+        {"name": "params/L00_q_w", "shape": [48, 48], "dtype": "float32"},
+        {"name": "params/emb_tok", "shape": [512, 48], "dtype": "float32"},
+        {"name": "batch/tokens", "shape": [16, 32], "dtype": "int32"}
+      ],
+      "outputs": [
+        {"name": "loss", "shape": [], "dtype": "float32"},
+        {"name": "grads/L00_q_w", "shape": [48, 48], "dtype": "float32"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_groups() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "grad_bert_small");
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.inputs_of("params").len(), 2);
+        assert_eq!(m.inputs_of("batch")[0].key(), "tokens");
+        assert_eq!(m.inputs_of("batch")[0].dtype, DType::I32);
+        assert_eq!(m.outputs[0].group(), "");
+        assert_eq!(m.output_index("loss"), Some(0));
+        assert_eq!(m.output_index("grads/L00_q_w"), Some(1));
+    }
+
+    #[test]
+    fn shapes_of_extracts_keys() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let shapes = m.shapes_of("params");
+        assert_eq!(shapes[0], ("L00_q_w".to_string(), vec![48, 48]));
+        assert_eq!(shapes[1].1, vec![512, 48]);
+    }
+
+    #[test]
+    fn scalar_spec_numel_one() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.outputs[0].numel(), 1);
+    }
+}

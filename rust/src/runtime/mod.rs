@@ -1,0 +1,11 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by python at build
+//! time), compiles them once on the CPU PJRT client, and executes them from
+//! the coordinator's hot path. Python never runs here.
+
+pub mod client;
+pub mod executable;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use executable::Executable;
+pub use manifest::{Manifest, TensorSpec};

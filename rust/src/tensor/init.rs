@@ -1,0 +1,105 @@
+//! Deterministic parameter initialization — bit-identical to
+//! `python/compile/detinit.py` so that goldens emitted at AOT time validate
+//! the whole cross-language path.
+//!
+//! Scheme: seed = low32(FNV-1a(name) ^ global_seed); value_i derived from
+//! counter-based mix32(seed + i * GOLDEN); scale chosen by name suffix.
+
+use super::Tensor;
+use crate::util::rng::{fnv1a, mix32};
+
+const GOLDEN: u32 = 0x9E3779B9;
+
+/// The per-tensor init rule, by parameter name (mirrors detinit.tensor_scale).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitRule {
+    ConstOne,
+    ConstTenth,
+    Zero,
+    Uniform(f32),
+}
+
+pub fn rule_for(name: &str, shape: &[usize]) -> InitRule {
+    if name.ends_with("_g") {
+        return InitRule::ConstOne;
+    }
+    if name.ends_with("ls1") || name.ends_with("ls2") {
+        return InitRule::ConstTenth;
+    }
+    if name.ends_with("_b") || name == "mlm_bias" {
+        return InitRule::Zero;
+    }
+    if name.starts_with("emb_") || name == "head_w" || name == "span_w" {
+        return InitRule::Uniform(0.02);
+    }
+    if shape.len() == 2 {
+        let (fan_out, fan_in) = (shape[0] as f32, shape[1] as f32);
+        return InitRule::Uniform((6.0 / (fan_in + fan_out)).sqrt());
+    }
+    InitRule::Uniform(0.02)
+}
+
+/// Deterministically fill a named tensor (identical to python det_fill).
+pub fn det_fill(name: &str, shape: &[usize], global_seed: u64) -> Tensor {
+    let n = super::numel(shape);
+    match rule_for(name, shape) {
+        InitRule::ConstOne => Tensor::from_f32(shape, vec![1.0; n]),
+        InitRule::ConstTenth => Tensor::from_f32(shape, vec![0.1; n]),
+        InitRule::Zero => Tensor::zeros(shape),
+        InitRule::Uniform(scale) => {
+            let seed = ((fnv1a(name) ^ global_seed) & 0xFFFF_FFFF) as u32;
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n as u32 {
+                let z = mix32(seed.wrapping_add(i.wrapping_mul(GOLDEN)));
+                let u = z as f64 / 4294967296.0;
+                data.push(((u - 0.5) * 2.0 * scale as f64) as f32);
+            }
+            Tensor::from_f32(shape, data)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rules_by_suffix() {
+        assert_eq!(rule_for("L00_ln1_g", &[48]), InitRule::ConstOne);
+        assert_eq!(rule_for("L00_q_b", &[48]), InitRule::Zero);
+        assert_eq!(rule_for("mlm_bias", &[512]), InitRule::Zero);
+        assert_eq!(rule_for("L03_ls1", &[48]), InitRule::ConstTenth);
+        assert_eq!(rule_for("emb_tok", &[512, 48]), InitRule::Uniform(0.02));
+        match rule_for("L00_q_w", &[48, 48]) {
+            InitRule::Uniform(s) => assert!((s - (6.0f32 / 96.0).sqrt()).abs() < 1e-6),
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn deterministic_and_name_dependent() {
+        let a = det_fill("L00_q_w", &[8, 8], 0);
+        let b = det_fill("L00_q_w", &[8, 8], 0);
+        let c = det_fill("L00_k_w", &[8, 8], 0);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn seed_changes_values() {
+        let a = det_fill("L00_q_w", &[8, 8], 0);
+        let b = det_fill("L00_q_w", &[8, 8], 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn values_within_scale() {
+        let t = det_fill("emb_tok", &[32, 16], 0);
+        for v in t.f32s() {
+            assert!(v.abs() <= 0.02 + 1e-6);
+        }
+        // roughly centered
+        let mean: f32 = t.f32s().iter().sum::<f32>() / t.numel() as f32;
+        assert!(mean.abs() < 0.005);
+    }
+}

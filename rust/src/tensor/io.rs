@@ -1,0 +1,150 @@
+//! Checkpoint I/O: a simple self-describing binary format (LGCK).
+//!
+//! Layout:  magic "LGCK" | u32 version | u32 n_tensors | per tensor:
+//!   u32 name_len | name bytes | u8 dtype (0=f32,1=i32) | u32 rank |
+//!   u64 dims[rank] | raw little-endian data.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{numel, Tensor, TensorData};
+use super::store::Store;
+
+const MAGIC: &[u8; 4] = b"LGCK";
+const VERSION: u32 = 1;
+
+pub fn save(store: &Store, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(store.len() as u32).to_le_bytes())?;
+    for (name, t) in store.iter() {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        let dtype = match t.data {
+            TensorData::F32(_) => 0u8,
+            TensorData::I32(_) => 1u8,
+        };
+        w.write_all(&[dtype])?;
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for d in &t.shape {
+            w.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>) -> Result<Store> {
+    let path = path.as_ref();
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a LGCK checkpoint");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("{path:?}: unsupported checkpoint version {version}");
+    }
+    let n = read_u32(&mut r)? as usize;
+    let mut store = Store::new();
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut dtype = [0u8; 1];
+        r.read_exact(&mut dtype)?;
+        let rank = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let count = numel(&shape);
+        let t = match dtype[0] {
+            0 => {
+                let mut raw = vec![0u8; count * 4];
+                r.read_exact(&mut raw)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::from_f32(&shape, data)
+            }
+            1 => {
+                let mut raw = vec![0u8; count * 4];
+                r.read_exact(&mut raw)?;
+                let data = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
+                Tensor::from_i32(&shape, data)
+            }
+            d => bail!("bad dtype tag {d}"),
+        };
+        store.insert(name, t);
+    }
+    Ok(store)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut s = Store::new();
+        s.insert("w", Tensor::from_f32(&[2, 3], vec![1., -2., 3., 4., 5.5, -6.]));
+        s.insert("idx", Tensor::from_i32(&[4], vec![1, 2, 3, -4]));
+        s.insert("scalar", Tensor::scalar_f32(7.25));
+        let dir = std::env::temp_dir().join("ligo_io_test");
+        let path = dir.join("ck.lgck");
+        save(&s, &path).unwrap();
+        let l = load(&path).unwrap();
+        assert_eq!(s, l);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("ligo_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load("/nonexistent/path/x.lgck").is_err());
+    }
+}

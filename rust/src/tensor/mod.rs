@@ -1,0 +1,157 @@
+//! Named dense tensors — the coordinator's native parameter representation.
+//!
+//! The runtime converts these to/from PJRT literals; the growth-operator zoo
+//! and the optimizer operate on them directly.
+
+pub mod init;
+pub mod io;
+pub mod ops;
+pub mod store;
+
+/// Element type of a tensor (mirrors the manifest dtypes we emit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> anyhow::Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// A dense tensor: shape + row-major data (f32 or i32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(vec![0.0; numel(shape)]) }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    /// Borrow as f32 slice; panics on dtype mismatch.
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    /// 2D accessor (row, col); panics unless rank-2 f32.
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.f32s()[r * self.shape[1] + c]
+    }
+
+    /// Frobenius norm (f32 tensors).
+    pub fn norm(&self) -> f32 {
+        self.f32s().iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Scalar value of a 0-d (or 1-element) tensor.
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.numel(), 1);
+        self.f32s()[0]
+    }
+}
+
+/// Number of elements: empty shape (a scalar) has one element.
+pub fn numel(shape: &[usize]) -> usize {
+    if shape.is_empty() {
+        1
+    } else {
+        shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_scalar_is_one() {
+        assert_eq!(numel(&[]), 1);
+        assert_eq!(numel(&[3, 4]), 12);
+        assert_eq!(numel(&[0, 4]), 0);
+    }
+
+    #[test]
+    fn constructors_check_shape() {
+        let t = Tensor::from_f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_shape_panics() {
+        Tensor::from_f32(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn at2_indexes_row_major() {
+        let t = Tensor::from_f32(&[2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.at2(0, 1), 1.0);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("bfloat16").is_err());
+    }
+}

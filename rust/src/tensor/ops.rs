@@ -1,0 +1,205 @@
+//! Dense linear algebra on [`Tensor`]s — the substrate for the growth
+//! operator zoo (Net2Net, AKI, LiGO-apply checks) and for tests.
+//!
+//! Hot paths use a blocked, cache-friendly matmul; everything is f32.
+
+use super::{numel, Tensor};
+
+/// C = A @ B for (m,k) x (k,n). Blocked i-k-j loop (k-major inner) —
+/// the classic cache-friendly ordering; good enough for growth-time work.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let (av, bv) = (a.f32s(), b.f32s());
+    let mut c = vec![0.0f32; m * n];
+    const BK: usize = 64;
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..m {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let aik = av[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bv[kk * n..(kk + 1) * n];
+                for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+    }
+    Tensor::from_f32(&[m, n], c)
+}
+
+/// B^T as a new tensor.
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let av = a.f32s();
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = av[i * n + j];
+        }
+    }
+    Tensor::from_f32(&[n, m], out)
+}
+
+/// y = A @ x for (m,n) x (n,).
+pub fn matvec(a: &Tensor, x: &Tensor) -> Tensor {
+    let (m, n) = (a.shape[0], a.shape[1]);
+    assert_eq!(numel(&x.shape), n);
+    let (av, xv) = (a.f32s(), x.f32s());
+    let mut y = vec![0.0f32; m];
+    for i in 0..m {
+        y[i] = av[i * n..(i + 1) * n].iter().zip(xv).map(|(a, b)| a * b).sum();
+    }
+    Tensor::from_f32(&[m], y)
+}
+
+/// The LiGO triple product Omega = B @ W @ A^T (reference path used by
+/// rust-side verification of `ligo_apply` artifacts and by AKI/Net2Net when
+/// expressed as selection matrices).
+pub fn expand(b: &Tensor, w: &Tensor, a: &Tensor) -> Tensor {
+    matmul(&matmul(b, w), &transpose(a))
+}
+
+/// Elementwise a + s * b (in place on a copy).
+pub fn axpy(a: &Tensor, s: f32, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape, b.shape);
+    let mut out = a.clone();
+    for (x, y) in out.f32s_mut().iter_mut().zip(b.f32s()) {
+        *x += s * y;
+    }
+    out
+}
+
+pub fn scale(a: &Tensor, s: f32) -> Tensor {
+    let mut out = a.clone();
+    for x in out.f32s_mut() {
+        *x *= s;
+    }
+    out
+}
+
+/// Weighted sum of equally-shaped tensors: sum_i w_i T_i.
+pub fn weighted_sum(ws: &[f32], ts: &[&Tensor]) -> Tensor {
+    assert_eq!(ws.len(), ts.len());
+    assert!(!ts.is_empty());
+    let mut out = Tensor::zeros(&ts[0].shape);
+    let ov = out.f32s_mut();
+    for (w, t) in ws.iter().zip(ts) {
+        if *w == 0.0 {
+            continue;
+        }
+        for (o, x) in ov.iter_mut().zip(t.f32s()) {
+            *o += w * x;
+        }
+    }
+    out
+}
+
+/// Max absolute difference between two tensors (test helper).
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.shape, b.shape);
+    a.f32s()
+        .iter()
+        .zip(b.f32s())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn t2(shape: [usize; 2], v: Vec<f32>) -> Tensor {
+        Tensor::from_f32(&shape, v)
+    }
+
+    #[test]
+    fn matmul_hand_case() {
+        let a = t2([2, 2], vec![1., 2., 3., 4.]);
+        let b = t2([2, 2], vec![5., 6., 7., 8.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.f32s(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = t2([2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let eye = t2([3, 3], vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]);
+        assert_eq!(matmul(&a, &eye).f32s(), a.f32s());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        prop::check("transpose^2 = id", 25, |g| {
+            let m = g.usize_in(1, 12);
+            let n = g.usize_in(1, 12);
+            let a = t2([m, n], g.vec_f32(m * n, -2.0, 2.0));
+            assert_eq!(transpose(&transpose(&a)), a);
+        });
+    }
+
+    #[test]
+    fn expand_matches_naive_triple() {
+        prop::check("expand = B W A^T", 20, |g| {
+            let m = g.usize_in(1, 10);
+            let k = g.usize_in(1, 8);
+            let n = g.usize_in(1, 8);
+            let p = g.usize_in(1, 10);
+            let b = t2([m, k], g.vec_f32(m * k, -1.0, 1.0));
+            let w = t2([k, n], g.vec_f32(k * n, -1.0, 1.0));
+            let a = t2([p, n], g.vec_f32(p * n, -1.0, 1.0));
+            let got = expand(&b, &w, &a);
+            // naive reference
+            let mut want = vec![0.0f32; m * p];
+            for i in 0..m {
+                for j in 0..p {
+                    let mut s = 0.0;
+                    for x in 0..k {
+                        for y in 0..n {
+                            s += b.at2(i, x) * w.at2(x, y) * a.at2(j, y);
+                        }
+                    }
+                    want[i * p + j] = s;
+                }
+            }
+            assert!(max_abs_diff(&got, &t2([m, p], want)) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn weighted_sum_linear() {
+        let a = t2([1, 2], vec![1., 2.]);
+        let b = t2([1, 2], vec![10., 20.]);
+        let s = weighted_sum(&[0.5, 0.25], &[&a, &b]);
+        assert_eq!(s.f32s(), &[3.0, 6.0]);
+    }
+
+    #[test]
+    fn matmul_associativity_prop() {
+        prop::check("(AB)C = A(BC)", 10, |g| {
+            let m = g.usize_in(1, 6);
+            let k = g.usize_in(1, 6);
+            let n = g.usize_in(1, 6);
+            let p = g.usize_in(1, 6);
+            let a = t2([m, k], g.vec_f32(m * k, -1.0, 1.0));
+            let b = t2([k, n], g.vec_f32(k * n, -1.0, 1.0));
+            let c = t2([n, p], g.vec_f32(n * p, -1.0, 1.0));
+            let lhs = matmul(&matmul(&a, &b), &c);
+            let rhs = matmul(&a, &matmul(&b, &c));
+            assert!(max_abs_diff(&lhs, &rhs) < 1e-3);
+        });
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = t2([2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let x = Tensor::from_f32(&[3], vec![1., 0., -1.]);
+        assert_eq!(matvec(&a, &x).f32s(), &[-2.0, -2.0]);
+    }
+}

@@ -1,0 +1,152 @@
+//! The named tensor store: an ordered map of parameter name -> [`Tensor`].
+//!
+//! Sorted-key iteration order is the contract shared with the AOT manifests
+//! (JAX flattens dicts in sorted-key order), so a store can be bound to a
+//! PJRT executable positionally.
+
+use std::collections::BTreeMap;
+
+use super::{init::det_fill, Tensor};
+
+/// An ordered parameter/tensor collection.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Store {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl Store {
+    pub fn new() -> Store {
+        Store::default()
+    }
+
+    /// Deterministically initialize from a {name -> shape} spec (the
+    /// manifest's params entries), matching python detinit exactly.
+    pub fn det_init(shapes: &[(String, Vec<usize>)], seed: u64) -> Store {
+        let mut s = Store::new();
+        for (name, shape) in shapes {
+            s.insert(name.clone(), det_fill(name, shape, seed));
+        }
+        s
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.map.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name)
+    }
+
+    pub fn expect(&self, name: &str) -> &Tensor {
+        self.map
+            .get(name)
+            .unwrap_or_else(|| panic!("missing tensor '{name}'"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.map.get_mut(name)
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        self.map.remove(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Sorted-name iteration (the manifest order).
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.map.iter()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (&String, &mut Tensor)> {
+        self.map.iter_mut()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.map.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Total number of scalar parameters (f32 + i32).
+    pub fn param_count(&self) -> usize {
+        self.map.values().map(|t| t.numel()).sum()
+    }
+
+    /// Keys with a given prefix, e.g. all of layer "L03_".
+    pub fn with_prefix(&self, prefix: &str) -> Vec<&str> {
+        self.map
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .map(|s| s.as_str())
+            .collect()
+    }
+
+    /// Global L2 norm over all f32 tensors (diagnostics, grad clipping).
+    pub fn global_norm(&self) -> f32 {
+        self.map
+            .values()
+            .filter(|t| matches!(t.data, super::TensorData::F32(_)))
+            .map(|t| t.f32s().iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>())
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+}
+
+impl FromIterator<(String, Tensor)> for Store {
+    fn from_iter<I: IntoIterator<Item = (String, Tensor)>>(iter: I) -> Self {
+        Store { map: iter.into_iter().collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sorted_iteration_order() {
+        let mut s = Store::new();
+        s.insert("b", Tensor::zeros(&[1]));
+        s.insert("a", Tensor::zeros(&[1]));
+        s.insert("L10_x", Tensor::zeros(&[1]));
+        s.insert("L02_x", Tensor::zeros(&[1]));
+        let names: Vec<_> = s.iter().map(|(n, _)| n.clone()).collect();
+        assert_eq!(names, vec!["L02_x", "L10_x", "a", "b"]);
+    }
+
+    #[test]
+    fn det_init_fills_all() {
+        let shapes = vec![
+            ("emb_tok".to_string(), vec![16, 4]),
+            ("L00_ln1_g".to_string(), vec![4]),
+        ];
+        let s = Store::det_init(&shapes, 0);
+        assert_eq!(s.param_count(), 68);
+        assert!(s.expect("L00_ln1_g").f32s().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn prefix_query() {
+        let mut s = Store::new();
+        s.insert("L00_q_w", Tensor::zeros(&[1]));
+        s.insert("L00_k_w", Tensor::zeros(&[1]));
+        s.insert("L01_q_w", Tensor::zeros(&[1]));
+        assert_eq!(s.with_prefix("L00_").len(), 2);
+    }
+
+    #[test]
+    fn global_norm_pythagorean() {
+        let mut s = Store::new();
+        s.insert("a", Tensor::from_f32(&[1], vec![3.0]));
+        s.insert("b", Tensor::from_f32(&[1], vec![4.0]));
+        assert!((s.global_norm() - 5.0).abs() < 1e-6);
+    }
+}

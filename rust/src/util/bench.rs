@@ -1,0 +1,101 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable
+//! offline). Warms up, collects N samples, reports mean/p50/p95 and
+//! throughput; used by every target under rust/benches/.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10}  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            format!("n={}", self.samples),
+            fmt_t(self.mean_s),
+            fmt_t(self.p50_s),
+            fmt_t(self.p95_s),
+            fmt_t(self.min_s),
+        );
+    }
+
+    /// Report with an items/sec throughput line (e.g. tokens, params).
+    pub fn report_throughput(&self, items_per_iter: f64, unit: &str) {
+        self.report();
+        println!(
+            "{:<44} {:>10}  {:>12.3e} {unit}/s",
+            "", "", items_per_iter / self.mean_s
+        );
+    }
+}
+
+pub fn fmt_t(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured iterations, then `samples`
+/// measured ones. The closure result is black-boxed via volatile read.
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = BenchStats {
+        name: name.to_string(),
+        samples,
+        mean_s: times.iter().sum::<f64>() / samples as f64,
+        p50_s: times[samples / 2],
+        p95_s: times[(samples * 95 / 100).min(samples - 1)],
+        min_s: times[0],
+    };
+    stats.report();
+    stats
+}
+
+/// Prevent the optimizer from eliding a computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = bench("noop", 2, 20, || 1 + 1);
+        assert!(s.min_s <= s.p50_s && s.p50_s <= s.p95_s);
+        assert_eq!(s.samples, 20);
+    }
+
+    #[test]
+    fn formats_units() {
+        assert!(fmt_t(2e-9).contains("ns"));
+        assert!(fmt_t(2e-6).contains("µs"));
+        assert!(fmt_t(2e-3).contains("ms"));
+        assert!(fmt_t(2.0).contains(" s"));
+    }
+}

@@ -1,0 +1,96 @@
+//! Tiny argv parser: subcommands + `--key value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positional args and --options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = argv("train --model bert_base --steps 100 --fresh");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("model"), Some("bert_base"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert!(a.has_flag("fresh"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = argv("x --lr=0.001 --n=5");
+        assert_eq!(a.get_f32("lr", 0.0), 0.001);
+        assert_eq!(a.get_usize("n", 0), 5);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = argv("x");
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert!(!a.has_flag("nope"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = argv("run --verbose");
+        assert!(a.has_flag("verbose"));
+    }
+}

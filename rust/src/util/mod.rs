@@ -1,0 +1,13 @@
+//! In-tree substrates that would normally be external crates.
+//!
+//! This build environment is offline (only the `xla` dependency closure is
+//! vendored), so JSON, RNG, CLI parsing, micro-benchmarking and property
+//! testing are implemented here as small, well-tested modules.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,85 @@
+//! Mini property-based testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |g| ...)` runs the closure against `cases` seeded
+//! generators; on failure it reports the failing seed so the case can be
+//! replayed deterministically with `replay(seed, ...)`.
+
+use super::rng::Rng;
+
+/// Case generator handed to property closures.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.coin(0.5)
+    }
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+}
+
+/// Run `cases` random cases of a property. Panics (with the seed) on the
+/// first failure. Set LIGO_PROP_SEED to replay one specific seed.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut prop: F) {
+    if let Ok(seed) = std::env::var("LIGO_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("LIGO_PROP_SEED must be u64");
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        prop(&mut g);
+        return;
+    }
+    for i in 0..cases {
+        let seed = 0x5EED_0000 + i;
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' FAILED at seed {seed} (LIGO_PROP_SEED={seed} to replay)");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check("reflexive", 50, |g| {
+            let x = g.f32_in(-10.0, 10.0);
+            assert_eq!(x, x);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn fails_false_property() {
+        check("false", 50, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x < 95, "x = {x}");
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("bounds", 100, |g| {
+            let a = g.usize_in(3, 7);
+            assert!((3..=7).contains(&a));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let v = g.vec_f32(5, 0.0, 2.0);
+            assert_eq!(v.len(), 5);
+        });
+    }
+}

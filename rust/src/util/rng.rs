@@ -1,0 +1,159 @@
+//! Deterministic RNGs: a fast xoshiro-style stream RNG for data generation
+//! and the counter-based `mix32` scheme shared with python (detinit.py) for
+//! parameter initialization.
+
+/// SplitMix64-based stream RNG. Deterministic, seedable, fast.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.next_f32() * (hi - lo)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n.max(1) as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.next_f32().max(1e-7);
+        let u2 = self.next_f32();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        let mut t = self.next_f32() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Bernoulli with probability p.
+    #[inline]
+    pub fn coin(&mut self, p: f32) -> bool {
+        self.next_f32() < p
+    }
+}
+
+/// FNV-1a 64-bit hash (matches python detinit.fnv1a).
+pub fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xCBF29CE484222325;
+    for b in name.as_bytes() {
+        h = (h ^ (*b as u64)).wrapping_mul(0x100000001B3);
+    }
+    h
+}
+
+/// Counter-based mix32 (matches python detinit.det_fill).
+#[inline]
+pub fn mix32(mut z: u32) -> u32 {
+    z ^= z >> 16;
+    z = z.wrapping_mul(0x45D9F3B);
+    z ^= z >> 16;
+    z = z.wrapping_mul(0x45D9F3B);
+    z ^ (z >> 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let (mut a, mut b) = (Rng::new(42), Rng::new(42));
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(1);
+        let mut sum = 0.0f64;
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        assert!((sum / 10_000.0 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let xs: Vec<f32> = (0..20_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.categorical(&[1.0, 2.0, 7.0])] += 1;
+        }
+        assert!(counts[2] > counts[1] && counts[1] > counts[0]);
+        assert!((counts[2] as f64 / 30_000.0 - 0.7).abs() < 0.03);
+    }
+
+    #[test]
+    fn fnv_matches_python_reference() {
+        // python: fnv1a("emb_tok") computed from detinit.py
+        assert_eq!(fnv1a(""), 0xCBF29CE484222325);
+        assert_eq!(fnv1a("a"), 0xAF63DC4C8601EC8C);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+}

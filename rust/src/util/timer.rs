@@ -1,0 +1,65 @@
+//! Wall-clock timing helpers used by the trainer's FLOPs/time ledger.
+
+use std::time::Instant;
+
+/// A simple stopwatch with lap support.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Timer { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous lap (or construction).
+    pub fn lap(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_monotonic() {
+        let mut t = Timer::new();
+        let a = t.lap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = t.lap();
+        assert!(a >= 0.0 && b >= 0.002);
+        assert!(t.elapsed() >= b);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Pipeline integration: checkpoint save/load through real training state,
+//! the fine-tuning harnesses over the probe artifacts, gated (Fig. 5)
+//! artifacts, and the KD trainer path. Requires `make artifacts`.
+
+use ligo::config::{artifacts_dir, Registry, TrainConfig};
+use ligo::coordinator::trainer::{Batches, Trainer};
+use ligo::data::batches::{gated_batch, mlm_batch};
+use ligo::data::corpus::Corpus;
+use ligo::data::downstream::{Probe, ProbeKind, SpanProbe};
+use ligo::eval::finetune::{finetune_adapters, finetune_probe, finetune_span};
+use ligo::runtime::Runtime;
+use ligo::tensor::io;
+use ligo::util::rng::Rng;
+
+fn runtime() -> Option<(Runtime, Registry)> {
+    let dir = artifacts_dir();
+    if !dir.join("configs.json").exists() {
+        eprintln!("artifacts not built; skipping");
+        return None;
+    }
+    Some((Runtime::cpu(&dir).unwrap(), Registry::load(&dir).unwrap()))
+}
+
+#[test]
+fn checkpoint_roundtrip_through_training() {
+    let Some((rt, reg)) = runtime() else { return };
+    let cfg = reg.model("bert_small").unwrap().clone();
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let params = Trainer::scratch_params(&rt, &cfg, 0).unwrap();
+    let tc = TrainConfig { total_steps: 5, warmup_steps: 1, eval_every: 5, ..Default::default() };
+    let mut tr = Trainer::new(&rt, &cfg, tc, params).unwrap();
+    let c = corpus.clone();
+    let cc = cfg.clone();
+    for _ in 0..5 {
+        tr.train_step(&mut |s| mlm_batch(&c, &cc, &mut Rng::new(s as u64))).unwrap();
+    }
+    let path = std::env::temp_dir().join("ligo_integ_ckpt.lgck");
+    io::save(&tr.params, &path).unwrap();
+    let loaded = io::load(&path).unwrap();
+    assert_eq!(tr.params, loaded);
+    // loaded params produce the identical loss through the runtime
+    let fwd = rt.load("fwd_bert_small").unwrap();
+    let batch = mlm_batch(&corpus, &cfg, &mut Rng::new(99));
+    let a = fwd.run(&[("params", &tr.params), ("batch", &batch)]).unwrap().scalar("loss").unwrap();
+    let b = fwd.run(&[("params", &loaded), ("batch", &batch)]).unwrap().scalar("loss").unwrap();
+    assert_eq!(a, b);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn probe_finetune_learns_topic_task() {
+    let Some((rt, reg)) = runtime() else { return };
+    let probe_cfg = reg.model("probe_bert_base").unwrap().clone();
+    let corpus = Corpus::new(512, 0);
+    // body: det-init bert_base (untrained is fine; the probe head can still
+    // pick up topical signal — we assert above-chance, not paper accuracy)
+    let body = Trainer::scratch_params(&rt, reg.model("bert_base").unwrap(), 0).unwrap();
+    let tc = TrainConfig::finetune(40);
+    let p1 = Probe::new(ProbeKind::Sst2, corpus.clone());
+    let c1 = probe_cfg.clone();
+    let mut trb = move |s: usize| p1.batch(&c1, &mut Rng::new(s as u64));
+    let p2 = Probe::new(ProbeKind::Sst2, corpus.clone());
+    let c2 = probe_cfg.clone();
+    let mut evb = move |s: usize| p2.batch(&c2, &mut Rng::new(0xE0 + s as u64));
+    let res = finetune_probe(&rt, "probe_bert_base", "sst2", &body, &tc, &mut trb, &mut evb).unwrap();
+    assert!(res.accuracy.is_finite());
+    assert!(res.accuracy > 0.4, "acc {}", res.accuracy); // not degenerate
+}
+
+#[test]
+fn span_finetune_runs() {
+    let Some((rt, reg)) = runtime() else { return };
+    let probe_cfg = reg.model("probe_bert_base").unwrap().clone();
+    let corpus = Corpus::new(512, 0);
+    let body = Trainer::scratch_params(&rt, reg.model("bert_base").unwrap(), 0).unwrap();
+    let tc = TrainConfig::finetune(15);
+    let pr = SpanProbe::v1(corpus.clone());
+    let c1 = probe_cfg.clone();
+    let mut trb = move |s: usize| pr.batch(&c1, &mut Rng::new(s as u64));
+    let pr2 = SpanProbe::v1(corpus);
+    let mut evb = move |s: usize| pr2.batch(&probe_cfg, &mut Rng::new(0xE0 + s as u64));
+    let res = finetune_span(&rt, "squad", &body, &tc, &mut trb, &mut evb).unwrap();
+    assert!(res.final_loss.is_finite());
+}
+
+#[test]
+fn adapter_finetune_touches_only_adapters() {
+    let Some((rt, reg)) = runtime() else { return };
+    let probe_cfg = reg.model("probe_bert_base").unwrap().clone();
+    let corpus = Corpus::new(512, 0);
+    let body = Trainer::scratch_params(&rt, reg.model("bert_base").unwrap(), 0).unwrap();
+    let tc = TrainConfig::finetune(10);
+    let p1 = Probe::new(ProbeKind::Qnli, corpus.clone());
+    let c1 = probe_cfg.clone();
+    let mut trb = move |s: usize| p1.batch(&c1, &mut Rng::new(s as u64));
+    let p2 = Probe::new(ProbeKind::Qnli, corpus);
+    let mut evb = move |s: usize| p2.batch(&probe_cfg, &mut Rng::new(0xE0 + s as u64));
+    let res = finetune_adapters(&rt, "qnli", &body, &tc, &mut trb, &mut evb).unwrap();
+    assert!(res.accuracy.is_finite() && res.final_loss.is_finite());
+}
+
+#[test]
+fn gated_artifact_accepts_gates() {
+    let Some((rt, reg)) = runtime() else { return };
+    let cfg = reg.model("bert_base").unwrap().clone();
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let exe = rt.load("grad_gated_bert_base").unwrap();
+    let params = ligo::tensor::store::Store::det_init(&exe.manifest.shapes_of("params"), 0);
+    // all gates on vs one layer off must change the loss
+    let b_on = gated_batch(&corpus, &cfg, &mut Rng::new(1), 0.0, 0.0);
+    let mut b_off = gated_batch(&corpus, &cfg, &mut Rng::new(1), 0.0, 0.0);
+    let mut gates = vec![1.0f32; cfg.layers];
+    gates[0] = 0.0;
+    b_off.insert("gates", ligo::tensor::Tensor::from_f32(&[cfg.layers], gates));
+    let l_on = exe.run(&[("params", &params), ("batch", &b_on)]).unwrap().scalar("loss").unwrap();
+    let l_off = exe.run(&[("params", &params), ("batch", &b_off)]).unwrap().scalar("loss").unwrap();
+    assert!(l_on.is_finite() && l_off.is_finite());
+    assert_ne!(l_on, l_off);
+}
+
+#[test]
+fn kd_trainer_path_works() {
+    let Some((rt, reg)) = runtime() else { return };
+    let small = reg.model("bert_small").unwrap().clone();
+    let large = reg.model("bert_base").unwrap().clone();
+    let corpus = Corpus::new(large.vocab, 0);
+    let teacher = Trainer::scratch_params(&rt, &small, 0).unwrap();
+    let student = Trainer::scratch_params(&rt, &large, 1).unwrap();
+    let tc = TrainConfig { total_steps: 3, warmup_steps: 1, eval_every: 3, ..Default::default() };
+    let mut tr = Trainer::with_artifacts(
+        &rt, "kd_grad_bert_small__bert_base", "fwd_bert_base", &large, tc, student,
+    )
+    .unwrap();
+    tr.extra = vec![("teacher".to_string(), teacher)];
+    let mut b = Batches {
+        train: {
+            let c = corpus.clone();
+            let l = large.clone();
+            Box::new(move |s| mlm_batch(&c, &l, &mut Rng::new(s as u64)))
+        },
+        eval: {
+            let c = corpus.clone();
+            let l = large.clone();
+            Box::new(move |s| mlm_batch(&c, &l, &mut Rng::new(0xE0 + s as u64)))
+        },
+    };
+    let curve = tr.run("kd", &mut b, 3).unwrap();
+    assert!(curve.loss.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn grad_accumulation_matches_recipe() {
+    let Some((rt, reg)) = runtime() else { return };
+    let cfg = reg.model("bert_small").unwrap().clone();
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let params = Trainer::scratch_params(&rt, &cfg, 0).unwrap();
+    let tc = TrainConfig { grad_accum: 4, total_steps: 2, warmup_steps: 1, ..Default::default() };
+    let mut tr = Trainer::new(&rt, &cfg, tc, params).unwrap();
+    let mut seen = std::collections::BTreeSet::new();
+    let c = corpus.clone();
+    let loss = tr
+        .train_step(&mut |s| {
+            seen.insert(s);
+            mlm_batch(&c, &cfg, &mut Rng::new(s as u64))
+        })
+        .unwrap();
+    assert!(loss.is_finite());
+    assert_eq!(seen.len(), 4, "4 microbatches per accumulated step");
+}

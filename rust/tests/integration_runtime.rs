@@ -1,0 +1,175 @@
+//! End-to-end integration over the real artifacts: PJRT load/compile,
+//! manifest binding, golden checks against python, training steps, growth
+//! operators through the real forward, and the LiGO manager.
+//!
+//! Requires `make artifacts` to have run (skipped otherwise).
+
+use ligo::config::{artifacts_dir, Registry, TrainConfig};
+use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
+use ligo::coordinator::trainer::{Batches, Trainer};
+use ligo::data::batches::mlm_batch;
+use ligo::data::corpus::Corpus;
+use ligo::runtime::Runtime;
+use ligo::tensor::store::Store;
+use ligo::util::json::Json;
+use ligo::util::rng::Rng;
+
+fn runtime() -> Option<(Runtime, Registry)> {
+    let dir = artifacts_dir();
+    if !dir.join("configs.json").exists() {
+        eprintln!("artifacts not built; skipping integration test");
+        return None;
+    }
+    let rt = Runtime::cpu(&dir).expect("pjrt cpu client");
+    let reg = Registry::load(&dir).expect("registry");
+    Some((rt, reg))
+}
+
+/// Deterministic batch matching python aot.emit_goldens's _det_batch.
+fn golden_batch(cfg: &ligo::ModelConfig, seed: i64) -> Store {
+    use ligo::tensor::Tensor;
+    let mut st = Store::new();
+    let (b, s) = (cfg.batch, cfg.seq);
+    if cfg.is_vision() {
+        let n = b * cfg.img * cfg.img * 3;
+        let vals: Vec<f32> = (0..n as i64)
+            .map(|i| ((i * 1103515245 + seed) % 1000) as f32 / 1000.0 - 0.5)
+            .collect();
+        st.insert("images", Tensor::from_f32(&[b, cfg.img, cfg.img, 3], vals));
+        let labels: Vec<i32> = (0..b as i64)
+            .map(|i| ((i * 2654435761i64 + seed) % (cfg.n_classes.max(2) as i64)) as i32)
+            .collect();
+        st.insert("labels", Tensor::from_i32(&[b], labels));
+    } else {
+        let n = (b * s) as i64;
+        let tokens: Vec<i32> = (0..n).map(|i| ((i * 2654435761i64 + seed) % cfg.vocab as i64) as i32).collect();
+        // python golden labels use hi = max(n_classes, 2) = 2 for LM configs
+        let labels: Vec<i32> = (0..n)
+            .map(|i| if i % 7 == 0 { ((i * 2654435761i64 + seed) % 2) as i32 } else { -1 })
+            .collect();
+        st.insert("tokens", Tensor::from_i32(&[b, s], tokens));
+        st.insert("labels", Tensor::from_i32(&[b, s], labels));
+    }
+    st
+}
+
+#[test]
+fn golden_losses_match_python() {
+    let Some((rt, reg)) = runtime() else { return };
+    let goldens = std::fs::read_to_string(artifacts_dir().join("goldens.json")).unwrap();
+    let goldens = Json::parse(&goldens).unwrap();
+    for name in ["bert_small", "gpt_base", "vit_s"] {
+        let cfg = reg.model(name).unwrap();
+        let exe = rt.load(&format!("fwd_{name}")).unwrap();
+        let params = Store::det_init(&exe.manifest.shapes_of("params"), 0);
+        let batch = golden_batch(cfg, 7);
+        let out = exe.run(&[("params", &params), ("batch", &batch)]).unwrap();
+        let got = out.scalar("loss").unwrap();
+        let want = goldens
+            .get(&format!("fwd_{name}"))
+            .and_then(|g| g.get("loss"))
+            .and_then(Json::as_f64)
+            .unwrap() as f32;
+        assert!(
+            (got - want).abs() < 2e-3 * want.abs().max(1.0),
+            "{name}: rust loss {got} vs python golden {want}"
+        );
+    }
+}
+
+#[test]
+fn train_steps_reduce_loss() {
+    let Some((rt, reg)) = runtime() else { return };
+    let cfg = reg.model("bert_small").unwrap().clone();
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let params = Trainer::scratch_params(&rt, &cfg, 0).unwrap();
+    let tc = TrainConfig { lr: 3e-3, total_steps: 80, warmup_steps: 5, eval_every: 80, ..Default::default() };
+    let mut tr = Trainer::new(&rt, &cfg, tc, params).unwrap();
+    let c1 = corpus.clone();
+    let cfg1 = cfg.clone();
+    let mut batches = Batches {
+        train: Box::new(move |step| mlm_batch(&c1, &cfg1, &mut Rng::new(step as u64))),
+        eval: Box::new({
+            let c = corpus.clone();
+            let cfg = cfg.clone();
+            move |i| mlm_batch(&c, &cfg, &mut Rng::new(0x77AA + i as u64))
+        }),
+    };
+    let curve = tr.run("smoke", &mut batches, 80).unwrap();
+    let first = curve.loss[0];
+    let last = *curve.loss.last().unwrap();
+    assert!(
+        last < first - 0.3,
+        "loss did not drop: {first} -> {last}"
+    );
+}
+
+#[test]
+fn growth_operators_produce_runnable_models() {
+    let Some((rt, reg)) = runtime() else { return };
+    let small_cfg = reg.model("bert_small").unwrap().clone();
+    let large_cfg = reg.model("bert_base").unwrap().clone();
+    let small_exe = rt.load("grad_bert_small").unwrap();
+    let small_params = Store::det_init(&small_exe.manifest.shapes_of("params"), 3);
+    let fwd_large = rt.load("fwd_bert_base").unwrap();
+    let corpus = Corpus::new(small_cfg.vocab, 0);
+    let batch = mlm_batch(&corpus, &large_cfg, &mut Rng::new(5));
+    for op_name in ligo::growth::ALL {
+        let op = ligo::growth::by_name(op_name).unwrap();
+        let big = op.grow(&small_params, &small_cfg, &large_cfg);
+        let out = fwd_large.run(&[("params", &big), ("batch", &batch)]).unwrap();
+        let loss = out.scalar("loss").unwrap();
+        assert!(loss.is_finite(), "{op_name}: non-finite loss");
+        assert!(loss < 20.0, "{op_name}: absurd loss {loss}");
+    }
+}
+
+#[test]
+fn ligo_growth_improves_over_init() {
+    let Some((rt, reg)) = runtime() else { return };
+    let small = reg.model("bert_small").unwrap().clone();
+    let large = reg.model("bert_base").unwrap().clone();
+    // lightly pretrain the small model so M has knowledge to map
+    let corpus = Corpus::new(small.vocab, 0);
+    let params = Trainer::scratch_params(&rt, &small, 0).unwrap();
+    let tc = TrainConfig { lr: 1e-3, total_steps: 40, warmup_steps: 4, eval_every: 40, ..Default::default() };
+    let mut tr = Trainer::new(&rt, &small, tc, params).unwrap();
+    for step in 0..40 {
+        let c = corpus.clone();
+        let cfgc = small.clone();
+        tr.train_step(&mut move |s| mlm_batch(&c, &cfgc, &mut Rng::new((step * 100 + s) as u64)))
+            .unwrap();
+    }
+    let small_params = tr.params.clone();
+    // grow with LiGO (few steps to keep the test fast)
+    let opts = LigoOptions { steps: 12, ..Default::default() };
+    let c2 = corpus.clone();
+    let lcfg = large.clone();
+    let grown = ligo_grow(
+        &rt,
+        &small,
+        &large,
+        &small_params,
+        &mut move |s| mlm_batch(&c2, &lcfg, &mut Rng::new(900 + s as u64)),
+        &opts,
+    )
+    .unwrap();
+    assert!(grown.final_m_loss.is_finite());
+    assert!(grown.extra_flops > 0.0);
+    // the grown model evaluates sanely
+    let fwd = rt.load("fwd_bert_base").unwrap();
+    let eval_batch = mlm_batch(&corpus, &large, &mut Rng::new(31337));
+    let out = fwd.run(&[("params", &grown.params), ("batch", &eval_batch)]).unwrap();
+    let ligo_loss = out.scalar("loss").unwrap();
+    // compare against a scratch-init large model on the same batch
+    let scratch = Store::det_init(&rt.load("grad_bert_base").unwrap().manifest.shapes_of("params"), 1);
+    let scratch_loss = fwd
+        .run(&[("params", &scratch), ("batch", &eval_batch)])
+        .unwrap()
+        .scalar("loss")
+        .unwrap();
+    assert!(
+        ligo_loss < scratch_loss,
+        "LiGO init ({ligo_loss}) should beat scratch init ({scratch_loss})"
+    );
+}

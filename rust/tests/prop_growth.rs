@@ -1,0 +1,183 @@
+//! Property tests over the growth-operator zoo and coordinator invariants:
+//! shape correctness for arbitrary (L1<=L2, D1<=D2) pairs, structural
+//! guarantees per operator, Prop. 1 relationships, and checkpoint/loader
+//! invariants. Pure rust — no artifacts required.
+
+use ligo::coordinator::growth_manager::ligo_init_store;
+use ligo::growth::testutil::{mk_cfg, small_store};
+use ligo::growth::{self, layer_key};
+use ligo::tensor::{io, ops, store::Store, Tensor};
+use ligo::util::prop;
+use ligo::util::rng::Rng;
+
+#[test]
+fn every_operator_produces_exact_target_shapes() {
+    prop::check("operator shapes", 12, |g| {
+        let l1 = g.usize_in(1, 4);
+        let d1h = g.usize_in(1, 4); // heads-sized units
+        let l2 = l1 + g.usize_in(0, 4);
+        let d2h = d1h + g.usize_in(0, 3);
+        let cs = mk_cfg(l1, d1h * 8, d1h);
+        let cl = mk_cfg(l2, d2h * 8, d2h);
+        let small = small_store(&cs);
+        for name in growth::ALL {
+            let op = growth::by_name(name).unwrap();
+            let big = op.grow(&small, &cs, &cl);
+            assert_eq!(big.expect("emb_tok").shape, vec![cl.vocab, cl.dim], "{name}");
+            for l in 0..cl.layers {
+                assert_eq!(
+                    big.expect(&layer_key(l, "q_w")).shape,
+                    vec![cl.dim, cl.dim],
+                    "{name} layer {l}"
+                );
+                assert_eq!(
+                    big.expect(&layer_key(l, "fc1_w")).shape,
+                    vec![cl.ffn(), cl.dim],
+                    "{name} layer {l}"
+                );
+            }
+            // exact tensor-set parity with a natively-initialized large store
+            let native = small_store(&cl);
+            assert_eq!(big.len(), native.len(), "{name}: tensor count");
+        }
+    });
+}
+
+#[test]
+fn operators_preserve_small_information() {
+    // Every operator must embed the small weights somewhere: the grown
+    // store cannot be independent of the source.
+    prop::check("information preserved", 8, |g| {
+        let cs = mk_cfg(2, 16, 2);
+        let cl = mk_cfg(3, 24, 3);
+        let small = small_store(&cs);
+        let mut small2 = small.clone();
+        let t = small2.get_mut("L00_q_w").unwrap();
+        for x in t.f32s_mut() {
+            *x += 1.0;
+        }
+        let name = *g.pick(&growth::ALL);
+        let op = growth::by_name(name).unwrap();
+        let a = op.grow(&small, &cs, &cl);
+        let b = op.grow(&small2, &cs, &cl);
+        assert_ne!(
+            a.expect("L00_q_w").f32s(),
+            b.expect("L00_q_w").f32s(),
+            "{name} ignores source weights"
+        );
+    });
+}
+
+#[test]
+fn stackbert_equals_ligo_stacking_pattern() {
+    // Prop. 1: the noise-free LiGO init (stacking pattern, identity width
+    // when dims match) IS StackBERT.
+    let cs = mk_cfg(2, 16, 2);
+    let cl = mk_cfg(4, 16, 2); // depth-only
+    let small = small_store(&cs);
+    let stack = growth::by_name("stackbert").unwrap().grow(&small, &cs, &cl);
+    let shapes = vec![("w_q".to_string(), vec![cl.layers, cs.layers])];
+    let m = ligo_init_store(&shapes, 0.0, 0);
+    let w = m.expect("w_q");
+    for i in 0..cl.layers {
+        let blended = ops::weighted_sum(
+            &(0..cs.layers).map(|j| w.at2(i, j)).collect::<Vec<_>>(),
+            &(0..cs.layers)
+                .map(|j| small.expect(&layer_key(j, "q_w")))
+                .collect::<Vec<_>>(),
+        );
+        assert!(
+            ops::max_abs_diff(&blended, stack.expect(&layer_key(i, "q_w"))) < 1e-6,
+            "layer {i}"
+        );
+    }
+}
+
+#[test]
+fn net2net_width_is_function_preserving_per_layer() {
+    prop::check("fpi per-layer preservation", 10, |g| {
+        let d1 = g.usize_in(2, 8);
+        let d2 = d1 + g.usize_in(1, 6);
+        let map = growth::width::WidthMap::random(d1, d2, &mut Rng::new(g.seed));
+        let w = Tensor::from_f32(&[d1, d1], g.vec_f32(d1 * d1, -1.0, 1.0));
+        let grown = map.expand_cols(&map.expand_rows(&w), true);
+        let x = g.vec_f32(d1, -1.0, 1.0);
+        let xl: Vec<f32> = map.map.iter().map(|&s| x[s]).collect();
+        // y_large[j] must equal y_small[map[j]]
+        for (j, &src) in map.map.iter().enumerate() {
+            let y_small: f32 = (0..d1).map(|k| w.at2(src, k) * x[k]).sum();
+            let y_large: f32 = (0..d2).map(|k| grown.at2(j, k) * xl[k]).sum();
+            assert!((y_small - y_large).abs() < 1e-4, "j={j}: {y_small} vs {y_large}");
+        }
+    });
+}
+
+#[test]
+fn ligo_init_store_pattern() {
+    prop::check("ligo init pattern", 20, |g| {
+        let rows = g.usize_in(1, 12);
+        let cols = g.usize_in(1, 12);
+        let m = ligo_init_store(&[("B_x".to_string(), vec![rows, cols])], 0.0, g.seed);
+        let t = m.expect("B_x");
+        for r in 0..rows {
+            for c in 0..cols {
+                let want = if c == r % cols { 1.0 } else { 0.0 };
+                assert_eq!(t.at2(r, c), want);
+            }
+        }
+    });
+}
+
+#[test]
+fn checkpoint_roundtrip_arbitrary_stores() {
+    prop::check("ckpt roundtrip", 10, |g| {
+        let mut s = Store::new();
+        let n = g.usize_in(1, 8);
+        for i in 0..n {
+            let r = g.usize_in(1, 6);
+            let c = g.usize_in(1, 6);
+            s.insert(
+                format!("t{i}"),
+                Tensor::from_f32(&[r, c], g.vec_f32(r * c, -10.0, 10.0)),
+            );
+        }
+        let path = std::env::temp_dir().join(format!("ligo_prop_{}.lgck", g.seed));
+        io::save(&s, &path).unwrap();
+        let l = io::load(&path).unwrap();
+        assert_eq!(s, l);
+        std::fs::remove_file(path).ok();
+    });
+}
+
+#[test]
+fn weighted_sum_matches_manual_blend() {
+    prop::check("depth blend linearity", 15, |g| {
+        let n = g.usize_in(1, 5);
+        let shape = [g.usize_in(1, 4), g.usize_in(1, 4)];
+        let tensors: Vec<Tensor> = (0..n)
+            .map(|_| Tensor::from_f32(&shape, g.vec_f32(shape[0] * shape[1], -1.0, 1.0)))
+            .collect();
+        let ws = g.vec_f32(n, -2.0, 2.0);
+        let refs: Vec<&Tensor> = tensors.iter().collect();
+        let got = ops::weighted_sum(&ws, &refs);
+        for idx in 0..shape[0] * shape[1] {
+            let want: f32 = (0..n).map(|i| ws[i] * tensors[i].f32s()[idx]).sum();
+            assert!((got.f32s()[idx] - want).abs() < 1e-4);
+        }
+    });
+}
+
+#[test]
+fn interpolation_even_layers_recover_source() {
+    // Interpolation with k=2: layer 2l duplicates source layer l exactly.
+    let cs = mk_cfg(3, 16, 2);
+    let cl = mk_cfg(6, 16, 2);
+    let small = small_store(&cs);
+    let big = growth::by_name("interpolation").unwrap().grow(&small, &cs, &cl);
+    for l in 0..cs.layers {
+        assert_eq!(
+            big.expect(&layer_key(2 * l, "q_w")),
+            small.expect(&layer_key(l, "q_w"))
+        );
+    }
+}
