@@ -9,9 +9,9 @@
 //! Run: cargo run --release --example e2e_pretrain -- [--steps N] [--small-steps N]
 //!      (defaults sized for ~30-40 min on one CPU core)
 
-use anyhow::Result;
-
+use ligo::bail;
 use ligo::config::{artifacts_dir, Registry};
+use ligo::error::Result;
 use ligo::coordinator::flops::train_step_flops;
 use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
 use ligo::coordinator::trainer::Trainer;
@@ -62,7 +62,9 @@ fn main() -> Result<()> {
     let mut spent = 0.0f64;
     let step_flops = train_step_flops(&small);
     for step in 0..small_steps {
-        let batch = loader.next();
+        let Some(batch) = loader.next() else {
+            bail!("batch loader stopped early at step {step}");
+        };
         let mut one = |_s: usize| batch.clone();
         let loss = tr.train_step(&mut one)?;
         spent += step_flops;
@@ -102,7 +104,9 @@ fn main() -> Result<()> {
     let mut spent = grown.extra_flops;
     let t2 = Timer::new();
     for step in 0..steps {
-        let batch = loader.next();
+        let Some(batch) = loader.next() else {
+            bail!("batch loader stopped early at step {step}");
+        };
         let mut one = |_s: usize| batch.clone();
         let loss = tr2.train_step(&mut one)?;
         spent += step_flops;

@@ -5,11 +5,10 @@
 //!
 //! Run: cargo run --release --example operator_zoo
 
-use anyhow::Result;
-
 use ligo::config::{artifacts_dir, Registry};
 use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
 use ligo::coordinator::trainer::{eval_store, Trainer};
+use ligo::error::Result;
 use ligo::data::batches::mlm_batch;
 use ligo::data::corpus::Corpus;
 use ligo::experiments::common::{recipe_for, text_batches};

@@ -8,11 +8,10 @@
 //!
 //! Run: cargo run --release --example quickstart
 
-use anyhow::Result;
-
 use ligo::config::{artifacts_dir, Registry};
 use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
 use ligo::coordinator::metrics::savings;
+use ligo::error::Result;
 use ligo::coordinator::trainer::Trainer;
 use ligo::data::batches::mlm_batch;
 use ligo::data::corpus::Corpus;

@@ -4,11 +4,10 @@
 //!
 //! Run: cargo run --release --example vision_growth -- [--steps N]
 
-use anyhow::Result;
-
 use ligo::config::{artifacts_dir, Registry};
 use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
 use ligo::coordinator::metrics::savings;
+use ligo::error::Result;
 use ligo::coordinator::trainer::Trainer;
 use ligo::data::vision::VisionTask;
 use ligo::experiments::common::{recipe_for, vision_batches};

@@ -12,7 +12,10 @@ use ligo::util::bench::bench;
 use ligo::util::rng::Rng;
 
 fn main() {
-    let reg = Registry::load(&artifacts_dir()).unwrap();
+    let Ok(reg) = Registry::load(&artifacts_dir()) else {
+        eprintln!("no artifacts; run `make artifacts`");
+        return;
+    };
     let bert = reg.model("bert_base").unwrap().clone();
     let gpt = reg.model("gpt_base").unwrap().clone();
     let vit = reg.model("vit_b").unwrap().clone();
@@ -43,5 +46,7 @@ fn main() {
     let b2 = bert.clone();
     let loader = Loader::spawn(
         Box::new(move |s| mlm_batch(&c2, &b2, &mut Rng::new(s as u64))), 8);
-    bench("loader.next() [prefetched]", 5, 50, || loader.next());
+    bench("loader.next() [prefetched]", 5, 50, || {
+        loader.next().expect("producer thread is alive")
+    });
 }

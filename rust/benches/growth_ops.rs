@@ -1,30 +1,50 @@
-//! Bench: growth-operator application cost (pure rust, parameter-space) and
-//! the LiGO apply artifact, per pair. Growth is off the training hot path
-//! but bounds how cheaply a framework can restart from a smaller model.
+//! Bench: growth-operator application cost (pure rust, parameter-space),
+//! the native LiGO operator, and — when a PJRT backend is available — the
+//! LiGO apply artifact, per pair. Growth is off the training hot path but
+//! bounds how cheaply a framework can restart from a smaller model.
 
 use ligo::config::{artifacts_dir, Registry};
 use ligo::growth;
-use ligo::runtime::Runtime;
+use ligo::growth::ligo::Ligo;
+use ligo::growth::GrowthOperator;
+use ligo::runtime::{Manifest, Runtime};
 use ligo::tensor::store::Store;
 use ligo::util::bench::bench;
 
 fn main() {
-    let Ok(rt) = Runtime::cpu(artifacts_dir()) else { return };
-    let reg = Registry::load(&artifacts_dir()).unwrap();
+    let Ok(reg) = Registry::load(&artifacts_dir()) else {
+        eprintln!("no artifacts; run `make artifacts`");
+        return;
+    };
     let small = reg.model("bert_small").unwrap().clone();
     let large = reg.model("bert_base").unwrap().clone();
-    let exe = rt.load("grad_bert_small").unwrap();
-    let params = Store::det_init(&exe.manifest.shapes_of("params"), 0);
+    // the manifest is plain JSON (no runtime backend needed); on a
+    // config-only artifacts dir, fall back to the native tensor set, which
+    // uses the same naming scheme and det-init
+    let params = match Manifest::load(&artifacts_dir(), "grad_bert_small") {
+        Ok(manifest) => Store::det_init(&manifest.shapes_of("params"), 0),
+        Err(_) => ligo::growth::testutil::small_store(&small),
+    };
     println!("== growth_ops: bert_small -> bert_base ==");
     for name in growth::ALL {
         let op = growth::by_name(name).unwrap();
         bench(&format!("grow/{name}"), 2, 15, || op.grow(&params, &small, &large));
     }
-    // LiGO apply through the artifact (the learned-path equivalent)
-    let apply = rt.load("ligo_apply_bert_small__bert_base").unwrap();
-    let m = ligo::coordinator::growth_manager::ligo_init_store(
-        &apply.manifest.shapes_of("ligo"), 0.01, 0);
-    bench("grow/ligo_apply_artifact", 2, 15, || {
-        apply.run(&[("ligo", &m), ("small", &params)]).unwrap()
+    // native LiGO: init + surrogate M-learning + apply (no artifacts)
+    let native = Ligo { steps: 10, ..Default::default() };
+    bench("grow/ligo_native[10 M-steps]", 2, 5, || {
+        native.grow(&params, &small, &large)
     });
+    // LiGO apply through the artifact (the pjrt fast path), when executable
+    let rt = Runtime::cpu(artifacts_dir()).unwrap();
+    match rt.load("ligo_apply_bert_small__bert_base") {
+        Ok(apply) => {
+            let m = ligo::coordinator::growth_manager::ligo_init_store(
+                &apply.manifest.shapes_of("ligo"), 0.01, 0);
+            bench("grow/ligo_apply_artifact", 2, 15, || {
+                apply.run(&[("ligo", &m), ("small", &params)]).unwrap()
+            });
+        }
+        Err(e) => eprintln!("skipping artifact apply bench: {e}"),
+    }
 }

@@ -9,8 +9,15 @@ use ligo::util::bench::fmt_t;
 use ligo::util::timer::Timer;
 
 fn main() {
-    let Ok(rt) = Runtime::cpu(artifacts_dir()) else { return };
-    let reg = Registry::load(&artifacts_dir()).unwrap();
+    let Ok(reg) = Registry::load(&artifacts_dir()) else {
+        eprintln!("no artifacts; run `make artifacts`");
+        return;
+    };
+    let rt = Runtime::cpu(artifacts_dir()).unwrap();
+    if rt.backend_name() == "null" {
+        eprintln!("no executable backend (build with --features pjrt); skipping");
+        return;
+    }
     let out = std::env::temp_dir().join("ligo_bench_tables");
     let _ = std::fs::remove_dir_all(&out);
     println!("== paper_tables: micro-scale end-to-end per table/figure ==");

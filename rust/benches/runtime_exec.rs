@@ -11,11 +11,15 @@ use ligo::util::bench::bench;
 use ligo::util::rng::Rng;
 
 fn main() {
-    let Ok(rt) = Runtime::cpu(artifacts_dir()) else {
+    let Ok(reg) = Registry::load(&artifacts_dir()) else {
         eprintln!("no artifacts; run `make artifacts`");
         return;
     };
-    let reg = Registry::load(&artifacts_dir()).unwrap();
+    let rt = Runtime::cpu(artifacts_dir()).unwrap();
+    if rt.backend_name() == "null" {
+        eprintln!("no executable backend (build with --features pjrt); skipping");
+        return;
+    }
     println!("== runtime_exec: PJRT execute latency per artifact ==");
     for name in ["bert_small", "bert_base", "bert_large", "gpt_base", "vit_s"] {
         let cfg = reg.model(name).unwrap().clone();

@@ -13,8 +13,15 @@ use ligo::util::bench::bench;
 use ligo::util::rng::Rng;
 
 fn main() {
-    let Ok(rt) = Runtime::cpu(artifacts_dir()) else { return };
-    let reg = Registry::load(&artifacts_dir()).unwrap();
+    let Ok(reg) = Registry::load(&artifacts_dir()) else {
+        eprintln!("no artifacts; run `make artifacts`");
+        return;
+    };
+    let rt = Runtime::cpu(artifacts_dir()).unwrap();
+    if rt.backend_name() == "null" {
+        eprintln!("no executable backend (build with --features pjrt); skipping");
+        return;
+    }
     println!("== train_step: coordinator step decomposition ==");
     for name in ["bert_small", "bert_base", "gpt_base"] {
         let cfg = reg.model(name).unwrap().clone();

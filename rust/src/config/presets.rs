@@ -4,8 +4,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
+use crate::error::{Context, Error, Result};
 use crate::util::json::Json;
 
 /// Mirror of python `ModelConfig`.
@@ -89,7 +88,7 @@ impl Registry {
         let path = artifacts.join("configs.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("read {path:?} — run `make artifacts` first"))?;
-        let j = Json::parse(&text).map_err(anyhow::Error::msg)?;
+        let j = Json::parse(&text).map_err(Error::msg)?;
         let mut models = BTreeMap::new();
         for (name, mj) in j.get("models").and_then(Json::as_obj).context("models")? {
             models.insert(name.clone(), ModelConfig::from_json(mj)?);

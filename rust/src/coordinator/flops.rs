@@ -82,6 +82,13 @@ pub fn ligo_step_flops(small: &ModelConfig, large: &ModelConfig) -> f64 {
     3.0 * ligo_apply_flops(small, large) + train_step_flops(large)
 }
 
+/// FLOPs of one *native* surrogate M-step (growth_manager fallback path):
+/// forward expansion + analytic gradients through `B W A^T` (~apply x2),
+/// with no large-model fwd/bwd — that is exactly what the surrogate saves.
+pub fn ligo_native_step_flops(small: &ModelConfig, large: &ModelConfig) -> f64 {
+    3.0 * ligo_apply_flops(small, large)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +126,14 @@ mod tests {
         let l = mk_cfg(6, 72, 6);
         let ratio = ligo_step_flops(&s, &l) / train_step_flops(&l);
         assert!(ratio > 1.0 && ratio < 10.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn native_step_is_cheaper_than_task_loss_step() {
+        let s = mk_cfg(3, 48, 4);
+        let l = mk_cfg(6, 72, 6);
+        assert!(ligo_native_step_flops(&s, &l) < ligo_step_flops(&s, &l));
+        assert!(ligo_native_step_flops(&s, &l) > 0.0);
     }
 
     #[test]

@@ -3,21 +3,28 @@
 //! 1. initialize M with the stacking + neuron-duplication pattern
 //!    (Prop. 1: LiGO's family contains StackBERT/Net2Net, so this start
 //!    point *is* the best non-learned baseline);
-//! 2. run N (default 100) SGD-momentum steps on M through the
-//!    `ligo_grad_{s}__{t}` artifact (loss of the expanded model, gradients
-//!    w.r.t. M only — the small model's weights stay frozen);
-//! 3. materialize Theta_large = M(Theta_small) via `ligo_apply_{s}__{t}`;
+//! 2. run N (default 100) SGD-momentum steps on M;
+//! 3. materialize Theta_large = M(Theta_small);
 //! 4. account the extra FLOPs (Table 3) and hand the params to the trainer.
+//!
+//! Routing goes through the runtime's [`Backend`](crate::runtime::Backend):
+//! when the `ligo_grad_{s}__{t}` / `ligo_apply_{s}__{t}` artifacts compile
+//! (the `pjrt`-feature fast path), M trains against the expanded model's
+//! *task loss*, exactly as the paper prescribes. Otherwise the manager
+//! falls back to the native operator ([`crate::growth::ligo`]), which
+//! learns M on the surrogate least-squares objective — no artifacts, no
+//! XLA, same operator family.
 
-use anyhow::{Context, Result};
+use std::sync::Arc;
 
 use crate::config::ModelConfig;
 use crate::coordinator::flops;
 use crate::coordinator::optim::Sgd;
-use crate::runtime::Runtime;
+use crate::error::{Context, Result};
+use crate::log_info;
+use crate::runtime::{Executable, Runtime};
 use crate::tensor::{store::Store, Tensor};
 use crate::util::rng::Rng;
-use crate::log_info;
 
 /// Hyperparameters of the M-learning phase.
 #[derive(Debug, Clone)]
@@ -66,9 +73,42 @@ pub fn ligo_init_store(shapes: &[(String, Vec<usize>)], noise: f32, seed: u64) -
 }
 
 /// Grow `small_params` into the target config by learning M on batches from
-/// `batches` (the pretraining distribution). Pure-baseline growth operators
-/// live in `crate::growth`; this is the learned one.
+/// `batches` (the pretraining distribution). Tries the artifact fast path
+/// first; falls back to the native LiGO operator **only** when the backend
+/// cannot load/compile the artifacts (default no-`pjrt` build, or artifacts
+/// not built). Errors from the M-training loop itself are real failures and
+/// propagate — they must not silently switch the training objective.
 pub fn ligo_grow(
+    rt: &Runtime,
+    small: &ModelConfig,
+    large: &ModelConfig,
+    small_params: &Store,
+    batches: &mut dyn FnMut(usize) -> Store,
+    opts: &LigoOptions,
+) -> Result<Grown> {
+    let pair = format!("{}__{}", small.name, large.name);
+    let loaded = rt
+        .load(&format!("ligo_grad_{pair}"))
+        .and_then(|grad| rt.load(&format!("ligo_apply_{pair}")).map(|apply| (grad, apply)));
+    match loaded {
+        Ok((grad, apply)) => {
+            ligo_train_artifact(&grad, &apply, small, large, small_params, batches, opts)
+        }
+        Err(e) => {
+            log_info!(
+                "LiGO artifacts unavailable for {}->{} ({e}); using the native operator",
+                small.name,
+                large.name
+            );
+            ligo_grow_native(small, large, small_params, opts)
+        }
+    }
+}
+
+/// The `pjrt`-feature fast path: M trained on the expanded model's task
+/// loss through the `ligo_grad_{s}__{t}` artifact, applied via
+/// `ligo_apply_{s}__{t}`. No fallback: artifact-load errors surface here.
+pub fn ligo_grow_artifact(
     rt: &Runtime,
     small: &ModelConfig,
     large: &ModelConfig,
@@ -81,7 +121,21 @@ pub fn ligo_grow(
         .load(&format!("ligo_grad_{pair}"))
         .with_context(|| format!("no ligo_grad artifact for pair {pair}"))?;
     let apply = rt.load(&format!("ligo_apply_{pair}"))?;
+    ligo_train_artifact(&grad, &apply, small, large, small_params, batches, opts)
+}
 
+/// The M-training loop over loaded artifacts (shared by [`ligo_grow`] and
+/// [`ligo_grow_artifact`]).
+#[allow(clippy::too_many_arguments)]
+fn ligo_train_artifact(
+    grad: &Arc<Executable>,
+    apply: &Arc<Executable>,
+    small: &ModelConfig,
+    large: &ModelConfig,
+    small_params: &Store,
+    batches: &mut dyn FnMut(usize) -> Store,
+    opts: &LigoOptions,
+) -> Result<Grown> {
     let timer = crate::util::timer::Timer::new();
     let mut m = ligo_init_store(&grad.manifest.shapes_of("ligo"), opts.init_noise, opts.seed);
     let mut sgd = Sgd::new(&m, opts.momentum);
@@ -91,8 +145,8 @@ pub fn ligo_grow(
         let out = grad.run(&[("ligo", &m), ("small", small_params), ("batch", &batch)])?;
         last_loss = out.scalar("loss").unwrap_or(f32::NAN);
         let grads = out.groups.get("grads").expect("ligo grads");
-        // cosine-ish decay over the short M-learning phase
-        let lr = opts.lr * (1.0 - 0.5 * step as f32 / opts.steps.max(1) as f32);
+        // cosine-ish decay over the short M-learning phase (shared schedule)
+        let lr = crate::growth::ligo::m_lr_at(opts.lr, step, opts.steps);
         sgd.step(&mut m, grads, lr);
         if step % 25 == 0 {
             log_info!("ligo M-step {step}: loss {last_loss:.4}");
@@ -109,13 +163,38 @@ pub fn ligo_grow(
     Ok(Grown { params, extra_flops, wall_s: timer.elapsed(), final_m_loss: last_loss })
 }
 
+/// The native path: the [`crate::growth::ligo::Ligo`] operator (surrogate
+/// M-learning), with FLOPs accounted analytically — M-steps backprop only
+/// through the expansion, not a large-model fwd/bwd, hence the cheaper
+/// per-step cost.
+pub fn ligo_grow_native(
+    small: &ModelConfig,
+    large: &ModelConfig,
+    small_params: &Store,
+    opts: &LigoOptions,
+) -> Result<Grown> {
+    let timer = crate::util::timer::Timer::new();
+    let op = crate::growth::ligo::Ligo {
+        steps: opts.steps,
+        lr: opts.lr,
+        momentum: opts.momentum,
+        noise: opts.init_noise,
+        seed: opts.seed,
+    };
+    let (params, final_m_loss) = op.grow_with_loss(small_params, small, large);
+    let extra_flops = opts.steps as f64 * flops::ligo_native_step_flops(small, large)
+        + flops::ligo_apply_flops(small, large);
+    Ok(Grown { params, extra_flops, wall_s: timer.elapsed(), final_m_loss })
+}
+
 /// Depth-only / width-only variants (Fig. 6) use the same entry point with
 /// the ablation pairs (bert_d3w72 -> bert_base, bert_d6w48 -> bert_base);
-/// the artifact's M simply lacks the other direction's parameters.
+/// M simply lacks the other direction's parameters.
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::growth::testutil::{mk_cfg, small_store};
 
     #[test]
     fn init_pattern_is_stack_plus_noise() {
@@ -149,5 +228,32 @@ mod tests {
     #[test]
     fn default_options_match_paper() {
         assert_eq!(LigoOptions::default().steps, 100);
+    }
+
+    #[test]
+    fn ligo_grow_falls_back_to_native_without_artifacts() {
+        let rt = Runtime::cpu(std::env::temp_dir().join("ligo_gm_no_artifacts")).unwrap();
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        let opts = LigoOptions { steps: 5, ..Default::default() };
+        let mut batches = |_s: usize| Store::new();
+        let grown = ligo_grow(&rt, &cs, &cl, &small, &mut batches, &opts).unwrap();
+        assert!(grown.final_m_loss.is_finite());
+        assert!(grown.extra_flops > 0.0);
+        assert_eq!(grown.params.len(), small_store(&cl).len());
+        assert_eq!(grown.params.expect("L03_q_w").shape, vec![12, 12]);
+    }
+
+    #[test]
+    fn native_flops_accounting_scales_with_steps() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        let g5 = ligo_grow_native(&cs, &cl, &small, &LigoOptions { steps: 5, ..Default::default() })
+            .unwrap();
+        let g9 = ligo_grow_native(&cs, &cl, &small, &LigoOptions { steps: 9, ..Default::default() })
+            .unwrap();
+        assert!(g9.extra_flops > g5.extra_flops);
     }
 }

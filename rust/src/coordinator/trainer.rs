@@ -5,9 +5,8 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use crate::config::{ModelConfig, TrainConfig};
+use crate::error::Result;
 use crate::coordinator::flops;
 use crate::coordinator::metrics::Curve;
 use crate::coordinator::optim::{accumulate, AdamW};

@@ -38,9 +38,13 @@ impl Loader {
         Loader { rx, handle: Some(handle), stop_tx: Some(stop_tx) }
     }
 
-    /// Blocking fetch of the next batch.
-    pub fn next(&self) -> Store {
-        self.rx.recv().expect("loader thread terminated")
+    /// Blocking fetch of the next batch. Returns `None` once the producer
+    /// thread has exited (stop requested, batch closure panicked, or a
+    /// finite stream ended) and the prefetch queue has drained — callers
+    /// decide whether that is the end of an epoch or a hard error, instead
+    /// of the loader panicking on their behalf.
+    pub fn next(&self) -> Option<Store> {
+        self.rx.recv().ok()
     }
 }
 
@@ -90,7 +94,7 @@ mod tests {
     fn loader_produces_in_order() {
         let l = Loader::spawn(Box::new(counter_batch), 4);
         for expect in 0..10 {
-            let b = l.next();
+            let b = l.next().expect("producer is alive");
             assert_eq!(b.expect("step").i32s()[0], expect);
         }
     }
@@ -100,6 +104,27 @@ mod tests {
         let l = Loader::spawn(Box::new(counter_batch), 2);
         let _ = l.next();
         drop(l); // must not hang
+    }
+
+    #[test]
+    fn dead_producer_yields_none_not_panic() {
+        // Regression: next() used to panic via expect() when the producer
+        // thread exited. A producer that dies (here: panics on step 2) must
+        // surface as None after the prefetched batches drain.
+        let l = Loader::spawn(
+            Box::new(|step| {
+                assert!(step < 2, "synthetic producer failure");
+                counter_batch(step)
+            }),
+            1,
+        );
+        let mut seen = 0;
+        while let Some(b) = l.next() {
+            assert_eq!(b.expect("step").i32s()[0], seen);
+            seen += 1;
+            assert!(seen <= 2, "producer only made 2 batches");
+        }
+        assert!(seen <= 2);
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! In-tree error handling (`anyhow` is unavailable offline, like the other
+//! external-crate substrates in `util/`): a single message-chain [`Error`]
+//! with the [`Context`] extension trait and the [`bail!`](crate::bail) macro,
+//! mirroring the `anyhow` surface the codebase uses.
+
+use std::fmt;
+
+/// A contextual error: the innermost cause prefixed by each `context` layer,
+/// e.g. `"read artifacts/configs.json: No such file or directory"`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message (the `anyhow::Error::msg`
+    /// equivalent).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap(self, c: impl fmt::Display) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Debug prints the message chain too: `unwrap()`/`expect()` and
+// `fn main() -> Result<()>` show the human-readable chain, not a struct dump.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Any std error converts via `?`, flattening its source chain. `Error`
+// itself intentionally does NOT implement `std::error::Error`, so this
+// blanket impl cannot collide with the reflexive `From<Error> for Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg = format!("{msg}: {s}");
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Context`-style helpers on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`] (the `anyhow::bail!` equivalent).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 7)
+    }
+
+    #[test]
+    fn bail_formats() {
+        assert_eq!(fails().unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e: Result<()> = fails().context("outer");
+        assert_eq!(e.unwrap_err().to_string(), "outer: boom 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Some(3u32).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn std_errors_convert_with_source_chain() {
+        let io = std::fs::read_to_string("/definitely/not/a/file");
+        let e: Result<String> = io.with_context(|| format!("read {}", "f"));
+        let msg = e.unwrap_err().to_string();
+        assert!(msg.starts_with("read f: "), "{msg}");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "12".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 12);
+    }
+}

@@ -4,9 +4,8 @@
 //! fresh task head (det-init), fine-tunes with the finetune recipe, and
 //! reports held-out accuracy — the numbers in Tables 1/2/5/6.
 
-use anyhow::Result;
-
 use crate::config::TrainConfig;
+use crate::error::Result;
 use crate::coordinator::optim::AdamW;
 use crate::coordinator::trainer::eval_store;
 use crate::runtime::Runtime;

@@ -4,8 +4,6 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
-
 use crate::config::{ModelConfig, Registry, TrainConfig};
 use crate::coordinator::growth_manager::{ligo_grow, LigoOptions};
 use crate::coordinator::metrics::{savings, write_report, Curve};
@@ -13,6 +11,7 @@ use crate::coordinator::trainer::{Batches, Trainer};
 use crate::data::batches::{lm_batch, mlm_batch};
 use crate::data::corpus::Corpus;
 use crate::data::vision::VisionTask;
+use crate::error::Result;
 use crate::growth;
 use crate::runtime::Runtime;
 use crate::tensor::{io, store::Store};

@@ -6,7 +6,7 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::config::Registry;
 use crate::coordinator::metrics::Curve;

@@ -8,10 +8,10 @@ pub mod common;
 pub mod figures;
 pub mod tables;
 
-use anyhow::{bail, Result};
-
-use crate::runtime::Runtime;
+use crate::bail;
 use crate::config::Registry;
+use crate::error::Result;
+use crate::runtime::Runtime;
 
 /// All experiment ids in paper order.
 pub const ALL: [&str; 14] = [

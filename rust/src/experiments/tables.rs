@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::config::{ModelConfig, Registry, TrainConfig};
 use crate::coordinator::growth_manager::LigoOptions;

@@ -1,0 +1,702 @@
+//! Native LiGO — the paper's learned Linear Growth Operator (§3.2-3.3,
+//! Algorithm 1) ported from `python/compile/ligo.py` onto the named tensor
+//! store, so `growth::by_name("ligo")` works end to end with no AOT
+//! artifacts and no XLA.
+//!
+//! The growth map  vec(Theta_new) = (w (x) I) . blockdiag(A_l (x) B_l)
+//! vec(Theta)  is applied exactly as Algorithm 1: a width pass that grows
+//! every small-model tensor via the fused triple product `B W A^T`
+//! ([`crate::tensor::ops::expand`]), followed by a depth pass that forms
+//! each large layer as a learned linear blend of the width-grown small
+//! layers ([`crate::tensor::ops::weighted_sum`]).
+//!
+//! Weight tying (Appendix B.1), which makes M learnable from ~100 steps:
+//!   * `A^k = B_emb^T` for k in {Q, K, V, fc1}  (residual-stream inputs)
+//!   * `A^O = B_V^T`,  `A^fc2 = B_fc1^T`        (inner-dim alignment)
+//!   * `B^O = B^fc2 = B_emb`                    (residual-stream outputs)
+//!   * biases / LayerNorms grow with their module's out-expansion matrix
+//!   * output head: `A^out = B_emb^T`, no out-expansion
+//!
+//! Learned LiGO parameters (a flat [`Store`], same names as the AOT
+//! manifests' "ligo" group): `B_emb, B_q, B_k, B_v` (D2, D1), `B_fc1`
+//! (F2, F1), and per-module depth blends `w_q .. w_ln2` (L2, L1). The
+//! *untied* general form of the operator additionally admits `A_emb, A_v,
+//! A_fc1` in-expansion matrices; Prop. 1's exact-equivalence instances
+//! (Net2Net's multiplicity-normalized selection) live in that form, while
+//! the learned path keeps the tied parameterization above.
+//!
+//! M-learning: the artifact path (feature `pjrt`) trains M against the
+//! expanded model's task loss via `ligo_grad_*`. This native path trains M
+//! with SGD-momentum on a *surrogate* objective — a least-squares fit of
+//! the expanded weight matrices (and embeddings) to an ensemble of the
+//! strongest non-learned baselines (StackBERT + Interpolation), with exact
+//! analytic gradients through the `B W A^T` factorization and the depth
+//! blends. Learning M against the native task loss needs a native forward
+//! pass (ROADMAP open item).
+
+use crate::config::ModelConfig;
+use crate::tensor::ops;
+use crate::tensor::store::Store;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::stacking::{Interpolation, StackBert};
+use super::{layer_key, layer_suffixes, GrowthOperator};
+
+/// Per-module depth-blend families, in python `ligo.DEPTH_MODULES` order.
+pub const DEPTH_MODULES: [&str; 8] = ["q", "k", "v", "o", "ln1", "fc1", "fc2", "ln2"];
+/// Extra CaiT per-layer scales that also get depth blends.
+pub const CAIT_DEPTH_MODULES: [&str; 2] = ["ls1", "ls2"];
+
+/// Per-layer suffixes of the CaiT class-attention stage (width-grown only;
+/// its depth is fixed, mirroring python `ligo_apply`).
+const CLS_SUFFIXES: [&str; 16] = [
+    "q_w", "q_b", "k_w", "k_b", "v_w", "v_b", "o_w", "o_b", "ln1_g", "ln1_b",
+    "fc1_w", "fc1_b", "fc2_w", "fc2_b", "ln2_g", "ln2_b",
+];
+
+fn depth_modules(cfg: &ModelConfig) -> Vec<&'static str> {
+    let mut v = DEPTH_MODULES.to_vec();
+    if cfg.family == "cait" {
+        v.extend(CAIT_DEPTH_MODULES);
+    }
+    v
+}
+
+/// Depth-blend module of a per-layer suffix: "q_w" -> "q", "ln1_g" -> "ln1",
+/// "ls1" -> "ls1".
+fn module_of(suffix: &str) -> &str {
+    suffix.rsplit_once('_').map(|(m, _)| m).unwrap_or(suffix)
+}
+
+// ---------------------------------------------------------------------------
+// Initialization of M (stacking + neuron-duplication pattern, Prop. 1)
+// ---------------------------------------------------------------------------
+
+/// (rows, cols) selection matrix whose row i selects small index (i mod
+/// cols): the Net2Net neuron-duplication / StackBERT stacking pattern.
+pub fn dup_matrix(rows: usize, cols: usize) -> Tensor {
+    let mut t = Tensor::zeros(&[rows, cols]);
+    let v = t.f32s_mut();
+    for r in 0..rows {
+        v[r * cols + (r % cols)] = 1.0;
+    }
+    t
+}
+
+/// The duplication pattern with each column scaled by 1/multiplicity —
+/// the in-expansion (`A`) side of Net2Net's function-preserving growth
+/// (paper Eq. 2's D^-1).
+pub fn normalized_dup_matrix(rows: usize, cols: usize) -> Tensor {
+    let mut counts = vec![0usize; cols];
+    for r in 0..rows {
+        counts[r % cols] += 1;
+    }
+    let mut t = Tensor::zeros(&[rows, cols]);
+    let v = t.f32s_mut();
+    for r in 0..rows {
+        let c = r % cols;
+        v[r * cols + c] = 1.0 / counts[c] as f32;
+    }
+    t
+}
+
+fn noisy_dup(rows: usize, cols: usize, noise: f32, rng: &mut Rng) -> Tensor {
+    let mut t = dup_matrix(rows, cols);
+    if noise != 0.0 {
+        for v in t.f32s_mut() {
+            *v += noise * rng.normal();
+        }
+    }
+    t
+}
+
+/// Initialize the LiGO parameter store M from the config pair: width
+/// matrices get the cyclic duplication pattern, depth matrices the stacking
+/// pattern (both + symmetry-breaking noise) — mirrors python `ligo_init`.
+/// Width params are omitted when dims match (depth-only growth, Fig. 6);
+/// depth params are omitted when layer counts match (width-only growth).
+pub fn ligo_init(cfg_s: &ModelConfig, cfg_l: &ModelConfig, noise: f32, seed: u64) -> Store {
+    let mut rng = Rng::new(seed ^ 0x11C0);
+    let mut m = Store::new();
+    let (d1, d2) = (cfg_s.dim, cfg_l.dim);
+    let (f1, f2) = (cfg_s.ffn(), cfg_l.ffn());
+    if d1 != d2 || f1 != f2 {
+        m.insert("B_emb", noisy_dup(d2, d1, noise, &mut rng));
+        m.insert("B_q", noisy_dup(d2, d1, noise, &mut rng));
+        m.insert("B_k", noisy_dup(d2, d1, noise, &mut rng));
+        m.insert("B_v", noisy_dup(d2, d1, noise, &mut rng));
+        m.insert("B_fc1", noisy_dup(f2, f1, noise, &mut rng));
+    }
+    if cfg_s.layers != cfg_l.layers {
+        for module in depth_modules(cfg_s) {
+            m.insert(
+                format!("w_{module}"),
+                noisy_dup(cfg_l.layers, cfg_s.layers, noise, &mut rng),
+            );
+        }
+    }
+    m
+}
+
+/// Depth-blend initialization patterns for the Prop. 1 special cases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepthInit {
+    /// StackBERT: layer l blends from layer (l mod L1).
+    Stack,
+    /// Interpolation / InterBERT: layer l blends from floor(l / ceil(L2/L1)).
+    Interpolate,
+    /// MSLT: new layers duplicate the top small layer.
+    TopDup,
+    /// Net2Net-style near-identity depth: existing layers keep themselves,
+    /// new layers copy the top layer but zero the residual-writing modules
+    /// (o, fc2) so the new blocks start as no-ops.
+    NearIdentity,
+}
+
+fn depth_pattern(init: DepthInit, module: &str, l2: usize, l1: usize) -> Tensor {
+    let mut w = Tensor::zeros(&[l2, l1]);
+    let k = l2.div_ceil(l1);
+    let v = w.f32s_mut();
+    for i in 0..l2 {
+        let src = match init {
+            DepthInit::Stack => i % l1,
+            DepthInit::Interpolate => (i / k.max(1)).min(l1 - 1),
+            DepthInit::TopDup => i.min(l1 - 1),
+            DepthInit::NearIdentity => {
+                if i >= l1 && (module == "o" || module == "fc2") {
+                    continue; // zero row: the new block's residual branch is a no-op
+                }
+                i.min(l1 - 1)
+            }
+        };
+        v[i * l1 + src] = 1.0;
+    }
+    w
+}
+
+/// Noise-free selection-pattern M (Prop. 1): plain duplication on the
+/// out-expansions, optionally multiplicity-normalized duplication on the
+/// untied in-expansions (`A_emb`/`A_v`/`A_fc1`, matching Net2Net's D^-1),
+/// and the chosen depth pattern. With `normalize_inputs` these instances
+/// reproduce the non-learned zoo operators exactly (see tests/prop_ligo.rs).
+pub fn selection_m(
+    cfg_s: &ModelConfig,
+    cfg_l: &ModelConfig,
+    depth: DepthInit,
+    normalize_inputs: bool,
+) -> Store {
+    let mut m = Store::new();
+    let (d1, d2) = (cfg_s.dim, cfg_l.dim);
+    let (f1, f2) = (cfg_s.ffn(), cfg_l.ffn());
+    if d1 != d2 || f1 != f2 {
+        m.insert("B_emb", dup_matrix(d2, d1));
+        m.insert("B_q", dup_matrix(d2, d1));
+        m.insert("B_k", dup_matrix(d2, d1));
+        m.insert("B_v", dup_matrix(d2, d1));
+        m.insert("B_fc1", dup_matrix(f2, f1));
+        if normalize_inputs {
+            m.insert("A_emb", normalized_dup_matrix(d2, d1));
+            m.insert("A_v", normalized_dup_matrix(d2, d1));
+            m.insert("A_fc1", normalized_dup_matrix(f2, f1));
+        }
+    }
+    if cfg_s.layers != cfg_l.layers {
+        for module in depth_modules(cfg_s) {
+            m.insert(
+                format!("w_{module}"),
+                depth_pattern(depth, module, cfg_l.layers, cfg_s.layers),
+            );
+        }
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Applying M: width pass (fused B W A^T) + depth pass (learned blends)
+// ---------------------------------------------------------------------------
+
+/// Resolved width-expansion matrices (identity fallback for depth-only M,
+/// tied fallback `A_x = B_x` when no untied in-expansion is present).
+struct WidthCtx {
+    b_emb: Tensor,
+    b_q: Tensor,
+    b_k: Tensor,
+    b_v: Tensor,
+    b_fc1: Tensor,
+    a_emb: Tensor,
+    a_v: Tensor,
+    a_fc1: Tensor,
+}
+
+fn get_b(m: &Store, name: &str, rows: usize, cols: usize) -> Tensor {
+    match m.get(name) {
+        Some(t) => {
+            assert_eq!(t.shape, vec![rows, cols], "LiGO width matrix {name}");
+            t.clone()
+        }
+        None => {
+            assert_eq!(rows, cols, "missing LiGO matrix {name} but dims differ: {rows} vs {cols}");
+            ops::eye(rows)
+        }
+    }
+}
+
+fn get_a(m: &Store, untied: &str, tied: &Tensor, rows: usize, cols: usize) -> Tensor {
+    match m.get(untied) {
+        Some(t) => {
+            assert_eq!(t.shape, vec![rows, cols], "LiGO width matrix {untied}");
+            t.clone()
+        }
+        None => tied.clone(),
+    }
+}
+
+fn width_ctx(m: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> WidthCtx {
+    let (d1, d2) = (cfg_s.dim, cfg_l.dim);
+    let (f1, f2) = (cfg_s.ffn(), cfg_l.ffn());
+    let b_emb = get_b(m, "B_emb", d2, d1);
+    let b_q = get_b(m, "B_q", d2, d1);
+    let b_k = get_b(m, "B_k", d2, d1);
+    let b_v = get_b(m, "B_v", d2, d1);
+    let b_fc1 = get_b(m, "B_fc1", f2, f1);
+    let a_emb = get_a(m, "A_emb", &b_emb, d2, d1);
+    let a_v = get_a(m, "A_v", &b_v, d2, d1);
+    let a_fc1 = get_a(m, "A_fc1", &b_fc1, f2, f1);
+    WidthCtx { b_emb, b_q, b_k, b_v, b_fc1, a_emb, a_v, a_fc1 }
+}
+
+/// Width-grow one per-layer tensor: fused `B W A^T` for matrices (A tied
+/// per Appendix B.1), the module's out-expansion for biases/LayerNorms.
+fn expand_one(ctx: &WidthCtx, suffix: &str, t: &Tensor) -> Tensor {
+    match suffix {
+        "q_w" => ops::expand(&ctx.b_q, t, &ctx.a_emb),
+        "k_w" => ops::expand(&ctx.b_k, t, &ctx.a_emb),
+        "v_w" => ops::expand(&ctx.b_v, t, &ctx.a_emb),
+        "o_w" => ops::expand(&ctx.b_emb, t, &ctx.a_v),
+        "fc1_w" => ops::expand(&ctx.b_fc1, t, &ctx.a_emb),
+        "fc2_w" => ops::expand(&ctx.b_emb, t, &ctx.a_fc1),
+        "q_b" => ops::matvec(&ctx.b_q, t),
+        "k_b" => ops::matvec(&ctx.b_k, t),
+        "v_b" => ops::matvec(&ctx.b_v, t),
+        "fc1_b" => ops::matvec(&ctx.b_fc1, t),
+        "o_b" | "fc2_b" | "ln1_g" | "ln1_b" | "ln2_g" | "ln2_b" | "ls1" | "ls2" => {
+            ops::matvec(&ctx.b_emb, t)
+        }
+        other => panic!("ligo_apply: unknown per-layer suffix '{other}'"),
+    }
+}
+
+/// Width-grow a non-layer tensor by its role (mirrors python `ligo_apply`'s
+/// tail; the head reads the residual stream, so it rides the in-expansion).
+fn expand_nonlayer(ctx: &WidthCtx, name: &str, t: &Tensor) -> Tensor {
+    match name {
+        "emb_tok" | "emb_pos" => ops::matmul_nt(t, &ctx.b_emb),
+        "mlm_bias" | "head_b" | "span_b" => t.clone(),
+        "head_w" | "span_w" => ops::matmul_nt(t, &ctx.a_emb),
+        "final_ln_g" | "final_ln_b" | "emb_cls" | "emb_patch_b" => ops::matvec(&ctx.b_emb, t),
+        "emb_patch_w" => ops::matmul(&ctx.b_emb, t),
+        other => panic!("ligo_apply: unknown non-layer tensor '{other}'"),
+    }
+}
+
+/// Materialize the large model's parameters: Theta_new = M(Theta).
+///
+/// Width pass first (every small tensor through its expansion), then the
+/// per-module depth blends. Missing width matrices fall back to identity
+/// (depth-only M); missing depth blends require equal layer counts
+/// (width-only M).
+pub fn ligo_apply(m: &Store, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+    let ctx = width_ctx(m, cfg_s, cfg_l);
+    let mut out = Store::new();
+    // ---- body layers: width pass, then depth blends ----
+    for suffix in layer_suffixes(cfg_s) {
+        let wide: Vec<Tensor> = (0..cfg_s.layers)
+            .map(|l| expand_one(&ctx, suffix, small.expect(&layer_key(l, suffix))))
+            .collect();
+        match m.get(&format!("w_{}", module_of(suffix))) {
+            Some(w) => {
+                assert_eq!(
+                    w.shape,
+                    vec![cfg_l.layers, cfg_s.layers],
+                    "LiGO depth blend w_{}",
+                    module_of(suffix)
+                );
+                let refs: Vec<&Tensor> = wide.iter().collect();
+                for i in 0..cfg_l.layers {
+                    let row: Vec<f32> = (0..cfg_s.layers).map(|j| w.at2(i, j)).collect();
+                    out.insert(layer_key(i, suffix), ops::weighted_sum(&row, &refs));
+                }
+            }
+            None => {
+                assert_eq!(
+                    cfg_s.layers, cfg_l.layers,
+                    "missing depth blend w_{} but layer counts differ",
+                    module_of(suffix)
+                );
+                for (i, t) in wide.into_iter().enumerate() {
+                    out.insert(layer_key(i, suffix), t);
+                }
+            }
+        }
+    }
+    // ---- non-layer tensors ----
+    for (name, t) in small.iter() {
+        if name.starts_with('L') || name.starts_with('C') {
+            continue;
+        }
+        out.insert(name.clone(), expand_nonlayer(&ctx, name, t));
+    }
+    // ---- CaiT class-attention stage: widths grow, depth is fixed ----
+    if cfg_s.family == "cait" {
+        assert_eq!(cfg_s.cls_layers, cfg_l.cls_layers, "CaiT class-attention depth is fixed");
+        for l in 0..cfg_s.cls_layers {
+            for suffix in CLS_SUFFIXES {
+                let key = format!("C{l:02}_{suffix}");
+                out.insert(key.clone(), expand_one(&ctx, suffix, small.expect(&key)));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Native M-learning: SGD-momentum on the surrogate least-squares objective
+// ---------------------------------------------------------------------------
+
+/// The surrogate fit target: the average of the two strongest non-learned
+/// depth-growth baselines (StackBERT and Interpolation). Fitting M to the
+/// ensemble couples every layer through the shared width matrices, which is
+/// exactly the structure the paper's M-learning exploits.
+pub fn surrogate_target(small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+    let stack = StackBert.grow(small, cfg_s, cfg_l);
+    let interp = Interpolation.grow(small, cfg_s, cfg_l);
+    stack
+        .iter()
+        .map(|(name, t)| {
+            (name.clone(), ops::weighted_sum(&[0.5, 0.5], &[t, interp.expect(name)]))
+        })
+        .collect()
+}
+
+fn sum_sq(t: &Tensor) -> f32 {
+    t.f32s().iter().map(|x| x * x).sum()
+}
+
+fn add_scaled(grads: &mut Store, name: &str, t: &Tensor, s: f32) {
+    if let Some(g) = grads.get_mut(name) {
+        for (gv, tv) in g.f32s_mut().iter_mut().zip(t.f32s()) {
+            *gv += s * tv;
+        }
+        return;
+    }
+    grads.insert(name.to_string(), ops::scale(t, s));
+}
+
+/// Surrogate loss `L(M) = sum_mod mean 0.5 ||Theta_mod(M) - T_mod||^2` over
+/// the six weight-matrix families (+ embedding anchors for B_emb's out
+/// role), with exact analytic gradients w.r.t. every learned entry of M.
+/// Tied in-expansions accumulate their gradient into the shared matrix.
+pub fn surrogate_loss_and_grads(
+    m: &Store,
+    small: &Store,
+    target: &Store,
+    cfg_s: &ModelConfig,
+    cfg_l: &ModelConfig,
+) -> (f32, Store) {
+    let (d1, d2) = (cfg_s.dim, cfg_l.dim);
+    let (f1, f2) = (cfg_s.ffn(), cfg_l.ffn());
+    let (l1, l2) = (cfg_s.layers, cfg_l.layers);
+    // (suffix, blend, B name, untied A, tied A, (o2, o1), (i2, i1))
+    let families = [
+        ("q_w", "w_q", "B_q", "A_emb", "B_emb", (d2, d1), (d2, d1)),
+        ("k_w", "w_k", "B_k", "A_emb", "B_emb", (d2, d1), (d2, d1)),
+        ("v_w", "w_v", "B_v", "A_emb", "B_emb", (d2, d1), (d2, d1)),
+        ("o_w", "w_o", "B_emb", "A_v", "B_v", (d2, d1), (d2, d1)),
+        ("fc1_w", "w_fc1", "B_fc1", "A_emb", "B_emb", (f2, f1), (d2, d1)),
+        ("fc2_w", "w_fc2", "B_emb", "A_fc1", "B_fc1", (d2, d1), (f2, f1)),
+    ];
+    let mut grads = Store::new();
+    let mut loss = 0.0f32;
+    for (suffix, blend, bname, a_untied, a_tied, (o2, o1), (i2, i1)) in families {
+        let b_learned = m.contains(bname);
+        let b = if b_learned {
+            m.expect(bname).clone()
+        } else {
+            assert_eq!(o2, o1, "missing {bname} but out dims differ");
+            ops::eye(o1)
+        };
+        let a_name = if m.contains(a_untied) {
+            Some(a_untied)
+        } else if m.contains(a_tied) {
+            Some(a_tied)
+        } else {
+            None
+        };
+        let a = match a_name {
+            Some(n) => m.expect(n).clone(),
+            None => {
+                assert_eq!(i2, i1, "missing {a_tied} but in dims differ");
+                ops::eye(i1)
+            }
+        };
+        let w = m.get(blend);
+        if w.is_none() {
+            assert_eq!(l1, l2, "missing {blend} but layer counts differ");
+        }
+        let smalls: Vec<&Tensor> = (0..l1).map(|j| small.expect(&layer_key(j, suffix))).collect();
+        let qs: Vec<Tensor> = smalls.iter().map(|wj| ops::matmul(&b, wj)).collect();
+        let ps: Vec<Tensor> = qs.iter().map(|qj| ops::matmul_nt(qj, &a)).collect();
+        let q_refs: Vec<&Tensor> = qs.iter().collect();
+        let p_refs: Vec<&Tensor> = ps.iter().collect();
+        let s = 1.0 / (l2 * ps[0].numel()) as f32;
+        let mut gw = w.map(|_| Tensor::zeros(&[l2, l1]));
+        for i in 0..l2 {
+            let row: Vec<f32> = match w {
+                Some(wt) => (0..l1).map(|j| wt.at2(i, j)).collect(),
+                None => (0..l1).map(|j| if j == i { 1.0 } else { 0.0 }).collect(),
+            };
+            let expanded = ops::weighted_sum(&row, &p_refs);
+            let e = ops::axpy(&expanded, -1.0, target.expect(&layer_key(i, suffix)));
+            loss += 0.5 * s * sum_sq(&e);
+            if b_learned {
+                // dL/dB = E A W_hat^T
+                let w_hat = ops::weighted_sum(&row, &smalls);
+                let gb = ops::matmul_nt(&ops::matmul(&e, &a), &w_hat);
+                add_scaled(&mut grads, bname, &gb, s);
+            }
+            if let Some(n) = a_name {
+                // dL/dA = E^T (B W_hat)
+                let bw_hat = ops::weighted_sum(&row, &q_refs);
+                let ga = ops::matmul(&ops::transpose(&e), &bw_hat);
+                add_scaled(&mut grads, n, &ga, s);
+            }
+            if let Some(g) = gw.as_mut() {
+                // dL/dw[i,j] = <E_i, B W_j A^T>
+                let gv = g.f32s_mut();
+                for (j, pj) in ps.iter().enumerate() {
+                    gv[i * l1 + j] += s * ops::dot(&e, pj);
+                }
+            }
+        }
+        if let Some(g) = gw {
+            add_scaled(&mut grads, blend, &g, 1.0);
+        }
+    }
+    // Embedding anchors ground B_emb's residual-stream out role.
+    if let Some(b_emb) = m.get("B_emb") {
+        for name in ["emb_tok", "emb_pos"] {
+            let (Some(x), Some(t)) = (small.get(name), target.get(name)) else { continue };
+            if x.shape.len() != 2 {
+                continue;
+            }
+            let y = ops::matmul_nt(x, b_emb);
+            let e = ops::axpy(&y, -1.0, t);
+            let s = 1.0 / e.numel() as f32;
+            loss += 0.5 * s * sum_sq(&e);
+            // dL/dB_emb = E^T X
+            let gb = ops::matmul(&ops::transpose(&e), x);
+            add_scaled(&mut grads, "B_emb", &gb, s);
+        }
+    }
+    (loss, grads)
+}
+
+/// The M-phase learning-rate schedule (cosine-ish decay over the short
+/// phase) — one definition shared by this native loop and the artifact
+/// M-training loop in `coordinator::growth_manager`, so the two paths
+/// cannot silently diverge.
+pub fn m_lr_at(lr: f32, step: usize, steps: usize) -> f32 {
+    lr * (1.0 - 0.5 * step as f32 / steps.max(1) as f32)
+}
+
+/// Train M in place with SGD-momentum on the surrogate objective (the
+/// paper's M-optimizer, §3.2 "Training"; lr follows the same cosine-ish
+/// decay as the artifact path). Returns the last evaluated loss (the
+/// initial loss when `steps == 0`).
+pub fn learn_m(
+    m: &mut Store,
+    small: &Store,
+    cfg_s: &ModelConfig,
+    cfg_l: &ModelConfig,
+    steps: usize,
+    lr: f32,
+    momentum: f32,
+) -> f32 {
+    let target = surrogate_target(small, cfg_s, cfg_l);
+    let mut vel: Store = m.iter().map(|(n, t)| (n.clone(), Tensor::zeros(&t.shape))).collect();
+    let mut last = f32::NAN;
+    for step in 0..steps {
+        let (loss, grads) = surrogate_loss_and_grads(m, small, &target, cfg_s, cfg_l);
+        last = loss;
+        let lr_t = m_lr_at(lr, step, steps);
+        for (name, g) in grads.iter() {
+            let Some(p) = m.get_mut(name) else { continue };
+            let v = vel.get_mut(name).expect("velocity").f32s_mut();
+            let pv = p.f32s_mut();
+            for (i, gi) in g.f32s().iter().enumerate() {
+                v[i] = momentum * v[i] + gi;
+                pv[i] -= lr_t * v[i];
+            }
+        }
+    }
+    if steps == 0 {
+        last = surrogate_loss_and_grads(m, small, &target, cfg_s, cfg_l).0;
+    }
+    last
+}
+
+// ---------------------------------------------------------------------------
+// The operator
+// ---------------------------------------------------------------------------
+
+/// The learned LiGO operator, natively: init M (Prop. 1 pattern + noise),
+/// run the M-learning steps on the surrogate objective, apply.
+#[derive(Debug, Clone)]
+pub struct Ligo {
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl Default for Ligo {
+    fn default() -> Self {
+        Ligo { steps: 30, lr: 0.05, momentum: 0.9, noise: 0.01, seed: 0 }
+    }
+}
+
+impl Ligo {
+    /// Grow and also report the final M-learning loss (for the growth
+    /// manager's accounting).
+    pub fn grow_with_loss(
+        &self,
+        small: &Store,
+        cfg_s: &ModelConfig,
+        cfg_l: &ModelConfig,
+    ) -> (Store, f32) {
+        let mut m = ligo_init(cfg_s, cfg_l, self.noise, self.seed);
+        let loss = learn_m(&mut m, small, cfg_s, cfg_l, self.steps, self.lr, self.momentum);
+        (ligo_apply(&m, small, cfg_s, cfg_l), loss)
+    }
+}
+
+impl GrowthOperator for Ligo {
+    fn name(&self) -> &'static str {
+        "ligo"
+    }
+
+    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+        self.grow_with_loss(small, cfg_s, cfg_l).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::{mk_cfg, small_store};
+
+    #[test]
+    fn init_patterns_and_omissions() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let m = ligo_init(&cs, &cl, 0.0, 0);
+        let b = m.expect("B_emb");
+        assert_eq!(b.shape, vec![12, 8]);
+        for r in 0..12 {
+            for c in 0..8 {
+                let want = if c == r % 8 { 1.0 } else { 0.0 };
+                assert_eq!(b.at2(r, c), want, "B_emb[{r},{c}]");
+            }
+        }
+        assert_eq!(m.expect("B_fc1").shape, vec![48, 32]);
+        assert_eq!(m.expect("w_q").shape, vec![4, 2]);
+        assert_eq!(m.expect("w_ln2").shape, vec![4, 2]);
+        assert!(!m.contains("A_emb"), "learned M is tied");
+        // depth-only: width matrices omitted
+        let depth_only = ligo_init(&cs, &mk_cfg(5, 8, 2), 0.0, 0);
+        assert!(!depth_only.contains("B_emb"));
+        assert!(depth_only.contains("w_o"));
+        // width-only: depth blends omitted
+        let width_only = ligo_init(&cs, &mk_cfg(2, 12, 3), 0.0, 0);
+        assert!(width_only.contains("B_emb"));
+        assert!(!width_only.contains("w_q"));
+    }
+
+    #[test]
+    fn init_noise_is_deterministic_per_seed() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let a = ligo_init(&cs, &cl, 0.01, 7);
+        let b = ligo_init(&cs, &cl, 0.01, 7);
+        let c = ligo_init(&cs, &cl, 0.01, 8);
+        assert_eq!(a.expect("B_emb"), b.expect("B_emb"));
+        assert_ne!(a.expect("B_emb"), c.expect("B_emb"));
+    }
+
+    #[test]
+    fn normalized_dup_rows_sum_counts_to_one() {
+        let a = normalized_dup_matrix(12, 8);
+        // each small column's copies sum to 1 (the D^-1 normalization)
+        for c in 0..8 {
+            let sum: f32 = (0..12).map(|r| a.at2(r, c)).sum();
+            assert!((sum - 1.0).abs() < 1e-6, "col {c}: {sum}");
+        }
+    }
+
+    #[test]
+    fn apply_produces_exact_target_shapes_and_names() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        let m = ligo_init(&cs, &cl, 0.01, 3);
+        let big = ligo_apply(&m, &small, &cs, &cl);
+        let native = small_store(&cl);
+        assert_eq!(big.len(), native.len(), "tensor-set parity");
+        for (name, t) in native.iter() {
+            assert_eq!(&big.expect(name).shape, &t.shape, "{name}");
+        }
+    }
+
+    #[test]
+    fn surrogate_learning_reduces_loss() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        let mut m = ligo_init(&cs, &cl, 0.02, 1);
+        let l0 = learn_m(&mut m.clone(), &small, &cs, &cl, 0, 0.05, 0.9);
+        let ln = learn_m(&mut m, &small, &cs, &cl, 60, 0.05, 0.9);
+        assert!(l0.is_finite() && ln.is_finite(), "{l0} {ln}");
+        assert!(l0 > 0.0, "noisy init cannot be at the optimum: {l0}");
+        assert!(ln < l0, "M-learning must descend: {l0} -> {ln}");
+    }
+
+    #[test]
+    fn depth_only_learning_moves_only_blends() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(5, 8, 2);
+        let small = small_store(&cs);
+        let mut m = ligo_init(&cs, &cl, 0.02, 2);
+        let before = m.expect("w_q").clone();
+        let loss = learn_m(&mut m, &small, &cs, &cl, 10, 0.05, 0.9);
+        assert!(loss.is_finite());
+        assert_ne!(m.expect("w_q"), &before, "depth blends must receive gradient");
+        assert!(!m.contains("B_emb"));
+    }
+
+    #[test]
+    fn operator_end_to_end_is_finite_and_deterministic() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        let op = Ligo { steps: 8, ..Default::default() };
+        let (a, loss_a) = op.grow_with_loss(&small, &cs, &cl);
+        let (b, _) = op.grow_with_loss(&small, &cs, &cl);
+        assert_eq!(a, b, "native LiGO is deterministic");
+        assert!(loss_a.is_finite());
+        for (name, t) in a.iter() {
+            assert!(t.f32s().iter().all(|x| x.is_finite()), "{name} has non-finite values");
+        }
+    }
+}

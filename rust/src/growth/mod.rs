@@ -5,13 +5,18 @@
 //! * [`net2net`] — function-preserving width expansion (FPI; Chen et al. 2015 / bert2BERT)
 //! * [`aki`] — advanced knowledge initialization (bert2BERT, Chen et al. 2021)
 //! * [`stacking`] — StackBERT / interpolation / MSLT depth growth (Gong et al. 2019 etc.)
+//! * [`ligo`] — the paper's *learned* operator, ported natively: Prop. 1
+//!   init, the fused `B W A^T` width pass with Appendix B.1 tying, learned
+//!   depth blends, and a native surrogate M-learning loop. The
+//!   task-loss M-learning fast path through the `ligo_grad_*`/`ligo_apply_*`
+//!   artifacts lives in coordinator::growth_manager (feature `pjrt`).
 //!
-//! LiGO itself is *learned*, so its apply path runs through the
-//! `ligo_apply_*` artifact (see coordinator::growth_manager); Prop. 1 tests
-//! verify the zoo's operators are special cases of the LiGO family.
+//! Prop. 1 tests (tests/prop_ligo.rs) verify the zoo's operators are exact
+//! special cases of the LiGO family.
 
 pub mod aki;
 pub mod direct_copy;
+pub mod ligo;
 pub mod net2net;
 pub mod stacking;
 #[doc(hidden)]
@@ -28,7 +33,9 @@ pub trait GrowthOperator {
     fn grow(&self, small: &Store, small_cfg: &ModelConfig, large_cfg: &ModelConfig) -> Store;
 }
 
-/// Operator registry by CLI name.
+/// Operator registry by CLI name. "ligo" resolves to the native learned
+/// operator (surrogate M-learning); the artifact-backed task-loss variant
+/// stays behind `coordinator::growth_manager::ligo_grow`.
 pub fn by_name(name: &str) -> Option<Box<dyn GrowthOperator>> {
     match name {
         "direct_copy" => Some(Box::new(direct_copy::DirectCopy::default())),
@@ -37,11 +44,14 @@ pub fn by_name(name: &str) -> Option<Box<dyn GrowthOperator>> {
         "stackbert" => Some(Box::new(stacking::StackBert)),
         "interpolation" | "interbert" => Some(Box::new(stacking::Interpolation)),
         "msl" | "mslt" => Some(Box::new(stacking::Mslt)),
+        "ligo" => Some(Box::new(ligo::Ligo::default())),
         _ => None,
     }
 }
 
-/// All zoo names (for `ligo inspect operators`).
+/// All *non-learned* zoo names (for `ligo inspect operators` and the
+/// shape/property sweeps; the learned "ligo" operator is registered in
+/// [`by_name`] but benchmarked separately).
 pub const ALL: [&str; 6] = [
     "direct_copy",
     "net2net",
@@ -77,7 +87,7 @@ mod tests {
         for name in ALL {
             assert!(by_name(name).is_some(), "{name}");
         }
-        assert!(by_name("ligo").is_none()); // LiGO goes through the manager
+        assert!(by_name("ligo").is_some(), "native LiGO is registered");
         assert!(by_name("bogus").is_none());
     }
 

@@ -7,15 +7,19 @@
 //!   (`python/compile/kernels/`), lowered AOT.
 //! * **L2 (JAX)** — the transformer families and the LiGO operator
 //!   (`python/compile/`), lowered once to HLO text artifacts.
-//! * **L3 (this crate)** — the coordinator: PJRT runtime, optimizer, data
-//!   pipeline, the growth-operator zoo, the LiGO growth manager, experiment
-//!   harness and CLI. Python never runs at runtime.
+//! * **L3 (this crate)** — the coordinator: a pluggable runtime (the
+//!   `runtime::Backend` trait; PJRT behind the off-by-default `pjrt`
+//!   feature), optimizer, data pipeline, the growth-operator zoo including a
+//!   fully native LiGO port, the LiGO growth manager, experiment harness and
+//!   CLI. Python never runs at runtime, and the default build needs neither
+//!   Python artifacts nor XLA.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod eval;
 pub mod experiments;
 pub mod growth;

@@ -9,9 +9,9 @@
 //!
 //! Python never runs here: artifacts must exist (run `make artifacts` once).
 
-use anyhow::{bail, Context, Result};
-
+use ligo::bail;
 use ligo::config::{artifacts_dir, Registry};
+use ligo::error::{Context, Result};
 use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
 use ligo::coordinator::trainer::Trainer;
 use ligo::data::corpus::Corpus;
@@ -170,7 +170,10 @@ fn run() -> Result<()> {
                     for op in ligo::growth::ALL {
                         println!("{op}");
                     }
-                    println!("ligo (learned; via `ligo grow --op ligo`)");
+                    println!(
+                        "ligo (learned; native surrogate M-learning, or the task-loss \
+                         artifact path when built with --features pjrt)"
+                    );
                 }
                 "artifacts" => {
                     let rt = Runtime::cpu(artifacts_dir())?;

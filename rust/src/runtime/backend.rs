@@ -1,0 +1,72 @@
+//! The pluggable runtime backend: everything that turns an AOT artifact
+//! (HLO text + manifest) into something executable lives behind [`Backend`],
+//! so the coordinator, trainer and growth manager compile and run without
+//! XLA. The PJRT implementation (feature `pjrt`) is in [`super::pjrt`]; the
+//! default build installs [`NullBackend`], which reports artifacts as
+//! unavailable and lets the native code paths (growth operators, native
+//! LiGO) carry the workload.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+
+use super::manifest::{Manifest, TensorSpec};
+
+/// A compiled artifact's execution engine: positional tensors in, positional
+/// tensors out (one per manifest output spec, in manifest order).
+pub trait ExecEngine: Send + Sync {
+    fn execute(&self, inputs: &[&Tensor], outputs: &[TensorSpec]) -> Result<Vec<Tensor>>;
+}
+
+/// A runtime backend: compiles a loaded artifact into an [`ExecEngine`].
+pub trait Backend: Send + Sync {
+    /// Short backend identifier ("pjrt", "null", ...).
+    fn name(&self) -> &'static str;
+
+    /// Human-readable platform string (PJRT reports the client's platform).
+    fn platform(&self) -> String {
+        self.name().to_string()
+    }
+
+    /// Compile one artifact. `hlo_path` points at the `<name>.hlo.txt` file
+    /// next to the manifest.
+    fn compile(&self, manifest: &Manifest, hlo_path: &Path) -> Result<Box<dyn ExecEngine>>;
+}
+
+/// Backend used when no PJRT client is available: artifact loads fail with
+/// an actionable message, while every native path keeps working.
+pub struct NullBackend;
+
+impl Backend for NullBackend {
+    fn name(&self) -> &'static str {
+        "null"
+    }
+
+    fn compile(&self, manifest: &Manifest, _hlo_path: &Path) -> Result<Box<dyn ExecEngine>> {
+        Err(Error::msg(format!(
+            "artifact '{}': no executable runtime backend — this build cannot run AOT \
+             artifacts (rebuild with `--features pjrt` and a real `xla` crate); native \
+             growth/LiGO paths remain available",
+            manifest.name
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_backend_refuses_compilation_with_guidance() {
+        let m = Manifest { name: "fwd_x".into(), inputs: vec![], outputs: vec![] };
+        let err = NullBackend
+            .compile(&m, Path::new("artifacts/fwd_x.hlo.txt"))
+            .err()
+            .expect("null backend must not compile");
+        let msg = err.to_string();
+        assert!(msg.contains("fwd_x"));
+        assert!(msg.contains("pjrt"));
+        assert_eq!(NullBackend.platform(), "null");
+    }
+}

@@ -1,31 +1,54 @@
-//! The PJRT CPU client plus a compile cache of loaded artifacts.
+//! The runtime front-end: owns a [`Backend`] plus a compile cache of loaded
+//! artifacts. With the `pjrt` feature (and a working `xla` crate) the
+//! backend is the PJRT CPU client; otherwise the [`NullBackend`] keeps the
+//! crate fully functional on its native paths.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
-
-use super::executable::Executable;
-use super::manifest::Manifest;
+use crate::error::Result;
 use crate::log_info;
 
-/// Owns the PJRT client and a name -> compiled executable cache.
+use super::backend::{Backend, NullBackend};
+use super::executable::Executable;
+use super::manifest::Manifest;
+
+/// Owns the backend and a name -> compiled executable cache.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
     artifacts: PathBuf,
     cache: Mutex<BTreeMap<String, std::sync::Arc<Executable>>>,
 }
 
+/// Best backend this build can construct: PJRT when the feature is on and a
+/// client comes up, the null backend otherwise.
+fn default_backend() -> Box<dyn Backend> {
+    #[cfg(feature = "pjrt")]
+    {
+        match super::pjrt::PjrtBackend::cpu() {
+            Ok(b) => return Box::new(b),
+            Err(e) => crate::log_warn!("PJRT unavailable ({e}); using the null backend"),
+        }
+    }
+    Box::new(NullBackend)
+}
+
 impl Runtime {
-    /// Create a CPU PJRT runtime rooted at the artifacts directory.
-    pub fn cpu(artifacts: impl Into<PathBuf>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Runtime {
-            client,
+    /// Runtime over an explicit backend, rooted at the artifacts directory.
+    pub fn with_backend(backend: Box<dyn Backend>, artifacts: impl Into<PathBuf>) -> Runtime {
+        Runtime {
+            backend,
             artifacts: artifacts.into(),
             cache: Mutex::new(BTreeMap::new()),
-        })
+        }
+    }
+
+    /// Create a CPU runtime rooted at the artifacts directory. Never fails:
+    /// without PJRT the null backend is installed and artifact loads report
+    /// an actionable error instead.
+    pub fn cpu(artifacts: impl Into<PathBuf>) -> Result<Runtime> {
+        Ok(Self::with_backend(default_backend(), artifacts))
     }
 
     /// Default runtime at ./artifacts (or $LIGO_ARTIFACTS).
@@ -34,7 +57,12 @@ impl Runtime {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
+    }
+
+    /// Name of the installed backend ("pjrt" / "null").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Load + compile an artifact by name (cached).
@@ -45,21 +73,16 @@ impl Runtime {
         let manifest = Manifest::load(&self.artifacts, name)?;
         let hlo_path = self.artifacts.join(format!("{name}.hlo.txt"));
         let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
-            .with_context(|| format!("parse HLO text {hlo_path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("XLA compile of artifact '{name}'"))?;
+        let engine = self.backend.compile(&manifest, &hlo_path)?;
         log_info!(
-            "compiled artifact '{}' in {:.2}s ({} inputs, {} outputs)",
+            "compiled artifact '{}' on {} in {:.2}s ({} inputs, {} outputs)",
             name,
+            self.backend.name(),
             t0.elapsed().as_secs_f64(),
             manifest.inputs.len(),
             manifest.outputs.len()
         );
-        let exe = std::sync::Arc::new(Executable::new(manifest, exe));
+        let exe = std::sync::Arc::new(Executable::new(manifest, engine));
         self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
@@ -86,5 +109,25 @@ impl Runtime {
             .unwrap_or_default();
         names.sort();
         names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_runtime_always_constructs() {
+        let rt = Runtime::cpu(std::env::temp_dir().join("ligo_no_artifacts")).unwrap();
+        // whichever backend came up, loading a missing artifact must error
+        // (no manifest on disk), not panic.
+        assert!(rt.load("fwd_nonexistent").is_err());
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn available_empty_for_missing_dir() {
+        let rt = Runtime::cpu("/definitely/not/a/dir").unwrap();
+        assert!(rt.available().is_empty());
     }
 }

@@ -1,17 +1,20 @@
-//! A compiled artifact: PJRT executable + manifest + literal binding.
+//! A compiled artifact: manifest + backend execution engine + store binding.
 //!
 //! `run(&[(group, &Store)])` gathers inputs in manifest order from named
-//! stores, executes, and scatters outputs back into named stores by group.
+//! stores (validating shape and dtype here, backend-agnostically), hands
+//! them to the [`ExecEngine`], and scatters outputs back into named stores
+//! by group.
 
-use anyhow::{bail, Context, Result};
-
-use super::manifest::{Manifest, TensorSpec};
+use crate::bail;
+use crate::error::{Context, Result};
 use crate::tensor::store::Store;
-use crate::tensor::{DType, Tensor, TensorData};
+
+use super::backend::ExecEngine;
+use super::manifest::Manifest;
 
 pub struct Executable {
     pub manifest: Manifest,
-    exe: xla::PjRtLoadedExecutable,
+    engine: Box<dyn ExecEngine>,
 }
 
 /// Outputs of a run, grouped: scalars by bare name, tensors by group.
@@ -33,41 +36,16 @@ impl RunOutputs {
     }
 }
 
-fn to_literal(spec: &TensorSpec, t: &Tensor) -> Result<xla::Literal> {
-    if t.shape != spec.shape {
-        bail!(
-            "tensor '{}' shape {:?} != manifest {:?}",
-            spec.name,
-            t.shape,
-            spec.shape
-        );
-    }
-    let dims: Vec<i64> = spec.shape.iter().map(|d| *d as i64).collect();
-    let lit = match (&t.data, spec.dtype) {
-        (TensorData::F32(v), DType::F32) => xla::Literal::vec1(v.as_slice()),
-        (TensorData::I32(v), DType::I32) => xla::Literal::vec1(v.as_slice()),
-        _ => bail!("tensor '{}' dtype mismatch with manifest", spec.name),
-    };
-    Ok(lit.reshape(&dims)?)
-}
-
-fn from_literal(spec: &TensorSpec, lit: &xla::Literal) -> Result<Tensor> {
-    Ok(match spec.dtype {
-        DType::F32 => Tensor::from_f32(&spec.shape, lit.to_vec::<f32>()?),
-        DType::I32 => Tensor::from_i32(&spec.shape, lit.to_vec::<i32>()?),
-    })
-}
-
 impl Executable {
-    pub(super) fn new(manifest: Manifest, exe: xla::PjRtLoadedExecutable) -> Executable {
-        Executable { manifest, exe }
+    pub(super) fn new(manifest: Manifest, engine: Box<dyn ExecEngine>) -> Executable {
+        Executable { manifest, engine }
     }
 
     /// Execute with inputs gathered from `(group, store)` bindings.
     /// Every manifest input must resolve: group must be bound and the store
-    /// must contain the key.
+    /// must contain the key with the manifest's exact shape and dtype.
     pub fn run(&self, bindings: &[(&str, &Store)]) -> Result<RunOutputs> {
-        let mut literals = Vec::with_capacity(self.manifest.inputs.len());
+        let mut inputs = Vec::with_capacity(self.manifest.inputs.len());
         for spec in &self.manifest.inputs {
             let store = bindings
                 .iter()
@@ -77,23 +55,30 @@ impl Executable {
             let tensor = store
                 .get(spec.key())
                 .with_context(|| format!("store '{}' missing tensor '{}'", spec.group(), spec.key()))?;
-            literals.push(to_literal(spec, tensor)?);
+            if tensor.shape != spec.shape {
+                bail!(
+                    "tensor '{}' shape {:?} != manifest {:?}",
+                    spec.name,
+                    tensor.shape,
+                    spec.shape
+                );
+            }
+            if tensor.dtype() != spec.dtype {
+                bail!("tensor '{}' dtype mismatch with manifest", spec.name);
+            }
+            inputs.push(tensor);
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let root = result[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: the root is always a tuple.
-        let parts = root.to_tuple()?;
-        if parts.len() != self.manifest.outputs.len() {
+        let results = self.engine.execute(&inputs, &self.manifest.outputs)?;
+        if results.len() != self.manifest.outputs.len() {
             bail!(
                 "artifact '{}': {} outputs but manifest lists {}",
                 self.manifest.name,
-                parts.len(),
+                results.len(),
                 self.manifest.outputs.len()
             );
         }
         let mut out = RunOutputs::default();
-        for (spec, lit) in self.manifest.outputs.iter().zip(parts.iter()) {
-            let t = from_literal(spec, lit)?;
+        for (spec, t) in self.manifest.outputs.iter().zip(results) {
             if spec.group().is_empty() {
                 out.scalars.push((spec.name.clone(), t.item()));
             } else {
@@ -113,5 +98,65 @@ impl Executable {
 
     pub fn output_bytes(&self) -> usize {
         self.manifest.outputs.iter().map(|s| s.numel() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+    use crate::tensor::{Tensor, TensorData};
+
+    /// Test engine: echoes a constant per output spec.
+    struct Echo;
+
+    impl ExecEngine for Echo {
+        fn execute(&self, inputs: &[&Tensor], outputs: &[TensorSpec]) -> Result<Vec<Tensor>> {
+            // sum of all f32 inputs, broadcast to each output shape
+            let total: f32 = inputs
+                .iter()
+                .filter(|t| matches!(t.data, TensorData::F32(_)))
+                .map(|t| t.f32s().iter().sum::<f32>())
+                .sum();
+            Ok(outputs
+                .iter()
+                .map(|s| Tensor::from_f32(&s.shape, vec![total; s.numel()]))
+                .collect())
+        }
+    }
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+              "name": "echo",
+              "inputs": [{"name": "params/w", "shape": [2], "dtype": "float32"}],
+              "outputs": [
+                {"name": "loss", "shape": [], "dtype": "float32"},
+                {"name": "grads/w", "shape": [2], "dtype": "float32"}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn run_binds_validates_and_scatters() {
+        let exe = Executable::new(manifest(), Box::new(Echo));
+        let mut params = Store::new();
+        params.insert("w", Tensor::from_f32(&[2], vec![1.5, 2.5]));
+        let out = exe.run(&[("params", &params)]).unwrap();
+        assert_eq!(out.scalar("loss"), Some(4.0));
+        assert_eq!(out.group("grads").unwrap().expect("w").f32s(), &[4.0, 4.0]);
+    }
+
+    #[test]
+    fn run_rejects_shape_mismatch_and_missing_groups() {
+        let exe = Executable::new(manifest(), Box::new(Echo));
+        let mut params = Store::new();
+        params.insert("w", Tensor::from_f32(&[3], vec![0.0; 3]));
+        assert!(exe.run(&[("params", &params)]).is_err(), "wrong shape");
+        assert!(exe.run(&[]).is_err(), "unbound group");
+        assert_eq!(exe.input_bytes(), 8);
+        assert_eq!(exe.output_bytes(), 12);
     }
 }

@@ -7,8 +7,7 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
-
+use crate::error::{Context, Error, Result};
 use crate::tensor::DType;
 use crate::util::json::Json;
 
@@ -65,7 +64,7 @@ fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
 
 impl Manifest {
     pub fn parse(text: &str) -> Result<Manifest> {
-        let j = Json::parse(text).map_err(anyhow::Error::msg)?;
+        let j = Json::parse(text).map_err(Error::msg)?;
         Ok(Manifest {
             name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
             inputs: parse_specs(j.get("inputs").context("inputs")?)?,

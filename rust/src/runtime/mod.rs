@@ -1,11 +1,22 @@
-//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by python at build
-//! time), compiles them once on the CPU PJRT client, and executes them from
-//! the coordinator's hot path. Python never runs here.
+//! The pluggable artifact runtime. [`Backend`] turns `artifacts/*.hlo.txt`
+//! (AOT-lowered by python at build time) into executables; the front-end
+//! [`Runtime`] caches them and binds named tensor stores positionally.
+//!
+//! Backends:
+//! * **pjrt** (feature `pjrt`) — compiles HLO on the XLA CPU PJRT client.
+//! * **null** (default) — artifact loads fail with guidance; the native
+//!   growth/LiGO/tensor paths keep the crate fully usable without XLA.
+//!
+//! Python never runs here in either configuration.
 
+pub mod backend;
 pub mod client;
 pub mod executable;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
+pub use backend::{Backend, ExecEngine, NullBackend};
 pub use client::Runtime;
-pub use executable::Executable;
+pub use executable::{Executable, RunOutputs};
 pub use manifest::{Manifest, TensorSpec};

@@ -1,0 +1,86 @@
+//! PJRT backend (feature `pjrt`): loads `artifacts/*.hlo.txt` (AOT-lowered
+//! by python at build time), compiles them once on the XLA CPU PJRT client,
+//! and executes them from the coordinator's hot path.
+//!
+//! The vendored `xla` crate is an offline API stub whose client constructor
+//! fails; `Runtime::cpu` then degrades to the null backend. Swap a real
+//! xla-rs build into `vendor/xla` to execute artifacts (see README.md).
+
+use std::path::Path;
+
+use crate::bail;
+use crate::error::{Context, Result};
+use crate::tensor::{DType, Tensor, TensorData};
+
+use super::backend::{Backend, ExecEngine};
+use super::manifest::{Manifest, TensorSpec};
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn cpu() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtBackend { client })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, manifest: &Manifest, hlo_path: &Path) -> Result<Box<dyn ExecEngine>> {
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .with_context(|| format!("parse HLO text {hlo_path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of artifact '{}'", manifest.name))?;
+        Ok(Box::new(PjrtEngine { exe }))
+    }
+}
+
+struct PjrtEngine {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|d| *d as i64).collect();
+    let lit = match &t.data {
+        TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+        TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+fn from_literal(spec: &TensorSpec, lit: &xla::Literal) -> Result<Tensor> {
+    Ok(match spec.dtype {
+        DType::F32 => Tensor::from_f32(&spec.shape, lit.to_vec::<f32>()?),
+        DType::I32 => Tensor::from_i32(&spec.shape, lit.to_vec::<i32>()?),
+    })
+}
+
+impl ExecEngine for PjrtEngine {
+    fn execute(&self, inputs: &[&Tensor], outputs: &[TensorSpec]) -> Result<Vec<Tensor>> {
+        let literals = inputs.iter().map(|t| to_literal(t)).collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple()?;
+        if parts.len() != outputs.len() {
+            bail!("PJRT returned {} outputs, manifest lists {}", parts.len(), outputs.len());
+        }
+        outputs
+            .iter()
+            .zip(parts.iter())
+            .map(|(spec, lit)| from_literal(spec, lit))
+            .collect()
+    }
+}

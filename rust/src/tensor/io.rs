@@ -8,10 +8,11 @@ use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
-use super::{numel, Tensor, TensorData};
 use super::store::Store;
+use super::{numel, Tensor, TensorData};
 
 const MAGIC: &[u8; 4] = b"LGCK";
 const VERSION: u32 = 1;

@@ -16,11 +16,11 @@ pub enum DType {
 }
 
 impl DType {
-    pub fn parse(s: &str) -> anyhow::Result<DType> {
+    pub fn parse(s: &str) -> crate::error::Result<DType> {
         match s {
             "float32" | "f32" => Ok(DType::F32),
             "int32" | "i32" => Ok(DType::I32),
-            other => anyhow::bail!("unsupported dtype {other}"),
+            other => crate::bail!("unsupported dtype {other}"),
         }
     }
 }

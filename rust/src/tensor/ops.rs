@@ -1,26 +1,42 @@
 //! Dense linear algebra on [`Tensor`]s — the substrate for the growth
-//! operator zoo (Net2Net, AKI, LiGO-apply checks) and for tests.
+//! operator zoo (Net2Net, AKI, native LiGO) and for tests.
 //!
-//! Hot paths use a blocked, cache-friendly matmul; everything is f32.
+//! Hot paths use a blocked, cache-friendly matmul that goes multicore
+//! (scoped-thread row partitioning via [`crate::util::par`]) above
+//! [`PAR_MIN_MACS`]; everything is f32. Row partitioning keeps per-element
+//! accumulation order fixed, so parallel results are bit-identical to
+//! serial ones.
+
+use crate::util::par;
 
 use super::{numel, Tensor};
 
-/// C = A @ B for (m,k) x (k,n). Blocked i-k-j loop (k-major inner) —
-/// the classic cache-friendly ordering; good enough for growth-time work.
-pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
-    let (m, k) = (a.shape[0], a.shape[1]);
-    let (k2, n) = (b.shape[0], b.shape[1]);
-    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
-    let (av, bv) = (a.f32s(), b.f32s());
-    let mut c = vec![0.0f32; m * n];
+/// Multiply-accumulate count above which matmuls fan out across cores.
+/// Below it, thread spawn/join overhead dominates (and tests stay serial).
+pub const PAR_MIN_MACS: usize = 1 << 21;
+
+/// Blocked i-k-j kernel over a contiguous row chunk of C (rows starting at
+/// global row `row0`). `skip_zeros` enables the sparse fast path: legal only
+/// when every element of `b` is finite, since 0 * NaN/Inf must stay NaN.
+fn matmul_rows(
+    av: &[f32],
+    bv: &[f32],
+    c: &mut [f32],
+    row0: usize,
+    k: usize,
+    n: usize,
+    skip_zeros: bool,
+) {
     const BK: usize = 64;
+    let rows = c.len() / n;
     for k0 in (0..k).step_by(BK) {
         let k1 = (k0 + BK).min(k);
-        for i in 0..m {
-            let crow = &mut c[i * n..(i + 1) * n];
+        for r in 0..rows {
+            let i = row0 + r;
+            let crow = &mut c[r * n..(r + 1) * n];
             for kk in k0..k1 {
                 let aik = av[i * k + kk];
-                if aik == 0.0 {
+                if skip_zeros && aik == 0.0 {
                     continue;
                 }
                 let brow = &bv[kk * n..(kk + 1) * n];
@@ -29,6 +45,60 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
                 }
             }
         }
+    }
+}
+
+/// C = A @ B for (m,k) x (k,n). Blocked i-k-j loop (k-major inner) — the
+/// classic cache-friendly ordering — parallelized over output rows for
+/// growth-time work. Rows of A that are exactly zero are skipped, but only
+/// when B is all-finite: with NaN/Inf in B the full accumulation runs so
+/// that 0 * NaN propagates as IEEE 754 demands.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let (av, bv) = (a.f32s(), b.f32s());
+    let mut c = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return Tensor::from_f32(&[m, n], c);
+    }
+    let skip_zeros = bv.iter().all(|x| x.is_finite());
+    if m * k * n >= PAR_MIN_MACS && m > 1 {
+        par::par_row_chunks(&mut c, n, |row0, chunk| {
+            matmul_rows(av, bv, chunk, row0, k, n, skip_zeros)
+        });
+    } else {
+        matmul_rows(av, bv, &mut c, 0, k, n, skip_zeros);
+    }
+    Tensor::from_f32(&[m, n], c)
+}
+
+/// C = X @ Y^T for (m,k) x (n,k): both operands stream row-major, so this is
+/// the cache-friendly way to apply the LiGO in-expansion (`... A^T`) without
+/// materializing a transpose. Full dot products — no zero skipping — so
+/// NaN/Inf always propagate.
+pub fn matmul_nt(x: &Tensor, y: &Tensor) -> Tensor {
+    let (m, k) = (x.shape[0], x.shape[1]);
+    let (n, k2) = (y.shape[0], y.shape[1]);
+    assert_eq!(k, k2, "matmul_nt inner dims: {k} vs {k2}");
+    let (xv, yv) = (x.f32s(), y.f32s());
+    let mut c = vec![0.0f32; m * n];
+    if m == 0 || n == 0 {
+        return Tensor::from_f32(&[m, n], c);
+    }
+    let kernel = |row0: usize, chunk: &mut [f32]| {
+        for (r, crow) in chunk.chunks_exact_mut(n).enumerate() {
+            let xrow = &xv[(row0 + r) * k..(row0 + r + 1) * k];
+            for (j, cj) in crow.iter_mut().enumerate() {
+                let yrow = &yv[j * k..(j + 1) * k];
+                *cj = xrow.iter().zip(yrow.iter()).map(|(a, b)| a * b).sum();
+            }
+        }
+    };
+    if m * k * n >= PAR_MIN_MACS && m > 1 {
+        par::par_row_chunks(&mut c, n, kernel);
+    } else {
+        kernel(0, &mut c);
     }
     Tensor::from_f32(&[m, n], c)
 }
@@ -46,6 +116,15 @@ pub fn transpose(a: &Tensor) -> Tensor {
     Tensor::from_f32(&[n, m], out)
 }
 
+/// The n x n identity matrix (width-expansion fallback when dims match).
+pub fn eye(n: usize) -> Tensor {
+    let mut v = vec![0.0f32; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    Tensor::from_f32(&[n, n], v)
+}
+
 /// y = A @ x for (m,n) x (n,).
 pub fn matvec(a: &Tensor, x: &Tensor) -> Tensor {
     let (m, n) = (a.shape[0], a.shape[1]);
@@ -58,11 +137,17 @@ pub fn matvec(a: &Tensor, x: &Tensor) -> Tensor {
     Tensor::from_f32(&[m], y)
 }
 
-/// The LiGO triple product Omega = B @ W @ A^T (reference path used by
-/// rust-side verification of `ligo_apply` artifacts and by AKI/Net2Net when
-/// expressed as selection matrices).
+/// Elementwise dot product of two equally-shaped tensors.
+pub fn dot(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.shape, b.shape);
+    a.f32s().iter().zip(b.f32s()).map(|(x, y)| x * y).sum()
+}
+
+/// The LiGO triple product Omega = B @ W @ A^T (paper Eq. 4's width pass).
+/// The fused second stage streams A row-major (`matmul_nt`), so both halves
+/// parallelize over rows.
 pub fn expand(b: &Tensor, w: &Tensor, a: &Tensor) -> Tensor {
-    matmul(&matmul(b, w), &transpose(a))
+    matmul_nt(&matmul(b, w), a)
 }
 
 /// Elementwise a + s * b (in place on a copy).
@@ -83,7 +168,9 @@ pub fn scale(a: &Tensor, s: f32) -> Tensor {
     out
 }
 
-/// Weighted sum of equally-shaped tensors: sum_i w_i T_i.
+/// Weighted sum of equally-shaped tensors: sum_i w_i T_i. A zero weight
+/// means "excluded from the blend" (the depth-selection patterns rely on
+/// this), so w_i == 0 terms are skipped rather than multiplied through.
 pub fn weighted_sum(ws: &[f32], ts: &[&Tensor]) -> Tensor {
     assert_eq!(ws.len(), ts.len());
     assert!(!ts.is_empty());
@@ -130,8 +217,66 @@ mod tests {
     #[test]
     fn matmul_identity() {
         let a = t2([2, 3], vec![1., 2., 3., 4., 5., 6.]);
-        let eye = t2([3, 3], vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]);
-        assert_eq!(matmul(&a, &eye).f32s(), a.f32s());
+        let eye3 = eye(3);
+        assert_eq!(matmul(&a, &eye3).f32s(), a.f32s());
+    }
+
+    #[test]
+    fn matmul_zero_skip_propagates_nan_and_inf() {
+        // Regression: the aik == 0 fast path used to drop 0 * NaN / 0 * Inf
+        // from the right operand; IEEE 754 requires NaN.
+        let a = t2([1, 2], vec![0.0, 1.0]);
+        let b_nan = t2([2, 1], vec![f32::NAN, 2.0]);
+        assert!(matmul(&a, &b_nan).f32s()[0].is_nan(), "0 * NaN must stay NaN");
+        let b_inf = t2([2, 1], vec![f32::INFINITY, 2.0]);
+        assert!(matmul(&a, &b_inf).f32s()[0].is_nan(), "0 * Inf must stay NaN");
+        let b_ninf = t2([2, 1], vec![f32::NEG_INFINITY, 2.0]);
+        assert!(matmul(&a, &b_ninf).f32s()[0].is_nan());
+    }
+
+    #[test]
+    fn matmul_zero_skip_fast_path_still_exact() {
+        // With a finite right operand the skip path must change nothing.
+        let a = t2([2, 3], vec![0.0, 1.0, 0.0, 2.0, 0.0, -1.0]);
+        let b = t2([3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(matmul(&a, &b).f32s(), &[3.0, 4.0, -3.0, -2.0]);
+    }
+
+    #[test]
+    fn matmul_nan_in_left_operand_propagates() {
+        let a = t2([1, 2], vec![f32::NAN, 0.0]);
+        let b = t2([2, 1], vec![1.0, 1.0]);
+        assert!(matmul(&a, &b).f32s()[0].is_nan());
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        prop::check("X Y^T = X @ transpose(Y)", 20, |g| {
+            let m = g.usize_in(1, 10);
+            let k = g.usize_in(1, 8);
+            let n = g.usize_in(1, 10);
+            let x = t2([m, k], g.vec_f32(m * k, -2.0, 2.0));
+            let y = t2([n, k], g.vec_f32(n * k, -2.0, 2.0));
+            let got = matmul_nt(&x, &y);
+            let want = matmul(&x, &transpose(&y));
+            assert!(max_abs_diff(&got, &want) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn parallel_matmul_matches_naive_above_threshold() {
+        // 160^3 = 4.1M MACs > PAR_MIN_MACS: exercises the threaded path.
+        let n = 160;
+        assert!(n * n * n >= PAR_MIN_MACS);
+        let mut g = crate::util::rng::Rng::new(11);
+        let a = t2([n, n], (0..n * n).map(|_| g.range_f32(-1.0, 1.0)).collect());
+        let b = t2([n, n], (0..n * n).map(|_| g.range_f32(-1.0, 1.0)).collect());
+        let c = matmul(&a, &b);
+        // serial reference on a sampled set of entries
+        for (i, j) in [(0, 0), (1, 77), (80, 3), (159, 159), (42, 101)] {
+            let want: f32 = (0..n).map(|x| a.at2(i, x) * b.at2(x, j)).sum();
+            assert!((c.at2(i, j) - want).abs() < 1e-3, "({i},{j})");
+        }
     }
 
     #[test]
@@ -142,6 +287,12 @@ mod tests {
             let a = t2([m, n], g.vec_f32(m * n, -2.0, 2.0));
             assert_eq!(transpose(&transpose(&a)), a);
         });
+    }
+
+    #[test]
+    fn eye_is_identity_for_matmul_nt() {
+        let a = t2([2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(matmul_nt(&a, &eye(3)).f32s(), a.f32s());
     }
 
     #[test]
@@ -201,5 +352,12 @@ mod tests {
         let a = t2([2, 3], vec![1., 2., 3., 4., 5., 6.]);
         let x = Tensor::from_f32(&[3], vec![1., 0., -1.]);
         assert_eq!(matvec(&a, &x).f32s(), &[-2.0, -2.0]);
+    }
+
+    #[test]
+    fn dot_matches_manual() {
+        let a = t2([2, 2], vec![1., 2., 3., 4.]);
+        let b = t2([2, 2], vec![5., 6., 7., 8.]);
+        assert_eq!(dot(&a, &b), 5.0 + 12.0 + 21.0 + 32.0);
     }
 }

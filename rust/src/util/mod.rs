@@ -1,13 +1,16 @@
 //! In-tree substrates that would normally be external crates.
 //!
-//! This build environment is offline (only the `xla` dependency closure is
-//! vendored), so JSON, RNG, CLI parsing, micro-benchmarking and property
-//! testing are implemented here as small, well-tested modules.
+//! This build environment is offline (the optional `xla` dependency is a
+//! vendored stub), so JSON, RNG, CLI parsing, micro-benchmarking, property
+//! testing, data parallelism (`par`, in lieu of rayon) and error handling
+//! (`crate::error`, in lieu of anyhow) are implemented here as small,
+//! well-tested modules.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,90 @@
+//! Minimal data parallelism on scoped threads (rayon is unavailable
+//! offline): split a row-major output buffer into contiguous row chunks and
+//! fill each chunk on its own worker. Used by the hot `tensor::ops` paths
+//! (`matmul`, `matmul_nt`) so growing a BERT-Base-sized store is multicore.
+//!
+//! Row partitioning never changes per-element accumulation order, so the
+//! parallel results are bit-identical to the serial ones.
+
+use std::num::NonZeroUsize;
+use std::sync::OnceLock;
+
+/// Worker count: `LIGO_THREADS` override, else `available_parallelism`.
+pub fn threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("LIGO_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(NonZeroUsize::get)
+            .unwrap_or(1)
+    })
+}
+
+/// Run `f(first_row, chunk)` over contiguous whole-row chunks of `out`
+/// (row width `n_cols`), one chunk per worker. `f` must derive everything it
+/// writes from `first_row` and the chunk itself, so chunking is transparent.
+pub fn par_row_chunks<F>(out: &mut [f32], n_cols: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if out.is_empty() || n_cols == 0 {
+        return;
+    }
+    let rows = out.len() / n_cols;
+    let nt = threads().min(rows);
+    if nt <= 1 {
+        f(0, out);
+        return;
+    }
+    let rows_per = rows.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (idx, chunk) in out.chunks_mut(rows_per * n_cols).enumerate() {
+            let f = &f;
+            s.spawn(move || f(idx * rows_per, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_at_least_one() {
+        assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn chunks_cover_every_row_exactly_once() {
+        let (rows, cols) = (37, 5);
+        let mut out = vec![0.0f32; rows * cols];
+        par_row_chunks(&mut out, cols, |row0, chunk| {
+            for (r, row) in chunk.chunks_exact_mut(cols).enumerate() {
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v += ((row0 + r) * cols + c) as f32;
+                }
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f32, "element {i}");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs_are_noops() {
+        let mut empty: Vec<f32> = vec![];
+        par_row_chunks(&mut empty, 4, |_, _| panic!("must not be called"));
+        let mut one = vec![1.0f32; 3];
+        par_row_chunks(&mut one, 3, |row0, chunk| {
+            assert_eq!(row0, 0);
+            for v in chunk.iter_mut() {
+                *v = 2.0;
+            }
+        });
+        assert_eq!(one, vec![2.0; 3]);
+    }
+}

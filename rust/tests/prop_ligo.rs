@@ -1,0 +1,152 @@
+//! Prop. 1 equivalence suite: the native LiGO operator with a noise-free
+//! selection-pattern M must reproduce the non-learned zoo operators
+//! *bit-for-bit* on the testutil configs. The width maps in play only
+//! duplicate features with power-of-two multiplicities (8 -> 12, 32 -> 48:
+//! counts 1 and 2), and the selection matmuls reduce to exact copies /
+//! exact halvings, so f32 equality is the correct assertion — any drift
+//! means the native port no longer contains the baselines as special cases.
+//!
+//! Pure rust — no artifacts required.
+
+use ligo::growth::ligo::{ligo_apply, ligo_init, selection_m, DepthInit, Ligo};
+use ligo::growth::net2net::Net2Net;
+use ligo::growth::testutil::{mk_cfg, small_store};
+use ligo::growth::{self, GrowthOperator};
+use ligo::tensor::store::Store;
+
+/// Assert two stores are identical: same tensor set, same shapes, equal
+/// (f32 ==) values everywhere.
+fn assert_store_eq(got: &Store, want: &Store, label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: tensor count");
+    for (name, w) in want.iter() {
+        let g = got.get(name).unwrap_or_else(|| panic!("{label}: missing '{name}'"));
+        assert_eq!(g.shape, w.shape, "{label}: shape of '{name}'");
+        assert_eq!(g, w, "{label}: values of '{name}'");
+    }
+}
+
+#[test]
+fn selection_ligo_reproduces_stackbert_width_and_depth() {
+    let cs = mk_cfg(2, 8, 2);
+    let cl = mk_cfg(4, 12, 3);
+    let small = small_store(&cs);
+    let want = growth::by_name("stackbert").unwrap().grow(&small, &cs, &cl);
+    let m = selection_m(&cs, &cl, DepthInit::Stack, true);
+    let got = ligo_apply(&m, &small, &cs, &cl);
+    assert_store_eq(&got, &want, "stackbert");
+}
+
+#[test]
+fn selection_ligo_reproduces_interpolation() {
+    let cs = mk_cfg(2, 8, 2);
+    let cl = mk_cfg(4, 12, 3);
+    let small = small_store(&cs);
+    let want = growth::by_name("interpolation").unwrap().grow(&small, &cs, &cl);
+    let m = selection_m(&cs, &cl, DepthInit::Interpolate, true);
+    let got = ligo_apply(&m, &small, &cs, &cl);
+    assert_store_eq(&got, &want, "interpolation");
+}
+
+#[test]
+fn selection_ligo_reproduces_net2net() {
+    // Net2Net's depth growth appends near-identity blocks (zeroed residual
+    // writers); in LiGO that is the NearIdentity depth pattern, and its
+    // D^-1-normalized width selection is the untied A_* instance.
+    let cs = mk_cfg(2, 8, 2);
+    let cl = mk_cfg(4, 12, 3);
+    let small = small_store(&cs);
+    let want = Net2Net { cyclic: true }.grow(&small, &cs, &cl);
+    let m = selection_m(&cs, &cl, DepthInit::NearIdentity, true);
+    let got = ligo_apply(&m, &small, &cs, &cl);
+    assert_store_eq(&got, &want, "net2net");
+}
+
+#[test]
+fn selection_ligo_reproduces_mslt_top_duplication() {
+    let cs = mk_cfg(2, 8, 2);
+    let cl = mk_cfg(4, 12, 3);
+    let small = small_store(&cs);
+    let want = growth::by_name("mslt").unwrap().grow(&small, &cs, &cl);
+    let m = selection_m(&cs, &cl, DepthInit::TopDup, true);
+    let got = ligo_apply(&m, &small, &cs, &cl);
+    assert_store_eq(&got, &want, "mslt");
+}
+
+#[test]
+fn non_divisible_depth_ratio_2_to_5() {
+    // depth-only: M has no width matrices (identity fallback) and a 5x2
+    // blend; the 2 -> 5 ratio exercises the clamped selection rows.
+    let cs = mk_cfg(2, 8, 2);
+    let cl = mk_cfg(5, 8, 2);
+    let small = small_store(&cs);
+    for (depth, name) in [
+        (DepthInit::Stack, "stackbert"),
+        (DepthInit::Interpolate, "interpolation"),
+        (DepthInit::TopDup, "mslt"),
+    ] {
+        let want = growth::by_name(name).unwrap().grow(&small, &cs, &cl);
+        let m = selection_m(&cs, &cl, depth, true);
+        assert!(!m.contains("B_emb"), "depth-only M must omit width matrices");
+        let got = ligo_apply(&m, &small, &cs, &cl);
+        assert_store_eq(&got, &want, &format!("{name} 2->5"));
+    }
+}
+
+#[test]
+fn non_divisible_depth_with_width_growth_2_to_5() {
+    let cs = mk_cfg(2, 8, 2);
+    let cl = mk_cfg(5, 12, 3);
+    let small = small_store(&cs);
+    let want = growth::by_name("stackbert").unwrap().grow(&small, &cs, &cl);
+    let m = selection_m(&cs, &cl, DepthInit::Stack, true);
+    let got = ligo_apply(&m, &small, &cs, &cl);
+    assert_store_eq(&got, &want, "stackbert 2->5 wide");
+}
+
+#[test]
+fn width_only_selection_reproduces_net2net() {
+    let cs = mk_cfg(2, 8, 2);
+    let cl = mk_cfg(2, 12, 3); // layers fixed: no depth blends in M
+    let small = small_store(&cs);
+    let want = Net2Net { cyclic: true }.grow(&small, &cs, &cl);
+    let m = selection_m(&cs, &cl, DepthInit::NearIdentity, true);
+    assert!(!m.contains("w_q"), "width-only M must omit depth blends");
+    let got = ligo_apply(&m, &small, &cs, &cl);
+    assert_store_eq(&got, &want, "net2net width-only");
+}
+
+#[test]
+fn noise_free_init_with_zero_steps_is_the_stacking_baseline_family() {
+    // The learned operator's own init (tied, unnormalized) applied with no
+    // learning is still a valid member of the family: exact target shapes,
+    // finite values, and the stacking depth pattern over tied width copies.
+    let cs = mk_cfg(2, 8, 2);
+    let cl = mk_cfg(4, 12, 3);
+    let small = small_store(&cs);
+    let op = Ligo { steps: 0, noise: 0.0, ..Default::default() };
+    let got = op.grow(&small, &cs, &cl);
+    let init = ligo_init(&cs, &cl, 0.0, 0);
+    let direct = ligo_apply(&init, &small, &cs, &cl);
+    assert_store_eq(&got, &direct, "zero-step grow == apply(init)");
+    // depth stacking: layer 2 repeats layer 0, layer 3 repeats layer 1
+    assert_eq!(got.expect("L02_q_w"), got.expect("L00_q_w"));
+    assert_eq!(got.expect("L03_q_w"), got.expect("L01_q_w"));
+}
+
+#[test]
+fn learned_ligo_stays_in_shape_family_and_beats_nothing_silently() {
+    // The end-to-end learned operator (by_name path) produces the exact
+    // tensor set of a native large store and only finite values.
+    let cs = mk_cfg(2, 8, 2);
+    let cl = mk_cfg(4, 12, 3);
+    let small = small_store(&cs);
+    let op = growth::by_name("ligo").unwrap();
+    let big = op.grow(&small, &cs, &cl);
+    let native = small_store(&cl);
+    assert_eq!(big.len(), native.len());
+    for (name, t) in native.iter() {
+        let g = big.expect(name);
+        assert_eq!(g.shape, t.shape, "{name}");
+        assert!(g.f32s().iter().all(|x| x.is_finite()), "{name}");
+    }
+}
