@@ -32,7 +32,7 @@ fn main() -> Result<()> {
     let m_steps = args.get_usize("m-steps", 30);
 
     let rt = Runtime::cpu(artifacts_dir())?;
-    let reg = Registry::load(&artifacts_dir())?;
+    let reg = Registry::load_or_builtin(&artifacts_dir());
     let small = reg.model("e2e_small")?.clone();
     let large = reg.model("e2e_base")?.clone();
     println!(
@@ -69,7 +69,8 @@ fn main() -> Result<()> {
         let loss = tr.train_step(&mut one)?;
         spent += step_flops;
         if step % 20 == 0 || step + 1 == small_steps {
-            println!("  step {step:>4}  loss {loss:.4}  ({:.2e} FLOPs, {:.0}s)", spent, t.elapsed());
+            let el = t.elapsed();
+            println!("  step {step:>4}  loss {loss:.4}  ({spent:.2e} FLOPs, {el:.0}s)");
             curve_small.push(step, spent, t.elapsed(), loss, None);
         }
     }
@@ -123,7 +124,8 @@ fn main() -> Result<()> {
     let last = curve.final_loss();
     println!("\n==== e2e summary =====================================");
     println!("91M-param model: loss {first:.4} -> {last:.4} over {steps} steps");
-    println!("throughput: {:.1} s/step, {:.2e} FLOPs/step", t2.elapsed() / steps as f64, step_flops);
+    let s_per_step = t2.elapsed() / steps as f64;
+    println!("throughput: {s_per_step:.1} s/step, {step_flops:.2e} FLOPs/step");
     ligo::coordinator::metrics::write_report(
         std::path::Path::new("reports"),
         "e2e_pretrain",

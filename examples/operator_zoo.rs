@@ -19,7 +19,7 @@ use ligo::util::rng::Rng;
 fn main() -> Result<()> {
     ligo::util::logging::init_from_env();
     let rt = Runtime::cpu(artifacts_dir())?;
-    let reg = Registry::load(&artifacts_dir())?;
+    let reg = Registry::load_or_builtin(&artifacts_dir());
     let small = reg.model("bert_small")?.clone();
     let large = reg.model("bert_base")?.clone();
     let corpus = Corpus::new(small.vocab, 0);

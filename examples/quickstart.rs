@@ -22,7 +22,7 @@ use ligo::util::rng::Rng;
 fn main() -> Result<()> {
     ligo::util::logging::init_from_env();
     let rt = Runtime::cpu(artifacts_dir())?;
-    let reg = Registry::load(&artifacts_dir())?;
+    let reg = Registry::load_or_builtin(&artifacts_dir());
     println!("platform: {}", rt.platform());
 
     let small = reg.model("bert_small")?.clone();
@@ -44,7 +44,10 @@ fn main() -> Result<()> {
     let l2 = large.clone();
     let mut mk = move |s: usize| mlm_batch(&c2, &l2, &mut Rng::new(500 + s as u64));
     let grown = ligo_grow(&rt, &small, &large, &tr_small.params, &mut mk, &LigoOptions::default())?;
-    println!("      M-loss {:.3}, +{:.2e} FLOPs overhead", grown.final_m_loss, grown.extra_flops);
+    println!(
+        "      M-loss {:.3} ({} objective), +{:.2e} FLOPs overhead",
+        grown.final_m_loss, grown.objective, grown.extra_flops
+    );
 
     // --- 3. train the grown large model ----------------------------------
     println!("\n[3/4] training {} from LiGO init...", large.name);

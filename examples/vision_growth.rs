@@ -23,7 +23,7 @@ fn main() -> Result<()> {
     let pre = args.get_usize("pre", 200);
 
     let rt = Runtime::cpu(artifacts_dir())?;
-    let reg = Registry::load(&artifacts_dir())?;
+    let reg = Registry::load_or_builtin(&artifacts_dir());
     let small = reg.model("vit_s")?.clone();
     let large = reg.model("vit_b")?.clone();
     let task = VisionTask::pretrain();

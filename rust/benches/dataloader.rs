@@ -12,10 +12,7 @@ use ligo::util::bench::bench;
 use ligo::util::rng::Rng;
 
 fn main() {
-    let Ok(reg) = Registry::load(&artifacts_dir()) else {
-        eprintln!("no artifacts; run `make artifacts`");
-        return;
-    };
+    let reg = Registry::load_or_builtin(&artifacts_dir());
     let bert = reg.model("bert_base").unwrap().clone();
     let gpt = reg.model("gpt_base").unwrap().clone();
     let vit = reg.model("vit_b").unwrap().clone();

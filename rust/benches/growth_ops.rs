@@ -12,10 +12,7 @@ use ligo::tensor::store::Store;
 use ligo::util::bench::bench;
 
 fn main() {
-    let Ok(reg) = Registry::load(&artifacts_dir()) else {
-        eprintln!("no artifacts; run `make artifacts`");
-        return;
-    };
+    let reg = Registry::load_or_builtin(&artifacts_dir());
     let small = reg.model("bert_small").unwrap().clone();
     let large = reg.model("bert_base").unwrap().clone();
     // the manifest is plain JSON (no runtime backend needed); on a
@@ -35,6 +32,23 @@ fn main() {
     bench("grow/ligo_native[10 M-steps]", 2, 5, || {
         native.grow(&params, &small, &large)
     });
+    // true task-loss M-learning through the native engine (the default
+    // no-XLA route): apply + large fwd/bwd + expansion backprop per step
+    let corpus = ligo::data::corpus::Corpus::new(large.vocab, 0);
+    let task_stats = bench("grow/ligo_task_native[5 M-steps]", 1, 3, || {
+        let mut mk = |s: usize| {
+            let mut rng = ligo::util::rng::Rng::new(s as u64);
+            ligo::data::batches::mlm_batch(&corpus, &large, &mut rng)
+        };
+        ligo::coordinator::growth_manager::ligo_grow_task_native(
+            &small,
+            &large,
+            &params,
+            &mut mk,
+            &ligo::coordinator::growth_manager::LigoOptions { steps: 5, ..Default::default() },
+        )
+        .unwrap()
+    });
     // LiGO apply through the artifact (the pjrt fast path), when executable
     let rt = Runtime::cpu(artifacts_dir()).unwrap();
     match rt.load("ligo_apply_bert_small__bert_base") {
@@ -46,5 +60,22 @@ fn main() {
             });
         }
         Err(e) => eprintln!("skipping artifact apply bench: {e}"),
+    }
+    // Regression gate (EXPERIMENTS.md): LIGO_GROWTH_OPS_BUDGET_S bounds the
+    // task-native M-learning bench mean on a calibrated host.
+    if let Ok(budget) = std::env::var("LIGO_GROWTH_OPS_BUDGET_S") {
+        match budget.parse::<f64>() {
+            Ok(max_s) if task_stats.mean_s > max_s => {
+                eprintln!(
+                    "REGRESSION: grow/ligo_task_native mean {:.3}s > budget {max_s}s",
+                    task_stats.mean_s
+                );
+                std::process::exit(1);
+            }
+            Ok(max_s) => {
+                println!("growth_ops within budget: {:.3}s <= {max_s}s", task_stats.mean_s)
+            }
+            Err(e) => eprintln!("ignoring unparsable LIGO_GROWTH_OPS_BUDGET_S: {e}"),
+        }
     }
 }

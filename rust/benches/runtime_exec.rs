@@ -1,5 +1,6 @@
-//! Bench: PJRT execute latency for the fwd/grad artifacts of each family —
-//! the L3 hot path. Reports per-call latency and effective FLOP/s.
+//! Bench: execute latency for the fwd/grad executables of each family —
+//! the L3 hot path (synthesized native engine by default, PJRT with the
+//! `pjrt` feature). Reports per-call latency and effective FLOP/s.
 
 use ligo::config::{artifacts_dir, Registry};
 use ligo::coordinator::flops::{forward_flops, train_step_flops};
@@ -11,16 +12,13 @@ use ligo::util::bench::bench;
 use ligo::util::rng::Rng;
 
 fn main() {
-    let Ok(reg) = Registry::load(&artifacts_dir()) else {
-        eprintln!("no artifacts; run `make artifacts`");
-        return;
-    };
+    let reg = Registry::load_or_builtin(&artifacts_dir());
     let rt = Runtime::cpu(artifacts_dir()).unwrap();
     if rt.backend_name() == "null" {
         eprintln!("no executable backend (build with --features pjrt); skipping");
         return;
     }
-    println!("== runtime_exec: PJRT execute latency per artifact ==");
+    println!("== runtime_exec: {} execute latency per artifact ==", rt.backend_name());
     for name in ["bert_small", "bert_base", "bert_large", "gpt_base", "vit_s"] {
         let cfg = reg.model(name).unwrap().clone();
         let corpus = Corpus::new(cfg.vocab.max(512), 0);

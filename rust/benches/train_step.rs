@@ -13,10 +13,7 @@ use ligo::util::bench::bench;
 use ligo::util::rng::Rng;
 
 fn main() {
-    let Ok(reg) = Registry::load(&artifacts_dir()) else {
-        eprintln!("no artifacts; run `make artifacts`");
-        return;
-    };
+    let reg = Registry::load_or_builtin(&artifacts_dir());
     let rt = Runtime::cpu(artifacts_dir()).unwrap();
     if rt.backend_name() == "null" {
         eprintln!("no executable backend (build with --features pjrt); skipping");

@@ -83,7 +83,116 @@ pub struct Registry {
     pub param_counts: BTreeMap<String, usize>,
 }
 
+/// Build one preset row (channels 3 and ffn_mult 4 across the table).
+#[allow(clippy::too_many_arguments)]
+fn preset(
+    name: &str,
+    family: &str,
+    layers: usize,
+    dim: usize,
+    heads: usize,
+    vocab: usize,
+    seq: usize,
+    batch: usize,
+    img: usize,
+    patch: usize,
+    n_classes: usize,
+    cls_layers: usize,
+) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        family: family.into(),
+        layers,
+        dim,
+        heads,
+        vocab,
+        seq,
+        batch,
+        img,
+        patch,
+        channels: 3,
+        n_classes,
+        cls_layers,
+        ffn_mult: 4,
+    }
+}
+
 impl Registry {
+    /// The built-in preset table — the same rows `python/compile/configs.py`
+    /// exports to `artifacts/configs.json`, compiled in so the native
+    /// (no-artifact) path needs no files on disk. Param counts come from
+    /// [`crate::model::param_shapes`], the engine's own tensor inventory.
+    pub fn builtin() -> Registry {
+        let presets = [
+            // BERT family (paper: Small 6L/512, Base 12L/768, Large 24L/1024)
+            preset("bert_small", "bert", 3, 48, 4, 512, 32, 16, 0, 0, 0, 0),
+            preset("bert_base", "bert", 6, 72, 6, 512, 32, 16, 0, 0, 0, 0),
+            preset("bert_large", "bert", 12, 96, 8, 512, 32, 16, 0, 0, 0, 0),
+            // ablation sources: depth-only / width-only growth
+            preset("bert_d3w72", "bert", 3, 72, 6, 512, 32, 16, 0, 0, 0, 0),
+            preset("bert_d6w48", "bert", 6, 48, 4, 512, 32, 16, 0, 0, 0, 0),
+            // GPT2 family
+            preset("gpt_base", "gpt", 6, 64, 4, 512, 64, 8, 0, 0, 0, 0),
+            preset("gpt_medium", "gpt", 12, 96, 6, 512, 64, 8, 0, 0, 0, 0),
+            // DeiT family (width-dominant growth)
+            preset("vit_s", "vit", 6, 48, 4, 0, 0, 16, 32, 8, 10, 0),
+            preset("vit_b", "vit", 6, 96, 8, 0, 0, 16, 32, 8, 10, 0),
+            // CaiT family (class-attention stage)
+            preset("cait_xs", "cait", 6, 48, 4, 0, 0, 16, 32, 8, 10, 2),
+            preset("cait_s", "cait", 6, 64, 4, 0, 0, 16, 32, 8, 10, 2),
+            // end-to-end pair (~25M -> ~91M params)
+            preset("e2e_small", "bert", 6, 512, 8, 8192, 64, 4, 0, 0, 0, 0),
+            preset("e2e_base", "bert", 12, 768, 12, 8192, 64, 4, 0, 0, 0, 0),
+            // transfer probes
+            preset("probe_bert_base", "bert", 6, 72, 6, 512, 32, 16, 0, 0, 4, 0),
+            preset("probe_bert_small", "bert", 3, 48, 4, 512, 32, 16, 0, 0, 4, 0),
+            preset("probe_vit_b", "vit", 6, 96, 8, 0, 0, 16, 32, 8, 20, 0),
+        ];
+        let models: BTreeMap<String, ModelConfig> =
+            presets.into_iter().map(|c| (c.name.clone(), c)).collect();
+        let pair = |s: &str, t: &str| (s.to_string(), t.to_string());
+        let pairs = vec![
+            pair("bert_small", "bert_base"),
+            pair("bert_small", "bert_large"),
+            pair("bert_base", "bert_large"),
+            pair("bert_d3w72", "bert_base"),
+            pair("bert_d6w48", "bert_base"),
+            pair("gpt_base", "gpt_medium"),
+            pair("vit_s", "vit_b"),
+            pair("cait_xs", "cait_s"),
+            pair("e2e_small", "e2e_base"),
+        ];
+        let kd_pairs = vec![pair("bert_small", "bert_base"), pair("vit_s", "vit_b")];
+        let param_counts = models
+            .iter()
+            .map(|(n, c)| {
+                let count: usize = crate::model::param_shapes(c)
+                    .iter()
+                    .map(|(_, s)| crate::tensor::numel(s))
+                    .sum();
+                (n.clone(), count)
+            })
+            .collect();
+        Registry { models, pairs, kd_pairs, param_counts }
+    }
+
+    /// Load the registry from `artifacts/configs.json` when present (the
+    /// AOT source of truth), else fall back to the identical built-in
+    /// table. A configs.json that exists but fails to parse is a real
+    /// problem and is surfaced loudly before falling back — silently
+    /// swapping preset dims would misconfigure every downstream shape.
+    pub fn load_or_builtin(artifacts: &Path) -> Registry {
+        if artifacts.join("configs.json").exists() {
+            match Registry::load(artifacts) {
+                Ok(r) => return r,
+                Err(e) => crate::log_warn!(
+                    "artifacts/configs.json present but unusable ({e}); using built-in presets"
+                ),
+            }
+        }
+        Registry::builtin()
+    }
+
     pub fn load(artifacts: &Path) -> Result<Registry> {
         let path = artifacts.join("configs.json");
         let text = std::fs::read_to_string(&path)
@@ -163,6 +272,35 @@ mod tests {
         assert_eq!(r.pairs[0].1, "bert_base");
         assert_eq!(r.param_counts["bert_small"], 12345);
         assert!(r.model("nope").is_err());
+    }
+
+    #[test]
+    fn builtin_registry_mirrors_configs_py() {
+        let r = Registry::builtin();
+        assert_eq!(r.models.len(), 16);
+        let base = r.model("bert_base").unwrap();
+        assert_eq!((base.layers, base.dim, base.heads), (6, 72, 6));
+        assert_eq!(r.model("cait_xs").unwrap().cls_layers, 2);
+        assert_eq!(r.model("cait_xs").unwrap().tokens(), 16); // no CLS in body
+        assert_eq!(r.model("vit_s").unwrap().tokens(), 17);
+        // every pair endpoint resolves and grows upward in params
+        for (s, t) in &r.pairs {
+            let (ps, pt) = (r.param_counts[s], r.param_counts[t]);
+            assert!(pt > ps, "{s} -> {t}: {ps} !< {pt}");
+        }
+        assert_eq!(r.kd_pairs.len(), 2);
+        // param counts are the engine's own inventory — spot-check bert_small:
+        // emb 512*48 + pos 32*48 + mlm 512 + 2*48 + 3 layers
+        let small = r.model("bert_small").unwrap();
+        let per_layer = 4 * 48 * 48 + 4 * 48 + 192 * 48 + 192 + 48 * 192 + 48 + 4 * 48;
+        let want = 512 * 48 + 32 * 48 + 512 + 2 * 48 + 3 * per_layer;
+        assert_eq!(r.param_counts[&small.name], want);
+    }
+
+    #[test]
+    fn load_or_builtin_falls_back() {
+        let r = Registry::load_or_builtin(std::path::Path::new("/definitely/not/a/dir"));
+        assert!(r.model("bert_small").is_ok());
     }
 
     #[test]

@@ -169,7 +169,8 @@ mod tests {
                 lr: g.f32_in(1e-5, 1.0),
                 warmup_steps: g.usize_in(0, 50),
                 total_steps: g.usize_in(51, 500),
-                schedule: *g.pick(&[Schedule::WarmupLinear, Schedule::WarmupCosine, Schedule::Constant]),
+                schedule: *g
+                    .pick(&[Schedule::WarmupLinear, Schedule::WarmupCosine, Schedule::Constant]),
                 ..Default::default()
             };
             for step in 0..c.total_steps + 10 {

@@ -10,10 +10,16 @@
 //! Routing goes through the runtime's [`Backend`](crate::runtime::Backend):
 //! when the `ligo_grad_{s}__{t}` / `ligo_apply_{s}__{t}` artifacts compile
 //! (the `pjrt`-feature fast path), M trains against the expanded model's
-//! *task loss*, exactly as the paper prescribes. Otherwise the manager
-//! falls back to the native operator ([`crate::growth::ligo`]), which
-//! learns M on the surrogate least-squares objective — no artifacts, no
-//! XLA, same operator family.
+//! *task loss* inside one fused XLA graph. Otherwise the manager runs the
+//! **native task-loss path**: each M-step expands `Theta_large =
+//! M(Theta_small)` ([`crate::growth::ligo::ligo_apply`]), runs the native
+//! engine's forward/backward ([`crate::model::loss_and_grads`]) on a real
+//! pretraining batch, and chains dL/dTheta_large through the fused
+//! `B W A^T` width pass and the depth blends
+//! ([`crate::growth::ligo::ligo_apply_backward`]) — the same objective as
+//! the artifact path, no XLA required. The surrogate least-squares fit
+//! ([`ligo_grow_surrogate`]) remains only as the fallback for when no task
+//! batches exist (or an unsupported family).
 
 use std::sync::Arc;
 
@@ -49,6 +55,9 @@ pub struct Grown {
     pub extra_flops: f64,
     pub wall_s: f64,
     pub final_m_loss: f32,
+    /// Which M-learning objective produced these params:
+    /// "task-artifact" | "task-native" | "surrogate".
+    pub objective: &'static str,
 }
 
 /// Initialize the LiGO parameter store M from manifest shapes: width
@@ -74,9 +83,10 @@ pub fn ligo_init_store(shapes: &[(String, Vec<usize>)], noise: f32, seed: u64) -
 
 /// Grow `small_params` into the target config by learning M on batches from
 /// `batches` (the pretraining distribution). Tries the artifact fast path
-/// first; falls back to the native LiGO operator **only** when the backend
-/// cannot load/compile the artifacts (default no-`pjrt` build, or artifacts
-/// not built). Errors from the M-training loop itself are real failures and
+/// first; falls back to the native path **only** when the backend cannot
+/// load/compile the artifacts (default no-`pjrt` build, or artifacts not
+/// built) — which still trains M on the true task loss via the native
+/// engine. Errors from the M-training loop itself are real failures and
 /// propagate — they must not silently switch the training objective.
 pub fn ligo_grow(
     rt: &Runtime,
@@ -96,11 +106,11 @@ pub fn ligo_grow(
         }
         Err(e) => {
             log_info!(
-                "LiGO artifacts unavailable for {}->{} ({e}); using the native operator",
+                "LiGO artifacts unavailable for {}->{} ({e}); using the native engine",
                 small.name,
                 large.name
             );
-            ligo_grow_native(small, large, small_params, opts)
+            ligo_grow_native(small, large, small_params, batches, opts)
         }
     }
 }
@@ -160,14 +170,97 @@ fn ligo_train_artifact(
         .clone();
     let extra_flops = opts.steps as f64 * flops::ligo_step_flops(small, large)
         + flops::ligo_apply_flops(small, large);
-    Ok(Grown { params, extra_flops, wall_s: timer.elapsed(), final_m_loss: last_loss })
+    Ok(Grown {
+        params,
+        extra_flops,
+        wall_s: timer.elapsed(),
+        final_m_loss: last_loss,
+        objective: "task-artifact",
+    })
 }
 
-/// The native path: the [`crate::growth::ligo::Ligo`] operator (surrogate
-/// M-learning), with FLOPs accounted analytically — M-steps backprop only
-/// through the expansion, not a large-model fwd/bwd, hence the cheaper
-/// per-step cost.
+/// Does this batch carry the keys the native engine needs for `cfg`?
+fn usable_task_batch(cfg: &ModelConfig, batch: &Store) -> bool {
+    if cfg.is_vision() {
+        batch.contains("images") && batch.contains("labels")
+    } else {
+        batch.contains("tokens") && batch.contains("labels")
+    }
+}
+
+/// The native no-XLA route: true task-loss M-learning through the native
+/// engine when task batches are available, else the surrogate fit. Family
+/// support and batch shape are decided from batch 0; errors *inside* the
+/// chosen M-training loop propagate (they must not switch the objective).
 pub fn ligo_grow_native(
+    small: &ModelConfig,
+    large: &ModelConfig,
+    small_params: &Store,
+    batches: &mut dyn FnMut(usize) -> Store,
+    opts: &LigoOptions,
+) -> Result<Grown> {
+    if crate::model::supports(large) && usable_task_batch(large, &batches(0)) {
+        ligo_grow_task_native(small, large, small_params, batches, opts)
+    } else {
+        log_info!(
+            "no task batches for {} -> {}; training M on the surrogate objective",
+            small.name,
+            large.name
+        );
+        ligo_grow_surrogate(small, large, small_params, opts)
+    }
+}
+
+/// True task-loss M-learning without XLA (paper Algorithm 1): per step,
+/// materialize `Theta_large = M(Theta_small)`, run the native engine's
+/// forward/backward on a pretraining batch, chain dL/dTheta_large through
+/// the expansion (`ligo_apply_backward`) into dL/dM, and take an
+/// SGD-momentum step on M.
+pub fn ligo_grow_task_native(
+    small: &ModelConfig,
+    large: &ModelConfig,
+    small_params: &Store,
+    batches: &mut dyn FnMut(usize) -> Store,
+    opts: &LigoOptions,
+) -> Result<Grown> {
+    use crate::growth::ligo::{ligo_apply, ligo_apply_backward, ligo_init, m_lr_at};
+    let timer = crate::util::timer::Timer::new();
+    let mut m = ligo_init(small, large, opts.init_noise, opts.seed);
+    let mut sgd = Sgd::new(&m, opts.momentum);
+    let mut last_loss = f32::NAN;
+    for step in 0..opts.steps {
+        let batch = batches(step);
+        let theta = ligo_apply(&m, small_params, small, large);
+        let (loss, grads_theta, _metric) = crate::model::loss_and_grads(large, &theta, &batch)?;
+        last_loss = loss;
+        let dm = ligo_apply_backward(&m, small_params, &grads_theta, small, large);
+        // cosine-ish decay over the short M-learning phase (shared schedule)
+        let lr = m_lr_at(opts.lr, step, opts.steps);
+        sgd.step(&mut m, &dm, lr);
+        if step % 25 == 0 {
+            log_info!("ligo M-step {step} (native task loss): loss {last_loss:.4}");
+        }
+    }
+    let params = ligo_apply(&m, small_params, small, large);
+    if opts.steps == 0 {
+        last_loss = crate::model::loss_only(large, &params, &batches(0))?.0;
+    }
+    let extra_flops = opts.steps as f64 * flops::ligo_step_flops(small, large)
+        + flops::ligo_apply_flops(small, large);
+    Ok(Grown {
+        params,
+        extra_flops,
+        wall_s: timer.elapsed(),
+        final_m_loss: last_loss,
+        objective: "task-native",
+    })
+}
+
+/// The surrogate fallback: the [`crate::growth::ligo::Ligo`] operator
+/// (least-squares M-learning against the StackBERT+Interpolation ensemble),
+/// with FLOPs accounted analytically — M-steps backprop only through the
+/// expansion, not a large-model fwd/bwd, hence the cheaper per-step cost.
+pub fn ligo_grow_surrogate(
     small: &ModelConfig,
     large: &ModelConfig,
     small_params: &Store,
@@ -184,7 +277,13 @@ pub fn ligo_grow_native(
     let (params, final_m_loss) = op.grow_with_loss(small_params, small, large);
     let extra_flops = opts.steps as f64 * flops::ligo_native_step_flops(small, large)
         + flops::ligo_apply_flops(small, large);
-    Ok(Grown { params, extra_flops, wall_s: timer.elapsed(), final_m_loss })
+    Ok(Grown {
+        params,
+        extra_flops,
+        wall_s: timer.elapsed(),
+        final_m_loss,
+        objective: "surrogate",
+    })
 }
 
 /// Depth-only / width-only variants (Fig. 6) use the same entry point with
@@ -230,15 +329,30 @@ mod tests {
         assert_eq!(LigoOptions::default().steps, 100);
     }
 
+    fn mk_batch(cfg: &ModelConfig, seed: u64) -> Store {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let (b, s) = (cfg.batch, cfg.seq);
+        let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let labels: Vec<i32> = tokens
+            .iter()
+            .map(|&t| if rng.coin(0.3) { t } else { -1 })
+            .collect();
+        let mut st = Store::new();
+        st.insert("tokens", Tensor::from_i32(&[b, s], tokens));
+        st.insert("labels", Tensor::from_i32(&[b, s], labels));
+        st
+    }
+
     #[test]
-    fn ligo_grow_falls_back_to_native_without_artifacts() {
+    fn ligo_grow_without_artifacts_trains_m_on_the_task_loss() {
         let rt = Runtime::cpu(std::env::temp_dir().join("ligo_gm_no_artifacts")).unwrap();
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(4, 12, 3);
         let small = small_store(&cs);
         let opts = LigoOptions { steps: 5, ..Default::default() };
-        let mut batches = |_s: usize| Store::new();
+        let mut batches = |s: usize| mk_batch(&mk_cfg(4, 12, 3), 100 + s as u64);
         let grown = ligo_grow(&rt, &cs, &cl, &small, &mut batches, &opts).unwrap();
+        assert_eq!(grown.objective, "task-native");
         assert!(grown.final_m_loss.is_finite());
         assert!(grown.extra_flops > 0.0);
         assert_eq!(grown.params.len(), small_store(&cl).len());
@@ -246,14 +360,73 @@ mod tests {
     }
 
     #[test]
-    fn native_flops_accounting_scales_with_steps() {
+    fn empty_batches_fall_back_to_the_surrogate_objective() {
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(4, 12, 3);
         let small = small_store(&cs);
-        let g5 = ligo_grow_native(&cs, &cl, &small, &LigoOptions { steps: 5, ..Default::default() })
-            .unwrap();
-        let g9 = ligo_grow_native(&cs, &cl, &small, &LigoOptions { steps: 9, ..Default::default() })
-            .unwrap();
+        let opts = LigoOptions { steps: 5, ..Default::default() };
+        let mut batches = |_s: usize| Store::new();
+        let grown = ligo_grow_native(&cs, &cl, &small, &mut batches, &opts).unwrap();
+        assert_eq!(grown.objective, "surrogate");
+        assert!(grown.final_m_loss.is_finite());
+    }
+
+    #[test]
+    fn task_native_m_learning_descends_the_task_loss() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        // the same fixed batch each step: loss at step N must beat step 0
+        let mut batches = |_s: usize| mk_batch(&mk_cfg(4, 12, 3), 7);
+        let l0 = ligo_grow_task_native(
+            &cs,
+            &cl,
+            &small,
+            &mut batches,
+            &LigoOptions { steps: 0, ..Default::default() },
+        )
+        .unwrap();
+        let ln = ligo_grow_task_native(
+            &cs,
+            &cl,
+            &small,
+            &mut batches,
+            &LigoOptions { steps: 20, ..Default::default() },
+        )
+        .unwrap();
+        assert!(l0.final_m_loss.is_finite() && ln.final_m_loss.is_finite());
+        assert!(
+            ln.final_m_loss < l0.final_m_loss,
+            "task-loss M-learning must descend: {} -> {}",
+            l0.final_m_loss,
+            ln.final_m_loss
+        );
+    }
+
+    #[test]
+    fn native_flops_accounting_scales_with_steps_and_objective() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        let g5 =
+            ligo_grow_surrogate(&cs, &cl, &small, &LigoOptions { steps: 5, ..Default::default() })
+                .unwrap();
+        let g9 =
+            ligo_grow_surrogate(&cs, &cl, &small, &LigoOptions { steps: 9, ..Default::default() })
+                .unwrap();
         assert!(g9.extra_flops > g5.extra_flops);
+        assert_eq!(g5.objective, "surrogate");
+        // a task-native step costs more FLOPs than a surrogate step (it
+        // pays the large-model fwd/bwd on top of the expansion backprop)
+        let mut batches = |_s: usize| mk_batch(&mk_cfg(4, 12, 3), 9);
+        let t5 = ligo_grow_task_native(
+            &cs,
+            &cl,
+            &small,
+            &mut batches,
+            &LigoOptions { steps: 5, ..Default::default() },
+        )
+        .unwrap();
+        assert!(t5.extra_flops > g5.extra_flops);
     }
 }

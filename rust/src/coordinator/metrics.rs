@@ -126,7 +126,11 @@ pub fn savings(scratch: &Curve, method: &Curve, wall: bool, higher_better: bool)
 }
 
 /// Write a set of curves as a JSON report + per-curve CSVs under `dir`.
-pub fn write_report(dir: &std::path::Path, experiment: &str, curves: &[Curve]) -> crate::error::Result<()> {
+pub fn write_report(
+    dir: &std::path::Path,
+    experiment: &str,
+    curves: &[Curve],
+) -> crate::error::Result<()> {
     std::fs::create_dir_all(dir)?;
     for c in curves {
         std::fs::write(dir.join(format!("{experiment}_{}.csv", c.name)), c.to_csv())?;

@@ -29,7 +29,14 @@ fn decays(name: &str, t: &Tensor) -> bool {
 }
 
 impl AdamW {
-    pub fn new(params: &Store, beta1: f32, beta2: f32, eps: f32, weight_decay: f32, grad_clip: f32) -> AdamW {
+    pub fn new(
+        params: &Store,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        weight_decay: f32,
+        grad_clip: f32,
+    ) -> AdamW {
         let mut m = Store::new();
         let mut v = Store::new();
         for (name, t) in params.iter() {

@@ -5,6 +5,7 @@
 
 use std::sync::Arc;
 
+use crate::bail;
 use crate::config::{ModelConfig, TrainConfig};
 use crate::error::Result;
 use crate::coordinator::flops;
@@ -97,8 +98,24 @@ impl Trainer {
                 bindings.push((g.as_str(), s));
             }
             let out = self.grad_exe.run(&bindings)?;
-            loss_sum += out.scalar("loss").unwrap_or(f32::NAN);
-            let g = out.groups.get("grads").expect("grad artifact returns grads");
+            // A backend gap here must fail loudly: a missing loss would
+            // silently poison the whole mean-loss curve with NaN, and a
+            // missing grads group would previously panic.
+            let Some(loss) = out.scalar("loss") else {
+                bail!(
+                    "grad executable for '{}' returned no 'loss' scalar (outputs: {:?})",
+                    self.cfg.name,
+                    out.scalars.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
+                )
+            };
+            let Some(g) = out.groups.get("grads") else {
+                bail!(
+                    "grad executable for '{}' returned no 'grads' group (groups: {:?})",
+                    self.cfg.name,
+                    out.groups.keys().collect::<Vec<_>>()
+                )
+            };
+            loss_sum += loss;
             accumulate(&mut grads, g, 1.0 / accum as f32);
         }
         let lr = self.tc.lr_at(self.step);
@@ -139,19 +156,31 @@ impl Trainer {
 }
 
 /// Evaluate a fwd artifact over n batches: mean loss + mean metric.
+/// `n_batches == 0` is a caller bug (the division would push a NaN point
+/// onto the curve) and reports an error instead; a missing `loss` output
+/// likewise fails loudly rather than corrupting the mean.
 pub fn eval_store(
     fwd: &Executable,
     params: &Store,
     eval_batches: &mut dyn FnMut(usize) -> Store,
     n_batches: usize,
 ) -> Result<(f32, Option<f32>)> {
+    if n_batches == 0 {
+        bail!("eval_store: n_batches must be > 0 (a 0-batch mean is NaN)");
+    }
     let mut loss = 0.0f32;
     let mut metric = 0.0f32;
     let mut has_metric = false;
     for i in 0..n_batches {
         let batch = eval_batches(i);
         let out = fwd.run(&[("params", params), ("batch", &batch)])?;
-        loss += out.scalar("loss").unwrap_or(f32::NAN);
+        let Some(l) = out.scalar("loss") else {
+            bail!(
+                "fwd executable '{}' returned no 'loss' scalar",
+                fwd.manifest.name
+            )
+        };
+        loss += l;
         if let Some(m) = out.scalar("metric") {
             metric += m;
             has_metric = true;
@@ -161,4 +190,96 @@ pub fn eval_store(
         loss / n_batches as f32,
         has_metric.then_some(metric / n_batches as f32),
     ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ExecEngine, Manifest, TensorSpec};
+    use crate::tensor::Tensor;
+
+    /// Engine returning a constant loss but NO grads group / NO loss,
+    /// depending on the manifest it is paired with.
+    struct Fixed;
+
+    impl ExecEngine for Fixed {
+        fn execute(&self, _inputs: &[&Tensor], outputs: &[TensorSpec]) -> Result<Vec<Tensor>> {
+            Ok(outputs
+                .iter()
+                .map(|s| Tensor::from_f32(&s.shape, vec![0.5; s.numel()]))
+                .collect())
+        }
+    }
+
+    fn exe(outputs: &str) -> Executable {
+        let manifest = Manifest::parse(&format!(
+            r#"{{"name": "t", "inputs": [], "outputs": [{outputs}]}}"#
+        ))
+        .unwrap();
+        Executable::new(manifest, Box::new(Fixed))
+    }
+
+    #[test]
+    fn eval_store_rejects_zero_batches() {
+        let fwd = exe(r#"{"name": "loss", "shape": [], "dtype": "float32"}"#);
+        let mut eb = |_i: usize| Store::new();
+        let err = eval_store(&fwd, &Store::new(), &mut eb, 0).unwrap_err();
+        assert!(err.to_string().contains("n_batches"), "{err}");
+        // and the happy path still averages
+        let (l, m) = eval_store(&fwd, &Store::new(), &mut eb, 3).unwrap();
+        assert_eq!(l, 0.5);
+        assert!(m.is_none());
+    }
+
+    #[test]
+    fn eval_store_errors_when_loss_is_missing() {
+        let fwd = exe(r#"{"name": "metric", "shape": [], "dtype": "float32"}"#);
+        let mut eb = |_i: usize| Store::new();
+        let err = eval_store(&fwd, &Store::new(), &mut eb, 1).unwrap_err();
+        assert!(err.to_string().contains("no 'loss'"), "{err}");
+    }
+
+    /// Backend whose grad executable omits the grads group (and whose fwd
+    /// omits loss): the regression surface for the old panic/NaN paths.
+    struct GapBackend;
+
+    impl crate::runtime::Backend for GapBackend {
+        fn name(&self) -> &'static str {
+            "gap"
+        }
+
+        fn compile(
+            &self,
+            _manifest: &Manifest,
+            _hlo: &std::path::Path,
+        ) -> Result<Box<dyn ExecEngine>> {
+            unreachable!("GapBackend synthesizes everything")
+        }
+
+        fn synthesize(&self, name: &str) -> Option<Result<(Manifest, Box<dyn ExecEngine>)>> {
+            let outputs = if name.starts_with("grad_") {
+                // loss present, grads group absent
+                r#"{"name": "loss", "shape": [], "dtype": "float32"}"#
+            } else {
+                // loss absent entirely
+                r#"{"name": "metric", "shape": [], "dtype": "float32"}"#
+            };
+            let manifest = Manifest::parse(&format!(
+                r#"{{"name": "{name}", "inputs": [], "outputs": [{outputs}]}}"#
+            ))
+            .unwrap();
+            Some(Ok((manifest, Box::new(Fixed) as Box<dyn ExecEngine>)))
+        }
+    }
+
+    #[test]
+    fn train_step_bails_on_missing_grads_instead_of_panicking() {
+        let rt = crate::runtime::Runtime::with_backend(Box::new(GapBackend), "/tmp");
+        let cfg = crate::growth::testutil::mk_cfg(1, 8, 2);
+        let tc = TrainConfig::bert(10);
+        let mut tr =
+            Trainer::with_artifacts(&rt, "grad_x", "fwd_x", &cfg, tc, Store::new()).unwrap();
+        let err = tr.train_step(&mut |_s| Store::new()).unwrap_err();
+        assert!(err.to_string().contains("no 'grads' group"), "{err}");
+    }
 }

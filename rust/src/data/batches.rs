@@ -30,7 +30,8 @@ pub fn mlm_batch(corpus: &Corpus, cfg: &ModelConfig, rng: &mut Rng) -> Store {
                 if r < MASK_AS_MASK {
                     tokens.push(special::MASK);
                 } else if r < MASK_AS_MASK + MASK_AS_RANDOM {
-                    tokens.push(special::CONTENT + rng.below(corpus.vocab - special::CONTENT as usize) as i32);
+                    let content = corpus.vocab - special::CONTENT as usize;
+                    tokens.push(special::CONTENT + rng.below(content) as i32);
                 } else {
                     tokens.push(tok);
                 }

@@ -92,7 +92,9 @@ impl Probe {
                         .map(|&tok| {
                             if rng.coin(noise) {
                                 special::CONTENT
-                                    + rng.below(self.corpus.vocab - special::CONTENT as usize) as i32
+                                    + rng.below(
+                                        self.corpus.vocab - special::CONTENT as usize,
+                                    ) as i32
                             } else {
                                 tok
                             }
@@ -132,7 +134,9 @@ impl Probe {
                         .map(|&tok| {
                             if rng.coin(0.3) {
                                 special::CONTENT
-                                    + rng.below(self.corpus.vocab - special::CONTENT as usize) as i32
+                                    + rng.below(
+                                        self.corpus.vocab - special::CONTENT as usize,
+                                    ) as i32
                             } else {
                                 tok
                             }

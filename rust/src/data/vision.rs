@@ -64,9 +64,11 @@ impl VisionTask {
                 let fx = (x + ox) as f32 / side as f32;
                 let fy = (y + oy) as f32 / side as f32;
                 let v = match kind {
-                    0 => ((fx * freq as f32 * std::f32::consts::TAU + phase).sin()).signum(), // stripes
+                    // stripes
+                    0 => ((fx * freq as f32 * std::f32::consts::TAU + phase).sin()).signum(),
                     1 => {
-                        let cx = ((fx * 2.0 * freq as f32) as i32 + (fy * 2.0 * freq as f32) as i32) % 2;
+                        let cx =
+                            ((fx * 2.0 * freq as f32) as i32 + (fy * 2.0 * freq as f32) as i32) % 2;
                         if cx == 0 { 1.0 } else { -1.0 } // checker
                     }
                     2 => {
@@ -74,7 +76,8 @@ impl VisionTask {
                         let dy = fy - 0.5;
                         ((dx * dx + dy * dy).sqrt() * freq as f32 * 12.0 + phase).sin() // rings
                     }
-                    3 => (fx * freq as f32 + fy * freq as f32 * 0.5 + phase).fract() * 2.0 - 1.0, // gradient
+                    // gradient
+                    3 => (fx * freq as f32 + fy * freq as f32 * 0.5 + phase).fract() * 2.0 - 1.0,
                     _ => {
                         let bx = (fx * freq as f32 * 4.0 + phase).sin();
                         let by = (fy * freq as f32 * 4.0 + phase).cos();
@@ -97,7 +100,8 @@ impl VisionTask {
         for i in 0..b {
             let label = rng.below(self.n_classes);
             labels.push(label as i32);
-            self.render(label, side, rng, &mut images[i * side * side * 3..(i + 1) * side * side * 3]);
+            let px = side * side * 3;
+            self.render(label, side, rng, &mut images[i * px..(i + 1) * px]);
         }
         let mut st = Store::new();
         st.insert("images", Tensor::from_f32(&[b, side, side, 3], images));

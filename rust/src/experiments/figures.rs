@@ -176,7 +176,8 @@ pub fn fig5(rt: &Runtime, reg: &Registry, scale: f64, out: &Path) -> Result<()> 
         let timer = crate::util::timer::Timer::new();
         for step in 0..steps {
             let p_drop = if max_drop > 0.0 { layer_drop_p(step, steps, max_drop) } else { 0.0 };
-            let batch = gated_batch(&corpus, &large, &mut Rng::new(0xF1A + step as u64), p_drop, tok_drop);
+            let mut rng = Rng::new(0xF1A + step as u64);
+            let batch = gated_batch(&corpus, &large, &mut rng, p_drop, tok_drop);
             let outp = grad.run(&[("params", &params), ("batch", &batch)])?;
             let grads = outp.groups.get("grads").expect("grads");
             opt.step(&mut params, grads, tc.lr_at(step));

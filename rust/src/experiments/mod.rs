@@ -21,7 +21,13 @@ pub const ALL: [&str; 14] = [
 
 /// Run one experiment by id. `scale` multiplies default step counts
 /// (0.2 = quick smoke, 1.0 = full reproduction).
-pub fn run(rt: &Runtime, reg: &Registry, id: &str, scale: f64, out_dir: &std::path::Path) -> Result<()> {
+pub fn run(
+    rt: &Runtime,
+    reg: &Registry,
+    id: &str,
+    scale: f64,
+    out_dir: &std::path::Path,
+) -> Result<()> {
     match id {
         "fig2" => figures::fig2(rt, reg, scale, out_dir),
         "fig2c" => figures::fig2c(rt, reg, scale, out_dir),

@@ -43,7 +43,8 @@ fn train_large_cached(
     }
     let corpus = Corpus::new(large.vocab.max(512), 0);
     let small_params = ensure_pretrained(rt, small, &corpus, pre, out)?;
-    let (params, extra_flops, extra) = init_large(rt, method, small, large, &small_params, &corpus)?;
+    let (params, extra_flops, extra) =
+        init_large(rt, method, small, large, &small_params, &corpus)?;
     let tc = recipe_for(large, steps);
     let mut tr = if matches!(method, Method::Ki) {
         let grad = format!("kd_grad_{}__{}", small.name, large.name);
@@ -79,7 +80,12 @@ fn probe_batchers(
 }
 
 /// GLUE + SQuAD rows for one pretrained bert_base body.
-fn glue_squad_row(rt: &Runtime, reg: &Registry, body: &Store, scale: f64) -> Result<(Vec<f32>, f32, Vec<f32>)> {
+fn glue_squad_row(
+    rt: &Runtime,
+    reg: &Registry,
+    body: &Store,
+    scale: f64,
+) -> Result<(Vec<f32>, f32, Vec<f32>)> {
     let probe_cfg = reg.model("probe_bert_base")?.clone();
     let corpus = Corpus::new(512, 0);
     let tc = TrainConfig::finetune(scaled(FT_STEPS, scale));
@@ -231,7 +237,15 @@ pub fn table5(rt: &Runtime, reg: &Registry, scale: f64, out: &Path) -> Result<()
         rt, &Method::Ligo(super::common::ligo_scaled()), &small, &large, &small_params, &corpus,
     )?;
     let ligo_trained =
-        train_large_cached(rt, &Method::Ligo(super::common::ligo_scaled()), &small, &large, steps, pre, out)?;
+        train_large_cached(
+            rt,
+            &Method::Ligo(super::common::ligo_scaled()),
+            &small,
+            &large,
+            steps,
+            pre,
+            out,
+        )?;
     let scratch_trained =
         train_large_cached(rt, &Method::Scratch, &small, &large, steps, pre, out)?;
 

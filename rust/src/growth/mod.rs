@@ -7,9 +7,10 @@
 //! * [`stacking`] — StackBERT / interpolation / MSLT depth growth (Gong et al. 2019 etc.)
 //! * [`ligo`] — the paper's *learned* operator, ported natively: Prop. 1
 //!   init, the fused `B W A^T` width pass with Appendix B.1 tying, learned
-//!   depth blends, and a native surrogate M-learning loop. The
-//!   task-loss M-learning fast path through the `ligo_grad_*`/`ligo_apply_*`
-//!   artifacts lives in coordinator::growth_manager (feature `pjrt`).
+//!   depth blends, the expansion's analytic backward (dL/dM), and a
+//!   surrogate M-learning loop. True task-loss M-learning (native engine or
+//!   the `ligo_grad_*` artifacts under `pjrt`) lives in
+//!   coordinator::growth_manager.
 //!
 //! Prop. 1 tests (tests/prop_ligo.rs) verify the zoo's operators are exact
 //! special cases of the LiGO family.
@@ -34,8 +35,9 @@ pub trait GrowthOperator {
 }
 
 /// Operator registry by CLI name. "ligo" resolves to the native learned
-/// operator (surrogate M-learning); the artifact-backed task-loss variant
-/// stays behind `coordinator::growth_manager::ligo_grow`.
+/// operator (surrogate M-learning — this interface has no task batches);
+/// the task-loss variants stay behind
+/// `coordinator::growth_manager::ligo_grow`.
 pub fn by_name(name: &str) -> Option<Box<dyn GrowthOperator>> {
     match name {
         "direct_copy" => Some(Box::new(direct_copy::DirectCopy::default())),

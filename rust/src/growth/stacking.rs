@@ -31,7 +31,12 @@ fn width_stage(small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store
 }
 
 /// Assemble the large store taking layer l from `src_layer(l)`.
-fn depth_map(wide: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig, src: impl Fn(usize) -> usize) -> Store {
+fn depth_map(
+    wide: &Store,
+    cfg_s: &ModelConfig,
+    cfg_l: &ModelConfig,
+    src: impl Fn(usize) -> usize,
+) -> Store {
     let mut out = Store::new();
     // non-layer tensors copy through
     for (name, t) in wide.iter() {
@@ -72,7 +77,7 @@ impl GrowthOperator for Interpolation {
     }
     fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
         let wide = width_stage(small, cfg_s, cfg_l);
-        let k = (cfg_l.layers + cfg_s.layers - 1) / cfg_s.layers;
+        let k = cfg_l.layers.div_ceil(cfg_s.layers);
         depth_map(&wide, cfg_s, cfg_l, move |l| l / k.max(1))
     }
 }

@@ -28,6 +28,35 @@ pub fn mk_cfg(layers: usize, dim: usize, heads: usize) -> ModelConfig {
     }
 }
 
+/// A vision-family config (vit or cait) with the given size. Image 8x8 with
+/// patch 4 keeps the token count at 4 (+CLS for vit), so vision tests stay
+/// fast.
+pub fn mk_vision_cfg(family: &str, layers: usize, dim: usize, heads: usize) -> ModelConfig {
+    ModelConfig {
+        name: format!("{family}_{layers}x{dim}"),
+        family: family.into(),
+        layers,
+        dim,
+        heads,
+        vocab: 0,
+        seq: 0,
+        batch: 2,
+        img: 8,
+        patch: 4,
+        channels: 3,
+        n_classes: 3,
+        cls_layers: usize::from(family == "cait"),
+        ffn_mult: 4,
+    }
+}
+
+/// Deterministic full parameter store for *any* family, via the native
+/// engine's parameter inventory (`model::param_shapes`) — always exactly
+/// the tensor set the forward pass and the AOT manifests use.
+pub fn full_store(cfg: &ModelConfig) -> Store {
+    Store::det_init(&crate::model::param_shapes(cfg), 0)
+}
+
 /// Deterministic full parameter store for a bert-family config.
 pub fn small_store(cfg: &ModelConfig) -> Store {
     let mut s = Store::new();

@@ -9,10 +9,12 @@
 //!   (`python/compile/`), lowered once to HLO text artifacts.
 //! * **L3 (this crate)** — the coordinator: a pluggable runtime (the
 //!   `runtime::Backend` trait; PJRT behind the off-by-default `pjrt`
-//!   feature), optimizer, data pipeline, the growth-operator zoo including a
-//!   fully native LiGO port, the LiGO growth manager, experiment harness and
-//!   CLI. Python never runs at runtime, and the default build needs neither
-//!   Python artifacts nor XLA.
+//!   feature, with a **native transformer engine** (`model`) that
+//!   synthesizes `fwd_*`/`grad_*` executables when artifacts are absent),
+//!   optimizer, data pipeline, the growth-operator zoo including a fully
+//!   native LiGO port with true task-loss M-learning, the LiGO growth
+//!   manager, experiment harness and CLI. Python never runs at runtime, and
+//!   the default build needs neither Python artifacts nor XLA.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
 
@@ -23,6 +25,7 @@ pub mod error;
 pub mod eval;
 pub mod experiments;
 pub mod growth;
+pub mod model;
 pub mod runtime;
 pub mod tensor;
 pub mod util;

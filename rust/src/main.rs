@@ -49,7 +49,7 @@ fn run() -> Result<()> {
     match cmd {
         "train" => {
             let rt = Runtime::cpu(artifacts_dir())?;
-            let reg = Registry::load(&artifacts_dir())?;
+            let reg = Registry::load_or_builtin(&artifacts_dir());
             let name = args.get("model").context("--model required")?;
             let cfg = reg.model(name)?.clone();
             let steps = args.get_usize("steps", 300);
@@ -79,7 +79,7 @@ fn run() -> Result<()> {
         }
         "grow" => {
             let rt = Runtime::cpu(artifacts_dir())?;
-            let reg = Registry::load(&artifacts_dir())?;
+            let reg = Registry::load_or_builtin(&artifacts_dir());
             let from = reg.model(args.get("from").context("--from required")?)?.clone();
             let to = reg.model(args.get("to").context("--to required")?)?.clone();
             let op = args.get("op").unwrap_or("ligo");
@@ -102,7 +102,10 @@ fn run() -> Result<()> {
                         &c, &t, &mut ligo::util::rng::Rng::new(7000 + s as u64))
                 };
                 let g = ligo_grow(&rt, &from, &to, &ckpt, &mut mk, &opts)?;
-                println!("LiGO M-loss {:.4}, +{:.3e} FLOPs, {:.1}s", g.final_m_loss, g.extra_flops, g.wall_s);
+                println!(
+                    "LiGO M-loss {:.4} ({}), +{:.3e} FLOPs, {:.1}s",
+                    g.final_m_loss, g.objective, g.extra_flops, g.wall_s
+                );
                 g.params
             } else {
                 let oper = ligo::growth::by_name(op)
@@ -118,7 +121,7 @@ fn run() -> Result<()> {
         }
         "eval" => {
             let rt = Runtime::cpu(artifacts_dir())?;
-            let reg = Registry::load(&artifacts_dir())?;
+            let reg = Registry::load_or_builtin(&artifacts_dir());
             let name = args.get("model").context("--model required")?;
             let cfg = reg.model(name)?.clone();
             let params = io::load(args.get("ckpt").context("--ckpt required")?)?;
@@ -140,7 +143,7 @@ fn run() -> Result<()> {
         }
         "experiment" => {
             let rt = Runtime::cpu(artifacts_dir())?;
-            let reg = Registry::load(&artifacts_dir())?;
+            let reg = Registry::load_or_builtin(&artifacts_dir());
             let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
             let scale = args.get_f32("scale", 0.25) as f64;
             experiments::run(&rt, &reg, id, scale, &out_dir)?;
@@ -149,7 +152,7 @@ fn run() -> Result<()> {
             let what = args.positional.get(1).map(String::as_str).unwrap_or("configs");
             match what {
                 "configs" => {
-                    let reg = Registry::load(&artifacts_dir())?;
+                    let reg = Registry::load_or_builtin(&artifacts_dir());
                     println!("{:<16} {:>7} {:>6} {:>6} {:>9} {:>6} {:>12}",
                         "name", "family", "layers", "dim", "vocab/img", "seq", "params");
                     for (name, m) in &reg.models {
@@ -171,8 +174,9 @@ fn run() -> Result<()> {
                         println!("{op}");
                     }
                     println!(
-                        "ligo (learned; native surrogate M-learning, or the task-loss \
-                         artifact path when built with --features pjrt)"
+                        "ligo (learned; task-loss M-learning through the native engine by \
+                         default, the fused artifact path with --features pjrt, and a \
+                         surrogate least-squares fallback when no task batches exist)"
                     );
                 }
                 "artifacts" => {

@@ -1,0 +1,559 @@
+//! Minimal reverse-mode autodiff over [`Tensor`]s — the substrate of the
+//! native model engine.
+//!
+//! A [`Tape`] is an append-only arena of nodes; every op evaluates eagerly
+//! (so [`Tape::value`] is always available) and records what it needs for
+//! the reverse sweep (layernorm statistics, attention probabilities).
+//! [`Tape::backward`] walks the arena once in reverse, accumulating
+//! gradients into every node the scalar root depends on — shared leaves
+//! (e.g. the tied `emb_tok` used by both the embedding gather and the LM
+//! head) accumulate from all of their uses automatically.
+//!
+//! Activations are kept 2-D throughout: a transformer stream is flattened
+//! to `(batch * seq, dim)` and the attention op carries the
+//! (batch, heads, s_q, s_k) layout in its [`AttnShape`].
+
+use crate::tensor::ops::{self, AttnShape};
+use crate::tensor::Tensor;
+
+/// Handle to a tape node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Var(usize);
+
+impl Var {
+    /// Arena index (for looking up this node's gradient after `backward`).
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+enum Op {
+    Leaf,
+    /// y = x @ w^T — dense layer on (out, in)-stored weights, no bias.
+    Linear { x: Var, w: Var },
+    /// y = x + b with b broadcast over rows.
+    AddRow { x: Var, b: Var },
+    /// y = a + b, same shape.
+    Add { a: Var, b: Var },
+    /// y = x + tile(t, reps): t (s, d) added to each of `reps` row blocks.
+    AddTiled { x: Var, t: Var, reps: usize },
+    /// y = x * v with v broadcast over rows (CaiT LayerScale).
+    MulRow { x: Var, v: Var },
+    Gelu { x: Var },
+    LayerNorm { x: Var, g: Var, b: Var, stats: Vec<f32> },
+    Attention { q: Var, k: Var, v: Var, sh: AttnShape, probs: Tensor },
+    /// y[i] = emb[ids[i]] — embedding row gather.
+    Gather { emb: Var, ids: Vec<i32> },
+    /// y = v (a d-vector) broadcast to (reps, d).
+    BroadcastRow { v: Var, reps: usize },
+    /// Per batch element: concat sa rows of `a` with sb rows of `b`.
+    ConcatSeq { a: Var, b: Var, batch: usize, sa: usize, sb: usize },
+    /// y[b] = x[b * s] — the first sequence position of each batch element.
+    SeqFirst { x: Var, batch: usize, s: usize },
+    /// y[b] = mean over the s sequence rows of batch element b.
+    SeqMean { x: Var, batch: usize, s: usize },
+    /// Scalar masked mean cross-entropy over the rows of `logits`.
+    MaskedXent { logits: Var, labels: Vec<i32>, count: f32 },
+}
+
+struct Node {
+    value: Tensor,
+    op: Op,
+}
+
+/// The autodiff arena. See the module docs.
+#[derive(Default)]
+pub struct Tape {
+    nodes: Vec<Node>,
+}
+
+/// Accumulate `t` into an optional gradient slot.
+fn acc(slot: &mut Option<Tensor>, t: Tensor) {
+    match slot {
+        Some(a) => {
+            debug_assert_eq!(a.shape, t.shape, "gradient shape mismatch");
+            for (x, y) in a.f32s_mut().iter_mut().zip(t.f32s()) {
+                *x += y;
+            }
+        }
+        None => *slot = Some(t),
+    }
+}
+
+/// Column sums of a 2-D gradient (the broadcast-bias backward).
+fn col_sums(g: &Tensor) -> Vec<f32> {
+    let d = g.shape[1];
+    let mut out = vec![0.0f32; d];
+    for row in g.f32s().chunks_exact(d) {
+        for (a, &v) in out.iter_mut().zip(row) {
+            *a += v;
+        }
+    }
+    out
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// The (eagerly computed) value of a node.
+    pub fn value(&self, v: Var) -> &Tensor {
+        &self.nodes[v.0].value
+    }
+
+    fn push(&mut self, value: Tensor, op: Op) -> Var {
+        self.nodes.push(Node { value, op });
+        Var(self.nodes.len() - 1)
+    }
+
+    /// A constant or parameter input node.
+    pub fn leaf(&mut self, t: Tensor) -> Var {
+        self.push(t, Op::Leaf)
+    }
+
+    /// y = x @ w^T for x (n, in) and w (out, in) — the y = W x convention
+    /// every stored projection uses.
+    pub fn linear(&mut self, x: Var, w: Var) -> Var {
+        let y = ops::matmul_nt(self.value(x), self.value(w));
+        self.push(y, Op::Linear { x, w })
+    }
+
+    /// y = x + b with the bias broadcast over rows.
+    pub fn add_row(&mut self, x: Var, b: Var) -> Var {
+        let (xv, bv) = (self.value(x), self.value(b));
+        let d = xv.shape[1];
+        assert_eq!(bv.numel(), d, "add_row bias dim");
+        let mut out = xv.clone();
+        for row in out.f32s_mut().chunks_exact_mut(d) {
+            for (o, &bb) in row.iter_mut().zip(bv.f32s()) {
+                *o += bb;
+            }
+        }
+        self.push(out, Op::AddRow { x, b })
+    }
+
+    /// y = a + b (same shape; the residual connection).
+    pub fn add(&mut self, a: Var, b: Var) -> Var {
+        let out = ops::axpy(self.value(a), 1.0, self.value(b));
+        self.push(out, Op::Add { a, b })
+    }
+
+    /// y = x + tile(t, reps): adds t (s, d) to each of `reps` consecutive
+    /// s-row blocks of x (the positional-embedding broadcast over batch).
+    pub fn add_tiled(&mut self, x: Var, t: Var, reps: usize) -> Var {
+        let (xv, tv) = (self.value(x), self.value(t));
+        let (s, d) = (tv.shape[0], tv.shape[1]);
+        assert_eq!(xv.shape, vec![reps * s, d], "add_tiled shapes");
+        let mut out = xv.clone();
+        let tvv = tv.f32s();
+        for block in out.f32s_mut().chunks_exact_mut(s * d) {
+            for (o, &tt) in block.iter_mut().zip(tvv) {
+                *o += tt;
+            }
+        }
+        self.push(out, Op::AddTiled { x, t, reps })
+    }
+
+    /// y = x * v with v broadcast over rows (LayerScale).
+    pub fn mul_row(&mut self, x: Var, v: Var) -> Var {
+        let (xv, vv) = (self.value(x), self.value(v));
+        let d = xv.shape[1];
+        assert_eq!(vv.numel(), d, "mul_row vector dim");
+        let mut out = xv.clone();
+        for row in out.f32s_mut().chunks_exact_mut(d) {
+            for (o, &m) in row.iter_mut().zip(vv.f32s()) {
+                *o *= m;
+            }
+        }
+        self.push(out, Op::MulRow { x, v })
+    }
+
+    pub fn gelu(&mut self, x: Var) -> Var {
+        let y = ops::gelu_fwd(self.value(x));
+        self.push(y, Op::Gelu { x })
+    }
+
+    pub fn layernorm(&mut self, x: Var, g: Var, b: Var) -> Var {
+        let (y, stats) = ops::layernorm_fwd(self.value(x), self.value(g), self.value(b));
+        self.push(y, Op::LayerNorm { x, g, b, stats })
+    }
+
+    /// Multi-head softmax attention; see [`ops::attention_fwd`].
+    pub fn attention(&mut self, q: Var, k: Var, v: Var, sh: AttnShape) -> Var {
+        let (out, probs) = ops::attention_fwd(self.value(q), self.value(k), self.value(v), &sh);
+        self.push(out, Op::Attention { q, k, v, sh, probs })
+    }
+
+    /// y[i] = emb[ids[i]] — token/row embedding lookup.
+    pub fn gather(&mut self, emb: Var, ids: Vec<i32>) -> Var {
+        let ev = self.value(emb);
+        let (rows, d) = (ev.shape[0], ev.shape[1]);
+        let evv = ev.f32s();
+        let mut out = Vec::with_capacity(ids.len() * d);
+        for &id in &ids {
+            assert!(id >= 0 && (id as usize) < rows, "gather id {id} outside [0, {rows})");
+            let r = id as usize;
+            out.extend_from_slice(&evv[r * d..(r + 1) * d]);
+        }
+        let t = Tensor::from_f32(&[ids.len(), d], out);
+        self.push(t, Op::Gather { emb, ids })
+    }
+
+    /// y = v (a d-vector) broadcast to (reps, d) — the CLS token.
+    pub fn broadcast_row(&mut self, v: Var, reps: usize) -> Var {
+        let vv = self.value(v);
+        let d = vv.numel();
+        let mut out = Vec::with_capacity(reps * d);
+        for _ in 0..reps {
+            out.extend_from_slice(vv.f32s());
+        }
+        let t = Tensor::from_f32(&[reps, d], out);
+        self.push(t, Op::BroadcastRow { v, reps })
+    }
+
+    /// Per batch element, concat sa rows of `a` with sb rows of `b` along
+    /// the sequence axis (CLS-token prepend / class-attention key stream).
+    pub fn concat_seq(&mut self, a: Var, b: Var, batch: usize, sa: usize, sb: usize) -> Var {
+        let (av, bv) = (self.value(a), self.value(b));
+        let d = av.shape[1];
+        assert_eq!(av.shape, vec![batch * sa, d], "concat_seq a shape");
+        assert_eq!(bv.shape, vec![batch * sb, d], "concat_seq b shape");
+        let (avv, bvv) = (av.f32s(), bv.f32s());
+        let mut out = Vec::with_capacity(batch * (sa + sb) * d);
+        for bi in 0..batch {
+            out.extend_from_slice(&avv[bi * sa * d..(bi + 1) * sa * d]);
+            out.extend_from_slice(&bvv[bi * sb * d..(bi + 1) * sb * d]);
+        }
+        let t = Tensor::from_f32(&[batch * (sa + sb), d], out);
+        self.push(t, Op::ConcatSeq { a, b, batch, sa, sb })
+    }
+
+    /// y[b] = x[b * s]: the first sequence position of each batch element
+    /// (the ViT CLS readout).
+    pub fn seq_first(&mut self, x: Var, batch: usize, s: usize) -> Var {
+        let xv = self.value(x);
+        let d = xv.shape[1];
+        assert_eq!(xv.shape, vec![batch * s, d], "seq_first shape");
+        let xvv = xv.f32s();
+        let mut out = Vec::with_capacity(batch * d);
+        for b in 0..batch {
+            out.extend_from_slice(&xvv[b * s * d..(b * s + 1) * d]);
+        }
+        let t = Tensor::from_f32(&[batch, d], out);
+        self.push(t, Op::SeqFirst { x, batch, s })
+    }
+
+    /// y[b] = mean of the s sequence rows of batch element b (probe pooling).
+    pub fn seq_mean(&mut self, x: Var, batch: usize, s: usize) -> Var {
+        let xv = self.value(x);
+        let d = xv.shape[1];
+        assert_eq!(xv.shape, vec![batch * s, d], "seq_mean shape");
+        let xvv = xv.f32s();
+        let inv = 1.0 / s as f32;
+        let mut out = vec![0.0f32; batch * d];
+        for b in 0..batch {
+            let orow = &mut out[b * d..(b + 1) * d];
+            for r in 0..s {
+                let xrow = &xvv[(b * s + r) * d..(b * s + r + 1) * d];
+                for (o, &xx) in orow.iter_mut().zip(xrow) {
+                    *o += xx * inv;
+                }
+            }
+        }
+        let t = Tensor::from_f32(&[batch, d], out);
+        self.push(t, Op::SeqMean { x, batch, s })
+    }
+
+    /// Scalar masked mean cross-entropy (labels < 0 ignored).
+    pub fn masked_xent(&mut self, logits: Var, labels: Vec<i32>) -> Var {
+        let (loss, count) = ops::masked_xent_fwd(self.value(logits), &labels);
+        self.push(Tensor::scalar_f32(loss), Op::MaskedXent { logits, labels, count })
+    }
+
+    /// Reverse sweep from the scalar `root`. Returns one gradient slot per
+    /// node (None for nodes the root does not depend on); leaf slots hold
+    /// the parameter gradients.
+    pub fn backward(&self, root: Var) -> Vec<Option<Tensor>> {
+        assert_eq!(self.nodes[root.0].value.numel(), 1, "backward root must be scalar");
+        let mut grads: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
+        grads[root.0] = Some(Tensor::scalar_f32(1.0));
+        for i in (0..=root.0).rev() {
+            let Some(gout) = grads[i].take() else { continue };
+            match &self.nodes[i].op {
+                Op::Leaf => {
+                    grads[i] = Some(gout);
+                }
+                Op::Linear { x, w } => {
+                    let dx = ops::matmul(&gout, self.value(*w));
+                    let dw = ops::matmul(&ops::transpose(&gout), self.value(*x));
+                    acc(&mut grads[x.0], dx);
+                    acc(&mut grads[w.0], dw);
+                }
+                Op::AddRow { x, b } => {
+                    let db = Tensor::from_f32(&self.value(*b).shape, col_sums(&gout));
+                    acc(&mut grads[b.0], db);
+                    acc(&mut grads[x.0], gout);
+                }
+                Op::Add { a, b } => {
+                    acc(&mut grads[a.0], gout.clone());
+                    acc(&mut grads[b.0], gout);
+                }
+                Op::AddTiled { x, t, reps } => {
+                    let tshape = self.value(*t).shape.clone();
+                    let block = tshape[0] * tshape[1];
+                    let mut dt = vec![0.0f32; block];
+                    for rep in 0..*reps {
+                        let src = &gout.f32s()[rep * block..(rep + 1) * block];
+                        for (a, &v) in dt.iter_mut().zip(src) {
+                            *a += v;
+                        }
+                    }
+                    acc(&mut grads[t.0], Tensor::from_f32(&tshape, dt));
+                    acc(&mut grads[x.0], gout);
+                }
+                Op::MulRow { x, v } => {
+                    let (xv, vv) = (self.value(*x), self.value(*v));
+                    let d = xv.shape[1];
+                    let mut dx = gout.clone();
+                    for row in dx.f32s_mut().chunks_exact_mut(d) {
+                        for (o, &m) in row.iter_mut().zip(vv.f32s()) {
+                            *o *= m;
+                        }
+                    }
+                    let mut dv = vec![0.0f32; d];
+                    let rows = gout.f32s().chunks_exact(d).zip(xv.f32s().chunks_exact(d));
+                    for (grow, xrow) in rows {
+                        for ((a, &gg), &xx) in dv.iter_mut().zip(grow).zip(xrow) {
+                            *a += gg * xx;
+                        }
+                    }
+                    acc(&mut grads[x.0], dx);
+                    acc(&mut grads[v.0], Tensor::from_f32(&vv.shape, dv));
+                }
+                Op::Gelu { x } => {
+                    let dx = ops::gelu_bwd(self.value(*x), &gout);
+                    acc(&mut grads[x.0], dx);
+                }
+                Op::LayerNorm { x, g, b, stats } => {
+                    let (dx, dg, db) =
+                        ops::layernorm_bwd(self.value(*x), self.value(*g), stats, &gout);
+                    acc(&mut grads[x.0], dx);
+                    acc(&mut grads[g.0], dg);
+                    acc(&mut grads[b.0], db);
+                }
+                Op::Attention { q, k, v, sh, probs } => {
+                    let (dq, dk, dv) = ops::attention_bwd(
+                        self.value(*q),
+                        self.value(*k),
+                        self.value(*v),
+                        probs,
+                        &gout,
+                        sh,
+                    );
+                    acc(&mut grads[q.0], dq);
+                    acc(&mut grads[k.0], dk);
+                    acc(&mut grads[v.0], dv);
+                }
+                Op::Gather { emb, ids } => {
+                    let eshape = self.value(*emb).shape.clone();
+                    let d = eshape[1];
+                    let mut de = vec![0.0f32; eshape[0] * d];
+                    for (i_row, &id) in ids.iter().enumerate() {
+                        let dst = &mut de[id as usize * d..(id as usize + 1) * d];
+                        let src = &gout.f32s()[i_row * d..(i_row + 1) * d];
+                        for (a, &v) in dst.iter_mut().zip(src) {
+                            *a += v;
+                        }
+                    }
+                    acc(&mut grads[emb.0], Tensor::from_f32(&eshape, de));
+                }
+                Op::BroadcastRow { v, reps: _ } => {
+                    let dv = Tensor::from_f32(&self.value(*v).shape, col_sums(&gout));
+                    acc(&mut grads[v.0], dv);
+                }
+                Op::ConcatSeq { a, b, batch, sa, sb } => {
+                    let d = gout.shape[1];
+                    let gv = gout.f32s();
+                    let mut da = vec![0.0f32; batch * sa * d];
+                    let mut db = vec![0.0f32; batch * sb * d];
+                    for bi in 0..*batch {
+                        let base = bi * (sa + sb) * d;
+                        da[bi * sa * d..(bi + 1) * sa * d]
+                            .copy_from_slice(&gv[base..base + sa * d]);
+                        db[bi * sb * d..(bi + 1) * sb * d]
+                            .copy_from_slice(&gv[base + sa * d..base + (sa + sb) * d]);
+                    }
+                    acc(&mut grads[a.0], Tensor::from_f32(&[batch * sa, d], da));
+                    acc(&mut grads[b.0], Tensor::from_f32(&[batch * sb, d], db));
+                }
+                Op::SeqFirst { x, batch, s } => {
+                    let d = gout.shape[1];
+                    let mut dx = vec![0.0f32; batch * s * d];
+                    for bi in 0..*batch {
+                        dx[bi * s * d..bi * s * d + d]
+                            .copy_from_slice(&gout.f32s()[bi * d..(bi + 1) * d]);
+                    }
+                    acc(&mut grads[x.0], Tensor::from_f32(&[batch * s, d], dx));
+                }
+                Op::SeqMean { x, batch, s } => {
+                    let d = gout.shape[1];
+                    let inv = 1.0 / *s as f32;
+                    let mut dx = vec![0.0f32; batch * s * d];
+                    for bi in 0..*batch {
+                        let grow = &gout.f32s()[bi * d..(bi + 1) * d];
+                        for r in 0..*s {
+                            let dst = &mut dx[(bi * s + r) * d..(bi * s + r + 1) * d];
+                            for (a, &v) in dst.iter_mut().zip(grow) {
+                                *a = v * inv;
+                            }
+                        }
+                    }
+                    acc(&mut grads[x.0], Tensor::from_f32(&[batch * s, d], dx));
+                }
+                Op::MaskedXent { logits, labels, count } => {
+                    let dl =
+                        ops::masked_xent_bwd(self.value(*logits), labels, *count, gout.item());
+                    acc(&mut grads[logits.0], dl);
+                }
+            }
+        }
+        grads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::store::Store;
+    use crate::util::rng::Rng;
+
+    fn rand_t(shape: &[usize], rng: &mut Rng) -> Tensor {
+        let n = crate::tensor::numel(shape);
+        Tensor::from_f32(shape, (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+    }
+
+    /// Evaluate the composite graph used by the FD test below on explicit
+    /// leaf tensors; returns the scalar loss.
+    fn graph_loss(leaves: &Store) -> f32 {
+        let mut tape = Tape::new();
+        let emb = tape.leaf(leaves.expect("emb").clone());
+        let t = tape.leaf(leaves.expect("t").clone());
+        let v = tape.leaf(leaves.expect("v").clone());
+        let b = tape.leaf(leaves.expect("b").clone());
+        let w = tape.leaf(leaves.expect("w").clone());
+        let g1 = tape.gather(emb, vec![0, 2, 4, 1]);
+        let g2 = tape.add_tiled(g1, t, 2);
+        let g3 = tape.mul_row(g2, v);
+        let g4 = tape.add_row(g3, b);
+        let lin = tape.linear(g4, w);
+        let loss = tape.masked_xent(lin, vec![1, -1, 0, 3]);
+        tape.value(loss).item()
+    }
+
+    #[test]
+    fn composite_graph_fd_gradients() {
+        let mut rng = Rng::new(17);
+        let mut leaves = Store::new();
+        leaves.insert("emb", rand_t(&[5, 3], &mut rng));
+        leaves.insert("t", rand_t(&[2, 3], &mut rng));
+        leaves.insert("v", rand_t(&[3], &mut rng));
+        leaves.insert("b", rand_t(&[3], &mut rng));
+        leaves.insert("w", rand_t(&[4, 3], &mut rng));
+
+        // analytic gradients
+        let mut tape = Tape::new();
+        let names = ["emb", "t", "v", "b", "w"];
+        let vars: Vec<Var> = names.iter().map(|n| tape.leaf(leaves.expect(n).clone())).collect();
+        let g1 = tape.gather(vars[0], vec![0, 2, 4, 1]);
+        let g2 = tape.add_tiled(g1, vars[1], 2);
+        let g3 = tape.mul_row(g2, vars[2]);
+        let g4 = tape.add_row(g3, vars[3]);
+        let lin = tape.linear(g4, vars[4]);
+        let loss = tape.masked_xent(lin, vec![1, -1, 0, 3]);
+        let grads = tape.backward(loss);
+
+        let eps = 1e-2f32;
+        for (name, var) in names.iter().zip(&vars) {
+            let g = grads[var.index()].as_ref().expect("leaf gradient");
+            for i in 0..g.numel() {
+                let mut plus = leaves.clone();
+                plus.get_mut(name).unwrap().f32s_mut()[i] += eps;
+                let mut minus = leaves.clone();
+                minus.get_mut(name).unwrap().f32s_mut()[i] -= eps;
+                let fd = (graph_loss(&plus) - graph_loss(&minus)) / (2.0 * eps);
+                let a = g.f32s()[i];
+                let rel = (a - fd).abs() / a.abs().max(fd.abs()).max(1.0);
+                assert!(rel < 1e-3, "{name}[{i}]: analytic {a} vs fd {fd}");
+            }
+        }
+    }
+
+    #[test]
+    fn shared_leaf_accumulates_both_uses() {
+        // loss = xent(x @ x^T): the leaf feeds the op twice; its gradient
+        // must be the sum of both path contributions (FD-checked).
+        let mut rng = Rng::new(5);
+        let x0 = rand_t(&[3, 3], &mut rng);
+        let f = |x: &Tensor| {
+            let mut tape = Tape::new();
+            let x = tape.leaf(x.clone());
+            let y = tape.linear(x, x);
+            let loss = tape.masked_xent(y, vec![0, 2, 1]);
+            (tape, x, loss)
+        };
+        let (tape, xv, loss) = f(&x0);
+        let grads = tape.backward(loss);
+        let g = grads[xv.index()].as_ref().unwrap();
+        let eps = 1e-2f32;
+        for i in 0..x0.numel() {
+            let mut p = x0.clone();
+            p.f32s_mut()[i] += eps;
+            let mut m = x0.clone();
+            m.f32s_mut()[i] -= eps;
+            let lp = {
+                let (t, _, l) = f(&p);
+                t.value(l).item()
+            };
+            let lm = {
+                let (t, _, l) = f(&m);
+                t.value(l).item()
+            };
+            let fd = (lp - lm) / (2.0 * eps);
+            let a = g.f32s()[i];
+            let rel = (a - fd).abs() / a.abs().max(fd.abs()).max(1.0);
+            assert!(rel < 1e-3, "x[{i}]: analytic {a} vs fd {fd}");
+        }
+    }
+
+    #[test]
+    fn seq_ops_roundtrip_values_and_gradients() {
+        let mut tape = Tape::new();
+        let cls = tape.leaf(Tensor::from_f32(&[2], vec![1.0, 2.0]));
+        let patches = tape.leaf(Tensor::from_f32(&[4, 2], vec![0.1; 8]));
+        let bc = tape.broadcast_row(cls, 2); // (2 batches, 1 row each)
+        let cat = tape.concat_seq(bc, patches, 2, 1, 2); // (2*(1+2), 2)
+        assert_eq!(tape.value(cat).shape, vec![6, 2]);
+        assert_eq!(tape.value(cat).at2(0, 1), 2.0); // cls row leads each block
+        assert_eq!(tape.value(cat).at2(3, 0), 1.0);
+        let first = tape.seq_first(cat, 2, 3);
+        assert_eq!(tape.value(first).f32s(), &[1.0, 2.0, 1.0, 2.0]);
+        let mean = tape.seq_mean(cat, 2, 3);
+        assert!((tape.value(mean).at2(0, 0) - (1.0 + 0.1 + 0.1) / 3.0).abs() < 1e-6);
+        // dummy scalar through a linear head for the backward sweep
+        let w = tape.leaf(Tensor::from_f32(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]));
+        let lin = tape.linear(mean, w);
+        let loss = tape.masked_xent(lin, vec![0, 1]);
+        let grads = tape.backward(loss);
+        assert!(grads[cls.index()].is_some(), "cls leaf must receive gradient");
+        assert!(grads[patches.index()].is_some());
+    }
+}

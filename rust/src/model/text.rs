@@ -1,0 +1,166 @@
+//! Native text-family forward passes (BERT / GPT analogs, plus the
+//! sequence-classification probe head), mirroring `python/compile/
+//! transformer.py` — pre-LN blocks for both families (see the NOTE in
+//! `encode_text` there), the tied `emb_tok` LM head, and the masked mean
+//! cross-entropy.
+
+use std::collections::BTreeMap;
+
+use crate::bail;
+use crate::config::ModelConfig;
+use crate::error::Result;
+use crate::tensor::ops::AttnShape;
+use crate::tensor::store::Store;
+
+use super::tape::{Tape, Var};
+use super::{accuracy, var};
+
+/// One pre-LN transformer block on the flattened (batch*s, d) stream.
+/// `layerscale` enables the CaiT per-module scales (`ls1`/`ls2`).
+pub(super) fn preln_block(
+    tape: &mut Tape,
+    vars: &BTreeMap<String, Var>,
+    prefix: &str,
+    x: Var,
+    sh: AttnShape,
+    layerscale: bool,
+) -> Result<Var> {
+    let h = {
+        let g = var(vars, &format!("{prefix}ln1_g"))?;
+        let b = var(vars, &format!("{prefix}ln1_b"))?;
+        tape.layernorm(x, g, b)
+    };
+    let q = {
+        let w = var(vars, &format!("{prefix}q_w"))?;
+        let b = var(vars, &format!("{prefix}q_b"))?;
+        let p = tape.linear(h, w);
+        tape.add_row(p, b)
+    };
+    let k = {
+        let w = var(vars, &format!("{prefix}k_w"))?;
+        let b = var(vars, &format!("{prefix}k_b"))?;
+        let p = tape.linear(h, w);
+        tape.add_row(p, b)
+    };
+    let v = {
+        let w = var(vars, &format!("{prefix}v_w"))?;
+        let b = var(vars, &format!("{prefix}v_b"))?;
+        let p = tape.linear(h, w);
+        tape.add_row(p, b)
+    };
+    let att = tape.attention(q, k, v, sh);
+    let mut o = {
+        let w = var(vars, &format!("{prefix}o_w"))?;
+        let b = var(vars, &format!("{prefix}o_b"))?;
+        let p = tape.linear(att, w);
+        tape.add_row(p, b)
+    };
+    if layerscale {
+        o = tape.mul_row(o, var(vars, &format!("{prefix}ls1"))?);
+    }
+    let x = tape.add(x, o);
+    let h2 = {
+        let g = var(vars, &format!("{prefix}ln2_g"))?;
+        let b = var(vars, &format!("{prefix}ln2_b"))?;
+        tape.layernorm(x, g, b)
+    };
+    let f = {
+        let w = var(vars, &format!("{prefix}fc1_w"))?;
+        let b = var(vars, &format!("{prefix}fc1_b"))?;
+        let p = tape.linear(h2, w);
+        tape.add_row(p, b)
+    };
+    let a = tape.gelu(f);
+    let mut f2 = {
+        let w = var(vars, &format!("{prefix}fc2_w"))?;
+        let b = var(vars, &format!("{prefix}fc2_b"))?;
+        let p = tape.linear(a, w);
+        tape.add_row(p, b)
+    };
+    if layerscale {
+        f2 = tape.mul_row(f2, var(vars, &format!("{prefix}ls2"))?);
+    }
+    Ok(tape.add(x, f2))
+}
+
+/// BERT/GPT loss (MLM / causal LM via the tied head), or the mean-pool +
+/// linear probe head when the config declares `n_classes`. Returns the loss
+/// node and the optional accuracy metric.
+pub(super) fn text_loss(
+    tape: &mut Tape,
+    vars: &BTreeMap<String, Var>,
+    cfg: &ModelConfig,
+    batch: &Store,
+) -> Result<(Var, Option<f32>)> {
+    let Some(tokens) = batch.get("tokens") else {
+        bail!("text batch for '{}' missing 'tokens'", cfg.name)
+    };
+    let Some(labels) = batch.get("labels") else {
+        bail!("text batch for '{}' missing 'labels'", cfg.name)
+    };
+    if tokens.shape.len() != 2 {
+        bail!("'tokens' must be (batch, seq), got {:?}", tokens.shape);
+    }
+    let (b, s) = (tokens.shape[0], tokens.shape[1]);
+    if s != cfg.seq {
+        bail!("batch seq {} != config '{}' seq {}", s, cfg.name, cfg.seq);
+    }
+    let ids = tokens.i32s().to_vec();
+    if let Some(&bad) = ids.iter().find(|&&t| t < 0 || t as usize >= cfg.vocab) {
+        bail!("token id {bad} outside vocab {} for '{}'", cfg.vocab, cfg.name);
+    }
+    let emb_tok = var(vars, "emb_tok")?;
+    let x0 = tape.gather(emb_tok, ids);
+    let pos = var(vars, "emb_pos")?;
+    let mut x = tape.add_tiled(x0, pos, b);
+    let sh = AttnShape {
+        batch: b,
+        heads: cfg.heads,
+        s_q: s,
+        s_k: s,
+        causal: cfg.family == "gpt",
+    };
+    for l in 0..cfg.layers {
+        x = preln_block(tape, vars, &format!("L{l:02}_"), x, sh, false)?;
+    }
+    let xf = {
+        let g = var(vars, "final_ln_g")?;
+        let bb = var(vars, "final_ln_b")?;
+        tape.layernorm(x, g, bb)
+    };
+    if cfg.n_classes > 0 {
+        // sequence-classification probe: mean-pool + linear head
+        if labels.shape != vec![b] {
+            bail!("probe labels must be ({b},), got {:?}", labels.shape);
+        }
+        let pooled = tape.seq_mean(xf, b, s);
+        let logits = {
+            let w = var(vars, "head_w")?;
+            let bb = var(vars, "head_b")?;
+            let p = tape.linear(pooled, w);
+            tape.add_row(p, bb)
+        };
+        let lbl = labels.i32s().to_vec();
+        if let Some(&bad) = lbl.iter().find(|&&l| l >= cfg.n_classes as i32) {
+            bail!("label {bad} outside {} classes for '{}'", cfg.n_classes, cfg.name);
+        }
+        let acc = accuracy(tape.value(logits), &lbl);
+        let loss = tape.masked_xent(logits, lbl);
+        Ok((loss, Some(acc)))
+    } else {
+        if labels.shape != tokens.shape {
+            bail!("LM labels shape {:?} != tokens {:?}", labels.shape, tokens.shape);
+        }
+        let lbl = labels.i32s().to_vec();
+        if let Some(&bad) = lbl.iter().find(|&&l| l >= cfg.vocab as i32) {
+            bail!("label {bad} outside vocab {} for '{}'", cfg.vocab, cfg.name);
+        }
+        let logits = {
+            let mb = var(vars, "mlm_bias")?;
+            let p = tape.linear(xf, emb_tok); // tied LM head
+            tape.add_row(p, mb)
+        };
+        let loss = tape.masked_xent(logits, lbl);
+        Ok((loss, None))
+    }
+}

@@ -1,0 +1,210 @@
+//! Native vision-family forward passes: ViT (CLS token through the patch
+//! stack) and CaiT (LayerScale'd patch stage, then a class-attention stage
+//! where only the CLS stream is updated) — mirroring `encode_vision` in
+//! `python/compile/transformer.py`.
+
+use std::collections::BTreeMap;
+
+use crate::bail;
+use crate::config::ModelConfig;
+use crate::error::Result;
+use crate::tensor::ops::AttnShape;
+use crate::tensor::store::Store;
+use crate::tensor::Tensor;
+
+use super::tape::{Tape, Var};
+use super::text::preln_block;
+use super::{accuracy, var};
+
+/// (B, H, W, C) images -> (B*T, patch*patch*C) rows, T = (H/p)*(W/p).
+/// Matches the python `_patchify` layout exactly.
+pub(super) fn patchify(images: &Tensor, patch: usize) -> Tensor {
+    let s = &images.shape;
+    let (b, hh, ww, c) = (s[0], s[1], s[2], s[3]);
+    let (nh, nw) = (hh / patch, ww / patch);
+    let pdim = patch * patch * c;
+    let iv = images.f32s();
+    let mut out = vec![0.0f32; b * nh * nw * pdim];
+    let mut o = 0;
+    for bi in 0..b {
+        for ph in 0..nh {
+            for pw in 0..nw {
+                for dy in 0..patch {
+                    let y = ph * patch + dy;
+                    for dx in 0..patch {
+                        let x = pw * patch + dx;
+                        let src = ((bi * hh + y) * ww + x) * c;
+                        out[o..o + c].copy_from_slice(&iv[src..src + c]);
+                        o += c;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_f32(&[b * nh * nw, pdim], out)
+}
+
+/// One CaiT class-attention block: the CLS stream (one token per batch
+/// element) attends over [CLS; patches]; only CLS is updated. No LayerScale
+/// (mirrors the python `_class_attn_block`).
+#[allow(clippy::too_many_arguments)]
+fn class_attn_block(
+    tape: &mut Tape,
+    vars: &BTreeMap<String, Var>,
+    prefix: &str,
+    cls: Var,
+    patches: Var,
+    batch: usize,
+    t: usize,
+    heads: usize,
+) -> Result<Var> {
+    let xs = tape.concat_seq(cls, patches, batch, 1, t);
+    let ln1g = var(vars, &format!("{prefix}ln1_g"))?;
+    let ln1b = var(vars, &format!("{prefix}ln1_b"))?;
+    let hq = tape.layernorm(cls, ln1g, ln1b);
+    let hkv = tape.layernorm(xs, ln1g, ln1b);
+    let q = {
+        let w = var(vars, &format!("{prefix}q_w"))?;
+        let b = var(vars, &format!("{prefix}q_b"))?;
+        let p = tape.linear(hq, w);
+        tape.add_row(p, b)
+    };
+    let k = {
+        let w = var(vars, &format!("{prefix}k_w"))?;
+        let b = var(vars, &format!("{prefix}k_b"))?;
+        let p = tape.linear(hkv, w);
+        tape.add_row(p, b)
+    };
+    let v = {
+        let w = var(vars, &format!("{prefix}v_w"))?;
+        let b = var(vars, &format!("{prefix}v_b"))?;
+        let p = tape.linear(hkv, w);
+        tape.add_row(p, b)
+    };
+    let sh = AttnShape { batch, heads, s_q: 1, s_k: t + 1, causal: false };
+    let att = tape.attention(q, k, v, sh);
+    let o = {
+        let w = var(vars, &format!("{prefix}o_w"))?;
+        let b = var(vars, &format!("{prefix}o_b"))?;
+        let p = tape.linear(att, w);
+        tape.add_row(p, b)
+    };
+    let cls = tape.add(cls, o);
+    let h2 = {
+        let g = var(vars, &format!("{prefix}ln2_g"))?;
+        let b = var(vars, &format!("{prefix}ln2_b"))?;
+        tape.layernorm(cls, g, b)
+    };
+    let f = {
+        let w = var(vars, &format!("{prefix}fc1_w"))?;
+        let b = var(vars, &format!("{prefix}fc1_b"))?;
+        let p = tape.linear(h2, w);
+        tape.add_row(p, b)
+    };
+    let a = tape.gelu(f);
+    let f2 = {
+        let w = var(vars, &format!("{prefix}fc2_w"))?;
+        let b = var(vars, &format!("{prefix}fc2_b"))?;
+        let p = tape.linear(a, w);
+        tape.add_row(p, b)
+    };
+    Ok(tape.add(cls, f2))
+}
+
+/// Image-classification loss + accuracy for ViT/CaiT.
+pub(super) fn vision_loss(
+    tape: &mut Tape,
+    vars: &BTreeMap<String, Var>,
+    cfg: &ModelConfig,
+    batch: &Store,
+) -> Result<(Var, Option<f32>)> {
+    let Some(images) = batch.get("images") else {
+        bail!("vision batch for '{}' missing 'images'", cfg.name)
+    };
+    let Some(labels) = batch.get("labels") else {
+        bail!("vision batch for '{}' missing 'labels'", cfg.name)
+    };
+    if images.shape.len() != 4
+        || images.shape[1] != cfg.img
+        || images.shape[2] != cfg.img
+        || images.shape[3] != cfg.channels
+    {
+        bail!(
+            "'images' must be (batch, {img}, {img}, {c}), got {:?}",
+            images.shape,
+            img = cfg.img,
+            c = cfg.channels
+        );
+    }
+    let b = images.shape[0];
+    if labels.shape != vec![b] {
+        bail!("vision labels must be ({b},), got {:?}", labels.shape);
+    }
+    let n_side = cfg.img / cfg.patch;
+    let t = n_side * n_side;
+    let pv = tape.leaf(patchify(images, cfg.patch));
+    let x = {
+        let w = var(vars, "emb_patch_w")?;
+        let bb = var(vars, "emb_patch_b")?;
+        let p = tape.linear(pv, w);
+        tape.add_row(p, bb)
+    };
+    let emb_cls = var(vars, "emb_cls")?;
+    let pos = var(vars, "emb_pos")?;
+    let rep = if cfg.family == "vit" {
+        // prepend CLS, add positions over T+1 tokens, run the stack
+        let cls = tape.broadcast_row(emb_cls, b);
+        let xc = tape.concat_seq(cls, x, b, 1, t);
+        let mut x = tape.add_tiled(xc, pos, b);
+        let sh = AttnShape {
+            batch: b,
+            heads: cfg.heads,
+            s_q: t + 1,
+            s_k: t + 1,
+            causal: false,
+        };
+        for l in 0..cfg.layers {
+            x = preln_block(tape, vars, &format!("L{l:02}_"), x, sh, false)?;
+        }
+        let xf = {
+            let g = var(vars, "final_ln_g")?;
+            let bb = var(vars, "final_ln_b")?;
+            tape.layernorm(x, g, bb)
+        };
+        tape.seq_first(xf, b, t + 1)
+    } else {
+        // CaiT: LayerScale'd patch stage, then class-attention over frozen
+        // patches; the final LN runs on the CLS stream only.
+        let mut x = tape.add_tiled(x, pos, b);
+        let sh = AttnShape {
+            batch: b,
+            heads: cfg.heads,
+            s_q: t,
+            s_k: t,
+            causal: false,
+        };
+        for l in 0..cfg.layers {
+            x = preln_block(tape, vars, &format!("L{l:02}_"), x, sh, true)?;
+        }
+        let mut cls = tape.broadcast_row(emb_cls, b);
+        for l in 0..cfg.cls_layers {
+            cls = class_attn_block(tape, vars, &format!("C{l:02}_"), cls, x, b, t, cfg.heads)?;
+        }
+        let g = var(vars, "final_ln_g")?;
+        let bb = var(vars, "final_ln_b")?;
+        tape.layernorm(cls, g, bb)
+    };
+    let logits = {
+        let w = var(vars, "head_w")?;
+        let bb = var(vars, "head_b")?;
+        let p = tape.linear(rep, w);
+        tape.add_row(p, bb)
+    };
+    let lbl = labels.i32s().to_vec();
+    if let Some(&bad) = lbl.iter().find(|&&l| l >= cfg.n_classes as i32) {
+        bail!("label {bad} outside {} classes for '{}'", cfg.n_classes, cfg.name);
+    }
+    let acc = accuracy(tape.value(logits), &lbl);
+    let loss = tape.masked_xent(logits, lbl);
+    Ok((loss, Some(acc)))
+}

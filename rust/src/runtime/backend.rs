@@ -2,9 +2,12 @@
 //! (HLO text + manifest) into something executable lives behind [`Backend`],
 //! so the coordinator, trainer and growth manager compile and run without
 //! XLA. The PJRT implementation (feature `pjrt`) is in [`super::pjrt`]; the
-//! default build installs [`NullBackend`], which reports artifacts as
-//! unavailable and lets the native code paths (growth operators, native
-//! LiGO) carry the workload.
+//! default build installs [`super::native::NativeBackend`], which
+//! *synthesizes* `fwd_*`/`grad_*` executables from the preset table via the
+//! in-crate transformer engine. [`NullBackend`] remains as the inert
+//! variant (tests / explicit opt-out): it reports artifacts as unavailable
+//! and leaves only the parameter-space native paths (growth operators,
+//! surrogate LiGO) in charge.
 
 use std::path::Path;
 
@@ -32,6 +35,16 @@ pub trait Backend: Send + Sync {
     /// Compile one artifact. `hlo_path` points at the `<name>.hlo.txt` file
     /// next to the manifest.
     fn compile(&self, manifest: &Manifest, hlo_path: &Path) -> Result<Box<dyn ExecEngine>>;
+
+    /// Synthesize an executable (manifest + engine) for `name` without any
+    /// on-disk artifact. `None` means this backend cannot synthesize the
+    /// name and the runtime should fall back to the artifact path;
+    /// `Some(Err(..))` means the name was recognized but building it
+    /// failed. The native backend overrides this for `fwd_*`/`grad_*`
+    /// graphs of known presets.
+    fn synthesize(&self, _name: &str) -> Option<Result<(Manifest, Box<dyn ExecEngine>)>> {
+        None
+    }
 }
 
 /// Backend used when no PJRT client is available: artifact loads fail with

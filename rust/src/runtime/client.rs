@@ -1,7 +1,8 @@
 //! The runtime front-end: owns a [`Backend`] plus a compile cache of loaded
 //! artifacts. With the `pjrt` feature (and a working `xla` crate) the
-//! backend is the PJRT CPU client; otherwise the [`NullBackend`] keeps the
-//! crate fully functional on its native paths.
+//! backend is the PJRT CPU client; otherwise the [`NativeBackend`]
+//! synthesizes `fwd_*`/`grad_*` executables from the in-crate transformer
+//! engine, so the crate trains end to end without XLA.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -10,9 +11,10 @@ use std::sync::Mutex;
 use crate::error::Result;
 use crate::log_info;
 
-use super::backend::{Backend, NullBackend};
+use super::backend::Backend;
 use super::executable::Executable;
 use super::manifest::Manifest;
+use super::native::NativeBackend;
 
 /// Owns the backend and a name -> compiled executable cache.
 pub struct Runtime {
@@ -22,16 +24,18 @@ pub struct Runtime {
 }
 
 /// Best backend this build can construct: PJRT when the feature is on and a
-/// client comes up, the null backend otherwise.
+/// client comes up, the native transformer engine otherwise (which
+/// synthesizes `fwd_*`/`grad_*` executables from the preset table, so the
+/// default build trains end to end with no artifacts).
 fn default_backend() -> Box<dyn Backend> {
     #[cfg(feature = "pjrt")]
     {
         match super::pjrt::PjrtBackend::cpu() {
             Ok(b) => return Box::new(b),
-            Err(e) => crate::log_warn!("PJRT unavailable ({e}); using the null backend"),
+            Err(e) => crate::log_warn!("PJRT unavailable ({e}); using the native backend"),
         }
     }
-    Box::new(NullBackend)
+    Box::new(NativeBackend::with_default_registry())
 }
 
 impl Runtime {
@@ -65,23 +69,41 @@ impl Runtime {
         self.backend.name()
     }
 
-    /// Load + compile an artifact by name (cached).
+    /// Load + compile an artifact by name (cached). Backends that can
+    /// synthesize the graph natively (the default `NativeBackend`) take
+    /// priority; otherwise the on-disk manifest + HLO is compiled.
     pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
-        let manifest = Manifest::load(&self.artifacts, name)?;
-        let hlo_path = self.artifacts.join(format!("{name}.hlo.txt"));
         let t0 = std::time::Instant::now();
-        let engine = self.backend.compile(&manifest, &hlo_path)?;
-        log_info!(
-            "compiled artifact '{}' on {} in {:.2}s ({} inputs, {} outputs)",
-            name,
-            self.backend.name(),
-            t0.elapsed().as_secs_f64(),
-            manifest.inputs.len(),
-            manifest.outputs.len()
-        );
+        let (manifest, engine) = match self.backend.synthesize(name) {
+            Some(Ok((manifest, engine))) => {
+                log_info!(
+                    "synthesized executable '{}' on {} ({} inputs, {} outputs)",
+                    name,
+                    self.backend.name(),
+                    manifest.inputs.len(),
+                    manifest.outputs.len()
+                );
+                (manifest, engine)
+            }
+            Some(Err(e)) => return Err(e),
+            None => {
+                let manifest = Manifest::load(&self.artifacts, name)?;
+                let hlo_path = self.artifacts.join(format!("{name}.hlo.txt"));
+                let engine = self.backend.compile(&manifest, &hlo_path)?;
+                log_info!(
+                    "compiled artifact '{}' on {} in {:.2}s ({} inputs, {} outputs)",
+                    name,
+                    self.backend.name(),
+                    t0.elapsed().as_secs_f64(),
+                    manifest.inputs.len(),
+                    manifest.outputs.len()
+                );
+                (manifest, engine)
+            }
+        };
         let exe = std::sync::Arc::new(Executable::new(manifest, engine));
         self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
         Ok(exe)
@@ -129,5 +151,18 @@ mod tests {
     fn available_empty_for_missing_dir() {
         let rt = Runtime::cpu("/definitely/not/a/dir").unwrap();
         assert!(rt.available().is_empty());
+    }
+
+    #[test]
+    fn default_runtime_synthesizes_known_presets_without_artifacts() {
+        let rt = Runtime::cpu(std::env::temp_dir().join("ligo_no_artifacts")).unwrap();
+        if rt.backend_name() != "native" {
+            return; // pjrt build with a live client: nothing to assert here
+        }
+        let exe = rt.load("fwd_bert_small").expect("synthesized executable");
+        assert!(!exe.manifest.inputs_of("params").is_empty());
+        // the cache serves the same Arc on the second load
+        let again = rt.load("fwd_bert_small").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&exe, &again));
     }
 }

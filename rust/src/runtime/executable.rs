@@ -37,7 +37,7 @@ impl RunOutputs {
 }
 
 impl Executable {
-    pub(super) fn new(manifest: Manifest, engine: Box<dyn ExecEngine>) -> Executable {
+    pub(crate) fn new(manifest: Manifest, engine: Box<dyn ExecEngine>) -> Executable {
         Executable { manifest, engine }
     }
 
@@ -52,9 +52,9 @@ impl Executable {
                 .find(|(g, _)| *g == spec.group())
                 .map(|(_, s)| *s)
                 .with_context(|| format!("no binding for input group '{}'", spec.group()))?;
-            let tensor = store
-                .get(spec.key())
-                .with_context(|| format!("store '{}' missing tensor '{}'", spec.group(), spec.key()))?;
+            let tensor = store.get(spec.key()).with_context(|| {
+                format!("store '{}' missing tensor '{}'", spec.group(), spec.key())
+            })?;
             if tensor.shape != spec.shape {
                 bail!(
                     "tensor '{}' shape {:?} != manifest {:?}",

@@ -4,15 +4,20 @@
 //!
 //! Backends:
 //! * **pjrt** (feature `pjrt`) — compiles HLO on the XLA CPU PJRT client.
-//! * **null** (default) — artifact loads fail with guidance; the native
-//!   growth/LiGO/tensor paths keep the crate fully usable without XLA.
+//! * **native** (default) — synthesizes `fwd_*`/`grad_*` executables from
+//!   the preset table by running the in-crate transformer engine
+//!   ([`crate::model`]); training, eval and growth run end to end from a
+//!   clean checkout with no artifacts and no XLA.
+//! * **null** — inert fallback (tests / explicit opt-out): artifact loads
+//!   fail with guidance.
 //!
-//! Python never runs here in either configuration.
+//! Python never runs here in any configuration.
 
 pub mod backend;
 pub mod client;
 pub mod executable;
 pub mod manifest;
+pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
@@ -20,3 +25,4 @@ pub use backend::{Backend, ExecEngine, NullBackend};
 pub use client::Runtime;
 pub use executable::{Executable, RunOutputs};
 pub use manifest::{Manifest, TensorSpec};
+pub use native::NativeBackend;

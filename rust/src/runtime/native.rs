@@ -1,0 +1,271 @@
+//! The native runtime backend: synthesizes `fwd_{preset}` / `grad_{preset}`
+//! executables directly from the [`ModelConfig`] table by running the
+//! in-crate transformer engine ([`crate::model`]) — no HLO, no XLA, no AOT
+//! artifacts. This is the default backend of the no-`pjrt` build, replacing
+//! the old `NullBackend` default that could not execute anything: `Trainer`,
+//! the experiment harness and the benches now run end to end from a clean
+//! checkout.
+//!
+//! The synthesized manifests use the exact group/name convention of the AOT
+//! ones ("params/<tensor>", "batch/tokens", outputs "loss"[, "metric"],
+//! "grads/<tensor>"), so [`super::Executable`]'s binding, validation and
+//! scatter logic is shared verbatim between the two worlds.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::bail;
+use crate::config::{ModelConfig, Registry};
+use crate::error::{Context, Error, Result};
+use crate::model;
+use crate::tensor::store::Store;
+use crate::tensor::{DType, Tensor};
+
+use super::backend::{Backend, ExecEngine};
+use super::manifest::{Manifest, TensorSpec};
+
+/// What a synthesized executable computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Fwd,
+    Grad,
+}
+
+/// Backend that synthesizes executables from model presets.
+pub struct NativeBackend {
+    models: BTreeMap<String, ModelConfig>,
+}
+
+impl NativeBackend {
+    pub fn new(models: BTreeMap<String, ModelConfig>) -> NativeBackend {
+        NativeBackend { models }
+    }
+
+    /// Backend over `artifacts/configs.json` when present, else the
+    /// built-in preset table (the same rows).
+    pub fn with_default_registry() -> NativeBackend {
+        let reg = Registry::load_or_builtin(&crate::config::artifacts_dir());
+        NativeBackend::new(reg.models)
+    }
+
+    fn config_for(&self, artifact: &str) -> Option<(Kind, &ModelConfig)> {
+        // grad_gated_* needs the gate/token-keep inputs only the AOT path has
+        if artifact.starts_with("grad_gated_") {
+            return None;
+        }
+        if let Some(name) = artifact.strip_prefix("fwd_") {
+            return self.models.get(name).map(|c| (Kind::Fwd, c));
+        }
+        if let Some(name) = artifact.strip_prefix("grad_") {
+            return self.models.get(name).map(|c| (Kind::Grad, c));
+        }
+        None
+    }
+}
+
+fn spec(name: String, shape: Vec<usize>, dtype: DType) -> TensorSpec {
+    TensorSpec { name, shape, dtype }
+}
+
+fn batch_specs(cfg: &ModelConfig) -> Vec<TensorSpec> {
+    if cfg.is_vision() {
+        vec![
+            spec(
+                "batch/images".into(),
+                vec![cfg.batch, cfg.img, cfg.img, cfg.channels],
+                DType::F32,
+            ),
+            spec("batch/labels".into(), vec![cfg.batch], DType::I32),
+        ]
+    } else if cfg.n_classes > 0 {
+        vec![
+            spec("batch/tokens".into(), vec![cfg.batch, cfg.seq], DType::I32),
+            spec("batch/labels".into(), vec![cfg.batch], DType::I32),
+        ]
+    } else {
+        vec![
+            spec("batch/tokens".into(), vec![cfg.batch, cfg.seq], DType::I32),
+            spec("batch/labels".into(), vec![cfg.batch, cfg.seq], DType::I32),
+        ]
+    }
+}
+
+fn manifest_for(name: &str, kind: Kind, cfg: &ModelConfig) -> Manifest {
+    let params = model::param_shapes(cfg);
+    let mut inputs: Vec<TensorSpec> = params
+        .iter()
+        .map(|(n, s)| spec(format!("params/{n}"), s.clone(), DType::F32))
+        .collect();
+    inputs.extend(batch_specs(cfg));
+    let mut outputs = vec![spec("loss".into(), vec![], DType::F32)];
+    if cfg.is_vision() || cfg.n_classes > 0 {
+        outputs.push(spec("metric".into(), vec![], DType::F32));
+    }
+    if kind == Kind::Grad {
+        outputs.extend(
+            params
+                .iter()
+                .map(|(n, s)| spec(format!("grads/{n}"), s.clone(), DType::F32)),
+        );
+    }
+    Manifest { name: name.to_string(), inputs, outputs }
+}
+
+/// The synthesized execution engine: gathers positional inputs back into
+/// named stores, runs the native model engine, scatters positional outputs.
+struct NativeEngine {
+    cfg: ModelConfig,
+    kind: Kind,
+    inputs: Vec<TensorSpec>,
+}
+
+impl ExecEngine for NativeEngine {
+    fn execute(&self, inputs: &[&Tensor], outputs: &[TensorSpec]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "native engine '{}': got {} inputs, expected {}",
+                self.cfg.name,
+                inputs.len(),
+                self.inputs.len()
+            );
+        }
+        let mut params = Store::new();
+        let mut batch = Store::new();
+        for (sp, t) in self.inputs.iter().zip(inputs) {
+            match sp.group() {
+                "params" => params.insert(sp.key(), (*t).clone()),
+                "batch" => batch.insert(sp.key(), (*t).clone()),
+                other => bail!("native engine: unexpected input group '{other}'"),
+            }
+        }
+        let (loss, grads, metric) = match self.kind {
+            Kind::Fwd => {
+                let (l, m) = model::loss_only(&self.cfg, &params, &batch)?;
+                (l, None, m)
+            }
+            Kind::Grad => {
+                let (l, g, m) = model::loss_and_grads(&self.cfg, &params, &batch)?;
+                (l, Some(g), m)
+            }
+        };
+        let mut out = Vec::with_capacity(outputs.len());
+        for sp in outputs {
+            if sp.name == "loss" {
+                out.push(Tensor::scalar_f32(loss));
+            } else if sp.name == "metric" {
+                out.push(Tensor::scalar_f32(metric.unwrap_or(f32::NAN)));
+            } else if sp.group() == "grads" {
+                let g = grads
+                    .as_ref()
+                    .and_then(|g| g.get(sp.key()))
+                    .with_context(|| format!("native engine: no gradient for '{}'", sp.name))?;
+                out.push(g.clone());
+            } else {
+                bail!("native engine: unknown output '{}'", sp.name);
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn compile(&self, manifest: &Manifest, _hlo_path: &Path) -> Result<Box<dyn ExecEngine>> {
+        // An on-disk artifact describes the same graph the engine can
+        // synthesize; route through synthesis (ignoring the HLO). Unknown
+        // names cannot execute without a real PJRT backend.
+        match self.synthesize(&manifest.name) {
+            Some(Ok((_m, engine))) => Ok(engine),
+            Some(Err(e)) => Err(e),
+            None => Err(Error::msg(format!(
+                "artifact '{}': the native backend synthesizes only fwd_*/grad_* graphs of \
+                 known presets and cannot execute AOT HLO (rebuild with `--features pjrt` \
+                 and a real `xla` crate for artifact execution)",
+                manifest.name
+            ))),
+        }
+    }
+
+    fn synthesize(&self, name: &str) -> Option<Result<(Manifest, Box<dyn ExecEngine>)>> {
+        let (kind, cfg) = self.config_for(name)?;
+        if !model::supports(cfg) {
+            return Some(Err(Error::msg(format!(
+                "artifact '{name}': preset '{}' has family '{}', which the native engine \
+                 does not implement",
+                cfg.name, cfg.family
+            ))));
+        }
+        let manifest = manifest_for(name, kind, cfg);
+        let engine = NativeEngine {
+            cfg: cfg.clone(),
+            kind,
+            inputs: manifest.inputs.clone(),
+        };
+        Some(Ok((manifest, Box::new(engine) as Box<dyn ExecEngine>)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new(Registry::builtin().models)
+    }
+
+    #[test]
+    fn synthesizes_fwd_and_grad_for_known_presets() {
+        let b = backend();
+        let (m, _e) = b.synthesize("fwd_bert_small").unwrap().unwrap();
+        assert_eq!(m.outputs.len(), 1, "LM fwd returns loss only");
+        assert_eq!(m.inputs_of("batch").len(), 2);
+        let (mg, _e) = b.synthesize("grad_bert_small").unwrap().unwrap();
+        let n_params = m.inputs_of("params").len();
+        assert_eq!(mg.outputs_of("grads").len(), n_params);
+        // vision grads also report the accuracy metric
+        let (mv, _e) = b.synthesize("grad_vit_s").unwrap().unwrap();
+        assert_eq!(mv.output_index("metric"), Some(1));
+        assert_eq!(mv.inputs_of("batch")[0].key(), "images");
+    }
+
+    #[test]
+    fn unknown_and_unsupported_names_are_refused() {
+        let b = backend();
+        assert!(b.synthesize("fwd_nonexistent").is_none());
+        assert!(b.synthesize("ligo_grad_bert_small__bert_base").is_none());
+        assert!(b.synthesize("grad_gated_bert_base").is_none());
+        assert!(b.synthesize("kd_grad_bert_small__bert_base").is_none());
+    }
+
+    #[test]
+    fn engine_runs_a_forward_through_the_manifest_contract() {
+        let b = backend();
+        let (m, e) = b.synthesize("fwd_bert_small").unwrap().unwrap();
+        let params = Store::det_init(&m.shapes_of("params"), 0);
+        let cfg = Registry::builtin().models["bert_small"].clone();
+        let corpus = crate::data::corpus::Corpus::new(cfg.vocab, 0);
+        let batch = crate::data::batches::mlm_batch(
+            &corpus,
+            &cfg,
+            &mut crate::util::rng::Rng::new(1),
+        );
+        let inputs: Vec<&Tensor> = m
+            .inputs
+            .iter()
+            .map(|sp| {
+                if sp.group() == "params" {
+                    params.expect(sp.key())
+                } else {
+                    batch.expect(sp.key())
+                }
+            })
+            .collect();
+        let out = e.execute(&inputs, &m.outputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let loss = out[0].item();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    }
+}

@@ -90,6 +90,13 @@ impl Tensor {
         }
     }
 
+    pub fn i32s_mut(&mut self) -> &mut [i32] {
+        match &mut self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
     /// 2D accessor (row, col); panics unless rank-2 f32.
     pub fn at2(&self, r: usize, c: usize) -> f32 {
         debug_assert_eq!(self.shape.len(), 2);

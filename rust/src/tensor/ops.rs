@@ -187,6 +187,449 @@ pub fn weighted_sum(ws: &[f32], ts: &[&Tensor]) -> Tensor {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Neural-net kernels (forward + backward) for the native model engine
+// (`crate::model`): layernorm, GELU, softmax attention, cross-entropy.
+// All row-parallel via `util::par` above PAR_MIN_KERNEL work units.
+// ---------------------------------------------------------------------------
+
+/// Estimated work (output elements x inner cost) above which the NN kernels
+/// fan out across cores; below it thread spawn/join overhead dominates.
+pub const PAR_MIN_KERNEL: usize = 1 << 17;
+
+/// Dispatch a row kernel serially or via [`par`] based on estimated work.
+fn run_rows<F: Fn(usize, &mut [f32]) + Sync>(out: &mut [f32], n_cols: usize, work: usize, f: F) {
+    if work >= PAR_MIN_KERNEL {
+        par::par_row_chunks(out, n_cols, f);
+    } else {
+        f(0, out);
+    }
+}
+
+/// LayerNorm epsilon shared by forward and backward (matches the python L2).
+pub const LN_EPS: f32 = 1e-5;
+
+/// Row-wise layer normalization of a 2-D tensor:
+/// `y = (x - mean) / sqrt(var + eps) * g + b`. Returns y plus the per-row
+/// `(mean, rstd)` pairs (interleaved), saved for [`layernorm_bwd`].
+pub fn layernorm_fwd(x: &Tensor, g: &Tensor, b: &Tensor) -> (Tensor, Vec<f32>) {
+    let (n, d) = (x.shape[0], x.shape[1]);
+    assert_eq!(g.numel(), d, "layernorm gain dim");
+    assert_eq!(b.numel(), d, "layernorm bias dim");
+    let (xv, gv, bv) = (x.f32s(), g.f32s(), b.f32s());
+    let mut y = vec![0.0f32; n * d];
+    let mut stats = vec![0.0f32; n * 2];
+    let kernel = |row0: usize, yc: &mut [f32], sc: &mut [f32]| {
+        for (r, yrow) in yc.chunks_exact_mut(d).enumerate() {
+            let xrow = &xv[(row0 + r) * d..(row0 + r + 1) * d];
+            let mean = xrow.iter().sum::<f32>() / d as f32;
+            let var = xrow.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let rstd = 1.0 / (var + LN_EPS).sqrt();
+            for j in 0..d {
+                yrow[j] = (xrow[j] - mean) * rstd * gv[j] + bv[j];
+            }
+            sc[r * 2] = mean;
+            sc[r * 2 + 1] = rstd;
+        }
+    };
+    if n * d >= PAR_MIN_KERNEL {
+        par::par_row_chunks2(&mut y, d, &mut stats, 2, kernel);
+    } else {
+        kernel(0, &mut y, &mut stats);
+    }
+    (Tensor::from_f32(&x.shape, y), stats)
+}
+
+/// Backward of [`layernorm_fwd`]: returns (dx, dg, db). `stats` is the
+/// interleaved (mean, rstd) buffer the forward produced.
+pub fn layernorm_bwd(
+    x: &Tensor,
+    g: &Tensor,
+    stats: &[f32],
+    dout: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (n, d) = (x.shape[0], x.shape[1]);
+    assert_eq!(dout.shape, x.shape, "layernorm dout shape");
+    assert_eq!(stats.len(), n * 2, "layernorm stats length");
+    let (xv, gv, dov) = (x.f32s(), g.f32s(), dout.f32s());
+    let mut dx = vec![0.0f32; n * d];
+    let kernel = |row0: usize, chunk: &mut [f32]| {
+        for (r, dxrow) in chunk.chunks_exact_mut(d).enumerate() {
+            let i = row0 + r;
+            let (mean, rstd) = (stats[i * 2], stats[i * 2 + 1]);
+            let xrow = &xv[i * d..(i + 1) * d];
+            let dorow = &dov[i * d..(i + 1) * d];
+            let mut sum_dxh = 0.0f32;
+            let mut sum_dxh_xh = 0.0f32;
+            for j in 0..d {
+                let xh = (xrow[j] - mean) * rstd;
+                let dxh = dorow[j] * gv[j];
+                sum_dxh += dxh;
+                sum_dxh_xh += dxh * xh;
+            }
+            let inv_d = 1.0 / d as f32;
+            for j in 0..d {
+                let xh = (xrow[j] - mean) * rstd;
+                let dxh = dorow[j] * gv[j];
+                dxrow[j] = rstd * (dxh - inv_d * sum_dxh - xh * inv_d * sum_dxh_xh);
+            }
+        }
+    };
+    run_rows(&mut dx, d, n * d, kernel);
+    // dg/db are column reductions over all rows — O(n d), kept serial.
+    let mut dg = vec![0.0f32; d];
+    let mut db = vec![0.0f32; d];
+    for i in 0..n {
+        let (mean, rstd) = (stats[i * 2], stats[i * 2 + 1]);
+        for j in 0..d {
+            let xh = (xv[i * d + j] - mean) * rstd;
+            dg[j] += dov[i * d + j] * xh;
+            db[j] += dov[i * d + j];
+        }
+    }
+    (Tensor::from_f32(&x.shape, dx), Tensor::from_f32(&[d], dg), Tensor::from_f32(&[d], db))
+}
+
+const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
+const GELU_A: f32 = 0.044_715;
+
+/// GELU activation (tanh approximation — the jax.nn.gelu default the AOT
+/// path lowers): `0.5 x (1 + tanh(sqrt(2/pi)(x + 0.044715 x^3)))`.
+pub fn gelu_fwd(x: &Tensor) -> Tensor {
+    let xv = x.f32s();
+    let mut y = vec![0.0f32; xv.len()];
+    let kernel = |off: usize, chunk: &mut [f32]| {
+        for (i, v) in chunk.iter_mut().enumerate() {
+            let t = xv[off + i];
+            let u = GELU_C * (t + GELU_A * t * t * t);
+            *v = 0.5 * t * (1.0 + u.tanh());
+        }
+    };
+    run_rows(&mut y, 1, xv.len(), kernel);
+    Tensor::from_f32(&x.shape, y)
+}
+
+/// Backward of [`gelu_fwd`]: dx = dout * gelu'(x).
+pub fn gelu_bwd(x: &Tensor, dout: &Tensor) -> Tensor {
+    assert_eq!(x.shape, dout.shape, "gelu dout shape");
+    let (xv, dov) = (x.f32s(), dout.f32s());
+    let mut dx = vec![0.0f32; xv.len()];
+    let kernel = |off: usize, chunk: &mut [f32]| {
+        for (i, v) in chunk.iter_mut().enumerate() {
+            let t = xv[off + i];
+            let u = GELU_C * (t + GELU_A * t * t * t);
+            let th = u.tanh();
+            let du = GELU_C * (1.0 + 3.0 * GELU_A * t * t);
+            *v = dov[off + i] * (0.5 * (1.0 + th) + 0.5 * t * (1.0 - th * th) * du);
+        }
+    };
+    run_rows(&mut dx, 1, xv.len(), kernel);
+    Tensor::from_f32(&x.shape, dx)
+}
+
+/// Row-wise softmax of a 2-D tensor (max-subtracted, numerically safe).
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    let (n, d) = (x.shape[0], x.shape[1]);
+    let xv = x.f32s();
+    let mut y = vec![0.0f32; n * d];
+    let kernel = |row0: usize, chunk: &mut [f32]| {
+        for (r, yrow) in chunk.chunks_exact_mut(d).enumerate() {
+            let xrow = &xv[(row0 + r) * d..(row0 + r + 1) * d];
+            let m = xrow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut z = 0.0f32;
+            for (o, &v) in yrow.iter_mut().zip(xrow) {
+                *o = (v - m).exp();
+                z += *o;
+            }
+            let inv = 1.0 / z;
+            for o in yrow.iter_mut() {
+                *o *= inv;
+            }
+        }
+    };
+    run_rows(&mut y, d, n * d, kernel);
+    Tensor::from_f32(&x.shape, y)
+}
+
+/// Multi-head attention shape descriptor: `q` is (batch*s_q, dim), `k`/`v`
+/// are (batch*s_k, dim) with dim = heads * head_dim. `causal` masks j > i
+/// (GPT order; requires s_q == s_k); cross-attention (CaiT class-attention)
+/// uses s_q != s_k.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnShape {
+    pub batch: usize,
+    pub heads: usize,
+    pub s_q: usize,
+    pub s_k: usize,
+    pub causal: bool,
+}
+
+impl AttnShape {
+    fn head_dim(&self, dim: usize) -> usize {
+        assert_eq!(dim % self.heads, 0, "dim {dim} not divisible by {} heads", self.heads);
+        dim / self.heads
+    }
+}
+
+/// Softmax attention forward: out = softmax(q k^T / sqrt(dh)) v per
+/// (batch, head). Returns (out (batch*s_q, dim), probs
+/// (batch*heads*s_q, s_k)); probs is the saved state for [`attention_bwd`].
+pub fn attention_fwd(q: &Tensor, k: &Tensor, v: &Tensor, sh: &AttnShape) -> (Tensor, Tensor) {
+    let dim = q.shape[1];
+    let dh = sh.head_dim(dim);
+    assert_eq!(q.shape, vec![sh.batch * sh.s_q, dim], "attention q shape");
+    assert_eq!(k.shape, vec![sh.batch * sh.s_k, dim], "attention k shape");
+    assert_eq!(v.shape, k.shape, "attention v shape");
+    if sh.causal {
+        assert_eq!(sh.s_q, sh.s_k, "causal attention needs square scores");
+    }
+    let scale = 1.0 / (dh as f32).sqrt();
+    let (qv, kv, vv) = (q.f32s(), k.f32s(), v.f32s());
+    // probs rows are (b, h, i) triples — each fully independent.
+    let mut probs = vec![0.0f32; sh.batch * sh.heads * sh.s_q * sh.s_k];
+    let pk = |row0: usize, chunk: &mut [f32]| {
+        for (r, prow) in chunk.chunks_exact_mut(sh.s_k).enumerate() {
+            let row = row0 + r;
+            let i = row % sh.s_q;
+            let bh = row / sh.s_q;
+            let (b, h) = (bh / sh.heads, bh % sh.heads);
+            let qrow = &qv[(b * sh.s_q + i) * dim + h * dh..][..dh];
+            let jmax = if sh.causal { i + 1 } else { sh.s_k };
+            let mut m = f32::NEG_INFINITY;
+            for (j, p) in prow[..jmax].iter_mut().enumerate() {
+                let krow = &kv[(b * sh.s_k + j) * dim + h * dh..][..dh];
+                let s: f32 = qrow.iter().zip(krow).map(|(a, c)| a * c).sum();
+                *p = s * scale;
+                m = m.max(*p);
+            }
+            let mut z = 0.0f32;
+            for p in prow[..jmax].iter_mut() {
+                *p = (*p - m).exp();
+                z += *p;
+            }
+            let inv = 1.0 / z;
+            for p in prow[..jmax].iter_mut() {
+                *p *= inv;
+            }
+            for p in prow[jmax..].iter_mut() {
+                *p = 0.0;
+            }
+        }
+    };
+    let rows_p = sh.batch * sh.heads * sh.s_q;
+    run_rows(&mut probs, sh.s_k, rows_p * sh.s_k * dh, pk);
+    // out rows are (b, i): out[b,i,h,:] = sum_j probs[b,h,i,j] v[b,j,h,:]
+    let mut out = vec![0.0f32; sh.batch * sh.s_q * dim];
+    let ok = |row0: usize, chunk: &mut [f32]| {
+        for (r, orow) in chunk.chunks_exact_mut(dim).enumerate() {
+            let row = row0 + r;
+            let (b, i) = (row / sh.s_q, row % sh.s_q);
+            for h in 0..sh.heads {
+                let prow = &probs[((b * sh.heads + h) * sh.s_q + i) * sh.s_k..][..sh.s_k];
+                for (j, &p) in prow.iter().enumerate() {
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &vv[(b * sh.s_k + j) * dim + h * dh..][..dh];
+                    for (o, &vj) in orow[h * dh..(h + 1) * dh].iter_mut().zip(vrow) {
+                        *o += p * vj;
+                    }
+                }
+            }
+        }
+    };
+    run_rows(&mut out, dim, sh.batch * sh.s_q * dim * sh.s_k, ok);
+    (
+        Tensor::from_f32(&[sh.batch * sh.s_q, dim], out),
+        Tensor::from_f32(&[rows_p, sh.s_k], probs),
+    )
+}
+
+/// Backward of [`attention_fwd`] from the saved probs: returns (dq, dk, dv).
+pub fn attention_bwd(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    probs: &Tensor,
+    dout: &Tensor,
+    sh: &AttnShape,
+) -> (Tensor, Tensor, Tensor) {
+    let dim = q.shape[1];
+    let dh = sh.head_dim(dim);
+    assert_eq!(dout.shape, q.shape, "attention dout shape");
+    assert_eq!(probs.shape, vec![sh.batch * sh.heads * sh.s_q, sh.s_k]);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let (qv, kv, vv, pv, dov) = (q.f32s(), k.f32s(), v.f32s(), probs.f32s(), dout.f32s());
+    // dscores = probs .* (dp - <dp, probs>) with dp[j] = <dout[b,i,h], v[b,j,h]>;
+    // the 1/sqrt(dh) scale is folded in here so dq/dk below are plain sums.
+    let mut ds = vec![0.0f32; pv.len()];
+    let dsk = |row0: usize, chunk: &mut [f32]| {
+        for (r, dsrow) in chunk.chunks_exact_mut(sh.s_k).enumerate() {
+            let row = row0 + r;
+            let i = row % sh.s_q;
+            let bh = row / sh.s_q;
+            let (b, h) = (bh / sh.heads, bh % sh.heads);
+            let dorow = &dov[(b * sh.s_q + i) * dim + h * dh..][..dh];
+            let prow = &pv[row * sh.s_k..][..sh.s_k];
+            let mut inner = 0.0f32;
+            for (j, d) in dsrow.iter_mut().enumerate() {
+                let vrow = &vv[(b * sh.s_k + j) * dim + h * dh..][..dh];
+                let dp: f32 = dorow.iter().zip(vrow).map(|(a, c)| a * c).sum();
+                *d = dp;
+                inner += dp * prow[j];
+            }
+            for (d, &p) in dsrow.iter_mut().zip(prow) {
+                *d = p * (*d - inner) * scale;
+            }
+        }
+    };
+    run_rows(&mut ds, sh.s_k, pv.len() * dh, dsk);
+    // dq rows are (b, i); dk/dv rows are (b, j) — all independent.
+    let mut dq = vec![0.0f32; qv.len()];
+    let dqk = |row0: usize, chunk: &mut [f32]| {
+        for (r, dqrow) in chunk.chunks_exact_mut(dim).enumerate() {
+            let row = row0 + r;
+            let (b, i) = (row / sh.s_q, row % sh.s_q);
+            for h in 0..sh.heads {
+                let dsrow = &ds[((b * sh.heads + h) * sh.s_q + i) * sh.s_k..][..sh.s_k];
+                for (j, &dsj) in dsrow.iter().enumerate() {
+                    if dsj == 0.0 {
+                        continue;
+                    }
+                    let krow = &kv[(b * sh.s_k + j) * dim + h * dh..][..dh];
+                    for (o, &kj) in dqrow[h * dh..(h + 1) * dh].iter_mut().zip(krow) {
+                        *o += dsj * kj;
+                    }
+                }
+            }
+        }
+    };
+    run_rows(&mut dq, dim, qv.len() * sh.s_k, dqk);
+    let mut dk = vec![0.0f32; kv.len()];
+    let dkk = |row0: usize, chunk: &mut [f32]| {
+        for (r, dkrow) in chunk.chunks_exact_mut(dim).enumerate() {
+            let row = row0 + r;
+            let (b, j) = (row / sh.s_k, row % sh.s_k);
+            for h in 0..sh.heads {
+                for i in 0..sh.s_q {
+                    let dsj = ds[((b * sh.heads + h) * sh.s_q + i) * sh.s_k + j];
+                    if dsj == 0.0 {
+                        continue;
+                    }
+                    let qrow = &qv[(b * sh.s_q + i) * dim + h * dh..][..dh];
+                    for (o, &qi) in dkrow[h * dh..(h + 1) * dh].iter_mut().zip(qrow) {
+                        *o += dsj * qi;
+                    }
+                }
+            }
+        }
+    };
+    run_rows(&mut dk, dim, kv.len() * sh.s_q, dkk);
+    let mut dvv = vec![0.0f32; vv.len()];
+    let dvk = |row0: usize, chunk: &mut [f32]| {
+        for (r, dvrow) in chunk.chunks_exact_mut(dim).enumerate() {
+            let row = row0 + r;
+            let (b, j) = (row / sh.s_k, row % sh.s_k);
+            for h in 0..sh.heads {
+                for i in 0..sh.s_q {
+                    let p = pv[((b * sh.heads + h) * sh.s_q + i) * sh.s_k + j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let dorow = &dov[(b * sh.s_q + i) * dim + h * dh..][..dh];
+                    for (o, &doi) in dvrow[h * dh..(h + 1) * dh].iter_mut().zip(dorow) {
+                        *o += p * doi;
+                    }
+                }
+            }
+        }
+    };
+    run_rows(&mut dvv, dim, vv.len() * sh.s_q, dvk);
+    (
+        Tensor::from_f32(&q.shape, dq),
+        Tensor::from_f32(&k.shape, dk),
+        Tensor::from_f32(&v.shape, dvv),
+    )
+}
+
+/// Masked mean cross-entropy over the rows of `logits` (n, v): rows with
+/// label < 0 are ignored; loss = mean over active rows of
+/// (logsumexp - logit[label]). Returns (loss, active_count). Mirrors the
+/// python `_masked_xent` exactly (including the max(count, 1) guard).
+pub fn masked_xent_fwd(logits: &Tensor, labels: &[i32]) -> (f32, f32) {
+    let (n, vsz) = (logits.shape[0], logits.shape[1]);
+    assert_eq!(labels.len(), n, "one label per logit row");
+    let lv = logits.f32s();
+    let mut nll = vec![0.0f32; n];
+    let kernel = |row0: usize, chunk: &mut [f32]| {
+        for (r, out) in chunk.iter_mut().enumerate() {
+            let i = row0 + r;
+            let lbl = labels[i];
+            if lbl < 0 {
+                continue;
+            }
+            let row = &lv[i * vsz..(i + 1) * vsz];
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let z: f32 = row.iter().map(|&x| (x - m).exp()).sum();
+            *out = m + z.ln() - row[lbl as usize];
+        }
+    };
+    run_rows(&mut nll, 1, n * vsz, kernel);
+    let count = labels.iter().filter(|&&l| l >= 0).count() as f32;
+    (nll.iter().sum::<f32>() / count.max(1.0), count)
+}
+
+/// Backward of [`masked_xent_fwd`]:
+/// dlogits = dloss * (softmax - onehot) / max(count, 1) on active rows.
+pub fn masked_xent_bwd(logits: &Tensor, labels: &[i32], count: f32, dloss: f32) -> Tensor {
+    let (n, vsz) = (logits.shape[0], logits.shape[1]);
+    assert_eq!(labels.len(), n, "one label per logit row");
+    let lv = logits.f32s();
+    let s = dloss / count.max(1.0);
+    let mut dl = vec![0.0f32; n * vsz];
+    let kernel = |row0: usize, chunk: &mut [f32]| {
+        for (r, drow) in chunk.chunks_exact_mut(vsz).enumerate() {
+            let i = row0 + r;
+            let lbl = labels[i];
+            if lbl < 0 {
+                continue;
+            }
+            let row = &lv[i * vsz..(i + 1) * vsz];
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut z = 0.0f32;
+            for (d, &x) in drow.iter_mut().zip(row) {
+                *d = (x - m).exp();
+                z += *d;
+            }
+            let inv = s / z;
+            for d in drow.iter_mut() {
+                *d *= inv;
+            }
+            drow[lbl as usize] -= s;
+        }
+    };
+    run_rows(&mut dl, vsz, n * vsz, kernel);
+    Tensor::from_f32(&logits.shape, dl)
+}
+
+/// Row-wise argmax of a 2-D tensor (classification-metric helper).
+pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
+    let (n, d) = (x.shape[0], x.shape[1]);
+    let xv = x.f32s();
+    (0..n)
+        .map(|i| {
+            let row = &xv[i * d..(i + 1) * d];
+            let mut best = 0;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
 /// Max absolute difference between two tensors (test helper).
 pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
     assert_eq!(a.shape, b.shape);
@@ -359,5 +802,205 @@ mod tests {
         let a = t2([2, 2], vec![1., 2., 3., 4.]);
         let b = t2([2, 2], vec![5., 6., 7., 8.]);
         assert_eq!(dot(&a, &b), 5.0 + 12.0 + 21.0 + 32.0);
+    }
+
+    // ---- finite-difference checks for the NN kernels ----------------------
+
+    /// |a - b| relative to max(|a|, |b|, 1): the ≤1e-3 FD criterion with a
+    /// unit floor so near-zero gradients compare absolutely.
+    fn rel_err(a: f32, b: f32) -> f32 {
+        (a - b).abs() / a.abs().max(b.abs()).max(1.0)
+    }
+
+    /// Central-difference derivative of `f` w.r.t. entry `i` of `x`.
+    fn fd_entry(x: &Tensor, i: usize, eps: f32, mut f: impl FnMut(&Tensor) -> f32) -> f32 {
+        let mut xp = x.clone();
+        xp.f32s_mut()[i] += eps;
+        let lp = f(&xp);
+        let mut xm = x.clone();
+        xm.f32s_mut()[i] -= eps;
+        let lm = f(&xm);
+        (lp - lm) / (2.0 * eps)
+    }
+
+    /// Weighted-sum objective L = <w, y>: turns a tensor-valued kernel into
+    /// a scalar whose backward seed is exactly `w` (accumulated in f64 so
+    /// the FD signal is not drowned by summation noise).
+    fn obj(w: &Tensor, y: &Tensor) -> f32 {
+        w.f32s()
+            .iter()
+            .zip(y.f32s())
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum::<f64>() as f32
+    }
+
+    fn rand_t(shape: &[usize], lo: f32, hi: f32, rng: &mut crate::util::rng::Rng) -> Tensor {
+        let n = crate::tensor::numel(shape);
+        Tensor::from_f32(shape, (0..n).map(|_| rng.range_f32(lo, hi)).collect())
+    }
+
+    #[test]
+    fn layernorm_fd_gradients() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        let (n, d) = (4, 6);
+        let x = rand_t(&[n, d], -1.5, 1.5, &mut rng);
+        let g = rand_t(&[d], 0.5, 1.5, &mut rng);
+        let b = rand_t(&[d], -0.5, 0.5, &mut rng);
+        let w = rand_t(&[n, d], -1.0, 1.0, &mut rng);
+        let (_y, stats) = layernorm_fwd(&x, &g, &b);
+        let (dx, dg, db) = layernorm_bwd(&x, &g, &stats, &w);
+        let eps = 1e-2;
+        for i in 0..n * d {
+            let fd = fd_entry(&x, i, eps, |xx| obj(&w, &layernorm_fwd(xx, &g, &b).0));
+            assert!(rel_err(dx.f32s()[i], fd) < 1e-3, "dx[{i}]: {} vs {fd}", dx.f32s()[i]);
+        }
+        for i in 0..d {
+            let fdg = fd_entry(&g, i, eps, |gg| obj(&w, &layernorm_fwd(&x, gg, &b).0));
+            assert!(rel_err(dg.f32s()[i], fdg) < 1e-3, "dg[{i}]: {} vs {fdg}", dg.f32s()[i]);
+            let fdb = fd_entry(&b, i, eps, |bb| obj(&w, &layernorm_fwd(&x, &g, bb).0));
+            assert!(rel_err(db.f32s()[i], fdb) < 1e-3, "db[{i}]: {} vs {fdb}", db.f32s()[i]);
+        }
+    }
+
+    #[test]
+    fn gelu_fd_gradient_and_known_values() {
+        assert_eq!(gelu_fwd(&t2([1, 1], vec![0.0])).f32s()[0], 0.0);
+        // gelu(x) -> x for large x, -> 0 for very negative x
+        assert!((gelu_fwd(&t2([1, 1], vec![5.0])).f32s()[0] - 5.0).abs() < 1e-3);
+        assert!(gelu_fwd(&t2([1, 1], vec![-5.0])).f32s()[0].abs() < 1e-3);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let x = rand_t(&[3, 5], -2.0, 2.0, &mut rng);
+        let w = rand_t(&[3, 5], -1.0, 1.0, &mut rng);
+        let dx = gelu_bwd(&x, &w);
+        for i in 0..x.numel() {
+            let fd = fd_entry(&x, i, 1e-2, |xx| obj(&w, &gelu_fwd(xx)));
+            assert!(rel_err(dx.f32s()[i], fd) < 1e-3, "dx[{i}]: {} vs {fd}", dx.f32s()[i]);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_order() {
+        let x = t2([2, 3], vec![1.0, 2.0, 3.0, -1.0, -1.0, -1.0]);
+        let y = softmax_rows(&x);
+        for r in 0..2 {
+            let s: f32 = (0..3).map(|c| y.at2(r, c)).sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(y.at2(0, 2) > y.at2(0, 1) && y.at2(0, 1) > y.at2(0, 0));
+        assert!((y.at2(1, 0) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn attention_uniform_query_averages_values() {
+        // q = 0 -> uniform probs -> out = mean of v rows (per batch element).
+        let sh = AttnShape { batch: 1, heads: 1, s_q: 2, s_k: 3, causal: false };
+        let q = Tensor::zeros(&[2, 2]);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let k = rand_t(&[3, 2], -1.0, 1.0, &mut rng);
+        let v = t2([3, 2], vec![3.0, 0.0, 0.0, 3.0, 3.0, 3.0]);
+        let (out, probs) = attention_fwd(&q, &k, &v, &sh);
+        for r in 0..2 {
+            assert!((out.at2(r, 0) - 2.0).abs() < 1e-5);
+            assert!((out.at2(r, 1) - 2.0).abs() < 1e-5);
+        }
+        for r in 0..2 {
+            for c in 0..3 {
+                assert!((probs.at2(r, c) - 1.0 / 3.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn causal_first_position_attends_only_to_itself() {
+        let sh = AttnShape { batch: 2, heads: 2, s_q: 3, s_k: 3, causal: true };
+        let mut rng = crate::util::rng::Rng::new(11);
+        let q = rand_t(&[6, 4], -1.0, 1.0, &mut rng);
+        let k = rand_t(&[6, 4], -1.0, 1.0, &mut rng);
+        let v = rand_t(&[6, 4], -1.0, 1.0, &mut rng);
+        let (out, probs) = attention_fwd(&q, &k, &v, &sh);
+        // probs rows for i = 0 are one-hot on j = 0
+        for bh in 0..4 {
+            assert_eq!(probs.at2(bh * 3, 0), 1.0);
+            assert_eq!(probs.at2(bh * 3, 1), 0.0);
+        }
+        // out at position 0 equals v at position 0 for each batch element
+        for b in 0..2 {
+            for c in 0..4 {
+                assert!((out.at2(b * 3, c) - v.at2(b * 3, c)).abs() < 1e-6);
+            }
+        }
+    }
+
+    fn attn_fd_case(sh: AttnShape, dim: usize, seed: u64) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let q = rand_t(&[sh.batch * sh.s_q, dim], -1.0, 1.0, &mut rng);
+        let k = rand_t(&[sh.batch * sh.s_k, dim], -1.0, 1.0, &mut rng);
+        let v = rand_t(&[sh.batch * sh.s_k, dim], -1.0, 1.0, &mut rng);
+        let w = rand_t(&[sh.batch * sh.s_q, dim], -1.0, 1.0, &mut rng);
+        let (_out, probs) = attention_fwd(&q, &k, &v, &sh);
+        let (dq, dk, dv) = attention_bwd(&q, &k, &v, &probs, &w, &sh);
+        let eps = 1e-2;
+        for i in 0..q.numel() {
+            let fd = fd_entry(&q, i, eps, |t| obj(&w, &attention_fwd(t, &k, &v, &sh).0));
+            assert!(rel_err(dq.f32s()[i], fd) < 1e-3, "dq[{i}]: {} vs {fd}", dq.f32s()[i]);
+        }
+        for i in 0..k.numel() {
+            let fd = fd_entry(&k, i, eps, |t| obj(&w, &attention_fwd(&q, t, &v, &sh).0));
+            assert!(rel_err(dk.f32s()[i], fd) < 1e-3, "dk[{i}]: {} vs {fd}", dk.f32s()[i]);
+            let fdv = fd_entry(&v, i, eps, |t| obj(&w, &attention_fwd(&q, &k, t, &sh).0));
+            assert!(rel_err(dv.f32s()[i], fdv) < 1e-3, "dv[{i}]: {} vs {fdv}", dv.f32s()[i]);
+        }
+    }
+
+    #[test]
+    fn attention_fd_gradients_bidirectional() {
+        attn_fd_case(AttnShape { batch: 2, heads: 2, s_q: 3, s_k: 3, causal: false }, 4, 21);
+    }
+
+    #[test]
+    fn attention_fd_gradients_causal() {
+        attn_fd_case(AttnShape { batch: 2, heads: 2, s_q: 3, s_k: 3, causal: true }, 4, 22);
+    }
+
+    #[test]
+    fn attention_fd_gradients_cross_class_attention_shape() {
+        // CaiT class-attention: one query over s_k = 4 keys.
+        attn_fd_case(AttnShape { batch: 2, heads: 2, s_q: 1, s_k: 4, causal: false }, 4, 23);
+    }
+
+    #[test]
+    fn masked_xent_uniform_logits_is_log_v() {
+        let logits = Tensor::zeros(&[3, 8]);
+        let (loss, count) = masked_xent_fwd(&logits, &[1, -1, 5]);
+        assert_eq!(count, 2.0);
+        assert!((loss - (8.0f32).ln()).abs() < 1e-5, "{loss}");
+        // all-masked: loss 0, no NaN (the max(count,1) guard)
+        let (l0, c0) = masked_xent_fwd(&logits, &[-1, -1, -1]);
+        assert_eq!(c0, 0.0);
+        assert_eq!(l0, 0.0);
+    }
+
+    #[test]
+    fn masked_xent_fd_gradient() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let logits = rand_t(&[5, 7], -2.0, 2.0, &mut rng);
+        let labels = [2i32, -1, 0, 6, -1];
+        let (_l, count) = masked_xent_fwd(&logits, &labels);
+        let dl = masked_xent_bwd(&logits, &labels, count, 1.0);
+        for i in 0..logits.numel() {
+            let fd = fd_entry(&logits, i, 1e-2, |t| masked_xent_fwd(t, &labels).0);
+            assert!(rel_err(dl.f32s()[i], fd) < 1e-3, "dl[{i}]: {} vs {fd}", dl.f32s()[i]);
+        }
+        // masked rows receive exactly zero gradient
+        for c in 0..7 {
+            assert_eq!(dl.at2(1, c), 0.0);
+            assert_eq!(dl.at2(4, c), 0.0);
+        }
+    }
+
+    #[test]
+    fn argmax_rows_picks_max() {
+        let x = t2([2, 3], vec![0.1, 0.9, 0.5, 2.0, -1.0, 1.0]);
+        assert_eq!(argmax_rows(&x), vec![1, 0]);
     }
 }

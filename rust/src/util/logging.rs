@@ -45,17 +45,23 @@ pub fn log(level: Level, msg: &str) {
 
 #[macro_export]
 macro_rules! log_info {
-    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($arg)*)) };
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, &format!($($arg)*))
+    };
 }
 
 #[macro_export]
 macro_rules! log_debug {
-    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($arg)*)) };
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, &format!($($arg)*))
+    };
 }
 
 #[macro_export]
 macro_rules! log_warn {
-    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($arg)*)) };
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, &format!($($arg)*))
+    };
 }
 
 #[cfg(test)]

@@ -49,6 +49,34 @@ where
     });
 }
 
+/// Like [`par_row_chunks`], but fills *two* row-aligned output buffers in
+/// lock-step (`a` with `a_cols` columns, `b` with `b_cols` columns, same row
+/// count). Used by kernels that produce a value plus per-row statistics
+/// (layernorm's (mean, rstd)) in one pass.
+pub fn par_row_chunks2<F>(a: &mut [f32], a_cols: usize, b: &mut [f32], b_cols: usize, f: F)
+where
+    F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+{
+    if a.is_empty() || a_cols == 0 || b_cols == 0 {
+        return;
+    }
+    let rows = a.len() / a_cols;
+    assert_eq!(b.len() / b_cols, rows, "row-count mismatch between buffers");
+    let nt = threads().min(rows);
+    if nt <= 1 {
+        f(0, a, b);
+        return;
+    }
+    let rows_per = rows.div_ceil(nt);
+    std::thread::scope(|s| {
+        let bs = b.chunks_mut(rows_per * b_cols);
+        for (idx, (ca, cb)) in a.chunks_mut(rows_per * a_cols).zip(bs).enumerate() {
+            let f = &f;
+            s.spawn(move || f(idx * rows_per, ca, cb));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,6 +99,30 @@ mod tests {
         });
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i as f32, "element {i}");
+        }
+    }
+
+    #[test]
+    fn paired_chunks_stay_row_aligned() {
+        let (rows, ac, bc) = (23, 4, 2);
+        let mut a = vec![0.0f32; rows * ac];
+        let mut b = vec![0.0f32; rows * bc];
+        par_row_chunks2(&mut a, ac, &mut b, bc, |row0, ca, cb| {
+            assert_eq!(ca.len() / ac, cb.len() / bc, "chunks must pair rows");
+            for (r, row) in ca.chunks_exact_mut(ac).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (row0 + r) as f32;
+                }
+            }
+            for (r, row) in cb.chunks_exact_mut(bc).enumerate() {
+                for v in row.iter_mut() {
+                    *v = -((row0 + r) as f32);
+                }
+            }
+        });
+        for r in 0..rows {
+            assert_eq!(a[r * ac], r as f32);
+            assert_eq!(b[r * bc], -(r as f32));
         }
     }
 

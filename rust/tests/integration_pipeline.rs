@@ -62,7 +62,8 @@ fn probe_finetune_learns_topic_task() {
     let p2 = Probe::new(ProbeKind::Sst2, corpus.clone());
     let c2 = probe_cfg.clone();
     let mut evb = move |s: usize| p2.batch(&c2, &mut Rng::new(0xE0 + s as u64));
-    let res = finetune_probe(&rt, "probe_bert_base", "sst2", &body, &tc, &mut trb, &mut evb).unwrap();
+    let res = finetune_probe(&rt, "probe_bert_base", "sst2", &body, &tc, &mut trb, &mut evb)
+        .unwrap();
     assert!(res.accuracy.is_finite());
     assert!(res.accuracy > 0.4, "acc {}", res.accuracy); // not degenerate
 }

@@ -42,7 +42,9 @@ fn golden_batch(cfg: &ligo::ModelConfig, seed: i64) -> Store {
         st.insert("labels", Tensor::from_i32(&[b], labels));
     } else {
         let n = (b * s) as i64;
-        let tokens: Vec<i32> = (0..n).map(|i| ((i * 2654435761i64 + seed) % cfg.vocab as i64) as i32).collect();
+        let tokens: Vec<i32> = (0..n)
+            .map(|i| ((i * 2654435761i64 + seed) % cfg.vocab as i64) as i32)
+            .collect();
         // python golden labels use hi = max(n_classes, 2) = 2 for LM configs
         let labels: Vec<i32> = (0..n)
             .map(|i| if i % 7 == 0 { ((i * 2654435761i64 + seed) % 2) as i32 } else { -1 })
@@ -83,7 +85,13 @@ fn train_steps_reduce_loss() {
     let cfg = reg.model("bert_small").unwrap().clone();
     let corpus = Corpus::new(cfg.vocab, 0);
     let params = Trainer::scratch_params(&rt, &cfg, 0).unwrap();
-    let tc = TrainConfig { lr: 3e-3, total_steps: 80, warmup_steps: 5, eval_every: 80, ..Default::default() };
+    let tc = TrainConfig {
+        lr: 3e-3,
+        total_steps: 80,
+        warmup_steps: 5,
+        eval_every: 80,
+        ..Default::default()
+    };
     let mut tr = Trainer::new(&rt, &cfg, tc, params).unwrap();
     let c1 = corpus.clone();
     let cfg1 = cfg.clone();
@@ -132,7 +140,13 @@ fn ligo_growth_improves_over_init() {
     // lightly pretrain the small model so M has knowledge to map
     let corpus = Corpus::new(small.vocab, 0);
     let params = Trainer::scratch_params(&rt, &small, 0).unwrap();
-    let tc = TrainConfig { lr: 1e-3, total_steps: 40, warmup_steps: 4, eval_every: 40, ..Default::default() };
+    let tc = TrainConfig {
+        lr: 1e-3,
+        total_steps: 40,
+        warmup_steps: 4,
+        eval_every: 40,
+        ..Default::default()
+    };
     let mut tr = Trainer::new(&rt, &small, tc, params).unwrap();
     for step in 0..40 {
         let c = corpus.clone();
@@ -162,7 +176,8 @@ fn ligo_growth_improves_over_init() {
     let out = fwd.run(&[("params", &grown.params), ("batch", &eval_batch)]).unwrap();
     let ligo_loss = out.scalar("loss").unwrap();
     // compare against a scratch-init large model on the same batch
-    let scratch = Store::det_init(&rt.load("grad_bert_base").unwrap().manifest.shapes_of("params"), 1);
+    let scratch =
+        Store::det_init(&rt.load("grad_bert_base").unwrap().manifest.shapes_of("params"), 1);
     let scratch_loss = fwd
         .run(&[("params", &scratch), ("batch", &eval_batch)])
         .unwrap()

@@ -1,0 +1,78 @@
+//! End-to-end integration over the synthesized native engine: from a clean
+//! checkout (no artifacts, no XLA), the default runtime must train, eval
+//! and grow — the workload the old NullBackend default could not execute.
+
+use ligo::config::{Registry, TrainConfig};
+use ligo::coordinator::trainer::{eval_store, Batches, Trainer};
+use ligo::data::batches::mlm_batch;
+use ligo::data::corpus::Corpus;
+use ligo::data::vision::VisionTask;
+use ligo::runtime::Runtime;
+use ligo::util::rng::Rng;
+
+fn native_runtime() -> Option<Runtime> {
+    let rt = Runtime::cpu(std::env::temp_dir().join("ligo_native_e2e")).unwrap();
+    if rt.backend_name() != "native" {
+        // pjrt build with a live XLA client: the artifact suite covers it
+        return None;
+    }
+    Some(rt)
+}
+
+#[test]
+fn trainer_reduces_loss_on_the_native_backend() {
+    let Some(rt) = native_runtime() else { return };
+    let reg = Registry::builtin();
+    let cfg = reg.model("bert_small").unwrap().clone();
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let params = Trainer::scratch_params(&rt, &cfg, 0).unwrap();
+    let tc = TrainConfig {
+        lr: 3e-3,
+        total_steps: 25,
+        warmup_steps: 3,
+        eval_every: 25,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(&rt, &cfg, tc, params).unwrap();
+    let c1 = corpus.clone();
+    let cfg1 = cfg.clone();
+    let mut batches = Batches {
+        train: Box::new(move |step| mlm_batch(&c1, &cfg1, &mut Rng::new(step as u64))),
+        eval: Box::new({
+            let c = corpus.clone();
+            let cfg = cfg.clone();
+            move |i| mlm_batch(&c, &cfg, &mut Rng::new(0x77AA + i as u64))
+        }),
+    };
+    let curve = tr.run("native_smoke", &mut batches, 25).unwrap();
+    assert!(curve.loss.iter().all(|l| l.is_finite()), "{:?}", curve.loss);
+    let (first, last) = (curve.loss[0], *curve.loss.last().unwrap());
+    assert!(
+        last < first - 0.05,
+        "native training must reduce loss: {first} -> {last}"
+    );
+}
+
+#[test]
+fn vision_fwd_reports_loss_and_accuracy_metric() {
+    let Some(rt) = native_runtime() else { return };
+    let reg = Registry::builtin();
+    let cfg = reg.model("vit_s").unwrap().clone();
+    let fwd = rt.load("fwd_vit_s").unwrap();
+    let params = Trainer::scratch_params(&rt, &cfg, 1).unwrap();
+    let task = VisionTask::pretrain();
+    let cfg2 = cfg.clone();
+    let mut eb = move |i: usize| task.batch(&cfg2, &mut Rng::new(0xBEEF + i as u64));
+    let (loss, metric) = eval_store(&fwd, &params, &mut eb, 2).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    let acc = metric.expect("vision fwd must report the accuracy metric");
+    assert!((0.0..=1.0).contains(&acc), "acc {acc}");
+}
+
+#[test]
+fn probe_preset_synthesizes_with_metric() {
+    let Some(rt) = native_runtime() else { return };
+    let exe = rt.load("fwd_probe_bert_small").unwrap();
+    assert!(exe.manifest.output_index("metric").is_some());
+    assert_eq!(exe.manifest.inputs_of("batch")[1].shape, vec![16]);
+}

@@ -8,11 +8,15 @@
 //!
 //! Pure rust — no artifacts required.
 
+use ligo::coordinator::growth_manager::{ligo_grow_task_native, LigoOptions};
 use ligo::growth::ligo::{ligo_apply, ligo_init, selection_m, DepthInit, Ligo};
 use ligo::growth::net2net::Net2Net;
 use ligo::growth::testutil::{mk_cfg, small_store};
 use ligo::growth::{self, GrowthOperator};
 use ligo::tensor::store::Store;
+use ligo::tensor::Tensor;
+use ligo::util::rng::Rng;
+use ligo::ModelConfig;
 
 /// Assert two stores are identical: same tensor set, same shapes, equal
 /// (f32 ==) values everywhere.
@@ -131,6 +135,66 @@ fn noise_free_init_with_zero_steps_is_the_stacking_baseline_family() {
     // depth stacking: layer 2 repeats layer 0, layer 3 repeats layer 1
     assert_eq!(got.expect("L02_q_w"), got.expect("L00_q_w"));
     assert_eq!(got.expect("L03_q_w"), got.expect("L01_q_w"));
+}
+
+fn mlm_like_batch(cfg: &ModelConfig, seed: u64) -> Store {
+    let mut rng = Rng::new(seed);
+    let (b, s) = (cfg.batch, cfg.seq);
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let labels: Vec<i32> = tokens
+        .iter()
+        .map(|&t| if rng.coin(0.3) { t } else { -1 })
+        .collect();
+    let mut st = Store::new();
+    st.insert("tokens", Tensor::from_i32(&[b, s], tokens));
+    st.insert("labels", Tensor::from_i32(&[b, s], labels));
+    st
+}
+
+#[test]
+fn task_loss_learned_m_beats_the_step0_eval_loss() {
+    // The acceptance check for native M-learning: descending the expanded
+    // model's *task loss* must reach a lower held-out eval loss than the
+    // shared starting point (apply(init M) — which is also the surrogate's
+    // step-0 model, since both objectives share ligo_init).
+    let cs = mk_cfg(2, 8, 2);
+    let cl = mk_cfg(4, 12, 3);
+    let small = small_store(&cs);
+    let cl2 = cl.clone();
+    let mut batches = move |s: usize| mlm_like_batch(&cl2, 1000 + s as u64);
+    let g0 = ligo_grow_task_native(
+        &cs,
+        &cl,
+        &small,
+        &mut batches,
+        &LigoOptions { steps: 0, ..Default::default() },
+    )
+    .unwrap();
+    let gn = ligo_grow_task_native(
+        &cs,
+        &cl,
+        &small,
+        &mut batches,
+        &LigoOptions { steps: 30, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(gn.objective, "task-native");
+    // held-out batches (disjoint seeds from the 1000.. training stream)
+    let eval = |params: &Store| -> f32 {
+        (0..3)
+            .map(|i| {
+                let batch = mlm_like_batch(&cl, 9000 + i as u64);
+                ligo::model::loss_only(&cl, params, &batch).unwrap().0
+            })
+            .sum::<f32>()
+            / 3.0
+    };
+    let (l0, ln) = (eval(&g0.params), eval(&gn.params));
+    assert!(l0.is_finite() && ln.is_finite());
+    assert!(
+        ln < l0,
+        "task-loss-learned M must beat the step-0 eval loss: {l0} -> {ln}"
+    );
 }
 
 #[test]
