@@ -35,7 +35,7 @@ fn main() {
     // true task-loss M-learning through the native engine (the default
     // no-XLA route): apply + large fwd/bwd + expansion backprop per step
     let corpus = ligo::data::corpus::Corpus::new(large.vocab, 0);
-    let task_stats = bench("grow/ligo_task_native[5 M-steps]", 1, 3, || {
+    let run_task_native = || {
         let mut mk = |s: usize| {
             let mut rng = ligo::util::rng::Rng::new(s as u64);
             ligo::data::batches::mlm_batch(&corpus, &large, &mut rng)
@@ -48,7 +48,20 @@ fn main() {
             &ligo::coordinator::growth_manager::LigoOptions { steps: 5, ..Default::default() },
         )
         .unwrap()
-    });
+    };
+    let task_stats = bench("grow/ligo_task_native[5 M-steps]", 1, 3, run_task_native);
+    // the same loop with the fused linear kernels lowered away — the A/B
+    // line EXPERIMENTS.md pairs with the `LIGO_FUSED=0` env knob.
+    // LIGO_BENCH_FAST=1 skips it (the CI calibration run only needs the
+    // gate line above).
+    if std::env::var("LIGO_BENCH_FAST").is_err() {
+        ligo::tensor::ops::set_fused_override(Some(false));
+        let unfused_stats =
+            bench("grow/ligo_task_native[5 M-steps, unfused]", 1, 3, run_task_native);
+        ligo::tensor::ops::set_fused_override(None);
+        let fused_ratio = unfused_stats.mean_s / task_stats.mean_s;
+        println!("{:<44} fused kernel speedup: {fused_ratio:.2}x", "");
+    }
     // LiGO apply through the artifact (the pjrt fast path), when executable
     let rt = Runtime::cpu(artifacts_dir()).unwrap();
     match rt.load("ligo_apply_bert_small__bert_base") {

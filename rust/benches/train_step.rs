@@ -1,6 +1,9 @@
 //! Bench: full coordinator train step (grad artifact + AdamW + accounting),
 //! split into its components to show where time goes (the §Perf breakdown:
-//! PJRT execute should dominate; coordinator overhead <15%).
+//! backend execute should dominate; coordinator overhead <15%), plus a
+//! fused-vs-unfused linear-kernel A/B on the same preset so the SIMD
+//! microkernel win is measurable in one process (EXPERIMENTS.md records
+//! the per-host numbers).
 
 use ligo::config::{artifacts_dir, Registry, TrainConfig};
 use ligo::coordinator::optim::AdamW;
@@ -51,4 +54,26 @@ fn main() {
             "", overhead * 100.0, s_opt.mean_s / s_full.mean_s * 100.0
         );
     }
+
+    // fused vs unfused linear lowering, same preset, one process — the
+    // EXPERIMENTS.md A/B for the SIMD microkernel (LIGO_FUSED equivalent)
+    println!("\n== train_step: fused vs unfused linear kernels (bert_base) ==");
+    let cfg = reg.model("bert_base").unwrap().clone();
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let exe = rt.load("grad_bert_base").unwrap();
+    let params = Store::det_init(&exe.manifest.shapes_of("params"), 0);
+    let mut means = Vec::new();
+    for (label, fused) in [("fused", true), ("unfused", false)] {
+        ligo::tensor::ops::set_fused_override(Some(fused));
+        let tc = TrainConfig::bert(100);
+        let mut tr = Trainer::new(&rt, &cfg, tc, params.clone()).unwrap();
+        let c2 = corpus.clone();
+        let cfg2 = cfg.clone();
+        let s = bench(&format!("bert_base/train_step[{label}]"), 2, 10, || {
+            tr.train_step(&mut |s| mlm_batch(&c2, &cfg2, &mut Rng::new(s as u64))).unwrap()
+        });
+        means.push(s.mean_s);
+    }
+    ligo::tensor::ops::set_fused_override(None);
+    println!("{:<44} fused kernel speedup: {:.2}x", "", means[1] / means[0]);
 }

@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Benchmark-ledger tooling for EXPERIMENTS.md (stdlib only).
+
+Subcommands
+-----------
+mean NAME FILE
+    Print the mean (seconds) of bench line NAME from a captured
+    `cargo bench` output file.
+
+budget FILE [FACTOR]
+    Print FACTOR (default 1.25) x the mean of
+    `grow/ligo_task_native[5 M-steps]` from FILE — the calibrated
+    LIGO_GROWTH_OPS_BUDGET_S for the host that produced FILE. CI runs the
+    serial bench first and feeds this budget to the parallel run, making
+    the regression gate self-calibrating (robust to runner speed).
+
+speedup SERIAL_FILE PARALLEL_FILE
+    Print a per-host EXPERIMENTS.md table row (markdown) comparing the
+    serial and parallel p50 of the tracked bench lines.
+
+record
+    Run the full protocol on this host (requires cargo): serial growth_ops,
+    parallel growth_ops, quickstart wall-clock; append the resulting rows
+    to ../../EXPERIMENTS.md and print the calibrated budget. Run from
+    anywhere; paths resolve relative to this script.
+"""
+
+import os
+import re
+import subprocess
+import sys
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+RUST = os.path.dirname(HERE)
+REPO = os.path.dirname(RUST)
+TRACKED = [
+    "grow/stackbert",
+    "grow/ligo_task_native[5 M-steps]",
+]
+GATE_LINE = "grow/ligo_task_native[5 M-steps]"
+
+UNIT = {"ns": 1e-9, "µs": 1e-6, "us": 1e-6, "ms": 1e-3, "s": 1.0}
+LINE_RE = re.compile(
+    r"^(?P<name>.*?)\s+n=\d+\s+mean\s+(?P<mean>[\d.]+)\s+(?P<mu>ns|µs|us|ms|s)"
+    r"\s+p50\s+(?P<p50>[\d.]+)\s+(?P<pu>ns|µs|us|ms|s)"
+)
+
+
+def parse(path):
+    """{bench name -> (mean_s, p50_s)} from a captured bench output file."""
+    out = {}
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            m = LINE_RE.match(line.rstrip())
+            if m:
+                out[m.group("name").strip()] = (
+                    float(m.group("mean")) * UNIT[m.group("mu")],
+                    float(m.group("p50")) * UNIT[m.group("pu")],
+                )
+    return out
+
+
+def require(stats, name, path):
+    if name not in stats:
+        sys.exit(f"bench line '{name}' not found in {path} (lines: {sorted(stats)})")
+    return stats[name]
+
+
+def fmt(s):
+    return f"{s:.3f} s" if s >= 1 else f"{s * 1e3:.1f} ms"
+
+
+def row_markdown(serial, parallel, host):
+    rows = []
+    for name in TRACKED:
+        s_p50 = serial[name][1]
+        p_p50 = parallel[name][1]
+        speedup = s_p50 / p_p50 if p_p50 > 0 else float("nan")
+        rows.append(
+            f"| {host} | `{name}` | {fmt(s_p50)} | {fmt(p_p50)} | {speedup:.2f}x |"
+        )
+    return rows
+
+
+def bench_growth(env_extra):
+    env = dict(os.environ, **env_extra)
+    out = subprocess.run(
+        ["cargo", "bench", "--bench", "growth_ops"],
+        cwd=RUST, env=env, capture_output=True, text=True, check=True,
+    ).stdout
+    tmp = os.path.join(RUST, "target", f"bench_{'serial' if env_extra else 'par'}.txt")
+    os.makedirs(os.path.dirname(tmp), exist_ok=True)
+    with open(tmp, "w", encoding="utf-8") as fh:
+        fh.write(out)
+    return tmp
+
+
+def cmd_record():
+    host = f"{os.uname().nodename} ({os.cpu_count()} cores)"
+    print(f"== recording bench baseline for {host} ==")
+    # serial pass only calibrates the gate line: skip the unfused A/B
+    serial_f = bench_growth({"LIGO_THREADS": "1", "LIGO_BENCH_FAST": "1"})
+    par_f = bench_growth({})
+    serial, parallel = parse(serial_f), parse(par_f)
+    for name in TRACKED + [GATE_LINE]:
+        require(serial, name, serial_f)
+        require(parallel, name, par_f)
+    budget = serial[GATE_LINE][0] * 1.25
+    # build first so the timed number is the binary alone, not cargo
+    subprocess.run(
+        ["cargo", "build", "--release", "--example", "quickstart"],
+        cwd=RUST, check=True, capture_output=True,
+    )
+    t0 = time.time()
+    subprocess.run(
+        [os.path.join(RUST, "target", "release", "examples", "quickstart")],
+        cwd=RUST, check=True, capture_output=True,
+    )
+    quick_s = time.time() - t0
+    rows = row_markdown(serial, parallel, host)
+    rows.append(f"| {host} | `example/quickstart` (wall) | – | {fmt(quick_s)} | – |")
+    exp = os.path.join(REPO, "EXPERIMENTS.md")
+    with open(exp, "a", encoding="utf-8") as fh:
+        fh.write("\n".join(rows) + "\n")
+    print("\n".join(rows))
+    print(f"\ncalibrated LIGO_GROWTH_OPS_BUDGET_S={budget:.3f}")
+    print(f"rows appended to {exp} — move them into the per-host table.")
+
+
+def main():
+    if len(sys.argv) < 2:
+        sys.exit(__doc__)
+    cmd = sys.argv[1]
+    if cmd == "mean":
+        name, path = sys.argv[2], sys.argv[3]
+        print(f"{require(parse(path), name, path)[0]:.6f}")
+    elif cmd == "budget":
+        path = sys.argv[2]
+        factor = float(sys.argv[3]) if len(sys.argv) > 3 else 1.25
+        print(f"{require(parse(path), GATE_LINE, path)[0] * factor:.3f}")
+    elif cmd == "speedup":
+        serial, parallel = parse(sys.argv[2]), parse(sys.argv[3])
+        for name in TRACKED:
+            require(serial, name, sys.argv[2])
+            require(parallel, name, sys.argv[3])
+        host = f"{os.uname().nodename} ({os.cpu_count()} cores)"
+        print("\n".join(row_markdown(serial, parallel, host)))
+    elif cmd == "record":
+        cmd_record()
+    else:
+        sys.exit(__doc__)
+
+
+if __name__ == "__main__":
+    main()

@@ -234,9 +234,14 @@ pub fn ligo_grow_task_native(
         let (loss, grads_theta, _metric) = crate::model::loss_and_grads(large, &theta, &batch)?;
         last_loss = loss;
         let dm = ligo_apply_backward(&m, small_params, &grads_theta, small, large);
+        // the expanded model and its gradients die here every step —
+        // recycle their (large-model-sized) buffers for the next iteration
+        crate::tensor::arena::recycle_store(theta);
+        crate::tensor::arena::recycle_store(grads_theta);
         // cosine-ish decay over the short M-learning phase (shared schedule)
         let lr = m_lr_at(opts.lr, step, opts.steps);
         sgd.step(&mut m, &dm, lr);
+        crate::tensor::arena::recycle_store(dm);
         if step % 25 == 0 {
             log_info!("ligo M-step {step} (native task loss): loss {last_loss:.4}");
         }

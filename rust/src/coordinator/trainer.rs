@@ -86,6 +86,11 @@ impl Trainer {
     }
 
     /// One optimizer step (grad_accum microbatches). Returns mean loss.
+    ///
+    /// Dead gradient stores (each microbatch's after accumulation, the
+    /// accumulator after the optimizer consumed it) are recycled into the
+    /// thread-local [`crate::tensor::arena`], so on the native backend the
+    /// steady-state step allocates no fresh activation/gradient buffers.
     pub fn train_step(&mut self, batches: &mut dyn FnMut(usize) -> Store) -> Result<f32> {
         let accum = self.tc.grad_accum.max(1);
         let mut grads = Store::new();
@@ -97,7 +102,7 @@ impl Trainer {
             for (g, s) in &self.extra {
                 bindings.push((g.as_str(), s));
             }
-            let out = self.grad_exe.run(&bindings)?;
+            let mut out = self.grad_exe.run(&bindings)?;
             // A backend gap here must fail loudly: a missing loss would
             // silently poison the whole mean-loss curve with NaN, and a
             // missing grads group would previously panic.
@@ -108,7 +113,7 @@ impl Trainer {
                     out.scalars.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
                 )
             };
-            let Some(g) = out.groups.get("grads") else {
+            let Some(g) = out.take_group("grads") else {
                 bail!(
                     "grad executable for '{}' returned no 'grads' group (groups: {:?})",
                     self.cfg.name,
@@ -116,10 +121,16 @@ impl Trainer {
                 )
             };
             loss_sum += loss;
-            accumulate(&mut grads, g, 1.0 / accum as f32);
+            if accum == 1 {
+                grads = g; // single microbatch: take ownership, no copy
+            } else {
+                accumulate(&mut grads, &g, 1.0 / accum as f32);
+                crate::tensor::arena::recycle_store(g);
+            }
         }
         let lr = self.tc.lr_at(self.step);
         self.opt.step(&mut self.params, &grads, lr);
+        crate::tensor::arena::recycle_store(grads);
         self.step += 1;
         Ok(loss_sum / accum as f32)
     }

@@ -8,7 +8,12 @@
 //! every small-model tensor via the fused triple product `B W A^T`
 //! ([`crate::tensor::ops::expand`]), followed by a depth pass that forms
 //! each large layer as a learned linear blend of the width-grown small
-//! layers ([`crate::tensor::ops::weighted_sum`]).
+//! layers ([`crate::tensor::ops::weighted_sum`]). Both halves of the
+//! triple product ride the vectorizable blocked matmul kernels (the
+//! `matmul_nt` packed path), and [`ligo_apply_backward`] recycles its
+//! large-model-sized temporaries through [`crate::tensor::arena`], so the
+//! per-M-step cost of the task-native route is compute-, not
+//! allocator-bound.
 //!
 //! Weight tying (Appendix B.1), which makes M learnable from ~100 steps:
 //!   * `A^k = B_emb^T` for k in {Q, K, V, fc1}  (residual-stream inputs)
@@ -405,6 +410,25 @@ fn a_target(m: &Store, untied: &'static str, tied: &'static str) -> Option<&'sta
     }
 }
 
+/// [`add_scaled`] for an owned contribution: the first write to a slot
+/// *moves* the tensor in (scaled in place, no copy); later writes
+/// accumulate and recycle the consumed buffer into the arena. The
+/// expansion backward builds one large-model-sized temporary per layer per
+/// M-step; this keeps the task-native M-learning loop allocation-flat.
+fn add_scaled_owned(grads: &mut Store, name: &str, mut t: Tensor, s: f32) {
+    if grads.contains(name) {
+        add_scaled(grads, name, &t, s);
+        crate::tensor::arena::recycle(t);
+    } else {
+        if s != 1.0 {
+            for v in t.f32s_mut() {
+                *v *= s;
+            }
+        }
+        grads.insert(name.to_string(), t);
+    }
+}
+
 /// Rank-1 outer product e x^T (the vector families' B-gradient shape).
 fn outer(e: &Tensor, x: &Tensor) -> Tensor {
     let (rows, cols) = (e.numel(), x.numel());
@@ -469,19 +493,29 @@ pub fn ligo_apply_backward(
             if is_weight {
                 let (a, _, _) = a_info.expect("weight suffixes carry an in-expansion");
                 if b_learned {
-                    let gb = ops::matmul_nt(&ops::matmul(e, a), &w_hat);
-                    add_scaled(&mut gm, bname, &gb, 1.0);
+                    let ea = ops::matmul(e, a);
+                    let gb = ops::matmul_nt(&ea, &w_hat);
+                    crate::tensor::arena::recycle(ea);
+                    add_scaled_owned(&mut gm, bname, gb, 1.0);
                 }
                 if let Some(an) = a_name {
-                    let ga = ops::matmul(&ops::transpose(e), &ops::matmul(b, &w_hat));
-                    add_scaled(&mut gm, an, &ga, 1.0);
+                    let et = ops::transpose(e);
+                    let bw = ops::matmul(b, &w_hat);
+                    let ga = ops::matmul(&et, &bw);
+                    crate::tensor::arena::recycle(et);
+                    crate::tensor::arena::recycle(bw);
+                    add_scaled_owned(&mut gm, an, ga, 1.0);
                 }
             } else if b_learned {
-                add_scaled(&mut gm, bname, &outer(e, &w_hat), 1.0);
+                add_scaled_owned(&mut gm, bname, outer(e, &w_hat), 1.0);
             }
+            crate::tensor::arena::recycle(w_hat);
         }
         if let Some(g) = gw {
             add_scaled(&mut gm, &blend, &g, 1.0);
+        }
+        for p in ps {
+            crate::tensor::arena::recycle(p);
         }
     }
     // ---- non-layer tensors (mirror expand_nonlayer) ----
@@ -494,7 +528,10 @@ pub fn ligo_apply_backward(
             "emb_tok" | "emb_pos" => {
                 if m.contains("B_emb") {
                     // Y = X B^T  =>  dB = E^T X
-                    add_scaled(&mut gm, "B_emb", &ops::matmul(&ops::transpose(e), x), 1.0);
+                    let et = ops::transpose(e);
+                    let gb = ops::matmul(&et, x);
+                    crate::tensor::arena::recycle(et);
+                    add_scaled_owned(&mut gm, "B_emb", gb, 1.0);
                 }
             }
             "mlm_bias" | "head_b" | "span_b" => {}

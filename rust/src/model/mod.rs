@@ -5,16 +5,28 @@
 //!
 //! Layering:
 //! * [`tape`] — a minimal reverse-mode autodiff arena over [`Tensor`]s,
-//!   built from the NN kernels in [`crate::tensor::ops`] (layernorm, GELU,
-//!   softmax attention, masked cross-entropy — all with analytic backward
-//!   kernels, row-parallel via `util::par`).
-//! * [`text`] / [`vision`] (private) — the family graphs, mirroring
+//!   built from the NN kernels in [`crate::tensor::ops`] (fused
+//!   linear+bias(+GELU), layernorm, softmax attention, masked
+//!   cross-entropy — all with analytic backward kernels, row-parallel via
+//!   `util::par`).
+//! * `text` / `vision` (private) — the family graphs, mirroring
 //!   `python/compile/transformer.py` op for op so the native engine and the
 //!   AOT artifacts describe the same model.
 //! * This root — [`param_shapes`] (the manifest parameter set of a config),
 //!   [`loss_only`] / [`loss_and_grads`] (the eval / training entry points
 //!   the [`crate::runtime`] `NativeBackend` synthesizes executables from),
-//!   and [`supports`].
+//!   [`ParamView`] (the zero-copy parameter lookup both of those are
+//!   generic over), and [`supports`].
+//!
+//! # Memory discipline
+//!
+//! Parameters enter the graph as **borrowed** tape leaves
+//! ([`tape::Tape::param`]) through a [`ParamView`], so a forward/backward
+//! pass copies no parameter data — the `NativeBackend` binds its positional
+//! inputs as `&Tensor`s straight into the tape. Activations and gradient
+//! buffers come from the thread-local [`crate::tensor::arena`] pool and
+//! are recycled when the tape drops, so repeated `train_step` calls reach
+//! a zero-fresh-allocation steady state (asserted in this module's tests).
 //!
 //! The engine is also what makes *true task-loss M-learning* possible on
 //! the default build: `coordinator::growth_manager` chains
@@ -30,11 +42,33 @@ use std::collections::BTreeMap;
 use crate::bail;
 use crate::config::ModelConfig;
 use crate::error::{Context, Result};
+use crate::tensor::arena;
 use crate::tensor::ops;
 use crate::tensor::store::Store;
 use crate::tensor::Tensor;
 
 use self::tape::{Tape, Var};
+
+/// Read-only parameter lookup the graph builder borrows its tape leaves
+/// from. Implemented by [`Store`] (named training state) and by a plain
+/// map of borrowed tensors (the `NativeBackend`'s zero-copy view over its
+/// positional inputs).
+pub trait ParamView {
+    /// The tensor registered under `name`, if any.
+    fn tensor(&self, name: &str) -> Option<&Tensor>;
+}
+
+impl ParamView for Store {
+    fn tensor(&self, name: &str) -> Option<&Tensor> {
+        self.get(name)
+    }
+}
+
+impl<'a> ParamView for BTreeMap<&'a str, &'a Tensor> {
+    fn tensor(&self, name: &str) -> Option<&Tensor> {
+        self.get(name).map(|t| &**t)
+    }
+}
 
 /// True for the families the native engine implements.
 pub fn supports(cfg: &ModelConfig) -> bool {
@@ -125,10 +159,23 @@ fn accuracy(logits: &Tensor, labels: &[i32]) -> f32 {
     }
 }
 
-fn validate_params(cfg: &ModelConfig, params: &Store) -> Result<()> {
+/// Build the loss graph: returns (tape, loss node, name -> leaf map,
+/// metric). Every parameter is validated against [`param_shapes`] and
+/// enters the tape as a **borrowed** leaf — the graph holds references
+/// into `params` for the tape's lifetime instead of deep copies.
+fn build<'p, P: ParamView>(
+    cfg: &ModelConfig,
+    params: &'p P,
+    batch: &Store,
+) -> Result<(Tape<'p>, Var, BTreeMap<String, Var>, Option<f32>)> {
+    if !supports(cfg) {
+        bail!("native model engine does not support family '{}'", cfg.family);
+    }
+    let mut tape = Tape::new();
+    let mut vars: BTreeMap<String, Var> = BTreeMap::new();
     for (name, shape) in param_shapes(cfg) {
         let t = params
-            .get(&name)
+            .tensor(&name)
             .with_context(|| format!("params for '{}' missing '{name}'", cfg.name))?;
         if t.shape != shape {
             bail!(
@@ -138,25 +185,9 @@ fn validate_params(cfg: &ModelConfig, params: &Store) -> Result<()> {
                 cfg.name
             );
         }
+        let leaf = tape.param(t);
+        vars.insert(name, leaf);
     }
-    Ok(())
-}
-
-/// Build the loss graph: returns (tape, loss node, name -> leaf map, metric).
-fn build(
-    cfg: &ModelConfig,
-    params: &Store,
-    batch: &Store,
-) -> Result<(Tape, Var, BTreeMap<String, Var>, Option<f32>)> {
-    if !supports(cfg) {
-        bail!("native model engine does not support family '{}'", cfg.family);
-    }
-    validate_params(cfg, params)?;
-    let mut tape = Tape::new();
-    let vars: BTreeMap<String, Var> = params
-        .iter()
-        .map(|(n, t)| (n.clone(), tape.leaf(t.clone())))
-        .collect();
     let (loss, metric) = if cfg.is_vision() {
         vision::vision_loss(&mut tape, &vars, cfg, batch)?
     } else {
@@ -166,27 +197,41 @@ fn build(
 }
 
 /// Forward only: (loss, optional metric — accuracy for vision/probe).
-pub fn loss_only(cfg: &ModelConfig, params: &Store, batch: &Store) -> Result<(f32, Option<f32>)> {
+pub fn loss_only<P: ParamView>(
+    cfg: &ModelConfig,
+    params: &P,
+    batch: &Store,
+) -> Result<(f32, Option<f32>)> {
     let (tape, loss, _vars, metric) = build(cfg, params, batch)?;
     Ok((tape.value(loss).item(), metric))
 }
 
 /// Forward + full backward: (loss, gradients, optional metric). The
 /// gradient store mirrors the parameter set exactly — parameters a family's
-/// loss does not touch get zero gradients.
-pub fn loss_and_grads(
+/// loss does not touch get zero gradients. Leaf gradients are *moved* out
+/// of the tape (no copy); interior gradients and activations are recycled
+/// into the [`arena`] for the next call.
+pub fn loss_and_grads<P: ParamView>(
     cfg: &ModelConfig,
-    params: &Store,
+    params: &P,
     batch: &Store,
 ) -> Result<(f32, Store, Option<f32>)> {
     let (tape, loss, vars, metric) = build(cfg, params, batch)?;
-    let node_grads = tape.backward(loss);
+    let mut node_grads = tape.backward(loss);
     let mut grads = Store::new();
     for (name, v) in &vars {
-        match &node_grads[v.index()] {
-            Some(g) => grads.insert(name.clone(), g.clone()),
-            None => grads.insert(name.clone(), Tensor::zeros(&params.expect(name).shape)),
+        match node_grads[v.index()].take() {
+            Some(g) => grads.insert(name.clone(), g),
+            None => {
+                let shape = &params.tensor(name).expect("validated in build").shape;
+                grads.insert(name.clone(), Tensor::zeros(shape));
+            }
         }
+    }
+    // what's left are leaf gradients nothing consumed (e.g. the patchify
+    // input's) — return their buffers to the pool
+    for g in node_grads.into_iter().flatten() {
+        arena::recycle(g);
     }
     Ok((tape.value(loss).item(), grads, metric))
 }
@@ -389,6 +434,39 @@ mod tests {
         let mut ucfg = cfg.clone();
         ucfg.family = "rnn".into();
         assert!(loss_only(&ucfg, &params, &text_batch(&cfg, 1, false)).is_err());
+    }
+
+    #[test]
+    fn forward_borrows_params_and_reuses_arena_buffers() {
+        let cfg = text_cfg("bert", 0);
+        let params = Store::det_init(&param_shapes(&cfg), 7);
+        let batch = text_batch(&cfg, 9, false);
+        // 1) zero-copy leaves: the tape's parameter values alias the
+        // Store's tensors (no per-leaf clone anywhere in the forward)
+        {
+            let (tape, _loss, vars, _m) = build(&cfg, &params, &batch).unwrap();
+            for name in ["emb_tok", "L00_q_w", "L01_fc1_w", "final_ln_g"] {
+                let v = vars[name];
+                assert!(
+                    std::ptr::eq(tape.value(v), params.get(name).unwrap()),
+                    "{name} must be borrowed, not copied"
+                );
+            }
+        }
+        // 2) steady state allocates nothing fresh: warm the pool with one
+        // full step, recycle its outputs (exactly what Trainer::train_step
+        // does with the consumed gradient store), then count again
+        if arena::enabled() {
+            arena::clear();
+            let (_l, g1, _m) = loss_and_grads(&cfg, &params, &batch).unwrap();
+            arena::recycle_store(g1);
+            arena::reset_stats();
+            let (_l2, g2, _m2) = loss_and_grads(&cfg, &params, &batch).unwrap();
+            let (fresh, reused) = arena::stats();
+            assert_eq!(fresh, 0, "steady-state step must reuse every pooled buffer");
+            assert!(reused > 0, "the pool must actually be exercised");
+            arena::recycle_store(g2);
+        }
     }
 
     #[test]

@@ -3,17 +3,58 @@
 //!
 //! A [`Tape`] is an append-only arena of nodes; every op evaluates eagerly
 //! (so [`Tape::value`] is always available) and records what it needs for
-//! the reverse sweep (layernorm statistics, attention probabilities).
-//! [`Tape::backward`] walks the arena once in reverse, accumulating
-//! gradients into every node the scalar root depends on — shared leaves
-//! (e.g. the tied `emb_tok` used by both the embedding gather and the LM
-//! head) accumulate from all of their uses automatically.
+//! the reverse sweep (layernorm statistics, attention probabilities, the
+//! fused linear's pre-activation). [`Tape::backward`] walks the arena once
+//! in reverse, accumulating gradients into every node the scalar root
+//! depends on — shared leaves (e.g. the tied `emb_tok` used by both the
+//! embedding gather and the LM head) accumulate from all of their uses
+//! automatically.
+//!
+//! # Invariants
+//!
+//! * **Leaf ownership.** A tape holds two kinds of leaves: *owned* leaves
+//!   ([`Tape::leaf`], for batch-derived tensors and tests) and *borrowed*
+//!   parameter leaves ([`Tape::param`]), which reference the caller's
+//!   tensors for the tape's lifetime `'p` — the forward pass copies **no
+//!   parameter data**. Gradients are always accumulated into fresh owned
+//!   buffers, never into leaves, so borrowed parameters are read-only
+//!   throughout.
+//! * **Topological replay order.** Nodes are appended in evaluation order
+//!   and ops only ever reference earlier nodes, so arena order *is* a
+//!   topological order; `backward` is a single reverse walk with no
+//!   worklist, and each node's gradient is complete when the walk reaches
+//!   it.
+//! * **Buffer recycling.** Owned node values and saved backward state are
+//!   returned to the thread-local [`arena`](crate::tensor::arena) when the
+//!   tape drops, and `backward` recycles every intermediate gradient as
+//!   soon as its last consumer has run. A buffer is recycled only once its
+//!   owner dies — never while a [`Var`] can still observe it — so
+//!   [`Tape::value`] results stay valid for the tape's whole life.
+//!   Borrowed leaves are never recycled (the caller owns them).
 //!
 //! Activations are kept 2-D throughout: a transformer stream is flattened
 //! to `(batch * seq, dim)` and the attention op carries the
 //! (batch, heads, s_q, s_k) layout in its [`AttnShape`].
+//!
+//! ```
+//! use ligo::model::tape::Tape;
+//! use ligo::tensor::Tensor;
+//!
+//! let w = Tensor::from_f32(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+//! let b = Tensor::from_f32(&[2], vec![0.5, -0.5]);
+//! let mut tape = Tape::new();
+//! let x = tape.leaf(Tensor::from_f32(&[1, 2], vec![2.0, 3.0]));
+//! let wv = tape.param(&w); // borrowed: no copy of w
+//! let bv = tape.param(&b);
+//! let y = tape.linear_bias(x, wv, bv); // fused x @ w^T + b
+//! assert_eq!(tape.value(y).f32s(), &[2.5, 2.5]);
+//! let loss = tape.masked_xent(y, vec![0]);
+//! let grads = tape.backward(loss);
+//! assert!(grads[wv.index()].is_some(), "params receive gradients");
+//! ```
 
-use crate::tensor::ops::{self, AttnShape};
+use crate::tensor::arena;
+use crate::tensor::ops::{self, Act, AttnShape};
 use crate::tensor::Tensor;
 
 /// Handle to a tape node.
@@ -27,11 +68,19 @@ impl Var {
     }
 }
 
+/// A node's forward value: computed (owned) or a borrowed parameter leaf.
+enum Value<'p> {
+    Owned(Tensor),
+    Borrowed(&'p Tensor),
+}
+
 enum Op {
     Leaf,
-    /// y = x @ w^T — dense layer on (out, in)-stored weights, no bias.
-    Linear { x: Var, w: Var },
-    /// y = x + b with b broadcast over rows.
+    /// y = act(x @ w^T + b) — the fused dense layer on (out, in)-stored
+    /// weights; `b` and the activation are optional. `pre` saves the
+    /// pre-activation when `act` needs it for the backward (GELU).
+    Linear { x: Var, w: Var, b: Option<Var>, act: Act, pre: Option<Tensor> },
+    /// y = x + b with b broadcast over rows (the unfused bias path).
     AddRow { x: Var, b: Var },
     /// y = a + b, same shape.
     Add { a: Var, b: Var },
@@ -56,18 +105,19 @@ enum Op {
     MaskedXent { logits: Var, labels: Vec<i32>, count: f32 },
 }
 
-struct Node {
-    value: Tensor,
+struct Node<'p> {
+    value: Value<'p>,
     op: Op,
 }
 
 /// The autodiff arena. See the module docs.
 #[derive(Default)]
-pub struct Tape {
-    nodes: Vec<Node>,
+pub struct Tape<'p> {
+    nodes: Vec<Node<'p>>,
 }
 
-/// Accumulate `t` into an optional gradient slot.
+/// Accumulate `t` into an optional gradient slot; an already-occupied slot
+/// consumes (and recycles) `t`.
 fn acc(slot: &mut Option<Tensor>, t: Tensor) {
     match slot {
         Some(a) => {
@@ -75,6 +125,7 @@ fn acc(slot: &mut Option<Tensor>, t: Tensor) {
             for (x, y) in a.f32s_mut().iter_mut().zip(t.f32s()) {
                 *x += y;
             }
+            arena::recycle(t);
         }
         None => *slot = Some(t),
     }
@@ -92,8 +143,8 @@ fn col_sums(g: &Tensor) -> Vec<f32> {
     out
 }
 
-impl Tape {
-    pub fn new() -> Tape {
+impl<'p> Tape<'p> {
+    pub fn new() -> Tape<'p> {
         Tape::default()
     }
 
@@ -107,24 +158,63 @@ impl Tape {
 
     /// The (eagerly computed) value of a node.
     pub fn value(&self, v: Var) -> &Tensor {
-        &self.nodes[v.0].value
+        match &self.nodes[v.0].value {
+            Value::Owned(t) => t,
+            Value::Borrowed(t) => t,
+        }
     }
 
     fn push(&mut self, value: Tensor, op: Op) -> Var {
-        self.nodes.push(Node { value, op });
+        self.nodes.push(Node { value: Value::Owned(value), op });
         Var(self.nodes.len() - 1)
     }
 
-    /// A constant or parameter input node.
+    /// An owned constant/input leaf (batch-derived tensors, tests).
     pub fn leaf(&mut self, t: Tensor) -> Var {
         self.push(t, Op::Leaf)
+    }
+
+    /// A borrowed parameter leaf: the tape references `t` for its lifetime
+    /// instead of copying it. Gradients still land in owned buffers.
+    pub fn param(&mut self, t: &'p Tensor) -> Var {
+        self.nodes.push(Node { value: Value::Borrowed(t), op: Op::Leaf });
+        Var(self.nodes.len() - 1)
+    }
+
+    /// Shared lowering of the linear family: one fused node when the fused
+    /// kernel is enabled, the unfused linear/add/GELU chain otherwise.
+    fn linear_node(&mut self, x: Var, w: Var, b: Option<Var>, act: Act) -> Var {
+        if ops::fused_enabled() {
+            let bias = b.map(|bv| self.value(bv));
+            let (y, pre) = ops::linear_fused(self.value(x), self.value(w), bias, act);
+            return self.push(y, Op::Linear { x, w, b, act, pre });
+        }
+        let y = ops::matmul_nt(self.value(x), self.value(w));
+        let mut out = self.push(y, Op::Linear { x, w, b: None, act: Act::None, pre: None });
+        if let Some(bv) = b {
+            out = self.add_row(out, bv);
+        }
+        if act == Act::Gelu {
+            out = self.gelu(out);
+        }
+        out
     }
 
     /// y = x @ w^T for x (n, in) and w (out, in) — the y = W x convention
     /// every stored projection uses.
     pub fn linear(&mut self, x: Var, w: Var) -> Var {
-        let y = ops::matmul_nt(self.value(x), self.value(w));
-        self.push(y, Op::Linear { x, w })
+        self.linear_node(x, w, None, Act::None)
+    }
+
+    /// y = x @ w^T + b, fused ([`ops::linear_fused`]).
+    pub fn linear_bias(&mut self, x: Var, w: Var, b: Var) -> Var {
+        self.linear_node(x, w, Some(b), Act::None)
+    }
+
+    /// y = gelu(x @ w^T + b), fused — the transformer FFN's first half in
+    /// one kernel pass.
+    pub fn linear_bias_gelu(&mut self, x: Var, w: Var, b: Var) -> Var {
+        self.linear_node(x, w, Some(b), Act::Gelu)
     }
 
     /// y = x + b with the bias broadcast over rows.
@@ -132,7 +222,7 @@ impl Tape {
         let (xv, bv) = (self.value(x), self.value(b));
         let d = xv.shape[1];
         assert_eq!(bv.numel(), d, "add_row bias dim");
-        let mut out = xv.clone();
+        let mut out = Tensor::from_f32(&xv.shape, arena::alloc_copy(xv.f32s()));
         for row in out.f32s_mut().chunks_exact_mut(d) {
             for (o, &bb) in row.iter_mut().zip(bv.f32s()) {
                 *o += bb;
@@ -153,7 +243,7 @@ impl Tape {
         let (xv, tv) = (self.value(x), self.value(t));
         let (s, d) = (tv.shape[0], tv.shape[1]);
         assert_eq!(xv.shape, vec![reps * s, d], "add_tiled shapes");
-        let mut out = xv.clone();
+        let mut out = Tensor::from_f32(&xv.shape, arena::alloc_copy(xv.f32s()));
         let tvv = tv.f32s();
         for block in out.f32s_mut().chunks_exact_mut(s * d) {
             for (o, &tt) in block.iter_mut().zip(tvv) {
@@ -168,7 +258,7 @@ impl Tape {
         let (xv, vv) = (self.value(x), self.value(v));
         let d = xv.shape[1];
         assert_eq!(vv.numel(), d, "mul_row vector dim");
-        let mut out = xv.clone();
+        let mut out = Tensor::from_f32(&xv.shape, arena::alloc_copy(xv.f32s()));
         for row in out.f32s_mut().chunks_exact_mut(d) {
             for (o, &m) in row.iter_mut().zip(vv.f32s()) {
                 *o *= m;
@@ -281,36 +371,60 @@ impl Tape {
 
     /// Reverse sweep from the scalar `root`. Returns one gradient slot per
     /// node (None for nodes the root does not depend on); leaf slots hold
-    /// the parameter gradients.
+    /// the parameter gradients. Intermediate gradients are recycled into
+    /// the arena as soon as their last consumer has run.
     pub fn backward(&self, root: Var) -> Vec<Option<Tensor>> {
-        assert_eq!(self.nodes[root.0].value.numel(), 1, "backward root must be scalar");
+        assert_eq!(self.value(root).numel(), 1, "backward root must be scalar");
         let mut grads: Vec<Option<Tensor>> = (0..self.nodes.len()).map(|_| None).collect();
         grads[root.0] = Some(Tensor::scalar_f32(1.0));
         for i in (0..=root.0).rev() {
             let Some(gout) = grads[i].take() else { continue };
-            match &self.nodes[i].op {
+            // arms that fully consume `gout` return None; the rest hand it
+            // back for recycling
+            let leftover: Option<Tensor> = match &self.nodes[i].op {
                 Op::Leaf => {
                     grads[i] = Some(gout);
+                    None
                 }
-                Op::Linear { x, w } => {
-                    let dx = ops::matmul(&gout, self.value(*w));
-                    let dw = ops::matmul(&ops::transpose(&gout), self.value(*x));
+                Op::Linear { x, w, b, act, pre } => {
+                    let dy = match act {
+                        Act::Gelu => {
+                            let z = pre.as_ref().expect("fused GELU saves its pre-activation");
+                            let d = ops::gelu_bwd(z, &gout);
+                            arena::recycle(gout);
+                            d
+                        }
+                        Act::None => gout,
+                    };
+                    if let Some(bv) = b {
+                        let db = Tensor::from_f32(&self.value(*bv).shape, col_sums(&dy));
+                        acc(&mut grads[bv.0], db);
+                    }
+                    let dx = ops::matmul(&dy, self.value(*w));
+                    let dyt = ops::transpose(&dy);
+                    let dw = ops::matmul(&dyt, self.value(*x));
+                    arena::recycle(dyt);
+                    arena::recycle(dy);
                     acc(&mut grads[x.0], dx);
                     acc(&mut grads[w.0], dw);
+                    None
                 }
                 Op::AddRow { x, b } => {
                     let db = Tensor::from_f32(&self.value(*b).shape, col_sums(&gout));
                     acc(&mut grads[b.0], db);
                     acc(&mut grads[x.0], gout);
+                    None
                 }
                 Op::Add { a, b } => {
-                    acc(&mut grads[a.0], gout.clone());
+                    let ga = Tensor::from_f32(&gout.shape, arena::alloc_copy(gout.f32s()));
+                    acc(&mut grads[a.0], ga);
                     acc(&mut grads[b.0], gout);
+                    None
                 }
                 Op::AddTiled { x, t, reps } => {
                     let tshape = self.value(*t).shape.clone();
                     let block = tshape[0] * tshape[1];
-                    let mut dt = vec![0.0f32; block];
+                    let mut dt = arena::alloc_zeroed(block);
                     for rep in 0..*reps {
                         let src = &gout.f32s()[rep * block..(rep + 1) * block];
                         for (a, &v) in dt.iter_mut().zip(src) {
@@ -319,16 +433,11 @@ impl Tape {
                     }
                     acc(&mut grads[t.0], Tensor::from_f32(&tshape, dt));
                     acc(&mut grads[x.0], gout);
+                    None
                 }
                 Op::MulRow { x, v } => {
                     let (xv, vv) = (self.value(*x), self.value(*v));
                     let d = xv.shape[1];
-                    let mut dx = gout.clone();
-                    for row in dx.f32s_mut().chunks_exact_mut(d) {
-                        for (o, &m) in row.iter_mut().zip(vv.f32s()) {
-                            *o *= m;
-                        }
-                    }
                     let mut dv = vec![0.0f32; d];
                     let rows = gout.f32s().chunks_exact(d).zip(xv.f32s().chunks_exact(d));
                     for (grow, xrow) in rows {
@@ -336,12 +445,21 @@ impl Tape {
                             *a += gg * xx;
                         }
                     }
+                    // reuse gout's buffer as dx = gout * v (row-broadcast)
+                    let mut dx = gout;
+                    for row in dx.f32s_mut().chunks_exact_mut(d) {
+                        for (o, &m) in row.iter_mut().zip(vv.f32s()) {
+                            *o *= m;
+                        }
+                    }
                     acc(&mut grads[x.0], dx);
                     acc(&mut grads[v.0], Tensor::from_f32(&vv.shape, dv));
+                    None
                 }
                 Op::Gelu { x } => {
                     let dx = ops::gelu_bwd(self.value(*x), &gout);
                     acc(&mut grads[x.0], dx);
+                    Some(gout)
                 }
                 Op::LayerNorm { x, g, b, stats } => {
                     let (dx, dg, db) =
@@ -349,6 +467,7 @@ impl Tape {
                     acc(&mut grads[x.0], dx);
                     acc(&mut grads[g.0], dg);
                     acc(&mut grads[b.0], db);
+                    Some(gout)
                 }
                 Op::Attention { q, k, v, sh, probs } => {
                     let (dq, dk, dv) = ops::attention_bwd(
@@ -362,11 +481,12 @@ impl Tape {
                     acc(&mut grads[q.0], dq);
                     acc(&mut grads[k.0], dk);
                     acc(&mut grads[v.0], dv);
+                    Some(gout)
                 }
                 Op::Gather { emb, ids } => {
                     let eshape = self.value(*emb).shape.clone();
                     let d = eshape[1];
-                    let mut de = vec![0.0f32; eshape[0] * d];
+                    let mut de = arena::alloc_zeroed(eshape[0] * d);
                     for (i_row, &id) in ids.iter().enumerate() {
                         let dst = &mut de[id as usize * d..(id as usize + 1) * d];
                         let src = &gout.f32s()[i_row * d..(i_row + 1) * d];
@@ -375,16 +495,18 @@ impl Tape {
                         }
                     }
                     acc(&mut grads[emb.0], Tensor::from_f32(&eshape, de));
+                    Some(gout)
                 }
                 Op::BroadcastRow { v, reps: _ } => {
                     let dv = Tensor::from_f32(&self.value(*v).shape, col_sums(&gout));
                     acc(&mut grads[v.0], dv);
+                    Some(gout)
                 }
                 Op::ConcatSeq { a, b, batch, sa, sb } => {
                     let d = gout.shape[1];
                     let gv = gout.f32s();
-                    let mut da = vec![0.0f32; batch * sa * d];
-                    let mut db = vec![0.0f32; batch * sb * d];
+                    let mut da = arena::alloc_zeroed(batch * sa * d);
+                    let mut db = arena::alloc_zeroed(batch * sb * d);
                     for bi in 0..*batch {
                         let base = bi * (sa + sb) * d;
                         da[bi * sa * d..(bi + 1) * sa * d]
@@ -394,20 +516,22 @@ impl Tape {
                     }
                     acc(&mut grads[a.0], Tensor::from_f32(&[batch * sa, d], da));
                     acc(&mut grads[b.0], Tensor::from_f32(&[batch * sb, d], db));
+                    Some(gout)
                 }
                 Op::SeqFirst { x, batch, s } => {
                     let d = gout.shape[1];
-                    let mut dx = vec![0.0f32; batch * s * d];
+                    let mut dx = arena::alloc_zeroed(batch * s * d);
                     for bi in 0..*batch {
                         dx[bi * s * d..bi * s * d + d]
                             .copy_from_slice(&gout.f32s()[bi * d..(bi + 1) * d]);
                     }
                     acc(&mut grads[x.0], Tensor::from_f32(&[batch * s, d], dx));
+                    Some(gout)
                 }
                 Op::SeqMean { x, batch, s } => {
                     let d = gout.shape[1];
                     let inv = 1.0 / *s as f32;
-                    let mut dx = vec![0.0f32; batch * s * d];
+                    let mut dx = arena::alloc_zeroed(batch * s * d);
                     for bi in 0..*batch {
                         let grow = &gout.f32s()[bi * d..(bi + 1) * d];
                         for r in 0..*s {
@@ -418,15 +542,38 @@ impl Tape {
                         }
                     }
                     acc(&mut grads[x.0], Tensor::from_f32(&[batch * s, d], dx));
+                    Some(gout)
                 }
                 Op::MaskedXent { logits, labels, count } => {
                     let dl =
                         ops::masked_xent_bwd(self.value(*logits), labels, *count, gout.item());
                     acc(&mut grads[logits.0], dl);
+                    Some(gout)
                 }
+            };
+            if let Some(g) = leftover {
+                arena::recycle(g);
             }
         }
         grads
+    }
+}
+
+impl Drop for Tape<'_> {
+    /// Recycle every owned node value and all saved backward state into
+    /// the thread-local arena (borrowed leaves belong to the caller).
+    fn drop(&mut self) {
+        for node in self.nodes.drain(..) {
+            if let Value::Owned(t) = node.value {
+                arena::recycle(t);
+            }
+            match node.op {
+                Op::Attention { probs, .. } => arena::recycle(probs),
+                Op::Linear { pre: Some(z), .. } => arena::recycle(z),
+                Op::LayerNorm { stats, .. } => arena::recycle_buf(stats),
+                _ => {}
+            }
+        }
     }
 }
 
@@ -555,5 +702,84 @@ mod tests {
         let grads = tape.backward(loss);
         assert!(grads[cls.index()].is_some(), "cls leaf must receive gradient");
         assert!(grads[patches.index()].is_some());
+    }
+
+    #[test]
+    fn param_leaves_borrow_without_copying() {
+        let w = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let mut tape = Tape::new();
+        let wv = tape.param(&w);
+        // the tape's view *is* the caller's tensor — same allocation
+        assert!(std::ptr::eq(tape.value(wv), &w), "param leaf must borrow, not copy");
+        // and borrowed leaves still get owned gradients
+        let x = tape.leaf(Tensor::from_f32(&[1, 3], vec![1.0, 0.0, -1.0]));
+        let y = tape.linear(x, wv);
+        let loss = tape.masked_xent(y, vec![1]);
+        let grads = tape.backward(loss);
+        let gw = grads[wv.index()].as_ref().expect("borrowed leaf gradient");
+        assert_eq!(gw.shape, w.shape);
+        assert!(!std::ptr::eq(gw, &w));
+    }
+
+    /// Fused linear_bias_gelu against the unfused chain: same value to
+    /// ≤1e-5 relative, and the fused backward passes the FD check.
+    #[test]
+    fn fused_linear_matches_unfused_and_fd() {
+        let mut rng = Rng::new(23);
+        let x0 = rand_t(&[4, 6], &mut rng);
+        let w0 = rand_t(&[5, 6], &mut rng);
+        let b0 = rand_t(&[5], &mut rng);
+        let labels = vec![0, 3, -1, 4];
+        let run = |fused: bool, xs: &Tensor, ws: &Tensor, bs: &Tensor| {
+            ops::set_fused_override(Some(fused));
+            let mut tape = Tape::new();
+            let x = tape.leaf(xs.clone());
+            let w = tape.param(ws);
+            let b = tape.param(bs);
+            let y = tape.linear_bias_gelu(x, w, b);
+            let yv = tape.value(y).clone();
+            let loss = tape.masked_xent(y, labels.clone());
+            let l = tape.value(loss).item();
+            let grads = tape.backward(loss);
+            let gw = grads[w.index()].as_ref().unwrap().clone();
+            let gb = grads[b.index()].as_ref().unwrap().clone();
+            ops::set_fused_override(None);
+            (yv, l, gw, gb)
+        };
+        let (yf, lf, gwf, gbf) = run(true, &x0, &w0, &b0);
+        let (yu, lu, gwu, gbu) = run(false, &x0, &w0, &b0);
+        for (a, b) in yf.f32s().iter().zip(yu.f32s()) {
+            let rel = (a - b).abs() / a.abs().max(b.abs()).max(1.0);
+            assert!(rel <= 1e-5, "fused {a} vs unfused {b}");
+        }
+        assert!((lf - lu).abs() <= 1e-5 * lf.abs().max(1.0), "{lf} vs {lu}");
+        for (a, b) in gwf.f32s().iter().zip(gwu.f32s()) {
+            assert!((a - b).abs() <= 1e-5 * a.abs().max(b.abs()).max(1.0), "{a} vs {b}");
+        }
+        for (a, b) in gbf.f32s().iter().zip(gbu.f32s()) {
+            assert!((a - b).abs() <= 1e-5 * a.abs().max(b.abs()).max(1.0), "{a} vs {b}");
+        }
+        // FD on the fused backward (weight + bias entries)
+        let eps = 1e-2f32;
+        for i in 0..w0.numel() {
+            let mut p = w0.clone();
+            p.f32s_mut()[i] += eps;
+            let mut m = w0.clone();
+            m.f32s_mut()[i] -= eps;
+            let fd = (run(true, &x0, &p, &b0).1 - run(true, &x0, &m, &b0).1) / (2.0 * eps);
+            let a = gwf.f32s()[i];
+            let rel = (a - fd).abs() / a.abs().max(fd.abs()).max(1.0);
+            assert!(rel < 1e-3, "dw[{i}]: analytic {a} vs fd {fd}");
+        }
+        for i in 0..b0.numel() {
+            let mut p = b0.clone();
+            p.f32s_mut()[i] += eps;
+            let mut m = b0.clone();
+            m.f32s_mut()[i] -= eps;
+            let fd = (run(true, &x0, &w0, &p).1 - run(true, &x0, &w0, &m).1) / (2.0 * eps);
+            let a = gbf.f32s()[i];
+            let rel = (a - fd).abs() / a.abs().max(fd.abs()).max(1.0);
+            assert!(rel < 1e-3, "db[{i}]: analytic {a} vs fd {fd}");
+        }
     }
 }

@@ -18,7 +18,7 @@ use super::{accuracy, var};
 /// One pre-LN transformer block on the flattened (batch*s, d) stream.
 /// `layerscale` enables the CaiT per-module scales (`ls1`/`ls2`).
 pub(super) fn preln_block(
-    tape: &mut Tape,
+    tape: &mut Tape<'_>,
     vars: &BTreeMap<String, Var>,
     prefix: &str,
     x: Var,
@@ -33,27 +33,23 @@ pub(super) fn preln_block(
     let q = {
         let w = var(vars, &format!("{prefix}q_w"))?;
         let b = var(vars, &format!("{prefix}q_b"))?;
-        let p = tape.linear(h, w);
-        tape.add_row(p, b)
+        tape.linear_bias(h, w, b)
     };
     let k = {
         let w = var(vars, &format!("{prefix}k_w"))?;
         let b = var(vars, &format!("{prefix}k_b"))?;
-        let p = tape.linear(h, w);
-        tape.add_row(p, b)
+        tape.linear_bias(h, w, b)
     };
     let v = {
         let w = var(vars, &format!("{prefix}v_w"))?;
         let b = var(vars, &format!("{prefix}v_b"))?;
-        let p = tape.linear(h, w);
-        tape.add_row(p, b)
+        tape.linear_bias(h, w, b)
     };
     let att = tape.attention(q, k, v, sh);
     let mut o = {
         let w = var(vars, &format!("{prefix}o_w"))?;
         let b = var(vars, &format!("{prefix}o_b"))?;
-        let p = tape.linear(att, w);
-        tape.add_row(p, b)
+        tape.linear_bias(att, w, b)
     };
     if layerscale {
         o = tape.mul_row(o, var(vars, &format!("{prefix}ls1"))?);
@@ -64,18 +60,16 @@ pub(super) fn preln_block(
         let b = var(vars, &format!("{prefix}ln2_b"))?;
         tape.layernorm(x, g, b)
     };
-    let f = {
+    // FFN: fc1 + bias + GELU run as one fused kernel pass
+    let a = {
         let w = var(vars, &format!("{prefix}fc1_w"))?;
         let b = var(vars, &format!("{prefix}fc1_b"))?;
-        let p = tape.linear(h2, w);
-        tape.add_row(p, b)
+        tape.linear_bias_gelu(h2, w, b)
     };
-    let a = tape.gelu(f);
     let mut f2 = {
         let w = var(vars, &format!("{prefix}fc2_w"))?;
         let b = var(vars, &format!("{prefix}fc2_b"))?;
-        let p = tape.linear(a, w);
-        tape.add_row(p, b)
+        tape.linear_bias(a, w, b)
     };
     if layerscale {
         f2 = tape.mul_row(f2, var(vars, &format!("{prefix}ls2"))?);
@@ -87,7 +81,7 @@ pub(super) fn preln_block(
 /// linear probe head when the config declares `n_classes`. Returns the loss
 /// node and the optional accuracy metric.
 pub(super) fn text_loss(
-    tape: &mut Tape,
+    tape: &mut Tape<'_>,
     vars: &BTreeMap<String, Var>,
     cfg: &ModelConfig,
     batch: &Store,
@@ -137,8 +131,7 @@ pub(super) fn text_loss(
         let logits = {
             let w = var(vars, "head_w")?;
             let bb = var(vars, "head_b")?;
-            let p = tape.linear(pooled, w);
-            tape.add_row(p, bb)
+            tape.linear_bias(pooled, w, bb)
         };
         let lbl = labels.i32s().to_vec();
         if let Some(&bad) = lbl.iter().find(|&&l| l >= cfg.n_classes as i32) {
@@ -157,8 +150,7 @@ pub(super) fn text_loss(
         }
         let logits = {
             let mb = var(vars, "mlm_bias")?;
-            let p = tape.linear(xf, emb_tok); // tied LM head
-            tape.add_row(p, mb)
+            tape.linear_bias(xf, emb_tok, mb) // tied LM head
         };
         let loss = tape.masked_xent(logits, lbl);
         Ok((loss, None))

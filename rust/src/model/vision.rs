@@ -49,7 +49,7 @@ pub(super) fn patchify(images: &Tensor, patch: usize) -> Tensor {
 /// (mirrors the python `_class_attn_block`).
 #[allow(clippy::too_many_arguments)]
 fn class_attn_block(
-    tape: &mut Tape,
+    tape: &mut Tape<'_>,
     vars: &BTreeMap<String, Var>,
     prefix: &str,
     cls: Var,
@@ -66,28 +66,24 @@ fn class_attn_block(
     let q = {
         let w = var(vars, &format!("{prefix}q_w"))?;
         let b = var(vars, &format!("{prefix}q_b"))?;
-        let p = tape.linear(hq, w);
-        tape.add_row(p, b)
+        tape.linear_bias(hq, w, b)
     };
     let k = {
         let w = var(vars, &format!("{prefix}k_w"))?;
         let b = var(vars, &format!("{prefix}k_b"))?;
-        let p = tape.linear(hkv, w);
-        tape.add_row(p, b)
+        tape.linear_bias(hkv, w, b)
     };
     let v = {
         let w = var(vars, &format!("{prefix}v_w"))?;
         let b = var(vars, &format!("{prefix}v_b"))?;
-        let p = tape.linear(hkv, w);
-        tape.add_row(p, b)
+        tape.linear_bias(hkv, w, b)
     };
     let sh = AttnShape { batch, heads, s_q: 1, s_k: t + 1, causal: false };
     let att = tape.attention(q, k, v, sh);
     let o = {
         let w = var(vars, &format!("{prefix}o_w"))?;
         let b = var(vars, &format!("{prefix}o_b"))?;
-        let p = tape.linear(att, w);
-        tape.add_row(p, b)
+        tape.linear_bias(att, w, b)
     };
     let cls = tape.add(cls, o);
     let h2 = {
@@ -95,25 +91,23 @@ fn class_attn_block(
         let b = var(vars, &format!("{prefix}ln2_b"))?;
         tape.layernorm(cls, g, b)
     };
-    let f = {
+    // FFN: fc1 + bias + GELU in one fused pass
+    let a = {
         let w = var(vars, &format!("{prefix}fc1_w"))?;
         let b = var(vars, &format!("{prefix}fc1_b"))?;
-        let p = tape.linear(h2, w);
-        tape.add_row(p, b)
+        tape.linear_bias_gelu(h2, w, b)
     };
-    let a = tape.gelu(f);
     let f2 = {
         let w = var(vars, &format!("{prefix}fc2_w"))?;
         let b = var(vars, &format!("{prefix}fc2_b"))?;
-        let p = tape.linear(a, w);
-        tape.add_row(p, b)
+        tape.linear_bias(a, w, b)
     };
     Ok(tape.add(cls, f2))
 }
 
 /// Image-classification loss + accuracy for ViT/CaiT.
 pub(super) fn vision_loss(
-    tape: &mut Tape,
+    tape: &mut Tape<'_>,
     vars: &BTreeMap<String, Var>,
     cfg: &ModelConfig,
     batch: &Store,
@@ -146,8 +140,7 @@ pub(super) fn vision_loss(
     let x = {
         let w = var(vars, "emb_patch_w")?;
         let bb = var(vars, "emb_patch_b")?;
-        let p = tape.linear(pv, w);
-        tape.add_row(p, bb)
+        tape.linear_bias(pv, w, bb)
     };
     let emb_cls = var(vars, "emb_cls")?;
     let pos = var(vars, "emb_pos")?;
@@ -197,8 +190,7 @@ pub(super) fn vision_loss(
     let logits = {
         let w = var(vars, "head_w")?;
         let bb = var(vars, "head_b")?;
-        let p = tape.linear(rep, w);
-        tape.add_row(p, bb)
+        tape.linear_bias(rep, w, bb)
     };
     let lbl = labels.i32s().to_vec();
     if let Some(&bad) = lbl.iter().find(|&&l| l >= cfg.n_classes as i32) {

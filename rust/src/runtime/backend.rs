@@ -1,7 +1,7 @@
 //! The pluggable runtime backend: everything that turns an AOT artifact
 //! (HLO text + manifest) into something executable lives behind [`Backend`],
 //! so the coordinator, trainer and growth manager compile and run without
-//! XLA. The PJRT implementation (feature `pjrt`) is in [`super::pjrt`]; the
+//! XLA. The PJRT implementation (feature `pjrt`) is in `super::pjrt`; the
 //! default build installs [`super::native::NativeBackend`], which
 //! *synthesizes* `fwd_*`/`grad_*` executables from the preset table via the
 //! in-crate transformer engine. [`NullBackend`] remains as the inert

@@ -7,9 +7,14 @@
 //! checkout.
 //!
 //! The synthesized manifests use the exact group/name convention of the AOT
-//! ones ("params/<tensor>", "batch/tokens", outputs "loss"[, "metric"],
-//! "grads/<tensor>"), so [`super::Executable`]'s binding, validation and
+//! ones (`params/<tensor>`, `batch/tokens`, outputs `loss`[, `metric`],
+//! `grads/<tensor>`), so [`super::Executable`]'s binding, validation and
 //! scatter logic is shared verbatim between the two worlds.
+//!
+//! Parameter inputs are bound **zero-copy**: the engine hands the
+//! positional `&Tensor`s to the model as a borrowed [`model::ParamView`]
+//! map, and the tape takes them as borrowed leaves — a `grad_bert_base`
+//! call copies no parameter bytes on its way in.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -129,16 +134,21 @@ impl ExecEngine for NativeEngine {
                 self.inputs.len()
             );
         }
-        let mut params = Store::new();
+        // Parameters bind zero-copy: the model engine borrows them straight
+        // into the tape through `model::ParamView`. Only the (small) batch
+        // tensors are materialized as an owned Store.
+        let mut params: BTreeMap<&str, &Tensor> = BTreeMap::new();
         let mut batch = Store::new();
         for (sp, t) in self.inputs.iter().zip(inputs) {
             match sp.group() {
-                "params" => params.insert(sp.key(), (*t).clone()),
+                "params" => {
+                    params.insert(sp.key(), *t);
+                }
                 "batch" => batch.insert(sp.key(), (*t).clone()),
                 other => bail!("native engine: unexpected input group '{other}'"),
             }
         }
-        let (loss, grads, metric) = match self.kind {
+        let (loss, mut grads, metric) = match self.kind {
             Kind::Fwd => {
                 let (l, m) = model::loss_only(&self.cfg, &params, &batch)?;
                 (l, None, m)
@@ -155,14 +165,19 @@ impl ExecEngine for NativeEngine {
             } else if sp.name == "metric" {
                 out.push(Tensor::scalar_f32(metric.unwrap_or(f32::NAN)));
             } else if sp.group() == "grads" {
+                // move, don't clone: the grad store is ours and each key
+                // scatters exactly once
                 let g = grads
-                    .as_ref()
-                    .and_then(|g| g.get(sp.key()))
+                    .as_mut()
+                    .and_then(|g| g.remove(sp.key()))
                     .with_context(|| format!("native engine: no gradient for '{}'", sp.name))?;
-                out.push(g.clone());
+                out.push(g);
             } else {
                 bail!("native engine: unknown output '{}'", sp.name);
             }
+        }
+        if let Some(rest) = grads {
+            crate::tensor::arena::recycle_store(rest);
         }
         Ok(out)
     }

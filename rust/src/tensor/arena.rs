@@ -1,0 +1,265 @@
+//! Thread-local f32 buffer arena — activation/gradient recycling for the
+//! native engine's hot loop.
+//!
+//! Every forward/backward over the tape (and every growth expansion)
+//! produces a burst of short-lived `Vec<f32>` buffers of the *same* size
+//! multiset step after step. Instead of round-tripping each one through the
+//! allocator (malloc + page-zeroing per microbatch), the tensor kernels
+//! draw buffers from this pool ([`alloc_zeroed`], [`alloc_copy`],
+//! [`alloc_scratch`]) and the owners hand them back when a tape or a
+//! gradient store dies
+//! ([`recycle`], [`recycle_store`], [`recycle_buf`]). Between two
+//! `Trainer::train_step` calls the pool therefore holds about one step's
+//! worth of buffers and the steady state allocates nothing fresh (asserted
+//! by `model::tests::forward_borrows_params_and_reuses_arena_buffers`);
+//! the pool is hard-capped by count *and* bytes, so buffers that flow in
+//! from outside the arena (plain-allocated tensors are pooled too) cannot
+//! grow it without bound.
+//!
+//! The pool is **thread-local**: the coordinator, the native engine and the
+//! growth manager all run their allocating code on the calling thread (the
+//! `util::par` workers only fill caller-owned buffers), so no locking is
+//! needed and tests stay isolated. Best-fit matching (smallest sufficient
+//! capacity) keeps a heterogeneous multiset reusable in any request order.
+//!
+//! Knob: `LIGO_ARENA=0` disables pooling (every request is a fresh
+//! allocation, every recycle a plain drop) for A/B runs — see
+//! EXPERIMENTS.md. Correctness never depends on the pool: a recycled
+//! buffer is resized and re-zeroed before it is handed out again.
+
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+use super::{Tensor, TensorData};
+use crate::tensor::store::Store;
+
+/// Pool count bound: buffers past this are dropped on recycle instead of
+/// pooled (a runaway guard; one train step needs far fewer).
+const MAX_POOLED: usize = 1024;
+
+/// Pool byte bound (256 MiB): recycling drops buffers that would push the
+/// pooled total past this, so a long run's steady-state memory is capped
+/// even when more buffers flow in (plain-allocated tensors are accepted
+/// into the pool too) than the kernels draw out.
+const MAX_POOLED_BYTES: usize = 256 << 20;
+
+#[derive(Default)]
+struct Pool {
+    free: Vec<Vec<f32>>,
+    bytes: usize,
+    fresh: u64,
+    reused: u64,
+}
+
+/// Best-fit extraction: the smallest pooled buffer with capacity >= n.
+fn take_fit(pool: &mut Pool, n: usize) -> Option<Vec<f32>> {
+    let mut best: Option<(usize, usize)> = None;
+    for (i, b) in pool.free.iter().enumerate() {
+        let cap = b.capacity();
+        let better = match best {
+            None => true,
+            Some((_, best_cap)) => cap < best_cap,
+        };
+        if cap >= n && better {
+            best = Some((i, cap));
+            if cap == n {
+                break;
+            }
+        }
+    }
+    best.map(|(i, cap)| {
+        pool.bytes -= cap * 4;
+        pool.free.swap_remove(i)
+    })
+}
+
+thread_local! {
+    static POOL: RefCell<Pool> = RefCell::new(Pool::default());
+}
+
+/// Pool enabled unless `LIGO_ARENA=0` (read once per process).
+pub fn enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| !matches!(std::env::var("LIGO_ARENA").as_deref(), Ok("0")))
+}
+
+/// A zeroed f32 buffer of length `n`: best-fit reuse from the pool when
+/// possible, fresh allocation otherwise. Counted in [`stats`].
+pub fn alloc_zeroed(n: usize) -> Vec<f32> {
+    if !enabled() || n == 0 {
+        return vec![0.0; n];
+    }
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        match take_fit(&mut pool, n) {
+            Some(mut b) => {
+                b.clear();
+                b.resize(n, 0.0);
+                pool.reused += 1;
+                b
+            }
+            None => {
+                pool.fresh += 1;
+                vec![0.0; n]
+            }
+        }
+    })
+}
+
+/// A pool-backed buffer of length `n` with **unspecified contents** (stale
+/// f32 values from a previous use; zeros when freshly allocated) — for
+/// consumers that overwrite every element before reading, e.g. the packed
+/// transpose scratch. Skips the re-zeroing pass [`alloc_zeroed`] pays on
+/// reuse. Counted in [`stats`].
+pub fn alloc_scratch(n: usize) -> Vec<f32> {
+    if !enabled() || n == 0 {
+        return vec![0.0; n];
+    }
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        match take_fit(&mut pool, n) {
+            Some(mut b) => {
+                if b.len() >= n {
+                    b.truncate(n); // keep stale values: caller overwrites all
+                } else {
+                    b.resize(n, 0.0); // only the tail is written here
+                }
+                pool.reused += 1;
+                b
+            }
+            None => {
+                pool.fresh += 1;
+                vec![0.0; n]
+            }
+        }
+    })
+}
+
+/// A pool-backed buffer initialized as a copy of `src` (no zeroing pass) —
+/// what the tape's clone-then-mutate ops (residual adds, broadcasts) use
+/// instead of `Vec::clone`, so their per-step traffic stays inside the
+/// pool. Counted in [`stats`].
+pub fn alloc_copy(src: &[f32]) -> Vec<f32> {
+    if !enabled() || src.is_empty() {
+        return src.to_vec();
+    }
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        match take_fit(&mut pool, src.len()) {
+            Some(mut b) => {
+                b.clear();
+                b.extend_from_slice(src);
+                pool.reused += 1;
+                b
+            }
+            None => {
+                pool.fresh += 1;
+                src.to_vec()
+            }
+        }
+    })
+}
+
+/// Return a raw buffer to the pool (kernels recycling internal scratch,
+/// e.g. a packed transpose; also accepts buffers that were allocated
+/// outside the arena — the pool takes any capacity).
+pub fn recycle_buf(buf: Vec<f32>) {
+    if !enabled() || buf.capacity() == 0 {
+        return;
+    }
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        let bytes = buf.capacity() * 4;
+        if pool.free.len() < MAX_POOLED && pool.bytes + bytes <= MAX_POOLED_BYTES {
+            pool.bytes += bytes;
+            pool.free.push(buf);
+        }
+    });
+}
+
+/// Return a dead tensor's storage to the pool (f32 only; i32 just drops).
+pub fn recycle(t: Tensor) {
+    if let TensorData::F32(v) = t.data {
+        recycle_buf(v);
+    }
+}
+
+/// Recycle every f32 tensor of a dead store (e.g. the per-microbatch
+/// gradient store after the optimizer consumed it).
+pub fn recycle_store(s: Store) {
+    for (_name, t) in s.into_entries() {
+        recycle(t);
+    }
+}
+
+/// (fresh allocations, pool reuses) on this thread since [`reset_stats`].
+pub fn stats() -> (u64, u64) {
+    POOL.with(|p| {
+        let pool = p.borrow();
+        (pool.fresh, pool.reused)
+    })
+}
+
+/// Zero this thread's counters (the pool contents stay).
+pub fn reset_stats() {
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        pool.fresh = 0;
+        pool.reused = 0;
+    });
+}
+
+/// Drop every pooled buffer on this thread (tests; memory pressure).
+pub fn clear() {
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        pool.free.clear();
+        pool.bytes = 0;
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_recycle_alloc_reuses_the_buffer() {
+        if !enabled() {
+            return; // LIGO_ARENA=0 run: nothing to assert
+        }
+        clear();
+        reset_stats();
+        let a = alloc_zeroed(64);
+        let (f1, _) = stats();
+        assert!(f1 >= 1);
+        recycle_buf(a);
+        let b = alloc_zeroed(64);
+        let (f2, r2) = stats();
+        assert_eq!(f2, f1, "second alloc must come from the pool");
+        assert!(r2 >= 1);
+        assert_eq!(b.len(), 64);
+        assert!(b.iter().all(|&x| x == 0.0), "recycled buffers are re-zeroed");
+    }
+
+    #[test]
+    fn best_fit_prefers_the_smallest_sufficient_buffer() {
+        if !enabled() {
+            return;
+        }
+        clear();
+        recycle_buf(vec![1.0; 256]);
+        recycle_buf(vec![1.0; 32]);
+        let b = alloc_zeroed(20);
+        assert!(b.capacity() < 256, "small request must not burn the big buffer");
+        clear();
+    }
+
+    #[test]
+    fn recycle_ignores_i32_and_zero_len() {
+        clear();
+        recycle(Tensor::from_i32(&[2], vec![1, 2]));
+        recycle(Tensor::from_f32(&[0], vec![]));
+        let n = POOL.with(|p| p.borrow().free.len());
+        assert_eq!(n, 0);
+    }
+}

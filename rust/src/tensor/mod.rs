@@ -3,6 +3,7 @@
 //! The runtime converts these to/from PJRT literals; the growth-operator zoo
 //! and the optimizer operate on them directly.
 
+pub mod arena;
 pub mod init;
 pub mod io;
 pub mod ops;

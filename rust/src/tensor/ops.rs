@@ -1,15 +1,63 @@
 //! Dense linear algebra on [`Tensor`]s — the substrate for the growth
-//! operator zoo (Net2Net, AKI, native LiGO) and for tests.
+//! operator zoo (Net2Net, AKI, native LiGO) and for the native model
+//! engine's NN kernels.
 //!
-//! Hot paths use a blocked, cache-friendly matmul that goes multicore
+//! # Kernel layer and its numerics contract
+//!
+//! Hot paths use blocked, cache-friendly loops that go multicore
 //! (scoped-thread row partitioning via [`crate::util::par`]) above
-//! [`PAR_MIN_MACS`]; everything is f32. Row partitioning keeps per-element
-//! accumulation order fixed, so parallel results are bit-identical to
-//! serial ones.
+//! [`PAR_MIN_MACS`] / [`PAR_MIN_KERNEL`]; everything is f32. Three
+//! guarantees hold for every kernel in this module:
+//!
+//! 1. **Serial/parallel bit-identity.** Work is partitioned by *output
+//!    rows* only; the per-element accumulation order never depends on the
+//!    worker count, so `LIGO_THREADS=1` and all-core runs produce
+//!    bit-identical tensors.
+//! 2. **Deterministic accumulation order.** Each kernel fixes one
+//!    summation order (the k-blocked order of [`matmul`] for the matmul
+//!    family). [`linear_fused`] and the packed [`matmul_nt`] path sum in
+//!    that same k-blocked order, which *reassociates* the reduction
+//!    relative to the naive dot-product form — outputs agree with the
+//!    unfused composition to ≤1e-5 relative error (asserted in tests), not
+//!    bitwise. Within one binary and one knob setting, results are
+//!    bit-reproducible run to run.
+//! 3. **IEEE non-finite propagation.** Only [`matmul`] has a zero-skip
+//!    fast path, and it disables itself when the right operand contains
+//!    non-finite values; [`matmul_nt`] and [`linear_fused`] never skip, so
+//!    0 × NaN/Inf propagates as NaN everywhere.
+//!
+//! The fused linear kernel ([`linear_fused`]) computes `x @ w^T (+ bias)
+//! (+ GELU)` in one pass: it packs `w^T` once per call (amortized over the
+//! activation rows), initializes each output row with the bias, and runs
+//! an auto-vectorizable blocked i-k-j microkernel whose inner loop is an
+//! independent elementwise FMA over contiguous output columns — the shape
+//! LLVM vectorizes without `-ffast-math`. The naive dot-product form is a
+//! serial reduction LLVM must *not* vectorize, which is why the packed
+//! kernel wins despite the transpose. `LIGO_FUSED=0` (or
+//! [`set_fused_override`]) routes the tape back to the unfused
+//! linear/add/GELU composition for A/B runs.
+//!
+//! Output buffers come from the thread-local recycling pool in
+//! [`crate::tensor::arena`] (disable with `LIGO_ARENA=0`); kernels recycle
+//! their internal scratch (e.g. the packed `w^T`) before returning.
+//!
+//! ```
+//! use ligo::tensor::ops::{self, Act};
+//! use ligo::tensor::Tensor;
+//! let x = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+//! let w = Tensor::from_f32(&[2, 3], vec![0.5, 0., 0., 0., 0.5, 0.]); // (out, in)
+//! let b = Tensor::from_f32(&[2], vec![1.0, -1.0]);
+//! let (y, pre) = ops::linear_fused(&x, &w, Some(&b), Act::None);
+//! assert_eq!(y.f32s(), &[1.5, 0.0, 3.0, 1.5]); // x @ w^T + b
+//! assert!(pre.is_none(), "pre-activation is saved only under Act::Gelu");
+//! ```
+
+use std::cell::Cell;
+use std::sync::OnceLock;
 
 use crate::util::par;
 
-use super::{numel, Tensor};
+use super::{arena, numel, Tensor};
 
 /// Multiply-accumulate count above which matmuls fan out across cores.
 /// Below it, thread spawn/join overhead dominates (and tests stay serial).
@@ -58,7 +106,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (k2, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
     let (av, bv) = (a.f32s(), b.f32s());
-    let mut c = vec![0.0f32; m * n];
+    let mut c = arena::alloc_zeroed(m * n);
     if m == 0 || n == 0 {
         return Tensor::from_f32(&[m, n], c);
     }
@@ -73,17 +121,57 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::from_f32(&[m, n], c)
 }
 
-/// C = X @ Y^T for (m,k) x (n,k): both operands stream row-major, so this is
-/// the cache-friendly way to apply the LiGO in-expansion (`... A^T`) without
-/// materializing a transpose. Full dot products — no zero skipping — so
-/// NaN/Inf always propagate.
+/// MAC count above which [`matmul_nt`] packs `Y^T` once and runs the
+/// auto-vectorizable blocked i-k-j kernel. Below it the direct dot-product
+/// form wins (no packing cost on tiny operands).
+pub const NT_PACK_MIN_MACS: usize = 1 << 14;
+
+/// Blocked transpose of `w` (rows, cols) into a (cols, rows) arena buffer
+/// — the packing step of [`linear_fused`] and the packed [`matmul_nt`].
+/// Every element is written, so the scratch skips zeroing.
+fn pack_transposed(w: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    const BT: usize = 32;
+    let mut wt = arena::alloc_scratch(rows * cols);
+    for j0 in (0..rows).step_by(BT) {
+        let j1 = (j0 + BT).min(rows);
+        for k0 in (0..cols).step_by(BT) {
+            let k1 = (k0 + BT).min(cols);
+            for j in j0..j1 {
+                for (kk, &wjk) in (k0..k1).zip(&w[j * cols + k0..j * cols + k1]) {
+                    wt[kk * rows + j] = wjk;
+                }
+            }
+        }
+    }
+    wt
+}
+
+/// C = X @ Y^T for (m,k) x (n,k) — the layout of every stored projection
+/// (`y = W x` on (out, in) weights) and of the LiGO in-expansion (`... A^T`).
+/// Above [`NT_PACK_MIN_MACS`] it packs `Y^T` and reuses [`matmul`]'s
+/// k-blocked vectorizable kernel (packing is amortized over the m rows);
+/// below, it streams direct dot products. Never skips zeros, so NaN/Inf
+/// always propagate.
 pub fn matmul_nt(x: &Tensor, y: &Tensor) -> Tensor {
     let (m, k) = (x.shape[0], x.shape[1]);
     let (n, k2) = (y.shape[0], y.shape[1]);
     assert_eq!(k, k2, "matmul_nt inner dims: {k} vs {k2}");
     let (xv, yv) = (x.f32s(), y.f32s());
-    let mut c = vec![0.0f32; m * n];
+    let mut c = arena::alloc_zeroed(m * n);
     if m == 0 || n == 0 {
+        return Tensor::from_f32(&[m, n], c);
+    }
+    let macs = m * k * n;
+    if m > 1 && macs >= NT_PACK_MIN_MACS {
+        let yt = pack_transposed(yv, n, k);
+        if macs >= PAR_MIN_MACS {
+            par::par_row_chunks(&mut c, n, |row0, chunk| {
+                matmul_rows(xv, &yt, chunk, row0, k, n, false)
+            });
+        } else {
+            matmul_rows(xv, &yt, &mut c, 0, k, n, false);
+        }
+        arena::recycle_buf(yt);
         return Tensor::from_f32(&[m, n], c);
     }
     let kernel = |row0: usize, chunk: &mut [f32]| {
@@ -95,7 +183,7 @@ pub fn matmul_nt(x: &Tensor, y: &Tensor) -> Tensor {
             }
         }
     };
-    if m * k * n >= PAR_MIN_MACS && m > 1 {
+    if macs >= PAR_MIN_MACS && m > 1 {
         par::par_row_chunks(&mut c, n, kernel);
     } else {
         kernel(0, &mut c);
@@ -103,17 +191,191 @@ pub fn matmul_nt(x: &Tensor, y: &Tensor) -> Tensor {
     Tensor::from_f32(&[m, n], c)
 }
 
-/// B^T as a new tensor.
+/// B^T as a new tensor (blocked; the buffer comes from the arena).
 pub fn transpose(a: &Tensor) -> Tensor {
     let (m, n) = (a.shape[0], a.shape[1]);
-    let av = a.f32s();
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            out[j * m + i] = av[i * n + j];
+    let out = pack_transposed(a.f32s(), m, n);
+    Tensor::from_f32(&[n, m], out)
+}
+
+// ---------------------------------------------------------------------------
+// Fused linear (+bias, +GELU) — the SIMD-friendly microkernel behind the
+// tape's `linear_bias` / `linear_bias_gelu` ops.
+// ---------------------------------------------------------------------------
+
+/// Activation fused into the [`linear_fused`] epilogue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    /// Plain affine output.
+    None,
+    /// GELU (tanh approximation) applied in the epilogue; the
+    /// pre-activation is returned for the backward pass.
+    Gelu,
+}
+
+thread_local! {
+    /// 0 = follow the env default, 1 = force unfused, 2 = force fused.
+    static FUSED_OVERRIDE: Cell<u8> = const { Cell::new(0) };
+}
+
+/// Whether the tape lowers linear+bias(+GELU) to [`linear_fused`]
+/// (default) or to the unfused linear/add/GELU node chain. Process default
+/// comes from `LIGO_FUSED` (`0` disables); [`set_fused_override`] overrides
+/// per thread for in-process A/B comparisons.
+pub fn fused_enabled() -> bool {
+    match FUSED_OVERRIDE.with(|c| c.get()) {
+        1 => false,
+        2 => true,
+        _ => {
+            static FUSED: OnceLock<bool> = OnceLock::new();
+            *FUSED.get_or_init(|| !matches!(std::env::var("LIGO_FUSED").as_deref(), Ok("0")))
         }
     }
-    Tensor::from_f32(&[n, m], out)
+}
+
+/// Thread-local override of [`fused_enabled`]: `Some(on)` pins the lowering,
+/// `None` restores the env default. Benches and equivalence tests use this
+/// to A/B both code paths in one process.
+pub fn set_fused_override(v: Option<bool>) {
+    FUSED_OVERRIDE.with(|c| {
+        c.set(match v {
+            None => 0,
+            Some(false) => 1,
+            Some(true) => 2,
+        })
+    });
+}
+
+/// The blocked i-k-j microkernel over a contiguous row chunk of the output
+/// (rows starting at global row `row0`): initializes each output row with
+/// the bias, then accumulates `x @ wt` in k-blocks. The inner j-loop is an
+/// independent elementwise FMA over contiguous memory — auto-vectorizable.
+fn linear_rows(
+    xv: &[f32],
+    wtv: &[f32],
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    row0: usize,
+    k: usize,
+    n: usize,
+) {
+    if let Some(b) = bias {
+        for crow in c.chunks_exact_mut(n) {
+            crow.copy_from_slice(b);
+        }
+    }
+    matmul_rows(xv, wtv, c, row0, k, n, false)
+}
+
+/// `y = x @ w^T (+ bias) (+ GELU)` in one fused pass — x (m, k) against the
+/// stored-projection layout w (n, k). Above [`NT_PACK_MIN_MACS`] it packs
+/// `w^T` once (arena scratch, recycled before returning) and runs the
+/// blocked microkernel, row-parallel above [`PAR_MIN_MACS`]; below the
+/// threshold it streams direct dot products (bias added after each sum),
+/// which is **bitwise** equal to the unfused chain. Returns `(y, pre)`:
+/// `pre` is the saved pre-activation, present only under [`Act::Gelu`]
+/// (the backward needs it). The packed path's accumulation is k-blocked
+/// (the [`matmul`] order): serial/parallel bit-identical, and within
+/// ≤1e-5 relative error of the unfused matmul_nt/add/GELU chain.
+pub fn linear_fused(
+    x: &Tensor,
+    w: &Tensor,
+    bias: Option<&Tensor>,
+    act: Act,
+) -> (Tensor, Option<Tensor>) {
+    let (m, k) = (x.shape[0], x.shape[1]);
+    let (n, k2) = (w.shape[0], w.shape[1]);
+    assert_eq!(k, k2, "linear_fused inner dims: {k} vs {k2}");
+    if let Some(b) = bias {
+        assert_eq!(b.numel(), n, "linear_fused bias dim");
+    }
+    let (xv, wv) = (x.f32s(), w.f32s());
+    let bv = bias.map(|b| b.f32s());
+    if m == 0 || n == 0 {
+        let pre = matches!(act, Act::Gelu).then(|| Tensor::from_f32(&[m, n], vec![]));
+        return (Tensor::from_f32(&[m, n], Vec::new()), pre);
+    }
+    if m == 1 || m * k.max(1) * n < NT_PACK_MIN_MACS {
+        // single-row or tiny operands: packing would cost as much as the
+        // product itself (same guard as matmul_nt's).
+        // Direct dot products in the unfused matmul_nt order (+ bias after
+        // the sum), so this path is *bitwise* equal to the unfused chain.
+        // dot_row assigns every element, so both buffers skip zeroing.
+        let mut y = arena::alloc_scratch(m * n);
+        let dot_row = |r: usize, out: &mut [f32]| {
+            let xrow = &xv[r * k..(r + 1) * k];
+            for (j, o) in out.iter_mut().enumerate() {
+                let wrow = &wv[j * k..(j + 1) * k];
+                let s: f32 = xrow.iter().zip(wrow.iter()).map(|(a, b)| a * b).sum();
+                *o = match bv {
+                    Some(b) => s + b[j],
+                    None => s,
+                };
+            }
+        };
+        let pre = match act {
+            Act::None => {
+                for r in 0..m {
+                    dot_row(r, &mut y[r * n..(r + 1) * n]);
+                }
+                None
+            }
+            Act::Gelu => {
+                let mut z = arena::alloc_scratch(m * n);
+                for r in 0..m {
+                    dot_row(r, &mut z[r * n..(r + 1) * n]);
+                }
+                for (yj, &zj) in y.iter_mut().zip(z.iter()) {
+                    *yj = gelu_scalar(zj);
+                }
+                Some(Tensor::from_f32(&[m, n], z))
+            }
+        };
+        return (Tensor::from_f32(&[m, n], y), pre);
+    }
+    // Packed path. linear_rows fully overwrites its target when a bias is
+    // present (bias rows are copied in before accumulation) and the GELU
+    // epilogue fully overwrites y — zeroing is only needed for a target
+    // linear_rows accumulates into from nothing (no bias).
+    let pre_target = |has_bias: bool| {
+        if has_bias {
+            arena::alloc_scratch(m * n)
+        } else {
+            arena::alloc_zeroed(m * n)
+        }
+    };
+    let wt = pack_transposed(wv, n, k);
+    let parallel = m * k.max(1) * n >= PAR_MIN_MACS;
+    let (y, pre) = match act {
+        Act::None => {
+            let mut y = pre_target(bv.is_some());
+            let kern = |row0: usize, c: &mut [f32]| linear_rows(xv, &wt, bv, c, row0, k, n);
+            if parallel {
+                par::par_row_chunks(&mut y, n, kern);
+            } else {
+                kern(0, &mut y);
+            }
+            (y, None)
+        }
+        Act::Gelu => {
+            let mut y = arena::alloc_scratch(m * n);
+            let mut z = pre_target(bv.is_some());
+            let kern = |row0: usize, ychunk: &mut [f32], zchunk: &mut [f32]| {
+                linear_rows(xv, &wt, bv, zchunk, row0, k, n);
+                for (yj, &zj) in ychunk.iter_mut().zip(zchunk.iter()) {
+                    *yj = gelu_scalar(zj);
+                }
+            };
+            if parallel {
+                par::par_row_chunks2(&mut y, n, &mut z, n, kern);
+            } else {
+                kern(0, &mut y, &mut z);
+            }
+            (y, Some(Tensor::from_f32(&[m, n], z)))
+        }
+    };
+    arena::recycle_buf(wt);
+    (Tensor::from_f32(&[m, n], y), pre)
 }
 
 /// The n x n identity matrix (width-expansion fallback when dims match).
@@ -150,10 +412,11 @@ pub fn expand(b: &Tensor, w: &Tensor, a: &Tensor) -> Tensor {
     matmul_nt(&matmul(b, w), a)
 }
 
-/// Elementwise a + s * b (in place on a copy).
+/// Elementwise a + s * b (in place on a pool-backed copy — residual adds
+/// run this every step).
 pub fn axpy(a: &Tensor, s: f32, b: &Tensor) -> Tensor {
     assert_eq!(a.shape, b.shape);
-    let mut out = a.clone();
+    let mut out = Tensor::from_f32(&a.shape, arena::alloc_copy(a.f32s()));
     for (x, y) in out.f32s_mut().iter_mut().zip(b.f32s()) {
         *x += s * y;
     }
@@ -217,7 +480,7 @@ pub fn layernorm_fwd(x: &Tensor, g: &Tensor, b: &Tensor) -> (Tensor, Vec<f32>) {
     assert_eq!(g.numel(), d, "layernorm gain dim");
     assert_eq!(b.numel(), d, "layernorm bias dim");
     let (xv, gv, bv) = (x.f32s(), g.f32s(), b.f32s());
-    let mut y = vec![0.0f32; n * d];
+    let mut y = arena::alloc_zeroed(n * d);
     let mut stats = vec![0.0f32; n * 2];
     let kernel = |row0: usize, yc: &mut [f32], sc: &mut [f32]| {
         for (r, yrow) in yc.chunks_exact_mut(d).enumerate() {
@@ -252,7 +515,7 @@ pub fn layernorm_bwd(
     assert_eq!(dout.shape, x.shape, "layernorm dout shape");
     assert_eq!(stats.len(), n * 2, "layernorm stats length");
     let (xv, gv, dov) = (x.f32s(), g.f32s(), dout.f32s());
-    let mut dx = vec![0.0f32; n * d];
+    let mut dx = arena::alloc_zeroed(n * d);
     let kernel = |row0: usize, chunk: &mut [f32]| {
         for (r, dxrow) in chunk.chunks_exact_mut(d).enumerate() {
             let i = row0 + r;
@@ -293,34 +556,47 @@ pub fn layernorm_bwd(
 const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
 const GELU_A: f32 = 0.044_715;
 
+/// Scalar GELU (tanh approximation) — shared by [`gelu_fwd`] and the
+/// [`linear_fused`] epilogue so both paths agree bitwise.
+#[inline]
+fn gelu_scalar(t: f32) -> f32 {
+    let u = GELU_C * (t + GELU_A * t * t * t);
+    0.5 * t * (1.0 + u.tanh())
+}
+
+/// Scalar GELU derivative — shared by [`gelu_bwd`] and the fused backward.
+#[inline]
+fn gelu_deriv(t: f32) -> f32 {
+    let u = GELU_C * (t + GELU_A * t * t * t);
+    let th = u.tanh();
+    let du = GELU_C * (1.0 + 3.0 * GELU_A * t * t);
+    0.5 * (1.0 + th) + 0.5 * t * (1.0 - th * th) * du
+}
+
 /// GELU activation (tanh approximation — the jax.nn.gelu default the AOT
 /// path lowers): `0.5 x (1 + tanh(sqrt(2/pi)(x + 0.044715 x^3)))`.
 pub fn gelu_fwd(x: &Tensor) -> Tensor {
     let xv = x.f32s();
-    let mut y = vec![0.0f32; xv.len()];
+    let mut y = arena::alloc_zeroed(xv.len());
     let kernel = |off: usize, chunk: &mut [f32]| {
         for (i, v) in chunk.iter_mut().enumerate() {
-            let t = xv[off + i];
-            let u = GELU_C * (t + GELU_A * t * t * t);
-            *v = 0.5 * t * (1.0 + u.tanh());
+            *v = gelu_scalar(xv[off + i]);
         }
     };
     run_rows(&mut y, 1, xv.len(), kernel);
     Tensor::from_f32(&x.shape, y)
 }
 
-/// Backward of [`gelu_fwd`]: dx = dout * gelu'(x).
+/// Backward of [`gelu_fwd`]: dx = dout * gelu'(x). Also the epilogue
+/// backward of [`linear_fused`] under [`Act::Gelu`] (x = the saved
+/// pre-activation).
 pub fn gelu_bwd(x: &Tensor, dout: &Tensor) -> Tensor {
     assert_eq!(x.shape, dout.shape, "gelu dout shape");
     let (xv, dov) = (x.f32s(), dout.f32s());
-    let mut dx = vec![0.0f32; xv.len()];
+    let mut dx = arena::alloc_zeroed(xv.len());
     let kernel = |off: usize, chunk: &mut [f32]| {
         for (i, v) in chunk.iter_mut().enumerate() {
-            let t = xv[off + i];
-            let u = GELU_C * (t + GELU_A * t * t * t);
-            let th = u.tanh();
-            let du = GELU_C * (1.0 + 3.0 * GELU_A * t * t);
-            *v = dov[off + i] * (0.5 * (1.0 + th) + 0.5 * t * (1.0 - th * th) * du);
+            *v = dov[off + i] * gelu_deriv(xv[off + i]);
         }
     };
     run_rows(&mut dx, 1, xv.len(), kernel);
@@ -331,7 +607,7 @@ pub fn gelu_bwd(x: &Tensor, dout: &Tensor) -> Tensor {
 pub fn softmax_rows(x: &Tensor) -> Tensor {
     let (n, d) = (x.shape[0], x.shape[1]);
     let xv = x.f32s();
-    let mut y = vec![0.0f32; n * d];
+    let mut y = arena::alloc_zeroed(n * d);
     let kernel = |row0: usize, chunk: &mut [f32]| {
         for (r, yrow) in chunk.chunks_exact_mut(d).enumerate() {
             let xrow = &xv[(row0 + r) * d..(row0 + r + 1) * d];
@@ -386,7 +662,7 @@ pub fn attention_fwd(q: &Tensor, k: &Tensor, v: &Tensor, sh: &AttnShape) -> (Ten
     let scale = 1.0 / (dh as f32).sqrt();
     let (qv, kv, vv) = (q.f32s(), k.f32s(), v.f32s());
     // probs rows are (b, h, i) triples — each fully independent.
-    let mut probs = vec![0.0f32; sh.batch * sh.heads * sh.s_q * sh.s_k];
+    let mut probs = arena::alloc_zeroed(sh.batch * sh.heads * sh.s_q * sh.s_k);
     let pk = |row0: usize, chunk: &mut [f32]| {
         for (r, prow) in chunk.chunks_exact_mut(sh.s_k).enumerate() {
             let row = row0 + r;
@@ -419,7 +695,7 @@ pub fn attention_fwd(q: &Tensor, k: &Tensor, v: &Tensor, sh: &AttnShape) -> (Ten
     let rows_p = sh.batch * sh.heads * sh.s_q;
     run_rows(&mut probs, sh.s_k, rows_p * sh.s_k * dh, pk);
     // out rows are (b, i): out[b,i,h,:] = sum_j probs[b,h,i,j] v[b,j,h,:]
-    let mut out = vec![0.0f32; sh.batch * sh.s_q * dim];
+    let mut out = arena::alloc_zeroed(sh.batch * sh.s_q * dim);
     let ok = |row0: usize, chunk: &mut [f32]| {
         for (r, orow) in chunk.chunks_exact_mut(dim).enumerate() {
             let row = row0 + r;
@@ -462,7 +738,7 @@ pub fn attention_bwd(
     let (qv, kv, vv, pv, dov) = (q.f32s(), k.f32s(), v.f32s(), probs.f32s(), dout.f32s());
     // dscores = probs .* (dp - <dp, probs>) with dp[j] = <dout[b,i,h], v[b,j,h]>;
     // the 1/sqrt(dh) scale is folded in here so dq/dk below are plain sums.
-    let mut ds = vec![0.0f32; pv.len()];
+    let mut ds = arena::alloc_zeroed(pv.len());
     let dsk = |row0: usize, chunk: &mut [f32]| {
         for (r, dsrow) in chunk.chunks_exact_mut(sh.s_k).enumerate() {
             let row = row0 + r;
@@ -485,7 +761,7 @@ pub fn attention_bwd(
     };
     run_rows(&mut ds, sh.s_k, pv.len() * dh, dsk);
     // dq rows are (b, i); dk/dv rows are (b, j) — all independent.
-    let mut dq = vec![0.0f32; qv.len()];
+    let mut dq = arena::alloc_zeroed(qv.len());
     let dqk = |row0: usize, chunk: &mut [f32]| {
         for (r, dqrow) in chunk.chunks_exact_mut(dim).enumerate() {
             let row = row0 + r;
@@ -505,7 +781,7 @@ pub fn attention_bwd(
         }
     };
     run_rows(&mut dq, dim, qv.len() * sh.s_k, dqk);
-    let mut dk = vec![0.0f32; kv.len()];
+    let mut dk = arena::alloc_zeroed(kv.len());
     let dkk = |row0: usize, chunk: &mut [f32]| {
         for (r, dkrow) in chunk.chunks_exact_mut(dim).enumerate() {
             let row = row0 + r;
@@ -525,7 +801,7 @@ pub fn attention_bwd(
         }
     };
     run_rows(&mut dk, dim, kv.len() * sh.s_q, dkk);
-    let mut dvv = vec![0.0f32; vv.len()];
+    let mut dvv = arena::alloc_zeroed(vv.len());
     let dvk = |row0: usize, chunk: &mut [f32]| {
         for (r, dvrow) in chunk.chunks_exact_mut(dim).enumerate() {
             let row = row0 + r;
@@ -545,6 +821,7 @@ pub fn attention_bwd(
         }
     };
     run_rows(&mut dvv, dim, vv.len() * sh.s_q, dvk);
+    arena::recycle_buf(ds);
     (
         Tensor::from_f32(&q.shape, dq),
         Tensor::from_f32(&k.shape, dk),
@@ -560,7 +837,7 @@ pub fn masked_xent_fwd(logits: &Tensor, labels: &[i32]) -> (f32, f32) {
     let (n, vsz) = (logits.shape[0], logits.shape[1]);
     assert_eq!(labels.len(), n, "one label per logit row");
     let lv = logits.f32s();
-    let mut nll = vec![0.0f32; n];
+    let mut nll = arena::alloc_zeroed(n);
     let kernel = |row0: usize, chunk: &mut [f32]| {
         for (r, out) in chunk.iter_mut().enumerate() {
             let i = row0 + r;
@@ -576,7 +853,9 @@ pub fn masked_xent_fwd(logits: &Tensor, labels: &[i32]) -> (f32, f32) {
     };
     run_rows(&mut nll, 1, n * vsz, kernel);
     let count = labels.iter().filter(|&&l| l >= 0).count() as f32;
-    (nll.iter().sum::<f32>() / count.max(1.0), count)
+    let loss = nll.iter().sum::<f32>() / count.max(1.0);
+    arena::recycle_buf(nll);
+    (loss, count)
 }
 
 /// Backward of [`masked_xent_fwd`]:
@@ -586,7 +865,7 @@ pub fn masked_xent_bwd(logits: &Tensor, labels: &[i32], count: f32, dloss: f32) 
     assert_eq!(labels.len(), n, "one label per logit row");
     let lv = logits.f32s();
     let s = dloss / count.max(1.0);
-    let mut dl = vec![0.0f32; n * vsz];
+    let mut dl = arena::alloc_zeroed(n * vsz);
     let kernel = |row0: usize, chunk: &mut [f32]| {
         for (r, drow) in chunk.chunks_exact_mut(vsz).enumerate() {
             let i = row0 + r;
@@ -704,6 +983,91 @@ mod tests {
             let want = matmul(&x, &transpose(&y));
             assert!(max_abs_diff(&got, &want) < 1e-4);
         });
+    }
+
+    #[test]
+    fn matmul_nt_packed_path_matches_dot_form() {
+        // 32*40*24 = 30720 MACs > NT_PACK_MIN_MACS: exercises the packed
+        // i-k-j kernel against the naive transpose composition.
+        let (m, k, n) = (32, 40, 24);
+        assert!(m * k * n >= NT_PACK_MIN_MACS);
+        let mut g = crate::util::rng::Rng::new(31);
+        let x = t2([m, k], (0..m * k).map(|_| g.range_f32(-1.0, 1.0)).collect());
+        let y = t2([n, k], (0..n * k).map(|_| g.range_f32(-1.0, 1.0)).collect());
+        let got = matmul_nt(&x, &y);
+        let want = matmul(&x, &transpose(&y));
+        // same sums in a reassociated order: tight but not bitwise
+        assert!(max_abs_diff(&got, &want) < 1e-4, "{}", max_abs_diff(&got, &want));
+    }
+
+    #[test]
+    fn matmul_nt_packed_path_propagates_nan() {
+        let (m, k, n) = (32, 40, 24);
+        let mut g = crate::util::rng::Rng::new(32);
+        let x = t2([m, k], (0..m * k).map(|_| g.range_f32(-1.0, 1.0)).collect());
+        let mut y = t2([n, k], vec![0.0; n * k]);
+        y.f32s_mut()[5] = f32::NAN;
+        let c = matmul_nt(&x, &y);
+        assert!(c.f32s().iter().any(|v| v.is_nan()), "NaN must survive the packed kernel");
+    }
+
+    #[test]
+    fn linear_fused_matches_unfused_composition() {
+        // (7, 10, 5): below NT_PACK_MIN_MACS — the direct-dot path, which
+        // is bitwise-equal to the unfused chain. (32, 40, 24): above it —
+        // the packed microkernel, equal up to reassociation (≤1e-5 rel).
+        for (m, k, n, seed) in [(7usize, 10usize, 5usize, 33u64), (32, 40, 24, 34)] {
+            let mut g = crate::util::rng::Rng::new(seed);
+            let x = t2([m, k], (0..m * k).map(|_| g.range_f32(-2.0, 2.0)).collect());
+            let w = t2([n, k], (0..n * k).map(|_| g.range_f32(-1.0, 1.0)).collect());
+            let b = Tensor::from_f32(&[n], (0..n).map(|_| g.range_f32(-0.5, 0.5)).collect());
+            // reference: matmul_nt + broadcast add + gelu
+            let mut want_pre = matmul_nt(&x, &w);
+            for row in want_pre.f32s_mut().chunks_exact_mut(n) {
+                for (o, &bb) in row.iter_mut().zip(b.f32s()) {
+                    *o += bb;
+                }
+            }
+            let want = gelu_fwd(&want_pre);
+            let (got, pre) = linear_fused(&x, &w, Some(&b), Act::Gelu);
+            let pre = pre.expect("GELU saves the pre-activation");
+            for (a, e) in got.f32s().iter().zip(want.f32s()) {
+                let rel = (a - e).abs() / a.abs().max(e.abs()).max(1.0);
+                assert!(rel <= 1e-5, "fused {a} vs unfused {e} ({m}x{k}x{n})");
+            }
+            for (a, e) in pre.f32s().iter().zip(want_pre.f32s()) {
+                let rel = (a - e).abs() / a.abs().max(e.abs()).max(1.0);
+                assert!(rel <= 1e-5, "pre {a} vs {e} ({m}x{k}x{n})");
+            }
+            // no bias, no activation: plain projection parity
+            let (plain, none) = linear_fused(&x, &w, None, Act::None);
+            assert!(none.is_none());
+            assert!(max_abs_diff(&plain, &matmul_nt(&x, &w)) <= 1e-4);
+        }
+    }
+
+    #[test]
+    fn linear_fused_degenerate_shapes() {
+        // zero rows and k = 0 must not panic and must keep the bias
+        let x0 = t2([0, 3], vec![]);
+        let w = t2([2, 3], vec![1.0; 6]);
+        let (y, pre) = linear_fused(&x0, &w, None, Act::Gelu);
+        assert_eq!(y.shape, vec![0, 2]);
+        assert_eq!(pre.unwrap().shape, vec![0, 2]);
+        let xk0 = t2([2, 0], vec![]);
+        let wk0 = t2([3, 0], vec![]);
+        let b = Tensor::from_f32(&[3], vec![1.0, 2.0, 3.0]);
+        let (y2, _) = linear_fused(&xk0, &wk0, Some(&b), Act::None);
+        assert_eq!(y2.f32s(), &[1.0, 2.0, 3.0, 1.0, 2.0, 3.0], "k=0 output is the bias");
+    }
+
+    #[test]
+    fn fused_override_toggles_and_restores() {
+        set_fused_override(Some(false));
+        assert!(!fused_enabled());
+        set_fused_override(Some(true));
+        assert!(fused_enabled());
+        set_fused_override(None);
     }
 
     #[test]

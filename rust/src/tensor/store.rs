@@ -68,6 +68,13 @@ impl Store {
         self.map.iter()
     }
 
+    /// Consume the store, yielding owned (name, tensor) pairs in sorted
+    /// order (e.g. to recycle a dead store's buffers via
+    /// [`crate::tensor::arena::recycle_store`]).
+    pub fn into_entries(self) -> impl Iterator<Item = (String, Tensor)> {
+        self.map.into_iter()
+    }
+
     pub fn iter_mut(&mut self) -> impl Iterator<Item = (&String, &mut Tensor)> {
         self.map.iter_mut()
     }

@@ -70,6 +70,26 @@ fn vision_fwd_reports_loss_and_accuracy_metric() {
 }
 
 #[test]
+fn fused_and_unfused_kernels_agree_end_to_end() {
+    // The fused linear+bias(+GELU) lowering only reassociates reductions:
+    // a whole-model eval must agree with the unfused chain to float noise.
+    let Some(rt) = native_runtime() else { return };
+    let reg = Registry::builtin();
+    let cfg = reg.model("bert_small").unwrap().clone();
+    let fwd = rt.load("fwd_bert_small").unwrap();
+    let params = Trainer::scratch_params(&rt, &cfg, 3).unwrap();
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let mut eb = |i: usize| mlm_batch(&corpus, &cfg, &mut Rng::new(0xF00D + i as u64));
+    ligo::tensor::ops::set_fused_override(Some(true));
+    let (lf, _) = eval_store(&fwd, &params, &mut eb, 2).unwrap();
+    ligo::tensor::ops::set_fused_override(Some(false));
+    let (lu, _) = eval_store(&fwd, &params, &mut eb, 2).unwrap();
+    ligo::tensor::ops::set_fused_override(None);
+    assert!(lf.is_finite() && lu.is_finite());
+    assert!((lf - lu).abs() <= 1e-4 * lf.abs().max(1.0), "fused {lf} vs unfused {lu}");
+}
+
+#[test]
 fn probe_preset_synthesizes_with_metric() {
     let Some(rt) = native_runtime() else { return };
     let exe = rt.load("fwd_probe_bert_small").unwrap();
