@@ -13,8 +13,8 @@ use ligo::bail;
 use ligo::config::{artifacts_dir, Registry};
 use ligo::error::Result;
 use ligo::coordinator::flops::train_step_flops;
-use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
 use ligo::coordinator::trainer::Trainer;
+use ligo::growth::{self, GrowthContext, LigoOptions};
 use ligo::data::batches::mlm_batch;
 use ligo::data::corpus::Corpus;
 use ligo::data::loader::Loader;
@@ -76,16 +76,23 @@ fn main() -> Result<()> {
     }
     drop(loader);
 
-    // Stage 2: learn M and grow
+    // Stage 2: learn M and grow (the unified entry point; a GrowthPlan run
+    // via Trainer::run_plan expresses the same pipeline declaratively —
+    // this driver keeps the manual stages to show the prefetching loader)
     println!("\n[stage 2] learning LiGO M for {m_steps} steps and growing");
     let c2 = corpus.clone();
     let l2 = large.clone();
     let mut mk = move |s: usize| mlm_batch(&c2, &l2, &mut Rng::new(0xE2E + s as u64));
     let opts = LigoOptions { steps: m_steps, lr: 0.01, ..Default::default() };
-    let grown = ligo_grow(&rt, &small, &large, &tr.params, &mut mk, &opts)?;
+    let ctx = GrowthContext::new(&tr.params, &small, &large)
+        .with_runtime(&rt)
+        .with_batches(&mut mk)
+        .with_opts(opts);
+    let grown = growth::by_name("ligo")?.grow(ctx)?;
+    println!("  route: {}", grown.route_summary());
     println!(
         "  M-loss {:.4}; growth overhead {:.2e} FLOPs, {:.0}s wall",
-        grown.final_m_loss, grown.extra_flops, grown.wall_s
+        grown.metrics.final_m_loss, grown.metrics.extra_flops, grown.metrics.wall_s
     );
 
     // Stage 3: pretrain the 91M model from the LiGO init
@@ -93,7 +100,7 @@ fn main() -> Result<()> {
     let mut tc = recipe_for(&large, steps);
     tc.eval_every = 20;
     let mut tr2 = Trainer::new(&rt, &large, tc, grown.params)?;
-    tr2.flops_offset = grown.extra_flops;
+    tr2.flops_offset = grown.metrics.extra_flops;
     let c3 = corpus.clone();
     let l3 = large.clone();
     let loader = Loader::spawn(
@@ -102,7 +109,7 @@ fn main() -> Result<()> {
     );
     let mut curve = ligo::coordinator::metrics::Curve::new("e2e_ligo");
     let step_flops = train_step_flops(&large);
-    let mut spent = grown.extra_flops;
+    let mut spent = grown.metrics.extra_flops;
     let t2 = Timer::new();
     for step in 0..steps {
         let Some(batch) = loader.next() else {

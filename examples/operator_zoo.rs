@@ -1,18 +1,20 @@
-//! Growth-operator zoo tour: grow the same pretrained BERT-Small into
-//! BERT-Base with every operator in the zoo (plus LiGO) and compare the
-//! *immediate* quality of each initialization — a concrete look at the
-//! paper's §3.1 taxonomy and Prop. 1.
+//! Growth-operator zoo tour through the **unified entry point**: grow the
+//! same pretrained BERT-Small into BERT-Base with every registered operator
+//! via `grow(GrowthContext)` and compare the *immediate* quality of each
+//! initialization — the paper's §3.1 taxonomy and Prop. 1, plus the
+//! LEMON-style exact expansion (shown on a pair inside its exact regime,
+//! with its loss-preservation printed; on the incompatible pair it reports
+//! its diagnostic instead of growing wrong).
 //!
 //! Run: cargo run --release --example operator_zoo
 
 use ligo::config::{artifacts_dir, Registry};
-use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
 use ligo::coordinator::trainer::{eval_store, Trainer};
 use ligo::error::Result;
 use ligo::data::batches::mlm_batch;
 use ligo::data::corpus::Corpus;
 use ligo::experiments::common::{recipe_for, text_batches};
-use ligo::growth;
+use ligo::growth::{self, GrowthContext, LigoOptions, Objective};
 use ligo::runtime::Runtime;
 use ligo::util::rng::Rng;
 
@@ -41,25 +43,64 @@ fn main() -> Result<()> {
     let scratch = Trainer::scratch_params(&rt, &large, 5)?;
     let (scratch_loss, _) = eval_store(&fwd, &scratch, &mut eval, 8)?;
     println!("{:<16} {:>12.4} {:>14}", "scratch", scratch_loss, "-");
-    for name in growth::ALL {
-        let op = growth::by_name(name).unwrap();
-        let grown = op.grow(&small_params, &small, &large);
-        let (loss, _) = eval_store(&fwd, &grown, &mut eval, 8)?;
-        println!("{:<16} {:>12.4} {:>13.1}%", name, loss,
-            (1.0 - loss / scratch_loss) * 100.0);
+    // every registered operator through the same entry point; operators
+    // whose exactness constraints reject the pair report why instead
+    for name in growth::KNOWN {
+        if name == "ligo" {
+            continue; // the learned operator gets its own sweep below
+        }
+        let op = growth::by_name(name)?;
+        let ctx = GrowthContext::new(&small_params, &small, &large);
+        match op.grow(ctx) {
+            Ok(outcome) => {
+                let (loss, _) = eval_store(&fwd, &outcome.params, &mut eval, 8)?;
+                assert!(loss.is_finite(), "{name}: non-finite init loss");
+                println!("{:<16} {:>12.4} {:>13.1}%", name, loss,
+                    (1.0 - loss / scratch_loss) * 100.0);
+            }
+            Err(e) => println!("{name:<16} skipped: {e}"),
+        }
     }
-    // the learned operator
+    // the learned operator: same context surface, batch source attached
     let c3 = corpus.clone();
     let l3 = large.clone();
     let mut mk = move |s: usize| mlm_batch(&c3, &l3, &mut Rng::new(0x700 + s as u64));
     for m_steps in [0usize, 25, 100] {
-        let grown = ligo_grow(&rt, &small, &large, &small_params, &mut mk,
-            &LigoOptions { steps: m_steps, ..Default::default() })?;
+        let ctx = GrowthContext::new(&small_params, &small, &large)
+            .with_runtime(&rt)
+            .with_batches(&mut mk)
+            .with_opts(LigoOptions { steps: m_steps, ..Default::default() });
+        let grown = growth::by_name("ligo")?.grow(ctx)?;
+        assert_ne!(grown.objective, Objective::ParamOnly, "ligo must learn M");
         let (loss, _) = eval_store(&fwd, &grown.params, &mut eval, 8)?;
         println!("{:<16} {:>12.4} {:>13.1}%", format!("ligo@{m_steps}"), loss,
             (1.0 - loss / scratch_loss) * 100.0);
     }
     println!("\n(ligo@0 = the stacking+duplication pattern of Prop. 1; the gap to");
     println!(" ligo@100 is what 100 steps of M-learning buys before training begins)");
+
+    // LEMON on a pair inside its exact regime: depth-only 3 -> 6 layers.
+    // The grown model's loss must equal the small model's exactly.
+    let mid = reg.model("bert_d6w48")?.clone();
+    let lemon = growth::by_name("lemon")?;
+    let exact = lemon.grow(GrowthContext::new(&small_params, &small, &mid))?;
+    let fwd_mid = rt.load(&format!("fwd_{}", mid.name))?;
+    let c4 = corpus.clone();
+    let m4 = mid.clone();
+    let mut eval_mid = move |i: usize| mlm_batch(&c4, &m4, &mut Rng::new(0xEEAA_0000 + i as u64));
+    let fwd_small = rt.load(&format!("fwd_{}", small.name))?;
+    let (l_small, _) = eval_store(&fwd_small, &small_params, &mut eval_mid, 8)?;
+    let (l_lemon, _) = eval_store(&fwd_mid, &exact.params, &mut eval_mid, 8)?;
+    println!(
+        "\nlemon {} -> {}: small loss {l_small:.6}, grown loss {l_lemon:.6} \
+         (diff {:.2e} — lossless)",
+        small.name,
+        mid.name,
+        (l_small - l_lemon).abs()
+    );
+    assert!(
+        (l_small - l_lemon).abs() <= 1e-4,
+        "lemon must preserve the loss: {l_small} vs {l_lemon}"
+    );
     Ok(())
 }

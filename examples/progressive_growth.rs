@@ -1,0 +1,89 @@
+//! Progressive growth as data: a 2-stage `GrowthPlan` executed *mid-run*
+//! by `Trainer::run_plan` — start on BERT-Small, stack to 6 layers at 1/3
+//! of the budget (StackBERT), then LiGO-grow the width to BERT-Base at 2/3,
+//! all against a from-scratch BERT-Base baseline. The schedule is declared
+//! once, validated by the builder, and the growth steps land in the curve's
+//! `marks` (and the JSON report) — the "Stacking Your Transformers"
+//! (Du et al. 2024) scenario the unified growth API was cut for.
+//!
+//! Run: cargo run --release --example progressive_growth -- [--steps N]
+
+use ligo::config::{artifacts_dir, Registry};
+use ligo::coordinator::metrics::savings;
+use ligo::coordinator::plan::GrowthPlan;
+use ligo::coordinator::trainer::Trainer;
+use ligo::error::Result;
+use ligo::experiments::common::{recipe_for, text_batches};
+use ligo::data::corpus::Corpus;
+use ligo::growth::LigoOptions;
+use ligo::runtime::Runtime;
+use ligo::util::cli::Args;
+
+fn main() -> Result<()> {
+    ligo::util::logging::init_from_env();
+    let args = Args::from_env();
+    let steps = args.get_usize("steps", 240);
+
+    let rt = Runtime::cpu(artifacts_dir())?;
+    let reg = Registry::load_or_builtin(&artifacts_dir());
+    let small = reg.model("bert_small")?.clone();
+    let mid = reg.model("bert_d6w48")?.clone();
+    let large = reg.model("bert_base")?.clone();
+    let corpus = Corpus::new(large.vocab, 0);
+
+    // the schedule: depth first (cheap stacking), then learned width growth
+    let plan = GrowthPlan::builder(&small)
+        .grow_at(steps / 3, &mid, "stackbert")
+        .grow_at_with(
+            2 * steps / 3,
+            &large,
+            "ligo",
+            LigoOptions { steps: 25, ..Default::default() },
+        )
+        .build()?;
+    println!(
+        "plan: {} -> {} @{} -> {} @{} ({} stages)",
+        small.name,
+        mid.name,
+        steps / 3,
+        large.name,
+        2 * steps / 3,
+        plan.stages().len()
+    );
+
+    println!("\n[1/2] progressive run ({} total steps)", steps);
+    let params = Trainer::scratch_params(&rt, &small, 0)?;
+    let mut tr = Trainer::new(&rt, &small, recipe_for(&small, steps), params)?;
+    let mut b = text_batches(&corpus, &small, 7);
+    let curve_plan = tr.run_plan(&rt, "Progressive", &mut b, steps, &plan)?;
+    for (step, label) in &curve_plan.marks {
+        println!("    @{step}: {label}");
+    }
+    println!(
+        "    final model: {} ({} params), loss {:.4}",
+        tr.cfg.name,
+        tr.params.param_count(),
+        curve_plan.final_loss()
+    );
+
+    println!("\n[2/2] scratch {} baseline ({} steps)", large.name, steps);
+    let scratch = Trainer::scratch_params(&rt, &large, 5)?;
+    let mut tr2 = Trainer::new(&rt, &large, recipe_for(&large, steps), scratch)?;
+    let mut b2 = text_batches(&corpus, &large, 8);
+    let curve_scr = tr2.run("Scratch", &mut b2, steps)?;
+
+    println!("\n==== results =========================================");
+    println!("scratch     final loss: {:.4}", curve_scr.final_loss());
+    println!("progressive final loss: {:.4}", curve_plan.final_loss());
+    match savings(&curve_scr, &curve_plan, false, false) {
+        Some(s) => println!("FLOPs savings to reach scratch-final loss: {:+.1}%", s * 100.0),
+        None => println!("progressive run did not reach the scratch loss in this budget"),
+    }
+    ligo::coordinator::metrics::write_report(
+        std::path::Path::new("reports"),
+        "progressive_growth",
+        &[curve_scr, curve_plan],
+    )?;
+    println!("curves (incl. growth marks) -> reports/progressive_growth.json");
+    Ok(())
+}

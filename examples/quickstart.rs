@@ -9,13 +9,13 @@
 //! Run: cargo run --release --example quickstart
 
 use ligo::config::{artifacts_dir, Registry};
-use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
 use ligo::coordinator::metrics::savings;
 use ligo::error::Result;
 use ligo::coordinator::trainer::Trainer;
 use ligo::data::batches::mlm_batch;
 use ligo::data::corpus::Corpus;
 use ligo::experiments::common::{recipe_for, text_batches};
+use ligo::growth::{self, GrowthContext, LigoOptions};
 use ligo::runtime::Runtime;
 use ligo::util::rng::Rng;
 
@@ -39,21 +39,29 @@ fn main() -> Result<()> {
     println!("      small loss: {:.3} -> {:.3}", c_small.loss[0], c_small.final_loss());
 
     // --- 2. learn the growth operator M (the paper's 100 steps) ----------
+    // One unified entry point: the context offers the runtime handle and a
+    // batch source; LiGO negotiates artifact -> native task loss ->
+    // surrogate from that, exactly once, and logs the route it took.
     println!("\n[2/4] learning LiGO operator M (100 SGD steps)...");
     let c2 = corpus.clone();
     let l2 = large.clone();
     let mut mk = move |s: usize| mlm_batch(&c2, &l2, &mut Rng::new(500 + s as u64));
-    let grown = ligo_grow(&rt, &small, &large, &tr_small.params, &mut mk, &LigoOptions::default())?;
+    let ctx = GrowthContext::new(&tr_small.params, &small, &large)
+        .with_runtime(&rt)
+        .with_batches(&mut mk)
+        .with_opts(LigoOptions::default());
+    let grown = growth::by_name("ligo")?.grow(ctx)?;
+    println!("      route: {}", grown.route_summary());
     println!(
         "      M-loss {:.3} ({} objective), +{:.2e} FLOPs overhead",
-        grown.final_m_loss, grown.objective, grown.extra_flops
+        grown.metrics.final_m_loss, grown.objective, grown.metrics.extra_flops
     );
 
     // --- 3. train the grown large model ----------------------------------
     println!("\n[3/4] training {} from LiGO init...", large.name);
     let steps = 250;
     let mut tr_ligo = Trainer::new(&rt, &large, recipe_for(&large, steps), grown.params)?;
-    tr_ligo.flops_offset = grown.extra_flops;
+    tr_ligo.flops_offset = grown.metrics.extra_flops;
     let mut b1 = text_batches(&corpus, &large, 2);
     let mut curve_ligo = tr_ligo.run("LiGO", &mut b1, steps)?;
     curve_ligo.name = "LiGO".into();

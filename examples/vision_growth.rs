@@ -5,13 +5,12 @@
 //! Run: cargo run --release --example vision_growth -- [--steps N]
 
 use ligo::config::{artifacts_dir, Registry};
-use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
 use ligo::coordinator::metrics::savings;
 use ligo::error::Result;
 use ligo::coordinator::trainer::Trainer;
 use ligo::data::vision::VisionTask;
 use ligo::experiments::common::{recipe_for, vision_batches};
-use ligo::growth;
+use ligo::growth::{self, GrowthContext, LigoOptions};
 use ligo::runtime::Runtime;
 use ligo::util::cli::Args;
 use ligo::util::rng::Rng;
@@ -37,19 +36,24 @@ fn main() -> Result<()> {
     let small_params = tr.params.clone();
 
     println!("[2/3] growing to {} via AKI and LiGO", large.name);
-    let aki = growth::by_name("aki").unwrap().grow(&small_params, &small, &large);
+    let aki_op = growth::by_name("aki")?;
+    let aki = growth::grow_params(aki_op.as_ref(), &small_params, &small, &large)?;
     let t2 = task.clone();
     let l2 = large.clone();
     let mut mk = move |s: usize| t2.batch(&l2, &mut Rng::new(0xCAFE + s as u64));
-    let grown = ligo_grow(&rt, &small, &large, &small_params, &mut mk,
-        &LigoOptions { steps: 30, ..Default::default() })?;
+    let ctx = GrowthContext::new(&small_params, &small, &large)
+        .with_runtime(&rt)
+        .with_batches(&mut mk)
+        .with_opts(LigoOptions { steps: 30, ..Default::default() });
+    let grown = growth::by_name("ligo")?.grow(ctx)?;
+    println!("    LiGO route: {}", grown.route_summary());
 
     println!("[3/3] training {} from scratch / AKI / LiGO ({steps} steps each)", large.name);
     let mut curves = Vec::new();
     for (name, init, offset) in [
         ("Scratch", Trainer::scratch_params(&rt, &large, 5)?, 0.0),
         ("bert2BERT", aki, 0.0),
-        ("LiGO", grown.params, grown.extra_flops),
+        ("LiGO", grown.params, grown.metrics.extra_flops),
     ] {
         let mut tr = Trainer::new(&rt, &large, recipe_for(&large, steps), init)?;
         tr.flops_offset = offset;

@@ -6,7 +6,7 @@
 use ligo::config::{artifacts_dir, Registry};
 use ligo::growth;
 use ligo::growth::ligo::Ligo;
-use ligo::growth::GrowthOperator;
+use ligo::growth::{GrowthContext, LigoOptions};
 use ligo::runtime::{Manifest, Runtime};
 use ligo::tensor::store::Store;
 use ligo::util::bench::bench;
@@ -25,29 +25,29 @@ fn main() {
     println!("== growth_ops: bert_small -> bert_base ==");
     for name in growth::ALL {
         let op = growth::by_name(name).unwrap();
-        bench(&format!("grow/{name}"), 2, 15, || op.grow(&params, &small, &large));
+        bench(&format!("grow/{name}"), 2, 15, || {
+            growth::grow_params(op.as_ref(), &params, &small, &large).unwrap()
+        });
     }
     // native LiGO: init + surrogate M-learning + apply (no artifacts)
     let native = Ligo { steps: 10, ..Default::default() };
     bench("grow/ligo_native[10 M-steps]", 2, 5, || {
-        native.grow(&params, &small, &large)
+        native.grow_with_loss(&params, &small, &large).0
     });
     // true task-loss M-learning through the native engine (the default
-    // no-XLA route): apply + large fwd/bwd + expansion backprop per step
+    // no-XLA route, via the unified entry point: batches, no runtime):
+    // apply + large fwd/bwd + expansion backprop per step
     let corpus = ligo::data::corpus::Corpus::new(large.vocab, 0);
+    let ligo_op = growth::by_name("ligo").unwrap();
     let run_task_native = || {
         let mut mk = |s: usize| {
             let mut rng = ligo::util::rng::Rng::new(s as u64);
             ligo::data::batches::mlm_batch(&corpus, &large, &mut rng)
         };
-        ligo::coordinator::growth_manager::ligo_grow_task_native(
-            &small,
-            &large,
-            &params,
-            &mut mk,
-            &ligo::coordinator::growth_manager::LigoOptions { steps: 5, ..Default::default() },
-        )
-        .unwrap()
+        let ctx = GrowthContext::new(&params, &small, &large)
+            .with_batches(&mut mk)
+            .with_opts(LigoOptions { steps: 5, ..Default::default() });
+        ligo_op.grow(ctx).unwrap()
     };
     let task_stats = bench("grow/ligo_task_native[5 M-steps]", 1, 3, run_task_native);
     // the same loop with the fused linear kernels lowered away — the A/B

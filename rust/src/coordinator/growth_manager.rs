@@ -1,4 +1,6 @@
-//! The LiGO growth manager — the paper's §3.2/3.3 pipeline at runtime:
+//! The LiGO growth manager — the paper's §3.2/3.3 pipeline at runtime,
+//! behind the **one** public entry point
+//! [`Ligo::grow(ctx)`](crate::growth::ligo::Ligo):
 //!
 //! 1. initialize M with the stacking + neuron-duplication pattern
 //!    (Prop. 1: LiGO's family contains StackBERT/Net2Net, so this start
@@ -7,58 +9,45 @@
 //! 3. materialize Theta_large = M(Theta_small);
 //! 4. account the extra FLOPs (Table 3) and hand the params to the trainer.
 //!
-//! Routing goes through the runtime's [`Backend`](crate::runtime::Backend):
-//! when the `ligo_grad_{s}__{t}` / `ligo_apply_{s}__{t}` artifacts compile
-//! (the `pjrt`-feature fast path), M trains against the expanded model's
-//! *task loss* inside one fused XLA graph. Otherwise the manager runs the
-//! **native task-loss path**: each M-step expands `Theta_large =
-//! M(Theta_small)` ([`crate::growth::ligo::ligo_apply`]), runs the native
-//! engine's forward/backward ([`crate::model::loss_and_grads`]) on a real
-//! pretraining batch, and chains dL/dTheta_large through the fused
-//! `B W A^T` width pass and the depth blends
-//! ([`crate::growth::ligo::ligo_apply_backward`]) — the same objective as
-//! the artifact path, no XLA required. The surrogate least-squares fit
-//! ([`ligo_grow_surrogate`]) remains only as the fallback for when no task
-//! batches exist (or an unsupported family).
+//! Route selection happens **exactly once**, in the crate-internal
+//! `ligo_route`, from what the [`GrowthContext`] provides — callers never
+//! pick a route by hand,
+//! and every considered route is logged in [`GrowthOutcome::route`]:
+//!
+//! * **task-artifact** — context carries a runtime handle *and* a batch
+//!   source, and the `ligo_grad_{s}__{t}` / `ligo_apply_{s}__{t}` artifacts
+//!   compile (the `pjrt`-feature fast path): M trains against the expanded
+//!   model's *task loss* inside one fused XLA graph.
+//! * **task-native** — a batch source but no usable artifacts: each M-step
+//!   expands `Theta_large = M(Theta_small)`
+//!   ([`crate::growth::ligo::ligo_apply`]), runs the native engine's
+//!   forward/backward ([`crate::model::loss_and_grads`]) on a real
+//!   pretraining batch, and chains dL/dTheta_large through the fused
+//!   `B W A^T` width pass and the depth blends
+//!   ([`crate::growth::ligo::ligo_apply_backward`]) — the same objective as
+//!   the artifact path, no XLA required.
+//! * **surrogate** — no task batches (or an unsupported family): the
+//!   least-squares fit of [`crate::growth::ligo::Ligo::grow_with_loss`].
+//!
+//! Errors *inside* the chosen M-training loop are real failures and
+//! propagate — they must not silently switch the training objective.
+//! The legacy `ligo_grow_*` functions are crate-internal route
+//! implementations now; unit tests below pin each one bit-for-bit to its
+//! context configuration.
 
 use std::sync::Arc;
 
 use crate::config::ModelConfig;
 use crate::coordinator::flops;
 use crate::coordinator::optim::Sgd;
-use crate::error::{Context, Result};
+use crate::error::Result;
+use crate::growth::{GrowthContext, GrowthMetrics, GrowthOutcome, Objective};
 use crate::log_info;
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::Executable;
 use crate::tensor::{store::Store, Tensor};
 use crate::util::rng::Rng;
 
-/// Hyperparameters of the M-learning phase.
-#[derive(Debug, Clone)]
-pub struct LigoOptions {
-    pub steps: usize,
-    pub lr: f32,
-    pub momentum: f32,
-    pub init_noise: f32,
-    pub seed: u64,
-}
-
-impl Default for LigoOptions {
-    fn default() -> Self {
-        // 100 steps of SGD, as in the paper (§3.2 "Training").
-        LigoOptions { steps: 100, lr: 0.02, momentum: 0.9, init_noise: 0.01, seed: 0 }
-    }
-}
-
-/// Result of a growth: the large params + cost accounting.
-pub struct Grown {
-    pub params: Store,
-    pub extra_flops: f64,
-    pub wall_s: f64,
-    pub final_m_loss: f32,
-    /// Which M-learning objective produced these params:
-    /// "task-artifact" | "task-native" | "surrogate".
-    pub objective: &'static str,
-}
+pub use crate::growth::context::LigoOptions;
 
 /// Initialize the LiGO parameter store M from manifest shapes: width
 /// matrices get the cyclic duplication pattern, depth matrices the stacking
@@ -81,61 +70,92 @@ pub fn ligo_init_store(shapes: &[(String, Vec<usize>)], noise: f32, seed: u64) -
     store
 }
 
-/// Grow `small_params` into the target config by learning M on batches from
-/// `batches` (the pretraining distribution). Tries the artifact fast path
-/// first; falls back to the native path **only** when the backend cannot
-/// load/compile the artifacts (default no-`pjrt` build, or artifacts not
-/// built) — which still trains M on the true task loss via the native
-/// engine. Errors from the M-training loop itself are real failures and
-/// propagate — they must not silently switch the training objective.
-pub fn ligo_grow(
-    rt: &Runtime,
-    small: &ModelConfig,
-    large: &ModelConfig,
-    small_params: &Store,
-    batches: &mut dyn FnMut(usize) -> Store,
-    opts: &LigoOptions,
-) -> Result<Grown> {
-    let pair = format!("{}__{}", small.name, large.name);
-    let loaded = rt
-        .load(&format!("ligo_grad_{pair}"))
-        .and_then(|grad| rt.load(&format!("ligo_apply_{pair}")).map(|apply| (grad, apply)));
-    match loaded {
-        Ok((grad, apply)) => {
-            ligo_train_artifact(&grad, &apply, small, large, small_params, batches, opts)
-        }
-        Err(e) => {
-            log_info!(
-                "LiGO artifacts unavailable for {}->{} ({e}); using the native engine",
-                small.name,
-                large.name
-            );
-            ligo_grow_native(small, large, small_params, batches, opts)
-        }
+/// The single route-selection point behind `Ligo::grow(ctx)`: negotiate
+/// artifact vs. native task loss vs. surrogate from what the context
+/// provides, try each eligible route in preference order, and record every
+/// decision in the outcome's route log. M-learning options come from the
+/// context when set, else from the operator's own fields — explicitly-
+/// configured operators are never silently overridden by defaults.
+pub(crate) fn ligo_route(
+    op: &crate::growth::ligo::Ligo,
+    ctx: GrowthContext<'_, '_>,
+) -> Result<GrowthOutcome> {
+    let GrowthContext { small, small_cfg, large_cfg, runtime, mut batches, opts, seed } = ctx;
+    let mut opts = opts.unwrap_or_else(|| op.options());
+    if let Some(s) = seed {
+        opts.seed = s;
     }
+    let mut route: Vec<String> = Vec::new();
+
+    // ---- 1. artifact fast path (runtime handle + batch source) ----
+    if batches.is_none() && runtime.is_none() {
+        route.push("task-artifact: skipped (no runtime handle, no batch source)".into());
+    } else if batches.is_none() {
+        route.push("task-artifact: skipped (no batch source)".into());
+    } else if let Some(rt) = runtime {
+        let pair = format!("{}__{}", small_cfg.name, large_cfg.name);
+        let loaded = rt
+            .load(&format!("ligo_grad_{pair}"))
+            .and_then(|grad| rt.load(&format!("ligo_apply_{pair}")).map(|apply| (grad, apply)));
+        match loaded {
+            Ok((grad, apply)) => {
+                route.push("task-artifact: selected (artifacts compiled)".into());
+                let b = batches.as_mut().expect("batch source checked above");
+                let mut out = ligo_train_artifact(
+                    &grad, &apply, small_cfg, large_cfg, small, &mut **b, &opts,
+                )?;
+                out.route = route;
+                return Ok(out);
+            }
+            Err(e) => {
+                log_info!(
+                    "LiGO artifacts unavailable for {}->{} ({e}); using the native engine",
+                    small_cfg.name,
+                    large_cfg.name
+                );
+                route.push(format!("task-artifact: unavailable ({e})"));
+            }
+        }
+    } else {
+        route.push("task-artifact: skipped (no runtime handle)".into());
+    }
+
+    // ---- 2. native task loss (batch source + supported family) ----
+    if let Some(b) = batches.as_mut() {
+        if !crate::model::supports(large_cfg) {
+            route.push(format!(
+                "task-native: skipped (family '{}' unsupported by the native engine)",
+                large_cfg.family
+            ));
+        } else if !usable_task_batch(large_cfg, &(**b)(0)) {
+            route.push("task-native: skipped (batch 0 lacks the task keys)".into());
+        } else {
+            route.push("task-native: selected (native engine)".into());
+            let mut out = ligo_grow_task_native(small_cfg, large_cfg, small, &mut **b, &opts)?;
+            out.route = route;
+            return Ok(out);
+        }
+    } else {
+        route.push("task-native: skipped (no batch source)".into());
+    }
+
+    // ---- 3. surrogate fallback (always possible) ----
+    // the *reason* no better route ran is already in the log above (no
+    // batch source / missing task keys / unsupported family) — don't
+    // restate a possibly-wrong one here
+    log_info!(
+        "{} -> {}: training M on the surrogate objective [{}]",
+        small_cfg.name,
+        large_cfg.name,
+        route.join(" -> ")
+    );
+    route.push("surrogate: selected (fallback)".into());
+    let mut out = ligo_grow_surrogate(small_cfg, large_cfg, small, &opts)?;
+    out.route = route;
+    Ok(out)
 }
 
-/// The `pjrt`-feature fast path: M trained on the expanded model's task
-/// loss through the `ligo_grad_{s}__{t}` artifact, applied via
-/// `ligo_apply_{s}__{t}`. No fallback: artifact-load errors surface here.
-pub fn ligo_grow_artifact(
-    rt: &Runtime,
-    small: &ModelConfig,
-    large: &ModelConfig,
-    small_params: &Store,
-    batches: &mut dyn FnMut(usize) -> Store,
-    opts: &LigoOptions,
-) -> Result<Grown> {
-    let pair = format!("{}__{}", small.name, large.name);
-    let grad = rt
-        .load(&format!("ligo_grad_{pair}"))
-        .with_context(|| format!("no ligo_grad artifact for pair {pair}"))?;
-    let apply = rt.load(&format!("ligo_apply_{pair}"))?;
-    ligo_train_artifact(&grad, &apply, small, large, small_params, batches, opts)
-}
-
-/// The M-training loop over loaded artifacts (shared by [`ligo_grow`] and
-/// [`ligo_grow_artifact`]).
+/// The M-training loop over loaded artifacts (the task-artifact route).
 #[allow(clippy::too_many_arguments)]
 fn ligo_train_artifact(
     grad: &Arc<Executable>,
@@ -145,7 +165,7 @@ fn ligo_train_artifact(
     small_params: &Store,
     batches: &mut dyn FnMut(usize) -> Store,
     opts: &LigoOptions,
-) -> Result<Grown> {
+) -> Result<GrowthOutcome> {
     let timer = crate::util::timer::Timer::new();
     let mut m = ligo_init_store(&grad.manifest.shapes_of("ligo"), opts.init_noise, opts.seed);
     let mut sgd = Sgd::new(&m, opts.momentum);
@@ -170,12 +190,16 @@ fn ligo_train_artifact(
         .clone();
     let extra_flops = opts.steps as f64 * flops::ligo_step_flops(small, large)
         + flops::ligo_apply_flops(small, large);
-    Ok(Grown {
+    Ok(GrowthOutcome {
         params,
-        extra_flops,
-        wall_s: timer.elapsed(),
-        final_m_loss: last_loss,
-        objective: "task-artifact",
+        objective: Objective::TaskArtifact,
+        metrics: GrowthMetrics {
+            extra_flops,
+            wall_s: timer.elapsed(),
+            final_m_loss: last_loss,
+            m_steps: opts.steps,
+        },
+        route: Vec::new(),
     })
 }
 
@@ -188,41 +212,19 @@ fn usable_task_batch(cfg: &ModelConfig, batch: &Store) -> bool {
     }
 }
 
-/// The native no-XLA route: true task-loss M-learning through the native
-/// engine when task batches are available, else the surrogate fit. Family
-/// support and batch shape are decided from batch 0; errors *inside* the
-/// chosen M-training loop propagate (they must not switch the objective).
-pub fn ligo_grow_native(
-    small: &ModelConfig,
-    large: &ModelConfig,
-    small_params: &Store,
-    batches: &mut dyn FnMut(usize) -> Store,
-    opts: &LigoOptions,
-) -> Result<Grown> {
-    if crate::model::supports(large) && usable_task_batch(large, &batches(0)) {
-        ligo_grow_task_native(small, large, small_params, batches, opts)
-    } else {
-        log_info!(
-            "no task batches for {} -> {}; training M on the surrogate objective",
-            small.name,
-            large.name
-        );
-        ligo_grow_surrogate(small, large, small_params, opts)
-    }
-}
-
 /// True task-loss M-learning without XLA (paper Algorithm 1): per step,
 /// materialize `Theta_large = M(Theta_small)`, run the native engine's
 /// forward/backward on a pretraining batch, chain dL/dTheta_large through
 /// the expansion (`ligo_apply_backward`) into dL/dM, and take an
-/// SGD-momentum step on M.
-pub fn ligo_grow_task_native(
+/// SGD-momentum step on M. Crate-internal: reach it through
+/// `Ligo::grow(ctx)` with a batch source.
+pub(crate) fn ligo_grow_task_native(
     small: &ModelConfig,
     large: &ModelConfig,
     small_params: &Store,
     batches: &mut dyn FnMut(usize) -> Store,
     opts: &LigoOptions,
-) -> Result<Grown> {
+) -> Result<GrowthOutcome> {
     use crate::growth::ligo::{ligo_apply, ligo_apply_backward, ligo_init, m_lr_at};
     let timer = crate::util::timer::Timer::new();
     let mut m = ligo_init(small, large, opts.init_noise, opts.seed);
@@ -252,12 +254,16 @@ pub fn ligo_grow_task_native(
     }
     let extra_flops = opts.steps as f64 * flops::ligo_step_flops(small, large)
         + flops::ligo_apply_flops(small, large);
-    Ok(Grown {
+    Ok(GrowthOutcome {
         params,
-        extra_flops,
-        wall_s: timer.elapsed(),
-        final_m_loss: last_loss,
-        objective: "task-native",
+        objective: Objective::TaskNative,
+        metrics: GrowthMetrics {
+            extra_flops,
+            wall_s: timer.elapsed(),
+            final_m_loss: last_loss,
+            m_steps: opts.steps,
+        },
+        route: Vec::new(),
     })
 }
 
@@ -265,12 +271,14 @@ pub fn ligo_grow_task_native(
 /// (least-squares M-learning against the StackBERT+Interpolation ensemble),
 /// with FLOPs accounted analytically — M-steps backprop only through the
 /// expansion, not a large-model fwd/bwd, hence the cheaper per-step cost.
-pub fn ligo_grow_surrogate(
+/// Crate-internal: reach it through `Ligo::grow(ctx)` with a param-only
+/// context.
+pub(crate) fn ligo_grow_surrogate(
     small: &ModelConfig,
     large: &ModelConfig,
     small_params: &Store,
     opts: &LigoOptions,
-) -> Result<Grown> {
+) -> Result<GrowthOutcome> {
     let timer = crate::util::timer::Timer::new();
     let op = crate::growth::ligo::Ligo {
         steps: opts.steps,
@@ -282,12 +290,16 @@ pub fn ligo_grow_surrogate(
     let (params, final_m_loss) = op.grow_with_loss(small_params, small, large);
     let extra_flops = opts.steps as f64 * flops::ligo_native_step_flops(small, large)
         + flops::ligo_apply_flops(small, large);
-    Ok(Grown {
+    Ok(GrowthOutcome {
         params,
-        extra_flops,
-        wall_s: timer.elapsed(),
-        final_m_loss,
-        objective: "surrogate",
+        objective: Objective::Surrogate,
+        metrics: GrowthMetrics {
+            extra_flops,
+            wall_s: timer.elapsed(),
+            final_m_loss,
+            m_steps: opts.steps,
+        },
+        route: Vec::new(),
     })
 }
 
@@ -298,7 +310,9 @@ pub fn ligo_grow_surrogate(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::growth::testutil::{mk_cfg, small_store};
+    use crate::growth::by_name;
+    use crate::growth::testutil::{assert_store_eq, mk_cfg, small_store};
+    use crate::runtime::Runtime;
 
     #[test]
     fn init_pattern_is_stack_plus_noise() {
@@ -349,31 +363,114 @@ mod tests {
     }
 
     #[test]
-    fn ligo_grow_without_artifacts_trains_m_on_the_task_loss() {
+    fn context_with_batches_routes_to_the_task_loss_and_logs_the_chain() {
         let rt = Runtime::cpu(std::env::temp_dir().join("ligo_gm_no_artifacts")).unwrap();
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(4, 12, 3);
         let small = small_store(&cs);
         let opts = LigoOptions { steps: 5, ..Default::default() };
         let mut batches = |s: usize| mk_batch(&mk_cfg(4, 12, 3), 100 + s as u64);
-        let grown = ligo_grow(&rt, &cs, &cl, &small, &mut batches, &opts).unwrap();
-        assert_eq!(grown.objective, "task-native");
-        assert!(grown.final_m_loss.is_finite());
-        assert!(grown.extra_flops > 0.0);
+        let ctx = GrowthContext::new(&small, &cs, &cl)
+            .with_runtime(&rt)
+            .with_batches(&mut batches)
+            .with_opts(opts);
+        let grown = by_name("ligo").unwrap().grow(ctx).unwrap();
+        assert_eq!(grown.objective, Objective::TaskNative);
+        assert!(grown.metrics.final_m_loss.is_finite());
+        assert!(grown.metrics.extra_flops > 0.0);
+        assert_eq!(grown.metrics.m_steps, 5);
         assert_eq!(grown.params.len(), small_store(&cl).len());
         assert_eq!(grown.params.expect("L03_q_w").shape, vec![12, 12]);
+        // the fallback chain names the artifact route it passed over
+        assert!(
+            grown.route[0].starts_with("task-artifact:"),
+            "route log: {:?}",
+            grown.route
+        );
+        assert!(
+            grown.route.last().unwrap().contains("task-native: selected"),
+            "route log: {:?}",
+            grown.route
+        );
+    }
+
+    #[test]
+    fn task_native_route_is_reproduced_bit_for_bit_by_the_context() {
+        // equivalence pin: the ctx configuration (batches, no runtime) must
+        // reproduce the legacy ligo_grow_task_native route exactly
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        let opts = LigoOptions { steps: 4, ..Default::default() };
+        let mut b1 = |s: usize| mk_batch(&mk_cfg(4, 12, 3), 500 + s as u64);
+        let legacy = ligo_grow_task_native(&cs, &cl, &small, &mut b1, &opts).unwrap();
+        let mut b2 = |s: usize| mk_batch(&mk_cfg(4, 12, 3), 500 + s as u64);
+        let ctx = GrowthContext::new(&small, &cs, &cl)
+            .with_batches(&mut b2)
+            .with_opts(opts);
+        let unified = by_name("ligo").unwrap().grow(ctx).unwrap();
+        assert_eq!(unified.objective, legacy.objective);
+        assert_eq!(unified.metrics.final_m_loss, legacy.metrics.final_m_loss);
+        assert_store_eq(&unified.params, &legacy.params, "task-native equivalence");
+    }
+
+    #[test]
+    fn surrogate_route_is_reproduced_bit_for_bit_by_a_param_only_context() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        let opts = LigoOptions { steps: 6, ..Default::default() };
+        let legacy = ligo_grow_surrogate(&cs, &cl, &small, &opts).unwrap();
+        let ctx = GrowthContext::new(&small, &cs, &cl).with_opts(opts);
+        let unified = by_name("ligo").unwrap().grow(ctx).unwrap();
+        assert_eq!(unified.objective, Objective::Surrogate);
+        assert_eq!(unified.metrics.final_m_loss, legacy.metrics.final_m_loss);
+        assert_store_eq(&unified.params, &legacy.params, "surrogate equivalence");
+        assert!(
+            unified.route.iter().any(|r| r.contains("surrogate: selected")),
+            "route log: {:?}",
+            unified.route
+        );
+    }
+
+    #[test]
+    fn operator_fields_are_honored_when_the_context_sets_no_options() {
+        // `Ligo { steps: 3, .. }.grow(ctx)` without with_opts must run 3
+        // M-steps, not a silently-overriding 100-step default
+        use crate::growth::{ligo::Ligo, GrowthOperator};
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        let op = Ligo { steps: 3, ..Default::default() };
+        let grown = op.grow(GrowthContext::new(&small, &cs, &cl)).unwrap();
+        assert_eq!(grown.metrics.m_steps, 3);
+        assert_eq!(grown.objective, Objective::Surrogate);
+        // ...and an explicit context still wins
+        let ctx = GrowthContext::new(&small, &cs, &cl)
+            .with_opts(LigoOptions { steps: 2, ..Default::default() });
+        assert_eq!(op.grow(ctx).unwrap().metrics.m_steps, 2);
     }
 
     #[test]
     fn empty_batches_fall_back_to_the_surrogate_objective() {
+        // batches that lack the task keys must demote to the surrogate —
+        // with the skip reason in the route log, not silently
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(4, 12, 3);
         let small = small_store(&cs);
         let opts = LigoOptions { steps: 5, ..Default::default() };
         let mut batches = |_s: usize| Store::new();
-        let grown = ligo_grow_native(&cs, &cl, &small, &mut batches, &opts).unwrap();
-        assert_eq!(grown.objective, "surrogate");
-        assert!(grown.final_m_loss.is_finite());
+        let ctx = GrowthContext::new(&small, &cs, &cl)
+            .with_batches(&mut batches)
+            .with_opts(opts);
+        let grown = by_name("ligo").unwrap().grow(ctx).unwrap();
+        assert_eq!(grown.objective, Objective::Surrogate);
+        assert!(grown.metrics.final_m_loss.is_finite());
+        assert!(
+            grown.route.iter().any(|r| r.contains("task-native: skipped")),
+            "route log: {:?}",
+            grown.route
+        );
     }
 
     #[test]
@@ -399,12 +496,12 @@ mod tests {
             &LigoOptions { steps: 20, ..Default::default() },
         )
         .unwrap();
-        assert!(l0.final_m_loss.is_finite() && ln.final_m_loss.is_finite());
+        assert!(l0.metrics.final_m_loss.is_finite() && ln.metrics.final_m_loss.is_finite());
         assert!(
-            ln.final_m_loss < l0.final_m_loss,
+            ln.metrics.final_m_loss < l0.metrics.final_m_loss,
             "task-loss M-learning must descend: {} -> {}",
-            l0.final_m_loss,
-            ln.final_m_loss
+            l0.metrics.final_m_loss,
+            ln.metrics.final_m_loss
         );
     }
 
@@ -419,8 +516,8 @@ mod tests {
         let g9 =
             ligo_grow_surrogate(&cs, &cl, &small, &LigoOptions { steps: 9, ..Default::default() })
                 .unwrap();
-        assert!(g9.extra_flops > g5.extra_flops);
-        assert_eq!(g5.objective, "surrogate");
+        assert!(g9.metrics.extra_flops > g5.metrics.extra_flops);
+        assert_eq!(g5.objective, Objective::Surrogate);
         // a task-native step costs more FLOPs than a surrogate step (it
         // pays the large-model fwd/bwd on top of the expansion backprop)
         let mut batches = |_s: usize| mk_batch(&mk_cfg(4, 12, 3), 9);
@@ -432,6 +529,6 @@ mod tests {
             &LigoOptions { steps: 5, ..Default::default() },
         )
         .unwrap();
-        assert!(t5.extra_flops > g5.extra_flops);
+        assert!(t5.metrics.extra_flops > g5.metrics.extra_flops);
     }
 }

@@ -15,6 +15,9 @@ pub struct Curve {
     pub loss: Vec<f32>,
     /// Optional task metric (accuracy / EM) aligned with `loss`.
     pub metric: Vec<f32>,
+    /// Run events worth plotting as vertical markers — e.g. the growth
+    /// steps of a [`crate::coordinator::plan::GrowthPlan`] run.
+    pub marks: Vec<(usize, String)>,
 }
 
 impl Curve {
@@ -30,6 +33,11 @@ impl Curve {
         if let Some(m) = metric {
             self.metric.push(m);
         }
+    }
+
+    /// Record a run event (growth step, stage switch) at `step`.
+    pub fn mark(&mut self, step: usize, label: impl Into<String>) {
+        self.marks.push((step, label.into()));
     }
 
     pub fn final_loss(&self) -> f32 {
@@ -95,6 +103,20 @@ impl Curve {
             ("wall", Json::arr_f64(&self.wall)),
             ("loss", Json::Arr(self.loss.iter().map(|l| Json::Num(*l as f64)).collect())),
             ("metric", Json::Arr(self.metric.iter().map(|l| Json::Num(*l as f64)).collect())),
+            (
+                "marks",
+                Json::Arr(
+                    self.marks
+                        .iter()
+                        .map(|(s, l)| {
+                            Json::obj(vec![
+                                ("step", Json::Num(*s as f64)),
+                                ("label", Json::Str(l.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }

@@ -3,14 +3,19 @@
 //! * [`optim`] — AdamW / SGD-momentum over the named tensor store
 //! * [`flops`] — the analytic FLOPs ledger behind every figure's x-axis
 //! * [`metrics`] — loss curves, savings-at-threshold, CSV/JSON reports
-//! * [`trainer`] — the step loop (accumulation, freezing, eval hooks)
-//! * [`growth_manager`] — LiGO: init M, run the 100 M-SGD steps through the
-//!   `ligo_grad` artifact, apply, hand off to the trainer
+//! * [`trainer`] — the step loop (accumulation, freezing, eval hooks) and
+//!   mid-run [`plan::GrowthPlan`] execution
+//! * [`growth_manager`] — LiGO route selection behind the unified
+//!   `growth::GrowthContext` entry point: artifact / native task loss /
+//!   surrogate, chosen exactly once per grow
+//! * [`plan`] — builder-validated multi-stage growth schedules (2-stage
+//!   LiGO, progressive stacking)
 //! * [`strategies`] — layer dropping / token dropping / staged training (Fig. 5)
 
 pub mod flops;
 pub mod growth_manager;
 pub mod metrics;
 pub mod optim;
+pub mod plan;
 pub mod strategies;
 pub mod trainer;

@@ -52,6 +52,26 @@ impl AdamW {
         Self::new(params, tc.beta1, tc.beta2, tc.eps, tc.weight_decay, tc.grad_clip)
     }
 
+    /// Reset the optimizer for a new (grown) parameter set mid-run: fresh
+    /// zero moments over the new shapes, bias-correction step count back to
+    /// 0 (it tracks the new moments), freeze set cleared; hyperparameters
+    /// are kept. This is how a [`crate::coordinator::plan::GrowthPlan`]
+    /// stage swaps optimizer state through the grow machinery — the paper
+    /// reinitializes optimizer state after growth rather than mapping
+    /// moments through M.
+    pub fn rebuild(&mut self, params: &Store) {
+        self.m = Store::new();
+        self.v = Store::new();
+        for (name, t) in params.iter() {
+            if matches!(t.data, TensorData::F32(_)) {
+                self.m.insert(name.clone(), Tensor::zeros(&t.shape));
+                self.v.insert(name.clone(), Tensor::zeros(&t.shape));
+            }
+        }
+        self.t = 0;
+        self.frozen.clear();
+    }
+
     /// Freeze parameters matching a predicate (MSLT stages, adapter tuning).
     pub fn freeze_where(&mut self, params: &Store, pred: impl Fn(&str) -> bool) {
         self.frozen = params
@@ -217,6 +237,29 @@ mod tests {
         opt.unfreeze_all();
         opt.step(&mut p, &g, 0.1);
         assert_ne!(p.expect("w").f32s(), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn rebuild_resets_moments_and_freezes_for_grown_params() {
+        let mut p = one_param(1.0);
+        let mut g = Store::new();
+        g.insert("w", Tensor::from_f32(&[2, 1], vec![1.0, 1.0]));
+        let mut opt = AdamW::new(&p, 0.9, 0.999, 1e-8, 0.0, 0.0);
+        opt.freeze_where(&p, |n| n == "w");
+        opt.step(&mut p, &g, 0.1);
+        // grown params: different name set and shapes
+        let mut grown = Store::new();
+        grown.insert("w2", Tensor::from_f32(&[3, 1], vec![0.0; 3]));
+        opt.rebuild(&grown);
+        assert_eq!(opt.frozen_count(), 0, "freeze set must clear");
+        let mut g2 = Store::new();
+        g2.insert("w2", Tensor::from_f32(&[3, 1], vec![0.5; 3]));
+        opt.step(&mut grown, &g2, 0.1);
+        // first step after rebuild behaves like a fresh optimizer:
+        // update = -lr * g/|g| (see adamw_first_step_matches_closed_form)
+        for x in grown.expect("w2").f32s() {
+            assert!((x + 0.1).abs() < 1e-4, "{x}");
+        }
     }
 
     #[test]

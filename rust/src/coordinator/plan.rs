@@ -1,0 +1,248 @@
+//! Multi-stage growth schedules: grow mid-run, repeatedly.
+//!
+//! A [`GrowthPlan`] is a builder-validated schedule of
+//! `(step, target ModelConfig, operator)` stages that
+//! [`Trainer::run_plan`](crate::coordinator::trainer::Trainer::run_plan)
+//! executes mid-run: at each stage's step the trainer grows its parameters
+//! through the unified [`crate::growth::GrowthContext`] entry point, swaps
+//! in the grown params with fresh optimizer state, re-binds the target
+//! config's executables and keeps training — the paper's 2-stage LiGO runs
+//! and "Stacking Your Transformers"-style progressive stacking (Du et al.
+//! 2024) as data, not bespoke driver code.
+//!
+//! The builder rejects malformed schedules up front (non-monotone steps,
+//! shrinking or batch-incompatible targets, unknown operators) so a plan
+//! that builds is a plan the trainer can execute.
+
+use crate::bail;
+use crate::config::ModelConfig;
+use crate::error::{Context, Result};
+use crate::growth::{self, LigoOptions};
+
+/// One growth stage: at `at_step`, grow into `target` via `operator`.
+#[derive(Debug, Clone)]
+pub struct GrowthStage {
+    /// Optimizer step (absolute, within the run) at which to grow.
+    pub at_step: usize,
+    pub target: ModelConfig,
+    /// Registry name resolved through [`growth::by_name`].
+    pub operator: String,
+    /// M-learning budget for learned operators (ignored by the rest).
+    pub opts: LigoOptions,
+}
+
+/// A validated multi-stage growth schedule (see the module docs).
+#[derive(Debug, Clone)]
+pub struct GrowthPlan {
+    initial: ModelConfig,
+    stages: Vec<GrowthStage>,
+}
+
+impl GrowthPlan {
+    /// Start building a plan for a run that begins on `initial`.
+    pub fn builder(initial: &ModelConfig) -> GrowthPlanBuilder {
+        GrowthPlanBuilder { initial: initial.clone(), stages: Vec::new() }
+    }
+
+    /// The config the run must start on.
+    pub fn initial(&self) -> &ModelConfig {
+        &self.initial
+    }
+
+    pub fn stages(&self) -> &[GrowthStage] {
+        &self.stages
+    }
+
+    /// The final config the run ends on.
+    pub fn final_config(&self) -> &ModelConfig {
+        self.stages.last().map(|s| &s.target).unwrap_or(&self.initial)
+    }
+}
+
+/// Builder for [`GrowthPlan`]; `build` validates the whole schedule.
+#[derive(Debug)]
+pub struct GrowthPlanBuilder {
+    initial: ModelConfig,
+    stages: Vec<GrowthStage>,
+}
+
+impl GrowthPlanBuilder {
+    /// Add a stage with the default M-learning options.
+    pub fn grow_at(self, at_step: usize, target: &ModelConfig, operator: &str) -> Self {
+        self.grow_at_with(at_step, target, operator, LigoOptions::default())
+    }
+
+    /// Add a stage with explicit M-learning options.
+    pub fn grow_at_with(
+        mut self,
+        at_step: usize,
+        target: &ModelConfig,
+        operator: &str,
+        opts: LigoOptions,
+    ) -> Self {
+        self.stages.push(GrowthStage {
+            at_step,
+            target: target.clone(),
+            operator: operator.to_string(),
+            opts,
+        });
+        self
+    }
+
+    /// Validate and freeze the schedule. Rejects: steps that are zero or
+    /// not strictly increasing, targets that shrink (or change family /
+    /// batch geometry, which would break the run's batch source mid-way),
+    /// and operators the registry does not know.
+    pub fn build(self) -> Result<GrowthPlan> {
+        let mut prev = &self.initial;
+        let mut prev_step = 0usize;
+        for (i, stage) in self.stages.iter().enumerate() {
+            if stage.at_step == 0 {
+                bail!(
+                    "growth plan stage {i}: at_step must be > 0 (grow before training \
+                     starts by initializing the trainer with grown params instead)"
+                );
+            }
+            if i > 0 && stage.at_step <= prev_step {
+                bail!(
+                    "growth plan stage {i}: steps must be strictly increasing \
+                     ({prev_step} then {})",
+                    stage.at_step
+                );
+            }
+            check_growth_step(prev, &stage.target)
+                .with_context(|| format!("growth plan stage {i} ({} -> {})",
+                    prev.name, stage.target.name))?;
+            // resolve now so a typo fails at build time with the registry's
+            // own diagnostic (listing the known operators)
+            growth::by_name(&stage.operator)
+                .with_context(|| format!("growth plan stage {i}"))?;
+            prev = &stage.target;
+            prev_step = stage.at_step;
+        }
+        Ok(GrowthPlan { initial: self.initial, stages: self.stages })
+    }
+}
+
+/// One stage's config transition must genuinely grow and stay compatible
+/// with the run's batch source.
+fn check_growth_step(from: &ModelConfig, to: &ModelConfig) -> Result<()> {
+    if from.family != to.family {
+        bail!("family must not change ({} -> {})", from.family, to.family);
+    }
+    if to.layers < from.layers || to.dim < from.dim || to.ffn() < from.ffn() {
+        bail!(
+            "target must not shrink (layers {} -> {}, dim {} -> {}, ffn {} -> {})",
+            from.layers, to.layers, from.dim, to.dim, from.ffn(), to.ffn()
+        );
+    }
+    if to.layers == from.layers && to.dim == from.dim && to.ffn() == from.ffn() {
+        bail!("target is not larger in any dimension");
+    }
+    let batch_geom = |c: &ModelConfig| {
+        (c.vocab, c.seq, c.batch, c.img, c.patch, c.channels, c.n_classes)
+    };
+    if batch_geom(from) != batch_geom(to) {
+        bail!(
+            "batch geometry must match across stages (one batch source feeds \
+             the whole run): {:?} -> {:?}",
+            batch_geom(from),
+            batch_geom(to)
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::mk_cfg;
+
+    #[test]
+    fn valid_two_stage_plan_builds() {
+        let a = mk_cfg(2, 8, 2);
+        let b = mk_cfg(4, 8, 2);
+        let c = mk_cfg(4, 12, 3);
+        let plan = GrowthPlan::builder(&a)
+            .grow_at(10, &b, "stackbert")
+            .grow_at(20, &c, "ligo")
+            .build()
+            .unwrap();
+        assert_eq!(plan.stages().len(), 2);
+        assert_eq!(plan.initial().name, a.name);
+        assert_eq!(plan.final_config().name, c.name);
+    }
+
+    #[test]
+    fn empty_plan_is_a_plain_run() {
+        let a = mk_cfg(2, 8, 2);
+        let plan = GrowthPlan::builder(&a).build().unwrap();
+        assert!(plan.stages().is_empty());
+        assert_eq!(plan.final_config().name, a.name);
+    }
+
+    #[test]
+    fn rejects_non_monotone_steps() {
+        let a = mk_cfg(2, 8, 2);
+        let b = mk_cfg(3, 8, 2);
+        let c = mk_cfg(4, 8, 2);
+        let err = GrowthPlan::builder(&a)
+            .grow_at(10, &b, "stackbert")
+            .grow_at(10, &c, "stackbert")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("strictly increasing"), "{err}");
+        let err = GrowthPlan::builder(&a)
+            .grow_at(0, &b, "stackbert")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("at_step must be > 0"), "{err}");
+    }
+
+    #[test]
+    fn rejects_shrinking_or_lateral_targets() {
+        let a = mk_cfg(4, 12, 3);
+        let smaller = mk_cfg(2, 8, 2);
+        let err = GrowthPlan::builder(&a)
+            .grow_at(10, &smaller, "stackbert")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shrink"), "{err}");
+        // identical target: growing nowhere is a schedule bug too
+        let err = GrowthPlan::builder(&a)
+            .grow_at(10, &a, "stackbert")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not larger"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_operators_with_registry_diagnostics() {
+        let a = mk_cfg(2, 8, 2);
+        let b = mk_cfg(4, 8, 2);
+        let err = GrowthPlan::builder(&a)
+            .grow_at(10, &b, "nope")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown growth operator"), "{err}");
+        assert!(err.contains("stackbert"), "must list known names: {err}");
+    }
+
+    #[test]
+    fn rejects_batch_geometry_changes() {
+        let a = mk_cfg(2, 8, 2);
+        let mut b = mk_cfg(4, 12, 3);
+        b.vocab = 128; // different batch geometry mid-run
+        let err = GrowthPlan::builder(&a)
+            .grow_at(10, &b, "stackbert")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("batch geometry"), "{err}");
+    }
+}

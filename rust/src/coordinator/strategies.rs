@@ -7,10 +7,16 @@
 //!   skipped in the middle third of layers.
 //! * **Staged training** (Shen et al. 2022): train the small model for the
 //!   first stage, grow (with any operator), train the large model for the
-//!   rest — orchestrated by the experiment harness using the trainer.
+//!   rest. Since the growth-API redesign this is a one-stage
+//!   [`GrowthPlan`] executed by `Trainer::run_plan`; the generalization —
+//!   grow mid-run, repeatedly, as in "Stacking Your Transformers" (Du et
+//!   al. 2024) — is [`progressive_plan`] below.
 
 use crate::config::ModelConfig;
 use crate::coordinator::flops;
+use crate::coordinator::plan::GrowthPlan;
+use crate::error::Result;
+use crate::growth::LigoOptions;
 
 /// Progressive layer-dropping schedule: drop probability at `step`.
 /// Follows Zhang & He's ramp: theta(t) ramps from 0 to `max_drop` over the
@@ -37,6 +43,29 @@ pub fn strategy_flops(
 pub const MAX_LAYER_DROP: f32 = 0.1;
 pub const TOKEN_DROP: f32 = 0.15;
 
+/// Build a progressive growth schedule through a chain of configs
+/// (`models[0]` is the run's starting config): grow into `models[i]` at
+/// step `i * grow_every` using `operator` with `opts` — StackBERT-style
+/// progressive stacking when `operator == "stackbert"`, the paper's
+/// multi-stage LiGO runs when `"ligo"`. Validation (monotone steps,
+/// genuinely-growing compatible configs, known operator) comes from the
+/// [`GrowthPlan`] builder.
+pub fn progressive_plan(
+    models: &[ModelConfig],
+    grow_every: usize,
+    operator: &str,
+    opts: &LigoOptions,
+) -> Result<GrowthPlan> {
+    let Some((initial, targets)) = models.split_first() else {
+        crate::bail!("progressive_plan: need at least the starting config");
+    };
+    let mut b = GrowthPlan::builder(initial);
+    for (i, target) in targets.iter().enumerate() {
+        b = b.grow_at_with((i + 1) * grow_every.max(1), target, operator, opts.clone());
+    }
+    b.build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -49,6 +78,21 @@ mod tests {
         assert!(mid > 0.0 && mid < 0.1);
         assert!((layer_drop_p(50, 100, 0.1) - 0.1).abs() < 1e-6);
         assert!((layer_drop_p(99, 100, 0.1) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn progressive_plan_builds_the_expected_stages() {
+        let chain =
+            [mk_cfg(2, 8, 2), mk_cfg(4, 8, 2), mk_cfg(4, 12, 3)];
+        let plan =
+            progressive_plan(&chain, 50, "stackbert", &LigoOptions::default()).unwrap();
+        assert_eq!(plan.stages().len(), 2);
+        assert_eq!(plan.stages()[0].at_step, 50);
+        assert_eq!(plan.stages()[1].at_step, 100);
+        assert_eq!(plan.final_config().dim, 12);
+        // a shrinking chain is rejected by the builder
+        let bad = [mk_cfg(4, 8, 2), mk_cfg(2, 8, 2)];
+        assert!(progressive_plan(&bad, 50, "stackbert", &LigoOptions::default()).is_err());
     }
 
     #[test]

@@ -1,7 +1,11 @@
 //! The training loop: runs the `grad_*` artifact per microbatch, accumulates,
 //! applies AdamW with the schedule, and records (step, FLOPs, wall, loss)
 //! into a [`Curve`]. Evaluation runs the `fwd_*` artifact on held-out
-//! batches.
+//! batches. [`Trainer::run_plan`] additionally executes a
+//! [`GrowthPlan`] mid-run: at each stage's step the parameters grow through
+//! the unified `growth` entry point, optimizer state and executables are
+//! swapped for the target config, and training continues — with the growth
+//! step recorded as a [`Curve`] mark.
 
 use std::sync::Arc;
 
@@ -11,6 +15,8 @@ use crate::error::Result;
 use crate::coordinator::flops;
 use crate::coordinator::metrics::Curve;
 use crate::coordinator::optim::{accumulate, AdamW};
+use crate::coordinator::plan::{GrowthPlan, GrowthStage};
+use crate::log_info;
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::store::Store;
 use crate::util::timer::Timer;
@@ -147,6 +153,55 @@ impl Trainer {
     /// Full training run: returns the curve, evaluating every
     /// `tc.eval_every` steps.
     pub fn run(&mut self, name: &str, batches: &mut Batches, steps: usize) -> Result<Curve> {
+        self.run_inner(name, batches, steps, None)
+    }
+
+    /// Full training run executing a [`GrowthPlan`] mid-run: whenever the
+    /// trainer's step count reaches a stage's `at_step`, the current
+    /// parameters grow into the stage's target config through the unified
+    /// growth entry point (runtime handle + this run's train batches +
+    /// the stage's M-learning options), optimizer state is rebuilt for the
+    /// grown parameters, the target's executables are re-bound, and
+    /// training continues. Each growth is recorded as a [`Curve`] mark and
+    /// charged to the FLOPs ledger. The plan must start on the trainer's
+    /// current config; both are validated up front.
+    pub fn run_plan(
+        &mut self,
+        rt: &Runtime,
+        name: &str,
+        batches: &mut Batches,
+        steps: usize,
+        plan: &GrowthPlan,
+    ) -> Result<Curve> {
+        if plan.initial().name != self.cfg.name {
+            bail!(
+                "growth plan starts on '{}' but the trainer holds '{}'",
+                plan.initial().name,
+                self.cfg.name
+            );
+        }
+        // a stage this run can never reach would be skipped silently and
+        // the run would "succeed" on an intermediate config — reject it
+        // up front (stages fire while self.step < start + steps)
+        if let Some(st) = plan.stages().iter().find(|st| st.at_step >= self.step + steps) {
+            bail!(
+                "growth plan stage at step {} is unreachable in this run \
+                 (trainer steps {}..{}); extend `steps` or split the plan",
+                st.at_step,
+                self.step,
+                self.step + steps
+            );
+        }
+        self.run_inner(name, batches, steps, Some((rt, plan)))
+    }
+
+    fn run_inner(
+        &mut self,
+        name: &str,
+        batches: &mut Batches,
+        steps: usize,
+        plan: Option<(&Runtime, &GrowthPlan)>,
+    ) -> Result<Curve> {
         let mut curve = Curve::new(name);
         let timer = Timer::new();
         let accum = self.tc.grad_accum.max(1) as f64;
@@ -154,7 +209,23 @@ impl Trainer {
         // record the starting point (growth quality shows at step 0)
         let (l0, m0) = self.evaluate(&mut batches.eval, 4)?;
         curve.push(self.step, spent, self.wall_offset, l0, m0);
+        let mut next_stage = 0usize;
         for s in 0..steps {
+            if let Some((rt, plan)) = plan {
+                // strictly-increasing stage steps: at most one fires per
+                // step; `<=` also executes stages a resumed trainer is
+                // already past, in order, rather than skipping them
+                while next_stage < plan.stages().len()
+                    && plan.stages()[next_stage].at_step <= self.step
+                {
+                    let stage = &plan.stages()[next_stage];
+                    spent += self.execute_stage(rt, stage, &mut curve, &mut *batches.train)?;
+                    // eval immediately: the swap's quality shows at this step
+                    let (l, m) = self.evaluate(&mut batches.eval, 4)?;
+                    curve.push(self.step, spent, self.wall_offset + timer.elapsed(), l, m);
+                    next_stage += 1;
+                }
+            }
             let _train_loss = self.train_step(&mut batches.train)?;
             spent += self.flops_per_microbatch * accum;
             if (s + 1) % self.tc.eval_every == 0 || s + 1 == steps {
@@ -163,6 +234,62 @@ impl Trainer {
             }
         }
         Ok(curve)
+    }
+
+    /// Grow through one plan stage and swap the trainer onto the target.
+    /// Returns the growth's extra FLOPs (for the caller's ledger).
+    fn execute_stage(
+        &mut self,
+        rt: &Runtime,
+        stage: &GrowthStage,
+        curve: &mut Curve,
+        train: &mut dyn FnMut(usize) -> Store,
+    ) -> Result<f64> {
+        let op = crate::growth::by_name(&stage.operator)?;
+        let outcome = {
+            let ctx = crate::growth::GrowthContext::new(&self.params, &self.cfg, &stage.target)
+                .with_runtime(rt)
+                .with_batches(train)
+                .with_opts(stage.opts.clone());
+            op.grow(ctx)?
+        };
+        log_info!(
+            "growth plan @step {}: {} -> {} via {} [{}]",
+            self.step,
+            self.cfg.name,
+            stage.target.name,
+            stage.operator,
+            outcome.route_summary()
+        );
+        curve.mark(
+            self.step,
+            format!(
+                "grew {} -> {} via {} ({})",
+                self.cfg.name, stage.target.name, stage.operator, outcome.objective
+            ),
+        );
+        let extra = outcome.metrics.extra_flops;
+        self.adopt_grown(rt, &stage.target, outcome.params)?;
+        Ok(extra)
+    }
+
+    /// Swap this trainer onto a grown model mid-run: re-bind the target
+    /// config's executables, rebuild optimizer state for the grown
+    /// parameters ([`AdamW::rebuild`]), and update the per-step FLOPs.
+    /// The step counter and LR schedule continue uninterrupted. Extra
+    /// input-group bindings (`self.extra`, e.g. a KD teacher's parameters)
+    /// were shaped for the *old* executable pair and are dropped — binding
+    /// them into the grown model's executables would be a shape bug;
+    /// callers that still want them must re-attach post-growth stores.
+    pub fn adopt_grown(&mut self, rt: &Runtime, cfg: &ModelConfig, params: Store) -> Result<()> {
+        self.grad_exe = rt.load(&format!("grad_{}", cfg.name))?;
+        self.fwd_exe = rt.load(&format!("fwd_{}", cfg.name))?;
+        self.opt.rebuild(&params);
+        self.flops_per_microbatch = flops::train_step_flops(cfg);
+        self.cfg = cfg.clone();
+        self.params = params;
+        self.extra.clear();
+        Ok(())
     }
 }
 

@@ -5,7 +5,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::config::{ModelConfig, Registry, TrainConfig};
-use crate::coordinator::growth_manager::{ligo_grow, LigoOptions};
+use crate::coordinator::growth_manager::LigoOptions;
 use crate::coordinator::metrics::{savings, write_report, Curve};
 use crate::coordinator::trainer::{Batches, Trainer};
 use crate::data::batches::{lm_batch, mlm_batch};
@@ -165,8 +165,8 @@ pub fn init_large(
     match method {
         Method::Scratch => Ok((Trainer::scratch_params(rt, large, 1)?, 0.0, vec![])),
         Method::Operator(name) => {
-            let op = growth::by_name(name).expect("operator");
-            Ok((op.grow(small_params, small, large), 0.0, vec![]))
+            let op = growth::by_name(name)?;
+            Ok((growth::grow_params(op.as_ref(), small_params, small, large)?, 0.0, vec![]))
         }
         Method::Ki => Ok((
             Trainer::scratch_params(rt, large, 1)?,
@@ -189,12 +189,22 @@ pub fn init_large(
                     }
                 }
             };
-            let grown = ligo_grow(rt, small, large, small_params, &mut mk, opts)?;
+            let ctx = growth::GrowthContext::new(small_params, small, large)
+                .with_runtime(rt)
+                .with_batches(&mut mk)
+                .with_opts(opts.clone());
+            let grown = growth::by_name("ligo")?.grow(ctx)?;
             log_info!(
-                "LiGO grew {}->{} in {:.1}s, M-loss {:.3}, +{:.2e} FLOPs",
-                small.name, large.name, grown.wall_s, grown.final_m_loss, grown.extra_flops
+                "LiGO grew {}->{} in {:.1}s, M-loss {:.3} ({}), +{:.2e} FLOPs [{}]",
+                small.name,
+                large.name,
+                grown.metrics.wall_s,
+                grown.metrics.final_m_loss,
+                grown.objective,
+                grown.metrics.extra_flops,
+                grown.route_summary()
             );
-            Ok((grown.params, grown.extra_flops, vec![]))
+            Ok((grown.params, grown.metrics.extra_flops, vec![]))
         }
     }
 }

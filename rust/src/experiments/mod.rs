@@ -6,6 +6,7 @@
 
 pub mod common;
 pub mod figures;
+pub mod progressive;
 pub mod tables;
 
 use crate::bail;
@@ -13,10 +14,11 @@ use crate::config::Registry;
 use crate::error::Result;
 use crate::runtime::Runtime;
 
-/// All experiment ids in paper order.
-pub const ALL: [&str; 14] = [
+/// All experiment ids: the paper's figures/tables in paper order, then the
+/// beyond-the-paper scenarios ("progressive": multi-stage growth plans).
+pub const ALL: [&str; 15] = [
     "fig2", "fig2c", "fig3", "fig3c", "fig4", "fig5", "fig6", "fig7", "fig8",
-    "table1", "table2", "table3", "table5", "table6",
+    "table1", "table2", "table3", "table5", "table6", "progressive",
 ];
 
 /// Run one experiment by id. `scale` multiplies default step counts
@@ -43,6 +45,7 @@ pub fn run(
         "table3" => tables::table3(rt, reg, scale, out_dir),
         "table5" => tables::table5(rt, reg, scale, out_dir),
         "table6" => tables::table6(rt, reg, scale, out_dir),
+        "progressive" => progressive::progressive(rt, reg, scale, out_dir),
         "all" => {
             for id in ALL {
                 run(rt, reg, id, scale, out_dir)?;

@@ -1,0 +1,62 @@
+//! Progressive (multi-stage) growth scenarios — the schedules the unified
+//! growth API makes data-driven: a 2-stage LiGO run and StackBERT-style
+//! progressive stacking ("Stacking Your Transformers", Du et al. 2024),
+//! executed mid-run by `Trainer::run_plan` against a from-scratch
+//! BERT-Base baseline. Growth steps land in each curve's `marks`, so the
+//! report shows exactly where the model grew.
+
+use std::path::Path;
+
+use crate::config::Registry;
+use crate::coordinator::strategies::progressive_plan;
+use crate::coordinator::trainer::Trainer;
+use crate::data::corpus::Corpus;
+use crate::error::Result;
+use crate::growth::LigoOptions;
+use crate::log_info;
+use crate::runtime::Runtime;
+
+use super::common::{recipe_for, report, scaled, text_batches, LARGE_TRAIN_STEPS};
+
+/// `bert_small -> bert_d6w48 -> bert_base`, growing at 1/3 and 2/3 of the
+/// budget, vs. training BERT-Base from scratch for the whole budget.
+pub fn progressive(rt: &Runtime, reg: &Registry, scale: f64, out: &Path) -> Result<()> {
+    let small = reg.model("bert_small")?.clone();
+    let mid = reg.model("bert_d6w48")?.clone();
+    let large = reg.model("bert_base")?.clone();
+    let steps = scaled(LARGE_TRAIN_STEPS, scale);
+    let corpus = Corpus::new(large.vocab, 0);
+    let mut curves = Vec::new();
+
+    // scratch baseline: the large model for the whole budget
+    let params = Trainer::scratch_params(rt, &large, 1)?;
+    let mut tr = Trainer::new(rt, &large, recipe_for(&large, steps), params)?;
+    let mut b = text_batches(&corpus, &large, 0x9A01);
+    curves.push(tr.run("Scratch", &mut b, steps)?);
+
+    // multi-stage runs: start small, grow mid-run at 1/3 and 2/3
+    let m_opts = LigoOptions { steps: 25, ..Default::default() };
+    let grow_every = (steps / 3).max(1);
+    for (name, operator) in [("LiGO-2stage", "ligo"), ("StackBERT-prog", "stackbert")] {
+        let chain = [small.clone(), mid.clone(), large.clone()];
+        let plan = progressive_plan(&chain, grow_every, operator, &m_opts)?;
+        let params = Trainer::scratch_params(rt, &small, 0)?;
+        let mut tr = Trainer::new(rt, &small, recipe_for(&small, steps), params)?;
+        let mut b = text_batches(&corpus, &small, 0x9A02);
+        let curve = tr.run_plan(rt, name, &mut b, steps, &plan)?;
+        for (step, label) in &curve.marks {
+            log_info!("{name} mark @{step}: {label}");
+        }
+        curves.push(curve);
+    }
+
+    report(
+        "progressive",
+        "Progressive growth schedules (2-stage LiGO / progressive stacking) \
+         vs. scratch BERT-Base",
+        &curves,
+        &[],
+        false,
+        out,
+    )
+}

@@ -12,7 +12,7 @@ use crate::util::rng::Rng;
 
 use super::net2net::grow_width;
 use super::width::WidthMap;
-use super::{layer_key, layer_suffixes, GrowthOperator};
+use super::{layer_key, layer_suffixes, param_only_operator};
 
 #[derive(Debug, Default)]
 pub struct Aki;
@@ -51,12 +51,10 @@ fn advance_new_rows(out: &mut Store, cfg_s: &ModelConfig, emb: &WidthMap, ffn: &
     }
 }
 
-impl GrowthOperator for Aki {
-    fn name(&self) -> &'static str {
-        "aki"
-    }
-
-    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+impl Aki {
+    /// The parameter-space expansion (the whole operator; `grow(ctx)` wraps
+    /// it into a [`super::GrowthOutcome`]).
+    pub fn expand(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
         let mut rng = Rng::new(0xA41);
         let emb = WidthMap::random(cfg_s.dim, cfg_l.dim, &mut rng);
         let ffn = WidthMap::random(cfg_s.ffn(), cfg_l.ffn(), &mut rng);
@@ -74,6 +72,8 @@ impl GrowthOperator for Aki {
     }
 }
 
+param_only_operator!(Aki, "aki");
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,7 +83,7 @@ mod tests {
     fn shapes_and_depth_stacking() {
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(4, 12, 3);
-        let big = Aki.grow(&small_store(&cs), &cs, &cl);
+        let big = Aki.expand(&small_store(&cs), &cs, &cl);
         assert_eq!(big.expect(&layer_key(0, "q_w")).shape, vec![12, 12]);
         // stacked layers duplicate lower ones
         assert_eq!(
@@ -102,7 +102,7 @@ mod tests {
         // plain duplication of layer 0's own rows.
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(2, 12, 3);
-        let big = Aki.grow(&small_store(&cs), &cs, &cl);
+        let big = Aki.expand(&small_store(&cs), &cs, &cl);
         let l0 = big.expect(&layer_key(0, "q_w"));
         let l1 = big.expect(&layer_key(1, "q_w"));
         // rows 8..12 of layer0 equal rows 8..12 of layer1 (donor copy)

@@ -1,0 +1,274 @@
+//! The unified growth API: one capability-negotiated entry point for every
+//! operator in the zoo.
+//!
+//! A [`GrowthContext`] bundles everything a growth operator *may* use —
+//! borrowed small-model parameters and configs (always), an optional
+//! [`Runtime`] handle (artifact fast paths), an optional task-batch source
+//! (task-loss M-learning) and the M-learning budget ([`LigoOptions`]). Each
+//! operator's [`capabilities`](super::GrowthOperator::capabilities)
+//! advertises which of those it can exploit; `grow(ctx)` decides the actual
+//! route exactly once from what the context provides and records the
+//! decision chain in the returned [`GrowthOutcome`] — callers never pick
+//! artifact-vs-native-vs-surrogate themselves.
+
+use std::fmt;
+
+use crate::config::ModelConfig;
+use crate::runtime::Runtime;
+use crate::tensor::store::Store;
+
+/// What a growth operator can make use of (not what it demands): every
+/// operator must work from a param-only context; the extra capabilities
+/// unlock better objectives when the context provides the inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Capability {
+    /// Grows from the small parameters alone.
+    ParamOnly,
+    /// Can exploit a task-batch source (M-learning on the true task loss).
+    NeedsBatches,
+    /// Can exploit a runtime handle (AOT `ligo_grad_*`/`ligo_apply_*`
+    /// artifact fast paths).
+    NeedsRuntime,
+}
+
+impl Capability {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Capability::ParamOnly => "param-only",
+            Capability::NeedsBatches => "batches",
+            Capability::NeedsRuntime => "runtime",
+        }
+    }
+}
+
+impl fmt::Display for Capability {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Hyperparameters of the M-learning phase (learned operators only; the
+/// non-learned zoo ignores them).
+#[derive(Debug, Clone)]
+pub struct LigoOptions {
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub init_noise: f32,
+    pub seed: u64,
+}
+
+impl Default for LigoOptions {
+    fn default() -> Self {
+        // 100 steps of SGD, as in the paper (§3.2 "Training").
+        LigoOptions { steps: 100, lr: 0.02, momentum: 0.9, init_noise: 0.01, seed: 0 }
+    }
+}
+
+/// Which M-learning objective produced the grown parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// M trained on the task loss through the fused `ligo_grad_*` artifact.
+    TaskArtifact,
+    /// M trained on the task loss through the native engine.
+    TaskNative,
+    /// M trained on the surrogate least-squares fit (no task batches).
+    Surrogate,
+    /// No M-learning: a non-learned parameter-space operator.
+    ParamOnly,
+}
+
+impl Objective {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Objective::TaskArtifact => "task-artifact",
+            Objective::TaskNative => "task-native",
+            Objective::Surrogate => "surrogate",
+            Objective::ParamOnly => "param-only",
+        }
+    }
+}
+
+impl fmt::Display for Objective {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Cost accounting of one growth.
+#[derive(Debug, Clone, Copy)]
+pub struct GrowthMetrics {
+    /// FLOPs spent growing (M-steps + the final apply); charge this to the
+    /// trainer's `flops_offset`.
+    pub extra_flops: f64,
+    pub wall_s: f64,
+    /// Final M-learning loss (`NaN` for non-learned operators).
+    pub final_m_loss: f32,
+    /// M-steps actually taken (0 for non-learned operators).
+    pub m_steps: usize,
+}
+
+/// Typed result of a growth: the grown parameters, which objective produced
+/// them, cost metrics, and the route-selection log (one line per considered
+/// route, in decision order) — replaces the old stringly-typed `Grown`.
+pub struct GrowthOutcome {
+    pub params: Store,
+    pub objective: Objective,
+    pub metrics: GrowthMetrics,
+    /// Why this route: every considered route with the reason it was taken
+    /// or passed over, e.g. `["task-artifact: unavailable (no ligo_grad
+    /// artifact...)", "task-native: selected"]`.
+    pub route: Vec<String>,
+}
+
+impl GrowthOutcome {
+    /// Outcome of a non-learned parameter-space operator.
+    pub fn param_only(params: Store, wall_s: f64) -> GrowthOutcome {
+        GrowthOutcome {
+            params,
+            objective: Objective::ParamOnly,
+            metrics: GrowthMetrics {
+                extra_flops: 0.0,
+                wall_s,
+                final_m_loss: f32::NAN,
+                m_steps: 0,
+            },
+            route: vec!["param-only: direct expansion".into()],
+        }
+    }
+
+    /// The route log as one printable line.
+    pub fn route_summary(&self) -> String {
+        self.route.join(" -> ")
+    }
+}
+
+/// Everything a growth operator may consume, borrowed from the caller:
+/// the small model (params + config), the target config, and — optionally —
+/// a runtime handle, a task-batch source (`step -> batch`) and the
+/// M-learning options. Build one with [`GrowthContext::new`] and the
+/// `with_*` methods; a bare `new` context is param-only.
+///
+/// The batch source carries its own lifetime `'b`: the `&mut dyn FnMut`
+/// trait-object bound is invariant behind the mutable reference, so tying
+/// it to the (covariant) data lifetime `'a` would force every caller's
+/// parameter borrow to outlive the batch closure's — which a function that
+/// borrows its own fields (e.g. `Trainer::run_plan`'s stage execution)
+/// cannot promise.
+pub struct GrowthContext<'a, 'b> {
+    pub small: &'a Store,
+    pub small_cfg: &'a ModelConfig,
+    pub large_cfg: &'a ModelConfig,
+    /// Runtime handle for artifact fast paths (capability
+    /// [`Capability::NeedsRuntime`]).
+    pub runtime: Option<&'a Runtime>,
+    /// Task-batch source, `step -> batch` (capability
+    /// [`Capability::NeedsBatches`]).
+    pub batches: Option<&'b mut dyn FnMut(usize) -> Store>,
+    /// M-learning budget and hyperparameters (learned operators only).
+    /// `None` means "not specified": the operator falls back to its own
+    /// configuration (e.g. [`super::ligo::Ligo`]'s fields) rather than
+    /// silently overriding it with defaults.
+    pub opts: Option<LigoOptions>,
+    /// RNG-seed override, merged into whichever options win (explicit or
+    /// operator-owned) — so seeding a run never drags default options in.
+    pub seed: Option<u64>,
+}
+
+impl<'a, 'b> GrowthContext<'a, 'b> {
+    /// A param-only context: enough for every operator's fallback route.
+    pub fn new(
+        small: &'a Store,
+        small_cfg: &'a ModelConfig,
+        large_cfg: &'a ModelConfig,
+    ) -> GrowthContext<'a, 'b> {
+        GrowthContext {
+            small,
+            small_cfg,
+            large_cfg,
+            runtime: None,
+            batches: None,
+            opts: None,
+            seed: None,
+        }
+    }
+
+    /// Offer a runtime handle (unlocks artifact fast paths).
+    pub fn with_runtime(mut self, rt: &'a Runtime) -> GrowthContext<'a, 'b> {
+        self.runtime = Some(rt);
+        self
+    }
+
+    /// Offer a task-batch source (unlocks task-loss M-learning).
+    pub fn with_batches(
+        mut self,
+        batches: &'b mut dyn FnMut(usize) -> Store,
+    ) -> GrowthContext<'a, 'b> {
+        self.batches = Some(batches);
+        self
+    }
+
+    /// Set the M-learning budget/options explicitly (overrides the
+    /// operator's own configuration).
+    pub fn with_opts(mut self, opts: LigoOptions) -> GrowthContext<'a, 'b> {
+        self.opts = Some(opts);
+        self
+    }
+
+    /// Override the RNG seed without touching the rest of the options:
+    /// the seed is merged into whichever [`LigoOptions`] the operator
+    /// resolves (the context's, else its own).
+    pub fn with_seed(mut self, seed: u64) -> GrowthContext<'a, 'b> {
+        self.seed = Some(seed);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::{mk_cfg, small_store};
+
+    #[test]
+    fn default_context_is_param_only() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        let ctx = GrowthContext::new(&small, &cs, &cl);
+        assert!(ctx.runtime.is_none());
+        assert!(ctx.batches.is_none());
+        assert!(ctx.opts.is_none(), "unset options defer to the operator");
+    }
+
+    #[test]
+    fn builder_attaches_batches_and_seed() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        let mut mk = |_s: usize| Store::new();
+        let ctx = GrowthContext::new(&small, &cs, &cl).with_batches(&mut mk).with_seed(7);
+        assert!(ctx.batches.is_some());
+        assert_eq!(ctx.seed, Some(7));
+        // seeding must NOT forge full default options over the operator's
+        assert!(ctx.opts.is_none());
+    }
+
+    #[test]
+    fn objective_and_capability_labels_are_stable() {
+        // route logs and reports print these; keep them stable
+        assert_eq!(Objective::TaskArtifact.to_string(), "task-artifact");
+        assert_eq!(Objective::TaskNative.to_string(), "task-native");
+        assert_eq!(Objective::Surrogate.to_string(), "surrogate");
+        assert_eq!(Objective::ParamOnly.to_string(), "param-only");
+        assert_eq!(Capability::NeedsBatches.to_string(), "batches");
+    }
+
+    #[test]
+    fn param_only_outcome_shape() {
+        let o = GrowthOutcome::param_only(Store::new(), 0.5);
+        assert_eq!(o.objective, Objective::ParamOnly);
+        assert_eq!(o.metrics.extra_flops, 0.0);
+        assert!(o.metrics.final_m_loss.is_nan());
+        assert!(o.route_summary().contains("param-only"));
+    }
+}

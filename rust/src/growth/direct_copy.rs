@@ -8,7 +8,7 @@ use crate::tensor::{store::Store, Tensor};
 use crate::util::rng::Rng;
 
 use super::width::corner_embed;
-use super::{layer_key, layer_suffixes, GrowthOperator};
+use super::{layer_key, layer_suffixes, param_only_operator};
 
 #[derive(Debug)]
 pub struct DirectCopy {
@@ -29,12 +29,10 @@ fn grow_vec(t: &Tensor, d2: usize, noise: f32, rng: &mut Rng) -> Tensor {
     Tensor::from_f32(&[d2], out)
 }
 
-impl GrowthOperator for DirectCopy {
-    fn name(&self) -> &'static str {
-        "direct_copy"
-    }
-
-    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+impl DirectCopy {
+    /// The parameter-space expansion (the whole operator; `grow(ctx)` wraps
+    /// it into a [`super::GrowthOutcome`]).
+    pub fn expand(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
         let mut rng = Rng::new(0xD1DC);
         let d2 = cfg_l.dim;
         let f2 = cfg_l.ffn();
@@ -75,6 +73,8 @@ impl GrowthOperator for DirectCopy {
     }
 }
 
+param_only_operator!(DirectCopy, "direct_copy");
+
 /// LN parameters extend with their neutral element (gain 1, bias 0).
 fn grow_ln(t: &Tensor, d2: usize, neutral: f32) -> Tensor {
     let mut out = t.f32s().to_vec();
@@ -92,7 +92,7 @@ mod tests {
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(2, 12, 3);
         let small = small_store(&cs);
-        let big = DirectCopy::default().grow(&small, &cs, &cl);
+        let big = DirectCopy::default().expand(&small, &cs, &cl);
         let (s, b) = (small.expect("L00_q_w"), big.expect("L00_q_w"));
         for i in 0..8 {
             for j in 0..8 {
@@ -106,7 +106,7 @@ mod tests {
     fn ln_gains_extend_with_ones() {
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(2, 12, 3);
-        let big = DirectCopy::default().grow(&small_store(&cs), &cs, &cl);
+        let big = DirectCopy::default().expand(&small_store(&cs), &cs, &cl);
         let g = big.expect("L00_ln1_g");
         assert_eq!(&g.f32s()[8..], &[1.0, 1.0, 1.0, 1.0]);
         let b = big.expect("L01_ln2_b");
@@ -117,7 +117,7 @@ mod tests {
     fn depth_growth_stacks() {
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(4, 8, 2);
-        let big = DirectCopy { noise: 0.0 }.grow(&small_store(&cs), &cs, &cl);
+        let big = DirectCopy { noise: 0.0 }.expand(&small_store(&cs), &cs, &cl);
         assert_eq!(big.expect("L02_fc1_b"), big.expect("L00_fc1_b"));
     }
 
@@ -125,7 +125,7 @@ mod tests {
     fn all_target_tensors_present() {
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(3, 12, 3);
-        let big = DirectCopy::default().grow(&small_store(&cs), &cs, &cl);
+        let big = DirectCopy::default().expand(&small_store(&cs), &cs, &cl);
         assert_eq!(big.with_prefix("L02_").len(), 16);
         assert_eq!(big.expect("emb_tok").shape, vec![64, 12]);
     }

@@ -1,0 +1,265 @@
+//! LEMON-style **exactly loss-preserving** expansion (Wang et al. 2023,
+//! "LEMON: Lossless Model Expansion"), built entirely on the untied
+//! [`selection_m`](super::ligo::selection_m) machinery — the ROADMAP's
+//! "lossless-expansion baselines" item.
+//!
+//! The construction is the Prop. 1 Net2Net instance restricted to the
+//! regime where it is *exact at the model level*, plus one tied-head
+//! correction:
+//!
+//! * **Width** — cyclic duplication on every out-expansion (`B_*`) and
+//!   multiplicity-normalized duplication on the untied in-expansions
+//!   (`A_emb`/`A_v`/`A_fc1`, Net2Net's `D^-1`). With an *integer*
+//!   expansion ratio every feature is duplicated with equal multiplicity,
+//!   so LayerNorm statistics (mean, variance, even the `eps` term) are
+//!   preserved exactly — the thing that makes plain Net2Net only
+//!   approximately preserving. Keeping the per-head dimension fixed
+//!   (heads grow with the width) makes each large attention head an exact
+//!   copy of a small head, so the `1/sqrt(d_head)` scale and the softmax
+//!   are untouched.
+//! * **Depth** — near-identity blocks (zeroed `o`/`fc2` projections, the
+//!   [`DepthInit::NearIdentity`](super::ligo::DepthInit) pattern): new
+//!   blocks write nothing into the residual stream.
+//! * **Tied LM head** — the token table must duplicate columns
+//!   (unnormalized) for the embedding read, so the tied logit dot-product
+//!   picks up one factor of the expansion ratio `k`; the final LayerNorm's
+//!   `g`/`b` are scaled by `1/k` to cancel it (its output feeds only the
+//!   head). Vision heads (`head_w`) ride the normalized in-expansion and
+//!   need no correction.
+//!
+//! The result: `loss(grown, batch) == loss(small, batch)` to float
+//! round-off (≤1e-5, asserted against [`crate::model::loss_only`] below).
+//! Pairs outside the exact regime (non-integer width ratio, changed
+//! per-head dim, shrinking depth) are rejected with a diagnostic rather
+//! than silently degrading to "approximately preserving".
+
+use crate::bail;
+use crate::config::ModelConfig;
+use crate::error::Result;
+use crate::tensor::store::Store;
+use crate::util::timer::Timer;
+
+use super::ligo::{ligo_apply, selection_m, DepthInit};
+use super::{Capability, GrowthContext, GrowthOperator, GrowthOutcome};
+
+/// The LEMON-style exact expansion operator.
+#[derive(Debug, Default)]
+pub struct Lemon;
+
+impl Lemon {
+    /// Is `(cfg_s -> cfg_l)` inside the exact-preservation regime? Errors
+    /// name the violated requirement.
+    pub fn check_pair(cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Result<()> {
+        if cfg_s.family != cfg_l.family {
+            bail!("lemon: family mismatch ({} vs {})", cfg_s.family, cfg_l.family);
+        }
+        if cfg_l.dim % cfg_s.dim != 0 {
+            bail!(
+                "lemon: width must grow by an integer factor (dim {} -> {}); \
+                 unequal duplication multiplicities would shift LayerNorm statistics",
+                cfg_s.dim,
+                cfg_l.dim
+            );
+        }
+        if cfg_l.ffn() % cfg_s.ffn() != 0 {
+            bail!("lemon: FFN dim must grow by an integer factor ({} -> {})",
+                cfg_s.ffn(), cfg_l.ffn());
+        }
+        if cfg_s.dim % cfg_s.heads != 0 || cfg_l.dim % cfg_l.heads != 0 {
+            bail!("lemon: head count must divide the model dim");
+        }
+        if cfg_s.dim / cfg_s.heads != cfg_l.dim / cfg_l.heads {
+            bail!(
+                "lemon: per-head dim must stay fixed ({} -> {}); a changed \
+                 1/sqrt(d_head) scale breaks exactness",
+                cfg_s.dim / cfg_s.heads,
+                cfg_l.dim / cfg_l.heads
+            );
+        }
+        if cfg_l.layers < cfg_s.layers {
+            bail!("lemon: cannot shrink depth ({} -> {})", cfg_s.layers, cfg_l.layers);
+        }
+        if cfg_s.is_vision() {
+            let geom = |c: &ModelConfig| (c.img, c.patch, c.n_classes);
+            if geom(cfg_s) != geom(cfg_l) {
+                bail!("lemon: vision img/patch/classes must match");
+            }
+            if cfg_s.cls_layers != cfg_l.cls_layers {
+                bail!("lemon: class-attention depth must match");
+            }
+        } else if (cfg_s.vocab, cfg_s.seq) != (cfg_l.vocab, cfg_l.seq) {
+            bail!("lemon: vocab/seq must match");
+        }
+        Ok(())
+    }
+
+    /// The exact expansion; errors when the pair is outside the exact
+    /// regime (see [`Lemon::check_pair`]).
+    pub fn expand(
+        &self,
+        small: &Store,
+        cfg_s: &ModelConfig,
+        cfg_l: &ModelConfig,
+    ) -> Result<Store> {
+        Self::check_pair(cfg_s, cfg_l)?;
+        let m = selection_m(cfg_s, cfg_l, DepthInit::NearIdentity, true);
+        let mut out = ligo_apply(&m, small, cfg_s, cfg_l);
+        // Tied LM head correction: the duplicated residual stream dotted
+        // with the duplicated token table over-counts by k = d2/d1; cancel
+        // it in the final LN, whose output feeds only the head. Probe/
+        // vision heads ride the normalized in-expansion instead.
+        let k = (cfg_l.dim / cfg_s.dim) as f32;
+        if !cfg_s.is_vision() && cfg_s.n_classes == 0 && k > 1.0 {
+            for name in ["final_ln_g", "final_ln_b"] {
+                for v in out.get_mut(name).expect("text models carry a final LN").f32s_mut() {
+                    *v /= k;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl GrowthOperator for Lemon {
+    fn name(&self) -> &'static str {
+        "lemon"
+    }
+
+    fn capabilities(&self) -> &'static [Capability] {
+        &[Capability::ParamOnly]
+    }
+
+    fn grow(&self, ctx: GrowthContext<'_, '_>) -> Result<GrowthOutcome> {
+        let timer = Timer::new();
+        let params = self.expand(ctx.small, ctx.small_cfg, ctx.large_cfg)?;
+        let mut outcome = GrowthOutcome::param_only(params, timer.elapsed());
+        outcome.route = vec!["param-only: exact (loss-preserving) expansion".into()];
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::{full_store, mk_cfg, mk_vision_cfg, small_store};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn text_batch(cfg: &ModelConfig, seed: u64) -> Store {
+        let mut rng = Rng::new(seed);
+        let (b, s) = (cfg.batch, cfg.seq);
+        let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let labels: Vec<i32> = tokens
+            .iter()
+            .map(|&t| if rng.coin(0.3) { t } else { -1 })
+            .collect();
+        let mut st = Store::new();
+        st.insert("tokens", Tensor::from_i32(&[b, s], tokens));
+        st.insert("labels", Tensor::from_i32(&[b, s], labels));
+        st
+    }
+
+    fn vision_batch(cfg: &ModelConfig, seed: u64) -> Store {
+        let mut rng = Rng::new(seed);
+        let n = cfg.batch * cfg.img * cfg.img * cfg.channels;
+        let images: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let labels: Vec<i32> =
+            (0..cfg.batch).map(|_| rng.below(cfg.n_classes) as i32).collect();
+        let mut st = Store::new();
+        st.insert(
+            "images",
+            Tensor::from_f32(&[cfg.batch, cfg.img, cfg.img, cfg.channels], images),
+        );
+        st.insert("labels", Tensor::from_i32(&[cfg.batch], labels));
+        st
+    }
+
+    /// The ROADMAP acceptance check: small vs. grown loss equal to ≤1e-5
+    /// through the native engine, on depth-only, width-only and combined
+    /// text expansions.
+    #[test]
+    fn text_expansion_preserves_the_loss_exactly() {
+        let cs = mk_cfg(2, 8, 2);
+        let small = small_store(&cs);
+        let batch = text_batch(&cs, 11);
+        let (l_small, _) = crate::model::loss_only(&cs, &small, &batch).unwrap();
+        for cl in [
+            mk_cfg(4, 8, 2),  // depth-only (near-identity blocks)
+            mk_cfg(2, 16, 4), // width-only (k = 2, fixed d_head)
+            mk_cfg(4, 16, 4), // combined
+            mk_cfg(3, 24, 6), // k = 3, non-power-of-two multiplicity
+        ] {
+            let big = Lemon.expand(&small, &cs, &cl).unwrap();
+            let (l_big, _) = crate::model::loss_only(&cl, &big, &batch).unwrap();
+            assert!(
+                (l_small - l_big).abs() <= 1e-5,
+                "{}: loss must be preserved: {l_small} vs {l_big}",
+                cl.name
+            );
+        }
+    }
+
+    #[test]
+    fn gpt_and_vision_expansions_preserve_the_loss() {
+        // causal text
+        let mut cs = mk_cfg(2, 8, 2);
+        cs.family = "gpt".into();
+        let small = small_store(&cs);
+        let batch = text_batch(&cs, 13);
+        let (ls, _) = crate::model::loss_only(&cs, &small, &batch).unwrap();
+        let mut cl = mk_cfg(3, 16, 4);
+        cl.family = "gpt".into();
+        let big = Lemon.expand(&small, &cs, &cl).unwrap();
+        let (lb, _) = crate::model::loss_only(&cl, &big, &batch).unwrap();
+        assert!((ls - lb).abs() <= 1e-5, "gpt: {ls} vs {lb}");
+        // vision (vit + cait incl. the class-attention stage)
+        for family in ["vit", "cait"] {
+            let cs = mk_vision_cfg(family, 2, 8, 2);
+            let cl = mk_vision_cfg(family, 3, 16, 4);
+            let small = full_store(&cs);
+            let batch = vision_batch(&cs, 17);
+            let (ls, ms) = crate::model::loss_only(&cs, &small, &batch).unwrap();
+            let big = Lemon.expand(&small, &cs, &cl).unwrap();
+            let (lb, mb) = crate::model::loss_only(&cl, &big, &batch).unwrap();
+            assert!((ls - lb).abs() <= 1e-5, "{family}: {ls} vs {lb}");
+            assert_eq!(ms, mb, "{family}: accuracy metric must be preserved too");
+        }
+    }
+
+    #[test]
+    fn rejects_pairs_outside_the_exact_regime() {
+        let cs = mk_cfg(2, 8, 2);
+        // non-integer width ratio
+        let err = Lemon::check_pair(&cs, &mk_cfg(2, 12, 3)).unwrap_err().to_string();
+        assert!(err.contains("integer factor"), "{err}");
+        // changed per-head dim (heads fixed while width doubles)
+        let err = Lemon::check_pair(&cs, &mk_cfg(2, 16, 2)).unwrap_err().to_string();
+        assert!(err.contains("per-head"), "{err}");
+        // shrinking depth
+        let err = Lemon::check_pair(&cs, &mk_cfg(1, 8, 2)).unwrap_err().to_string();
+        assert!(err.contains("shrink"), "{err}");
+        // and the trait entry point surfaces the same diagnostics
+        let small = small_store(&cs);
+        let cl = mk_cfg(2, 12, 3);
+        let ctx = GrowthContext::new(&small, &cs, &cl);
+        assert!(Lemon.grow(ctx).is_err());
+    }
+
+    #[test]
+    fn grown_params_are_trainable_not_degenerate() {
+        // exactness must not come from an all-zero model: the expansion
+        // keeps the small weights (duplicated) in every original slot
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(2, 16, 4);
+        let small = small_store(&cs);
+        let big = Lemon.expand(&small, &cs, &cl).unwrap();
+        let w = big.expect("L00_q_w");
+        assert_eq!(w.shape, vec![16, 16]);
+        assert!(w.f32s().iter().any(|&x| x != 0.0));
+        // duplicated rows: row d+r equals row r
+        let s = big.expect("L00_q_b");
+        for r in 0..8 {
+            assert_eq!(s.f32s()[r], s.f32s()[8 + r], "bias duplication row {r}");
+        }
+    }
+}

@@ -30,18 +30,20 @@
 //! (Net2Net's multiplicity-normalized selection) live in that form, while
 //! the learned path keeps the tied parameterization above.
 //!
-//! M-learning lives in `coordinator::growth_manager`: by default M trains
-//! against the expanded model's **task loss** — the native engine
+//! M-learning routes through the **one** public entry point,
+//! [`Ligo`]'s `grow(ctx)`: given a [`GrowthContext`] with a batch source, M
+//! trains against the expanded model's **task loss** — the native engine
 //! (`crate::model`) computes dL/dTheta_large and [`ligo_apply_backward`]
-//! chains it through the expansion into dL/dM (the `pjrt` artifact path
-//! fuses the same objective into one XLA graph). This module's
-//! [`GrowthOperator`] entry (`growth::by_name("ligo")`), which receives no
-//! batches, and the growth manager's no-batch fallback train M on a
-//! *surrogate* objective instead — a least-squares fit of the expanded
+//! chains it through the expansion into dL/dM (a context that also carries
+//! a runtime handle tries the fused `ligo_grad_*` artifact first, the
+//! `pjrt` fast path for the same objective). A param-only context falls
+//! back to a *surrogate* objective — a least-squares fit of the expanded
 //! weight matrices (plus text/vision embedding anchors and CaiT
 //! class-attention terms) to an ensemble of the strongest non-learned
 //! baselines (StackBERT + Interpolation), with exact analytic gradients
-//! through the `B W A^T` factorization and the depth blends.
+//! through the `B W A^T` factorization and the depth blends. The route
+//! decision is made exactly once, in `coordinator::growth_manager`, and is
+//! logged in the returned [`GrowthOutcome`].
 
 use crate::config::ModelConfig;
 use crate::tensor::ops;
@@ -50,7 +52,7 @@ use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 use super::stacking::{Interpolation, StackBert};
-use super::{layer_key, layer_suffixes, GrowthOperator};
+use super::{layer_key, layer_suffixes, Capability, GrowthContext, GrowthOperator, GrowthOutcome};
 
 /// Per-module depth-blend families, in python `ligo.DEPTH_MODULES` order.
 pub const DEPTH_MODULES: [&str; 8] = ["q", "k", "v", "o", "ln1", "fc1", "fc2", "ln2"];
@@ -590,8 +592,8 @@ pub fn ligo_apply_backward(
 /// ensemble couples every layer through the shared width matrices, which is
 /// exactly the structure the paper's M-learning exploits.
 pub fn surrogate_target(small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
-    let stack = StackBert.grow(small, cfg_s, cfg_l);
-    let interp = Interpolation.grow(small, cfg_s, cfg_l);
+    let stack = StackBert.expand(small, cfg_s, cfg_l);
+    let interp = Interpolation.expand(small, cfg_s, cfg_l);
     stack
         .iter()
         .map(|(name, t)| {
@@ -847,8 +849,17 @@ pub fn learn_m(
 // The operator
 // ---------------------------------------------------------------------------
 
-/// The learned LiGO operator, natively: init M (Prop. 1 pattern + noise),
-/// run the M-learning steps on the surrogate objective, apply.
+/// The learned LiGO operator. Its [`GrowthOperator::grow`] entry point
+/// negotiates the M-learning route from the [`GrowthContext`] exactly once
+/// (artifact fast path -> native task loss -> surrogate; see
+/// `coordinator::growth_manager`).
+///
+/// The M-learning budget comes from `ctx.opts` when the context sets it,
+/// else from these fields ([`Ligo::options`]) — so a hand-configured
+/// `Ligo { steps: 5, .. }` is honored by `grow(ctx)` unless explicitly
+/// overridden. The fields also drive the *direct surrogate* API
+/// ([`Ligo::grow_with_loss`], the no-context lower level the growth
+/// manager and the benches call).
 #[derive(Debug, Clone)]
 pub struct Ligo {
     pub steps: usize,
@@ -865,6 +876,19 @@ impl Default for Ligo {
 }
 
 impl Ligo {
+    /// This operator's own M-learning options — the budget `grow(ctx)`
+    /// falls back to when the context does not set
+    /// [`LigoOptions`](super::LigoOptions) explicitly.
+    pub fn options(&self) -> super::LigoOptions {
+        super::LigoOptions {
+            steps: self.steps,
+            lr: self.lr,
+            momentum: self.momentum,
+            init_noise: self.noise,
+            seed: self.seed,
+        }
+    }
+
     /// Grow and also report the final M-learning loss (for the growth
     /// manager's accounting).
     pub fn grow_with_loss(
@@ -884,8 +908,20 @@ impl GrowthOperator for Ligo {
         "ligo"
     }
 
-    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
-        self.grow_with_loss(small, cfg_s, cfg_l).0
+    /// LiGO can exploit everything a context offers: artifacts through a
+    /// runtime handle, task-loss M-learning through a batch source, and a
+    /// param-only surrogate fallback.
+    fn capabilities(&self) -> &'static [Capability] {
+        &[Capability::ParamOnly, Capability::NeedsBatches, Capability::NeedsRuntime]
+    }
+
+    /// The one public grow entry point: route selection (artifact vs.
+    /// native task loss vs. surrogate) happens here, exactly once, from
+    /// what `ctx` provides; the decision chain is recorded in
+    /// [`GrowthOutcome::route`]. The M-learning budget is `ctx.opts` when
+    /// set, else this operator's own fields ([`Ligo::options`]).
+    fn grow(&self, ctx: GrowthContext<'_, '_>) -> crate::error::Result<GrowthOutcome> {
+        crate::coordinator::growth_manager::ligo_route(self, ctx)
     }
 }
 

@@ -1,22 +1,46 @@
-//! The growth-operator zoo: every baseline the paper compares against,
-//! implemented natively on the named tensor store (§3.1 and Fig. 6).
+//! The growth-operator zoo behind **one capability-negotiated entry point**.
 //!
-//! * [`direct_copy`] — copy into the top-left corner, random elsewhere (Wei et al. 2016)
-//! * [`net2net`] — function-preserving width expansion (FPI; Chen et al. 2015 / bert2BERT)
-//! * [`aki`] — advanced knowledge initialization (bert2BERT, Chen et al. 2021)
-//! * [`stacking`] — StackBERT / interpolation / MSLT depth growth (Gong et al. 2019 etc.)
-//! * [`ligo`] — the paper's *learned* operator, ported natively: Prop. 1
-//!   init, the fused `B W A^T` width pass with Appendix B.1 tying, learned
-//!   depth blends, the expansion's analytic backward (dL/dM), and a
-//!   surrogate M-learning loop. True task-loss M-learning (native engine or
-//!   the `ligo_grad_*` artifacts under `pjrt`) lives in
-//!   coordinator::growth_manager.
+//! Every operator — the paper's baselines (§3.1, Fig. 6), the learned LiGO
+//! operator and the LEMON-style lossless expansion — implements the same
+//! [`GrowthOperator`] trait: `grow(ctx)` takes a [`GrowthContext`] (borrowed
+//! small params + configs, optional runtime handle, optional task-batch
+//! source, M-learning options) and returns a typed [`GrowthOutcome`]
+//! (grown [`Store`] + [`Objective`] + metrics + the route-selection log).
+//! [`GrowthOperator::capabilities`] advertises what an operator *can*
+//! exploit; the operator itself negotiates the best route from what the
+//! context actually provides — callers never choose artifact vs. native vs.
+//! surrogate by hand.
+//!
+//! The zoo:
+//! * [`direct_copy`] — copy into the top-left corner, random elsewhere
+//!   (Wei et al. 2016)
+//! * [`net2net`] — function-preserving width expansion (FPI; Chen et al.
+//!   2015 / bert2BERT)
+//! * [`aki`] — advanced knowledge initialization (bert2BERT, Chen et al.
+//!   2021)
+//! * [`stacking`] — StackBERT / Interpolation / MSLT depth growth
+//! * [`lemon`] — LEMON-style **exactly loss-preserving** expansion (Wang et
+//!   al. 2023) built on the untied [`ligo::selection_m`] machinery
+//! * [`ligo`] — the paper's *learned* operator. Its `grow(ctx)` selects the
+//!   M-learning route exactly once: the fused `ligo_grad_*` artifact when
+//!   the context's runtime can compile it, else task-loss M-learning
+//!   through the native engine when task batches are present, else the
+//!   surrogate least-squares fit — with the fallback chain recorded in
+//!   [`GrowthOutcome::route`].
+//!
+//! Multi-stage schedules (grow mid-run, repeatedly — "Stacking Your
+//! Transformers", Du et al. 2024) are built on top of this entry point by
+//! [`crate::coordinator::plan::GrowthPlan`], which
+//! [`crate::coordinator::trainer::Trainer::run_plan`] executes mid-run.
 //!
 //! Prop. 1 tests (tests/prop_ligo.rs) verify the zoo's operators are exact
-//! special cases of the LiGO family.
+//! special cases of the LiGO family; `growth_manager` unit tests pin each
+//! legacy `ligo_grow_*` route bit-for-bit to its context configuration.
 
 pub mod aki;
+pub mod context;
 pub mod direct_copy;
+pub mod lemon;
 pub mod ligo;
 pub mod net2net;
 pub mod stacking;
@@ -24,36 +48,105 @@ pub mod stacking;
 pub mod testutil;
 pub mod width;
 
+use crate::bail;
 use crate::config::ModelConfig;
+use crate::error::Result;
 use crate::tensor::store::Store;
 
-/// A parameter-space growth operator: small params -> large params.
+pub use context::{
+    Capability, GrowthContext, GrowthMetrics, GrowthOutcome, LigoOptions, Objective,
+};
+
+/// A growth operator: small params -> large params, negotiated through one
+/// [`GrowthContext`] entry point.
 pub trait GrowthOperator {
     fn name(&self) -> &'static str;
-    /// Grow `small` (trained under `small_cfg`) into `large_cfg`'s shapes.
-    fn grow(&self, small: &Store, small_cfg: &ModelConfig, large_cfg: &ModelConfig) -> Store;
+
+    /// What this operator can exploit from a context. Every operator grows
+    /// from a param-only context; extra capabilities only unlock better
+    /// objectives when the context provides the inputs.
+    fn capabilities(&self) -> &'static [Capability] {
+        &[Capability::ParamOnly]
+    }
+
+    /// Grow `ctx.small` (trained under `ctx.small_cfg`) into
+    /// `ctx.large_cfg`'s shapes, choosing the route from the context.
+    fn grow(&self, ctx: GrowthContext<'_, '_>) -> Result<GrowthOutcome>;
 }
 
-/// Operator registry by CLI name. "ligo" resolves to the native learned
-/// operator (surrogate M-learning — this interface has no task batches);
-/// the task-loss variants stay behind
-/// `coordinator::growth_manager::ligo_grow`.
-pub fn by_name(name: &str) -> Option<Box<dyn GrowthOperator>> {
+/// Implements [`GrowthOperator`] for a non-learned parameter-space operator
+/// whose whole job is an inherent `expand(small, cfg_s, cfg_l) -> Store`.
+macro_rules! param_only_operator {
+    ($ty:ty, $name:literal) => {
+        impl crate::growth::GrowthOperator for $ty {
+            fn name(&self) -> &'static str {
+                $name
+            }
+
+            fn grow(
+                &self,
+                ctx: crate::growth::GrowthContext<'_, '_>,
+            ) -> crate::error::Result<crate::growth::GrowthOutcome> {
+                let timer = crate::util::timer::Timer::new();
+                let params = self.expand(ctx.small, ctx.small_cfg, ctx.large_cfg);
+                Ok(crate::growth::GrowthOutcome::param_only(params, timer.elapsed()))
+            }
+        }
+    };
+}
+pub(crate) use param_only_operator;
+
+/// Canonical registry names, one per operator (aliases not listed) — what
+/// [`by_name`]'s error message reports.
+pub const KNOWN: [&str; 8] = [
+    "direct_copy",
+    "net2net",
+    "aki",
+    "stackbert",
+    "interpolation",
+    "mslt",
+    "lemon",
+    "ligo",
+];
+
+/// Operator registry by CLI name. Unknown names are a real error listing
+/// the known operators (so the CLI and examples surface actionable
+/// diagnostics instead of a bare `None`). "ligo" resolves to the learned
+/// operator whose `grow(ctx)` negotiates artifact / task-native / surrogate
+/// from the context.
+pub fn by_name(name: &str) -> Result<Box<dyn GrowthOperator>> {
     match name {
-        "direct_copy" => Some(Box::new(direct_copy::DirectCopy::default())),
-        "net2net" | "fpi" => Some(Box::new(net2net::Net2Net::default())),
-        "aki" | "bert2bert" => Some(Box::new(aki::Aki::default())),
-        "stackbert" => Some(Box::new(stacking::StackBert)),
-        "interpolation" | "interbert" => Some(Box::new(stacking::Interpolation)),
-        "msl" | "mslt" => Some(Box::new(stacking::Mslt)),
-        "ligo" => Some(Box::new(ligo::Ligo::default())),
-        _ => None,
+        "direct_copy" => Ok(Box::new(direct_copy::DirectCopy::default())),
+        "net2net" | "fpi" => Ok(Box::new(net2net::Net2Net::default())),
+        "aki" | "bert2bert" => Ok(Box::new(aki::Aki)),
+        "stackbert" => Ok(Box::new(stacking::StackBert)),
+        "interpolation" | "interbert" => Ok(Box::new(stacking::Interpolation)),
+        "msl" | "mslt" => Ok(Box::new(stacking::Mslt)),
+        "lemon" => Ok(Box::new(lemon::Lemon)),
+        "ligo" => Ok(Box::new(ligo::Ligo::default())),
+        other => bail!(
+            "unknown growth operator '{other}'; known operators: {}",
+            KNOWN.join(", ")
+        ),
     }
 }
 
-/// All *non-learned* zoo names (for `ligo inspect operators` and the
-/// shape/property sweeps; the learned "ligo" operator is registered in
-/// [`by_name`] but benchmarked separately).
+/// One-shot parameter-space growth through the unified entry point: builds
+/// a param-only [`GrowthContext`] and returns just the grown store.
+pub fn grow_params(
+    op: &dyn GrowthOperator,
+    small: &Store,
+    cfg_s: &ModelConfig,
+    cfg_l: &ModelConfig,
+) -> Result<Store> {
+    Ok(op.grow(GrowthContext::new(small, cfg_s, cfg_l))?.params)
+}
+
+/// All *non-learned, shape-unconstrained* zoo names (for `ligo inspect
+/// operators` and the shape/property sweeps over arbitrary size pairs).
+/// "lemon" is registered in [`by_name`] but excluded here: it accepts only
+/// integer-multiple expansions (and reports why). The learned "ligo" is
+/// benchmarked separately.
 pub const ALL: [&str; 6] = [
     "direct_copy",
     "net2net",
@@ -86,11 +179,48 @@ mod tests {
 
     #[test]
     fn registry_resolves_all() {
-        for name in ALL {
-            assert!(by_name(name).is_some(), "{name}");
+        for name in KNOWN {
+            let op = by_name(name).unwrap();
+            assert_eq!(op.name(), name);
+            assert!(!op.capabilities().is_empty(), "{name}");
         }
-        assert!(by_name("ligo").is_some(), "native LiGO is registered");
-        assert!(by_name("bogus").is_none());
+        // aliases resolve to their canonical operator
+        assert_eq!(by_name("bert2bert").unwrap().name(), "aki");
+        assert_eq!(by_name("fpi").unwrap().name(), "net2net");
+    }
+
+    #[test]
+    fn unknown_operator_error_lists_known_names() {
+        let err = by_name("bogus").unwrap_err().to_string();
+        assert!(err.contains("bogus"), "{err}");
+        for name in KNOWN {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn capabilities_are_negotiated_not_assumed() {
+        // non-learned operators are param-only; ligo can exploit everything
+        for name in ALL {
+            let caps = by_name(name).unwrap().capabilities().to_vec();
+            assert_eq!(caps, vec![Capability::ParamOnly], "{name}");
+        }
+        let ligo_caps = by_name("ligo").unwrap().capabilities().to_vec();
+        assert!(ligo_caps.contains(&Capability::NeedsBatches));
+        assert!(ligo_caps.contains(&Capability::NeedsRuntime));
+    }
+
+    #[test]
+    fn grow_params_runs_every_zoo_operator() {
+        use crate::growth::testutil::{mk_cfg, small_store};
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        for name in ALL {
+            let op = by_name(name).unwrap();
+            let big = grow_params(op.as_ref(), &small, &cs, &cl).unwrap();
+            assert_eq!(big.len(), small_store(&cl).len(), "{name}");
+        }
     }
 
     #[test]

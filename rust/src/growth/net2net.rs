@@ -17,7 +17,7 @@ use crate::tensor::{store::Store, Tensor};
 use crate::util::rng::Rng;
 
 use super::width::WidthMap;
-use super::{layer_key, layer_suffixes, GrowthOperator};
+use super::{layer_key, layer_suffixes, param_only_operator};
 
 #[derive(Debug, Default)]
 pub struct Net2Net {
@@ -102,12 +102,10 @@ fn identity_block(out: &mut Store, template_layer: usize, l: usize, cfg: &ModelC
     }
 }
 
-impl GrowthOperator for Net2Net {
-    fn name(&self) -> &'static str {
-        "net2net"
-    }
-
-    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+impl Net2Net {
+    /// The parameter-space expansion (the whole operator; `grow(ctx)` wraps
+    /// it into a [`super::GrowthOutcome`]).
+    pub fn expand(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
         let mut rng = Rng::new(0xFB1);
         let emb_map = if self.cyclic {
             WidthMap::cyclic(cfg_s.dim, cfg_l.dim)
@@ -127,6 +125,8 @@ impl GrowthOperator for Net2Net {
         out
     }
 }
+
+param_only_operator!(Net2Net, "net2net");
 
 #[cfg(test)]
 mod tests {
@@ -179,7 +179,7 @@ mod tests {
     fn grows_to_target_shapes() {
         let (cs, cl) = cfgs();
         let small = small_store(&cs);
-        let big = Net2Net::default().grow(&small, &cs, &cl);
+        let big = Net2Net::default().expand(&small, &cs, &cl);
         assert_eq!(big.expect("emb_tok").shape, vec![64, 12]);
         assert_eq!(big.expect(&layer_key(3, "fc1_w")).shape, vec![48, 12]);
         assert_eq!(big.expect(&layer_key(0, "q_w")).shape, vec![12, 12]);
@@ -190,7 +190,7 @@ mod tests {
     #[test]
     fn new_layers_are_identity_blocks() {
         let (cs, cl) = cfgs();
-        let big = Net2Net::default().grow(&small_store(&cs), &cs, &cl);
+        let big = Net2Net::default().expand(&small_store(&cs), &cs, &cl);
         assert!(big.expect(&layer_key(2, "o_w")).f32s().iter().all(|&x| x == 0.0));
         assert!(big.expect(&layer_key(2, "fc2_w")).f32s().iter().all(|&x| x == 0.0));
         assert!(big.expect(&layer_key(2, "q_w")).f32s().iter().any(|&x| x != 0.0));
@@ -221,8 +221,8 @@ mod tests {
         let (cs, cl) = cfgs();
         let small = small_store(&cs);
         let op = Net2Net { cyclic: true };
-        let a = op.grow(&small, &cs, &cl);
-        let b = op.grow(&small, &cs, &cl);
+        let a = op.expand(&small, &cs, &cl);
+        let b = op.expand(&small, &cs, &cl);
         assert_eq!(a.expect("emb_tok"), b.expect("emb_tok"));
     }
 }

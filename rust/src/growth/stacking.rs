@@ -18,7 +18,7 @@ use crate::tensor::store::Store;
 
 use super::net2net::grow_width;
 use super::width::WidthMap;
-use super::{layer_key, layer_suffixes, GrowthOperator};
+use super::{layer_key, layer_suffixes, param_only_operator};
 
 /// Width-grow first (cyclic FPI) if dims differ; identity otherwise.
 fn width_stage(small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
@@ -57,46 +57,49 @@ fn depth_map(
 #[derive(Debug)]
 pub struct StackBert;
 
-impl GrowthOperator for StackBert {
-    fn name(&self) -> &'static str {
-        "stackbert"
-    }
-    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+impl StackBert {
+    /// The parameter-space expansion (the whole operator; `grow(ctx)` wraps
+    /// it into a [`super::GrowthOutcome`]).
+    pub fn expand(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
         let wide = width_stage(small, cfg_s, cfg_l);
         depth_map(&wide, cfg_s, cfg_l, |l| l % cfg_s.layers)
     }
 }
 
+param_only_operator!(StackBert, "stackbert");
+
 /// Interpolation: interleave (W_l = W_{floor(l/k)}).
 #[derive(Debug)]
 pub struct Interpolation;
 
-impl GrowthOperator for Interpolation {
-    fn name(&self) -> &'static str {
-        "interpolation"
-    }
-    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+impl Interpolation {
+    /// The parameter-space expansion (the whole operator; `grow(ctx)` wraps
+    /// it into a [`super::GrowthOutcome`]).
+    pub fn expand(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
         let wide = width_stage(small, cfg_s, cfg_l);
         let k = cfg_l.layers.div_ceil(cfg_s.layers);
         depth_map(&wide, cfg_s, cfg_l, move |l| l / k.max(1))
     }
 }
 
+param_only_operator!(Interpolation, "interpolation");
+
 /// MSLT initialization: keep the small stack at the bottom, duplicate the
 /// *top* layer into the new slots (the layers MSLT's stages then train).
 #[derive(Debug)]
 pub struct Mslt;
 
-impl GrowthOperator for Mslt {
-    fn name(&self) -> &'static str {
-        "mslt"
-    }
-    fn grow(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
+impl Mslt {
+    /// The parameter-space expansion (the whole operator; `grow(ctx)` wraps
+    /// it into a [`super::GrowthOutcome`]).
+    pub fn expand(&self, small: &Store, cfg_s: &ModelConfig, cfg_l: &ModelConfig) -> Store {
         let wide = width_stage(small, cfg_s, cfg_l);
         let top = cfg_s.layers - 1;
         depth_map(&wide, cfg_s, cfg_l, move |l| l.min(top))
     }
 }
+
+param_only_operator!(Mslt, "mslt");
 
 #[cfg(test)]
 mod tests {
@@ -107,7 +110,7 @@ mod tests {
     fn stackbert_pattern() {
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(4, 8, 2);
-        let big = StackBert.grow(&small_store(&cs), &cs, &cl);
+        let big = StackBert.expand(&small_store(&cs), &cs, &cl);
         assert_eq!(big.expect("L02_q_w"), big.expect("L00_q_w"));
         assert_eq!(big.expect("L03_q_w"), big.expect("L01_q_w"));
         assert_ne!(big.expect("L02_q_w"), big.expect("L03_q_w"));
@@ -117,7 +120,7 @@ mod tests {
     fn interpolation_pattern() {
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(4, 8, 2);
-        let big = Interpolation.grow(&small_store(&cs), &cs, &cl);
+        let big = Interpolation.expand(&small_store(&cs), &cs, &cl);
         // k = 2: layers [0,0,1,1]
         assert_eq!(big.expect("L01_q_w"), big.expect("L00_q_w"));
         assert_eq!(big.expect("L03_q_w"), big.expect("L02_q_w"));
@@ -128,7 +131,7 @@ mod tests {
     fn mslt_duplicates_top() {
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(4, 8, 2);
-        let big = Mslt.grow(&small_store(&cs), &cs, &cl);
+        let big = Mslt.expand(&small_store(&cs), &cs, &cl);
         assert_eq!(big.expect("L02_q_w"), big.expect("L01_q_w"));
         assert_eq!(big.expect("L03_q_w"), big.expect("L01_q_w"));
     }
@@ -137,7 +140,7 @@ mod tests {
     fn combined_width_and_depth() {
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(4, 12, 3);
-        let big = StackBert.grow(&small_store(&cs), &cs, &cl);
+        let big = StackBert.expand(&small_store(&cs), &cs, &cl);
         assert_eq!(big.expect("L03_q_w").shape, vec![12, 12]);
         assert_eq!(big.expect("emb_tok").shape, vec![64, 12]);
         assert_eq!(big.expect("L03_fc1_w").shape, vec![48, 12]);
@@ -148,7 +151,7 @@ mod tests {
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(6, 8, 2);
         let small = small_store(&cs);
-        let big = StackBert.grow(&small, &cs, &cl);
+        let big = StackBert.expand(&small, &cs, &cl);
         assert_eq!(big.expect("emb_tok"), small.expect("emb_tok"));
     }
 
@@ -156,7 +159,7 @@ mod tests {
     fn non_divisible_depth_ratio_clamps() {
         let cs = mk_cfg(2, 8, 2);
         let cl = mk_cfg(5, 8, 2); // 2 -> 5 layers
-        let big = Interpolation.grow(&small_store(&cs), &cs, &cl);
+        let big = Interpolation.expand(&small_store(&cs), &cs, &cl);
         assert_eq!(big.with_prefix("L04_").len(), 16);
     }
 }

@@ -57,6 +57,20 @@ pub fn full_store(cfg: &ModelConfig) -> Store {
     Store::det_init(&crate::model::param_shapes(cfg), 0)
 }
 
+/// Assert two stores are identical: same tensor set, same shapes, equal
+/// (f32 ==) values everywhere — the bit-for-bit check shared by the
+/// Prop. 1 suite and the growth-route equivalence tests.
+pub fn assert_store_eq(got: &Store, want: &Store, label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: tensor count");
+    for (name, w) in want.iter() {
+        let g = got
+            .get(name)
+            .unwrap_or_else(|| panic!("{label}: missing '{name}'"));
+        assert_eq!(g.shape, w.shape, "{label}: shape of '{name}'");
+        assert_eq!(g, w, "{label}: values of '{name}'");
+    }
+}
+
 /// Deterministic full parameter store for a bert-family config.
 pub fn small_store(cfg: &ModelConfig) -> Store {
     let mut s = Store::new();

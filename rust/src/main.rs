@@ -12,8 +12,8 @@
 use ligo::bail;
 use ligo::config::{artifacts_dir, Registry};
 use ligo::error::{Context, Result};
-use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
 use ligo::coordinator::trainer::Trainer;
+use ligo::growth::{GrowthContext, LigoOptions, Objective};
 use ligo::data::corpus::Corpus;
 use ligo::experiments;
 use ligo::runtime::Runtime;
@@ -89,35 +89,42 @@ fn run() -> Result<()> {
                 None => ligo::experiments::common::ensure_pretrained(
                     &rt, &from, &corpus, args.get_usize("pretrain", 300), &out_dir)?,
             };
-            let grown = if op == "ligo" {
-                let opts = LigoOptions {
-                    steps: args.get_usize("m-steps", 100),
-                    lr: args.get_f32("m-lr", 0.02),
-                    ..Default::default()
-                };
-                let c = corpus.clone();
-                let t = to.clone();
-                let mut mk = move |s: usize| {
-                    ligo::data::batches::mlm_batch(
-                        &c, &t, &mut ligo::util::rng::Rng::new(7000 + s as u64))
-                };
-                let g = ligo_grow(&rt, &from, &to, &ckpt, &mut mk, &opts)?;
-                println!(
-                    "LiGO M-loss {:.4} ({}), +{:.3e} FLOPs, {:.1}s",
-                    g.final_m_loss, g.objective, g.extra_flops, g.wall_s
-                );
-                g.params
-            } else {
-                let oper = ligo::growth::by_name(op)
-                    .with_context(|| format!("unknown operator '{op}'"))?;
-                oper.grow(&ckpt, &from, &to)
+            // one entry point for every operator: the context carries the
+            // runtime handle + a batch source, and the operator negotiates
+            // its route (param-only ops simply ignore the extras)
+            let oper = ligo::growth::by_name(op)?;
+            let opts = LigoOptions {
+                steps: args.get_usize("m-steps", 100),
+                lr: args.get_f32("m-lr", 0.02),
+                ..Default::default()
             };
+            let c = corpus.clone();
+            let t = to.clone();
+            let mut mk = move |s: usize| {
+                ligo::data::batches::mlm_batch(
+                    &c, &t, &mut ligo::util::rng::Rng::new(7000 + s as u64))
+            };
+            let ctx = GrowthContext::new(&ckpt, &from, &to)
+                .with_runtime(&rt)
+                .with_batches(&mut mk)
+                .with_opts(opts);
+            let grown = oper.grow(ctx)?;
+            println!("route: {}", grown.route_summary());
+            if grown.objective != Objective::ParamOnly {
+                println!(
+                    "M-loss {:.4} ({}), +{:.3e} FLOPs, {:.1}s",
+                    grown.metrics.final_m_loss,
+                    grown.objective,
+                    grown.metrics.extra_flops,
+                    grown.metrics.wall_s
+                );
+            }
             let path = out_dir
                 .join("ckpt")
                 .join(format!("{}_from_{}_{op}.lgck", to.name, from.name));
-            io::save(&grown, &path)?;
+            io::save(&grown.params, &path)?;
             println!("grew {} -> {} via {op}: {} params, saved {}",
-                from.name, to.name, grown.param_count(), path.display());
+                from.name, to.name, grown.params.param_count(), path.display());
         }
         "eval" => {
             let rt = Runtime::cpu(artifacts_dir())?;
@@ -170,13 +177,18 @@ fn run() -> Result<()> {
                     }
                 }
                 "operators" => {
-                    for op in ligo::growth::ALL {
-                        println!("{op}");
+                    println!("{:<14} {}", "operator", "capabilities");
+                    for name in ligo::growth::KNOWN {
+                        let op = ligo::growth::by_name(name)?;
+                        let caps: Vec<&str> =
+                            op.capabilities().iter().map(|c| c.as_str()).collect();
+                        println!("{:<14} {}", name, caps.join(", "));
                     }
                     println!(
-                        "ligo (learned; task-loss M-learning through the native engine by \
-                         default, the fused artifact path with --features pjrt, and a \
-                         surrogate least-squares fallback when no task batches exist)"
+                        "\nall operators share one entry point: grow(GrowthContext). \
+                         \"ligo\" negotiates its M-learning route from the context \
+                         (artifact fast path -> native task loss -> surrogate); \
+                         \"lemon\" is exactly loss-preserving on integer-factor pairs."
                     );
                 }
                 "artifacts" => {

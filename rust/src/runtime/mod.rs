@@ -11,6 +11,13 @@
 //! * **null** — inert fallback (tests / explicit opt-out): artifact loads
 //!   fail with guidance.
 //!
+//! The [`Runtime`] is also the **capability handle** of the unified growth
+//! API: a [`crate::growth::GrowthContext`] optionally carries `&Runtime`,
+//! and the LiGO route selection probes `Runtime::load` for the
+//! `ligo_grad_*`/`ligo_apply_*` pair — a load error is not fatal there, it
+//! is the negotiation signal that demotes the grow to the native task-loss
+//! route (the error text is preserved in the outcome's route log).
+//!
 //! Python never runs here in any configuration.
 
 pub mod backend;

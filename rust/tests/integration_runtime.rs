@@ -5,8 +5,8 @@
 //! Requires `make artifacts` to have run (skipped otherwise).
 
 use ligo::config::{artifacts_dir, Registry, TrainConfig};
-use ligo::coordinator::growth_manager::{ligo_grow, LigoOptions};
 use ligo::coordinator::trainer::{Batches, Trainer};
+use ligo::growth::{GrowthContext, LigoOptions};
 use ligo::data::batches::mlm_batch;
 use ligo::data::corpus::Corpus;
 use ligo::runtime::Runtime;
@@ -124,7 +124,8 @@ fn growth_operators_produce_runnable_models() {
     let batch = mlm_batch(&corpus, &large_cfg, &mut Rng::new(5));
     for op_name in ligo::growth::ALL {
         let op = ligo::growth::by_name(op_name).unwrap();
-        let big = op.grow(&small_params, &small_cfg, &large_cfg);
+        let big =
+            ligo::growth::grow_params(op.as_ref(), &small_params, &small_cfg, &large_cfg).unwrap();
         let out = fwd_large.run(&[("params", &big), ("batch", &batch)]).unwrap();
         let loss = out.scalar("loss").unwrap();
         assert!(loss.is_finite(), "{op_name}: non-finite loss");
@@ -155,21 +156,20 @@ fn ligo_growth_improves_over_init() {
             .unwrap();
     }
     let small_params = tr.params.clone();
-    // grow with LiGO (few steps to keep the test fast)
+    // grow with LiGO (few steps to keep the test fast) through the unified
+    // entry point: runtime handle + batch source -> artifact or task-native
     let opts = LigoOptions { steps: 12, ..Default::default() };
     let c2 = corpus.clone();
     let lcfg = large.clone();
-    let grown = ligo_grow(
-        &rt,
-        &small,
-        &large,
-        &small_params,
-        &mut move |s| mlm_batch(&c2, &lcfg, &mut Rng::new(900 + s as u64)),
-        &opts,
-    )
-    .unwrap();
-    assert!(grown.final_m_loss.is_finite());
-    assert!(grown.extra_flops > 0.0);
+    let mut mk = move |s: usize| mlm_batch(&c2, &lcfg, &mut Rng::new(900 + s as u64));
+    let ctx = GrowthContext::new(&small_params, &small, &large)
+        .with_runtime(&rt)
+        .with_batches(&mut mk)
+        .with_opts(opts);
+    let grown = ligo::growth::by_name("ligo").unwrap().grow(ctx).unwrap();
+    assert!(grown.metrics.final_m_loss.is_finite());
+    assert!(grown.metrics.extra_flops > 0.0);
+    assert!(!grown.route.is_empty(), "route log must record the decision");
     // the grown model evaluates sanely
     let fwd = rt.load("fwd_bert_base").unwrap();
     let eval_batch = mlm_batch(&corpus, &large, &mut Rng::new(31337));

@@ -3,10 +3,12 @@
 //! and grow — the workload the old NullBackend default could not execute.
 
 use ligo::config::{Registry, TrainConfig};
+use ligo::coordinator::plan::GrowthPlan;
 use ligo::coordinator::trainer::{eval_store, Batches, Trainer};
 use ligo::data::batches::mlm_batch;
 use ligo::data::corpus::Corpus;
 use ligo::data::vision::VisionTask;
+use ligo::growth::LigoOptions;
 use ligo::runtime::Runtime;
 use ligo::util::rng::Rng;
 
@@ -51,6 +53,74 @@ fn trainer_reduces_loss_on_the_native_backend() {
         last < first - 0.05,
         "native training must reduce loss: {first} -> {last}"
     );
+}
+
+#[test]
+fn two_stage_growth_plan_runs_mid_training_with_visible_growth_steps() {
+    // the api_redesign acceptance scenario: one trainer, one batch source,
+    // a 2-stage GrowthPlan (stack the depth, then LiGO-grow the width)
+    // executed mid-run — the curve must stay finite, descend overall, and
+    // carry the growth steps as marks.
+    let Some(rt) = native_runtime() else { return };
+    let reg = Registry::builtin();
+    let small = reg.model("bert_small").unwrap().clone(); // 3 x 48
+    let mid = reg.model("bert_d6w48").unwrap().clone(); // 6 x 48
+    let large = reg.model("bert_base").unwrap().clone(); // 6 x 72
+    let plan = GrowthPlan::builder(&small)
+        .grow_at(10, &mid, "stackbert")
+        .grow_at_with(20, &large, "ligo", LigoOptions { steps: 3, ..Default::default() })
+        .build()
+        .unwrap();
+    let corpus = Corpus::new(small.vocab, 0);
+    let params = Trainer::scratch_params(&rt, &small, 0).unwrap();
+    let tc = TrainConfig {
+        lr: 3e-3,
+        total_steps: 30,
+        warmup_steps: 3,
+        eval_every: 5,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(&rt, &small, tc, params).unwrap();
+    let c1 = corpus.clone();
+    let s1 = small.clone();
+    let mut batches = Batches {
+        train: Box::new(move |step| mlm_batch(&c1, &s1, &mut Rng::new(step as u64))),
+        eval: Box::new({
+            let c = corpus.clone();
+            let cfg = small.clone();
+            move |i| mlm_batch(&c, &cfg, &mut Rng::new(0x55AA + i as u64))
+        }),
+    };
+    // a stage beyond this run's budget is rejected up front, not skipped
+    let far = GrowthPlan::builder(&small)
+        .grow_at(100, &mid, "stackbert")
+        .build()
+        .unwrap();
+    let err = tr.run_plan(&rt, "far", &mut batches, 30, &far).unwrap_err();
+    assert!(err.to_string().contains("unreachable"), "{err}");
+    let curve = tr.run_plan(&rt, "plan_smoke", &mut batches, 30, &plan).unwrap();
+    // the trainer ended on the final config with its shapes
+    assert_eq!(tr.cfg.name, "bert_base");
+    assert_eq!(tr.params.expect("L05_q_w").shape, vec![72, 72]);
+    // growth steps are visible in the metrics
+    assert_eq!(curve.marks.len(), 2, "marks: {:?}", curve.marks);
+    assert_eq!(curve.marks[0].0, 10);
+    assert_eq!(curve.marks[1].0, 20);
+    assert!(curve.marks[0].1.contains("stackbert"), "{:?}", curve.marks);
+    assert!(curve.marks[1].1.contains("ligo"), "{:?}", curve.marks);
+    // non-trivial curve: finite everywhere, descending overall
+    assert!(curve.loss.iter().all(|l| l.is_finite()), "{:?}", curve.loss);
+    let (first, last) = (curve.loss[0], *curve.loss.last().unwrap());
+    assert!(
+        last < first - 0.05,
+        "plan run must reduce loss end to end: {first} -> {last}"
+    );
+    // the growth FLOPs were charged to the ledger: the series is monotone
+    // (stackbert's param-only stage adds 0) and strictly grew overall
+    for w in curve.flops.windows(2) {
+        assert!(w[1] >= w[0], "flops must be monotone: {:?}", curve.flops);
+    }
+    assert!(curve.flops.last().unwrap() > &0.0);
 }
 
 #[test]

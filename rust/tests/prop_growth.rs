@@ -22,7 +22,7 @@ fn every_operator_produces_exact_target_shapes() {
         let small = small_store(&cs);
         for name in growth::ALL {
             let op = growth::by_name(name).unwrap();
-            let big = op.grow(&small, &cs, &cl);
+            let big = growth::grow_params(op.as_ref(), &small, &cs, &cl).unwrap();
             assert_eq!(big.expect("emb_tok").shape, vec![cl.vocab, cl.dim], "{name}");
             for l in 0..cl.layers {
                 assert_eq!(
@@ -58,8 +58,8 @@ fn operators_preserve_small_information() {
         }
         let name = *g.pick(&growth::ALL);
         let op = growth::by_name(name).unwrap();
-        let a = op.grow(&small, &cs, &cl);
-        let b = op.grow(&small2, &cs, &cl);
+        let a = growth::grow_params(op.as_ref(), &small, &cs, &cl).unwrap();
+        let b = growth::grow_params(op.as_ref(), &small2, &cs, &cl).unwrap();
         assert_ne!(
             a.expect("L00_q_w").f32s(),
             b.expect("L00_q_w").f32s(),
@@ -75,7 +75,8 @@ fn stackbert_equals_ligo_stacking_pattern() {
     let cs = mk_cfg(2, 16, 2);
     let cl = mk_cfg(4, 16, 2); // depth-only
     let small = small_store(&cs);
-    let stack = growth::by_name("stackbert").unwrap().grow(&small, &cs, &cl);
+    let stack_op = growth::by_name("stackbert").unwrap();
+    let stack = growth::grow_params(stack_op.as_ref(), &small, &cs, &cl).unwrap();
     let shapes = vec![("w_q".to_string(), vec![cl.layers, cs.layers])];
     let m = ligo_init_store(&shapes, 0.0, 0);
     let w = m.expect("w_q");
@@ -173,7 +174,8 @@ fn interpolation_even_layers_recover_source() {
     let cs = mk_cfg(3, 16, 2);
     let cl = mk_cfg(6, 16, 2);
     let small = small_store(&cs);
-    let big = growth::by_name("interpolation").unwrap().grow(&small, &cs, &cl);
+    let interp = growth::by_name("interpolation").unwrap();
+    let big = growth::grow_params(interp.as_ref(), &small, &cs, &cl).unwrap();
     for l in 0..cs.layers {
         assert_eq!(
             big.expect(&layer_key(2 * l, "q_w")),

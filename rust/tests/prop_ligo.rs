@@ -8,25 +8,20 @@
 //!
 //! Pure rust — no artifacts required.
 
-use ligo::coordinator::growth_manager::{ligo_grow_task_native, LigoOptions};
+use ligo::coordinator::growth_manager::LigoOptions;
 use ligo::growth::ligo::{ligo_apply, ligo_init, selection_m, DepthInit, Ligo};
 use ligo::growth::net2net::Net2Net;
-use ligo::growth::testutil::{mk_cfg, small_store};
-use ligo::growth::{self, GrowthOperator};
+use ligo::growth::testutil::{assert_store_eq, mk_cfg, small_store};
+use ligo::growth::{self, GrowthContext, Objective};
 use ligo::tensor::store::Store;
 use ligo::tensor::Tensor;
 use ligo::util::rng::Rng;
 use ligo::ModelConfig;
 
-/// Assert two stores are identical: same tensor set, same shapes, equal
-/// (f32 ==) values everywhere.
-fn assert_store_eq(got: &Store, want: &Store, label: &str) {
-    assert_eq!(got.len(), want.len(), "{label}: tensor count");
-    for (name, w) in want.iter() {
-        let g = got.get(name).unwrap_or_else(|| panic!("{label}: missing '{name}'"));
-        assert_eq!(g.shape, w.shape, "{label}: shape of '{name}'");
-        assert_eq!(g, w, "{label}: values of '{name}'");
-    }
+/// Grow via the registry through the unified entry point (param-only).
+fn zoo_grow(name: &str, small: &Store, cs: &ModelConfig, cl: &ModelConfig) -> Store {
+    let op = growth::by_name(name).unwrap();
+    growth::grow_params(op.as_ref(), small, cs, cl).unwrap()
 }
 
 #[test]
@@ -34,7 +29,7 @@ fn selection_ligo_reproduces_stackbert_width_and_depth() {
     let cs = mk_cfg(2, 8, 2);
     let cl = mk_cfg(4, 12, 3);
     let small = small_store(&cs);
-    let want = growth::by_name("stackbert").unwrap().grow(&small, &cs, &cl);
+    let want = zoo_grow("stackbert", &small, &cs, &cl);
     let m = selection_m(&cs, &cl, DepthInit::Stack, true);
     let got = ligo_apply(&m, &small, &cs, &cl);
     assert_store_eq(&got, &want, "stackbert");
@@ -45,7 +40,7 @@ fn selection_ligo_reproduces_interpolation() {
     let cs = mk_cfg(2, 8, 2);
     let cl = mk_cfg(4, 12, 3);
     let small = small_store(&cs);
-    let want = growth::by_name("interpolation").unwrap().grow(&small, &cs, &cl);
+    let want = zoo_grow("interpolation", &small, &cs, &cl);
     let m = selection_m(&cs, &cl, DepthInit::Interpolate, true);
     let got = ligo_apply(&m, &small, &cs, &cl);
     assert_store_eq(&got, &want, "interpolation");
@@ -59,7 +54,7 @@ fn selection_ligo_reproduces_net2net() {
     let cs = mk_cfg(2, 8, 2);
     let cl = mk_cfg(4, 12, 3);
     let small = small_store(&cs);
-    let want = Net2Net { cyclic: true }.grow(&small, &cs, &cl);
+    let want = Net2Net { cyclic: true }.expand(&small, &cs, &cl);
     let m = selection_m(&cs, &cl, DepthInit::NearIdentity, true);
     let got = ligo_apply(&m, &small, &cs, &cl);
     assert_store_eq(&got, &want, "net2net");
@@ -70,7 +65,7 @@ fn selection_ligo_reproduces_mslt_top_duplication() {
     let cs = mk_cfg(2, 8, 2);
     let cl = mk_cfg(4, 12, 3);
     let small = small_store(&cs);
-    let want = growth::by_name("mslt").unwrap().grow(&small, &cs, &cl);
+    let want = zoo_grow("mslt", &small, &cs, &cl);
     let m = selection_m(&cs, &cl, DepthInit::TopDup, true);
     let got = ligo_apply(&m, &small, &cs, &cl);
     assert_store_eq(&got, &want, "mslt");
@@ -88,7 +83,7 @@ fn non_divisible_depth_ratio_2_to_5() {
         (DepthInit::Interpolate, "interpolation"),
         (DepthInit::TopDup, "mslt"),
     ] {
-        let want = growth::by_name(name).unwrap().grow(&small, &cs, &cl);
+        let want = zoo_grow(name, &small, &cs, &cl);
         let m = selection_m(&cs, &cl, depth, true);
         assert!(!m.contains("B_emb"), "depth-only M must omit width matrices");
         let got = ligo_apply(&m, &small, &cs, &cl);
@@ -101,7 +96,7 @@ fn non_divisible_depth_with_width_growth_2_to_5() {
     let cs = mk_cfg(2, 8, 2);
     let cl = mk_cfg(5, 12, 3);
     let small = small_store(&cs);
-    let want = growth::by_name("stackbert").unwrap().grow(&small, &cs, &cl);
+    let want = zoo_grow("stackbert", &small, &cs, &cl);
     let m = selection_m(&cs, &cl, DepthInit::Stack, true);
     let got = ligo_apply(&m, &small, &cs, &cl);
     assert_store_eq(&got, &want, "stackbert 2->5 wide");
@@ -112,7 +107,7 @@ fn width_only_selection_reproduces_net2net() {
     let cs = mk_cfg(2, 8, 2);
     let cl = mk_cfg(2, 12, 3); // layers fixed: no depth blends in M
     let small = small_store(&cs);
-    let want = Net2Net { cyclic: true }.grow(&small, &cs, &cl);
+    let want = Net2Net { cyclic: true }.expand(&small, &cs, &cl);
     let m = selection_m(&cs, &cl, DepthInit::NearIdentity, true);
     assert!(!m.contains("w_q"), "width-only M must omit depth blends");
     let got = ligo_apply(&m, &small, &cs, &cl);
@@ -128,7 +123,7 @@ fn noise_free_init_with_zero_steps_is_the_stacking_baseline_family() {
     let cl = mk_cfg(4, 12, 3);
     let small = small_store(&cs);
     let op = Ligo { steps: 0, noise: 0.0, ..Default::default() };
-    let got = op.grow(&small, &cs, &cl);
+    let (got, _loss) = op.grow_with_loss(&small, &cs, &cl);
     let init = ligo_init(&cs, &cl, 0.0, 0);
     let direct = ligo_apply(&init, &small, &cs, &cl);
     assert_store_eq(&got, &direct, "zero-step grow == apply(init)");
@@ -157,28 +152,26 @@ fn task_loss_learned_m_beats_the_step0_eval_loss() {
     // model's *task loss* must reach a lower held-out eval loss than the
     // shared starting point (apply(init M) — which is also the surrogate's
     // step-0 model, since both objectives share ligo_init).
+    fn grow_with(
+        small: &Store,
+        cs: &ModelConfig,
+        cl: &ModelConfig,
+        batches: &mut dyn FnMut(usize) -> Store,
+        steps: usize,
+    ) -> ligo::growth::GrowthOutcome {
+        let ctx = GrowthContext::new(small, cs, cl)
+            .with_batches(batches)
+            .with_opts(LigoOptions { steps, ..Default::default() });
+        growth::by_name("ligo").unwrap().grow(ctx).unwrap()
+    }
     let cs = mk_cfg(2, 8, 2);
     let cl = mk_cfg(4, 12, 3);
     let small = small_store(&cs);
     let cl2 = cl.clone();
     let mut batches = move |s: usize| mlm_like_batch(&cl2, 1000 + s as u64);
-    let g0 = ligo_grow_task_native(
-        &cs,
-        &cl,
-        &small,
-        &mut batches,
-        &LigoOptions { steps: 0, ..Default::default() },
-    )
-    .unwrap();
-    let gn = ligo_grow_task_native(
-        &cs,
-        &cl,
-        &small,
-        &mut batches,
-        &LigoOptions { steps: 30, ..Default::default() },
-    )
-    .unwrap();
-    assert_eq!(gn.objective, "task-native");
+    let g0 = grow_with(&small, &cs, &cl, &mut batches, 0);
+    let gn = grow_with(&small, &cs, &cl, &mut batches, 30);
+    assert_eq!(gn.objective, Objective::TaskNative);
     // held-out batches (disjoint seeds from the 1000.. training stream)
     let eval = |params: &Store| -> f32 {
         (0..3)
@@ -199,13 +192,18 @@ fn task_loss_learned_m_beats_the_step0_eval_loss() {
 
 #[test]
 fn learned_ligo_stays_in_shape_family_and_beats_nothing_silently() {
-    // The end-to-end learned operator (by_name path) produces the exact
-    // tensor set of a native large store and only finite values.
+    // The end-to-end learned operator (by_name path, param-only context ->
+    // surrogate route) produces the exact tensor set of a native large
+    // store and only finite values.
     let cs = mk_cfg(2, 8, 2);
     let cl = mk_cfg(4, 12, 3);
     let small = small_store(&cs);
     let op = growth::by_name("ligo").unwrap();
-    let big = op.grow(&small, &cs, &cl);
+    let ctx = GrowthContext::new(&small, &cs, &cl)
+        .with_opts(LigoOptions { steps: 30, ..Default::default() });
+    let outcome = op.grow(ctx).unwrap();
+    assert_eq!(outcome.objective, Objective::Surrogate);
+    let big = outcome.params;
     let native = small_store(&cl);
     assert_eq!(big.len(), native.len());
     for (name, t) in native.iter() {
