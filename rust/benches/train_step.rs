@@ -76,4 +76,24 @@ fn main() {
     }
     ligo::tensor::ops::set_fused_override(None);
     println!("{:<44} fused kernel speedup: {:.2}x", "", means[1] / means[0]);
+
+    // streaming fused LM head vs the unfused linear+masked_xent chain on
+    // the same full train step — the LIGO_FUSED_XENT A/B (the tied head's
+    // (batch*seq, vocab) logits are the step's dominant allocation)
+    println!("\n== train_step: streaming vs materialized LM head (bert_base) ==");
+    let mut xent_means = Vec::new();
+    for (label, fused) in [("xent_fused", true), ("xent_unfused", false)] {
+        ligo::tensor::ops::set_fused_xent_override(Some(fused));
+        let tc = TrainConfig::bert(100);
+        let mut tr = Trainer::new(&rt, &cfg, tc, params.clone()).unwrap();
+        let c2 = corpus.clone();
+        let cfg2 = cfg.clone();
+        let s = bench(&format!("bert_base/train_step[{label}]"), 2, 10, || {
+            tr.train_step(&mut |s| mlm_batch(&c2, &cfg2, &mut Rng::new(s as u64))).unwrap()
+        });
+        xent_means.push(s.mean_s);
+    }
+    ligo::tensor::ops::set_fused_xent_override(None);
+    let xent_ratio = xent_means[1] / xent_means[0];
+    println!("{:<44} streaming LM-head speedup: {xent_ratio:.2}x", "");
 }

@@ -18,6 +18,14 @@ speedup SERIAL_FILE PARALLEL_FILE
     Print a per-host EXPERIMENTS.md table row (markdown) comparing the
     serial and parallel p50 of the tracked bench lines.
 
+lmhead-gate FILE [FACTOR]
+    Self-calibrating fused-LM-head gate: the mean of `lm_head/xent_fused`
+    in FILE must come in under FACTOR (default 1.25) x the mean of
+    `lm_head/xent_unfused` from the same run — the streaming
+    linear+cross-entropy kernel may never regress past the materialized
+    chain's budget. Exits non-zero on violation (CI runs this on the
+    parallel growth_ops output).
+
 record
     Run the full protocol on this host (requires cargo): serial growth_ops,
     parallel growth_ops, quickstart wall-clock; append the resulting rows
@@ -37,8 +45,11 @@ REPO = os.path.dirname(RUST)
 TRACKED = [
     "grow/stackbert",
     "grow/ligo_task_native[5 M-steps]",
+    "lm_head/xent_fused",
 ]
 GATE_LINE = "grow/ligo_task_native[5 M-steps]"
+LMHEAD_FUSED = "lm_head/xent_fused"
+LMHEAD_UNFUSED = "lm_head/xent_unfused"
 
 UNIT = {"ns": 1e-9, "µs": 1e-6, "us": 1e-6, "ms": 1e-3, "s": 1.0}
 LINE_RE = re.compile(
@@ -96,6 +107,21 @@ def bench_growth(env_extra):
     return tmp
 
 
+def cmd_lmhead_gate(path, factor=1.25):
+    stats = parse(path)
+    fused = require(stats, LMHEAD_FUSED, path)[0]
+    unfused = require(stats, LMHEAD_UNFUSED, path)[0]
+    if fused > unfused * factor:
+        sys.exit(
+            f"REGRESSION: streaming LM head mean {fused:.4f}s > "
+            f"{factor} x materialized chain {unfused:.4f}s"
+        )
+    print(
+        f"lm_head gate ok: fused {fused:.4f}s <= {factor} x unfused {unfused:.4f}s "
+        f"({unfused / fused:.2f}x speedup)"
+    )
+
+
 def cmd_record():
     host = f"{os.uname().nodename} ({os.cpu_count()} cores)"
     print(f"== recording bench baseline for {host} ==")
@@ -146,6 +172,9 @@ def main():
             require(parallel, name, sys.argv[3])
         host = f"{os.uname().nodename} ({os.cpu_count()} cores)"
         print("\n".join(row_markdown(serial, parallel, host)))
+    elif cmd == "lmhead-gate":
+        factor = float(sys.argv[3]) if len(sys.argv) > 3 else 1.25
+        cmd_lmhead_gate(sys.argv[2], factor)
     elif cmd == "record":
         cmd_record()
     else:

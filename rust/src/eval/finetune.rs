@@ -3,6 +3,13 @@
 //! Each harness takes a pretrained *body* (the trainer's params), attaches a
 //! fresh task head (det-init), fine-tunes with the finetune recipe, and
 //! reports held-out accuracy — the numbers in Tables 1/2/5/6.
+//!
+//! On the native backend both the fine-tune steps and the held-out
+//! accuracy pass stream the classifier head: the loss runs through
+//! `Tape::lm_head_xent` and the metric through the tiled
+//! `ops::lm_head_argmax`, so evaluating a large-vocab head never
+//! materializes a `(rows, vocab)` logits tensor (see the memory-discipline
+//! ledger in EXPERIMENTS.md).
 
 use crate::config::TrainConfig;
 use crate::error::Result;

@@ -103,6 +103,12 @@ enum Op {
     SeqMean { x: Var, batch: usize, s: usize },
     /// Scalar masked mean cross-entropy over the rows of `logits`.
     MaskedXent { logits: Var, labels: Vec<i32>, count: f32 },
+    /// Scalar masked mean cross-entropy of the LM/classifier head
+    /// `x @ w^T (+ b)` — streaming fused: the `(rows, vocab)` logits are
+    /// never materialized; `stats` holds the per-row
+    /// `[max, logsumexp, label logit]` triples (the backward rebuilds each
+    /// softmax tile from the logsumexp slot).
+    LmHeadXent { x: Var, w: Var, b: Option<Var>, labels: Vec<i32>, count: f32, stats: Vec<f32> },
 }
 
 struct Node<'p> {
@@ -369,6 +375,30 @@ impl<'p> Tape<'p> {
         self.push(Tensor::scalar_f32(loss), Op::MaskedXent { logits, labels, count })
     }
 
+    /// Scalar masked mean cross-entropy of the LM/classifier head
+    /// `x @ w^T (+ b)` against per-row labels (labels < 0 ignored). With
+    /// [`ops::fused_xent_enabled`] (the default) this is **one streaming
+    /// node**: forward and backward run the vocab-tiled online-softmax
+    /// kernels ([`ops::lm_head_xent_fwd`] / [`ops::lm_head_xent_bwd`]) and
+    /// the `(rows, vocab)` logits are never materialized in either
+    /// direction; `w`'s gradient accumulates into its leaf exactly like a
+    /// [`Tape::linear_bias`] weight's, so a tied `emb_tok` head sums its
+    /// gather and head contributions as before. With the knob off it lowers
+    /// to the unfused linear_bias + masked_xent node chain for A/B runs.
+    pub fn lm_head_xent(&mut self, x: Var, w: Var, b: Option<Var>, labels: Vec<i32>) -> Var {
+        if !ops::fused_xent_enabled() {
+            let logits = match b {
+                Some(bv) => self.linear_bias(x, w, bv),
+                None => self.linear(x, w),
+            };
+            return self.masked_xent(logits, labels);
+        }
+        let bias = b.map(|bv| self.value(bv));
+        let (loss, count, stats) =
+            ops::lm_head_xent_fwd(self.value(x), self.value(w), bias, &labels);
+        self.push(Tensor::scalar_f32(loss), Op::LmHeadXent { x, w, b, labels, count, stats })
+    }
+
     /// Reverse sweep from the scalar `root`. Returns one gradient slot per
     /// node (None for nodes the root does not depend on); leaf slots hold
     /// the parameter gradients. Intermediate gradients are recycled into
@@ -550,6 +580,24 @@ impl<'p> Tape<'p> {
                     acc(&mut grads[logits.0], dl);
                     Some(gout)
                 }
+                Op::LmHeadXent { x, w, b, labels, count, stats } => {
+                    let bias = b.map(|bv| self.value(bv));
+                    let (dx, dw, db) = ops::lm_head_xent_bwd(
+                        self.value(*x),
+                        self.value(*w),
+                        bias,
+                        labels,
+                        stats,
+                        *count,
+                        gout.item(),
+                    );
+                    acc(&mut grads[x.0], dx);
+                    acc(&mut grads[w.0], dw);
+                    if let (Some(bv), Some(dbt)) = (b, db) {
+                        acc(&mut grads[bv.0], dbt);
+                    }
+                    Some(gout)
+                }
             };
             if let Some(g) = leftover {
                 arena::recycle(g);
@@ -571,6 +619,7 @@ impl Drop for Tape<'_> {
                 Op::Attention { probs, .. } => arena::recycle(probs),
                 Op::Linear { pre: Some(z), .. } => arena::recycle(z),
                 Op::LayerNorm { stats, .. } => arena::recycle_buf(stats),
+                Op::LmHeadXent { stats, .. } => arena::recycle_buf(stats),
                 _ => {}
             }
         }
@@ -781,5 +830,87 @@ mod tests {
             let rel = (a - fd).abs() / a.abs().max(fd.abs()).max(1.0);
             assert!(rel < 1e-3, "db[{i}]: analytic {a} vs fd {fd}");
         }
+    }
+
+    /// The streaming fused LM-head node against the unfused
+    /// linear_bias + masked_xent chain: same loss and same leaf gradients
+    /// to ≤1e-5 relative, and the fused backward passes the FD check —
+    /// including the tied-weight case where the head weight leaf is also
+    /// consumed by a gather (the `emb_tok` tying), whose gradient must be
+    /// the sum of both contributions.
+    #[test]
+    fn fused_lm_head_matches_unfused_and_fd() {
+        let mut rng = Rng::new(29);
+        let emb0 = rand_t(&[9, 6], &mut rng); // vocab 9, dim 6
+        let bias0 = rand_t(&[9], &mut rng);
+        let ids = vec![0i32, 4, 8, 2, 5, 1];
+        let labels = vec![3i32, -1, 0, 8, -1, 6];
+        let run = |fused: bool, emb: &Tensor, bias: &Tensor| {
+            ops::set_fused_xent_override(Some(fused));
+            let mut tape = Tape::new();
+            let e = tape.param(emb);
+            let bb = tape.param(bias);
+            let x = tape.gather(e, ids.clone()); // ties emb into the input path
+            let loss = tape.lm_head_xent(x, e, Some(bb), labels.clone());
+            let l = tape.value(loss).item();
+            let grads = tape.backward(loss);
+            let ge = grads[e.index()].as_ref().unwrap().clone();
+            let gb = grads[bb.index()].as_ref().unwrap().clone();
+            ops::set_fused_xent_override(None);
+            (l, ge, gb)
+        };
+        let (lf, gef, gbf) = run(true, &emb0, &bias0);
+        let (lu, geu, gbu) = run(false, &emb0, &bias0);
+        assert!((lf - lu).abs() <= 1e-5 * lf.abs().max(1.0), "{lf} vs {lu}");
+        for (a, b) in gef.f32s().iter().zip(geu.f32s()) {
+            let rel = (a - b).abs() / a.abs().max(b.abs()).max(1.0);
+            assert!(rel <= 1e-5, "tied emb grad: fused {a} vs unfused {b}");
+        }
+        for (a, b) in gbf.f32s().iter().zip(gbu.f32s()) {
+            let rel = (a - b).abs() / a.abs().max(b.abs()).max(1.0);
+            assert!(rel <= 1e-5, "bias grad: fused {a} vs unfused {b}");
+        }
+        // FD through the fused node (tied gather + head contributions)
+        let eps = 1e-2f32;
+        for i in 0..emb0.numel() {
+            let mut p = emb0.clone();
+            p.f32s_mut()[i] += eps;
+            let mut m = emb0.clone();
+            m.f32s_mut()[i] -= eps;
+            let fd = (run(true, &p, &bias0).0 - run(true, &m, &bias0).0) / (2.0 * eps);
+            let a = gef.f32s()[i];
+            let rel = (a - fd).abs() / a.abs().max(fd.abs()).max(1.0);
+            assert!(rel < 1e-3, "demb[{i}]: analytic {a} vs fd {fd}");
+        }
+        for i in 0..bias0.numel() {
+            let mut p = bias0.clone();
+            p.f32s_mut()[i] += eps;
+            let mut m = bias0.clone();
+            m.f32s_mut()[i] -= eps;
+            let fd = (run(true, &emb0, &p).0 - run(true, &emb0, &m).0) / (2.0 * eps);
+            let a = gbf.f32s()[i];
+            let rel = (a - fd).abs() / a.abs().max(fd.abs()).max(1.0);
+            assert!(rel < 1e-3, "dbias[{i}]: analytic {a} vs fd {fd}");
+        }
+    }
+
+    #[test]
+    fn lm_head_xent_unfused_lowering_without_bias() {
+        // the knob-off route with b = None must lower to plain linear +
+        // masked_xent and still gradient both leaves
+        ops::set_fused_xent_override(Some(false));
+        let mut rng = Rng::new(31);
+        let x0 = rand_t(&[3, 4], &mut rng);
+        let w0 = rand_t(&[5, 4], &mut rng);
+        let mut tape = Tape::new();
+        let x = tape.leaf(x0.clone());
+        let w = tape.param(&w0);
+        let loss = tape.lm_head_xent(x, w, None, vec![1, -1, 4]);
+        // leaf + param + Linear + MaskedXent (the fused route would be 3)
+        assert_eq!(tape.len(), 4, "unfused route must append the node chain");
+        let grads = tape.backward(loss);
+        assert!(grads[w.index()].is_some());
+        assert!(grads[x.index()].is_some());
+        ops::set_fused_xent_override(None);
     }
 }

@@ -13,7 +13,7 @@ use crate::tensor::ops::AttnShape;
 use crate::tensor::store::Store;
 
 use super::tape::{Tape, Var};
-use super::{accuracy, var};
+use super::{head_accuracy, var};
 
 /// One pre-LN transformer block on the flattened (batch*s, d) stream.
 /// `layerscale` enables the CaiT per-module scales (`ls1`/`ls2`).
@@ -123,22 +123,20 @@ pub(super) fn text_loss(
         tape.layernorm(x, g, bb)
     };
     if cfg.n_classes > 0 {
-        // sequence-classification probe: mean-pool + linear head
+        // sequence-classification probe: mean-pool + streaming fused head
+        // (loss and accuracy both run tile-by-tile — no logits tensor)
         if labels.shape != vec![b] {
             bail!("probe labels must be ({b},), got {:?}", labels.shape);
         }
         let pooled = tape.seq_mean(xf, b, s);
-        let logits = {
-            let w = var(vars, "head_w")?;
-            let bb = var(vars, "head_b")?;
-            tape.linear_bias(pooled, w, bb)
-        };
+        let w = var(vars, "head_w")?;
+        let bb = var(vars, "head_b")?;
         let lbl = labels.i32s().to_vec();
         if let Some(&bad) = lbl.iter().find(|&&l| l >= cfg.n_classes as i32) {
             bail!("label {bad} outside {} classes for '{}'", cfg.n_classes, cfg.name);
         }
-        let acc = accuracy(tape.value(logits), &lbl);
-        let loss = tape.masked_xent(logits, lbl);
+        let acc = head_accuracy(tape.value(pooled), tape.value(w), Some(tape.value(bb)), &lbl);
+        let loss = tape.lm_head_xent(pooled, w, Some(bb), lbl);
         Ok((loss, Some(acc)))
     } else {
         if labels.shape != tokens.shape {
@@ -148,11 +146,10 @@ pub(super) fn text_loss(
         if let Some(&bad) = lbl.iter().find(|&&l| l >= cfg.vocab as i32) {
             bail!("label {bad} outside vocab {} for '{}'", cfg.vocab, cfg.name);
         }
-        let logits = {
-            let mb = var(vars, "mlm_bias")?;
-            tape.linear_bias(xf, emb_tok, mb) // tied LM head
-        };
-        let loss = tape.masked_xent(logits, lbl);
+        // tied LM head, streamed: the (batch*seq, vocab) logits of
+        // `xf @ emb_tok^T + mlm_bias` are never materialized
+        let mb = var(vars, "mlm_bias")?;
+        let loss = tape.lm_head_xent(xf, emb_tok, Some(mb), lbl);
         Ok((loss, None))
     }
 }

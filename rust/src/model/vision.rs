@@ -14,7 +14,7 @@ use crate::tensor::Tensor;
 
 use super::tape::{Tape, Var};
 use super::text::preln_block;
-use super::{accuracy, var};
+use super::{head_accuracy, var};
 
 /// (B, H, W, C) images -> (B*T, patch*patch*C) rows, T = (H/p)*(W/p).
 /// Matches the python `_patchify` layout exactly.
@@ -187,16 +187,15 @@ pub(super) fn vision_loss(
         let bb = var(vars, "final_ln_b")?;
         tape.layernorm(cls, g, bb)
     };
-    let logits = {
-        let w = var(vars, "head_w")?;
-        let bb = var(vars, "head_b")?;
-        tape.linear_bias(rep, w, bb)
-    };
+    // classifier head, streamed: loss and accuracy run tile-by-tile through
+    // the fused LM-head kernels — no (batch, n_classes) logits tensor
+    let w = var(vars, "head_w")?;
+    let bb = var(vars, "head_b")?;
     let lbl = labels.i32s().to_vec();
     if let Some(&bad) = lbl.iter().find(|&&l| l >= cfg.n_classes as i32) {
         bail!("label {bad} outside {} classes for '{}'", cfg.n_classes, cfg.name);
     }
-    let acc = accuracy(tape.value(logits), &lbl);
-    let loss = tape.masked_xent(logits, lbl);
+    let acc = head_accuracy(tape.value(rep), tape.value(w), Some(tape.value(bb)), &lbl);
+    let loss = tape.lm_head_xent(rep, w, Some(bb), lbl);
     Ok((loss, Some(acc)))
 }

@@ -49,6 +49,11 @@ struct Pool {
     bytes: usize,
     fresh: u64,
     reused: u64,
+    /// Largest single request (in f32 elements) since [`reset_stats`] — the
+    /// high-water mark memory-discipline tests assert against (e.g. "no
+    /// `(rows, vocab)` logits buffer is ever requested with the streaming
+    /// LM head on").
+    peak_request: usize,
 }
 
 /// Best-fit extraction: the smallest pooled buffer with capacity >= n.
@@ -91,6 +96,7 @@ pub fn alloc_zeroed(n: usize) -> Vec<f32> {
     }
     POOL.with(|p| {
         let mut pool = p.borrow_mut();
+        pool.peak_request = pool.peak_request.max(n);
         match take_fit(&mut pool, n) {
             Some(mut b) => {
                 b.clear();
@@ -117,6 +123,7 @@ pub fn alloc_scratch(n: usize) -> Vec<f32> {
     }
     POOL.with(|p| {
         let mut pool = p.borrow_mut();
+        pool.peak_request = pool.peak_request.max(n);
         match take_fit(&mut pool, n) {
             Some(mut b) => {
                 if b.len() >= n {
@@ -145,6 +152,7 @@ pub fn alloc_copy(src: &[f32]) -> Vec<f32> {
     }
     POOL.with(|p| {
         let mut pool = p.borrow_mut();
+        pool.peak_request = pool.peak_request.max(src.len());
         match take_fit(&mut pool, src.len()) {
             Some(mut b) => {
                 b.clear();
@@ -200,12 +208,21 @@ pub fn stats() -> (u64, u64) {
     })
 }
 
+/// Largest single buffer request (f32 elements) on this thread since
+/// [`reset_stats`] — fresh or reused alike. Memory-discipline regression
+/// tests assert this stays strictly below `rows * vocab` when the streaming
+/// LM head is on (no materialized logits anywhere in a train step).
+pub fn peak_request() -> usize {
+    POOL.with(|p| p.borrow().peak_request)
+}
+
 /// Zero this thread's counters (the pool contents stay).
 pub fn reset_stats() {
     POOL.with(|p| {
         let mut pool = p.borrow_mut();
         pool.fresh = 0;
         pool.reused = 0;
+        pool.peak_request = 0;
     });
 }
 
@@ -252,6 +269,23 @@ mod tests {
         let b = alloc_zeroed(20);
         assert!(b.capacity() < 256, "small request must not burn the big buffer");
         clear();
+    }
+
+    #[test]
+    fn peak_request_tracks_high_water_and_resets() {
+        if !enabled() {
+            return;
+        }
+        reset_stats();
+        let a = alloc_zeroed(16);
+        let b = alloc_scratch(64);
+        let c = alloc_copy(&[1.0; 32]);
+        assert_eq!(peak_request(), 64, "largest request wins");
+        recycle_buf(a);
+        recycle_buf(b);
+        recycle_buf(c);
+        reset_stats();
+        assert_eq!(peak_request(), 0, "reset clears the high-water mark");
     }
 
     #[test]

@@ -63,9 +63,25 @@ use super::{arena, numel, Tensor};
 /// Below it, thread spawn/join overhead dominates (and tests stay serial).
 pub const PAR_MIN_MACS: usize = 1 << 21;
 
+/// Output rows processed together by the register-blocked dense microkernel:
+/// each streamed row of B is loaded once and FMA'd into [`MM_ROW_BLOCK`]
+/// independent accumulator rows (4x the arithmetic intensity of the
+/// row-at-a-time loop).
+const MM_ROW_BLOCK: usize = 4;
+
 /// Blocked i-k-j kernel over a contiguous row chunk of C (rows starting at
 /// global row `row0`). `skip_zeros` enables the sparse fast path: legal only
 /// when every element of `b` is finite, since 0 * NaN/Inf must stay NaN.
+///
+/// The dense (`!skip_zeros`) path — what [`matmul_nt`]'s packed kernel and
+/// [`linear_fused`] run — is 4x-row register-blocked: four output rows share
+/// every load of a B row, and the inner j-loop is four independent
+/// elementwise FMA streams over contiguous memory, the shape LLVM
+/// auto-vectorizes. Per output element the accumulation order (ascending k
+/// within ascending k-blocks) is identical to the single-row loop, so the
+/// blocked results are **bitwise** equal to the unblocked ones. The sparse
+/// path keeps the per-row zero-skip (growth selection matrices are mostly
+/// zeros) and therefore stays row-at-a-time.
 fn matmul_rows(
     av: &[f32],
     bv: &[f32],
@@ -79,9 +95,32 @@ fn matmul_rows(
     let rows = c.len() / n;
     for k0 in (0..k).step_by(BK) {
         let k1 = (k0 + BK).min(k);
-        for r in 0..rows {
-            let i = row0 + r;
-            let crow = &mut c[r * n..(r + 1) * n];
+        let mut r = 0;
+        if !skip_zeros {
+            while r + MM_ROW_BLOCK <= rows {
+                let block = &mut c[r * n..(r + MM_ROW_BLOCK) * n];
+                let (c0, rest) = block.split_at_mut(n);
+                let (c1, rest) = rest.split_at_mut(n);
+                let (c2, c3) = rest.split_at_mut(n);
+                for kk in k0..k1 {
+                    let brow = &bv[kk * n..(kk + 1) * n];
+                    let a0 = av[(row0 + r) * k + kk];
+                    let a1 = av[(row0 + r + 1) * k + kk];
+                    let a2 = av[(row0 + r + 2) * k + kk];
+                    let a3 = av[(row0 + r + 3) * k + kk];
+                    for (j, &bj) in brow.iter().enumerate() {
+                        c0[j] += a0 * bj;
+                        c1[j] += a1 * bj;
+                        c2[j] += a2 * bj;
+                        c3[j] += a3 * bj;
+                    }
+                }
+                r += MM_ROW_BLOCK;
+            }
+        }
+        for rr in r..rows {
+            let i = row0 + rr;
+            let crow = &mut c[rr * n..(rr + 1) * n];
             for kk in k0..k1 {
                 let aik = av[i * k + kk];
                 if skip_zeros && aik == 0.0 {
@@ -238,6 +277,41 @@ pub fn fused_enabled() -> bool {
 /// to A/B both code paths in one process.
 pub fn set_fused_override(v: Option<bool>) {
     FUSED_OVERRIDE.with(|c| {
+        c.set(match v {
+            None => 0,
+            Some(false) => 1,
+            Some(true) => 2,
+        })
+    });
+}
+
+thread_local! {
+    /// 0 = follow the env default, 1 = force unfused, 2 = force fused.
+    static FUSED_XENT_OVERRIDE: Cell<u8> = const { Cell::new(0) };
+}
+
+/// Whether the tape lowers the LM/classifier head to the streaming fused
+/// linear+cross-entropy kernel ([`lm_head_xent_fwd`] / [`lm_head_xent_bwd`],
+/// default — the `(rows, vocab)` logits are never materialized) or to the
+/// unfused linear_bias + masked_xent node chain. Process default comes from
+/// `LIGO_FUSED_XENT` (`0` disables); [`set_fused_xent_override`] overrides
+/// per thread, mirroring the `LIGO_FUSED` knob exactly.
+pub fn fused_xent_enabled() -> bool {
+    match FUSED_XENT_OVERRIDE.with(|c| c.get()) {
+        1 => false,
+        2 => true,
+        _ => {
+            static FUSED: OnceLock<bool> = OnceLock::new();
+            *FUSED.get_or_init(|| !matches!(std::env::var("LIGO_FUSED_XENT").as_deref(), Ok("0")))
+        }
+    }
+}
+
+/// Thread-local override of [`fused_xent_enabled`]: `Some(on)` pins the
+/// lowering, `None` restores the env default (the `LIGO_FUSED_XENT`
+/// equivalent of [`set_fused_override`]).
+pub fn set_fused_xent_override(v: Option<bool>) {
+    FUSED_XENT_OVERRIDE.with(|c| {
         c.set(match v {
             None => 0,
             Some(false) => 1,
@@ -860,17 +934,22 @@ pub fn masked_xent_fwd(logits: &Tensor, labels: &[i32]) -> (f32, f32) {
 
 /// Backward of [`masked_xent_fwd`]:
 /// dlogits = dloss * (softmax - onehot) / max(count, 1) on active rows.
+/// The output buffer is arena scratch: active rows are fully overwritten by
+/// the softmax pass and inactive rows get one explicit zero stripe — no
+/// whole-buffer zeroing pass runs first, so rows with label < 0 (~85% of an
+/// MLM batch at the paper's 15% mask density) are written exactly once.
 pub fn masked_xent_bwd(logits: &Tensor, labels: &[i32], count: f32, dloss: f32) -> Tensor {
     let (n, vsz) = (logits.shape[0], logits.shape[1]);
     assert_eq!(labels.len(), n, "one label per logit row");
     let lv = logits.f32s();
     let s = dloss / count.max(1.0);
-    let mut dl = arena::alloc_zeroed(n * vsz);
+    let mut dl = arena::alloc_scratch(n * vsz);
     let kernel = |row0: usize, chunk: &mut [f32]| {
         for (r, drow) in chunk.chunks_exact_mut(vsz).enumerate() {
             let i = row0 + r;
             let lbl = labels[i];
             if lbl < 0 {
+                drow.fill(0.0);
                 continue;
             }
             let row = &lv[i * vsz..(i + 1) * vsz];
@@ -889,6 +968,465 @@ pub fn masked_xent_bwd(logits: &Tensor, labels: &[i32], count: f32, dloss: f32) 
     };
     run_rows(&mut dl, vsz, n * vsz, kernel);
     Tensor::from_f32(&logits.shape, dl)
+}
+
+// ---------------------------------------------------------------------------
+// Streaming fused LM head: linear + masked cross-entropy over vocab tiles
+// with an online log-sum-exp (FlashAttention-style rescaling) — the
+// (rows, vocab) logits are never materialized, forward or backward.
+// ---------------------------------------------------------------------------
+
+/// Vocab-tile width of the streaming LM-head kernels: one tile row is 512 B
+/// of f32 accumulators, so a whole [`XENT_ROW_BLOCK`]-row tile lives in L1
+/// next to the streamed packed-`w^T` rows.
+pub const XENT_TILE_V: usize = 128;
+
+/// Activation rows processed together by the LM-head tile microkernel: each
+/// streamed `w^T` row is loaded once and FMA'd into four independent
+/// accumulator rows (the same register-blocking as the dense
+/// [`matmul_rows`] path).
+const XENT_ROW_BLOCK: usize = 4;
+
+/// One logits tile on the stack: `acc[r][jj] = x[idx[r]] . w[j0 + jj] (+ b)`.
+type XentTile = [[f32; XENT_TILE_V]; XENT_ROW_BLOCK];
+
+/// Shared read-only state of one streaming LM-head call: the activation
+/// rows, the packed (d-major) `w^T`, the optional bias, the head dims and
+/// the per-row labels. Borrowed by every tile worker (all fields are shared
+/// slices, so a `&HeadCtx` crosses the scoped-thread boundary).
+struct HeadCtx<'a> {
+    xv: &'a [f32],
+    wt: &'a [f32],
+    bv: Option<&'a [f32]>,
+    d: usize,
+    v: usize,
+    labels: &'a [i32],
+}
+
+/// Compute the logits tile for the (up to [`XENT_ROW_BLOCK`]) activation
+/// rows listed in `idx` over vocab columns `[j0, j1)`. `ctx.wt` is the
+/// packed (d-major) transpose of the head weight; accumulation initializes
+/// with the bias and sums ascending k — the exact per-element order of the
+/// packed [`linear_fused`] path, so a streamed tile is bitwise equal to the
+/// corresponding slice of materialized logits.
+fn lm_head_tile(ctx: &HeadCtx<'_>, idx: &[usize], j0: usize, j1: usize, acc: &mut XentTile) {
+    let (xv, wt, bv, d, v) = (ctx.xv, ctx.wt, ctx.bv, ctx.d, ctx.v);
+    let tv = j1 - j0;
+    for arow in acc.iter_mut().take(idx.len()) {
+        match bv {
+            Some(b) => arow[..tv].copy_from_slice(&b[j0..j1]),
+            None => arow[..tv].fill(0.0),
+        }
+    }
+    for kk in 0..d {
+        let wrow = &wt[kk * v + j0..kk * v + j1];
+        if let [i0, i1, i2, i3] = *idx {
+            // register-blocked: one load of the w^T row feeds four rows
+            let (x0, x1, x2, x3) = (
+                xv[i0 * d + kk],
+                xv[i1 * d + kk],
+                xv[i2 * d + kk],
+                xv[i3 * d + kk],
+            );
+            let (a0, rest) = acc.split_at_mut(1);
+            let (a1, rest) = rest.split_at_mut(1);
+            let (a2, a3) = rest.split_at_mut(1);
+            let a0 = &mut a0[0][..tv];
+            let a1 = &mut a1[0][..tv];
+            let a2 = &mut a2[0][..tv];
+            let a3 = &mut a3[0][..tv];
+            for (j, &wj) in wrow.iter().enumerate() {
+                a0[j] += x0 * wj;
+                a1[j] += x1 * wj;
+                a2[j] += x2 * wj;
+                a3[j] += x3 * wj;
+            }
+        } else {
+            for (r, &i) in idx.iter().enumerate() {
+                let xik = xv[i * d + kk];
+                let arow = &mut acc[r][..tv];
+                for (aj, &wj) in arow.iter_mut().zip(wrow) {
+                    *aj += xik * wj;
+                }
+            }
+        }
+    }
+}
+
+/// Forward over one block of active rows: stream the vocab tiles through an
+/// online log-sum-exp (running max `m`, rescaled running sum `l`), catch the
+/// label logit as its tile passes by, then write the per-row NLL and the
+/// `[max, lse, label_logit]` stats triple (what the backward needs to
+/// recompute each tile's softmax).
+fn lm_head_fwd_block(
+    ctx: &HeadCtx<'_>,
+    idx: &[usize],
+    row0: usize,
+    nc: &mut [f32],
+    sc: &mut [f32],
+) {
+    let mut acc = [[0.0f32; XENT_TILE_V]; XENT_ROW_BLOCK];
+    let mut m = [f32::NEG_INFINITY; XENT_ROW_BLOCK];
+    let mut l = [0.0f32; XENT_ROW_BLOCK];
+    let mut lbl_logit = [0.0f32; XENT_ROW_BLOCK];
+    let mut j0 = 0;
+    while j0 < ctx.v {
+        let j1 = (j0 + XENT_TILE_V).min(ctx.v);
+        lm_head_tile(ctx, idx, j0, j1, &mut acc);
+        for (r, &i) in idx.iter().enumerate() {
+            let row = &acc[r][..j1 - j0];
+            let tm = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let new_m = m[r].max(tm);
+            let mut tl = 0.0f32;
+            for &z in row {
+                tl += (z - new_m).exp();
+            }
+            // rescale the sum accumulated under the old max, then fold the
+            // tile in ((-inf).exp() == 0 makes the first tile a plain init)
+            l[r] = l[r] * (m[r] - new_m).exp() + tl;
+            m[r] = new_m;
+            let lbl = ctx.labels[i] as usize;
+            if lbl >= j0 && lbl < j1 {
+                lbl_logit[r] = row[lbl - j0];
+            }
+        }
+        j0 = j1;
+    }
+    for (r, &i) in idx.iter().enumerate() {
+        let lse = m[r] + l[r].ln();
+        nc[i - row0] = lse - lbl_logit[r];
+        let srow = &mut sc[(i - row0) * 3..(i - row0) * 3 + 3];
+        srow[0] = m[r];
+        srow[1] = lse;
+        srow[2] = lbl_logit[r];
+    }
+}
+
+/// Streaming fused LM-head forward: masked mean cross-entropy of
+/// `x @ w^T (+ b)` for x (n, d) against the stored-projection head w (v, d),
+/// computed one vocab tile at a time — **no `(n, v)` logits buffer exists**,
+/// and rows with label < 0 are skipped outright (they cost nothing, not
+/// even a matmul row). Returns `(loss, active_count, stats)`; `stats` holds
+/// one `[running max, logsumexp, label logit]` triple per row (zeros for
+/// masked rows). The backward reads the logsumexp slot to rebuild each
+/// tile's softmax; the max and label-logit slots make the row's numerics
+/// auditable (`nll = lse - label_logit`) without another vocab sweep.
+/// Matches
+/// [`masked_xent_fwd`] over materialized logits to ≤1e-5 relative (the
+/// online rescaling reassociates the softmax sum), including the
+/// `max(count, 1)` all-masked guard.
+pub fn lm_head_xent_fwd(
+    x: &Tensor,
+    w: &Tensor,
+    b: Option<&Tensor>,
+    labels: &[i32],
+) -> (f32, f32, Vec<f32>) {
+    let (n, d) = (x.shape[0], x.shape[1]);
+    let (v, d2) = (w.shape[0], w.shape[1]);
+    assert_eq!(d, d2, "lm_head_xent inner dims: {d} vs {d2}");
+    assert_eq!(labels.len(), n, "one label per row");
+    if let Some(bb) = b {
+        assert_eq!(bb.numel(), v, "lm_head_xent bias dim");
+    }
+    let count = labels.iter().filter(|&&l| l >= 0).count() as f32;
+    if n == 0 || v == 0 || count == 0.0 {
+        return (0.0, count, arena::alloc_zeroed(n * 3));
+    }
+    let (xv, wv) = (x.f32s(), w.f32s());
+    let bv = b.map(|t| t.f32s());
+    let wt = pack_transposed(wv, v, d);
+    let ctx = HeadCtx { xv, wt: &wt, bv, d, v, labels };
+    let mut nll = arena::alloc_zeroed(n);
+    let mut stats = arena::alloc_zeroed(n * 3);
+    let kernel = |row0: usize, nc: &mut [f32], sc: &mut [f32]| {
+        let mut idx = [0usize; XENT_ROW_BLOCK];
+        let mut cnt = 0usize;
+        for i in row0..row0 + nc.len() {
+            let lbl = labels[i];
+            if lbl < 0 {
+                continue;
+            }
+            assert!((lbl as usize) < v, "label {lbl} outside vocab {v}");
+            idx[cnt] = i;
+            cnt += 1;
+            if cnt == XENT_ROW_BLOCK {
+                lm_head_fwd_block(&ctx, &idx, row0, nc, sc);
+                cnt = 0;
+            }
+        }
+        if cnt > 0 {
+            lm_head_fwd_block(&ctx, &idx[..cnt], row0, nc, sc);
+        }
+    };
+    if n * v * d.max(1) >= PAR_MIN_KERNEL {
+        par::par_row_chunks2(&mut nll, 1, &mut stats, 3, kernel);
+    } else {
+        kernel(0, &mut nll, &mut stats);
+    }
+    let loss = nll.iter().sum::<f32>() / count.max(1.0);
+    arena::recycle_buf(nll);
+    arena::recycle_buf(wt);
+    (loss, count, stats)
+}
+
+/// In place on a freshly computed logits tile: `acc -> s * (softmax -
+/// onehot)` per row, using the forward's saved per-row logsumexp
+/// (`softmax = exp(logit - lse)`).
+fn tile_softmax_grad(
+    acc: &mut XentTile,
+    ctx: &HeadCtx<'_>,
+    idx: &[usize],
+    stats: &[f32],
+    s: f32,
+    j0: usize,
+    j1: usize,
+) {
+    for (r, &i) in idx.iter().enumerate() {
+        let lse = stats[i * 3 + 1];
+        let row = &mut acc[r][..j1 - j0];
+        for z in row.iter_mut() {
+            *z = (*z - lse).exp() * s;
+        }
+        let lbl = ctx.labels[i] as usize;
+        if lbl >= j0 && lbl < j1 {
+            row[lbl - j0] -= s;
+        }
+    }
+}
+
+/// dX pass over one block of active rows: recompute each vocab tile, turn it
+/// into `s * (softmax - onehot)`, and fold `sum_j p_ij * w_j` into the
+/// block's dX rows (contiguous d-wide FMA streams over the w rows). `wv` is
+/// the un-packed (v, d) head weight the dX axpys read.
+#[allow(clippy::too_many_arguments)]
+fn lm_head_dx_block(
+    ctx: &HeadCtx<'_>,
+    wv: &[f32],
+    idx: &[usize],
+    stats: &[f32],
+    s: f32,
+    row0: usize,
+    chunk: &mut [f32],
+) {
+    let d = ctx.d;
+    let mut acc = [[0.0f32; XENT_TILE_V]; XENT_ROW_BLOCK];
+    let mut j0 = 0;
+    while j0 < ctx.v {
+        let j1 = (j0 + XENT_TILE_V).min(ctx.v);
+        lm_head_tile(ctx, idx, j0, j1, &mut acc);
+        tile_softmax_grad(&mut acc, ctx, idx, stats, s, j0, j1);
+        for (r, &i) in idx.iter().enumerate() {
+            let dxrow = &mut chunk[(i - row0) * d..(i - row0 + 1) * d];
+            for (jj, j) in (j0..j1).enumerate() {
+                let pj = acc[r][jj];
+                let wrow = &wv[j * d..(j + 1) * d];
+                for (o, &wq) in dxrow.iter_mut().zip(wrow) {
+                    *o += pj * wq;
+                }
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// dW/db pass over one block of active rows restricted to vocab columns
+/// `[t0, t1)` of a worker-owned dW row chunk starting at global vocab row
+/// `jr0`: recompute the tile, form `s * (softmax - onehot)`, and fold
+/// `p_ij * x_i` into dW's rows and `p_ij` into db.
+#[allow(clippy::too_many_arguments)]
+fn lm_head_dw_block(
+    ctx: &HeadCtx<'_>,
+    idx: &[usize],
+    stats: &[f32],
+    s: f32,
+    t0: usize,
+    t1: usize,
+    jr0: usize,
+    dwc: &mut [f32],
+    dbc: &mut [f32],
+) {
+    let d = ctx.d;
+    let mut acc = [[0.0f32; XENT_TILE_V]; XENT_ROW_BLOCK];
+    lm_head_tile(ctx, idx, t0, t1, &mut acc);
+    tile_softmax_grad(&mut acc, ctx, idx, stats, s, t0, t1);
+    for (jj, j) in (t0..t1).enumerate() {
+        let dwrow = &mut dwc[(j - jr0) * d..(j - jr0 + 1) * d];
+        let mut dbj = 0.0f32;
+        for (r, &i) in idx.iter().enumerate() {
+            let pj = acc[r][jj];
+            dbj += pj;
+            let xrow = &ctx.xv[i * d..(i + 1) * d];
+            for (o, &xq) in dwrow.iter_mut().zip(xrow) {
+                *o += pj * xq;
+            }
+        }
+        dbc[j - jr0] += dbj;
+    }
+}
+
+/// Streaming backward of [`lm_head_xent_fwd`] from the saved per-row stats:
+/// each vocab tile's logits are **recomputed** from x and w, converted in
+/// place to `s * (softmax - onehot)` (s = dloss / max(count, 1)), and
+/// accumulated straight into the outputs — `dlogits` is never materialized.
+/// Returns `(dx, dw, db)` with `db = None` when no bias is given (the
+/// bias then also doesn't enter the recomputed logits). Two row-parallel
+/// passes keep the serial/parallel bit-identity guarantee: dX partitions
+/// over activation rows, dW/db over vocab rows, and every output element's
+/// accumulation order is independent of the partitioning.
+pub fn lm_head_xent_bwd(
+    x: &Tensor,
+    w: &Tensor,
+    b: Option<&Tensor>,
+    labels: &[i32],
+    stats: &[f32],
+    count: f32,
+    dloss: f32,
+) -> (Tensor, Tensor, Option<Tensor>) {
+    let (n, d) = (x.shape[0], x.shape[1]);
+    let (v, d2) = (w.shape[0], w.shape[1]);
+    assert_eq!(d, d2, "lm_head_xent inner dims: {d} vs {d2}");
+    assert_eq!(labels.len(), n, "one label per row");
+    assert_eq!(stats.len(), n * 3, "lm_head_xent stats length");
+    let mut dx = Tensor::from_f32(&x.shape, arena::alloc_zeroed(n * d));
+    let mut dw = Tensor::from_f32(&w.shape, arena::alloc_zeroed(v * d));
+    let mut db = b.map(|t| Tensor::from_f32(&t.shape, arena::alloc_zeroed(v)));
+    if n == 0 || v == 0 || count == 0.0 {
+        return (dx, dw, db);
+    }
+    let (xv, wv) = (x.f32s(), w.f32s());
+    let bv = b.map(|t| t.f32s());
+    let s = dloss / count.max(1.0);
+    let wt = pack_transposed(wv, v, d);
+    let ctx = HeadCtx { xv, wt: &wt, bv, d, v, labels };
+    let parallel = n * v * d.max(1) >= PAR_MIN_KERNEL;
+    // pass A: dX, partitioned over activation rows
+    {
+        let kernel = |row0: usize, chunk: &mut [f32]| {
+            let mut idx = [0usize; XENT_ROW_BLOCK];
+            let mut cnt = 0usize;
+            for i in row0..row0 + chunk.len() / d {
+                if labels[i] < 0 {
+                    continue;
+                }
+                idx[cnt] = i;
+                cnt += 1;
+                if cnt == XENT_ROW_BLOCK {
+                    lm_head_dx_block(&ctx, wv, &idx, stats, s, row0, chunk);
+                    cnt = 0;
+                }
+            }
+            if cnt > 0 {
+                lm_head_dx_block(&ctx, wv, &idx[..cnt], stats, s, row0, chunk);
+            }
+        };
+        if parallel {
+            par::par_row_chunks(dx.f32s_mut(), d, kernel);
+        } else {
+            kernel(0, dx.f32s_mut());
+        }
+    }
+    // pass B: dW and db, partitioned over vocab rows; every worker streams
+    // all activation rows through its own slice of the vocab
+    {
+        let kernel = |jr0: usize, dwc: &mut [f32], dbc: &mut [f32]| {
+            let jend = jr0 + dwc.len() / d;
+            let mut t0 = jr0;
+            while t0 < jend {
+                let t1 = (t0 + XENT_TILE_V).min(jend);
+                let mut idx = [0usize; XENT_ROW_BLOCK];
+                let mut cnt = 0usize;
+                for i in 0..n {
+                    if labels[i] < 0 {
+                        continue;
+                    }
+                    idx[cnt] = i;
+                    cnt += 1;
+                    if cnt == XENT_ROW_BLOCK {
+                        lm_head_dw_block(&ctx, &idx, stats, s, t0, t1, jr0, dwc, dbc);
+                        cnt = 0;
+                    }
+                }
+                if cnt > 0 {
+                    lm_head_dw_block(&ctx, &idx[..cnt], stats, s, t0, t1, jr0, dwc, dbc);
+                }
+                t0 = t1;
+            }
+        };
+        // db is one column; when there is no bias a scratch column absorbs
+        // the (unused) sums so both shapes share one kernel
+        let mut scratch_db = match &db {
+            Some(_) => Vec::new(),
+            None => arena::alloc_zeroed(v),
+        };
+        let dbs: &mut [f32] = match &mut db {
+            Some(t) => t.f32s_mut(),
+            None => &mut scratch_db[..],
+        };
+        if parallel {
+            par::par_row_chunks2(dw.f32s_mut(), d, dbs, 1, kernel);
+        } else {
+            kernel(0, dw.f32s_mut(), dbs);
+        }
+        arena::recycle_buf(scratch_db);
+    }
+    arena::recycle_buf(wt);
+    (dx, dw, db)
+}
+
+/// Row-wise argmax of `x @ w^T (+ b)` computed over vocab tiles — the
+/// eval-side companion of [`lm_head_xent_fwd`] (classification accuracy of
+/// a large-vocab head without a `(rows, vocab)` buffer). Tie-breaking
+/// matches [`argmax_rows`] over materialized logits: the first maximal
+/// column wins, and the streamed tiles are bitwise equal to the packed
+/// [`linear_fused`] logits, so the winners agree exactly. Deliberately
+/// serial: every caller passes batch-sized row counts (probe/vision
+/// classifier metrics), where thread spawn/join would dominate.
+pub fn lm_head_argmax(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Vec<usize> {
+    let (n, d) = (x.shape[0], x.shape[1]);
+    let (v, d2) = (w.shape[0], w.shape[1]);
+    assert_eq!(d, d2, "lm_head_argmax inner dims: {d} vs {d2}");
+    if let Some(bb) = b {
+        assert_eq!(bb.numel(), v, "lm_head_argmax bias dim");
+    }
+    let mut best = vec![0usize; n];
+    if n == 0 || v == 0 {
+        return best;
+    }
+    let (xv, wv) = (x.f32s(), w.f32s());
+    let bv = b.map(|t| t.f32s());
+    let wt = pack_transposed(wv, v, d);
+    let ctx = HeadCtx { xv, wt: &wt, bv, d, v, labels: &[] };
+    let mut acc = [[0.0f32; XENT_TILE_V]; XENT_ROW_BLOCK];
+    let mut best_val = [f32::NEG_INFINITY; XENT_ROW_BLOCK];
+    let mut idxbuf = [0usize; XENT_ROW_BLOCK];
+    let mut i0 = 0;
+    while i0 < n {
+        let i1 = (i0 + XENT_ROW_BLOCK).min(n);
+        for (r, i) in (i0..i1).enumerate() {
+            idxbuf[r] = i;
+        }
+        let idx = &idxbuf[..i1 - i0];
+        for bvl in best_val[..idx.len()].iter_mut() {
+            *bvl = f32::NEG_INFINITY;
+        }
+        let mut j0 = 0;
+        while j0 < v {
+            let j1 = (j0 + XENT_TILE_V).min(v);
+            lm_head_tile(&ctx, idx, j0, j1, &mut acc);
+            for (r, &i) in idx.iter().enumerate() {
+                for (jj, &z) in acc[r][..j1 - j0].iter().enumerate() {
+                    if z > best_val[r] {
+                        best_val[r] = z;
+                        best[i] = j0 + jj;
+                    }
+                }
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+    arena::recycle_buf(wt);
+    best
 }
 
 /// Row-wise argmax of a 2-D tensor (classification-metric helper).
@@ -1366,5 +1904,165 @@ mod tests {
     fn argmax_rows_picks_max() {
         let x = t2([2, 3], vec![0.1, 0.9, 0.5, 2.0, -1.0, 1.0]);
         assert_eq!(argmax_rows(&x), vec![1, 0]);
+    }
+
+    // ---- streaming fused LM head -----------------------------------------
+
+    /// Reference: materialize logits through the packed fused linear, then
+    /// run the unfused masked-xent fwd/bwd and the tape's Linear backward
+    /// composition (dx = dlogits @ w, dw = dlogits^T @ x, db = col sums).
+    #[allow(clippy::type_complexity)]
+    fn unfused_head(
+        x: &Tensor,
+        w: &Tensor,
+        b: Option<&Tensor>,
+        labels: &[i32],
+        dloss: f32,
+    ) -> (f32, f32, Tensor, Tensor, Option<Tensor>) {
+        let (logits, _) = linear_fused(x, w, b, Act::None);
+        let (loss, count) = masked_xent_fwd(&logits, labels);
+        let dl = masked_xent_bwd(&logits, labels, count, dloss);
+        let dx = matmul(&dl, w);
+        let dw = matmul(&transpose(&dl), x);
+        let db = b.map(|bb| {
+            let d = dl.shape[1];
+            let mut sums = vec![0.0f32; d];
+            for row in dl.f32s().chunks_exact(d) {
+                for (a, &vv) in sums.iter_mut().zip(row) {
+                    *a += vv;
+                }
+            }
+            Tensor::from_f32(&bb.shape, sums)
+        });
+        (loss, count, dx, dw, db)
+    }
+
+    fn assert_close(got: &Tensor, want: &Tensor, tol: f32, what: &str) {
+        assert_eq!(got.shape, want.shape, "{what} shape");
+        for (i, (a, e)) in got.f32s().iter().zip(want.f32s()).enumerate() {
+            let rel = (a - e).abs() / a.abs().max(e.abs()).max(1.0);
+            assert!(rel <= tol, "{what}[{i}]: fused {a} vs unfused {e} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn lm_head_xent_matches_unfused_composition() {
+        // v = 300 spans three vocab tiles (128 + 128 + 44); n = 7 exercises
+        // a full 4-row block plus a 3-row remainder; labels mix masked rows
+        // and labels in every tile.
+        let (n, d, v) = (7usize, 10usize, 300usize);
+        let mut g = crate::util::rng::Rng::new(41);
+        let x = t2([n, d], (0..n * d).map(|_| g.range_f32(-2.0, 2.0)).collect());
+        let w = t2([v, d], (0..v * d).map(|_| g.range_f32(-1.0, 1.0)).collect());
+        let b = Tensor::from_f32(&[v], (0..v).map(|_| g.range_f32(-0.5, 0.5)).collect());
+        let labels = [3i32, -1, 130, 299, 0, -1, 255];
+        for bias in [Some(&b), None] {
+            let (lf, cf, stats) = lm_head_xent_fwd(&x, &w, bias, &labels);
+            let (lu, cu, dx_u, dw_u, db_u) = unfused_head(&x, &w, bias, &labels, 1.0);
+            assert_eq!(cf, cu);
+            assert!((lf - lu).abs() <= 1e-5 * lf.abs().max(1.0), "{lf} vs {lu}");
+            let (dx_f, dw_f, db_f) = lm_head_xent_bwd(&x, &w, bias, &labels, &stats, cf, 1.0);
+            assert_close(&dx_f, &dx_u, 1e-5, "dx");
+            assert_close(&dw_f, &dw_u, 1e-5, "dw");
+            match (db_f, db_u) {
+                (Some(a), Some(e)) => assert_close(&a, &e, 1e-5, "db"),
+                (None, None) => {}
+                other => panic!("bias gradient presence mismatch: {other:?}"),
+            }
+            // masked rows get exactly zero dx
+            for c in 0..d {
+                assert_eq!(dx_f.at2(1, c), 0.0);
+                assert_eq!(dx_f.at2(5, c), 0.0);
+            }
+            arena::recycle_buf(stats);
+        }
+    }
+
+    #[test]
+    fn lm_head_xent_fd_gradients() {
+        let (n, d, v) = (5usize, 6usize, 9usize);
+        let mut rng = crate::util::rng::Rng::new(43);
+        let x = rand_t(&[n, d], -1.5, 1.5, &mut rng);
+        let w = rand_t(&[v, d], -1.0, 1.0, &mut rng);
+        let b = rand_t(&[v], -0.5, 0.5, &mut rng);
+        let labels = [2i32, -1, 0, 8, 4];
+        let (_l, count, stats) = lm_head_xent_fwd(&x, &w, Some(&b), &labels);
+        let (dx, dw, db) = lm_head_xent_bwd(&x, &w, Some(&b), &labels, &stats, count, 1.0);
+        let db = db.expect("bias gradient");
+        let eps = 1e-2;
+        let f_x = |t: &Tensor| lm_head_xent_fwd(t, &w, Some(&b), &labels).0;
+        for i in 0..x.numel() {
+            let fd = fd_entry(&x, i, eps, f_x);
+            assert!(rel_err(dx.f32s()[i], fd) < 1e-3, "dx[{i}]: {} vs {fd}", dx.f32s()[i]);
+        }
+        let f_w = |t: &Tensor| lm_head_xent_fwd(&x, t, Some(&b), &labels).0;
+        for i in 0..w.numel() {
+            let fd = fd_entry(&w, i, eps, f_w);
+            assert!(rel_err(dw.f32s()[i], fd) < 1e-3, "dw[{i}]: {} vs {fd}", dw.f32s()[i]);
+        }
+        let f_b = |t: &Tensor| lm_head_xent_fwd(&x, &w, Some(t), &labels).0;
+        for i in 0..b.numel() {
+            let fd = fd_entry(&b, i, eps, f_b);
+            assert!(rel_err(db.f32s()[i], fd) < 1e-3, "db[{i}]: {} vs {fd}", db.f32s()[i]);
+        }
+    }
+
+    #[test]
+    fn lm_head_xent_all_masked_guard() {
+        // labels all < 0: loss 0, count 0, and every gradient exactly zero
+        // (the max(count, 1) guard — no NaN anywhere).
+        let mut rng = crate::util::rng::Rng::new(44);
+        let x = rand_t(&[3, 4], -1.0, 1.0, &mut rng);
+        let w = rand_t(&[5, 4], -1.0, 1.0, &mut rng);
+        let b = rand_t(&[5], -1.0, 1.0, &mut rng);
+        let labels = [-1i32, -1, -1];
+        let (loss, count, stats) = lm_head_xent_fwd(&x, &w, Some(&b), &labels);
+        assert_eq!(loss, 0.0);
+        assert_eq!(count, 0.0);
+        let (dx, dw, db) = lm_head_xent_bwd(&x, &w, Some(&b), &labels, &stats, count, 1.0);
+        assert!(dx.f32s().iter().all(|&z| z == 0.0));
+        assert!(dw.f32s().iter().all(|&z| z == 0.0));
+        assert!(db.unwrap().f32s().iter().all(|&z| z == 0.0));
+    }
+
+    #[test]
+    fn lm_head_xent_single_tile_matches_masked_xent_exactly() {
+        // v < XENT_TILE_V: the online LSE sees one tile, so max and sum are
+        // the plain masked_xent quantities — the losses agree to float noise.
+        let mut rng = crate::util::rng::Rng::new(45);
+        let x = rand_t(&[4, 5], -2.0, 2.0, &mut rng);
+        let w = rand_t(&[7, 5], -1.0, 1.0, &mut rng);
+        let labels = [0i32, 6, -1, 3];
+        let (lf, _c, stats) = lm_head_xent_fwd(&x, &w, None, &labels);
+        let (logits, _) = linear_fused(&x, &w, None, Act::None);
+        let (lu, _cu) = masked_xent_fwd(&logits, &labels);
+        assert!((lf - lu).abs() <= 1e-6 * lf.abs().max(1.0), "{lf} vs {lu}");
+        arena::recycle_buf(stats);
+    }
+
+    #[test]
+    fn lm_head_argmax_matches_materialized_logits() {
+        // 16*8*200 MACs > NT_PACK_MIN_MACS: linear_fused takes the packed
+        // path, whose logits are bitwise equal to the streamed tiles, so
+        // exact argmax equality is well-defined.
+        let (n, d, v) = (16usize, 8usize, 200usize);
+        assert!(n * d * v >= NT_PACK_MIN_MACS);
+        let mut g = crate::util::rng::Rng::new(46);
+        let x = t2([n, d], (0..n * d).map(|_| g.range_f32(-2.0, 2.0)).collect());
+        let w = t2([v, d], (0..v * d).map(|_| g.range_f32(-1.0, 1.0)).collect());
+        let b = Tensor::from_f32(&[v], (0..v).map(|_| g.range_f32(-0.5, 0.5)).collect());
+        for bias in [Some(&b), None] {
+            let (logits, _) = linear_fused(&x, &w, bias, Act::None);
+            assert_eq!(lm_head_argmax(&x, &w, bias), argmax_rows(&logits));
+        }
+    }
+
+    #[test]
+    fn fused_xent_override_toggles_and_restores() {
+        set_fused_xent_override(Some(false));
+        assert!(!fused_xent_enabled());
+        set_fused_xent_override(Some(true));
+        assert!(fused_xent_enabled());
+        set_fused_xent_override(None);
     }
 }

@@ -160,6 +160,43 @@ fn fused_and_unfused_kernels_agree_end_to_end() {
 }
 
 #[test]
+fn streaming_and_materialized_lm_head_agree_end_to_end() {
+    // The streaming fused LM head (LIGO_FUSED_XENT) only reassociates the
+    // softmax reduction: a whole-model eval must agree with the
+    // materialized linear+masked_xent chain to float noise, on both a
+    // tied-head LM preset and a vision classifier (which also reports the
+    // streamed accuracy metric).
+    let Some(rt) = native_runtime() else { return };
+    let reg = Registry::builtin();
+    let cfg = reg.model("bert_small").unwrap().clone();
+    let fwd = rt.load("fwd_bert_small").unwrap();
+    let params = Trainer::scratch_params(&rt, &cfg, 5).unwrap();
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let mut eb = |i: usize| mlm_batch(&corpus, &cfg, &mut Rng::new(0xABCD + i as u64));
+    ligo::tensor::ops::set_fused_xent_override(Some(true));
+    let (lf, _) = eval_store(&fwd, &params, &mut eb, 2).unwrap();
+    ligo::tensor::ops::set_fused_xent_override(Some(false));
+    let (lu, _) = eval_store(&fwd, &params, &mut eb, 2).unwrap();
+    ligo::tensor::ops::set_fused_xent_override(None);
+    assert!(lf.is_finite() && lu.is_finite());
+    assert!((lf - lu).abs() <= 1e-4 * lf.abs().max(1.0), "streamed {lf} vs materialized {lu}");
+
+    let vcfg = reg.model("vit_s").unwrap().clone();
+    let vfwd = rt.load("fwd_vit_s").unwrap();
+    let vparams = Trainer::scratch_params(&rt, &vcfg, 6).unwrap();
+    let task = VisionTask::pretrain();
+    let vcfg2 = vcfg.clone();
+    let mut vb = move |i: usize| task.batch(&vcfg2, &mut Rng::new(0xD00D + i as u64));
+    ligo::tensor::ops::set_fused_xent_override(Some(true));
+    let (vlf, vmf) = eval_store(&vfwd, &vparams, &mut vb, 2).unwrap();
+    ligo::tensor::ops::set_fused_xent_override(Some(false));
+    let (vlu, vmu) = eval_store(&vfwd, &vparams, &mut vb, 2).unwrap();
+    ligo::tensor::ops::set_fused_xent_override(None);
+    assert!((vlf - vlu).abs() <= 1e-4 * vlf.abs().max(1.0), "vision {vlf} vs {vlu}");
+    assert_eq!(vmf, vmu, "the streamed accuracy metric must not depend on the lowering");
+}
+
+#[test]
 fn probe_preset_synthesizes_with_metric() {
     let Some(rt) = native_runtime() else { return };
     let exe = rt.load("fwd_probe_bert_small").unwrap();
