@@ -3,10 +3,15 @@
 //! backend execute should dominate; coordinator overhead <15%), plus a
 //! fused-vs-unfused linear-kernel A/B on the same preset so the SIMD
 //! microkernel win is measurable in one process (EXPERIMENTS.md records
-//! the per-host numbers).
+//! the per-host numbers), plus a serial-vs-2-worker sharded-step A/B (the
+//! LIGO_WORKERS pool; `bench_baseline.py workers-gate` reads those lines).
+//! `LIGO_BENCH_WORKERS_ONLY=1` runs only the workers section (CI).
+
+use std::sync::Arc;
 
 use ligo::config::{artifacts_dir, Registry, TrainConfig};
 use ligo::coordinator::optim::AdamW;
+use ligo::coordinator::parallel::SharedBatchFn;
 use ligo::coordinator::trainer::Trainer;
 use ligo::data::batches::mlm_batch;
 use ligo::data::corpus::Corpus;
@@ -20,6 +25,11 @@ fn main() {
     let rt = Runtime::cpu(artifacts_dir()).unwrap();
     if rt.backend_name() == "null" {
         eprintln!("no executable backend (build with --features pjrt); skipping");
+        return;
+    }
+    let workers_only = std::env::var("LIGO_BENCH_WORKERS_ONLY").as_deref() == Ok("1");
+    if workers_only {
+        workers_section(&reg, &rt);
         return;
     }
     println!("== train_step: coordinator step decomposition ==");
@@ -96,4 +106,34 @@ fn main() {
     ligo::tensor::ops::set_fused_xent_override(None);
     let xent_ratio = xent_means[1] / xent_means[0];
     println!("{:<44} streaming LM-head speedup: {xent_ratio:.2}x", "");
+
+    workers_section(&reg, &rt);
+}
+
+/// Serial vs 2-worker sharded step on the same preset and batch stream —
+/// both run the tree-reduced `train_step_sharded` path so the A/B isolates
+/// the worker-pool scaling (the two runs are bit-identical by design; only
+/// wall clock differs). `grad_accum` must be >= the worker count for the
+/// pool to have anything to shard.
+fn workers_section(reg: &Registry, rt: &Runtime) {
+    println!("\n== train_step: serial vs 2-worker sharded step (bert_base) ==");
+    let cfg = reg.model("bert_base").unwrap().clone();
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let exe = rt.load("grad_bert_base").unwrap();
+    let params = Store::det_init(&exe.manifest.shapes_of("params"), 0);
+    let tc = TrainConfig { grad_accum: 4, ..TrainConfig::bert(100) };
+    let c2 = corpus.clone();
+    let cfg2 = cfg.clone();
+    let batches: SharedBatchFn =
+        Arc::new(move |s| mlm_batch(&c2, &cfg2, &mut Rng::new(s as u64)));
+    let mut w_means = Vec::new();
+    for workers in [1usize, 2] {
+        let mut tr = Trainer::new(rt, &cfg, tc.clone(), params.clone()).unwrap();
+        let b = batches.clone();
+        let s = bench(&format!("bert_base/train_step[workers{workers}]"), 2, 10, || {
+            tr.train_step_sharded(&b, workers).unwrap()
+        });
+        w_means.push(s.mean_s);
+    }
+    println!("{:<44} 2-worker speedup: {:.2}x", "", w_means[0] / w_means[1]);
 }

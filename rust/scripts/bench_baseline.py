@@ -26,6 +26,15 @@ lmhead-gate FILE [FACTOR]
     chain's budget. Exits non-zero on violation (CI runs this on the
     parallel growth_ops output).
 
+workers-gate FILE [FACTOR]
+    Self-calibrating LIGO_WORKERS scaling gate: the mean of
+    `bert_base/train_step[workers2]` in FILE (a captured `cargo bench
+    --bench train_step` output) must come in under the mean of
+    `bert_base/train_step[workers1]` / FACTOR (default 1.3) — the 2-worker
+    sharded step must actually scale, not just match. Skips (exit 0) on
+    hosts with fewer than 4 CPUs, where two workers each fanning out
+    kernel threads cannot hit the factor. Exits non-zero on violation.
+
 record
     Run the full protocol on this host (requires cargo): serial growth_ops,
     parallel growth_ops, quickstart wall-clock; append the resulting rows
@@ -50,6 +59,8 @@ TRACKED = [
 GATE_LINE = "grow/ligo_task_native[5 M-steps]"
 LMHEAD_FUSED = "lm_head/xent_fused"
 LMHEAD_UNFUSED = "lm_head/xent_unfused"
+WORKERS_1 = "bert_base/train_step[workers1]"
+WORKERS_2 = "bert_base/train_step[workers2]"
 
 UNIT = {"ns": 1e-9, "µs": 1e-6, "us": 1e-6, "ms": 1e-3, "s": 1.0}
 LINE_RE = re.compile(
@@ -122,6 +133,25 @@ def cmd_lmhead_gate(path, factor=1.25):
     )
 
 
+def cmd_workers_gate(path, factor=1.3):
+    cores = os.cpu_count() or 1
+    if cores < 4:
+        print(f"workers gate skipped: only {cores} CPUs (need >= 4 for 2 workers)")
+        return
+    stats = parse(path)
+    serial = require(stats, WORKERS_1, path)[0]
+    sharded = require(stats, WORKERS_2, path)[0]
+    if sharded > serial / factor:
+        sys.exit(
+            f"REGRESSION: 2-worker step mean {sharded:.4f}s > serial "
+            f"{serial:.4f}s / {factor} (speedup {serial / sharded:.2f}x)"
+        )
+    print(
+        f"workers gate ok: 2-worker {sharded:.4f}s <= serial {serial:.4f}s / {factor} "
+        f"({serial / sharded:.2f}x speedup)"
+    )
+
+
 def cmd_record():
     host = f"{os.uname().nodename} ({os.cpu_count()} cores)"
     print(f"== recording bench baseline for {host} ==")
@@ -175,6 +205,9 @@ def main():
     elif cmd == "lmhead-gate":
         factor = float(sys.argv[3]) if len(sys.argv) > 3 else 1.25
         cmd_lmhead_gate(sys.argv[2], factor)
+    elif cmd == "workers-gate":
+        factor = float(sys.argv[3]) if len(sys.argv) > 3 else 1.3
+        cmd_workers_gate(sys.argv[2], factor)
     elif cmd == "record":
         cmd_record()
     else:

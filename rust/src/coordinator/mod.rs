@@ -5,6 +5,10 @@
 //! * [`metrics`] — loss curves, savings-at-threshold, CSV/JSON reports
 //! * [`trainer`] — the step loop (accumulation, freezing, eval hooks) and
 //!   mid-run [`plan::GrowthPlan`] execution
+//! * [`parallel`] — the `LIGO_WORKERS` sharded data-parallel worker pool:
+//!   per-worker microbatch shards feeding the deterministic tree all-reduce
+//!   (`util::allreduce`), bit-identical to the serial path for any worker
+//!   count
 //! * [`growth_manager`] — LiGO route selection behind the unified
 //!   `growth::GrowthContext` entry point: artifact / native task loss /
 //!   surrogate, chosen exactly once per grow
@@ -16,6 +20,7 @@ pub mod flops;
 pub mod growth_manager;
 pub mod metrics;
 pub mod optim;
+pub mod parallel;
 pub mod plan;
 pub mod strategies;
 pub mod trainer;

@@ -28,6 +28,36 @@ fn decays(name: &str, t: &Tensor) -> bool {
     t.shape.len() >= 2 && !name.ends_with("_b") && !name.ends_with("_g")
 }
 
+/// The elementwise AdamW update for one tensor — the single source of
+/// truth shared by [`AdamW`] and [`ShardedAdamW`]. Everything global
+/// (step count, clip scale, bias corrections) is computed by the caller
+/// *before* any fan-out, so the sharded optimizer is bitwise-identical to
+/// the unsharded one by construction: same floats, same order, per element.
+#[allow(clippy::too_many_arguments)]
+fn adamw_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    lr: f32,
+    decay: f32,
+    clip_scale: f32,
+    bc1: f32,
+    bc2: f32,
+) {
+    for i in 0..p.len() {
+        let gi = g[i] * clip_scale;
+        m[i] = beta1 * m[i] + (1.0 - beta1) * gi;
+        v[i] = beta2 * v[i] + (1.0 - beta2) * gi * gi;
+        let mh = m[i] / bc1;
+        let vh = v[i] / bc2;
+        p[i] -= lr * (mh / (vh.sqrt() + eps) + decay * p[i]);
+    }
+}
+
 impl AdamW {
     pub fn new(
         params: &Store,
@@ -112,16 +142,258 @@ impl AdamW {
             let decay = if decays(name, p) { self.weight_decay } else { 0.0 };
             let m = self.m.get_mut(name).expect("moment m").f32s_mut();
             let v = self.v.get_mut(name).expect("moment v").f32s_mut();
-            let pv = p.f32s_mut();
-            let gs = g.f32s();
-            for i in 0..pv.len() {
-                let gi = gs[i] * clip_scale;
-                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gi;
-                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gi * gi;
-                let mh = m[i] / bc1;
-                let vh = v[i] / bc2;
-                pv[i] -= lr * (mh / (vh.sqrt() + self.eps) + decay * pv[i]);
+            adamw_update(
+                p.f32s_mut(),
+                g.f32s(),
+                m,
+                v,
+                self.beta1,
+                self.beta2,
+                self.eps,
+                lr,
+                decay,
+                clip_scale,
+                bc1,
+                bc2,
+            );
+        }
+        gnorm
+    }
+}
+
+/// ZeRO-style sharded AdamW for the `LIGO_WORKERS` data-parallel trainer:
+/// the first/second-moment Stores are partitioned across `n` shards
+/// (balanced by parameter count, assigned greedily over the sorted name
+/// order so the partition is deterministic), and `step` updates each
+/// shard's disjoint parameter slice on its own scoped thread.
+///
+/// Bit-identity across shard counts holds by construction: the global
+/// quantities (step count, gradient norm, clip scale, bias corrections)
+/// are computed once *before* the fan-out, and the per-element update is
+/// the same [`adamw_update`] kernel [`AdamW`] runs — sharding only chooses
+/// *which thread* touches a tensor, never the arithmetic order within one.
+///
+/// Growth-aware resharding: [`rebuild`](Self::rebuild) re-partitions the
+/// grown parameter set over the existing shard count with fresh moments
+/// (the mid-plan swap), and [`reshard`](Self::reshard) re-partitions the
+/// *live* moments over a new shard count without touching their values
+/// (the worker-count change).
+pub struct ShardedAdamW {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub grad_clip: f32,
+    shards: Vec<MomentShard>,
+    /// param name -> shard index (f32 params only, total over the set).
+    assign: std::collections::BTreeMap<String, usize>,
+    t: usize,
+    frozen: BTreeSet<String>,
+}
+
+/// One shard's slice of the optimizer state.
+struct MomentShard {
+    m: Store,
+    v: Store,
+}
+
+/// Balanced greedy partition of `(name, numel)` entries (sorted order in,
+/// least-loaded shard wins, first shard on ties) — deterministic, so every
+/// run and every worker count agrees on who owns what.
+fn partition<'a, I>(entries: I, n: usize) -> std::collections::BTreeMap<String, usize>
+where
+    I: Iterator<Item = (&'a String, usize)>,
+{
+    let mut load = vec![0usize; n.max(1)];
+    let mut assign = std::collections::BTreeMap::new();
+    for (name, numel) in entries {
+        let s = (0..load.len()).min_by_key(|&i| load[i]).expect("n >= 1");
+        load[s] += numel.max(1);
+        assign.insert(name.clone(), s);
+    }
+    assign
+}
+
+/// The per-shard slice of one [`ShardedAdamW::step`] fan-out (a free
+/// function so scoped threads borrow only what they need).
+#[allow(clippy::too_many_arguments)]
+fn update_shard(
+    shard: &mut MomentShard,
+    bucket: Vec<(&str, &mut Tensor)>,
+    grads: &Store,
+    frozen: &BTreeSet<String>,
+    hyper: (f32, f32, f32, f32), // (beta1, beta2, eps, weight_decay)
+    lr: f32,
+    clip_scale: f32,
+    bc1: f32,
+    bc2: f32,
+) {
+    let (beta1, beta2, eps, weight_decay) = hyper;
+    for (name, p) in bucket {
+        if frozen.contains(name) {
+            continue;
+        }
+        let g = grads.get(name).expect("bucketed params have grads");
+        let decay = if decays(name, p) { weight_decay } else { 0.0 };
+        let m = shard.m.get_mut(name).expect("moment m").f32s_mut();
+        let v = shard.v.get_mut(name).expect("moment v").f32s_mut();
+        let pv = p.f32s_mut();
+        adamw_update(pv, g.f32s(), m, v, beta1, beta2, eps, lr, decay, clip_scale, bc1, bc2);
+    }
+}
+
+impl ShardedAdamW {
+    pub fn new(
+        params: &Store,
+        shards: usize,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        weight_decay: f32,
+        grad_clip: f32,
+    ) -> ShardedAdamW {
+        let mut opt = ShardedAdamW {
+            beta1,
+            beta2,
+            eps,
+            weight_decay,
+            grad_clip,
+            shards: Vec::new(),
+            assign: std::collections::BTreeMap::new(),
+            t: 0,
+            frozen: BTreeSet::new(),
+        };
+        opt.init_shards(params, shards.max(1));
+        opt
+    }
+
+    pub fn from_train_config(
+        params: &Store,
+        tc: &crate::config::TrainConfig,
+        shards: usize,
+    ) -> ShardedAdamW {
+        Self::new(params, shards, tc.beta1, tc.beta2, tc.eps, tc.weight_decay, tc.grad_clip)
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Zero moments over `params` partitioned into `n` shards.
+    fn init_shards(&mut self, params: &Store, n: usize) {
+        let f32s = |t: &Tensor| matches!(t.data, TensorData::F32(_));
+        let entries = params.iter().filter(|(_, t)| f32s(t)).map(|(k, t)| (k, t.numel()));
+        self.assign = partition(entries, n);
+        self.shards = (0..n).map(|_| MomentShard { m: Store::new(), v: Store::new() }).collect();
+        for (name, t) in params.iter() {
+            if f32s(t) {
+                let s = self.assign[name];
+                self.shards[s].m.insert(name.clone(), Tensor::zeros(&t.shape));
+                self.shards[s].v.insert(name.clone(), Tensor::zeros(&t.shape));
             }
+        }
+    }
+
+    /// Reset for a new (grown) parameter set mid-run, exactly like
+    /// [`AdamW::rebuild`]: fresh zero moments (re-partitioned over the
+    /// *current* shard count), step counter back to 0 so bias correction
+    /// restarts with the new moments, freeze set cleared, hyperparameters
+    /// kept. Sharded and unsharded training therefore agree after growth
+    /// too — the behavior `optim`'s rebuild bias-correction tests pin.
+    pub fn rebuild(&mut self, params: &Store) {
+        let n = self.shards.len().max(1);
+        self.init_shards(params, n);
+        self.t = 0;
+        self.frozen.clear();
+    }
+
+    /// Re-partition the *live* moments over a new shard count (the
+    /// `LIGO_WORKERS` count changed under a live optimizer). Tensors are
+    /// moved, never recomputed, so training continues bit-for-bit.
+    pub fn reshard(&mut self, n: usize) {
+        let n = n.max(1);
+        let mut all_m = Store::new();
+        let mut all_v = Store::new();
+        for sh in std::mem::take(&mut self.shards) {
+            for (k, t) in sh.m.into_entries() {
+                all_m.insert(k, t);
+            }
+            for (k, t) in sh.v.into_entries() {
+                all_v.insert(k, t);
+            }
+        }
+        self.assign = partition(all_m.iter().map(|(k, t)| (k, t.numel())), n);
+        self.shards = (0..n).map(|_| MomentShard { m: Store::new(), v: Store::new() }).collect();
+        for (k, t) in all_m.into_entries() {
+            let s = self.assign[&k];
+            self.shards[s].m.insert(k, t);
+        }
+        for (k, t) in all_v.into_entries() {
+            let s = self.assign[&k];
+            self.shards[s].v.insert(k, t);
+        }
+    }
+
+    /// Freeze parameters matching a predicate (MSLT stages, adapter tuning).
+    pub fn freeze_where(&mut self, params: &Store, pred: impl Fn(&str) -> bool) {
+        self.frozen = params
+            .iter()
+            .filter(|(n, _)| pred(n))
+            .map(|(n, _)| n.clone())
+            .collect();
+    }
+
+    pub fn unfreeze_all(&mut self) {
+        self.frozen.clear();
+    }
+
+    pub fn frozen_count(&self) -> usize {
+        self.frozen.len()
+    }
+
+    /// One update step; `lr` comes from the schedule. Returns the global
+    /// gradient norm (pre-clip), like [`AdamW::step`]. With one shard the
+    /// update runs inline on the caller (no thread churn — this is the
+    /// `LIGO_WORKERS` -unset-equivalent path); with `n` shards it fans out
+    /// on scoped threads, one per shard.
+    pub fn step(&mut self, params: &mut Store, grads: &Store, lr: f32) -> f32 {
+        self.t += 1;
+        let gnorm = grads.global_norm();
+        let clip_scale = if self.grad_clip > 0.0 && gnorm > self.grad_clip {
+            self.grad_clip / (gnorm + 1e-12)
+        } else {
+            1.0
+        };
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let n = self.shards.len().max(1);
+        // Bucket the updatable params by owning shard. A param that joined
+        // after construction has no shard — that is the same caller bug
+        // AdamW surfaces as a missing-moment panic; say so explicitly.
+        let mut buckets: Vec<Vec<(&str, &mut Tensor)>> = (0..n).map(|_| Vec::new()).collect();
+        for (name, p) in params.iter_mut() {
+            if !matches!(p.data, TensorData::F32(_)) || grads.get(name).is_none() {
+                continue;
+            }
+            let Some(&s) = self.assign.get(name.as_str()) else {
+                panic!("no optimizer shard for '{name}': rebuild() after changing the param set")
+            };
+            buckets[s].push((name.as_str(), p));
+        }
+        let hyper = (self.beta1, self.beta2, self.eps, self.weight_decay);
+        let frozen = &self.frozen;
+        if n == 1 {
+            let bucket = buckets.pop().expect("one bucket");
+            let shard = &mut self.shards[0];
+            update_shard(shard, bucket, grads, frozen, hyper, lr, clip_scale, bc1, bc2);
+        } else {
+            std::thread::scope(|sc| {
+                for (shard, bucket) in self.shards.iter_mut().zip(buckets) {
+                    sc.spawn(move || {
+                        update_shard(shard, bucket, grads, frozen, hyper, lr, clip_scale, bc1, bc2);
+                    });
+                }
+            });
         }
         gnorm
     }
@@ -283,6 +555,143 @@ mod tests {
         accumulate(&mut acc, &g, 0.5);
         accumulate(&mut acc, &g, 0.5);
         assert_eq!(acc.expect("w").f32s(), &[2.0, 4.0]);
+    }
+
+    /// A parameter set with enough tensors/shapes that 3 shards are all
+    /// non-empty and the decay mask varies (matrices vs `_b`/`_g` vectors).
+    fn varied_params() -> (Store, Store) {
+        let mut p = Store::new();
+        let mut g = Store::new();
+        let specs: [(&str, &[usize]); 5] = [
+            ("att_w", &[4, 3]),
+            ("ffn_w", &[3, 5]),
+            ("head_b", &[5]),
+            ("ln_g", &[4]),
+            ("emb_w", &[6, 2]),
+        ];
+        for (i, (name, shape)) in specs.iter().enumerate() {
+            let n: usize = shape.iter().product();
+            let pv: Vec<f32> = (0..n).map(|j| ((i * 31 + j * 7) as f32 * 0.37).sin()).collect();
+            let gv: Vec<f32> = (0..n).map(|j| ((i * 17 + j * 11) as f32 * 0.73).cos()).collect();
+            p.insert(*name, Tensor::from_f32(shape, pv));
+            g.insert(*name, Tensor::from_f32(shape, gv));
+        }
+        (p, g)
+    }
+
+    fn bits(s: &Store) -> Vec<(String, Vec<u32>)> {
+        s.iter()
+            .map(|(n, t)| (n.clone(), t.f32s().iter().map(|x| x.to_bits()).collect()))
+            .collect()
+    }
+
+    #[test]
+    fn sharded_step_is_bitwise_identical_to_unsharded_for_any_shard_count() {
+        // clip + decay on, several steps: the full update rule must agree
+        // bit for bit, because global state is computed before the fan-out
+        // and the per-element kernel is shared.
+        let (p0, g) = varied_params();
+        let mut reference = p0.clone();
+        let mut opt = AdamW::new(&reference, 0.9, 0.999, 1e-8, 0.01, 0.5);
+        for step in 0..4 {
+            opt.step(&mut reference, &g, 1e-2 * (step + 1) as f32);
+        }
+        for shards in [1, 2, 3, 7] {
+            let mut p = p0.clone();
+            let mut sopt = ShardedAdamW::new(&p, shards, 0.9, 0.999, 1e-8, 0.01, 0.5);
+            assert_eq!(sopt.shard_count(), shards);
+            for step in 0..4 {
+                sopt.step(&mut p, &g, 1e-2 * (step + 1) as f32);
+            }
+            assert_eq!(bits(&p), bits(&reference), "{shards} shards diverged");
+        }
+    }
+
+    #[test]
+    fn sharded_respects_freezing_and_reports_gnorm() {
+        let (mut p, g) = varied_params();
+        let before = p.expect("ln_g").f32s().to_vec();
+        let mut sopt = ShardedAdamW::new(&p, 2, 0.9, 0.999, 1e-8, 0.0, 0.0);
+        sopt.freeze_where(&p, |n| n == "ln_g");
+        assert_eq!(sopt.frozen_count(), 1);
+        let gnorm = sopt.step(&mut p, &g, 0.1);
+        assert!((gnorm - g.global_norm()).abs() < 1e-6);
+        assert_eq!(p.expect("ln_g").f32s(), &before[..], "frozen param moved");
+        sopt.unfreeze_all();
+        sopt.step(&mut p, &g, 0.1);
+        assert_ne!(p.expect("ln_g").f32s(), &before[..]);
+    }
+
+    #[test]
+    fn reshard_moves_moments_and_keeps_the_trajectory_bitwise() {
+        // 2 steps on 2 shards, reshard to 3 mid-run, 2 more steps — must
+        // equal 4 uninterrupted steps on 1 shard, bit for bit (reshard
+        // moves tensors, never recomputes them).
+        let (p0, g) = varied_params();
+        let mut reference = p0.clone();
+        let mut ropt = ShardedAdamW::new(&reference, 1, 0.9, 0.999, 1e-8, 0.01, 0.0);
+        for _ in 0..4 {
+            ropt.step(&mut reference, &g, 1e-2);
+        }
+        let mut p = p0.clone();
+        let mut sopt = ShardedAdamW::new(&p, 2, 0.9, 0.999, 1e-8, 0.01, 0.0);
+        sopt.step(&mut p, &g, 1e-2);
+        sopt.step(&mut p, &g, 1e-2);
+        sopt.reshard(3);
+        assert_eq!(sopt.shard_count(), 3);
+        sopt.step(&mut p, &g, 1e-2);
+        sopt.step(&mut p, &g, 1e-2);
+        assert_eq!(bits(&p), bits(&reference), "reshard changed the trajectory");
+    }
+
+    #[test]
+    fn rebuild_restarts_bias_correction_identically_on_both_paths() {
+        // The satellite audit: after a growth rebuild, the step counter
+        // must restart at 0 so the first post-growth update uses t=1 bias
+        // correction (a fresh-optimizer step), and the sharded path must
+        // pin the exact same behavior. With constant g the fresh first
+        // step is -lr * g/(|g|+eps) = -lr elementwise.
+        let grown_shapes: [(&str, &[usize]); 2] = [("big_w", &[3, 2]), ("big_b", &[4])];
+        let mk_grown = || {
+            let mut s = Store::new();
+            for (n, shape) in grown_shapes {
+                s.insert(n, Tensor::from_f32(shape, vec![1.0; shape.iter().product()]));
+            }
+            s
+        };
+        let mut gg = Store::new();
+        for (n, shape) in grown_shapes {
+            gg.insert(n, Tensor::from_f32(shape, vec![0.5; shape.iter().product()]));
+        }
+        // unsharded: steps before rebuild must not leak into the first
+        // post-rebuild update through t
+        let (mut p, g) = varied_params();
+        let mut opt = AdamW::new(&p, 0.9, 0.999, 1e-8, 0.0, 0.0);
+        for _ in 0..3 {
+            opt.step(&mut p, &g, 0.1);
+        }
+        let mut grown_a = mk_grown();
+        opt.rebuild(&grown_a);
+        opt.step(&mut grown_a, &gg, 0.1);
+        for (_, t) in grown_a.iter() {
+            for x in t.f32s() {
+                assert!((x - 0.9).abs() < 1e-4, "unsharded rebuild must restart t: {x}");
+            }
+        }
+        // sharded: same dance across a different shard count
+        let (mut sp, _) = varied_params();
+        let mut sopt = ShardedAdamW::new(&sp, 3, 0.9, 0.999, 1e-8, 0.0, 0.0);
+        sopt.freeze_where(&sp, |n| n == "ln_g");
+        for _ in 0..3 {
+            sopt.step(&mut sp, &g, 0.1);
+        }
+        let mut grown_b = mk_grown();
+        sopt.rebuild(&grown_b);
+        assert_eq!(sopt.shard_count(), 3, "rebuild keeps the shard count");
+        assert_eq!(sopt.frozen_count(), 0, "rebuild clears the freeze set");
+        sopt.step(&mut grown_b, &gg, 0.1);
+        // identical to the unsharded first post-rebuild step, bit for bit
+        assert_eq!(bits(&grown_b), bits(&grown_a), "paths disagree after rebuild");
     }
 
     #[test]

@@ -1,0 +1,276 @@
+//! The `LIGO_WORKERS` data-parallel worker pool: one scoped worker per
+//! shard of a train step's microbatches, each owning its own arena
+//! (thread-local pool + shared overflow draw), its [`Shard`] of the global
+//! microbatch stream, and a forward/backward through the existing tape
+//! engine ([`Executable::run`] is stateless per call, so one grad
+//! executable serves every worker concurrently).
+//!
+//! Determinism contract: workers only *compute* gradient leaves; they never
+//! reduce. Leaves return to the coordinator tagged with their global
+//! microbatch index and are summed by the canonical tree in
+//! [`crate::util::allreduce`], whose shape depends on the microbatch count
+//! alone — so `LIGO_WORKERS=1`, `=2` and `=4` produce bit-identical steps.
+//! Each worker also caps its kernel fan-out at `threads()/workers`
+//! ([`crate::util::par::set_thread_budget`]) so the pool never
+//! oversubscribes the host, and pins the dispatching thread's effective
+//! fused-kernel lowering ([`crate::tensor::ops`] overrides) so a test or
+//! bench that A/Bs lowerings on the main thread governs its workers too.
+//!
+//! Resolution of the knob: [`requested_workers`] reads `LIGO_WORKERS` once
+//! per process; `None` (unset) keeps the historical serial
+//! `Trainer::train_step` path byte for byte, `Some(n)` routes the trainer
+//! through [`run_microbatches`]. Tests pin a value per thread with
+//! [`set_workers_override`].
+
+use std::cell::Cell;
+use std::sync::{Arc, OnceLock};
+
+use crate::data::loader::Shard;
+use crate::error::Result;
+use crate::runtime::Executable;
+use crate::tensor::ops;
+use crate::tensor::{arena, store::Store};
+use crate::util::par;
+
+/// A shareable batch source: a pure function of the *global* microbatch
+/// index, callable from any worker thread. The serial path's stateful
+/// `FnMut` sources cannot be split across workers; batch closures that
+/// derive everything from the index (the repo's seeded-RNG idiom) can.
+pub type SharedBatchFn = Arc<dyn Fn(usize) -> Store + Send + Sync>;
+
+thread_local! {
+    /// Per-thread override of [`requested_workers`] (tests pin 1 vs N in
+    /// one process without racing on the environment).
+    static WORKERS_OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// The `LIGO_WORKERS` resolution: `None` when unset (the serial trainer
+/// path), `Some(n >= 1)` when set. Env is read once per process; the
+/// thread-local [`set_workers_override`] wins when present.
+pub fn requested_workers() -> Option<usize> {
+    if let Some(n) = WORKERS_OVERRIDE.with(|c| c.get()) {
+        return Some(n.max(1));
+    }
+    static WORKERS: OnceLock<Option<usize>> = OnceLock::new();
+    *WORKERS.get_or_init(|| {
+        std::env::var("LIGO_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .map(|n| n.max(1))
+    })
+}
+
+/// Pin [`requested_workers`] to `Some(n)` on this thread; `None` restores
+/// the env default. The bit-identity tests run the same training twice in
+/// one process, once per worker count, through this.
+pub fn set_workers_override(v: Option<usize>) {
+    WORKERS_OVERRIDE.with(|c| c.set(v));
+}
+
+/// One parallel step's raw material, back in deterministic order.
+pub struct MicrobatchRun {
+    /// `(gradient store, loss)` per microbatch, indexed by the *global
+    /// microbatch position* within the step — worker-count independent.
+    pub leaves: Vec<(Store, f32)>,
+    /// Per-worker arena counters for this step (worker order).
+    pub stats: Vec<arena::WorkerStats>,
+}
+
+/// Run one train step's `accum` microbatches across `workers` scoped
+/// workers (capped at the microbatch count — extra workers would idle).
+/// Worker `w` owns the leaves `m ≡ w (mod active)` per the [`Shard`] law;
+/// each computes its leaves' forward/backward through `exe` and returns
+/// them tagged, so the caller can reduce in canonical order. On error the
+/// lowest-indexed failing worker's error wins (deterministic), after every
+/// worker has finished.
+#[allow(clippy::too_many_arguments)]
+pub fn run_microbatches(
+    exe: &Executable,
+    params: &Store,
+    extra: &[(String, Store)],
+    batches: &SharedBatchFn,
+    base: usize,
+    accum: usize,
+    workers: usize,
+    cfg_name: &str,
+) -> Result<MicrobatchRun> {
+    let accum = accum.max(1);
+    let active = workers.clamp(1, accum);
+    let kernel_budget = (par::threads() / active).max(1);
+    // effective lowering on the dispatching thread, pinned into workers
+    let fused = ops::fused_enabled();
+    let fused_xent = ops::fused_xent_enabled();
+
+    type WorkerOut = Result<(Vec<(usize, Store, f32)>, arena::WorkerStats)>;
+    let per_worker: Vec<WorkerOut> = std::thread::scope(|sc| {
+        let handles: Vec<_> = (0..active)
+            .map(|w| {
+                let shard = Shard::new(w, active);
+                sc.spawn(move || -> WorkerOut {
+                    par::set_thread_budget(Some(kernel_budget));
+                    ops::set_fused_override(Some(fused));
+                    ops::set_fused_xent_override(Some(fused_xent));
+                    arena::set_shared_draw(true);
+                    let leaves =
+                        worker_leaves(exe, params, extra, batches, base, accum, shard, cfg_name);
+                    let stats =
+                        arena::worker_stats(w, leaves.as_ref().map(Vec::len).unwrap_or(0));
+                    // hand this worker's buffers to the next step's workers
+                    arena::flush_to_shared();
+                    leaves.map(|l| (l, stats))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+            .collect()
+    });
+
+    let mut slots: Vec<Option<(Store, f32)>> = (0..accum).map(|_| None).collect();
+    let mut stats = Vec::with_capacity(active);
+    let mut first_err = None;
+    for res in per_worker {
+        match res {
+            Ok((leaves, st)) => {
+                stats.push(st);
+                for (m, grads, loss) in leaves {
+                    slots[m] = Some((grads, loss));
+                }
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let leaves = slots
+        .into_iter()
+        .map(|s| s.expect("every microbatch is owned by exactly one worker"))
+        .collect();
+    Ok(MicrobatchRun { leaves, stats })
+}
+
+/// One worker's leaves: forward/backward per owned microbatch, tagged with
+/// the global microbatch position within the step.
+#[allow(clippy::too_many_arguments)]
+fn worker_leaves(
+    exe: &Executable,
+    params: &Store,
+    extra: &[(String, Store)],
+    batches: &SharedBatchFn,
+    base: usize,
+    accum: usize,
+    shard: Shard,
+    cfg_name: &str,
+) -> Result<Vec<(usize, Store, f32)>> {
+    let mut leaves = Vec::new();
+    for m in (0..accum).filter(|&m| shard.owns(m)) {
+        let batch = batches(base + m);
+        let mut bindings: Vec<(&str, &Store)> = vec![("params", params), ("batch", &batch)];
+        for (g, s) in extra {
+            bindings.push((g.as_str(), s));
+        }
+        let mut out = exe.run(&bindings)?;
+        let (loss, grads) = super::trainer::take_loss_and_grads(&mut out, cfg_name)?;
+        leaves.push((m, grads, loss));
+    }
+    Ok(leaves)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ExecEngine, Manifest, TensorSpec};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn workers_override_pins_and_restores() {
+        // (no LIGO_WORKERS in the test env; the override is thread-local)
+        set_workers_override(Some(3));
+        assert_eq!(requested_workers(), Some(3));
+        set_workers_override(Some(0)); // clamped, never 0
+        assert_eq!(requested_workers(), Some(1));
+        set_workers_override(None);
+    }
+
+    /// Engine whose loss and gradient encode the batch it was given, so the
+    /// test can prove every microbatch ran and came back in global order.
+    struct Echo;
+
+    impl ExecEngine for Echo {
+        fn execute(&self, inputs: &[&Tensor], outputs: &[TensorSpec]) -> Result<Vec<Tensor>> {
+            let tag = inputs[0].f32s()[0];
+            Ok(outputs
+                .iter()
+                .map(|s| Tensor::from_f32(&s.shape, vec![tag; s.numel()]))
+                .collect())
+        }
+    }
+
+    fn echo_exe() -> Executable {
+        let manifest = Manifest::parse(
+            r#"{"name": "echo", "inputs": [
+                 {"name": "batch/tag", "shape": [1], "dtype": "float32"}
+               ], "outputs": [
+                 {"name": "loss", "shape": [], "dtype": "float32"},
+                 {"name": "grads/w", "shape": [2], "dtype": "float32"}
+               ]}"#,
+        )
+        .unwrap();
+        Executable::new(manifest, Box::new(Echo))
+    }
+
+    fn tag_batches() -> SharedBatchFn {
+        Arc::new(|g: usize| {
+            let mut s = Store::new();
+            s.insert("tag", Tensor::from_f32(&[1], vec![g as f32]));
+            s
+        })
+    }
+
+    #[test]
+    fn leaves_come_back_in_global_microbatch_order_for_any_worker_count() {
+        let exe = echo_exe();
+        let batches = tag_batches();
+        let accum = 5;
+        let base = 40;
+        for workers in [1, 2, 4, 9] {
+            let run =
+                run_microbatches(&exe, &Store::new(), &[], &batches, base, accum, workers, "echo")
+                    .unwrap();
+            assert_eq!(run.leaves.len(), accum);
+            for (m, (grads, loss)) in run.leaves.iter().enumerate() {
+                let expect = (base + m) as f32;
+                assert_eq!(*loss, expect, "loss leaf {m} with {workers} workers");
+                assert_eq!(grads.expect("w").f32s(), &[expect; 2]);
+            }
+            let active = workers.min(accum);
+            assert_eq!(run.stats.len(), active);
+            let covered: usize = run.stats.iter().map(|s| s.microbatches).sum();
+            assert_eq!(covered, accum, "workers must tile the microbatches");
+        }
+    }
+
+    #[test]
+    fn worker_errors_surface_deterministically() {
+        // an executable with no grads group: every worker fails; the
+        // reported error must be the familiar trainer bail text
+        let manifest = Manifest::parse(
+            r#"{"name": "gap", "inputs": [
+                 {"name": "batch/tag", "shape": [1], "dtype": "float32"}
+               ], "outputs": [
+                 {"name": "loss", "shape": [], "dtype": "float32"}
+               ]}"#,
+        )
+        .unwrap();
+        let exe = Executable::new(manifest, Box::new(Echo));
+        let err = run_microbatches(&exe, &Store::new(), &[], &tag_batches(), 0, 4, 2, "gap")
+            .unwrap_err();
+        assert!(err.to_string().contains("no 'grads' group"), "{err}");
+    }
+}

@@ -6,6 +6,15 @@
 //! the unified `growth` entry point, optimizer state and executables are
 //! swapped for the target config, and training continues — with the growth
 //! step recorded as a [`Curve`] mark.
+//!
+//! With `LIGO_WORKERS=N` set (and a [`Batches::shared`] train source) the
+//! step loop instead fans each step's microbatches out across the
+//! [`parallel`] worker pool, reduces the gradient leaves through the
+//! deterministic tree in [`crate::util::allreduce`], and applies the
+//! ZeRO-style [`ShardedAdamW`] — bit-identical across worker counts, and
+//! resharded automatically when a mid-run growth stage swaps the parameter
+//! set ([`Trainer::adopt_grown`]). Unset, the historical serial path runs
+//! byte for byte.
 
 use std::sync::Arc;
 
@@ -14,17 +23,68 @@ use crate::config::{ModelConfig, TrainConfig};
 use crate::error::Result;
 use crate::coordinator::flops;
 use crate::coordinator::metrics::Curve;
-use crate::coordinator::optim::{accumulate, AdamW};
+use crate::coordinator::optim::{accumulate, ShardedAdamW};
+use crate::coordinator::parallel::{self, SharedBatchFn};
 use crate::coordinator::plan::{GrowthPlan, GrowthStage};
 use crate::log_info;
-use crate::runtime::{Executable, Runtime};
-use crate::tensor::store::Store;
+use crate::runtime::{Executable, RunOutputs, Runtime};
+use crate::tensor::{arena, store::Store};
+use crate::util::allreduce;
 use crate::util::timer::Timer;
+
+/// A train-batch source. [`Serial`](TrainSource::Serial) is the historical
+/// stateful closure — it can only be consumed in order, on one thread.
+/// [`Shared`](TrainSource::Shared) is a pure function of the global
+/// microbatch index, so the `LIGO_WORKERS` pool can pull a worker's shard
+/// of indices concurrently; every batch source in this repo that derives
+/// its batch from a seeded RNG of the index qualifies.
+pub enum TrainSource {
+    Serial(Box<dyn FnMut(usize) -> Store>),
+    Shared(SharedBatchFn),
+}
+
+impl TrainSource {
+    /// The next batch for global microbatch index `i` (serial consumption).
+    pub fn batch(&mut self, i: usize) -> Store {
+        match self {
+            TrainSource::Serial(f) => f(i),
+            TrainSource::Shared(f) => f(i),
+        }
+    }
+
+    /// The shareable view, if this source supports parallel consumption.
+    pub fn as_shared(&self) -> Option<&SharedBatchFn> {
+        match self {
+            TrainSource::Serial(_) => None,
+            TrainSource::Shared(f) => Some(f),
+        }
+    }
+}
 
 /// Batch source abstraction: step -> batch Store (train) and eval batches.
 pub struct Batches {
-    pub train: Box<dyn FnMut(usize) -> Store>,
+    pub train: TrainSource,
     pub eval: Box<dyn FnMut(usize) -> Store>,
+}
+
+impl Batches {
+    /// A serial (stateful) train source: always runs the single-worker
+    /// step loop, even under `LIGO_WORKERS` (with a one-time warning).
+    pub fn serial(
+        train: impl FnMut(usize) -> Store + 'static,
+        eval: impl FnMut(usize) -> Store + 'static,
+    ) -> Batches {
+        Batches { train: TrainSource::Serial(Box::new(train)), eval: Box::new(eval) }
+    }
+
+    /// A shareable train source — a pure function of the global microbatch
+    /// index — eligible for the `LIGO_WORKERS` parallel step loop.
+    pub fn shared(
+        train: impl Fn(usize) -> Store + Send + Sync + 'static,
+        eval: impl FnMut(usize) -> Store + 'static,
+    ) -> Batches {
+        Batches { train: TrainSource::Shared(Arc::new(train)), eval: Box::new(eval) }
+    }
 }
 
 /// Trainer state for one model.
@@ -32,7 +92,7 @@ pub struct Trainer {
     pub cfg: ModelConfig,
     pub tc: TrainConfig,
     pub params: Store,
-    pub opt: AdamW,
+    pub opt: ShardedAdamW,
     grad_exe: Arc<Executable>,
     fwd_exe: Arc<Executable>,
     /// FLOPs already spent before step 0 (growth cost, prior training).
@@ -42,6 +102,9 @@ pub struct Trainer {
     pub flops_per_microbatch: f64,
     /// Extra input-group bindings (e.g. the KD teacher's parameters).
     pub extra: Vec<(String, Store)>,
+    /// Per-worker arena counters from the most recent sharded step
+    /// (empty until [`Trainer::train_step_sharded`] has run).
+    last_worker_stats: Vec<arena::WorkerStats>,
     step: usize,
 }
 
@@ -65,7 +128,10 @@ impl Trainer {
     ) -> Result<Trainer> {
         let grad_exe = rt.load(grad_name)?;
         let fwd_exe = rt.load(fwd_name)?;
-        let opt = AdamW::from_train_config(&params, &tc);
+        // moment shards sized for the requested worker pool up front; the
+        // sharded step lazily reshards if the active count differs
+        let shards = parallel::requested_workers().unwrap_or(1);
+        let opt = ShardedAdamW::from_train_config(&params, &tc, shards);
         Ok(Trainer {
             cfg: cfg.clone(),
             tc,
@@ -77,6 +143,7 @@ impl Trainer {
             wall_offset: 0.0,
             flops_per_microbatch: flops::train_step_flops(cfg),
             extra: Vec::new(),
+            last_worker_stats: Vec::new(),
             step: 0,
         })
     }
@@ -109,23 +176,7 @@ impl Trainer {
                 bindings.push((g.as_str(), s));
             }
             let mut out = self.grad_exe.run(&bindings)?;
-            // A backend gap here must fail loudly: a missing loss would
-            // silently poison the whole mean-loss curve with NaN, and a
-            // missing grads group would previously panic.
-            let Some(loss) = out.scalar("loss") else {
-                bail!(
-                    "grad executable for '{}' returned no 'loss' scalar (outputs: {:?})",
-                    self.cfg.name,
-                    out.scalars.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
-                )
-            };
-            let Some(g) = out.take_group("grads") else {
-                bail!(
-                    "grad executable for '{}' returned no 'grads' group (groups: {:?})",
-                    self.cfg.name,
-                    out.groups.keys().collect::<Vec<_>>()
-                )
-            };
+            let (loss, g) = take_loss_and_grads(&mut out, &self.cfg.name)?;
             loss_sum += loss;
             if accum == 1 {
                 grads = g; // single microbatch: take ownership, no copy
@@ -139,6 +190,54 @@ impl Trainer {
         crate::tensor::arena::recycle_store(grads);
         self.step += 1;
         Ok(loss_sum / accum as f32)
+    }
+
+    /// One optimizer step with the microbatches sharded across `workers`
+    /// scoped workers ([`parallel::run_microbatches`]). Gradient leaves and
+    /// per-microbatch losses are reduced by the canonical tree
+    /// ([`allreduce`]), whose shape depends only on `grad_accum` — so the
+    /// result is **bit-identical for any worker count**, including 1.
+    /// (With `grad_accum > 1` the tree brackets sums differently from the
+    /// serial path's running left fold, so the two *paths* may differ in
+    /// the last ulps; the guarantee is across worker counts, not across
+    /// paths.) Optimizer moment shards are lazily resharded to match the
+    /// active worker count.
+    pub fn train_step_sharded(&mut self, batches: &SharedBatchFn, workers: usize) -> Result<f32> {
+        let accum = self.tc.grad_accum.max(1);
+        let active = workers.clamp(1, accum);
+        if self.opt.shard_count() != active {
+            self.opt.reshard(active);
+        }
+        let run = parallel::run_microbatches(
+            &self.grad_exe,
+            &self.params,
+            &self.extra,
+            batches,
+            self.step * accum,
+            accum,
+            workers,
+            &self.cfg.name,
+        )?;
+        self.last_worker_stats = run.stats;
+        let (leaves, losses): (Vec<Store>, Vec<f32>) = run.leaves.into_iter().unzip();
+        let mut grads = allreduce::tree_sum(leaves);
+        if accum > 1 {
+            // single scale after the tree sum: one rounding, same for any
+            // worker count (the serial path scales per leaf instead)
+            allreduce::scale_store(&mut grads, 1.0 / accum as f32);
+        }
+        let loss = allreduce::tree_sum_f32(&losses) / accum as f32;
+        let lr = self.tc.lr_at(self.step);
+        self.opt.step(&mut self.params, &grads, lr);
+        arena::recycle_store_shared(grads);
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Per-worker arena counters (fresh/reused/peak) from the most recent
+    /// sharded step; empty if no sharded step has run.
+    pub fn worker_arena_stats(&self) -> &[arena::WorkerStats] {
+        &self.last_worker_stats
     }
 
     /// Held-out evaluation: mean loss (and mean metric if present).
@@ -205,6 +304,25 @@ impl Trainer {
         let mut curve = Curve::new(name);
         let timer = Timer::new();
         let accum = self.tc.grad_accum.max(1) as f64;
+        // resolve the worker pool once per run: Some(w) + a shared train
+        // source takes the sharded step loop; a serial source under
+        // LIGO_WORKERS falls back (warn once — results are still correct,
+        // just single-worker)
+        let workers = parallel::requested_workers();
+        let pool = match (workers, batches.train.as_shared()) {
+            (Some(w), Some(src)) => Some((w, src.clone())),
+            (Some(w), None) => {
+                static SERIAL_FALLBACK: std::sync::Once = std::sync::Once::new();
+                SERIAL_FALLBACK.call_once(|| {
+                    crate::log_warn!(
+                        "LIGO_WORKERS={w} requested but this run's train source is serial \
+                         (stateful closure); falling back to the single-worker step loop"
+                    );
+                });
+                None
+            }
+            (None, _) => None,
+        };
         let mut spent = self.flops_offset;
         // record the starting point (growth quality shows at step 0)
         let (l0, m0) = self.evaluate(&mut batches.eval, 4)?;
@@ -219,14 +337,21 @@ impl Trainer {
                     && plan.stages()[next_stage].at_step <= self.step
                 {
                     let stage = &plan.stages()[next_stage];
-                    spent += self.execute_stage(rt, stage, &mut curve, &mut *batches.train)?;
+                    let train = &mut batches.train;
+                    spent += self.execute_stage(rt, stage, &mut curve, &mut |i| train.batch(i))?;
                     // eval immediately: the swap's quality shows at this step
                     let (l, m) = self.evaluate(&mut batches.eval, 4)?;
                     curve.push(self.step, spent, self.wall_offset + timer.elapsed(), l, m);
                     next_stage += 1;
                 }
             }
-            let _train_loss = self.train_step(&mut batches.train)?;
+            let _train_loss = match &pool {
+                Some((w, src)) => self.train_step_sharded(src, *w)?,
+                None => {
+                    let train = &mut batches.train;
+                    self.train_step(&mut |i| train.batch(i))?
+                }
+            };
             spent += self.flops_per_microbatch * accum;
             if (s + 1) % self.tc.eval_every == 0 || s + 1 == steps {
                 let (loss, metric) = self.evaluate(&mut batches.eval, 4)?;
@@ -275,7 +400,10 @@ impl Trainer {
 
     /// Swap this trainer onto a grown model mid-run: re-bind the target
     /// config's executables, rebuild optimizer state for the grown
-    /// parameters ([`AdamW::rebuild`]), and update the per-step FLOPs.
+    /// parameters ([`ShardedAdamW::rebuild`] — fresh moments re-partitioned
+    /// over the grown tensor set, keeping the shard count, so a
+    /// `LIGO_WORKERS` run stays sharded across growth), and update the
+    /// per-step FLOPs.
     /// The step counter and LR schedule continue uninterrupted. Extra
     /// input-group bindings (`self.extra`, e.g. a KD teacher's parameters)
     /// were shaped for the *old* executable pair and are dropped — binding
@@ -291,6 +419,29 @@ impl Trainer {
         self.extra.clear();
         Ok(())
     }
+}
+
+/// Pull `(loss, grads)` out of one grad-executable run. A backend gap here
+/// must fail loudly: a missing loss would silently poison the whole
+/// mean-loss curve with NaN, and a missing grads group would previously
+/// panic. Shared by the serial step loop and the `LIGO_WORKERS` workers so
+/// both paths report the same diagnostics.
+pub(crate) fn take_loss_and_grads(out: &mut RunOutputs, cfg_name: &str) -> Result<(f32, Store)> {
+    let Some(loss) = out.scalar("loss") else {
+        bail!(
+            "grad executable for '{}' returned no 'loss' scalar (outputs: {:?})",
+            cfg_name,
+            out.scalars.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
+        )
+    };
+    let Some(g) = out.take_group("grads") else {
+        bail!(
+            "grad executable for '{}' returned no 'grads' group (groups: {:?})",
+            cfg_name,
+            out.groups.keys().collect::<Vec<_>>()
+        )
+    };
+    Ok((loss, g))
 }
 
 /// Evaluate a fwd artifact over n batches: mean loss + mean metric.

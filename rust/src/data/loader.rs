@@ -11,6 +11,52 @@ use crate::tensor::store::Store;
 /// A boxed batch generator: `FnMut(step) -> Store`.
 pub type BatchFn = Box<dyn FnMut(usize) -> Store + Send>;
 
+/// One worker's slice of the global microbatch index stream — the single
+/// source of truth for the `LIGO_WORKERS` sharding law, used both by
+/// [`Loader::spawn_sharded`] and by the parallel trainer's leaf
+/// assignment. Worker `w` of `W` owns exactly the global indices
+/// `g ≡ w (mod W)`, so for any `W` the shards tile the stream: every
+/// global index is owned by exactly one worker (the coverage guarantee)
+/// and the batch *content* at a global index is independent of `W` (the
+/// determinism guarantee — content is a function of the global index, the
+/// shard only selects).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    worker: usize,
+    workers: usize,
+}
+
+impl Shard {
+    pub fn new(worker: usize, workers: usize) -> Shard {
+        assert!(workers >= 1, "worker count must be >= 1");
+        assert!(worker < workers, "worker {worker} out of range for {workers} workers");
+        Shard { worker, workers }
+    }
+
+    /// The trivial shard: one worker owning the whole stream.
+    pub fn full() -> Shard {
+        Shard { worker: 0, workers: 1 }
+    }
+
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Does this shard own global index `g`?
+    pub fn owns(&self, g: usize) -> bool {
+        g % self.workers == self.worker
+    }
+
+    /// The `local`-th global index this shard owns.
+    pub fn global_at(&self, local: usize) -> usize {
+        self.worker + local * self.workers
+    }
+}
+
 pub struct Loader {
     rx: mpsc::Receiver<Store>,
     handle: Option<JoinHandle<()>>,
@@ -19,17 +65,25 @@ pub struct Loader {
 
 impl Loader {
     /// Spawn a producer thread with `depth` batches of lookahead.
-    pub fn spawn(mut make: BatchFn, depth: usize) -> Loader {
+    pub fn spawn(make: BatchFn, depth: usize) -> Loader {
+        Self::spawn_sharded(make, Shard::full(), depth)
+    }
+
+    /// Spawn a producer prefetching only this worker's shard of the global
+    /// stream: the `local`-th batch produced is `make(shard.global_at(local))`,
+    /// so `make` always sees *global* indices and batch content stays a
+    /// function of the global index alone, whatever the worker count.
+    pub fn spawn_sharded(mut make: BatchFn, shard: Shard, depth: usize) -> Loader {
         let (tx, rx) = mpsc::sync_channel(depth.max(1));
         let (stop_tx, stop_rx) = mpsc::channel();
         let handle = std::thread::spawn(move || {
-            let mut step = 0usize;
+            let mut local = 0usize;
             loop {
                 if stop_rx.try_recv().is_ok() {
                     break;
                 }
-                let batch = make(step);
-                step += 1;
+                let batch = make(shard.global_at(local));
+                local += 1;
                 if tx.send(batch).is_err() {
                     break; // consumer dropped
                 }
@@ -125,6 +179,52 @@ mod tests {
             assert!(seen <= 2, "producer only made 2 batches");
         }
         assert!(seen <= 2);
+    }
+
+    #[test]
+    fn shards_tile_the_stream_exactly_once_for_any_worker_count() {
+        // coverage: for every worker count, each global index in an epoch
+        // is owned by exactly one shard, and global_at enumerates exactly
+        // the owned set in order
+        for workers in 1..=5 {
+            let shards: Vec<Shard> = (0..workers).map(|w| Shard::new(w, workers)).collect();
+            for g in 0..40 {
+                let owners = shards.iter().filter(|s| s.owns(g)).count();
+                assert_eq!(owners, 1, "index {g} with {workers} workers");
+            }
+            for s in &shards {
+                let enumerated: Vec<usize> =
+                    (0..40).map(|l| s.global_at(l)).filter(|&g| g < 40).collect();
+                let owned: Vec<usize> = (0..40).filter(|&g| s.owns(g)).collect();
+                assert_eq!(enumerated, owned, "worker {} of {workers}", s.worker());
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_loaders_reassemble_the_serial_stream() {
+        // determinism: same generator ⇒ same global batch order whether the
+        // stream is produced by 1 loader or reassembled from 3 sharded ones
+        let serial = Loader::spawn(Box::new(counter_batch), 4);
+        let expect: Vec<i32> =
+            (0..12).map(|_| serial.next().unwrap().expect("step").i32s()[0]).collect();
+        let workers = 3;
+        let sharded: Vec<Loader> = (0..workers)
+            .map(|w| Loader::spawn_sharded(Box::new(counter_batch), Shard::new(w, workers), 2))
+            .collect();
+        let mut got = Vec::new();
+        for _round in 0..4 {
+            for l in &sharded {
+                got.push(l.next().unwrap().expect("step").i32s()[0]);
+            }
+        }
+        assert_eq!(got, expect, "sharded streams must tile the serial one in order");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn shard_rejects_worker_out_of_range() {
+        let _ = Shard::new(2, 2);
     }
 
     #[test]

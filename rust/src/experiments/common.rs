@@ -82,16 +82,17 @@ pub fn text_batches(corpus: &Corpus, cfg: &ModelConfig, seed: u64) -> Batches {
     let cfg1 = cfg.clone();
     let c2 = corpus.clone();
     let cfg2 = cfg.clone();
-    Batches {
-        train: Box::new(move |step| {
+    // a shared source (pure in the global index) so LIGO_WORKERS can shard it
+    Batches::shared(
+        move |step| {
             let mut rng = Rng::new(seed ^ (step as u64).wrapping_mul(0x9E37_79B9));
             if is_lm { lm_batch(&c1, &cfg1, &mut rng) } else { mlm_batch(&c1, &cfg1, &mut rng) }
-        }),
-        eval: Box::new(move |i| {
+        },
+        move |i| {
             let mut rng = Rng::new(0xEEAA_0000 + i as u64);
             if is_lm { lm_batch(&c2, &cfg2, &mut rng) } else { mlm_batch(&c2, &cfg2, &mut rng) }
-        }),
-    }
+        },
+    )
 }
 
 /// Batch generators for a vision config.
@@ -100,12 +101,12 @@ pub fn vision_batches(task: &VisionTask, cfg: &ModelConfig, seed: u64) -> Batche
     let cfg1 = cfg.clone();
     let t2 = task.clone();
     let cfg2 = cfg.clone();
-    Batches {
-        train: Box::new(move |step| {
+    Batches::shared(
+        move |step| {
             t1.batch(&cfg1, &mut Rng::new(seed ^ (step as u64).wrapping_mul(0x9E37_79B9)))
-        }),
-        eval: Box::new(move |i| t2.batch(&cfg2, &mut Rng::new(0xEEAA_1000 + i as u64))),
-    }
+        },
+        move |i| t2.batch(&cfg2, &mut Rng::new(0xEEAA_1000 + i as u64)),
+    )
 }
 
 fn batches_for(cfg: &ModelConfig, corpus: &Corpus, seed: u64) -> Batches {

@@ -22,13 +22,24 @@
 //! needed and tests stay isolated. Best-fit matching (smallest sufficient
 //! capacity) keeps a heterogeneous multiset reusable in any request order.
 //!
+//! One exception: the `LIGO_WORKERS` data-parallel trainer runs each step's
+//! microbatches on *fresh scoped threads*, whose thread-local pools start
+//! empty. A mutex-guarded **shared overflow pool** bridges the steps:
+//! worker threads opt in ([`set_shared_draw`]) to fall back to it on a
+//! local miss, flush their local pool into it when their task ends
+//! ([`flush_to_shared`]), and the coordinator recycles dead reduced
+//! gradient stores into it ([`recycle_store_shared`]) — so step `k+1`'s
+//! workers reuse step `k`'s buffers and the multi-worker steady state also
+//! allocates nothing fresh (per-worker counters: [`worker_stats`]). Threads
+//! that never opt in never touch the mutex.
+//!
 //! Knob: `LIGO_ARENA=0` disables pooling (every request is a fresh
 //! allocation, every recycle a plain drop) for A/B runs — see
 //! EXPERIMENTS.md. Correctness never depends on the pool: a recycled
 //! buffer is resized and re-zeroed before it is handed out again.
 
-use std::cell::RefCell;
-use std::sync::OnceLock;
+use std::cell::{Cell, RefCell};
+use std::sync::{Mutex, OnceLock};
 
 use super::{Tensor, TensorData};
 use crate::tensor::store::Store;
@@ -56,10 +67,10 @@ struct Pool {
     peak_request: usize,
 }
 
-/// Best-fit extraction: the smallest pooled buffer with capacity >= n.
-fn take_fit(pool: &mut Pool, n: usize) -> Option<Vec<f32>> {
+/// Best-fit extraction: the smallest buffer with capacity >= n.
+fn best_fit(free: &mut Vec<Vec<f32>>, n: usize) -> Option<Vec<f32>> {
     let mut best: Option<(usize, usize)> = None;
-    for (i, b) in pool.free.iter().enumerate() {
+    for (i, b) in free.iter().enumerate() {
         let cap = b.capacity();
         let better = match best {
             None => true,
@@ -72,14 +83,125 @@ fn take_fit(pool: &mut Pool, n: usize) -> Option<Vec<f32>> {
             }
         }
     }
-    best.map(|(i, cap)| {
-        pool.bytes -= cap * 4;
-        pool.free.swap_remove(i)
-    })
+    best.map(|(i, _)| free.swap_remove(i))
+}
+
+fn take_fit(pool: &mut Pool, n: usize) -> Option<Vec<f32>> {
+    let b = best_fit(&mut pool.free, n)?;
+    pool.bytes -= b.capacity() * 4;
+    Some(b)
+}
+
+/// Local-first extraction with the shared-pool fallback for opted-in
+/// threads (the parallel trainer's scoped workers).
+fn take_any(pool: &mut Pool, n: usize) -> Option<Vec<f32>> {
+    take_fit(pool, n).or_else(|| shared_take(n))
 }
 
 thread_local! {
     static POOL: RefCell<Pool> = RefCell::new(Pool::default());
+
+    /// Whether allocations on this thread may fall back to [`SHARED`] on a
+    /// local-pool miss. Off by default so ordinary (serial) threads never
+    /// touch the mutex and never steal another task's buffers.
+    static DRAW_SHARED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// The cross-thread overflow pool (see the module docs). `bytes` tracks the
+/// pooled capacity so the same byte cap applies as to a local pool.
+struct SharedPool {
+    free: Vec<Vec<f32>>,
+    bytes: usize,
+}
+
+static SHARED: Mutex<SharedPool> = Mutex::new(SharedPool { free: Vec::new(), bytes: 0 });
+
+/// Count bound for [`SHARED`]: it aggregates every worker's flushed pool,
+/// so it gets more headroom than a single thread-local pool.
+const SHARED_MAX_POOLED: usize = 4 * MAX_POOLED;
+
+fn shared(guarded: &Mutex<SharedPool>) -> std::sync::MutexGuard<'_, SharedPool> {
+    // a worker panicking mid-recycle poisons nothing worse than a buffer
+    // list; keep serving the surviving threads
+    guarded.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Opt this thread in/out of drawing from the shared overflow pool on a
+/// local-pool miss. Worker threads of the data-parallel trainer enable
+/// this; everything else stays purely thread-local.
+pub fn set_shared_draw(on: bool) {
+    DRAW_SHARED.with(|c| c.set(on));
+}
+
+fn shared_take(n: usize) -> Option<Vec<f32>> {
+    if !DRAW_SHARED.with(|c| c.get()) {
+        return None;
+    }
+    let mut sh = shared(&SHARED);
+    let b = best_fit(&mut sh.free, n)?;
+    sh.bytes -= b.capacity() * 4;
+    Some(b)
+}
+
+/// Return a raw buffer directly to the shared pool (the coordinator
+/// recycling reduced gradient stores for the *next* step's workers).
+pub fn recycle_buf_shared(buf: Vec<f32>) {
+    if !enabled() || buf.capacity() == 0 {
+        return;
+    }
+    let bytes = buf.capacity() * 4;
+    let mut sh = shared(&SHARED);
+    if sh.free.len() < SHARED_MAX_POOLED && sh.bytes + bytes <= MAX_POOLED_BYTES {
+        sh.bytes += bytes;
+        sh.free.push(buf);
+    }
+}
+
+/// Recycle every f32 tensor of a dead store into the *shared* pool (the
+/// tree all-reduce's consumed leaves, the optimizer-consumed accumulator).
+pub fn recycle_store_shared(s: Store) {
+    for (_name, t) in s.into_entries() {
+        if let TensorData::F32(v) = t.data {
+            recycle_buf_shared(v);
+        }
+    }
+}
+
+/// Move this thread's entire local pool into the shared pool (a parallel
+/// worker handing its buffers to the next step's workers before its scoped
+/// thread dies). Buffers past the shared caps are dropped.
+pub fn flush_to_shared() {
+    if !enabled() {
+        return;
+    }
+    POOL.with(|p| {
+        let mut pool = p.borrow_mut();
+        if pool.free.is_empty() {
+            return;
+        }
+        let mut sh = shared(&SHARED);
+        while let Some(b) = pool.free.pop() {
+            let bytes = b.capacity() * 4;
+            pool.bytes -= bytes;
+            if sh.free.len() < SHARED_MAX_POOLED && sh.bytes + bytes <= MAX_POOLED_BYTES {
+                sh.bytes += bytes;
+                sh.free.push(b);
+            }
+        }
+    });
+}
+
+/// (buffer count, pooled bytes) of the shared overflow pool — diagnostics.
+pub fn shared_stats() -> (usize, usize) {
+    let sh = shared(&SHARED);
+    (sh.free.len(), sh.bytes)
+}
+
+/// Drop every buffer in the shared overflow pool (tests; memory pressure).
+pub fn clear_shared() {
+    let mut sh = shared(&SHARED);
+    sh.free.clear();
+    sh.bytes = 0;
 }
 
 /// Pool enabled unless `LIGO_ARENA=0` (read once per process).
@@ -97,7 +219,7 @@ pub fn alloc_zeroed(n: usize) -> Vec<f32> {
     POOL.with(|p| {
         let mut pool = p.borrow_mut();
         pool.peak_request = pool.peak_request.max(n);
-        match take_fit(&mut pool, n) {
+        match take_any(&mut pool, n) {
             Some(mut b) => {
                 b.clear();
                 b.resize(n, 0.0);
@@ -124,7 +246,7 @@ pub fn alloc_scratch(n: usize) -> Vec<f32> {
     POOL.with(|p| {
         let mut pool = p.borrow_mut();
         pool.peak_request = pool.peak_request.max(n);
-        match take_fit(&mut pool, n) {
+        match take_any(&mut pool, n) {
             Some(mut b) => {
                 if b.len() >= n {
                     b.truncate(n); // keep stale values: caller overwrites all
@@ -153,7 +275,7 @@ pub fn alloc_copy(src: &[f32]) -> Vec<f32> {
     POOL.with(|p| {
         let mut pool = p.borrow_mut();
         pool.peak_request = pool.peak_request.max(src.len());
-        match take_fit(&mut pool, src.len()) {
+        match take_any(&mut pool, src.len()) {
             Some(mut b) => {
                 b.clear();
                 b.extend_from_slice(src);
@@ -235,6 +357,39 @@ pub fn clear() {
     });
 }
 
+/// Arena counters of one data-parallel worker for one task. Scoped worker
+/// threads are born with zeroed counters, so a snapshot at task end *is*
+/// the per-step measurement — no reset bookkeeping needed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Worker index within the step's pool.
+    pub worker: usize,
+    /// Microbatches this worker processed.
+    pub microbatches: usize,
+    /// Fresh allocations (0 in the multi-worker steady state — the
+    /// regression the parallel zero-fresh-alloc test asserts).
+    pub fresh: u64,
+    /// Pool reuses (local pool or shared-pool fallback).
+    pub reused: u64,
+    /// Largest single buffer request, in f32 elements.
+    pub peak_request: usize,
+}
+
+/// Snapshot this thread's counters as a worker's per-task stats (called by
+/// a `coordinator::parallel` worker right before it flushes and exits).
+pub fn worker_stats(worker: usize, microbatches: usize) -> WorkerStats {
+    POOL.with(|p| {
+        let pool = p.borrow();
+        WorkerStats {
+            worker,
+            microbatches,
+            fresh: pool.fresh,
+            reused: pool.reused,
+            peak_request: pool.peak_request,
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,6 +441,65 @@ mod tests {
         recycle_buf(c);
         reset_stats();
         assert_eq!(peak_request(), 0, "reset clears the high-water mark");
+    }
+
+    #[test]
+    fn shared_pool_bridges_threads_for_opted_in_workers() {
+        if !enabled() {
+            return;
+        }
+        // An odd, large capacity no other concurrently-running test
+        // requests, so the cross-thread handoff is observable even though
+        // the shared pool is process-global.
+        const N: usize = 1_000_003;
+        recycle_buf_shared(Vec::with_capacity(N));
+        // a thread that does NOT opt in must not see the shared buffer
+        let stole = std::thread::spawn(|| {
+            clear();
+            reset_stats();
+            let b = alloc_zeroed(N);
+            let (fresh, _) = stats();
+            recycle_buf(b); // stays local, dropped with the thread
+            fresh == 0
+        })
+        .join()
+        .unwrap();
+        assert!(!stole, "non-worker threads must never draw from the shared pool");
+        // an opted-in worker thread reuses it (fresh stays 0 for this size)
+        let reused_from_shared = std::thread::spawn(|| {
+            clear();
+            reset_stats();
+            set_shared_draw(true);
+            let b = alloc_zeroed(N);
+            let (fresh, reused) = stats();
+            let got = b.capacity() >= N && fresh == 0 && reused >= 1;
+            recycle_buf(b);
+            flush_to_shared(); // hand it back for whoever runs next
+            got
+        })
+        .join()
+        .unwrap();
+        assert!(reused_from_shared, "opted-in worker must draw from the shared pool");
+    }
+
+    #[test]
+    fn worker_stats_snapshot_counts_this_thread_only() {
+        if !enabled() {
+            return;
+        }
+        let st = std::thread::spawn(|| {
+            let a = alloc_zeroed(48);
+            recycle_buf(a);
+            let b = alloc_zeroed(40); // best-fit reuse of the 48-cap buffer
+            recycle_buf(b);
+            worker_stats(3, 2)
+        })
+        .join()
+        .unwrap();
+        assert_eq!(st.worker, 3);
+        assert_eq!(st.microbatches, 2);
+        assert_eq!((st.fresh, st.reused), (1, 1));
+        assert_eq!(st.peak_request, 48);
     }
 
     #[test]

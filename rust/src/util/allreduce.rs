@@ -1,0 +1,193 @@
+//! Deterministic tree all-reduce over gradient [`Store`]s — the reduction
+//! half of the `LIGO_WORKERS` data-parallel trainer.
+//!
+//! [`tree_sum`] combines the per-microbatch gradient leaves pairwise in a
+//! fixed binary tree: round 1 adds leaf 1 into leaf 0, 3 into 2, ...;
+//! round 2 adds slot 2 into slot 0, 6 into 4, ...; and so on (stride
+//! doubling). The tree's *shape* depends only on the number of leaves —
+//! never on which worker produced which leaf — so an N-worker run sums the
+//! same floats in the same order as a 1-worker run and the result is
+//! bit-identical for every worker count. This is the same discipline
+//! `util::par` applies inside kernels (row partitioning never reassociates
+//! a per-element reduction), lifted to the gradient-store level.
+//!
+//! Consumed leaves are recycled into the *shared* arena pool
+//! ([`crate::tensor::arena::recycle_store_shared`]) because the next step's
+//! worker threads — fresh scoped threads with empty thread-local pools —
+//! draw from it; this is what keeps the multi-worker steady state at zero
+//! fresh allocations.
+//!
+//! The serial `Trainer::train_step` path (env `LIGO_WORKERS` unset) keeps
+//! its historical left-fold-with-prescaled-leaves accumulation untouched;
+//! the two paths agree to float noise but not bitwise when
+//! `grad_accum > 1` (they associate the sum differently). Bit-identity is
+//! guaranteed *across worker counts*, which is the invariant the tests pin.
+
+use crate::tensor::store::Store;
+use crate::tensor::TensorData;
+use crate::util::par;
+
+/// Below this many elements a pairwise tensor add runs on the calling
+/// thread; above it, `par_row_chunks` splits the elementwise add (which is
+/// bit-identical by construction — no cross-element reduction).
+const PAR_MIN_ELEMS: usize = 1 << 15;
+
+/// Elementwise `acc += src` over every f32 tensor the two stores share.
+/// Shapes must match; names in `src` missing from `acc` are a caller bug
+/// for gradient leaves (all leaves come from the same executable) but are
+/// tolerated here to mirror [`crate::coordinator::optim::accumulate`].
+pub fn add_into(acc: &mut Store, src: &Store) {
+    for (name, t) in acc.iter_mut() {
+        let Some(s) = src.get(name) else { continue };
+        if !matches!(t.data, TensorData::F32(_)) {
+            continue;
+        }
+        let dv = t.f32s_mut();
+        let sv = s.f32s();
+        assert_eq!(dv.len(), sv.len(), "tree-sum length mismatch on '{name}'");
+        if dv.len() < PAR_MIN_ELEMS || par::threads() == 1 {
+            for (d, x) in dv.iter_mut().zip(sv) {
+                *d += x;
+            }
+        } else {
+            par::par_row_chunks(dv, 1, |row0, chunk| {
+                for (d, x) in chunk.iter_mut().zip(&sv[row0..row0 + chunk.len()]) {
+                    *d += x;
+                }
+            });
+        }
+    }
+}
+
+/// Sum the gradient leaves in the canonical stride-doubling binary tree
+/// and return the total. The reduction order is a pure function of
+/// `leaves.len()`, so any partition of the leaves across workers produces
+/// bit-identical results. Consumed leaves go to the shared arena pool.
+///
+/// Panics on an empty input: a train step always has >= 1 microbatch.
+pub fn tree_sum(leaves: Vec<Store>) -> Store {
+    assert!(!leaves.is_empty(), "tree_sum needs at least one leaf");
+    let n = leaves.len();
+    let mut slots: Vec<Option<Store>> = leaves.into_iter().map(Some).collect();
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let right = slots[i + stride].take().expect("each slot is consumed once");
+            let left = slots[i].as_mut().expect("left slot is live");
+            add_into(left, &right);
+            crate::tensor::arena::recycle_store_shared(right);
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    slots[0].take().expect("root slot holds the sum")
+}
+
+/// The scalar (per-microbatch loss) analog of [`tree_sum`]: same canonical
+/// tree, same worker-count independence.
+pub fn tree_sum_f32(vals: &[f32]) -> f32 {
+    assert!(!vals.is_empty(), "tree_sum_f32 needs at least one value");
+    let n = vals.len();
+    let mut slots = vals.to_vec();
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            slots[i] += slots[i + stride];
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    slots[0]
+}
+
+/// In-place `t *= scale` over every f32 tensor — the single post-reduction
+/// `1/grad_accum` pass of the sharded step (one multiply per element, after
+/// the tree, so the scaling order is also worker-count independent).
+pub fn scale_store(s: &mut Store, scale: f32) {
+    for (_name, t) in s.iter_mut() {
+        if let TensorData::F32(v) = &mut t.data {
+            for x in v.iter_mut() {
+                *x *= scale;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn leaf(vals: &[f32]) -> Store {
+        let mut s = Store::new();
+        s.insert("w", Tensor::from_f32(&[vals.len()], vals.to_vec()));
+        s
+    }
+
+    #[test]
+    fn tree_sum_adds_all_leaves() {
+        for n in 1..=9 {
+            let leaves: Vec<Store> = (0..n).map(|i| leaf(&[i as f32, 1.0])).collect();
+            let total = tree_sum(leaves);
+            let expect = (0..n).sum::<usize>() as f32;
+            assert_eq!(total.expect("w").f32s(), &[expect, n as f32], "n={n}");
+        }
+    }
+
+    #[test]
+    fn tree_shape_is_a_function_of_leaf_count_only() {
+        // Values chosen so float addition is non-associative: a left fold
+        // and the balanced tree disagree in the last bits. The tree result
+        // must equal the explicitly-bracketed pairwise sum.
+        let vals = [1.0e8f32, 1.0, -1.0e8, 1.0, 3.0e7, 1.0, -3.0e7];
+        let tree = tree_sum_f32(&vals);
+        // stride 1: (0+1)(2+3)(4+5); stride 2: (0+2)(4+6); stride 4: (0+4)
+        let s01 = vals[0] + vals[1];
+        let s23 = vals[2] + vals[3];
+        let s45 = vals[4] + vals[5];
+        let s03 = s01 + s23;
+        let s46 = s45 + vals[6];
+        assert_eq!(tree.to_bits(), (s03 + s46).to_bits());
+        let fold: f32 = vals.iter().sum();
+        // sanity: the orders genuinely differ on this input
+        assert_ne!(tree.to_bits(), fold.to_bits(), "input must be order-sensitive");
+    }
+
+    #[test]
+    fn store_tree_matches_scalar_tree_bitwise() {
+        let raw = [1.0e8f32, 1.0, -1.0e8, 1.0, 3.0e7];
+        let leaves: Vec<Store> = raw.iter().map(|&v| leaf(&[v])).collect();
+        let total = tree_sum(leaves);
+        assert_eq!(
+            total.expect("w").f32s()[0].to_bits(),
+            tree_sum_f32(&raw).to_bits(),
+            "store reduction must use the same tree as the scalar one"
+        );
+    }
+
+    #[test]
+    fn add_into_parallel_path_is_exact() {
+        // Above PAR_MIN_ELEMS the add is chunked; chunking an elementwise
+        // op must be invisible.
+        let n = PAR_MIN_ELEMS + 37;
+        let a: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i as f32).cos()).collect();
+        let mut acc = Store::new();
+        acc.insert("w", Tensor::from_f32(&[n], a.clone()));
+        let mut src = Store::new();
+        src.insert("w", Tensor::from_f32(&[n], b.clone()));
+        add_into(&mut acc, &src);
+        for (i, x) in acc.expect("w").f32s().iter().enumerate() {
+            assert_eq!(x.to_bits(), (a[i] + b[i]).to_bits(), "element {i}");
+        }
+    }
+
+    #[test]
+    fn scale_store_scales_every_element() {
+        let mut s = leaf(&[2.0, -4.0]);
+        scale_store(&mut s, 0.5);
+        assert_eq!(s.expect("w").f32s(), &[1.0, -2.0]);
+    }
+}

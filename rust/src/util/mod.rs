@@ -6,6 +6,7 @@
 //! (`crate::error`, in lieu of anyhow) are implemented here as small,
 //! well-tested modules.
 
+pub mod allreduce;
 pub mod bench;
 pub mod cli;
 pub mod json;

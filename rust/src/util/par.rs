@@ -6,11 +6,22 @@
 //! Row partitioning never changes per-element accumulation order, so the
 //! parallel results are bit-identical to the serial ones.
 
+use std::cell::Cell;
 use std::num::NonZeroUsize;
 use std::sync::OnceLock;
 
-/// Worker count: `LIGO_THREADS` override, else `available_parallelism`.
+thread_local! {
+    /// Per-thread kernel fan-out budget (see [`set_thread_budget`]).
+    static BUDGET: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Worker count: this thread's budget override when set
+/// ([`set_thread_budget`]), else `LIGO_THREADS`, else
+/// `available_parallelism`.
 pub fn threads() -> usize {
+    if let Some(n) = BUDGET.with(|c| c.get()) {
+        return n.max(1);
+    }
     static THREADS: OnceLock<usize> = OnceLock::new();
     *THREADS.get_or_init(|| {
         if let Ok(v) = std::env::var("LIGO_THREADS") {
@@ -22,6 +33,17 @@ pub fn threads() -> usize {
             .map(NonZeroUsize::get)
             .unwrap_or(1)
     })
+}
+
+/// Cap this thread's kernel fan-out: `Some(n)` makes [`threads`] (and with
+/// it every `par_row_chunks` call on this thread) use at most `n` workers;
+/// `None` restores the process default. The data-parallel trainer
+/// (`coordinator::parallel`) sets `threads()/workers` on each worker thread
+/// so `LIGO_WORKERS=N` does not oversubscribe the host by `N x`. Chunk
+/// *sizing* never changes per-element accumulation order, so the budget
+/// affects wall-clock only, never bits.
+pub fn set_thread_budget(v: Option<usize>) {
+    BUDGET.with(|c| c.set(v));
 }
 
 /// Run `f(first_row, chunk)` over contiguous whole-row chunks of `out`
@@ -84,6 +106,17 @@ mod tests {
     #[test]
     fn threads_at_least_one() {
         assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn thread_budget_caps_and_restores() {
+        let ambient = threads();
+        set_thread_budget(Some(1));
+        assert_eq!(threads(), 1);
+        set_thread_budget(Some(0)); // clamped, never zero
+        assert_eq!(threads(), 1);
+        set_thread_budget(None);
+        assert_eq!(threads(), ambient);
     }
 
     #[test]

@@ -133,18 +133,18 @@ fn kd_trainer_path_works() {
     )
     .unwrap();
     tr.extra = vec![("teacher".to_string(), teacher)];
-    let mut b = Batches {
-        train: {
+    let mut b = Batches::shared(
+        {
             let c = corpus.clone();
             let l = large.clone();
-            Box::new(move |s| mlm_batch(&c, &l, &mut Rng::new(s as u64)))
+            move |s| mlm_batch(&c, &l, &mut Rng::new(s as u64))
         },
-        eval: {
+        {
             let c = corpus.clone();
             let l = large.clone();
-            Box::new(move |s| mlm_batch(&c, &l, &mut Rng::new(0xE0 + s as u64)))
+            move |s| mlm_batch(&c, &l, &mut Rng::new(0xE0 + s as u64))
         },
-    };
+    );
     let curve = tr.run("kd", &mut b, 3).unwrap();
     assert!(curve.loss.iter().all(|l| l.is_finite()));
 }

@@ -95,14 +95,14 @@ fn train_steps_reduce_loss() {
     let mut tr = Trainer::new(&rt, &cfg, tc, params).unwrap();
     let c1 = corpus.clone();
     let cfg1 = cfg.clone();
-    let mut batches = Batches {
-        train: Box::new(move |step| mlm_batch(&c1, &cfg1, &mut Rng::new(step as u64))),
-        eval: Box::new({
+    let mut batches = Batches::shared(
+        move |step| mlm_batch(&c1, &cfg1, &mut Rng::new(step as u64)),
+        {
             let c = corpus.clone();
             let cfg = cfg.clone();
             move |i| mlm_batch(&c, &cfg, &mut Rng::new(0x77AA + i as u64))
-        }),
-    };
+        },
+    );
     let curve = tr.run("smoke", &mut batches, 80).unwrap();
     let first = curve.loss[0];
     let last = *curve.loss.last().unwrap();

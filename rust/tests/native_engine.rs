@@ -38,14 +38,14 @@ fn trainer_reduces_loss_on_the_native_backend() {
     let mut tr = Trainer::new(&rt, &cfg, tc, params).unwrap();
     let c1 = corpus.clone();
     let cfg1 = cfg.clone();
-    let mut batches = Batches {
-        train: Box::new(move |step| mlm_batch(&c1, &cfg1, &mut Rng::new(step as u64))),
-        eval: Box::new({
+    let mut batches = Batches::shared(
+        move |step| mlm_batch(&c1, &cfg1, &mut Rng::new(step as u64)),
+        {
             let c = corpus.clone();
             let cfg = cfg.clone();
             move |i| mlm_batch(&c, &cfg, &mut Rng::new(0x77AA + i as u64))
-        }),
-    };
+        },
+    );
     let curve = tr.run("native_smoke", &mut batches, 25).unwrap();
     assert!(curve.loss.iter().all(|l| l.is_finite()), "{:?}", curve.loss);
     let (first, last) = (curve.loss[0], *curve.loss.last().unwrap());
@@ -83,14 +83,14 @@ fn two_stage_growth_plan_runs_mid_training_with_visible_growth_steps() {
     let mut tr = Trainer::new(&rt, &small, tc, params).unwrap();
     let c1 = corpus.clone();
     let s1 = small.clone();
-    let mut batches = Batches {
-        train: Box::new(move |step| mlm_batch(&c1, &s1, &mut Rng::new(step as u64))),
-        eval: Box::new({
+    let mut batches = Batches::shared(
+        move |step| mlm_batch(&c1, &s1, &mut Rng::new(step as u64)),
+        {
             let c = corpus.clone();
             let cfg = small.clone();
             move |i| mlm_batch(&c, &cfg, &mut Rng::new(0x55AA + i as u64))
-        }),
-    };
+        },
+    );
     // a stage beyond this run's budget is rejected up front, not skipped
     let far = GrowthPlan::builder(&small)
         .grow_at(100, &mid, "stackbert")
@@ -202,4 +202,123 @@ fn probe_preset_synthesizes_with_metric() {
     let exe = rt.load("fwd_probe_bert_small").unwrap();
     assert!(exe.manifest.output_index("metric").is_some());
     assert_eq!(exe.manifest.inputs_of("batch")[1].shape, vec![16]);
+}
+
+/// Serializes the LIGO_WORKERS tests: workers flush their buffers into the
+/// process-global shared arena pool, and two sharded tests interleaving
+/// would make the per-worker fresh/reuse counters nondeterministic.
+static SHARDED: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[test]
+fn sharded_training_is_bit_identical_across_worker_counts() {
+    // the ISSUE 6 acceptance scenario: the same 6-step run — including a
+    // 2-stage GrowthPlan with optimizer-shard resharding mid-run — must
+    // produce the same loss curve and the same parameter bytes for
+    // LIGO_WORKERS in {1, 2, 4}
+    let _guard = SHARDED.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(rt) = native_runtime() else { return };
+    let reg = Registry::builtin();
+    let small = reg.model("bert_small").unwrap().clone();
+    let mid = reg.model("bert_d6w48").unwrap().clone();
+    let large = reg.model("bert_base").unwrap().clone();
+    let corpus = Corpus::new(small.vocab, 0);
+
+    let run_with = |workers: usize| -> (Vec<u32>, Vec<(String, Vec<u32>)>) {
+        ligo::coordinator::parallel::set_workers_override(Some(workers));
+        let plan = GrowthPlan::builder(&small)
+            .grow_at(2, &mid, "stackbert")
+            .grow_at_with(4, &large, "ligo", LigoOptions { steps: 2, ..Default::default() })
+            .build()
+            .unwrap();
+        let params = Trainer::scratch_params(&rt, &small, 0).unwrap();
+        let tc = TrainConfig {
+            lr: 3e-3,
+            total_steps: 6,
+            warmup_steps: 2,
+            eval_every: 1,
+            grad_accum: 4,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(&rt, &small, tc, params).unwrap();
+        let c1 = corpus.clone();
+        let s1 = small.clone();
+        let mut batches = Batches::shared(
+            move |step| mlm_batch(&c1, &s1, &mut Rng::new(step as u64)),
+            {
+                let c = corpus.clone();
+                let cfg = small.clone();
+                move |i| mlm_batch(&c, &cfg, &mut Rng::new(0x33AA + i as u64))
+            },
+        );
+        let curve = tr.run_plan(&rt, &format!("w{workers}"), &mut batches, 6, &plan).unwrap();
+        ligo::coordinator::parallel::set_workers_override(None);
+        assert_eq!(tr.cfg.name, "bert_base", "both growth stages must have fired");
+        let losses = curve.loss.iter().map(|l| l.to_bits()).collect();
+        let param_bits = tr
+            .params
+            .iter()
+            .filter(|(_, t)| matches!(t.data, ligo::tensor::TensorData::F32(_)))
+            .map(|(n, t)| (n.clone(), t.f32s().iter().map(|v| v.to_bits()).collect()))
+            .collect();
+        (losses, param_bits)
+    };
+
+    let serial = run_with(1);
+    for workers in [2, 4] {
+        let sharded = run_with(workers);
+        assert_eq!(
+            serial.0, sharded.0,
+            "loss curve must be bit-identical: 1 vs {workers} workers"
+        );
+        assert_eq!(
+            serial.1, sharded.1,
+            "final parameters must be bit-identical: 1 vs {workers} workers"
+        );
+    }
+}
+
+#[test]
+fn sharded_steps_reach_zero_fresh_alloc_steady_state() {
+    // satellite of the same ISSUE: after warmup, every worker's step must
+    // be served entirely from recycled buffers (thread-local pool + shared
+    // overflow pool), extending the serial zero-fresh-alloc regression to
+    // the multi-worker path
+    let _guard = SHARDED.lock().unwrap_or_else(|e| e.into_inner());
+    if !ligo::tensor::arena::enabled() {
+        return;
+    }
+    let Some(rt) = native_runtime() else { return };
+    let reg = Registry::builtin();
+    let cfg = reg.model("bert_small").unwrap().clone();
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let params = Trainer::scratch_params(&rt, &cfg, 0).unwrap();
+    let tc = TrainConfig {
+        lr: 3e-3,
+        total_steps: 8,
+        warmup_steps: 2,
+        eval_every: 8,
+        grad_accum: 4,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(&rt, &cfg, tc, params).unwrap();
+    let c1 = corpus.clone();
+    let cfg1 = cfg.clone();
+    let batches: ligo::coordinator::parallel::SharedBatchFn =
+        std::sync::Arc::new(move |step| mlm_batch(&c1, &cfg1, &mut Rng::new(step as u64)));
+    // warmup: the first steps populate the shared overflow pool
+    for _ in 0..4 {
+        tr.train_step_sharded(&batches, 2).unwrap();
+    }
+    tr.train_step_sharded(&batches, 2).unwrap();
+    let stats = tr.worker_arena_stats();
+    assert_eq!(stats.len(), 2, "one stats entry per active worker");
+    for s in stats {
+        assert_eq!(s.microbatches, 2, "accum 4 over 2 workers: 2 leaves each ({s:?})");
+        assert_eq!(
+            s.fresh, 0,
+            "steady-state worker {} must allocate nothing fresh: {s:?}",
+            s.worker
+        );
+        assert!(s.reused > 0, "worker {} must be reusing buffers: {s:?}", s.worker);
+    }
 }
