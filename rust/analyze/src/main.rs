@@ -1,0 +1,239 @@
+//! `ligo-analyze` — engine-invariant lints over the `ligo` source tree.
+//!
+//! A deliberately dumb, dependency-free scanner (no syn, no rustc
+//! internals: the environment is offline) that enforces three invariants
+//! the type system cannot:
+//!
+//! * **fresh_alloc** — the training hot path (`model/tape.rs`,
+//!   `model/text.rs`, `model/vision.rs`, `tensor/ops.rs`,
+//!   `util/allreduce.rs`, `coordinator/parallel.rs`) must draw f32 buffers
+//!   from `tensor/arena.rs`, never allocate fresh ones: `vec![0.0…]` and
+//!   `Vec::with_capacity` are rejected outside `#[cfg(test)]` regions
+//!   unless the line (or the line above) carries
+//!   `// lint:allow(fresh_alloc) <reason>`. `tensor/arena.rs` itself is
+//!   exempt by construction — its `vec![…]` fallbacks *are* the pool-miss
+//!   paths.
+//! * **env_var** — every `env::var(` read lives in `util/knobs.rs`; the
+//!   rest of the crate goes through the typed knob accessors (which warn
+//!   once on mis-parses instead of silently ignoring them).
+//! * **knobs** — the `util/knobs.rs` `REGISTRY`, the `EXPERIMENTS.md`
+//!   environment-knob table and the `"LIGO_*"` literals in source agree:
+//!   every registered knob is documented and actually read somewhere;
+//!   every literal names a registered knob (`LIGO_TEST_*` fixtures in test
+//!   regions excepted).
+//!
+//! Exit status 0 when every lint passes, 1 with one line per finding
+//! otherwise — `cargo run -p ligo-analyze` is the CI entry point.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Hot-path modules under `rust/src` covered by the fresh_alloc lint.
+/// `tensor/arena.rs` is deliberately absent: it is the allocator.
+const HOT_FILES: &[&str] = &[
+    "model/tape.rs",
+    "model/text.rs",
+    "model/vision.rs",
+    "tensor/ops.rs",
+    "util/allreduce.rs",
+    "coordinator/parallel.rs",
+];
+
+const ALLOC_PATTERNS: &[&str] = &["vec![0.0", "Vec::with_capacity"];
+const ALLOW_MARKER: &str = "lint:allow(fresh_alloc)";
+
+fn main() {
+    // analyze/ -> rust/ -> repo root
+    let crate_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let rust_root = crate_dir.parent().expect("analyze sits inside rust/").to_path_buf();
+    let repo_root = rust_root.parent().expect("rust/ sits inside the repo").to_path_buf();
+
+    let mut files = Vec::new();
+    for dir in ["src", "benches", "tests"] {
+        collect_rs(&rust_root.join(dir), &mut files);
+    }
+    collect_rs(&repo_root.join("examples"), &mut files);
+    files.sort();
+
+    let mut findings = Vec::new();
+    lint_fresh_alloc(&rust_root, &mut findings);
+    lint_env_var(&rust_root, &files, &mut findings);
+    lint_knobs(&rust_root, &repo_root, &files, &mut findings);
+
+    if findings.is_empty() {
+        println!(
+            "ligo-analyze: {} files scanned, 3 lints (fresh_alloc on {} hot modules, \
+             env_var, knobs), 0 findings",
+            files.len(),
+            HOT_FILES.len()
+        );
+    } else {
+        for f in &findings {
+            eprintln!("error: {f}");
+        }
+        eprintln!("ligo-analyze: {} finding(s)", findings.len());
+        std::process::exit(1);
+    }
+}
+
+/// Recursively gather `.rs` files (skipping any `vendor` subtree).
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "vendor") {
+                continue;
+            }
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn read(path: &Path) -> String {
+    fs::read_to_string(path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// The non-test prefix of a file: everything before the first
+/// `#[cfg(test)]` line (the crate convention puts the test module last).
+fn non_test_region(text: &str) -> impl Iterator<Item = (usize, &str)> {
+    text.lines()
+        .enumerate()
+        .take_while(|(_, l)| l.trim_start() != "#[cfg(test)]")
+}
+
+fn is_comment(line: &str) -> bool {
+    let t = line.trim_start();
+    t.starts_with("//") || t.starts_with("*")
+}
+
+fn lint_fresh_alloc(rust_root: &Path, findings: &mut Vec<String>) {
+    for rel in HOT_FILES {
+        let path = rust_root.join("src").join(rel);
+        let text = read(&path);
+        let lines: Vec<&str> = text.lines().collect();
+        for (i, line) in non_test_region(&text) {
+            if is_comment(line) || !ALLOC_PATTERNS.iter().any(|p| line.contains(p)) {
+                continue;
+            }
+            let allowed = line.contains(ALLOW_MARKER)
+                || (i > 0 && lines[i - 1].contains(ALLOW_MARKER));
+            if !allowed {
+                findings.push(format!(
+                    "fresh_alloc: src/{rel}:{}: hot-path allocation `{}` — use \
+                     tensor/arena.rs (alloc_zeroed/alloc_scratch/alloc_copy) or mark \
+                     `// {ALLOW_MARKER} <reason>`",
+                    i + 1,
+                    line.trim()
+                ));
+            }
+        }
+    }
+}
+
+fn lint_env_var(rust_root: &Path, files: &[PathBuf], findings: &mut Vec<String>) {
+    let knobs = rust_root.join("src").join("util").join("knobs.rs");
+    for path in files {
+        if *path == knobs {
+            continue;
+        }
+        let text = read(path);
+        for (i, line) in text.lines().enumerate() {
+            if is_comment(line) {
+                continue;
+            }
+            if line.contains("env::var(") {
+                findings.push(format!(
+                    "env_var: {}:{}: raw environment read — route it through \
+                     util/knobs.rs so mis-parses warn and `ligo inspect knobs` sees it",
+                    path.display(),
+                    i + 1
+                ));
+            }
+        }
+    }
+}
+
+/// Pull every `LIGO_[A-Z0-9_]+` token out of a line.
+fn knob_tokens(line: &str, out: &mut Vec<String>) {
+    let bytes = line.as_bytes();
+    let mut i = 0;
+    while let Some(off) = line[i..].find("LIGO_") {
+        let start = i + off;
+        let mut end = start + "LIGO_".len();
+        let is_knob_char =
+            |b: u8| b.is_ascii_uppercase() || b.is_ascii_digit() || b == b'_';
+        while end < bytes.len() && is_knob_char(bytes[end]) {
+            end += 1;
+        }
+        if end > start + "LIGO_".len() {
+            out.push(line[start..end].trim_end_matches('_').to_string());
+        }
+        i = end;
+    }
+}
+
+fn lint_knobs(rust_root: &Path, repo_root: &Path, files: &[PathBuf], findings: &mut Vec<String>) {
+    let knobs_path = rust_root.join("src").join("util").join("knobs.rs");
+    let knobs_src = read(&knobs_path);
+
+    // registered names: the `name: "LIGO_…"` rows of REGISTRY
+    let mut registry = Vec::new();
+    for (_, line) in non_test_region(&knobs_src) {
+        let t = line.trim_start();
+        if let Some(rest) = t.strip_prefix("name: \"") {
+            if let Some(name) = rest.split('"').next() {
+                registry.push(name.to_string());
+            }
+        }
+    }
+    if registry.is_empty() {
+        findings.push("knobs: no REGISTRY rows parsed from util/knobs.rs".to_string());
+        return;
+    }
+
+    // every registered knob has an EXPERIMENTS.md row
+    let experiments = read(&repo_root.join("EXPERIMENTS.md"));
+    for name in &registry {
+        if !experiments.contains(name.as_str()) {
+            findings.push(format!(
+                "knobs: {name} is registered in util/knobs.rs but has no row in \
+                 EXPERIMENTS.md's environment-knob table"
+            ));
+        }
+    }
+
+    // every knob literal in source names a registered knob, and every
+    // registered knob is read somewhere outside its own registry row
+    let mut used = Vec::new();
+    for path in files {
+        let text = read(path);
+        let own_registry = *path == knobs_path;
+        for (_, line) in non_test_region(&text) {
+            let mut toks = Vec::new();
+            knob_tokens(line, &mut toks);
+            for tok in toks {
+                if tok.starts_with("LIGO_TEST") {
+                    continue; // accessor-contract fixtures, deliberately unregistered
+                }
+                if !registry.contains(&tok) {
+                    findings.push(format!(
+                        "knobs: {}: literal {tok} is not in the util/knobs.rs REGISTRY",
+                        path.display()
+                    ));
+                } else if !(own_registry && line.trim_start().starts_with("name:")) {
+                    used.push(tok);
+                }
+            }
+        }
+    }
+    for name in &registry {
+        if !used.contains(name) {
+            findings.push(format!(
+                "knobs: {name} is registered but never read anywhere in the crate"
+            ));
+        }
+    }
+}

@@ -25,7 +25,7 @@ fn main() {
     println!("== paper_tables: micro-scale end-to-end per table/figure ==");
     // scale 0.04 => ~24-step runs: exercises every code path cheaply.
     // LIGO_BENCH_IDS=fig2,table3 restricts the set (CI time budgets).
-    let filter = std::env::var("LIGO_BENCH_IDS").ok();
+    let filter = ligo::util::knobs::raw("LIGO_BENCH_IDS");
     let ids: Vec<&str> = match &filter {
         Some(s) => s.split(',').collect(),
         None => experiments::ALL.to_vec(),

@@ -27,7 +27,7 @@ fn main() {
         eprintln!("no executable backend (build with --features pjrt); skipping");
         return;
     }
-    let workers_only = std::env::var("LIGO_BENCH_WORKERS_ONLY").as_deref() == Ok("1");
+    let workers_only = ligo::util::knobs::flag_enabled("LIGO_BENCH_WORKERS_ONLY");
     if workers_only {
         workers_section(&reg, &rt);
         return;

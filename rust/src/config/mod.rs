@@ -8,9 +8,10 @@ pub mod training;
 pub use presets::{ModelConfig, Registry};
 pub use training::TrainConfig;
 
-/// Locate the artifacts directory: $LIGO_ARTIFACTS or ./artifacts.
+/// Locate the artifacts directory: $LIGO_ARTIFACTS (via the knob
+/// registry) or ./artifacts.
 pub fn artifacts_dir() -> std::path::PathBuf {
-    std::env::var("LIGO_ARTIFACTS")
+    crate::util::knobs::raw("LIGO_ARTIFACTS")
         .map(std::path::PathBuf::from)
-        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
 }

@@ -45,19 +45,16 @@ thread_local! {
 }
 
 /// The `LIGO_WORKERS` resolution: `None` when unset (the serial trainer
-/// path), `Some(n >= 1)` when set. Env is read once per process; the
+/// path), `Some(n >= 1)` when set. Env is read once per process through
+/// the [`crate::util::knobs`] registry — a non-numeric value warns once
+/// (naming the knob and the rejected value) and keeps the serial path; the
 /// thread-local [`set_workers_override`] wins when present.
 pub fn requested_workers() -> Option<usize> {
     if let Some(n) = WORKERS_OVERRIDE.with(|c| c.get()) {
         return Some(n.max(1));
     }
     static WORKERS: OnceLock<Option<usize>> = OnceLock::new();
-    *WORKERS.get_or_init(|| {
-        std::env::var("LIGO_WORKERS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .map(|n| n.max(1))
-    })
+    *WORKERS.get_or_init(|| crate::util::knobs::usize_env("LIGO_WORKERS").map(|n| n.max(1)))
 }
 
 /// Pin [`requested_workers`] to `Some(n)` on this thread; `None` restores
@@ -128,6 +125,7 @@ pub fn run_microbatches(
     });
 
     let mut slots: Vec<Option<(Store, f32)>> = (0..accum).map(|_| None).collect();
+    // lint:allow(fresh_alloc) tiny per-step bookkeeping vec, not tensor data
     let mut stats = Vec::with_capacity(active);
     let mut first_err = None;
     for res in per_worker {

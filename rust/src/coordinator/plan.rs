@@ -11,13 +11,16 @@
 //! 2024) as data, not bespoke driver code.
 //!
 //! The builder rejects malformed schedules up front (non-monotone steps,
-//! shrinking or batch-incompatible targets, unknown operators) so a plan
-//! that builds is a plan the trainer can execute.
+//! shrinking or batch-incompatible targets, unknown operators, operator
+//! regimes the transition violates, and any stage target whose graph the
+//! symbolic shape verifier cannot replay — see
+//! [`crate::growth::verify`]) so a plan that builds is a plan the trainer
+//! can execute.
 
 use crate::bail;
 use crate::config::ModelConfig;
 use crate::error::{Context, Result};
-use crate::growth::{self, LigoOptions};
+use crate::growth::{verify, LigoOptions};
 
 /// One growth stage: at `at_step`, grow into `target` via `operator`.
 #[derive(Debug, Clone)]
@@ -25,7 +28,7 @@ pub struct GrowthStage {
     /// Optimizer step (absolute, within the run) at which to grow.
     pub at_step: usize,
     pub target: ModelConfig,
-    /// Registry name resolved through [`growth::by_name`].
+    /// Registry name resolved through [`crate::growth::by_name`].
     pub operator: String,
     /// M-learning budget for learned operators (ignored by the rest).
     pub opts: LigoOptions,
@@ -92,7 +95,11 @@ impl GrowthPlanBuilder {
     /// Validate and freeze the schedule. Rejects: steps that are zero or
     /// not strictly increasing, targets that shrink (or change family /
     /// batch geometry, which would break the run's batch source mid-way),
-    /// and operators the registry does not know.
+    /// operators the registry does not know, operator regimes the
+    /// transition violates (e.g. LEMON's integer-factor widths), and any
+    /// stage target the symbolic shape verifier cannot replay — every stage
+    /// goes through [`verify::verify_pair`], so the whole schedule is
+    /// statically executable before a single kernel runs.
     pub fn build(self) -> Result<GrowthPlan> {
         let mut prev = &self.initial;
         let mut prev_step = 0usize;
@@ -110,47 +117,14 @@ impl GrowthPlanBuilder {
                     stage.at_step
                 );
             }
-            check_growth_step(prev, &stage.target)
+            verify::verify_pair(&stage.operator, prev, &stage.target)
                 .with_context(|| format!("growth plan stage {i} ({} -> {})",
                     prev.name, stage.target.name))?;
-            // resolve now so a typo fails at build time with the registry's
-            // own diagnostic (listing the known operators)
-            growth::by_name(&stage.operator)
-                .with_context(|| format!("growth plan stage {i}"))?;
             prev = &stage.target;
             prev_step = stage.at_step;
         }
         Ok(GrowthPlan { initial: self.initial, stages: self.stages })
     }
-}
-
-/// One stage's config transition must genuinely grow and stay compatible
-/// with the run's batch source.
-fn check_growth_step(from: &ModelConfig, to: &ModelConfig) -> Result<()> {
-    if from.family != to.family {
-        bail!("family must not change ({} -> {})", from.family, to.family);
-    }
-    if to.layers < from.layers || to.dim < from.dim || to.ffn() < from.ffn() {
-        bail!(
-            "target must not shrink (layers {} -> {}, dim {} -> {}, ffn {} -> {})",
-            from.layers, to.layers, from.dim, to.dim, from.ffn(), to.ffn()
-        );
-    }
-    if to.layers == from.layers && to.dim == from.dim && to.ffn() == from.ffn() {
-        bail!("target is not larger in any dimension");
-    }
-    let batch_geom = |c: &ModelConfig| {
-        (c.vocab, c.seq, c.batch, c.img, c.patch, c.channels, c.n_classes)
-    };
-    if batch_geom(from) != batch_geom(to) {
-        bail!(
-            "batch geometry must match across stages (one batch source feeds \
-             the whole run): {:?} -> {:?}",
-            batch_geom(from),
-            batch_geom(to)
-        );
-    }
-    Ok(())
 }
 
 #[cfg(test)]

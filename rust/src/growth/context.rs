@@ -222,6 +222,19 @@ impl<'a, 'b> GrowthContext<'a, 'b> {
         self.seed = Some(seed);
         self
     }
+
+    /// Statically verify this context's transition under `operator` before
+    /// running it: schedule compatibility, operator regime, and a symbolic
+    /// shape replay of both endpoint configs — no kernels, no data (see
+    /// [`crate::growth::verify::verify_pair`]). Callers that are about to
+    /// `grow(ctx)` use this to fail fast with a plan-time diagnostic
+    /// instead of a kernel panic.
+    pub fn verify(
+        &self,
+        operator: &str,
+    ) -> crate::error::Result<crate::growth::verify::PairVerification> {
+        crate::growth::verify::verify_pair(operator, self.small_cfg, self.large_cfg)
+    }
 }
 
 #[cfg(test)]
@@ -261,6 +274,17 @@ mod tests {
         assert_eq!(Objective::Surrogate.to_string(), "surrogate");
         assert_eq!(Objective::ParamOnly.to_string(), "param-only");
         assert_eq!(Capability::NeedsBatches.to_string(), "batches");
+    }
+
+    #[test]
+    fn context_verify_runs_the_static_checks() {
+        let cs = mk_cfg(2, 8, 2);
+        let cl = mk_cfg(4, 12, 3);
+        let small = small_store(&cs);
+        let ctx = GrowthContext::new(&small, &cs, &cl);
+        let pv = ctx.verify("stackbert").unwrap();
+        assert!(pv.large.params > pv.small.params);
+        assert!(ctx.verify("nope").unwrap_err().to_string().contains("unknown"));
     }
 
     #[test]

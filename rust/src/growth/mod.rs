@@ -46,6 +46,7 @@ pub mod net2net;
 pub mod stacking;
 #[doc(hidden)]
 pub mod testutil;
+pub mod verify;
 pub mod width;
 
 use crate::bail;

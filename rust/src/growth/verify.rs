@@ -1,0 +1,195 @@
+//! Static growth verification: prove a growth transition is executable
+//! before touching a single kernel.
+//!
+//! [`verify_pair`] stacks three layers of plan-time checking for one
+//! `(operator, small config, large config)` transition:
+//!
+//! 1. **Schedule compatibility** — [`check_growth_step`]: the target must
+//!    genuinely grow (never shrink, never stand still), stay in the same
+//!    family, and keep the batch geometry fixed so one batch source can
+//!    feed the whole run.
+//! 2. **Operator regime** — the operator name must resolve in the registry
+//!    ([`super::by_name`]'s diagnostic lists the known names), and LEMON's
+//!    exactness preconditions (integer width factors, fixed per-head dim,
+//!    matching vocab/seq or image geometry — see
+//!    [`Lemon::check_pair`](super::lemon::Lemon::check_pair)) are surfaced
+//!    as static diagnostics instead of a mid-run failure.
+//! 3. **Symbolic execution** — both endpoint configs are replayed through
+//!    the abstract interpreter ([`shape::summarize`]): every tape node's
+//!    shapes are checked by the same rules the real tape enforces, and the
+//!    resulting [`GraphSummary`] pair reports node/param counts, FLOPs and
+//!    the peak-arena estimate for the small and grown model.
+//!
+//! [`GrowthPlanBuilder::build`](crate::coordinator::plan::GrowthPlanBuilder)
+//! runs `verify_pair` on every stage, so *a plan that builds is a plan
+//! whose every stage target has already survived a full symbolic
+//! forward/backward* — and `ligo analyze` (plus [`verify_plan`]) reuses the
+//! same entry point to print what the trainer would execute.
+
+use crate::config::ModelConfig;
+use crate::coordinator::plan::GrowthPlan;
+use crate::error::{Context, Result};
+use crate::model::shape::{self, GraphSummary};
+
+use super::lemon::Lemon;
+
+/// One stage's config transition must genuinely grow and stay compatible
+/// with the run's batch source.
+pub fn check_growth_step(from: &ModelConfig, to: &ModelConfig) -> Result<()> {
+    if from.family != to.family {
+        crate::bail!("family must not change ({} -> {})", from.family, to.family);
+    }
+    if to.layers < from.layers || to.dim < from.dim || to.ffn() < from.ffn() {
+        crate::bail!(
+            "target must not shrink (layers {} -> {}, dim {} -> {}, ffn {} -> {})",
+            from.layers, to.layers, from.dim, to.dim, from.ffn(), to.ffn()
+        );
+    }
+    if to.layers == from.layers && to.dim == from.dim && to.ffn() == from.ffn() {
+        crate::bail!("target is not larger in any dimension");
+    }
+    let batch_geom = |c: &ModelConfig| {
+        (c.vocab, c.seq, c.batch, c.img, c.patch, c.channels, c.n_classes)
+    };
+    if batch_geom(from) != batch_geom(to) {
+        crate::bail!(
+            "batch geometry must match across stages (one batch source feeds \
+             the whole run): {:?} -> {:?}",
+            batch_geom(from),
+            batch_geom(to)
+        );
+    }
+    Ok(())
+}
+
+/// The two [`GraphSummary`]s a verified transition produces: what the
+/// trainer executes before the growth step and after it.
+#[derive(Debug, Clone)]
+pub struct PairVerification {
+    pub small: GraphSummary,
+    pub large: GraphSummary,
+}
+
+impl PairVerification {
+    /// Peak-arena growth factor of the transition (large / small).
+    pub fn peak_ratio(&self) -> f64 {
+        self.large.peak_bytes as f64 / (self.small.peak_bytes.max(1)) as f64
+    }
+}
+
+/// Statically verify one growth transition (see the module docs for the
+/// three layers). No kernels run and no parameter data is touched — only
+/// shapes flow. Errors carry the violated requirement and, for symbolic
+/// failures, the offending node.
+pub fn verify_pair(
+    operator: &str,
+    from: &ModelConfig,
+    to: &ModelConfig,
+) -> Result<PairVerification> {
+    check_growth_step(from, to)
+        .with_context(|| format!("growth step {} -> {}", from.name, to.name))?;
+    // resolve now so a typo fails statically with the registry's own
+    // diagnostic (listing the known operators)
+    let op = super::by_name(operator)?;
+    if op.name() == "lemon" {
+        Lemon::check_pair(from, to)
+            .with_context(|| format!("operator regime for {} -> {}", from.name, to.name))?;
+    }
+    let small = shape::summarize(from)?;
+    let large = shape::summarize(to)?;
+    Ok(PairVerification { small, large })
+}
+
+/// Statically verify every stage of a built plan and return the per-stage
+/// summaries, in stage order. A [`GrowthPlan`] that came out of the builder
+/// has already passed this (the builder calls [`verify_pair`] per stage);
+/// `ligo analyze` re-runs it to print the summaries.
+pub fn verify_plan(plan: &GrowthPlan) -> Result<Vec<PairVerification>> {
+    let mut prev = plan.initial();
+    let mut out = Vec::with_capacity(plan.stages().len());
+    for (i, stage) in plan.stages().iter().enumerate() {
+        out.push(
+            verify_pair(&stage.operator, prev, &stage.target)
+                .with_context(|| format!("growth plan stage {i}"))?,
+        );
+        prev = &stage.target;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::{mk_cfg, mk_vision_cfg};
+
+    #[test]
+    fn verified_pair_reports_both_summaries() {
+        let a = mk_cfg(2, 8, 2);
+        let b = mk_cfg(4, 16, 4);
+        let pv = verify_pair("stackbert", &a, &b).unwrap();
+        assert_eq!(pv.small.name, a.name);
+        assert_eq!(pv.large.name, b.name);
+        assert!(pv.large.params > pv.small.params);
+        assert!(pv.large.fwd_flops > pv.small.fwd_flops);
+        assert!(pv.peak_ratio() > 1.0, "{}", pv.peak_ratio());
+    }
+
+    #[test]
+    fn every_zoo_operator_verifies_a_growing_pair() {
+        let a = mk_cfg(2, 8, 2);
+        let b = mk_cfg(4, 16, 2);
+        for name in crate::growth::ALL {
+            verify_pair(name, &a, &b).unwrap();
+        }
+        // integer width factor + fixed per-head dim: inside lemon's regime
+        verify_pair("lemon", &a, &mk_cfg(4, 16, 4)).unwrap();
+    }
+
+    #[test]
+    fn lemon_regime_violations_are_static_diagnostics() {
+        let a = mk_cfg(2, 8, 2);
+        // 8 -> 12 is not an integer width factor
+        let err = verify_pair("lemon", &a, &mk_cfg(2, 12, 3)).unwrap_err().to_string();
+        assert!(err.contains("integer factor"), "{err}");
+        assert!(err.contains("operator regime"), "{err}");
+        // the same pair passes under the shape-unconstrained zoo
+        verify_pair("net2net", &a, &mk_cfg(2, 12, 3)).unwrap();
+    }
+
+    #[test]
+    fn schedule_violations_name_the_requirement() {
+        let a = mk_cfg(4, 12, 3);
+        let err = verify_pair("stackbert", &a, &mk_cfg(2, 8, 2)).unwrap_err().to_string();
+        assert!(err.contains("shrink"), "{err}");
+        let err = verify_pair("stackbert", &a, &a).unwrap_err().to_string();
+        assert!(err.contains("not larger"), "{err}");
+        let mut geo = mk_cfg(6, 16, 4);
+        geo.vocab = 128;
+        let err = verify_pair("stackbert", &a, &geo).unwrap_err().to_string();
+        assert!(err.contains("batch geometry"), "{err}");
+        let err = verify_pair("nope", &a, &mk_cfg(6, 16, 4)).unwrap_err().to_string();
+        assert!(err.contains("unknown growth operator"), "{err}");
+    }
+
+    #[test]
+    fn symbolic_failures_surface_the_offending_node() {
+        let a = mk_cfg(2, 8, 2);
+        let mut b = mk_cfg(4, 16, 4);
+        b.heads = 3; // 16 % 3 != 0: the attention node cannot split heads
+        let err = verify_pair("stackbert", &a, &b).unwrap_err().to_string();
+        assert!(err.contains("divisible"), "{err}");
+        assert!(err.contains("attention"), "{err}");
+    }
+
+    #[test]
+    fn vision_pairs_verify_and_respect_lemon_geometry() {
+        let s = mk_vision_cfg("cait", 2, 8, 2);
+        let l = mk_vision_cfg("cait", 4, 16, 4);
+        let pv = verify_pair("lemon", &s, &l).unwrap();
+        assert!(pv.large.node_count() > pv.small.node_count());
+        let mut bad = l.clone();
+        bad.cls_layers = 2; // class-attention depth must match for exactness
+        let err = verify_pair("lemon", &s, &bad).unwrap_err().to_string();
+        assert!(err.contains("class-attention"), "{err}");
+    }
+}

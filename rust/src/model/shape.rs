@@ -1,0 +1,927 @@
+//! Static shape verification: the symbolic twin of the autodiff [`Tape`].
+//!
+//! Two layers live here:
+//!
+//! * [`rules`] — pure, `Result`-returning shape rules, one per tape op.
+//!   They are the **single source of truth** for operand validation: the
+//!   real [`Tape`](super::tape::Tape) constructors call them before any
+//!   kernel runs (turning what used to be kernel `assert_eq!` panics into
+//!   typed [`crate::error::Error`]s with op/node context), and the symbolic
+//!   interpreter below replays them with no data at all.
+//! * [`ShapeTape`] — an abstract interpreter over shape-only tensors. It
+//!   mirrors the real tape's lowering decisions exactly (fused vs. unfused
+//!   linear chains, the streaming vs. materialized LM head), so a symbolic
+//!   replay appends the **same node sequence** the real forward would —
+//!   asserted node-for-node against `Tape::len()` in this module's tests.
+//!
+//! [`summarize`] / [`summarize_with`] replay the full family graphs
+//! (bert/gpt/probe text, vit/cait vision — the same call sequences as
+//! `text.rs` / `vision.rs`) from a [`ModelConfig`] alone and produce a
+//! [`GraphSummary`]: per-node shapes/dtypes/FLOPs plus totals (parameter
+//! count, forward/backward FLOPs, a peak-arena-bytes estimate). No tensor
+//! data is allocated and no kernel executes — verifying a growth plan's
+//! every stage is microseconds, not a training step (see
+//! [`crate::growth::verify`] and `ligo analyze`).
+//!
+//! The peak-bytes estimate counts what the arena actually retains: every
+//! owned activation plus saved backward state (attention probabilities,
+//! fused-GELU pre-activations, layernorm / LM-head statistics) — the tape
+//! keeps all of it alive until drop — plus one transient gradient the size
+//! of the largest node (backward recycles the rest as it walks).
+
+use std::collections::BTreeMap;
+
+use crate::bail;
+use crate::config::ModelConfig;
+use crate::error::{Context, Result};
+use crate::tensor::numel;
+use crate::tensor::ops::{self, Act, AttnShape};
+
+/// Pure shape rules shared by the real [`Tape`](super::tape::Tape) and the
+/// symbolic [`ShapeTape`]. Every rule validates its operands and returns
+/// the output shape; errors state the violated constraint (callers add
+/// op/node context).
+pub mod rules {
+    use super::*;
+
+    fn two_d(s: &[usize], what: &str) -> Result<(usize, usize)> {
+        if s.len() != 2 {
+            bail!("{what} must be 2-D, got {s:?}");
+        }
+        Ok((s[0], s[1]))
+    }
+
+    /// `y = x @ w^T` for x (m, k) and w (n, k): the stored-projection
+    /// matmul every linear lowers to.
+    pub fn linear(x: &[usize], w: &[usize]) -> Result<Vec<usize>> {
+        let (m, k) = two_d(x, "x")?;
+        let (n, k2) = two_d(w, "w")?;
+        if k != k2 {
+            bail!("inner dims must match: x {x:?} @ w^T {w:?} ({k} vs {k2})");
+        }
+        Ok(vec![m, n])
+    }
+
+    /// Row-broadcast bias: b must have exactly one element per column.
+    pub fn add_row(x: &[usize], b: &[usize]) -> Result<Vec<usize>> {
+        let (_, d) = two_d(x, "x")?;
+        if numel(b) != d {
+            bail!("bias dim: {} elements do not broadcast over rows of width {d}", numel(b));
+        }
+        Ok(x.to_vec())
+    }
+
+    /// Elementwise residual add: shapes must be identical.
+    pub fn add(a: &[usize], b: &[usize]) -> Result<Vec<usize>> {
+        if a != b {
+            bail!("operand shapes must match: {a:?} vs {b:?}");
+        }
+        Ok(a.to_vec())
+    }
+
+    /// `x + tile(t, reps)`: x must be exactly `reps` stacked copies of
+    /// t's geometry.
+    pub fn add_tiled(x: &[usize], t: &[usize], reps: usize) -> Result<Vec<usize>> {
+        let (s, d) = two_d(t, "t")?;
+        if x != [reps * s, d] {
+            bail!("x {x:?} is not {reps} row blocks of t {t:?} (want {:?})", [reps * s, d]);
+        }
+        Ok(x.to_vec())
+    }
+
+    /// Row-broadcast scale (LayerScale): one element per column.
+    pub fn mul_row(x: &[usize], v: &[usize]) -> Result<Vec<usize>> {
+        let (_, d) = two_d(x, "x")?;
+        if numel(v) != d {
+            bail!("vector dim: {} elements do not broadcast over rows of width {d}", numel(v));
+        }
+        Ok(x.to_vec())
+    }
+
+    /// Row-wise layernorm: gain and bias carry one element per column.
+    pub fn layernorm(x: &[usize], g: &[usize], b: &[usize]) -> Result<Vec<usize>> {
+        let (_, d) = two_d(x, "x")?;
+        if numel(g) != d {
+            bail!("gain dim: {} elements for rows of width {d}", numel(g));
+        }
+        if numel(b) != d {
+            bail!("bias dim: {} elements for rows of width {d}", numel(b));
+        }
+        Ok(x.to_vec())
+    }
+
+    /// Multi-head attention operand shapes (the `ops::attention_fwd`
+    /// contract): q (batch*s_q, dim), k and v (batch*s_k, dim), dim
+    /// divisible by the head count, causal masks square.
+    pub fn attention(
+        q: &[usize],
+        k: &[usize],
+        v: &[usize],
+        sh: &AttnShape,
+    ) -> Result<Vec<usize>> {
+        let (_, dim) = two_d(q, "q")?;
+        if sh.heads == 0 || dim % sh.heads != 0 {
+            bail!("dim {dim} not divisible by {} heads", sh.heads);
+        }
+        if q != [sh.batch * sh.s_q, dim] {
+            bail!("q shape {q:?} != (batch*s_q, dim) = {:?}", [sh.batch * sh.s_q, dim]);
+        }
+        if k != [sh.batch * sh.s_k, dim] {
+            bail!("k shape {k:?} != (batch*s_k, dim) = {:?}", [sh.batch * sh.s_k, dim]);
+        }
+        if v != k {
+            bail!("v shape {v:?} != k shape {k:?}");
+        }
+        if sh.causal && sh.s_q != sh.s_k {
+            bail!("causal attention needs square scores (s_q {} vs s_k {})", sh.s_q, sh.s_k);
+        }
+        Ok(q.to_vec())
+    }
+
+    /// Embedding gather: emb must be a 2-D table; `n_ids` rows come out.
+    /// (Per-id range checks need the id values and stay in the real tape.)
+    pub fn gather(emb: &[usize], n_ids: usize) -> Result<Vec<usize>> {
+        let (_, d) = two_d(emb, "emb")?;
+        Ok(vec![n_ids, d])
+    }
+
+    /// A d-vector broadcast to (reps, d).
+    pub fn broadcast_row(v: &[usize], reps: usize) -> Result<Vec<usize>> {
+        Ok(vec![reps, numel(v)])
+    }
+
+    /// Per-batch-element sequence concat: a (batch*sa, d) ++ b (batch*sb, d).
+    pub fn concat_seq(
+        a: &[usize],
+        b: &[usize],
+        batch: usize,
+        sa: usize,
+        sb: usize,
+    ) -> Result<Vec<usize>> {
+        let (_, d) = two_d(a, "a")?;
+        if a != [batch * sa, d] {
+            bail!("a shape {a:?} != (batch*sa, d) = {:?}", [batch * sa, d]);
+        }
+        if b != [batch * sb, d] {
+            bail!("b shape {b:?} != (batch*sb, d) = {:?}", [batch * sb, d]);
+        }
+        Ok(vec![batch * (sa + sb), d])
+    }
+
+    /// First sequence row of each batch element.
+    pub fn seq_first(x: &[usize], batch: usize, s: usize) -> Result<Vec<usize>> {
+        let (_, d) = two_d(x, "x")?;
+        if x != [batch * s, d] {
+            bail!("x shape {x:?} != (batch*s, d) = {:?}", [batch * s, d]);
+        }
+        Ok(vec![batch, d])
+    }
+
+    /// Mean over the s sequence rows of each batch element.
+    pub fn seq_mean(x: &[usize], batch: usize, s: usize) -> Result<Vec<usize>> {
+        if s == 0 {
+            bail!("sequence length must be > 0");
+        }
+        seq_first(x, batch, s)
+    }
+
+    /// Masked cross-entropy over logit rows: one label per row; scalar out.
+    pub fn masked_xent(logits: &[usize], n_labels: usize) -> Result<Vec<usize>> {
+        let (n, _) = two_d(logits, "logits")?;
+        if n_labels != n {
+            bail!("one label per logit row: {n_labels} labels for {n} rows");
+        }
+        Ok(vec![1])
+    }
+
+    /// Streaming fused LM head `x @ w^T (+ b)` + masked xent: scalar out.
+    pub fn lm_head_xent(
+        x: &[usize],
+        w: &[usize],
+        b: Option<&[usize]>,
+        n_labels: usize,
+    ) -> Result<Vec<usize>> {
+        let logits = linear(x, w)?;
+        if let Some(bs) = b {
+            add_row(&logits, bs)?;
+        }
+        masked_xent(&logits, n_labels)
+    }
+
+    /// (B, H, W, C) images -> (B*T, patch*patch*C) rows; the image side
+    /// must tile exactly.
+    pub fn patchify(images: &[usize], patch: usize) -> Result<Vec<usize>> {
+        if images.len() != 4 {
+            bail!("images must be (batch, H, W, C), got {images:?}");
+        }
+        let (b, h, w, c) = (images[0], images[1], images[2], images[3]);
+        if patch == 0 || h % patch != 0 || w % patch != 0 {
+            bail!("image {h}x{w} does not tile into {patch}x{patch} patches");
+        }
+        Ok(vec![b * (h / patch) * (w / patch), patch * patch * c])
+    }
+}
+
+/// One symbolic node: what the real tape would append, minus the data.
+#[derive(Debug, Clone)]
+pub struct NodeSummary {
+    /// Op label (e.g. `linear_fused`, `attention`, `param`).
+    pub op: &'static str,
+    pub shape: Vec<usize>,
+    /// Activation dtype — the native engine is f32 throughout.
+    pub dtype: &'static str,
+    /// Forward FLOPs of this node (multiply-accumulate = 2, the
+    /// [`crate::coordinator::flops`] convention).
+    pub flops: f64,
+    /// Bytes the tape retains for this node until drop: the owned value
+    /// plus saved backward state (probs/pre-activation/stats). Borrowed
+    /// parameter leaves retain nothing.
+    pub bytes: usize,
+}
+
+/// Totals of one symbolic forward/backward replay.
+#[derive(Debug, Clone)]
+pub struct GraphSummary {
+    /// Config name the graph was built for.
+    pub name: String,
+    pub nodes: Vec<NodeSummary>,
+    /// Parameter scalars (the `param_shapes` inventory).
+    pub params: usize,
+    pub fwd_flops: f64,
+    /// Backward ~= 2x forward (the paper's accounting).
+    pub bwd_flops: f64,
+    /// Peak-arena estimate: all retained node bytes plus one transient
+    /// gradient of the largest node.
+    pub peak_bytes: usize,
+}
+
+impl GraphSummary {
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// One printable report row.
+    pub fn brief(&self) -> String {
+        format!(
+            "{:<18} {:>5} nodes {:>10} params {:>9.3} GFLOP/step {:>8.2} MiB peak",
+            self.name,
+            self.nodes.len(),
+            self.params,
+            (self.fwd_flops + self.bwd_flops) / 1e9,
+            self.peak_bytes as f64 / (1024.0 * 1024.0)
+        )
+    }
+}
+
+/// Handle to a symbolic node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SVar(usize);
+
+/// The shape-only abstract interpreter. Mirrors [`super::tape::Tape`]'s
+/// lowering (including the fused/unfused branches) node for node; the
+/// `fused` / `fused_xent` flags are explicit so a summary is deterministic
+/// rather than depending on ambient env knobs.
+pub struct ShapeTape {
+    fused: bool,
+    fused_xent: bool,
+    nodes: Vec<NodeSummary>,
+}
+
+impl ShapeTape {
+    pub fn new(fused: bool, fused_xent: bool) -> ShapeTape {
+        ShapeTape { fused, fused_xent, nodes: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn shape(&self, v: SVar) -> &[usize] {
+        &self.nodes[v.0].shape
+    }
+
+    /// Node-context string matching the real tape's error wrapping.
+    fn ctx(&self, op: &str) -> String {
+        format!("node {} ({op})", self.nodes.len())
+    }
+
+    fn push(&mut self, op: &'static str, shape: Vec<usize>, flops: f64, saved: usize) -> SVar {
+        let bytes = 4 * numel(&shape) + saved;
+        self.nodes.push(NodeSummary { op, shape, dtype: "f32", flops, bytes });
+        SVar(self.nodes.len() - 1)
+    }
+
+    /// An owned leaf (batch-derived data: the patchified image rows).
+    pub fn leaf(&mut self, shape: Vec<usize>) -> SVar {
+        self.push("leaf", shape, 0.0, 0)
+    }
+
+    /// A borrowed parameter leaf: retains no arena bytes.
+    pub fn param(&mut self, shape: Vec<usize>) -> SVar {
+        self.nodes.push(NodeSummary { op: "param", shape, dtype: "f32", flops: 0.0, bytes: 0 });
+        SVar(self.nodes.len() - 1)
+    }
+
+    /// Mirror of the real tape's shared linear lowering: one fused node,
+    /// or the matmul_nt / add_row / gelu chain.
+    fn linear_node(&mut self, x: SVar, w: SVar, b: Option<SVar>, act: Act) -> Result<SVar> {
+        if self.fused {
+            let out = rules::linear(self.shape(x), self.shape(w))
+                .with_context(|| self.ctx("linear"))?;
+            if let Some(bv) = b {
+                rules::add_row(&out, self.shape(bv)).with_context(|| self.ctx("linear"))?;
+            }
+            let (m, n) = (out[0], out[1]);
+            let k = self.shape(x)[1];
+            let mut flops = 2.0 * (m * k * n) as f64;
+            let mut saved = 0usize;
+            if b.is_some() {
+                flops += (m * n) as f64;
+            }
+            if act == Act::Gelu {
+                flops += 10.0 * (m * n) as f64;
+                saved = 4 * m * n; // the saved pre-activation
+            }
+            return Ok(self.push("linear_fused", out, flops, saved));
+        }
+        let out =
+            rules::linear(self.shape(x), self.shape(w)).with_context(|| self.ctx("linear"))?;
+        let (m, n) = (out[0], out[1]);
+        let k = self.shape(x)[1];
+        let mut v = self.push("matmul_nt", out, 2.0 * (m * k * n) as f64, 0);
+        if let Some(bv) = b {
+            v = self.add_row(v, bv)?;
+        }
+        if act == Act::Gelu {
+            v = self.gelu(v);
+        }
+        Ok(v)
+    }
+
+    pub fn linear(&mut self, x: SVar, w: SVar) -> Result<SVar> {
+        self.linear_node(x, w, None, Act::None)
+    }
+
+    pub fn linear_bias(&mut self, x: SVar, w: SVar, b: SVar) -> Result<SVar> {
+        self.linear_node(x, w, Some(b), Act::None)
+    }
+
+    pub fn linear_bias_gelu(&mut self, x: SVar, w: SVar, b: SVar) -> Result<SVar> {
+        self.linear_node(x, w, Some(b), Act::Gelu)
+    }
+
+    pub fn add_row(&mut self, x: SVar, b: SVar) -> Result<SVar> {
+        let out = rules::add_row(self.shape(x), self.shape(b))
+            .with_context(|| self.ctx("add_row"))?;
+        let flops = numel(&out) as f64;
+        Ok(self.push("add_row", out, flops, 0))
+    }
+
+    pub fn add(&mut self, a: SVar, b: SVar) -> Result<SVar> {
+        let out = rules::add(self.shape(a), self.shape(b)).with_context(|| self.ctx("add"))?;
+        let flops = numel(&out) as f64;
+        Ok(self.push("add", out, flops, 0))
+    }
+
+    pub fn add_tiled(&mut self, x: SVar, t: SVar, reps: usize) -> Result<SVar> {
+        let out = rules::add_tiled(self.shape(x), self.shape(t), reps)
+            .with_context(|| self.ctx("add_tiled"))?;
+        let flops = numel(&out) as f64;
+        Ok(self.push("add_tiled", out, flops, 0))
+    }
+
+    pub fn mul_row(&mut self, x: SVar, v: SVar) -> Result<SVar> {
+        let out = rules::mul_row(self.shape(x), self.shape(v))
+            .with_context(|| self.ctx("mul_row"))?;
+        let flops = numel(&out) as f64;
+        Ok(self.push("mul_row", out, flops, 0))
+    }
+
+    pub fn gelu(&mut self, x: SVar) -> SVar {
+        let out = self.shape(x).to_vec();
+        let flops = 10.0 * numel(&out) as f64;
+        self.push("gelu", out, flops, 0)
+    }
+
+    pub fn layernorm(&mut self, x: SVar, g: SVar, b: SVar) -> Result<SVar> {
+        let out = rules::layernorm(self.shape(x), self.shape(g), self.shape(b))
+            .with_context(|| self.ctx("layernorm"))?;
+        let rows = out[0];
+        let flops = 8.0 * numel(&out) as f64;
+        Ok(self.push("layernorm", out, flops, 4 * rows * 2)) // saved (mean, rstd)
+    }
+
+    pub fn attention(&mut self, q: SVar, k: SVar, v: SVar, sh: AttnShape) -> Result<SVar> {
+        let out = rules::attention(self.shape(q), self.shape(k), self.shape(v), &sh)
+            .with_context(|| self.ctx("attention"))?;
+        let dh = out[1] / sh.heads;
+        let pairs = (sh.batch * sh.heads * sh.s_q * sh.s_k) as f64;
+        let flops = 4.0 * pairs * dh as f64 + 5.0 * pairs;
+        let probs = 4 * sh.batch * sh.heads * sh.s_q * sh.s_k; // saved probabilities
+        Ok(self.push("attention", out, flops, probs))
+    }
+
+    pub fn gather(&mut self, emb: SVar, n_ids: usize) -> Result<SVar> {
+        let out =
+            rules::gather(self.shape(emb), n_ids).with_context(|| self.ctx("gather"))?;
+        Ok(self.push("gather", out, 0.0, 0))
+    }
+
+    pub fn broadcast_row(&mut self, v: SVar, reps: usize) -> Result<SVar> {
+        let out = rules::broadcast_row(self.shape(v), reps)
+            .with_context(|| self.ctx("broadcast_row"))?;
+        Ok(self.push("broadcast_row", out, 0.0, 0))
+    }
+
+    pub fn concat_seq(
+        &mut self,
+        a: SVar,
+        b: SVar,
+        batch: usize,
+        sa: usize,
+        sb: usize,
+    ) -> Result<SVar> {
+        let out = rules::concat_seq(self.shape(a), self.shape(b), batch, sa, sb)
+            .with_context(|| self.ctx("concat_seq"))?;
+        Ok(self.push("concat_seq", out, 0.0, 0))
+    }
+
+    pub fn seq_first(&mut self, x: SVar, batch: usize, s: usize) -> Result<SVar> {
+        let out = rules::seq_first(self.shape(x), batch, s)
+            .with_context(|| self.ctx("seq_first"))?;
+        Ok(self.push("seq_first", out, 0.0, 0))
+    }
+
+    pub fn seq_mean(&mut self, x: SVar, batch: usize, s: usize) -> Result<SVar> {
+        let out = rules::seq_mean(self.shape(x), batch, s)
+            .with_context(|| self.ctx("seq_mean"))?;
+        let flops = (batch * s * self.shape(x)[1]) as f64;
+        Ok(self.push("seq_mean", out, flops, 0))
+    }
+
+    pub fn masked_xent(&mut self, logits: SVar, n_labels: usize) -> Result<SVar> {
+        let shape = self.shape(logits).to_vec();
+        let out = rules::masked_xent(&shape, n_labels)
+            .with_context(|| self.ctx("masked_xent"))?;
+        let flops = 5.0 * numel(&shape) as f64;
+        Ok(self.push("masked_xent", out, flops, 0))
+    }
+
+    /// Mirror of the real tape's LM-head lowering: one streaming node
+    /// (logits never materialized), or linear_bias + masked_xent.
+    pub fn lm_head_xent(
+        &mut self,
+        x: SVar,
+        w: SVar,
+        b: Option<SVar>,
+        n_labels: usize,
+    ) -> Result<SVar> {
+        if !self.fused_xent {
+            let logits = match b {
+                Some(bv) => self.linear_bias(x, w, bv)?,
+                None => self.linear(x, w)?,
+            };
+            return self.masked_xent(logits, n_labels);
+        }
+        let bs = b.map(|bv| self.shape(bv).to_vec());
+        let out = rules::lm_head_xent(self.shape(x), self.shape(w), bs.as_deref(), n_labels)
+            .with_context(|| self.ctx("lm_head_xent"))?;
+        let (rows, d) = (self.shape(x)[0], self.shape(x)[1]);
+        let v = self.shape(w)[0];
+        let flops = 2.0 * (rows * d * v) as f64 + 5.0 * (rows * v) as f64;
+        Ok(self.push("lm_head_xent", out, flops, 4 * rows * 3)) // [max, lse, label] rows
+    }
+
+    /// Close the replay: totals + the peak-arena estimate.
+    fn finish(self, cfg: &ModelConfig, loss: SVar) -> Result<GraphSummary> {
+        if numel(self.shape(loss)) != 1 {
+            bail!("loss must be scalar, got {:?}", self.shape(loss));
+        }
+        let params: usize =
+            super::param_shapes(cfg).iter().map(|(_, s)| numel(s)).sum();
+        let fwd_flops: f64 = self.nodes.iter().map(|n| n.flops).sum();
+        let retained: usize = self.nodes.iter().map(|n| n.bytes).sum();
+        let largest = self.nodes.iter().map(|n| 4 * numel(&n.shape)).max().unwrap_or(0);
+        Ok(GraphSummary {
+            name: cfg.name.clone(),
+            nodes: self.nodes,
+            params,
+            fwd_flops,
+            bwd_flops: 2.0 * fwd_flops,
+            peak_bytes: retained + largest,
+        })
+    }
+}
+
+fn svar(vars: &BTreeMap<String, SVar>, name: &str) -> Result<SVar> {
+    vars.get(name)
+        .copied()
+        .with_context(|| format!("symbolic params missing tensor '{name}'"))
+}
+
+/// Symbolic twin of `text::preln_block` — same call sequence, same node
+/// count.
+fn sym_preln_block(
+    st: &mut ShapeTape,
+    vars: &BTreeMap<String, SVar>,
+    prefix: &str,
+    x: SVar,
+    sh: AttnShape,
+    layerscale: bool,
+) -> Result<SVar> {
+    let h = {
+        let g = svar(vars, &format!("{prefix}ln1_g"))?;
+        let b = svar(vars, &format!("{prefix}ln1_b"))?;
+        st.layernorm(x, g, b)?
+    };
+    let qkv = |n: &str| format!("{prefix}{n}");
+    let q = st.linear_bias(h, svar(vars, &qkv("q_w"))?, svar(vars, &qkv("q_b"))?)?;
+    let k = st.linear_bias(h, svar(vars, &qkv("k_w"))?, svar(vars, &qkv("k_b"))?)?;
+    let v = st.linear_bias(h, svar(vars, &qkv("v_w"))?, svar(vars, &qkv("v_b"))?)?;
+    let att = st.attention(q, k, v, sh)?;
+    let mut o = st.linear_bias(
+        att,
+        svar(vars, &format!("{prefix}o_w"))?,
+        svar(vars, &format!("{prefix}o_b"))?,
+    )?;
+    if layerscale {
+        o = st.mul_row(o, svar(vars, &format!("{prefix}ls1"))?)?;
+    }
+    let x = st.add(x, o)?;
+    let h2 = {
+        let g = svar(vars, &format!("{prefix}ln2_g"))?;
+        let b = svar(vars, &format!("{prefix}ln2_b"))?;
+        st.layernorm(x, g, b)?
+    };
+    let a = st.linear_bias_gelu(
+        h2,
+        svar(vars, &format!("{prefix}fc1_w"))?,
+        svar(vars, &format!("{prefix}fc1_b"))?,
+    )?;
+    let mut f2 = st.linear_bias(
+        a,
+        svar(vars, &format!("{prefix}fc2_w"))?,
+        svar(vars, &format!("{prefix}fc2_b"))?,
+    )?;
+    if layerscale {
+        f2 = st.mul_row(f2, svar(vars, &format!("{prefix}ls2"))?)?;
+    }
+    st.add(x, f2)
+}
+
+/// Symbolic twin of `text::text_loss`.
+fn sym_text_loss(
+    st: &mut ShapeTape,
+    vars: &BTreeMap<String, SVar>,
+    cfg: &ModelConfig,
+) -> Result<SVar> {
+    if cfg.vocab == 0 || cfg.seq == 0 {
+        bail!("text config '{}' needs vocab > 0 and seq > 0", cfg.name);
+    }
+    let (b, s) = (cfg.batch, cfg.seq);
+    let x0 = st.gather(svar(vars, "emb_tok")?, b * s)?;
+    let mut x = st.add_tiled(x0, svar(vars, "emb_pos")?, b)?;
+    let sh = AttnShape {
+        batch: b,
+        heads: cfg.heads,
+        s_q: s,
+        s_k: s,
+        causal: cfg.family == "gpt",
+    };
+    for l in 0..cfg.layers {
+        x = sym_preln_block(st, vars, &format!("L{l:02}_"), x, sh, false)?;
+    }
+    let xf = st.layernorm(x, svar(vars, "final_ln_g")?, svar(vars, "final_ln_b")?)?;
+    if cfg.n_classes > 0 {
+        let pooled = st.seq_mean(xf, b, s)?;
+        st.lm_head_xent(pooled, svar(vars, "head_w")?, Some(svar(vars, "head_b")?), b)
+    } else {
+        st.lm_head_xent(xf, svar(vars, "emb_tok")?, Some(svar(vars, "mlm_bias")?), b * s)
+    }
+}
+
+/// Symbolic twin of `vision::class_attn_block`.
+fn sym_class_attn_block(
+    st: &mut ShapeTape,
+    vars: &BTreeMap<String, SVar>,
+    prefix: &str,
+    cls: SVar,
+    patches: SVar,
+    batch: usize,
+    t: usize,
+    heads: usize,
+) -> Result<SVar> {
+    let xs = st.concat_seq(cls, patches, batch, 1, t)?;
+    let ln1g = svar(vars, &format!("{prefix}ln1_g"))?;
+    let ln1b = svar(vars, &format!("{prefix}ln1_b"))?;
+    let hq = st.layernorm(cls, ln1g, ln1b)?;
+    let hkv = st.layernorm(xs, ln1g, ln1b)?;
+    let qkv = |n: &str| format!("{prefix}{n}");
+    let q = st.linear_bias(hq, svar(vars, &qkv("q_w"))?, svar(vars, &qkv("q_b"))?)?;
+    let k = st.linear_bias(hkv, svar(vars, &qkv("k_w"))?, svar(vars, &qkv("k_b"))?)?;
+    let v = st.linear_bias(hkv, svar(vars, &qkv("v_w"))?, svar(vars, &qkv("v_b"))?)?;
+    let sh = AttnShape { batch, heads, s_q: 1, s_k: t + 1, causal: false };
+    let att = st.attention(q, k, v, sh)?;
+    let o = st.linear_bias(
+        att,
+        svar(vars, &format!("{prefix}o_w"))?,
+        svar(vars, &format!("{prefix}o_b"))?,
+    )?;
+    let cls = st.add(cls, o)?;
+    let h2 = {
+        let g = svar(vars, &format!("{prefix}ln2_g"))?;
+        let b = svar(vars, &format!("{prefix}ln2_b"))?;
+        st.layernorm(cls, g, b)?
+    };
+    let a = st.linear_bias_gelu(
+        h2,
+        svar(vars, &format!("{prefix}fc1_w"))?,
+        svar(vars, &format!("{prefix}fc1_b"))?,
+    )?;
+    let f2 = st.linear_bias(
+        a,
+        svar(vars, &format!("{prefix}fc2_w"))?,
+        svar(vars, &format!("{prefix}fc2_b"))?,
+    )?;
+    st.add(cls, f2)
+}
+
+/// Symbolic twin of `vision::vision_loss`.
+fn sym_vision_loss(
+    st: &mut ShapeTape,
+    vars: &BTreeMap<String, SVar>,
+    cfg: &ModelConfig,
+) -> Result<SVar> {
+    if cfg.n_classes == 0 {
+        bail!("vision config '{}' needs n_classes > 0", cfg.name);
+    }
+    let b = cfg.batch;
+    let images = vec![b, cfg.img, cfg.img, cfg.channels];
+    let patch_rows = rules::patchify(&images, cfg.patch)
+        .with_context(|| format!("patchify for '{}'", cfg.name))?;
+    let t = patch_rows[0] / b;
+    let pv = st.leaf(patch_rows);
+    let x = st.linear_bias(pv, svar(vars, "emb_patch_w")?, svar(vars, "emb_patch_b")?)?;
+    let emb_cls = svar(vars, "emb_cls")?;
+    let pos = svar(vars, "emb_pos")?;
+    let rep = if cfg.family == "vit" {
+        let cls = st.broadcast_row(emb_cls, b)?;
+        let xc = st.concat_seq(cls, x, b, 1, t)?;
+        let mut x = st.add_tiled(xc, pos, b)?;
+        let sh = AttnShape { batch: b, heads: cfg.heads, s_q: t + 1, s_k: t + 1, causal: false };
+        for l in 0..cfg.layers {
+            x = sym_preln_block(st, vars, &format!("L{l:02}_"), x, sh, false)?;
+        }
+        let xf = st.layernorm(x, svar(vars, "final_ln_g")?, svar(vars, "final_ln_b")?)?;
+        st.seq_first(xf, b, t + 1)?
+    } else {
+        let mut x = st.add_tiled(x, pos, b)?;
+        let sh = AttnShape { batch: b, heads: cfg.heads, s_q: t, s_k: t, causal: false };
+        for l in 0..cfg.layers {
+            x = sym_preln_block(st, vars, &format!("L{l:02}_"), x, sh, true)?;
+        }
+        let mut cls = st.broadcast_row(emb_cls, b)?;
+        for l in 0..cfg.cls_layers {
+            cls = sym_class_attn_block(st, vars, &format!("C{l:02}_"), cls, x, b, t, cfg.heads)?;
+        }
+        st.layernorm(cls, svar(vars, "final_ln_g")?, svar(vars, "final_ln_b")?)?
+    };
+    st.lm_head_xent(rep, svar(vars, "head_w")?, Some(svar(vars, "head_b")?), b)
+}
+
+/// Symbolically replay `cfg`'s full forward/backward with explicit fused
+/// flags (no data, no kernels) and summarize it. Errors are the same typed
+/// shape diagnostics the real graph construction raises.
+pub fn summarize_with(cfg: &ModelConfig, fused: bool, fused_xent: bool) -> Result<GraphSummary> {
+    if !super::supports(cfg) {
+        bail!("native model engine does not support family '{}'", cfg.family);
+    }
+    let mut st = ShapeTape::new(fused, fused_xent);
+    let mut vars: BTreeMap<String, SVar> = BTreeMap::new();
+    for (name, shape) in super::param_shapes(cfg) {
+        let leaf = st.param(shape);
+        vars.insert(name, leaf);
+    }
+    let loss = if cfg.is_vision() {
+        sym_vision_loss(&mut st, &vars, cfg)
+    } else {
+        sym_text_loss(&mut st, &vars, cfg)
+    }
+    .with_context(|| format!("static shape verification of '{}'", cfg.name))?;
+    st.finish(cfg, loss)
+}
+
+/// [`summarize_with`] under the engine's *current* lowering knobs — the
+/// summary of the graph the next real forward would build.
+pub fn summarize(cfg: &ModelConfig) -> Result<GraphSummary> {
+    summarize_with(cfg, ops::fused_enabled(), ops::fused_xent_enabled())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::store::Store;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    fn text_cfg(family: &str, n_classes: usize) -> ModelConfig {
+        ModelConfig {
+            name: format!("tiny_{family}"),
+            family: family.into(),
+            layers: 2,
+            dim: 8,
+            heads: 2,
+            vocab: 24,
+            seq: 6,
+            batch: 2,
+            img: 0,
+            patch: 0,
+            channels: 3,
+            n_classes,
+            cls_layers: 0,
+            ffn_mult: 4,
+        }
+    }
+
+    fn vision_cfg(family: &str) -> ModelConfig {
+        ModelConfig {
+            name: format!("tiny_{family}"),
+            family: family.into(),
+            layers: 2,
+            dim: 8,
+            heads: 2,
+            vocab: 0,
+            seq: 0,
+            batch: 2,
+            img: 8,
+            patch: 4,
+            channels: 3,
+            n_classes: 3,
+            cls_layers: usize::from(family == "cait"),
+            ffn_mult: 4,
+        }
+    }
+
+    fn batch_for(cfg: &ModelConfig, seed: u64) -> Store {
+        let mut rng = Rng::new(seed);
+        let mut st = Store::new();
+        if cfg.is_vision() {
+            let n = cfg.batch * cfg.img * cfg.img * cfg.channels;
+            st.insert(
+                "images",
+                Tensor::from_f32(
+                    &[cfg.batch, cfg.img, cfg.img, cfg.channels],
+                    (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect(),
+                ),
+            );
+            let labels: Vec<i32> =
+                (0..cfg.batch).map(|_| rng.below(cfg.n_classes) as i32).collect();
+            st.insert("labels", Tensor::from_i32(&[cfg.batch], labels));
+        } else {
+            let (b, s) = (cfg.batch, cfg.seq);
+            let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(cfg.vocab) as i32).collect();
+            st.insert("tokens", Tensor::from_i32(&[b, s], tokens.clone()));
+            if cfg.n_classes > 0 {
+                let labels: Vec<i32> =
+                    (0..b).map(|_| rng.below(cfg.n_classes) as i32).collect();
+                st.insert("labels", Tensor::from_i32(&[b], labels));
+            } else {
+                let labels: Vec<i32> =
+                    tokens.iter().map(|&t| if t % 3 == 0 { t } else { -1 }).collect();
+                st.insert("labels", Tensor::from_i32(&[b, s], labels));
+            }
+        }
+        st
+    }
+
+    /// The parity invariant behind the whole subsystem: the symbolic
+    /// replay appends exactly as many nodes as the real tape, for every
+    /// family and every fused/unfused lowering combination.
+    #[test]
+    fn symbolic_node_count_matches_real_tape_for_every_family_and_lowering() {
+        let cfgs = [
+            text_cfg("bert", 0),
+            text_cfg("gpt", 0),
+            text_cfg("bert", 3), // probe
+            vision_cfg("vit"),
+            vision_cfg("cait"),
+        ];
+        for cfg in &cfgs {
+            let params = Store::det_init(&super::super::param_shapes(cfg), 1);
+            let batch = batch_for(cfg, 2);
+            for (fused, fused_xent) in
+                [(true, true), (false, false), (true, false), (false, true)]
+            {
+                ops::set_fused_override(Some(fused));
+                ops::set_fused_xent_override(Some(fused_xent));
+                let (tape, _loss, _vars, _m) =
+                    super::super::build(cfg, &params, &batch).unwrap();
+                ops::set_fused_override(None);
+                ops::set_fused_xent_override(None);
+                let summary = summarize_with(cfg, fused, fused_xent).unwrap();
+                assert_eq!(
+                    summary.node_count(),
+                    tape.len(),
+                    "{} fused={fused} fused_xent={fused_xent}",
+                    cfg.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn summary_totals_are_positive_and_consistent() {
+        for cfg in [text_cfg("bert", 0), vision_cfg("cait")] {
+            let s = summarize_with(&cfg, true, true).unwrap();
+            assert!(s.fwd_flops > 0.0);
+            assert_eq!(s.bwd_flops, 2.0 * s.fwd_flops);
+            assert!(s.params > 0);
+            assert!(s.peak_bytes > 0);
+            assert!(s.brief().contains(&cfg.name));
+        }
+    }
+
+    #[test]
+    fn symbolic_flops_agree_with_the_analytic_model_to_a_small_factor() {
+        // Two independent FLOPs models (per-node symbolic vs. the analytic
+        // paper-axis formula) must land in the same ballpark — this is the
+        // cross-check that keeps either from drifting silently.
+        for cfg in [
+            crate::config::Registry::builtin().model("bert_base").unwrap().clone(),
+            crate::config::Registry::builtin().model("vit_s").unwrap().clone(),
+        ] {
+            let sym = summarize_with(&cfg, true, true).unwrap().fwd_flops;
+            let analytic = crate::coordinator::flops::forward_flops(&cfg);
+            let ratio = sym / analytic;
+            assert!(
+                (0.3..3.0).contains(&ratio),
+                "{}: symbolic {sym:e} vs analytic {analytic:e} (ratio {ratio})",
+                cfg.name
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_head_dominates_peak_bytes_statically() {
+        // The PR-5 acceptance property, statically: with the streaming head
+        // the (rows, vocab) logits node never exists, so the symbolic peak
+        // drops below the materialized chain's.
+        let mut cfg = text_cfg("bert", 0);
+        cfg.vocab = 512;
+        cfg.seq = 32;
+        let fused = summarize_with(&cfg, true, true).unwrap();
+        let unfused = summarize_with(&cfg, true, false).unwrap();
+        let logits_bytes = 4 * cfg.batch * cfg.seq * cfg.vocab;
+        assert!(
+            unfused.peak_bytes >= fused.peak_bytes + logits_bytes,
+            "unfused {} vs fused {} (+logits {logits_bytes})",
+            unfused.peak_bytes,
+            fused.peak_bytes
+        );
+    }
+
+    #[test]
+    fn malformed_configs_get_typed_diagnostics_without_kernels() {
+        // heads not dividing dim
+        let mut cfg = text_cfg("bert", 0);
+        cfg.heads = 3;
+        let err = summarize_with(&cfg, true, true).unwrap_err().to_string();
+        assert!(err.contains("not divisible"), "{err}");
+        assert!(err.contains("attention"), "{err}");
+        // zero vocab
+        let mut cfg = text_cfg("bert", 0);
+        cfg.vocab = 0;
+        assert!(summarize_with(&cfg, true, true).is_err());
+        // image that does not tile into patches
+        let mut cfg = vision_cfg("vit");
+        cfg.img = 10;
+        let err = summarize_with(&cfg, true, true).unwrap_err().to_string();
+        assert!(err.contains("does not tile"), "{err}");
+        // unsupported family
+        let mut cfg = text_cfg("bert", 0);
+        cfg.family = "rnn".into();
+        assert!(summarize_with(&cfg, true, true).is_err());
+    }
+
+    #[test]
+    fn rules_reject_each_operand_violation() {
+        assert!(rules::linear(&[2, 3], &[4, 5]).is_err());
+        assert_eq!(rules::linear(&[2, 3], &[4, 3]).unwrap(), vec![2, 4]);
+        assert!(rules::add_row(&[2, 3], &[4]).is_err());
+        assert!(rules::add(&[2, 3], &[3, 2]).is_err());
+        assert!(rules::add_tiled(&[6, 3], &[2, 3], 2).is_err());
+        assert!(rules::mul_row(&[2, 3], &[2]).is_err());
+        assert!(rules::layernorm(&[2, 3], &[3], &[2]).is_err());
+        let sh = AttnShape { batch: 1, heads: 2, s_q: 3, s_k: 3, causal: true };
+        assert!(rules::attention(&[3, 4], &[3, 4], &[3, 5], &sh).is_err());
+        assert!(rules::concat_seq(&[2, 3], &[4, 3], 2, 1, 3).is_err());
+        assert!(rules::seq_first(&[5, 3], 2, 3).is_err());
+        assert!(rules::masked_xent(&[4, 7], 3).is_err());
+        assert!(rules::lm_head_xent(&[4, 3], &[7, 3], Some(&[6]), 4).is_err());
+        assert!(rules::patchify(&[1, 9, 9, 3], 4).is_err());
+    }
+}

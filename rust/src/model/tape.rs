@@ -36,6 +36,17 @@
 //! to `(batch * seq, dim)` and the attention op carries the
 //! (batch, heads, s_q, s_k) layout in its [`AttnShape`].
 //!
+//! # Typed shape errors
+//!
+//! Every fallible constructor validates its operands through the shared
+//! [`rules`](super::shape::rules) *before* any kernel runs and returns
+//! `Result<Var>`: a malformed graph surfaces as a typed
+//! [`crate::error::Error`] naming the offending node ("node N (op): ...")
+//! instead of a kernel panic mid-forward. The kernel-level `assert!`s in
+//! [`crate::tensor::ops`] remain as backstops, but they are unreachable
+//! through this API. The symbolic [`super::shape::ShapeTape`] replays the
+//! same rules with no data at all.
+//!
 //! ```
 //! use ligo::model::tape::Tape;
 //! use ligo::tensor::Tensor;
@@ -46,13 +57,15 @@
 //! let x = tape.leaf(Tensor::from_f32(&[1, 2], vec![2.0, 3.0]));
 //! let wv = tape.param(&w); // borrowed: no copy of w
 //! let bv = tape.param(&b);
-//! let y = tape.linear_bias(x, wv, bv); // fused x @ w^T + b
+//! let y = tape.linear_bias(x, wv, bv).unwrap(); // fused x @ w^T + b
 //! assert_eq!(tape.value(y).f32s(), &[2.5, 2.5]);
-//! let loss = tape.masked_xent(y, vec![0]);
+//! let loss = tape.masked_xent(y, vec![0]).unwrap();
 //! let grads = tape.backward(loss);
 //! assert!(grads[wv.index()].is_some(), "params receive gradients");
 //! ```
 
+use super::shape::rules;
+use crate::error::{Context, Error, Result};
 use crate::tensor::arena;
 use crate::tensor::ops::{self, Act, AttnShape};
 use crate::tensor::Tensor;
@@ -140,7 +153,7 @@ fn acc(slot: &mut Option<Tensor>, t: Tensor) {
 /// Column sums of a 2-D gradient (the broadcast-bias backward).
 fn col_sums(g: &Tensor) -> Vec<f32> {
     let d = g.shape[1];
-    let mut out = vec![0.0f32; d];
+    let mut out = arena::alloc_zeroed(d);
     for row in g.f32s().chunks_exact(d) {
         for (a, &v) in out.iter_mut().zip(row) {
             *a += v;
@@ -187,68 +200,86 @@ impl<'p> Tape<'p> {
         Var(self.nodes.len() - 1)
     }
 
+    /// Node-context prefix for shape diagnostics: the index the node would
+    /// get if the op validated.
+    fn ctx(&self, op: &str) -> String {
+        format!("node {} ({op})", self.nodes.len())
+    }
+
     /// Shared lowering of the linear family: one fused node when the fused
     /// kernel is enabled, the unfused linear/add/GELU chain otherwise.
-    fn linear_node(&mut self, x: Var, w: Var, b: Option<Var>, act: Act) -> Var {
+    fn linear_node(&mut self, x: Var, w: Var, b: Option<Var>, act: Act) -> Result<Var> {
         if ops::fused_enabled() {
+            let out = rules::linear(&self.value(x).shape, &self.value(w).shape)
+                .with_context(|| self.ctx("linear"))?;
+            if let Some(bv) = b {
+                rules::add_row(&out, &self.value(bv).shape)
+                    .with_context(|| self.ctx("linear"))?;
+            }
             let bias = b.map(|bv| self.value(bv));
             let (y, pre) = ops::linear_fused(self.value(x), self.value(w), bias, act);
-            return self.push(y, Op::Linear { x, w, b, act, pre });
+            return Ok(self.push(y, Op::Linear { x, w, b, act, pre }));
         }
+        rules::linear(&self.value(x).shape, &self.value(w).shape)
+            .with_context(|| self.ctx("linear"))?;
         let y = ops::matmul_nt(self.value(x), self.value(w));
         let mut out = self.push(y, Op::Linear { x, w, b: None, act: Act::None, pre: None });
         if let Some(bv) = b {
-            out = self.add_row(out, bv);
+            out = self.add_row(out, bv)?;
         }
         if act == Act::Gelu {
             out = self.gelu(out);
         }
-        out
+        Ok(out)
     }
 
     /// y = x @ w^T for x (n, in) and w (out, in) — the y = W x convention
     /// every stored projection uses.
-    pub fn linear(&mut self, x: Var, w: Var) -> Var {
+    pub fn linear(&mut self, x: Var, w: Var) -> Result<Var> {
         self.linear_node(x, w, None, Act::None)
     }
 
     /// y = x @ w^T + b, fused ([`ops::linear_fused`]).
-    pub fn linear_bias(&mut self, x: Var, w: Var, b: Var) -> Var {
+    pub fn linear_bias(&mut self, x: Var, w: Var, b: Var) -> Result<Var> {
         self.linear_node(x, w, Some(b), Act::None)
     }
 
     /// y = gelu(x @ w^T + b), fused — the transformer FFN's first half in
     /// one kernel pass.
-    pub fn linear_bias_gelu(&mut self, x: Var, w: Var, b: Var) -> Var {
+    pub fn linear_bias_gelu(&mut self, x: Var, w: Var, b: Var) -> Result<Var> {
         self.linear_node(x, w, Some(b), Act::Gelu)
     }
 
     /// y = x + b with the bias broadcast over rows.
-    pub fn add_row(&mut self, x: Var, b: Var) -> Var {
+    pub fn add_row(&mut self, x: Var, b: Var) -> Result<Var> {
+        rules::add_row(&self.value(x).shape, &self.value(b).shape)
+            .with_context(|| self.ctx("add_row"))?;
         let (xv, bv) = (self.value(x), self.value(b));
         let d = xv.shape[1];
-        assert_eq!(bv.numel(), d, "add_row bias dim");
         let mut out = Tensor::from_f32(&xv.shape, arena::alloc_copy(xv.f32s()));
         for row in out.f32s_mut().chunks_exact_mut(d) {
             for (o, &bb) in row.iter_mut().zip(bv.f32s()) {
                 *o += bb;
             }
         }
-        self.push(out, Op::AddRow { x, b })
+        Ok(self.push(out, Op::AddRow { x, b }))
     }
 
     /// y = a + b (same shape; the residual connection).
-    pub fn add(&mut self, a: Var, b: Var) -> Var {
+    pub fn add(&mut self, a: Var, b: Var) -> Result<Var> {
+        rules::add(&self.value(a).shape, &self.value(b).shape)
+            .with_context(|| self.ctx("add"))?;
         let out = ops::axpy(self.value(a), 1.0, self.value(b));
-        self.push(out, Op::Add { a, b })
+        Ok(self.push(out, Op::Add { a, b }))
     }
 
     /// y = x + tile(t, reps): adds t (s, d) to each of `reps` consecutive
     /// s-row blocks of x (the positional-embedding broadcast over batch).
-    pub fn add_tiled(&mut self, x: Var, t: Var, reps: usize) -> Var {
+    pub fn add_tiled(&mut self, x: Var, t: Var, reps: usize) -> Result<Var> {
+        rules::add_tiled(&self.value(x).shape, &self.value(t).shape, reps)
+            .with_context(|| self.ctx("add_tiled"))?;
         let (xv, tv) = (self.value(x), self.value(t));
         let (s, d) = (tv.shape[0], tv.shape[1]);
-        assert_eq!(xv.shape, vec![reps * s, d], "add_tiled shapes");
         let mut out = Tensor::from_f32(&xv.shape, arena::alloc_copy(xv.f32s()));
         let tvv = tv.f32s();
         for block in out.f32s_mut().chunks_exact_mut(s * d) {
@@ -256,21 +287,22 @@ impl<'p> Tape<'p> {
                 *o += tt;
             }
         }
-        self.push(out, Op::AddTiled { x, t, reps })
+        Ok(self.push(out, Op::AddTiled { x, t, reps }))
     }
 
     /// y = x * v with v broadcast over rows (LayerScale).
-    pub fn mul_row(&mut self, x: Var, v: Var) -> Var {
+    pub fn mul_row(&mut self, x: Var, v: Var) -> Result<Var> {
+        rules::mul_row(&self.value(x).shape, &self.value(v).shape)
+            .with_context(|| self.ctx("mul_row"))?;
         let (xv, vv) = (self.value(x), self.value(v));
         let d = xv.shape[1];
-        assert_eq!(vv.numel(), d, "mul_row vector dim");
         let mut out = Tensor::from_f32(&xv.shape, arena::alloc_copy(xv.f32s()));
         for row in out.f32s_mut().chunks_exact_mut(d) {
             for (o, &m) in row.iter_mut().zip(vv.f32s()) {
                 *o *= m;
             }
         }
-        self.push(out, Op::MulRow { x, v })
+        Ok(self.push(out, Op::MulRow { x, v }))
     }
 
     pub fn gelu(&mut self, x: Var) -> Var {
@@ -278,39 +310,51 @@ impl<'p> Tape<'p> {
         self.push(y, Op::Gelu { x })
     }
 
-    pub fn layernorm(&mut self, x: Var, g: Var, b: Var) -> Var {
+    pub fn layernorm(&mut self, x: Var, g: Var, b: Var) -> Result<Var> {
+        rules::layernorm(&self.value(x).shape, &self.value(g).shape, &self.value(b).shape)
+            .with_context(|| self.ctx("layernorm"))?;
         let (y, stats) = ops::layernorm_fwd(self.value(x), self.value(g), self.value(b));
-        self.push(y, Op::LayerNorm { x, g, b, stats })
+        Ok(self.push(y, Op::LayerNorm { x, g, b, stats }))
     }
 
     /// Multi-head softmax attention; see [`ops::attention_fwd`].
-    pub fn attention(&mut self, q: Var, k: Var, v: Var, sh: AttnShape) -> Var {
+    pub fn attention(&mut self, q: Var, k: Var, v: Var, sh: AttnShape) -> Result<Var> {
+        rules::attention(&self.value(q).shape, &self.value(k).shape, &self.value(v).shape, &sh)
+            .with_context(|| self.ctx("attention"))?;
         let (out, probs) = ops::attention_fwd(self.value(q), self.value(k), self.value(v), &sh);
-        self.push(out, Op::Attention { q, k, v, sh, probs })
+        Ok(self.push(out, Op::Attention { q, k, v, sh, probs }))
     }
 
-    /// y[i] = emb[ids[i]] — token/row embedding lookup.
-    pub fn gather(&mut self, emb: Var, ids: Vec<i32>) -> Var {
+    /// y[i] = emb[ids[i]] — token/row embedding lookup. Ids outside the
+    /// table are a typed error naming the first offender.
+    pub fn gather(&mut self, emb: Var, ids: Vec<i32>) -> Result<Var> {
+        rules::gather(&self.value(emb).shape, ids.len())
+            .with_context(|| self.ctx("gather"))?;
         let ev = self.value(emb);
         let (rows, d) = (ev.shape[0], ev.shape[1]);
         let evv = ev.f32s();
-        let mut out = Vec::with_capacity(ids.len() * d);
-        for &id in &ids {
-            assert!(id >= 0 && (id as usize) < rows, "gather id {id} outside [0, {rows})");
+        // alloc_scratch: every row is fully overwritten below
+        let mut out = arena::alloc_scratch(ids.len() * d);
+        for (i_row, &id) in ids.iter().enumerate() {
+            if id < 0 || id as usize >= rows {
+                return Err(Error::msg(format!("gather id {id} outside [0, {rows})")))
+                    .with_context(|| format!("node {} (gather)", self.nodes.len()));
+            }
             let r = id as usize;
-            out.extend_from_slice(&evv[r * d..(r + 1) * d]);
+            out[i_row * d..(i_row + 1) * d].copy_from_slice(&evv[r * d..(r + 1) * d]);
         }
         let t = Tensor::from_f32(&[ids.len(), d], out);
-        self.push(t, Op::Gather { emb, ids })
+        Ok(self.push(t, Op::Gather { emb, ids }))
     }
 
     /// y = v (a d-vector) broadcast to (reps, d) — the CLS token.
     pub fn broadcast_row(&mut self, v: Var, reps: usize) -> Var {
         let vv = self.value(v);
         let d = vv.numel();
-        let mut out = Vec::with_capacity(reps * d);
-        for _ in 0..reps {
-            out.extend_from_slice(vv.f32s());
+        // alloc_scratch: every chunk is fully overwritten below
+        let mut out = arena::alloc_scratch(reps * d);
+        for chunk in out.chunks_exact_mut(d) {
+            chunk.copy_from_slice(vv.f32s());
         }
         let t = Tensor::from_f32(&[reps, d], out);
         self.push(t, Op::BroadcastRow { v, reps })
@@ -318,44 +362,57 @@ impl<'p> Tape<'p> {
 
     /// Per batch element, concat sa rows of `a` with sb rows of `b` along
     /// the sequence axis (CLS-token prepend / class-attention key stream).
-    pub fn concat_seq(&mut self, a: Var, b: Var, batch: usize, sa: usize, sb: usize) -> Var {
+    pub fn concat_seq(
+        &mut self,
+        a: Var,
+        b: Var,
+        batch: usize,
+        sa: usize,
+        sb: usize,
+    ) -> Result<Var> {
+        rules::concat_seq(&self.value(a).shape, &self.value(b).shape, batch, sa, sb)
+            .with_context(|| self.ctx("concat_seq"))?;
         let (av, bv) = (self.value(a), self.value(b));
         let d = av.shape[1];
-        assert_eq!(av.shape, vec![batch * sa, d], "concat_seq a shape");
-        assert_eq!(bv.shape, vec![batch * sb, d], "concat_seq b shape");
         let (avv, bvv) = (av.f32s(), bv.f32s());
-        let mut out = Vec::with_capacity(batch * (sa + sb) * d);
+        // alloc_scratch: every block is fully overwritten below
+        let mut out = arena::alloc_scratch(batch * (sa + sb) * d);
         for bi in 0..batch {
-            out.extend_from_slice(&avv[bi * sa * d..(bi + 1) * sa * d]);
-            out.extend_from_slice(&bvv[bi * sb * d..(bi + 1) * sb * d]);
+            let base = bi * (sa + sb) * d;
+            out[base..base + sa * d].copy_from_slice(&avv[bi * sa * d..(bi + 1) * sa * d]);
+            out[base + sa * d..base + (sa + sb) * d]
+                .copy_from_slice(&bvv[bi * sb * d..(bi + 1) * sb * d]);
         }
         let t = Tensor::from_f32(&[batch * (sa + sb), d], out);
-        self.push(t, Op::ConcatSeq { a, b, batch, sa, sb })
+        Ok(self.push(t, Op::ConcatSeq { a, b, batch, sa, sb }))
     }
 
     /// y[b] = x[b * s]: the first sequence position of each batch element
     /// (the ViT CLS readout).
-    pub fn seq_first(&mut self, x: Var, batch: usize, s: usize) -> Var {
+    pub fn seq_first(&mut self, x: Var, batch: usize, s: usize) -> Result<Var> {
+        rules::seq_first(&self.value(x).shape, batch, s)
+            .with_context(|| self.ctx("seq_first"))?;
         let xv = self.value(x);
         let d = xv.shape[1];
-        assert_eq!(xv.shape, vec![batch * s, d], "seq_first shape");
         let xvv = xv.f32s();
-        let mut out = Vec::with_capacity(batch * d);
+        // alloc_scratch: every row is fully overwritten below
+        let mut out = arena::alloc_scratch(batch * d);
         for b in 0..batch {
-            out.extend_from_slice(&xvv[b * s * d..(b * s + 1) * d]);
+            out[b * d..(b + 1) * d].copy_from_slice(&xvv[b * s * d..(b * s + 1) * d]);
         }
         let t = Tensor::from_f32(&[batch, d], out);
-        self.push(t, Op::SeqFirst { x, batch, s })
+        Ok(self.push(t, Op::SeqFirst { x, batch, s }))
     }
 
     /// y[b] = mean of the s sequence rows of batch element b (probe pooling).
-    pub fn seq_mean(&mut self, x: Var, batch: usize, s: usize) -> Var {
+    pub fn seq_mean(&mut self, x: Var, batch: usize, s: usize) -> Result<Var> {
+        rules::seq_mean(&self.value(x).shape, batch, s)
+            .with_context(|| self.ctx("seq_mean"))?;
         let xv = self.value(x);
         let d = xv.shape[1];
-        assert_eq!(xv.shape, vec![batch * s, d], "seq_mean shape");
         let xvv = xv.f32s();
         let inv = 1.0 / s as f32;
-        let mut out = vec![0.0f32; batch * d];
+        let mut out = arena::alloc_zeroed(batch * d);
         for b in 0..batch {
             let orow = &mut out[b * d..(b + 1) * d];
             for r in 0..s {
@@ -366,13 +423,23 @@ impl<'p> Tape<'p> {
             }
         }
         let t = Tensor::from_f32(&[batch, d], out);
-        self.push(t, Op::SeqMean { x, batch, s })
+        Ok(self.push(t, Op::SeqMean { x, batch, s }))
     }
 
-    /// Scalar masked mean cross-entropy (labels < 0 ignored).
-    pub fn masked_xent(&mut self, logits: Var, labels: Vec<i32>) -> Var {
+    /// Scalar masked mean cross-entropy (labels < 0 ignored). Label count
+    /// and range are validated before the kernel runs.
+    pub fn masked_xent(&mut self, logits: Var, labels: Vec<i32>) -> Result<Var> {
+        rules::masked_xent(&self.value(logits).shape, labels.len())
+            .with_context(|| self.ctx("masked_xent"))?;
+        let cols = self.value(logits).shape[1];
+        for &l in &labels {
+            if l >= 0 && l as usize >= cols {
+                return Err(Error::msg(format!("label {l} outside vocab {cols}")))
+                    .with_context(|| self.ctx("masked_xent"));
+            }
+        }
         let (loss, count) = ops::masked_xent_fwd(self.value(logits), &labels);
-        self.push(Tensor::scalar_f32(loss), Op::MaskedXent { logits, labels, count })
+        Ok(self.push(Tensor::scalar_f32(loss), Op::MaskedXent { logits, labels, count }))
     }
 
     /// Scalar masked mean cross-entropy of the LM/classifier head
@@ -385,18 +452,39 @@ impl<'p> Tape<'p> {
     /// [`Tape::linear_bias`] weight's, so a tied `emb_tok` head sums its
     /// gather and head contributions as before. With the knob off it lowers
     /// to the unfused linear_bias + masked_xent node chain for A/B runs.
-    pub fn lm_head_xent(&mut self, x: Var, w: Var, b: Option<Var>, labels: Vec<i32>) -> Var {
+    pub fn lm_head_xent(
+        &mut self,
+        x: Var,
+        w: Var,
+        b: Option<Var>,
+        labels: Vec<i32>,
+    ) -> Result<Var> {
         if !ops::fused_xent_enabled() {
             let logits = match b {
-                Some(bv) => self.linear_bias(x, w, bv),
-                None => self.linear(x, w),
+                Some(bv) => self.linear_bias(x, w, bv)?,
+                None => self.linear(x, w)?,
             };
             return self.masked_xent(logits, labels);
+        }
+        let bshape = b.map(|bv| self.value(bv).shape.clone());
+        rules::lm_head_xent(
+            &self.value(x).shape,
+            &self.value(w).shape,
+            bshape.as_deref(),
+            labels.len(),
+        )
+        .with_context(|| self.ctx("lm_head_xent"))?;
+        let vocab = self.value(w).shape[0];
+        for &l in &labels {
+            if l >= 0 && l as usize >= vocab {
+                return Err(Error::msg(format!("label {l} outside vocab {vocab}")))
+                    .with_context(|| self.ctx("lm_head_xent"));
+            }
         }
         let bias = b.map(|bv| self.value(bv));
         let (loss, count, stats) =
             ops::lm_head_xent_fwd(self.value(x), self.value(w), bias, &labels);
-        self.push(Tensor::scalar_f32(loss), Op::LmHeadXent { x, w, b, labels, count, stats })
+        Ok(self.push(Tensor::scalar_f32(loss), Op::LmHeadXent { x, w, b, labels, count, stats }))
     }
 
     /// Reverse sweep from the scalar `root`. Returns one gradient slot per
@@ -468,7 +556,7 @@ impl<'p> Tape<'p> {
                 Op::MulRow { x, v } => {
                     let (xv, vv) = (self.value(*x), self.value(*v));
                     let d = xv.shape[1];
-                    let mut dv = vec![0.0f32; d];
+                    let mut dv = arena::alloc_zeroed(d);
                     let rows = gout.f32s().chunks_exact(d).zip(xv.f32s().chunks_exact(d));
                     for (grow, xrow) in rows {
                         for ((a, &gg), &xx) in dv.iter_mut().zip(grow).zip(xrow) {
@@ -646,12 +734,12 @@ mod tests {
         let v = tape.leaf(leaves.expect("v").clone());
         let b = tape.leaf(leaves.expect("b").clone());
         let w = tape.leaf(leaves.expect("w").clone());
-        let g1 = tape.gather(emb, vec![0, 2, 4, 1]);
-        let g2 = tape.add_tiled(g1, t, 2);
-        let g3 = tape.mul_row(g2, v);
-        let g4 = tape.add_row(g3, b);
-        let lin = tape.linear(g4, w);
-        let loss = tape.masked_xent(lin, vec![1, -1, 0, 3]);
+        let g1 = tape.gather(emb, vec![0, 2, 4, 1]).unwrap();
+        let g2 = tape.add_tiled(g1, t, 2).unwrap();
+        let g3 = tape.mul_row(g2, v).unwrap();
+        let g4 = tape.add_row(g3, b).unwrap();
+        let lin = tape.linear(g4, w).unwrap();
+        let loss = tape.masked_xent(lin, vec![1, -1, 0, 3]).unwrap();
         tape.value(loss).item()
     }
 
@@ -669,12 +757,12 @@ mod tests {
         let mut tape = Tape::new();
         let names = ["emb", "t", "v", "b", "w"];
         let vars: Vec<Var> = names.iter().map(|n| tape.leaf(leaves.expect(n).clone())).collect();
-        let g1 = tape.gather(vars[0], vec![0, 2, 4, 1]);
-        let g2 = tape.add_tiled(g1, vars[1], 2);
-        let g3 = tape.mul_row(g2, vars[2]);
-        let g4 = tape.add_row(g3, vars[3]);
-        let lin = tape.linear(g4, vars[4]);
-        let loss = tape.masked_xent(lin, vec![1, -1, 0, 3]);
+        let g1 = tape.gather(vars[0], vec![0, 2, 4, 1]).unwrap();
+        let g2 = tape.add_tiled(g1, vars[1], 2).unwrap();
+        let g3 = tape.mul_row(g2, vars[2]).unwrap();
+        let g4 = tape.add_row(g3, vars[3]).unwrap();
+        let lin = tape.linear(g4, vars[4]).unwrap();
+        let loss = tape.masked_xent(lin, vec![1, -1, 0, 3]).unwrap();
         let grads = tape.backward(loss);
 
         let eps = 1e-2f32;
@@ -702,8 +790,8 @@ mod tests {
         let f = |x: &Tensor| {
             let mut tape = Tape::new();
             let x = tape.leaf(x.clone());
-            let y = tape.linear(x, x);
-            let loss = tape.masked_xent(y, vec![0, 2, 1]);
+            let y = tape.linear(x, x).unwrap();
+            let loss = tape.masked_xent(y, vec![0, 2, 1]).unwrap();
             (tape, x, loss)
         };
         let (tape, xv, loss) = f(&x0);
@@ -736,18 +824,18 @@ mod tests {
         let cls = tape.leaf(Tensor::from_f32(&[2], vec![1.0, 2.0]));
         let patches = tape.leaf(Tensor::from_f32(&[4, 2], vec![0.1; 8]));
         let bc = tape.broadcast_row(cls, 2); // (2 batches, 1 row each)
-        let cat = tape.concat_seq(bc, patches, 2, 1, 2); // (2*(1+2), 2)
+        let cat = tape.concat_seq(bc, patches, 2, 1, 2).unwrap(); // (2*(1+2), 2)
         assert_eq!(tape.value(cat).shape, vec![6, 2]);
         assert_eq!(tape.value(cat).at2(0, 1), 2.0); // cls row leads each block
         assert_eq!(tape.value(cat).at2(3, 0), 1.0);
-        let first = tape.seq_first(cat, 2, 3);
+        let first = tape.seq_first(cat, 2, 3).unwrap();
         assert_eq!(tape.value(first).f32s(), &[1.0, 2.0, 1.0, 2.0]);
-        let mean = tape.seq_mean(cat, 2, 3);
+        let mean = tape.seq_mean(cat, 2, 3).unwrap();
         assert!((tape.value(mean).at2(0, 0) - (1.0 + 0.1 + 0.1) / 3.0).abs() < 1e-6);
         // dummy scalar through a linear head for the backward sweep
         let w = tape.leaf(Tensor::from_f32(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]));
-        let lin = tape.linear(mean, w);
-        let loss = tape.masked_xent(lin, vec![0, 1]);
+        let lin = tape.linear(mean, w).unwrap();
+        let loss = tape.masked_xent(lin, vec![0, 1]).unwrap();
         let grads = tape.backward(loss);
         assert!(grads[cls.index()].is_some(), "cls leaf must receive gradient");
         assert!(grads[patches.index()].is_some());
@@ -762,8 +850,8 @@ mod tests {
         assert!(std::ptr::eq(tape.value(wv), &w), "param leaf must borrow, not copy");
         // and borrowed leaves still get owned gradients
         let x = tape.leaf(Tensor::from_f32(&[1, 3], vec![1.0, 0.0, -1.0]));
-        let y = tape.linear(x, wv);
-        let loss = tape.masked_xent(y, vec![1]);
+        let y = tape.linear(x, wv).unwrap();
+        let loss = tape.masked_xent(y, vec![1]).unwrap();
         let grads = tape.backward(loss);
         let gw = grads[wv.index()].as_ref().expect("borrowed leaf gradient");
         assert_eq!(gw.shape, w.shape);
@@ -785,9 +873,9 @@ mod tests {
             let x = tape.leaf(xs.clone());
             let w = tape.param(ws);
             let b = tape.param(bs);
-            let y = tape.linear_bias_gelu(x, w, b);
+            let y = tape.linear_bias_gelu(x, w, b).unwrap();
             let yv = tape.value(y).clone();
-            let loss = tape.masked_xent(y, labels.clone());
+            let loss = tape.masked_xent(y, labels.clone()).unwrap();
             let l = tape.value(loss).item();
             let grads = tape.backward(loss);
             let gw = grads[w.index()].as_ref().unwrap().clone();
@@ -850,8 +938,8 @@ mod tests {
             let mut tape = Tape::new();
             let e = tape.param(emb);
             let bb = tape.param(bias);
-            let x = tape.gather(e, ids.clone()); // ties emb into the input path
-            let loss = tape.lm_head_xent(x, e, Some(bb), labels.clone());
+            let x = tape.gather(e, ids.clone()).unwrap(); // ties emb into the input path
+            let loss = tape.lm_head_xent(x, e, Some(bb), labels.clone()).unwrap();
             let l = tape.value(loss).item();
             let grads = tape.backward(loss);
             let ge = grads[e.index()].as_ref().unwrap().clone();
@@ -905,12 +993,39 @@ mod tests {
         let mut tape = Tape::new();
         let x = tape.leaf(x0.clone());
         let w = tape.param(&w0);
-        let loss = tape.lm_head_xent(x, w, None, vec![1, -1, 4]);
+        let loss = tape.lm_head_xent(x, w, None, vec![1, -1, 4]).unwrap();
         // leaf + param + Linear + MaskedXent (the fused route would be 3)
         assert_eq!(tape.len(), 4, "unfused route must append the node chain");
         let grads = tape.backward(loss);
         assert!(grads[w.index()].is_some());
         assert!(grads[x.index()].is_some());
         ops::set_fused_xent_override(None);
+    }
+
+    /// Malformed graphs surface as typed errors naming the offending node
+    /// — never as kernel panics — and a failed op appends nothing.
+    #[test]
+    fn malformed_ops_return_typed_errors_naming_the_node() {
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::from_f32(&[2, 3], vec![0.0; 6]));
+        let b = tape.leaf(Tensor::from_f32(&[4], vec![0.0; 4]));
+        let err = tape.add_row(x, b).unwrap_err().to_string();
+        assert!(err.contains("add_row") && err.contains("bias"), "{err}");
+        assert_eq!(tape.len(), 2, "a rejected op must not append a node");
+        let emb = tape.leaf(Tensor::from_f32(&[3, 2], vec![0.0; 6]));
+        let err = tape.gather(emb, vec![0, 3]).unwrap_err().to_string();
+        assert!(err.contains("gather id 3 outside [0, 3)"), "{err}");
+        let w = tape.leaf(Tensor::from_f32(&[5, 3], vec![0.0; 15]));
+        let y = tape.linear(x, w).unwrap();
+        let err = tape.masked_xent(y, vec![0, 9]).unwrap_err().to_string();
+        assert!(err.contains("label 9 outside vocab 5"), "{err}");
+        ops::set_fused_xent_override(Some(true));
+        let err = tape.lm_head_xent(x, w, None, vec![0]).unwrap_err().to_string();
+        assert!(err.contains("lm_head_xent") && err.contains("one label per"), "{err}");
+        ops::set_fused_xent_override(None);
+        let q = tape.leaf(Tensor::from_f32(&[4, 6], vec![0.0; 24]));
+        let sh = AttnShape { batch: 2, heads: 4, s_q: 2, s_k: 2, causal: false };
+        let err = tape.attention(q, q, q, sh).unwrap_err().to_string();
+        assert!(err.contains("attention") && err.contains("not divisible"), "{err}");
     }
 }

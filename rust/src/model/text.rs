@@ -28,53 +28,53 @@ pub(super) fn preln_block(
     let h = {
         let g = var(vars, &format!("{prefix}ln1_g"))?;
         let b = var(vars, &format!("{prefix}ln1_b"))?;
-        tape.layernorm(x, g, b)
+        tape.layernorm(x, g, b)?
     };
     let q = {
         let w = var(vars, &format!("{prefix}q_w"))?;
         let b = var(vars, &format!("{prefix}q_b"))?;
-        tape.linear_bias(h, w, b)
+        tape.linear_bias(h, w, b)?
     };
     let k = {
         let w = var(vars, &format!("{prefix}k_w"))?;
         let b = var(vars, &format!("{prefix}k_b"))?;
-        tape.linear_bias(h, w, b)
+        tape.linear_bias(h, w, b)?
     };
     let v = {
         let w = var(vars, &format!("{prefix}v_w"))?;
         let b = var(vars, &format!("{prefix}v_b"))?;
-        tape.linear_bias(h, w, b)
+        tape.linear_bias(h, w, b)?
     };
-    let att = tape.attention(q, k, v, sh);
+    let att = tape.attention(q, k, v, sh)?;
     let mut o = {
         let w = var(vars, &format!("{prefix}o_w"))?;
         let b = var(vars, &format!("{prefix}o_b"))?;
-        tape.linear_bias(att, w, b)
+        tape.linear_bias(att, w, b)?
     };
     if layerscale {
-        o = tape.mul_row(o, var(vars, &format!("{prefix}ls1"))?);
+        o = tape.mul_row(o, var(vars, &format!("{prefix}ls1"))?)?;
     }
-    let x = tape.add(x, o);
+    let x = tape.add(x, o)?;
     let h2 = {
         let g = var(vars, &format!("{prefix}ln2_g"))?;
         let b = var(vars, &format!("{prefix}ln2_b"))?;
-        tape.layernorm(x, g, b)
+        tape.layernorm(x, g, b)?
     };
     // FFN: fc1 + bias + GELU run as one fused kernel pass
     let a = {
         let w = var(vars, &format!("{prefix}fc1_w"))?;
         let b = var(vars, &format!("{prefix}fc1_b"))?;
-        tape.linear_bias_gelu(h2, w, b)
+        tape.linear_bias_gelu(h2, w, b)?
     };
     let mut f2 = {
         let w = var(vars, &format!("{prefix}fc2_w"))?;
         let b = var(vars, &format!("{prefix}fc2_b"))?;
-        tape.linear_bias(a, w, b)
+        tape.linear_bias(a, w, b)?
     };
     if layerscale {
-        f2 = tape.mul_row(f2, var(vars, &format!("{prefix}ls2"))?);
+        f2 = tape.mul_row(f2, var(vars, &format!("{prefix}ls2"))?)?;
     }
-    Ok(tape.add(x, f2))
+    tape.add(x, f2)
 }
 
 /// BERT/GPT loss (MLM / causal LM via the tied head), or the mean-pool +
@@ -104,9 +104,9 @@ pub(super) fn text_loss(
         bail!("token id {bad} outside vocab {} for '{}'", cfg.vocab, cfg.name);
     }
     let emb_tok = var(vars, "emb_tok")?;
-    let x0 = tape.gather(emb_tok, ids);
+    let x0 = tape.gather(emb_tok, ids)?;
     let pos = var(vars, "emb_pos")?;
-    let mut x = tape.add_tiled(x0, pos, b);
+    let mut x = tape.add_tiled(x0, pos, b)?;
     let sh = AttnShape {
         batch: b,
         heads: cfg.heads,
@@ -120,7 +120,7 @@ pub(super) fn text_loss(
     let xf = {
         let g = var(vars, "final_ln_g")?;
         let bb = var(vars, "final_ln_b")?;
-        tape.layernorm(x, g, bb)
+        tape.layernorm(x, g, bb)?
     };
     if cfg.n_classes > 0 {
         // sequence-classification probe: mean-pool + streaming fused head
@@ -128,7 +128,7 @@ pub(super) fn text_loss(
         if labels.shape != vec![b] {
             bail!("probe labels must be ({b},), got {:?}", labels.shape);
         }
-        let pooled = tape.seq_mean(xf, b, s);
+        let pooled = tape.seq_mean(xf, b, s)?;
         let w = var(vars, "head_w")?;
         let bb = var(vars, "head_b")?;
         let lbl = labels.i32s().to_vec();
@@ -136,7 +136,7 @@ pub(super) fn text_loss(
             bail!("label {bad} outside {} classes for '{}'", cfg.n_classes, cfg.name);
         }
         let acc = head_accuracy(tape.value(pooled), tape.value(w), Some(tape.value(bb)), &lbl);
-        let loss = tape.lm_head_xent(pooled, w, Some(bb), lbl);
+        let loss = tape.lm_head_xent(pooled, w, Some(bb), lbl)?;
         Ok((loss, Some(acc)))
     } else {
         if labels.shape != tokens.shape {
@@ -149,7 +149,7 @@ pub(super) fn text_loss(
         // tied LM head, streamed: the (batch*seq, vocab) logits of
         // `xf @ emb_tok^T + mlm_bias` are never materialized
         let mb = var(vars, "mlm_bias")?;
-        let loss = tape.lm_head_xent(xf, emb_tok, Some(mb), lbl);
+        let loss = tape.lm_head_xent(xf, emb_tok, Some(mb), lbl)?;
         Ok((loss, None))
     }
 }

@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 use crate::bail;
 use crate::config::ModelConfig;
 use crate::error::Result;
+use crate::tensor::arena;
 use crate::tensor::ops::AttnShape;
 use crate::tensor::store::Store;
 use crate::tensor::Tensor;
@@ -24,7 +25,8 @@ pub(super) fn patchify(images: &Tensor, patch: usize) -> Tensor {
     let (nh, nw) = (hh / patch, ww / patch);
     let pdim = patch * patch * c;
     let iv = images.f32s();
-    let mut out = vec![0.0f32; b * nh * nw * pdim];
+    // alloc_scratch: the patch walk below writes every element exactly once
+    let mut out = arena::alloc_scratch(b * nh * nw * pdim);
     let mut o = 0;
     for bi in 0..b {
         for ph in 0..nh {
@@ -58,51 +60,51 @@ fn class_attn_block(
     t: usize,
     heads: usize,
 ) -> Result<Var> {
-    let xs = tape.concat_seq(cls, patches, batch, 1, t);
+    let xs = tape.concat_seq(cls, patches, batch, 1, t)?;
     let ln1g = var(vars, &format!("{prefix}ln1_g"))?;
     let ln1b = var(vars, &format!("{prefix}ln1_b"))?;
-    let hq = tape.layernorm(cls, ln1g, ln1b);
-    let hkv = tape.layernorm(xs, ln1g, ln1b);
+    let hq = tape.layernorm(cls, ln1g, ln1b)?;
+    let hkv = tape.layernorm(xs, ln1g, ln1b)?;
     let q = {
         let w = var(vars, &format!("{prefix}q_w"))?;
         let b = var(vars, &format!("{prefix}q_b"))?;
-        tape.linear_bias(hq, w, b)
+        tape.linear_bias(hq, w, b)?
     };
     let k = {
         let w = var(vars, &format!("{prefix}k_w"))?;
         let b = var(vars, &format!("{prefix}k_b"))?;
-        tape.linear_bias(hkv, w, b)
+        tape.linear_bias(hkv, w, b)?
     };
     let v = {
         let w = var(vars, &format!("{prefix}v_w"))?;
         let b = var(vars, &format!("{prefix}v_b"))?;
-        tape.linear_bias(hkv, w, b)
+        tape.linear_bias(hkv, w, b)?
     };
     let sh = AttnShape { batch, heads, s_q: 1, s_k: t + 1, causal: false };
-    let att = tape.attention(q, k, v, sh);
+    let att = tape.attention(q, k, v, sh)?;
     let o = {
         let w = var(vars, &format!("{prefix}o_w"))?;
         let b = var(vars, &format!("{prefix}o_b"))?;
-        tape.linear_bias(att, w, b)
+        tape.linear_bias(att, w, b)?
     };
-    let cls = tape.add(cls, o);
+    let cls = tape.add(cls, o)?;
     let h2 = {
         let g = var(vars, &format!("{prefix}ln2_g"))?;
         let b = var(vars, &format!("{prefix}ln2_b"))?;
-        tape.layernorm(cls, g, b)
+        tape.layernorm(cls, g, b)?
     };
     // FFN: fc1 + bias + GELU in one fused pass
     let a = {
         let w = var(vars, &format!("{prefix}fc1_w"))?;
         let b = var(vars, &format!("{prefix}fc1_b"))?;
-        tape.linear_bias_gelu(h2, w, b)
+        tape.linear_bias_gelu(h2, w, b)?
     };
     let f2 = {
         let w = var(vars, &format!("{prefix}fc2_w"))?;
         let b = var(vars, &format!("{prefix}fc2_b"))?;
-        tape.linear_bias(a, w, b)
+        tape.linear_bias(a, w, b)?
     };
-    Ok(tape.add(cls, f2))
+    tape.add(cls, f2)
 }
 
 /// Image-classification loss + accuracy for ViT/CaiT.
@@ -140,15 +142,15 @@ pub(super) fn vision_loss(
     let x = {
         let w = var(vars, "emb_patch_w")?;
         let bb = var(vars, "emb_patch_b")?;
-        tape.linear_bias(pv, w, bb)
+        tape.linear_bias(pv, w, bb)?
     };
     let emb_cls = var(vars, "emb_cls")?;
     let pos = var(vars, "emb_pos")?;
     let rep = if cfg.family == "vit" {
         // prepend CLS, add positions over T+1 tokens, run the stack
         let cls = tape.broadcast_row(emb_cls, b);
-        let xc = tape.concat_seq(cls, x, b, 1, t);
-        let mut x = tape.add_tiled(xc, pos, b);
+        let xc = tape.concat_seq(cls, x, b, 1, t)?;
+        let mut x = tape.add_tiled(xc, pos, b)?;
         let sh = AttnShape {
             batch: b,
             heads: cfg.heads,
@@ -162,13 +164,13 @@ pub(super) fn vision_loss(
         let xf = {
             let g = var(vars, "final_ln_g")?;
             let bb = var(vars, "final_ln_b")?;
-            tape.layernorm(x, g, bb)
+            tape.layernorm(x, g, bb)?
         };
-        tape.seq_first(xf, b, t + 1)
+        tape.seq_first(xf, b, t + 1)?
     } else {
         // CaiT: LayerScale'd patch stage, then class-attention over frozen
         // patches; the final LN runs on the CLS stream only.
-        let mut x = tape.add_tiled(x, pos, b);
+        let mut x = tape.add_tiled(x, pos, b)?;
         let sh = AttnShape {
             batch: b,
             heads: cfg.heads,
@@ -185,7 +187,7 @@ pub(super) fn vision_loss(
         }
         let g = var(vars, "final_ln_g")?;
         let bb = var(vars, "final_ln_b")?;
-        tape.layernorm(cls, g, bb)
+        tape.layernorm(cls, g, bb)?
     };
     // classifier head, streamed: loss and accuracy run tile-by-tile through
     // the fused LM-head kernels — no (batch, n_classes) logits tensor
@@ -196,6 +198,6 @@ pub(super) fn vision_loss(
         bail!("label {bad} outside {} classes for '{}'", cfg.n_classes, cfg.name);
     }
     let acc = head_accuracy(tape.value(rep), tape.value(w), Some(tape.value(bb)), &lbl);
-    let loss = tape.lm_head_xent(rep, w, Some(bb), lbl);
+    let loss = tape.lm_head_xent(rep, w, Some(bb), lbl)?;
     Ok((loss, Some(acc)))
 }

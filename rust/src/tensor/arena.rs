@@ -107,20 +107,89 @@ thread_local! {
     static DRAW_SHARED: Cell<bool> = const { Cell::new(false) };
 }
 
-/// The cross-thread overflow pool (see the module docs). `bytes` tracks the
-/// pooled capacity so the same byte cap applies as to a local pool.
-struct SharedPool {
+/// The cross-thread overflow pool's lock-agnostic core (see the module
+/// docs). `bytes` tracks the pooled capacity so the same byte cap applies
+/// as to a local pool. The type carries no lock of its own: the process
+/// pool wraps it in [`SHARED`]'s `std::sync::Mutex`, and the concurrency
+/// model tests (`tests/loom_models.rs`, `--cfg loom`) drive *this exact
+/// logic* under `loom::sync::Mutex` across explored interleavings — which
+/// is why the invariants (`bytes` = 4 × summed capacity, both caps) are
+/// public methods here rather than properties of the lock site.
+pub struct OverflowPool {
     free: Vec<Vec<f32>>,
     bytes: usize,
+    max_pooled: usize,
+    max_bytes: usize,
 }
 
-static SHARED: Mutex<SharedPool> = Mutex::new(SharedPool { free: Vec::new(), bytes: 0 });
+impl OverflowPool {
+    pub const fn new(max_pooled: usize, max_bytes: usize) -> Self {
+        OverflowPool { free: Vec::new(), bytes: 0, max_pooled, max_bytes }
+    }
+
+    /// Best-fit extraction of a buffer with capacity >= `n`.
+    pub fn take(&mut self, n: usize) -> Option<Vec<f32>> {
+        let b = best_fit(&mut self.free, n)?;
+        self.bytes -= b.capacity() * 4;
+        Some(b)
+    }
+
+    /// Offer a buffer to the pool; returns `false` (dropping the buffer)
+    /// when either the count or the byte cap would be exceeded.
+    pub fn put(&mut self, buf: Vec<f32>) -> bool {
+        let bytes = buf.capacity() * 4;
+        if self.free.len() < self.max_pooled && self.bytes + bytes <= self.max_bytes {
+            self.bytes += bytes;
+            self.free.push(buf);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.free.is_empty()
+    }
+
+    /// Pooled capacity in bytes (the cap accounting).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn clear(&mut self) {
+        self.free.clear();
+        self.bytes = 0;
+    }
+
+    /// Check the pool's internal accounting invariants — what the loom
+    /// model tests assert after every explored interleaving.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let sum: usize = self.free.iter().map(|b| b.capacity() * 4).sum();
+        if sum != self.bytes {
+            return Err(format!("bytes accounting drifted: tracked {} real {sum}", self.bytes));
+        }
+        if self.free.len() > self.max_pooled {
+            return Err(format!("count cap exceeded: {} > {}", self.free.len(), self.max_pooled));
+        }
+        if self.bytes > self.max_bytes {
+            return Err(format!("byte cap exceeded: {} > {}", self.bytes, self.max_bytes));
+        }
+        Ok(())
+    }
+}
+
+static SHARED: Mutex<OverflowPool> =
+    Mutex::new(OverflowPool::new(SHARED_MAX_POOLED, MAX_POOLED_BYTES));
 
 /// Count bound for [`SHARED`]: it aggregates every worker's flushed pool,
 /// so it gets more headroom than a single thread-local pool.
 const SHARED_MAX_POOLED: usize = 4 * MAX_POOLED;
 
-fn shared(guarded: &Mutex<SharedPool>) -> std::sync::MutexGuard<'_, SharedPool> {
+fn shared(guarded: &Mutex<OverflowPool>) -> std::sync::MutexGuard<'_, OverflowPool> {
     // a worker panicking mid-recycle poisons nothing worse than a buffer
     // list; keep serving the surviving threads
     guarded.lock().unwrap_or_else(|e| e.into_inner())
@@ -137,10 +206,7 @@ fn shared_take(n: usize) -> Option<Vec<f32>> {
     if !DRAW_SHARED.with(|c| c.get()) {
         return None;
     }
-    let mut sh = shared(&SHARED);
-    let b = best_fit(&mut sh.free, n)?;
-    sh.bytes -= b.capacity() * 4;
-    Some(b)
+    shared(&SHARED).take(n)
 }
 
 /// Return a raw buffer directly to the shared pool (the coordinator
@@ -149,12 +215,7 @@ pub fn recycle_buf_shared(buf: Vec<f32>) {
     if !enabled() || buf.capacity() == 0 {
         return;
     }
-    let bytes = buf.capacity() * 4;
-    let mut sh = shared(&SHARED);
-    if sh.free.len() < SHARED_MAX_POOLED && sh.bytes + bytes <= MAX_POOLED_BYTES {
-        sh.bytes += bytes;
-        sh.free.push(buf);
-    }
+    shared(&SHARED).put(buf);
 }
 
 /// Recycle every f32 tensor of a dead store into the *shared* pool (the
@@ -181,12 +242,8 @@ pub fn flush_to_shared() {
         }
         let mut sh = shared(&SHARED);
         while let Some(b) = pool.free.pop() {
-            let bytes = b.capacity() * 4;
-            pool.bytes -= bytes;
-            if sh.free.len() < SHARED_MAX_POOLED && sh.bytes + bytes <= MAX_POOLED_BYTES {
-                sh.bytes += bytes;
-                sh.free.push(b);
-            }
+            pool.bytes -= b.capacity() * 4;
+            sh.put(b);
         }
     });
 }
@@ -194,20 +251,19 @@ pub fn flush_to_shared() {
 /// (buffer count, pooled bytes) of the shared overflow pool — diagnostics.
 pub fn shared_stats() -> (usize, usize) {
     let sh = shared(&SHARED);
-    (sh.free.len(), sh.bytes)
+    (sh.len(), sh.bytes())
 }
 
 /// Drop every buffer in the shared overflow pool (tests; memory pressure).
 pub fn clear_shared() {
-    let mut sh = shared(&SHARED);
-    sh.free.clear();
-    sh.bytes = 0;
+    shared(&SHARED).clear();
 }
 
-/// Pool enabled unless `LIGO_ARENA=0` (read once per process).
+/// Pool enabled unless `LIGO_ARENA=0` (knob registry; read once per
+/// process).
 pub fn enabled() -> bool {
     static ENABLED: OnceLock<bool> = OnceLock::new();
-    *ENABLED.get_or_init(|| !matches!(std::env::var("LIGO_ARENA").as_deref(), Ok("0")))
+    *ENABLED.get_or_init(|| !crate::util::knobs::flag_disabled("LIGO_ARENA"))
 }
 
 /// A zeroed f32 buffer of length `n`: best-fit reuse from the pool when
@@ -500,6 +556,26 @@ mod tests {
         assert_eq!(st.microbatches, 2);
         assert_eq!((st.fresh, st.reused), (1, 1));
         assert_eq!(st.peak_request, 48);
+    }
+
+    #[test]
+    fn overflow_pool_enforces_caps_and_accounting() {
+        let mut p = OverflowPool::new(2, 64);
+        assert!(p.put(Vec::with_capacity(4))); // 16 bytes
+        assert!(p.put(Vec::with_capacity(8))); // 48 bytes
+        assert!(!p.put(Vec::with_capacity(1)), "count cap must reject a third buffer");
+        p.check_invariants().unwrap();
+        let b = p.take(5).expect("8-cap buffer satisfies a 5-element request");
+        assert!(b.capacity() >= 5);
+        assert!(!p.put(Vec::with_capacity(16)), "byte cap: 16 + 64 > 64");
+        assert!(p.put(Vec::with_capacity(8)));
+        p.check_invariants().unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.bytes(), 48);
+        p.clear();
+        assert!(p.is_empty());
+        assert_eq!(p.bytes(), 0);
+        p.check_invariants().unwrap();
     }
 
     #[test]

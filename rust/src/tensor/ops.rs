@@ -267,7 +267,7 @@ pub fn fused_enabled() -> bool {
         2 => true,
         _ => {
             static FUSED: OnceLock<bool> = OnceLock::new();
-            *FUSED.get_or_init(|| !matches!(std::env::var("LIGO_FUSED").as_deref(), Ok("0")))
+            *FUSED.get_or_init(|| !crate::util::knobs::flag_disabled("LIGO_FUSED"))
         }
     }
 }
@@ -302,7 +302,7 @@ pub fn fused_xent_enabled() -> bool {
         2 => true,
         _ => {
             static FUSED: OnceLock<bool> = OnceLock::new();
-            *FUSED.get_or_init(|| !matches!(std::env::var("LIGO_FUSED_XENT").as_deref(), Ok("0")))
+            *FUSED.get_or_init(|| !crate::util::knobs::flag_disabled("LIGO_FUSED_XENT"))
         }
     }
 }
@@ -454,6 +454,7 @@ pub fn linear_fused(
 
 /// The n x n identity matrix (width-expansion fallback when dims match).
 pub fn eye(n: usize) -> Tensor {
+    // lint:allow(fresh_alloc) growth-time helper, off the training hot path
     let mut v = vec![0.0f32; n * n];
     for i in 0..n {
         v[i * n + i] = 1.0;
@@ -466,6 +467,7 @@ pub fn matvec(a: &Tensor, x: &Tensor) -> Tensor {
     let (m, n) = (a.shape[0], a.shape[1]);
     assert_eq!(numel(&x.shape), n);
     let (av, xv) = (a.f32s(), x.f32s());
+    // lint:allow(fresh_alloc) growth-time helper, off the training hot path
     let mut y = vec![0.0f32; m];
     for i in 0..m {
         y[i] = av[i * n..(i + 1) * n].iter().zip(xv).map(|(a, b)| a * b).sum();
@@ -555,7 +557,7 @@ pub fn layernorm_fwd(x: &Tensor, g: &Tensor, b: &Tensor) -> (Tensor, Vec<f32>) {
     assert_eq!(b.numel(), d, "layernorm bias dim");
     let (xv, gv, bv) = (x.f32s(), g.f32s(), b.f32s());
     let mut y = arena::alloc_zeroed(n * d);
-    let mut stats = vec![0.0f32; n * 2];
+    let mut stats = arena::alloc_zeroed(n * 2);
     let kernel = |row0: usize, yc: &mut [f32], sc: &mut [f32]| {
         for (r, yrow) in yc.chunks_exact_mut(d).enumerate() {
             let xrow = &xv[(row0 + r) * d..(row0 + r + 1) * d];
@@ -614,8 +616,8 @@ pub fn layernorm_bwd(
     };
     run_rows(&mut dx, d, n * d, kernel);
     // dg/db are column reductions over all rows — O(n d), kept serial.
-    let mut dg = vec![0.0f32; d];
-    let mut db = vec![0.0f32; d];
+    let mut dg = arena::alloc_zeroed(d);
+    let mut db = arena::alloc_zeroed(d);
     for i in 0..n {
         let (mean, rstd) = (stats[i * 2], stats[i * 2 + 1]);
         for j in 0..d {
@@ -1388,6 +1390,7 @@ pub fn lm_head_argmax(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Vec<usize> 
     if let Some(bb) = b {
         assert_eq!(bb.numel(), v, "lm_head_argmax bias dim");
     }
+    // lint:allow(fresh_alloc) usize result buffer — the pool is f32-only
     let mut best = vec![0usize; n];
     if n == 0 || v == 0 {
         return best;

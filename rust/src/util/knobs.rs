@@ -1,0 +1,245 @@
+//! The central `LIGO_*` environment-knob registry.
+//!
+//! Every environment variable the crate reads is declared once in
+//! [`REGISTRY`] and parsed through the typed accessors here — the
+//! `rust/analyze` lint pass rejects any `env::var("LIGO_…")` read outside
+//! this module, and cross-checks that every registry row has a matching
+//! knob row in `EXPERIMENTS.md`. `ligo inspect knobs` prints the registry
+//! with each knob's current process value.
+//!
+//! Mis-parses are never silent: a knob set to a value its type cannot
+//! parse emits a one-time `util/logging` warning naming the knob and the
+//! rejected value, then behaves as if the knob were unset. (Before this
+//! module, a typo'd `LIGO_WORKERS=two` silently fell back to the serial
+//! step loop.)
+
+use std::collections::BTreeSet;
+use std::sync::{Mutex, OnceLock};
+
+use crate::log_warn;
+
+/// One registered environment knob: the name, a human-readable type and
+/// default, and a one-line description (kept in sync with the
+/// `EXPERIMENTS.md` knob table by the `rust/analyze` lint).
+pub struct Knob {
+    pub name: &'static str,
+    pub ty: &'static str,
+    pub default: &'static str,
+    pub doc: &'static str,
+}
+
+/// Every `LIGO_*` knob the crate reads, in one place.
+pub const REGISTRY: &[Knob] = &[
+    Knob {
+        name: "LIGO_THREADS",
+        ty: "usize >= 1",
+        default: "available cores",
+        doc: "worker threads for the parallel tensor kernels (1 = strictly serial)",
+    },
+    Knob {
+        name: "LIGO_WORKERS",
+        ty: "usize >= 1",
+        default: "unset (serial step loop)",
+        doc: "sharded data-parallel trainer: microbatch workers per optimizer step",
+    },
+    Knob {
+        name: "LIGO_FUSED",
+        ty: "flag (0 disables)",
+        default: "fused on",
+        doc: "0 lowers linear+bias(+GELU) back to the unfused node chain (A/B runs)",
+    },
+    Knob {
+        name: "LIGO_FUSED_XENT",
+        ty: "flag (0 disables)",
+        default: "fused on",
+        doc: "0 lowers the streaming LM head back to materialized linear+masked_xent",
+    },
+    Knob {
+        name: "LIGO_ARENA",
+        ty: "flag (0 disables)",
+        default: "arena on",
+        doc: "0 disables the activation/gradient buffer recycling pool",
+    },
+    Knob {
+        name: "LIGO_LOG",
+        ty: "debug|info|warn|error",
+        default: "info",
+        doc: "stderr log threshold",
+    },
+    Knob {
+        name: "LIGO_ARTIFACTS",
+        ty: "path",
+        default: "artifacts",
+        doc: "artifacts directory (manifests, HLO, goldens, registry overrides)",
+    },
+    Knob {
+        name: "LIGO_PROP_SEED",
+        ty: "u64",
+        default: "unset (seed sweep)",
+        doc: "replay one property-test seed instead of the seeded sweep",
+    },
+    Knob {
+        name: "LIGO_BENCH_FAST",
+        ty: "flag (set skips)",
+        default: "unset",
+        doc: "growth_ops bench: skip the unfused ligo A/B line (CI calibration runs)",
+    },
+    Knob {
+        name: "LIGO_BENCH_IDS",
+        ty: "comma list",
+        default: "all experiments",
+        doc: "paper_tables bench: restrict the experiment id set (CI time budgets)",
+    },
+    Knob {
+        name: "LIGO_BENCH_WORKERS_ONLY",
+        ty: "flag (1 enables)",
+        default: "unset",
+        doc: "train_step bench: run only the worker-scaling section (CI workers gate)",
+    },
+    Knob {
+        name: "LIGO_GROWTH_OPS_BUDGET_S",
+        ty: "f64 seconds",
+        default: "unset (no gate)",
+        doc: "growth_ops bench: fail when the ligo_task_native mean exceeds the budget",
+    },
+];
+
+/// Look a knob up in [`REGISTRY`] (e.g. for doc rendering).
+pub fn find(name: &str) -> Option<&'static Knob> {
+    REGISTRY.iter().find(|k| k.name == name)
+}
+
+/// The raw current value of a knob: the one sanctioned `env::var` read.
+/// Non-unicode values are treated as unset.
+pub fn raw(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+fn warned() -> &'static Mutex<BTreeSet<String>> {
+    static WARNED: OnceLock<Mutex<BTreeSet<String>>> = OnceLock::new();
+    WARNED.get_or_init(|| Mutex::new(BTreeSet::new()))
+}
+
+/// Warn about a rejected knob value, once per knob per process (a knob read
+/// in a hot path or from many worker threads must not spam stderr).
+pub fn warn_rejected(name: &str, value: &str, expected: &str) {
+    let mut seen = warned().lock().unwrap_or_else(|p| p.into_inner());
+    if seen.insert(name.to_string()) {
+        log_warn!("ignoring {name}={value:?}: expected {expected}");
+    }
+}
+
+/// `usize` knob: `None` when unset; a set-but-unparsable value warns once
+/// and reads as unset.
+pub fn usize_env(name: &str) -> Option<usize> {
+    let v = raw(name)?;
+    match v.parse::<usize>() {
+        Ok(n) => Some(n),
+        Err(_) => {
+            warn_rejected(name, &v, "an unsigned integer");
+            None
+        }
+    }
+}
+
+/// `u64` knob: same contract as [`usize_env`].
+pub fn u64_env(name: &str) -> Option<u64> {
+    let v = raw(name)?;
+    match v.parse::<u64>() {
+        Ok(n) => Some(n),
+        Err(_) => {
+            warn_rejected(name, &v, "a u64");
+            None
+        }
+    }
+}
+
+/// `f64` knob: same contract as [`usize_env`].
+pub fn f64_env(name: &str) -> Option<f64> {
+    let v = raw(name)?;
+    match v.parse::<f64>() {
+        Ok(n) => Some(n),
+        Err(_) => {
+            warn_rejected(name, &v, "a number (seconds)");
+            None
+        }
+    }
+}
+
+/// Disable-flag knob (`LIGO_FUSED` family): `true` only when set to `"0"`.
+/// Values other than `0`/`1` warn once (the caller almost certainly meant
+/// to disable) and keep the default-on behavior.
+pub fn flag_disabled(name: &str) -> bool {
+    match raw(name).as_deref() {
+        Some("0") => true,
+        None | Some("1") => false,
+        Some(other) => {
+            warn_rejected(name, other, "0 (disable) or 1");
+            false
+        }
+    }
+}
+
+/// Enable-flag knob (`LIGO_BENCH_WORKERS_ONLY`): `true` only when `"1"`.
+pub fn flag_enabled(name: &str) -> bool {
+    raw(name).as_deref() == Some("1")
+}
+
+/// Presence knob (`LIGO_BENCH_FAST`): `true` when set to anything.
+pub fn is_set(name: &str) -> bool {
+    raw(name).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_prefixed_and_documented() {
+        let mut seen = BTreeSet::new();
+        for k in REGISTRY {
+            assert!(k.name.starts_with("LIGO_"), "{} must be LIGO_-prefixed", k.name);
+            assert!(seen.insert(k.name), "duplicate registry row {}", k.name);
+            assert!(!k.doc.is_empty() && !k.ty.is_empty() && !k.default.is_empty());
+        }
+        assert!(find("LIGO_THREADS").is_some());
+        assert!(find("LIGO_NO_SUCH_KNOB").is_none());
+    }
+
+    #[test]
+    fn typed_accessors_parse_and_reject() {
+        // names outside the registry so this test cannot race the knobs
+        // other tests (or the harness) read; accessors don't require rows
+        std::env::set_var("LIGO_TEST_USIZE", "7");
+        assert_eq!(usize_env("LIGO_TEST_USIZE"), Some(7));
+        std::env::set_var("LIGO_TEST_USIZE", "seven");
+        assert_eq!(usize_env("LIGO_TEST_USIZE"), None);
+        assert_eq!(usize_env("LIGO_TEST_UNSET_NEVER"), None);
+
+        std::env::set_var("LIGO_TEST_F64", "1.25");
+        assert_eq!(f64_env("LIGO_TEST_F64"), Some(1.25));
+        std::env::set_var("LIGO_TEST_U64", "12");
+        assert_eq!(u64_env("LIGO_TEST_U64"), Some(12));
+
+        std::env::set_var("LIGO_TEST_FLAG", "0");
+        assert!(flag_disabled("LIGO_TEST_FLAG"));
+        std::env::set_var("LIGO_TEST_FLAG", "1");
+        assert!(!flag_disabled("LIGO_TEST_FLAG"));
+        std::env::set_var("LIGO_TEST_FLAG", "off");
+        assert!(!flag_disabled("LIGO_TEST_FLAG")); // warns once, stays on
+        assert!(!flag_enabled("LIGO_TEST_FLAG"));
+        std::env::set_var("LIGO_TEST_FLAG", "1");
+        assert!(flag_enabled("LIGO_TEST_FLAG"));
+        assert!(is_set("LIGO_TEST_FLAG"));
+    }
+
+    #[test]
+    fn rejected_values_warn_exactly_once() {
+        let already = warned().lock().unwrap().contains("LIGO_TEST_ONCE");
+        assert!(!already, "unique test knob must start unwarned");
+        warn_rejected("LIGO_TEST_ONCE", "x", "a number");
+        warn_rejected("LIGO_TEST_ONCE", "y", "a number");
+        let seen = warned().lock().unwrap();
+        assert!(seen.contains("LIGO_TEST_ONCE"));
+    }
+}

@@ -12,13 +12,19 @@ pub enum Level {
 
 static THRESHOLD: AtomicU8 = AtomicU8::new(1);
 
-/// Initialize the threshold from the LIGO_LOG env var (debug|info|warn|error).
+/// Initialize the threshold from the LIGO_LOG knob (debug|info|warn|error).
+/// An unrecognized level warns once (via the knobs registry) and keeps the
+/// `info` default.
 pub fn init_from_env() {
-    let lvl = match std::env::var("LIGO_LOG").as_deref() {
-        Ok("debug") => 0,
-        Ok("warn") => 2,
-        Ok("error") => 3,
-        _ => 1,
+    let lvl = match super::knobs::raw("LIGO_LOG").as_deref() {
+        Some("debug") => 0,
+        Some("info") | None => 1,
+        Some("warn") => 2,
+        Some("error") => 3,
+        Some(other) => {
+            super::knobs::warn_rejected("LIGO_LOG", other, "debug|info|warn|error");
+            1
+        }
     };
     THRESHOLD.store(lvl, Ordering::Relaxed);
 }

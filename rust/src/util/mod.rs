@@ -10,6 +10,7 @@ pub mod allreduce;
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod knobs;
 pub mod logging;
 pub mod par;
 pub mod prop;

@@ -16,18 +16,17 @@ thread_local! {
 }
 
 /// Worker count: this thread's budget override when set
-/// ([`set_thread_budget`]), else `LIGO_THREADS`, else
-/// `available_parallelism`.
+/// ([`set_thread_budget`]), else `LIGO_THREADS` (via the
+/// [`crate::util::knobs`] registry — a non-numeric value warns once and
+/// falls back), else `available_parallelism`.
 pub fn threads() -> usize {
     if let Some(n) = BUDGET.with(|c| c.get()) {
         return n.max(1);
     }
     static THREADS: OnceLock<usize> = OnceLock::new();
     *THREADS.get_or_init(|| {
-        if let Ok(v) = std::env::var("LIGO_THREADS") {
-            if let Ok(n) = v.parse::<usize>() {
-                return n.max(1);
-            }
+        if let Some(n) = super::knobs::usize_env("LIGO_THREADS") {
+            return n.max(1);
         }
         std::thread::available_parallelism()
             .map(NonZeroUsize::get)

@@ -31,10 +31,10 @@ impl Gen {
 }
 
 /// Run `cases` random cases of a property. Panics (with the seed) on the
-/// first failure. Set LIGO_PROP_SEED to replay one specific seed.
+/// first failure. Set LIGO_PROP_SEED to replay one specific seed (a
+/// non-u64 value warns once via the knobs registry and runs the sweep).
 pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut prop: F) {
-    if let Ok(seed) = std::env::var("LIGO_PROP_SEED") {
-        let seed: u64 = seed.parse().expect("LIGO_PROP_SEED must be u64");
+    if let Some(seed) = super::knobs::u64_env("LIGO_PROP_SEED") {
         let mut g = Gen { rng: Rng::new(seed), seed };
         prop(&mut g);
         return;

@@ -1,0 +1,153 @@
+//! Acceptance tests for the static-analysis subsystem (`ligo analyze`):
+//! every builtin preset, every registry growth pair × operator and every
+//! plan stage must verify *symbolically* — correct shapes proven, FLOPs
+//! and peak-arena bytes estimated — while malformed configs and plans die
+//! with typed diagnostics naming the offending stage and node. Throughout,
+//! the arena's thread-local fresh-allocation counter proves no kernel ever
+//! ran (the counters are per-thread and each #[test] runs on its own
+//! thread, so the probes don't race each other).
+
+use std::time::Instant;
+
+use ligo::config::Registry;
+use ligo::coordinator::plan::GrowthPlan;
+use ligo::growth::{self, verify};
+use ligo::model::shape;
+use ligo::tensor::arena;
+
+/// No kernel buffer was requested on this thread since `reset_stats`.
+fn assert_no_kernel_allocs(what: &str) {
+    if arena::enabled() {
+        assert_eq!(arena::stats().0, 0, "{what} must not allocate kernel buffers");
+        assert_eq!(arena::peak_request(), 0, "{what} must not request kernel buffers");
+    }
+}
+
+#[test]
+fn every_builtin_preset_replays_symbolically_with_zero_kernels() {
+    arena::reset_stats();
+    let reg = Registry::builtin();
+    assert_eq!(reg.models.len(), 16, "preset inventory drifted");
+    for (name, cfg) in &reg.models {
+        let s = shape::summarize(cfg).unwrap_or_else(|e| panic!("preset {name}: {e:#}"));
+        assert!(s.node_count() > 0, "{name}");
+        assert!(s.params > 0, "{name}");
+        assert!(s.fwd_flops > 0.0 && s.bwd_flops > s.fwd_flops, "{name}");
+        assert!(s.peak_bytes > 0, "{name}");
+        // the engine's own param inventory is the cross-check
+        assert_eq!(s.params, reg.param_counts[name], "{name}");
+    }
+    assert_no_kernel_allocs("preset replay");
+}
+
+#[test]
+fn every_registry_pair_verifies_under_every_operator() {
+    arena::reset_stats();
+    let t0 = Instant::now();
+    let reg = Registry::builtin();
+    let (mut ok, mut lemon_miss) = (0usize, 0usize);
+    for (s, t) in &reg.pairs {
+        let from = reg.model(s).unwrap();
+        let to = reg.model(t).unwrap();
+        for op in growth::KNOWN {
+            match verify::verify_pair(op, from, to) {
+                Ok(pv) => {
+                    ok += 1;
+                    assert!(pv.large.params > pv.small.params, "{s} -> {t} via {op}");
+                    assert!(pv.large.fwd_flops > pv.small.fwd_flops, "{s} -> {t} via {op}");
+                }
+                Err(e) => {
+                    // only LEMON constrains the pair shape; everything else
+                    // must verify every paper pair
+                    assert_eq!(op, "lemon", "{s} -> {t} via {op}: {e:#}");
+                    lemon_miss += 1;
+                    let msg = e.to_string();
+                    assert!(msg.contains("lemon"), "{msg}");
+                    assert!(msg.contains("operator regime"), "{msg}");
+                }
+            }
+        }
+    }
+    assert_eq!(ok + lemon_miss, reg.pairs.len() * growth::KNOWN.len());
+    assert!(lemon_miss > 0, "some paper pairs sit outside LEMON's exact regime");
+    assert!(
+        ok >= reg.pairs.len() * (growth::KNOWN.len() - 1),
+        "only lemon may reject a registry pair (ok {ok}, misses {lemon_miss})"
+    );
+    assert_no_kernel_allocs("pair sweep");
+    // the acceptance budget is <5s for the whole CLI sweep in release;
+    // the in-test bound is generous for debug builds and loaded runners
+    assert!(t0.elapsed().as_secs() < 30, "symbolic sweep took {:?}", t0.elapsed());
+}
+
+#[test]
+fn malformed_plans_fail_statically_with_typed_diagnostics() {
+    arena::reset_stats();
+    let reg = Registry::builtin();
+    let small = reg.model("bert_small").unwrap().clone();
+    let base = reg.model("bert_base").unwrap().clone();
+
+    // non-growing target
+    let err = GrowthPlan::builder(&small)
+        .grow_at(5, &small, "stackbert")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("not larger"), "{err}");
+    assert!(err.contains("growth plan stage 0"), "{err}");
+
+    // depth/width shrink
+    let err = GrowthPlan::builder(&base)
+        .grow_at(5, &small, "net2net")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("shrink"), "{err}");
+
+    // odd head split: the symbolic attention node cannot divide 72 by 5
+    let mut odd = base.clone();
+    odd.name = "bert_oddheads".into();
+    odd.heads = 5;
+    let err = GrowthPlan::builder(&small)
+        .grow_at(5, &odd, "stackbert")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("divisible"), "{err}");
+    assert!(err.contains("attention"), "{err}");
+    assert!(err.contains("growth plan stage 0"), "{err}");
+
+    // operator regime: bert_small -> bert_base is not an integer width factor
+    let err = GrowthPlan::builder(&small)
+        .grow_at(5, &base, "lemon")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("integer factor"), "{err}");
+
+    assert_no_kernel_allocs("plan rejection");
+}
+
+#[test]
+fn valid_plans_expose_per_stage_summaries() {
+    arena::reset_stats();
+    let reg = Registry::builtin();
+    let small = reg.model("bert_small").unwrap().clone();
+    let mid = reg.model("bert_d6w48").unwrap().clone();
+    let large = reg.model("bert_base").unwrap().clone();
+    let plan = GrowthPlan::builder(&small)
+        .grow_at(10, &mid, "stackbert")
+        .grow_at(20, &large, "ligo")
+        .build()
+        .unwrap();
+    let stages = verify::verify_plan(&plan).unwrap();
+    assert_eq!(stages.len(), 2);
+    assert_eq!(stages[0].small.name, "bert_small");
+    assert_eq!(stages[0].large.name, "bert_d6w48");
+    assert_eq!(stages[1].large.name, "bert_base");
+    // the chain is monotone in cost at every stage boundary
+    assert!(stages[0].large.params > stages[0].small.params);
+    assert!(stages[1].large.peak_bytes > stages[1].small.peak_bytes);
+    assert!(stages[1].peak_ratio() > 1.0);
+    assert_no_kernel_allocs("plan verification");
+}

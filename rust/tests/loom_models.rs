@@ -1,0 +1,133 @@
+//! Concurrency model tests, compiled only under `RUSTFLAGS="--cfg loom"`
+//! (the `loom` CI job):
+//!
+//! ```sh
+//! RUSTFLAGS="--cfg loom" cargo test --test loom_models
+//! ```
+//!
+//! The two shared-state protocols the crate actually runs across threads
+//! are driven here through `loom`'s instrumented `sync`/`thread`:
+//!
+//! * the **shared arena overflow pool** — `tensor/arena.rs`'s
+//!   [`OverflowPool`] is deliberately lock-agnostic so this test can wrap
+//!   *the exact production logic* in `loom::sync::Mutex` and assert its
+//!   accounting invariants hold on every explored interleaving;
+//! * the **stride-doubling all-reduce** — `util/allreduce.rs`'s tree has a
+//!   shape that depends only on the leaf count, so gradient leaves landing
+//!   in any thread-completion order must reduce bit-identically.
+//!
+//! The vendored `vendor/loom` stub re-runs each model as a stress loop;
+//! patch the real loom over it for exhaustive interleaving coverage.
+
+#![cfg(loom)]
+
+use loom::sync::{Arc, Mutex};
+use loom::thread;
+
+use ligo::tensor::arena::OverflowPool;
+use ligo::util::allreduce::tree_sum_f32;
+
+/// Two threads hammer put/take on one shared pool; the byte accounting and
+/// both caps must hold at every quiescent point.
+#[test]
+fn overflow_pool_accounting_survives_concurrent_put_take() {
+    loom::model(|| {
+        // tiny caps so the interleavings actually exercise the reject path
+        let pool = Arc::new(Mutex::new(OverflowPool::new(2, 4 * 64)));
+        let mut handles = Vec::new();
+        for t in 0..2usize {
+            let p = Arc::clone(&pool);
+            handles.push(thread::spawn(move || {
+                // offer a buffer, maybe reclaim one, offer again
+                let buf = Vec::with_capacity(16 + t);
+                let _ = p.lock().unwrap().put(buf);
+                thread::yield_now();
+                // bind before the if-let: in edition 2021 a guard temporary
+                // in the scrutinee would stay locked across the body
+                let taken = p.lock().unwrap().take(8);
+                if let Some(b) = taken {
+                    assert!(b.capacity() >= 8);
+                    let _ = p.lock().unwrap().put(b);
+                }
+                let g = p.lock().unwrap();
+                g.check_invariants().unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let g = pool.lock().unwrap();
+        g.check_invariants().unwrap();
+        // nothing leaked past the caps: at most 2 pooled buffers
+        assert!(g.len() <= 2);
+    });
+}
+
+/// A full pool must reject offers without corrupting the accounting, and
+/// `clear` must zero it under contention.
+#[test]
+fn overflow_pool_caps_hold_under_contention() {
+    loom::model(|| {
+        let pool = Arc::new(Mutex::new(OverflowPool::new(1, 4 * 8)));
+        let a = {
+            let p = Arc::clone(&pool);
+            thread::spawn(move || {
+                let accepted = p.lock().unwrap().put(Vec::with_capacity(8));
+                thread::yield_now();
+                let over_cap = p.lock().unwrap().put(Vec::with_capacity(64));
+                assert!(!over_cap, "a 64-cap buffer can never fit a 32-byte pool");
+                accepted
+            })
+        };
+        let b = {
+            let p = Arc::clone(&pool);
+            thread::spawn(move || {
+                let accepted = p.lock().unwrap().put(Vec::with_capacity(8));
+                thread::yield_now();
+                p.lock().unwrap().check_invariants().unwrap();
+                accepted
+            })
+        };
+        let (ra, rb) = (a.join().unwrap(), b.join().unwrap());
+        let mut g = pool.lock().unwrap();
+        g.check_invariants().unwrap();
+        // count cap is 1: at most one of the two 8-cap offers landed
+        assert_eq!(g.len(), usize::from(ra) + usize::from(rb));
+        assert!(g.len() <= 1);
+        g.clear();
+        assert!(g.is_empty());
+        assert_eq!(g.bytes(), 0);
+        g.check_invariants().unwrap();
+    });
+}
+
+/// Worker threads deliver per-microbatch losses in whatever order the
+/// scheduler picks; slotting them by index and reducing through the
+/// canonical tree must be bit-identical to the serial reduction.
+#[test]
+fn tree_reduce_is_bit_identical_across_thread_orders() {
+    // order-sensitive values: a different association changes the last
+    // bits (3 leaves keeps the model within loom's 4-thread budget)
+    const VALS: [f32; 3] = [1.0e8, 1.0, -3.0e7];
+    let serial = tree_sum_f32(&VALS);
+    loom::model(move || {
+        let slots = Arc::new(Mutex::new([0f32; VALS.len()]));
+        let mut handles = Vec::new();
+        for (i, v) in VALS.iter().copied().enumerate() {
+            let s = Arc::clone(&slots);
+            handles.push(thread::spawn(move || {
+                thread::yield_now();
+                s.lock().unwrap()[i] = v;
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let got = tree_sum_f32(&*slots.lock().unwrap());
+        assert_eq!(
+            got.to_bits(),
+            serial.to_bits(),
+            "completion order leaked into the reduction"
+        );
+    });
+}
