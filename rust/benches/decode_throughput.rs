@@ -1,0 +1,78 @@
+//! Bench: `ligo serve` decode throughput (tokens/s) vs. concurrent
+//! sessions. The headline A/B is 4 sessions decoded one-at-a-time
+//! (`decode/sequential[s4]`, a max_sessions=1 scheduler draining the same
+//! queue) against the same 4 sessions through one batched step per tick
+//! (`decode/batched[s4]`) — continuous batching amortizes the weight
+//! stream and the LM-head transpose pack across the batch rows, which is
+//! the whole economic argument for the scheduler.
+//! `bench_baseline.py decode-gate` reads those two lines and requires the
+//! batched run to come in at >= 1.5x (self-calibrating against the
+//! sequential line of the same run; self-skipping below 4 CPUs). The
+//! scaling section records the EXPERIMENTS.md tokens/s-vs-sessions curve.
+
+use ligo::config::{ModelConfig, Registry};
+use ligo::coordinator::serve::{Request, Scheduler, ServeOptions};
+use ligo::model::decode::Decoder;
+use ligo::model::param_shapes;
+use ligo::tensor::store::Store;
+use ligo::util::bench::bench;
+use ligo::util::rng::Rng;
+
+/// Deterministic mixed-length request set: the same workload every
+/// iteration and on every host.
+fn requests(cfg: &ModelConfig, n: usize) -> Vec<Request> {
+    let mut rng = Rng::new(0xdec0de);
+    (0..n)
+        .map(|i| {
+            let max_new = (cfg.seq / 4).clamp(1, 12);
+            let plen = (8 + (i * 5) % 9).min(cfg.seq - max_new).max(1);
+            Request {
+                id: i as u64,
+                prompt: (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect(),
+                max_new,
+                top_k: 8,
+                top_p: 0.95,
+                seed: 42 + i as u64,
+            }
+        })
+        .collect()
+}
+
+/// Drain `reqs` through a scheduler with the given concurrency; returns
+/// the tokens sampled (constant across iterations — asserted).
+fn run_workload(dec: &Decoder<'_>, max_sessions: usize, reqs: &[Request]) -> u64 {
+    let mut sched = Scheduler::new(dec, ServeOptions { max_sessions, page_tokens: 16 });
+    for r in reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    sched.run().unwrap();
+    assert_eq!(sched.pool().live(), 0, "bench workload leaked pages");
+    sched.stats().0
+}
+
+fn main() {
+    let reg = Registry::builtin();
+    let cfg = reg.model("gpt_medium").unwrap().clone();
+    let params = Store::det_init(&param_shapes(&cfg), 0);
+    let dec = Decoder::new(&cfg, &params).unwrap();
+
+    println!("== decode_throughput: batched vs sequential ({}, 4 sessions) ==", cfg.name);
+    let reqs = requests(&cfg, 4);
+    let tokens: usize = reqs.iter().map(|r| r.max_new).sum();
+    for (label, sessions) in [("sequential", 1usize), ("batched", 4)] {
+        let s = bench(&format!("decode/{label}[s4]"), 2, 10, || {
+            let got = run_workload(&dec, sessions, &reqs);
+            assert_eq!(got, tokens as u64);
+            got
+        });
+        println!("{:<44} {:>10}  {:>12.0} tok/s", "", "", tokens as f64 / s.mean_s);
+    }
+
+    println!("\n== decode_throughput: tokens/s vs concurrent sessions ==");
+    for n in [1usize, 2, 4, 8] {
+        let reqs = requests(&cfg, n);
+        let tokens: usize = reqs.iter().map(|r| r.max_new).sum();
+        let s = bench(&format!("decode/scaling[s{n}]"), 1, 5, || run_workload(&dec, n, &reqs));
+        println!("{:<44} {:>10}  {:>12.0} tok/s", "", "", tokens as f64 / s.mean_s);
+    }
+}

@@ -35,6 +35,15 @@ workers-gate FILE [FACTOR]
     hosts with fewer than 4 CPUs, where two workers each fanning out
     kernel threads cannot hit the factor. Exits non-zero on violation.
 
+decode-gate FILE [FACTOR]
+    Self-calibrating continuous-batching gate: the mean of
+    `decode/batched[s4]` in FILE (a captured `cargo bench --bench
+    decode_throughput` output) must come in under the mean of
+    `decode/sequential[s4]` / FACTOR (default 1.5) — decoding 4 sessions
+    through one batched step must beat decoding them one at a time, or
+    the serve scheduler has lost its reason to exist. Skips (exit 0) on
+    hosts with fewer than 4 CPUs. Exits non-zero on violation.
+
 record
     Run the full protocol on this host (requires cargo): serial growth_ops,
     parallel growth_ops, quickstart wall-clock; append the resulting rows
@@ -61,6 +70,8 @@ LMHEAD_FUSED = "lm_head/xent_fused"
 LMHEAD_UNFUSED = "lm_head/xent_unfused"
 WORKERS_1 = "bert_base/train_step[workers1]"
 WORKERS_2 = "bert_base/train_step[workers2]"
+DECODE_SEQ = "decode/sequential[s4]"
+DECODE_BATCH = "decode/batched[s4]"
 
 UNIT = {"ns": 1e-9, "µs": 1e-6, "us": 1e-6, "ms": 1e-3, "s": 1.0}
 LINE_RE = re.compile(
@@ -152,6 +163,26 @@ def cmd_workers_gate(path, factor=1.3):
     )
 
 
+def cmd_decode_gate(path, factor=1.5):
+    cores = os.cpu_count() or 1
+    if cores < 4:
+        print(f"decode gate skipped: only {cores} CPUs (need >= 4)")
+        return
+    stats = parse(path)
+    sequential = require(stats, DECODE_SEQ, path)[0]
+    batched = require(stats, DECODE_BATCH, path)[0]
+    if batched > sequential / factor:
+        sys.exit(
+            f"REGRESSION: 4-session batched decode mean {batched:.4f}s > "
+            f"sequential {sequential:.4f}s / {factor} "
+            f"(speedup {sequential / batched:.2f}x)"
+        )
+    print(
+        f"decode gate ok: batched {batched:.4f}s <= sequential {sequential:.4f}s "
+        f"/ {factor} ({sequential / batched:.2f}x speedup)"
+    )
+
+
 def cmd_record():
     host = f"{os.uname().nodename} ({os.cpu_count()} cores)"
     print(f"== recording bench baseline for {host} ==")
@@ -208,6 +239,9 @@ def main():
     elif cmd == "workers-gate":
         factor = float(sys.argv[3]) if len(sys.argv) > 3 else 1.3
         cmd_workers_gate(sys.argv[2], factor)
+    elif cmd == "decode-gate":
+        factor = float(sys.argv[3]) if len(sys.argv) > 3 else 1.5
+        cmd_decode_gate(sys.argv[2], factor)
     elif cmd == "record":
         cmd_record()
     else:

@@ -15,6 +15,9 @@
 //! * [`plan`] — builder-validated multi-stage growth schedules (2-stage
 //!   LiGO, progressive stacking)
 //! * [`strategies`] — layer dropping / token dropping / staged training (Fig. 5)
+//! * [`serve`] — the `ligo serve` continuous-batching decode scheduler:
+//!   paged KV sessions multiplexed through one batched decode step, with
+//!   interleaving-invariant per-session token streams
 
 pub mod flops;
 pub mod growth_manager;
@@ -22,5 +25,6 @@ pub mod metrics;
 pub mod optim;
 pub mod parallel;
 pub mod plan;
+pub mod serve;
 pub mod strategies;
 pub mod trainer;

@@ -1,0 +1,443 @@
+//! Continuous-batching decode scheduler behind `ligo serve`.
+//!
+//! Many concurrent sessions are multiplexed through **one** batched
+//! [`Decoder::decode_step`] per tick: new requests are admitted (prefill +
+//! first sampled token) whenever a slot frees up, finished sessions are
+//! evicted the step they complete, and every session keeps its own
+//! sampling state (a seeded [`Rng`] driving [`ops::lm_head_sample`]'s
+//! top-k/top-p draw). Because the decode kernels are batch-invariant and
+//! the sampler's randomness is per-session, **any** admission/eviction
+//! interleaving yields exactly the token stream each session would produce
+//! alone — asserted by [`Scheduler::self_test`] (the CI
+//! `ligo serve --self-test` command) and `tests/decode_parity.rs`.
+//!
+//! Memory discipline matches the trainer's: K/V pages come from one
+//! [`PagePool`] (evicted sessions recycle their pages to the next admit)
+//! and activations from the arena, so a warm serve loop performs zero
+//! fresh allocations.
+
+use std::collections::VecDeque;
+
+use crate::bail;
+use crate::config::ModelConfig;
+use crate::error::Result;
+use crate::model::decode::{Decoder, KvCache, StepInput};
+use crate::model::ParamView;
+use crate::tensor::arena;
+use crate::tensor::ops::{self, SampleSpec};
+use crate::tensor::paged::PagePool;
+use crate::tensor::Tensor;
+use crate::util::knobs;
+use crate::util::rng::Rng;
+
+/// Scheduler shape knobs (`LIGO_DECODE_*`).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Max concurrent sessions per batched step.
+    pub max_sessions: usize,
+    /// Tokens per KV page (per layer, per K/V side).
+    pub page_tokens: usize,
+}
+
+impl ServeOptions {
+    pub fn from_env() -> ServeOptions {
+        ServeOptions {
+            max_sessions: knobs::usize_env("LIGO_DECODE_SESSIONS").unwrap_or(4).max(1),
+            page_tokens: knobs::usize_env("LIGO_DECODE_PAGE").unwrap_or(16).max(1),
+        }
+    }
+}
+
+/// One generation request. `seed` fully determines the sampling draws, so
+/// a request replayed through any scheduler produces the same stream.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// Tokens to generate (>= 1).
+    pub max_new: usize,
+    pub top_k: usize,
+    pub top_p: f32,
+    pub seed: u64,
+}
+
+/// A finished session: the generated tokens (prompt excluded).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+}
+
+struct Session {
+    id: u64,
+    prompt_len: usize,
+    max_new: usize,
+    top_k: usize,
+    top_p: f32,
+    rng: Rng,
+    /// Generated tokens so far; the last one is the next step's feed.
+    generated: Vec<i32>,
+}
+
+impl Session {
+    fn done(&self) -> bool {
+        self.generated.len() >= self.max_new
+    }
+}
+
+/// The continuous-batching scheduler: one decoder, one page pool, a FIFO
+/// of pending requests, and the parallel `active`/`caches` session lists.
+pub struct Scheduler<'a> {
+    dec: &'a Decoder<'a>,
+    opts: ServeOptions,
+    pool: PagePool,
+    queue: VecDeque<Request>,
+    active: Vec<Session>,
+    caches: Vec<KvCache>,
+    done: Vec<Completion>,
+    generated: u64,
+    steps: u64,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(dec: &'a Decoder<'a>, opts: ServeOptions) -> Scheduler<'a> {
+        let page_floats = opts.page_tokens * dec.cfg().dim;
+        Scheduler {
+            dec,
+            opts,
+            pool: PagePool::new(page_floats),
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            caches: Vec::new(),
+            done: Vec::new(),
+            generated: 0,
+            steps: 0,
+        }
+    }
+
+    /// Enqueue a request; validation happens here so `step` cannot fail on
+    /// malformed input mid-flight.
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        let cfg = self.dec.cfg();
+        if req.prompt.is_empty() {
+            bail!("request {}: empty prompt", req.id);
+        }
+        if req.max_new == 0 {
+            bail!("request {}: max_new must be >= 1", req.id);
+        }
+        if req.prompt.len() + req.max_new > cfg.seq {
+            bail!(
+                "request {}: prompt {} + max_new {} exceeds seq {}",
+                req.id,
+                req.prompt.len(),
+                req.max_new,
+                cfg.seq
+            );
+        }
+        if let Some(&bad) = req.prompt.iter().find(|&&t| t < 0 || t as usize >= cfg.vocab) {
+            bail!("request {}: token {bad} outside vocab {}", req.id, cfg.vocab);
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Total tokens sampled (first tokens + decode steps) and batched
+    /// steps run — the decode-throughput bench's numerator/denominator.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.generated, self.steps)
+    }
+
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    pub fn active_sessions(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain the finished sessions accumulated so far.
+    pub fn take_done(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Sample one token per row of `xf` through the streaming head and
+    /// recycle `xf`.
+    fn sample(&mut self, xf: Tensor, specs: &[SampleSpec]) -> Vec<i32> {
+        let (w, b) = self.dec.head();
+        let toks = ops::lm_head_sample(&xf, w, Some(b), specs);
+        arena::recycle(xf);
+        self.generated += toks.len() as u64;
+        toks.into_iter().map(|t| t as i32).collect()
+    }
+
+    fn admit(&mut self) -> Result<()> {
+        let cfg = self.dec.cfg();
+        while self.active.len() < self.opts.max_sessions {
+            let Some(req) = self.queue.pop_front() else { break };
+            let mut cache =
+                KvCache::new(cfg.layers, self.opts.page_tokens, cfg.dim, cfg.seq);
+            let xf = self.dec.prefill(&req.prompt, &mut cache, &mut self.pool)?;
+            // sample the first token from the last prompt row only
+            let d = cfg.dim;
+            let last = &xf.f32s()[(req.prompt.len() - 1) * d..req.prompt.len() * d];
+            let xrow = Tensor::from_f32(&[1, d], arena::alloc_copy(last));
+            arena::recycle(xf);
+            let mut sess = Session {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                max_new: req.max_new,
+                top_k: req.top_k,
+                top_p: req.top_p,
+                rng: Rng::new(req.seed),
+                generated: Vec::new(),
+            };
+            let spec = SampleSpec { top_k: sess.top_k, top_p: sess.top_p, u: sess.rng.next_f32() };
+            let first = self.sample(xrow, &[spec])[0];
+            sess.generated.push(first);
+            self.active.push(sess);
+            self.caches.push(cache);
+        }
+        Ok(())
+    }
+
+    fn evict_finished(&mut self) {
+        let mut s = 0;
+        while s < self.active.len() {
+            if self.active[s].done() {
+                let sess = self.active.swap_remove(s);
+                let mut cache = self.caches.swap_remove(s);
+                cache.release(&mut self.pool);
+                self.done.push(Completion {
+                    id: sess.id,
+                    prompt_len: sess.prompt_len,
+                    tokens: sess.generated,
+                });
+            } else {
+                s += 1;
+            }
+        }
+    }
+
+    /// One scheduler tick: admit into free slots, run one batched decode
+    /// step over every active session, evict the finished. Returns `false`
+    /// once both the queue and the active set are empty.
+    pub fn step(&mut self) -> Result<bool> {
+        self.admit()?;
+        self.evict_finished(); // max_new == 1 sessions finish at admit
+        if !self.active.is_empty() {
+            let feeds: Vec<StepInput> = self
+                .active
+                .iter()
+                .zip(&self.caches)
+                .map(|(sess, cache)| StepInput {
+                    token: *sess.generated.last().expect("active sessions hold >= 1 token"),
+                    pos: cache.len(),
+                })
+                .collect();
+            let xf = self.dec.decode_step(&feeds, &mut self.caches, &mut self.pool)?;
+            let specs: Vec<SampleSpec> = self
+                .active
+                .iter_mut()
+                .map(|sess| SampleSpec {
+                    top_k: sess.top_k,
+                    top_p: sess.top_p,
+                    u: sess.rng.next_f32(),
+                })
+                .collect();
+            let toks = self.sample(xf, &specs);
+            for (sess, tok) in self.active.iter_mut().zip(toks) {
+                sess.generated.push(tok);
+            }
+            self.steps += 1;
+            self.evict_finished();
+        }
+        Ok(!(self.active.is_empty() && self.queue.is_empty()))
+    }
+
+    /// Run until every submitted request completes.
+    pub fn run(&mut self) -> Result<()> {
+        while self.step()? {}
+        Ok(())
+    }
+}
+
+/// Deterministic request mix for the self-test: mixed prompt lengths and
+/// generation budgets, clamped into `cfg.seq`.
+fn self_test_requests(cfg: &ModelConfig) -> Vec<Request> {
+    let mut rng = Rng::new(0x5e12e);
+    [(3usize, 5usize), (5, 3), (8, 6), (13, 2)]
+        .iter()
+        .enumerate()
+        .map(|(i, &(plen, max_new))| {
+            let plen = plen.min(cfg.seq.saturating_sub(max_new).max(1));
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
+            Request {
+                id: i as u64,
+                prompt,
+                max_new: max_new.min(cfg.seq - plen).max(1),
+                top_k: [1, 4, 8, 2][i],
+                top_p: [1.0, 0.9, 0.7, 1.0][i],
+                seed: 1000 + i as u64,
+            }
+        })
+        .collect()
+}
+
+fn run_requests<'a>(
+    dec: &'a Decoder<'a>,
+    opts: ServeOptions,
+    reqs: &[Request],
+    staggered: bool,
+) -> Result<Vec<Completion>> {
+    let mut sched = Scheduler::new(dec, opts);
+    if staggered {
+        // admit half, tick twice mid-flight, then admit the rest — an
+        // interleaving with sessions at different depths per step
+        for r in &reqs[..reqs.len() / 2] {
+            sched.submit(r.clone())?;
+        }
+        sched.step()?;
+        sched.step()?;
+        for r in &reqs[reqs.len() / 2..] {
+            sched.submit(r.clone())?;
+        }
+    } else {
+        for r in reqs {
+            sched.submit(r.clone())?;
+        }
+    }
+    sched.run()?;
+    if sched.pool().live() != 0 {
+        bail!("scheduler leaked {} live pages", sched.pool().live());
+    }
+    let mut done = sched.take_done();
+    done.sort_by_key(|c| c.id);
+    Ok(done)
+}
+
+/// The CI `ligo serve --self-test` body: a scripted 4-session decode with
+/// mixed prompt lengths, checked for scheduler-interleaving invariance
+/// (batched and staggered runs must reproduce each session's solo stream),
+/// page hygiene, and a zero-fresh-allocation steady state. Returns a
+/// printable summary line.
+pub fn self_test<P: ParamView>(cfg: &ModelConfig, params: &P) -> Result<String> {
+    let dec = Decoder::new(cfg, params)?;
+    let opts = ServeOptions { page_tokens: ServeOptions::from_env().page_tokens, max_sessions: 4 };
+    let reqs = self_test_requests(cfg);
+
+    // per-session ground truth: each request decoded entirely alone
+    let solo_opts = ServeOptions { max_sessions: 1, ..opts };
+    let mut solo = Vec::new();
+    for r in &reqs {
+        solo.extend(run_requests(&dec, solo_opts, std::slice::from_ref(r), false)?);
+    }
+    for interleaving in [false, true] {
+        let got = run_requests(&dec, opts, &reqs, interleaving)?;
+        if got != solo {
+            bail!(
+                "interleaving changed a token stream (staggered={interleaving}): \
+                 {got:?} vs solo {solo:?}"
+            );
+        }
+    }
+
+    // steady state: a warmed scheduler re-running the same mix must touch
+    // neither the allocator nor fresh pages
+    let mut sched = Scheduler::new(&dec, opts);
+    for r in &reqs {
+        sched.submit(r.clone())?;
+    }
+    sched.run()?;
+    let fresh_pages = sched.pool().stats().0;
+    arena::reset_stats();
+    for r in &reqs {
+        sched.submit(r.clone())?;
+    }
+    sched.run()?;
+    let (fresh, _) = arena::stats();
+    if arena::enabled() && fresh != 0 {
+        bail!("steady-state serve performed {fresh} fresh allocations");
+    }
+    if sched.pool().stats().0 != fresh_pages {
+        bail!(
+            "steady-state serve created fresh pages: {} -> {}",
+            fresh_pages,
+            sched.pool().stats().0
+        );
+    }
+    let (tokens, steps) = sched.stats();
+    Ok(format!(
+        "serve self-test OK: {} sessions x2 runs, {tokens} tokens in {steps} batched steps, \
+         {} pages pooled",
+        reqs.len(),
+        sched.pool().total()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::param_shapes;
+    use crate::tensor::store::Store;
+
+    fn gpt_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny_gpt".into(),
+            family: "gpt".into(),
+            layers: 2,
+            dim: 8,
+            heads: 2,
+            vocab: 24,
+            seq: 16,
+            batch: 2,
+            img: 0,
+            patch: 0,
+            channels: 3,
+            n_classes: 0,
+            cls_layers: 0,
+            ffn_mult: 4,
+        }
+    }
+
+    #[test]
+    fn submit_validates_requests() {
+        let cfg = gpt_cfg();
+        let params = Store::det_init(&param_shapes(&cfg), 1);
+        let dec = Decoder::new(&cfg, &params).unwrap();
+        let opts = ServeOptions { max_sessions: 2, page_tokens: 4 };
+        let mut sched = Scheduler::new(&dec, opts);
+        let ok = Request { id: 0, prompt: vec![1, 2], max_new: 3, top_k: 1, top_p: 1.0, seed: 7 };
+        sched.submit(ok.clone()).unwrap();
+        assert!(sched.submit(Request { prompt: vec![], ..ok.clone() }).is_err());
+        assert!(sched.submit(Request { max_new: 0, ..ok.clone() }).is_err());
+        assert!(sched.submit(Request { prompt: vec![99], ..ok.clone() }).is_err());
+        assert!(sched
+            .submit(Request { prompt: vec![1; cfg.seq], max_new: 1, ..ok.clone() })
+            .is_err());
+        sched.run().unwrap();
+        let done = sched.take_done();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens.len(), 3);
+        assert_eq!(sched.pool().live(), 0);
+    }
+
+    #[test]
+    fn self_test_passes_on_a_tiny_gpt() {
+        let cfg = gpt_cfg();
+        let params = Store::det_init(&param_shapes(&cfg), 2);
+        let line = self_test(&cfg, &params).unwrap();
+        assert!(line.contains("OK"), "{line}");
+    }
+
+    #[test]
+    fn serve_options_env_defaults_are_sane() {
+        let o = ServeOptions::from_env();
+        assert!(o.max_sessions >= 1);
+        assert!(o.page_tokens >= 1);
+    }
+}

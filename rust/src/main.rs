@@ -6,6 +6,7 @@
 //!   eval       --model NAME --ckpt PATH
 //!   experiment ID|all [--scale F --out DIR]     (fig2..fig8, table1..table6)
 //!   analyze    (static shape/plan verification: every preset, pair, operator)
+//!   serve      --model NAME [--ckpt PATH --sessions N --max-new N --seed N | --self-test]
 //!   inspect    configs|operators|artifacts|knobs
 //!
 //! Python never runs here: artifacts must exist (run `make artifacts` once).
@@ -40,6 +41,8 @@ fn usage() -> ! {
          ligo experiment fig2 --scale 1.0 --out reports\n\
          ligo experiment all --scale 0.25\n\
          ligo analyze\n\
+         ligo serve --model gpt_base --sessions 4 --max-new 16\n\
+         ligo serve --model gpt_base --self-test\n\
          ligo inspect configs|operators|artifacts|knobs"
     );
     std::process::exit(2);
@@ -182,6 +185,23 @@ fn run() -> Result<()> {
                 println!("  {}", s.brief());
             }
 
+            println!("\ndecode graphs (gpt presets: prompt prefill + one step at seq-1):");
+            for name in reg.models.keys() {
+                let cfg = reg.model(name)?;
+                if cfg.family != "gpt" || cfg.n_classes > 0 {
+                    continue;
+                }
+                for phase in [
+                    ligo::model::shape::DecodePhase::Prefill { tokens: cfg.seq },
+                    ligo::model::shape::DecodePhase::Step { pos: cfg.seq - 1 },
+                ] {
+                    let s = ligo::model::shape::summarize_decode(cfg, phase)
+                        .with_context(|| format!("decode graph of '{name}'"))?;
+                    nodes += s.node_count();
+                    println!("  {}", s.brief());
+                }
+            }
+
             println!("\ngrowth pairs x operators:");
             let (mut combos, mut misses) = (0usize, 0usize);
             for (s, t) in &reg.pairs {
@@ -239,6 +259,61 @@ fn run() -> Result<()> {
             if fresh > 0 {
                 bail!("analyze must be purely symbolic but allocated {fresh} kernel buffers");
             }
+        }
+        "serve" => {
+            // tape-free serving: no runtime/artifacts needed — the decoder
+            // runs the native decode kernels directly over the checkpoint
+            let reg = Registry::load_or_builtin(&artifacts_dir());
+            let name = args.get("model").unwrap_or("gpt_base");
+            let cfg = reg.model(name)?.clone();
+            let params = match args.get("ckpt") {
+                Some(p) => io::load(p)?,
+                None => ligo::tensor::store::Store::det_init(
+                    &ligo::model::param_shapes(&cfg),
+                    args.get_u64("seed", 0),
+                ),
+            };
+            if args.has_flag("self-test") {
+                let line = ligo::coordinator::serve::self_test(&cfg, &params)?;
+                println!("{name}: {line}");
+                return Ok(());
+            }
+            use ligo::coordinator::serve::{Request, Scheduler, ServeOptions};
+            let mut opts = ServeOptions::from_env();
+            if let Some(s) = args.get("sessions") {
+                opts.max_sessions = s.parse().context("--sessions")?;
+            }
+            let dec = ligo::model::decode::Decoder::new(&cfg, &params)?;
+            let mut sched = Scheduler::new(&dec, opts);
+            let n = args.get_usize("requests", opts.max_sessions.max(1));
+            let max_new = args.get_usize("max-new", (cfg.seq / 4).clamp(1, 16));
+            let mut rng = ligo::util::rng::Rng::new(args.get_u64("seed", 0) ^ 0x5e12e);
+            for i in 0..n {
+                let plen = (3 + (i * 5) % 11).min(cfg.seq.saturating_sub(max_new)).max(1);
+                let prompt = (0..plen).map(|_| rng.below(cfg.vocab) as i32).collect();
+                sched.submit(Request {
+                    id: i as u64,
+                    prompt,
+                    max_new: max_new.min(cfg.seq - plen).max(1),
+                    top_k: 8,
+                    top_p: 0.95,
+                    seed: 42 + i as u64,
+                })?;
+            }
+            let t0 = std::time::Instant::now();
+            sched.run()?;
+            let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            let mut done = sched.take_done();
+            done.sort_by_key(|c| c.id);
+            for c in &done {
+                println!("session {}: {}-token prompt -> {:?}", c.id, c.prompt_len, c.tokens);
+            }
+            let (tokens, steps) = sched.stats();
+            println!(
+                "{name}: {tokens} tokens over {n} sessions in {steps} batched steps \
+                 ({:.0} tok/s)",
+                tokens as f64 / dt
+            );
         }
         "inspect" => {
             let what = args.positional.get(1).map(String::as_str).unwrap_or("configs");

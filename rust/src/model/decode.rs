@@ -1,0 +1,545 @@
+//! Tape-free incremental decode for the GPT family: per-layer paged KV
+//! caches plus a batched single-token forward step.
+//!
+//! The training engine only has full-sequence forwards; serving a (grown)
+//! GPT needs the complementary path — prefill a prompt once, then feed one
+//! token per step while attending over cached K/V. Three invariants pin
+//! this module to the already-trusted training forward (asserted in
+//! `tests/decode_parity.rs`):
+//!
+//! * [`Decoder::forward_full`] uses the *training* kernels
+//!   ([`ops::linear_fused`], [`ops::attention_fwd`]) at batch 1, so its
+//!   final hidden states are bitwise equal to the training tape's.
+//! * [`Decoder::decode_step`] uses the batch-invariant decode kernels
+//!   ([`ops::linear_dot`], [`ops::attention_decode`]) — a session decoded
+//!   alone is bitwise equal to the same session decoded inside any batch,
+//!   which is what makes the continuous-batching scheduler deterministic.
+//! * On shapes under the packing threshold both kernel families take the
+//!   same dot-product path, so incremental decode is *bitwise* equal to
+//!   the full-sequence forward there (and ≤1e-5 relative everywhere).
+//!
+//! All intermediates come from [`arena`] and K/V pages from a
+//! [`PagePool`], so a warm decode loop performs zero fresh allocations.
+
+use crate::bail;
+use crate::config::ModelConfig;
+use crate::error::{Context, Result};
+use crate::tensor::arena;
+use crate::tensor::ops::{self, Act, AttnShape};
+use crate::tensor::paged::{PagePool, PagedRows};
+use crate::tensor::Tensor;
+
+use super::{param_shapes, ParamView};
+
+/// Per-session, per-layer K/V page tables over a shared [`PagePool`].
+/// One page holds `page_tokens` rows of `dim` floats; K and V of each
+/// layer grow their own tables. `len` counts committed tokens — a decode
+/// step writes at position `len` in every layer, then [`KvCache::commit`]s
+/// once.
+#[derive(Debug)]
+pub struct KvCache {
+    k_tables: Vec<Vec<usize>>,
+    v_tables: Vec<Vec<usize>>,
+    len: usize,
+    capacity: usize,
+    page_tokens: usize,
+    dim: usize,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, page_tokens: usize, dim: usize, capacity: usize) -> KvCache {
+        assert!(page_tokens > 0 && dim > 0 && layers > 0);
+        KvCache {
+            // lint-free by construction: page tables are usize metadata,
+            // not f32 buffers — only the pool touches the arena
+            k_tables: (0..layers).map(|_| Vec::new()).collect(),
+            v_tables: (0..layers).map(|_| Vec::new()).collect(),
+            len: 0,
+            capacity,
+            page_tokens,
+            dim,
+        }
+    }
+
+    /// Committed token count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Pages per layer-side table a `len`-token cache needs.
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Write one K and one V row at `pos` of `layer`, growing the page
+    /// tables from the pool as `pos` crosses page boundaries. `pos` must
+    /// lie in `[len, capacity)` — prefill writes a run of positions before
+    /// one commit; a decode step writes exactly `len`.
+    pub fn write_kv(
+        &mut self,
+        pool: &mut PagePool,
+        layer: usize,
+        pos: usize,
+        krow: &[f32],
+        vrow: &[f32],
+    ) {
+        assert!(pos >= self.len && pos < self.capacity, "write_kv pos {pos} outside [{}, {})", self.len, self.capacity);
+        assert_eq!(krow.len(), self.dim);
+        assert_eq!(vrow.len(), self.dim);
+        assert_eq!(pool.page_floats(), self.page_tokens * self.dim, "pool page size mismatch");
+        let need = self.pages_for(pos + 1);
+        while self.k_tables[layer].len() < need {
+            self.k_tables[layer].push(pool.alloc());
+        }
+        while self.v_tables[layer].len() < need {
+            self.v_tables[layer].push(pool.alloc());
+        }
+        let off = (pos % self.page_tokens) * self.dim;
+        let kp = pool.page_mut(self.k_tables[layer][pos / self.page_tokens]);
+        kp[off..off + self.dim].copy_from_slice(krow);
+        let vp = pool.page_mut(self.v_tables[layer][pos / self.page_tokens]);
+        vp[off..off + self.dim].copy_from_slice(vrow);
+    }
+
+    /// Commit `n` freshly written positions (all layers must have been
+    /// written for each of them).
+    pub fn commit(&mut self, n: usize) {
+        assert!(self.len + n <= self.capacity);
+        self.len += n;
+    }
+
+    /// View of the first `upto` K rows of `layer` (may exceed `len` by the
+    /// not-yet-committed positions a step just wrote).
+    pub fn k_view<'a>(&'a self, pool: &'a PagePool, layer: usize, upto: usize) -> PagedRows<'a> {
+        PagedRows::new(pool, &self.k_tables[layer], self.page_tokens, self.dim, upto)
+    }
+
+    pub fn v_view<'a>(&'a self, pool: &'a PagePool, layer: usize, upto: usize) -> PagedRows<'a> {
+        PagedRows::new(pool, &self.v_tables[layer], self.page_tokens, self.dim, upto)
+    }
+
+    /// Return every page to the pool's free list (session eviction).
+    pub fn release(&mut self, pool: &mut PagePool) {
+        for table in self.k_tables.iter_mut().chain(self.v_tables.iter_mut()) {
+            for page in table.drain(..) {
+                pool.free(page);
+            }
+        }
+        self.len = 0;
+    }
+}
+
+/// Borrowed per-layer parameters of one pre-LN GPT block.
+struct LayerParams<'a> {
+    ln1_g: &'a Tensor,
+    ln1_b: &'a Tensor,
+    q_w: &'a Tensor,
+    q_b: &'a Tensor,
+    k_w: &'a Tensor,
+    k_b: &'a Tensor,
+    v_w: &'a Tensor,
+    v_b: &'a Tensor,
+    o_w: &'a Tensor,
+    o_b: &'a Tensor,
+    ln2_g: &'a Tensor,
+    ln2_b: &'a Tensor,
+    fc1_w: &'a Tensor,
+    fc1_b: &'a Tensor,
+    fc2_w: &'a Tensor,
+    fc2_b: &'a Tensor,
+}
+
+/// One token of one session entering a batched decode step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepInput {
+    pub token: i32,
+    pub pos: usize,
+}
+
+/// Zero-copy decode view over a GPT parameter set: every tensor is
+/// borrowed (the same discipline as the training tape's leaves), validated
+/// against [`param_shapes`] once at construction.
+pub struct Decoder<'a> {
+    cfg: &'a ModelConfig,
+    emb_tok: &'a Tensor,
+    emb_pos: &'a Tensor,
+    mlm_bias: &'a Tensor,
+    final_ln_g: &'a Tensor,
+    final_ln_b: &'a Tensor,
+    layers: Vec<LayerParams<'a>>,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new<P: ParamView>(cfg: &'a ModelConfig, params: &'a P) -> Result<Decoder<'a>> {
+        if cfg.family != "gpt" {
+            bail!("decode serves the gpt family, not '{}' ('{}')", cfg.family, cfg.name);
+        }
+        if cfg.n_classes > 0 {
+            bail!("decode needs the tied LM head; '{}' is a probe config", cfg.name);
+        }
+        let get = |name: &str| -> Result<&'a Tensor> {
+            params
+                .tensor(name)
+                .with_context(|| format!("params for '{}' missing '{name}'", cfg.name))
+        };
+        for (name, shape) in param_shapes(cfg) {
+            let t = get(&name)?;
+            if t.shape != shape {
+                bail!("param '{name}' shape {:?} != expected {:?} for '{}'", t.shape, shape, cfg.name);
+            }
+        }
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            let p = format!("L{l:02}_");
+            layers.push(LayerParams {
+                ln1_g: get(&format!("{p}ln1_g"))?,
+                ln1_b: get(&format!("{p}ln1_b"))?,
+                q_w: get(&format!("{p}q_w"))?,
+                q_b: get(&format!("{p}q_b"))?,
+                k_w: get(&format!("{p}k_w"))?,
+                k_b: get(&format!("{p}k_b"))?,
+                v_w: get(&format!("{p}v_w"))?,
+                v_b: get(&format!("{p}v_b"))?,
+                o_w: get(&format!("{p}o_w"))?,
+                o_b: get(&format!("{p}o_b"))?,
+                ln2_g: get(&format!("{p}ln2_g"))?,
+                ln2_b: get(&format!("{p}ln2_b"))?,
+                fc1_w: get(&format!("{p}fc1_w"))?,
+                fc1_b: get(&format!("{p}fc1_b"))?,
+                fc2_w: get(&format!("{p}fc2_w"))?,
+                fc2_b: get(&format!("{p}fc2_b"))?,
+            });
+        }
+        Ok(Decoder {
+            cfg,
+            emb_tok: get("emb_tok")?,
+            emb_pos: get("emb_pos")?,
+            mlm_bias: get("mlm_bias")?,
+            final_ln_g: get("final_ln_g")?,
+            final_ln_b: get("final_ln_b")?,
+            layers,
+        })
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        self.cfg
+    }
+
+    /// The tied LM head `(emb_tok, mlm_bias)` — what
+    /// [`ops::lm_head_sample`] / [`ops::lm_head_argmax`] project hidden
+    /// states through.
+    pub fn head(&self) -> (&Tensor, &Tensor) {
+        (self.emb_tok, self.mlm_bias)
+    }
+
+    fn check_tokens(&self, tokens: &[i32]) -> Result<()> {
+        if tokens.is_empty() || tokens.len() > self.cfg.seq {
+            bail!("prompt length {} outside [1, {}] for '{}'", tokens.len(), self.cfg.seq, self.cfg.name);
+        }
+        if let Some(&bad) = tokens.iter().find(|&&t| t < 0 || t as usize >= self.cfg.vocab) {
+            bail!("token id {bad} outside vocab {} for '{}'", self.cfg.vocab, self.cfg.name);
+        }
+        Ok(())
+    }
+
+    /// Full-sequence forward over a token prefix with the **training**
+    /// kernels at batch 1: gather + tiled position add, pre-LN blocks with
+    /// causal [`ops::attention_fwd`], final layernorm. Returns the
+    /// (t, dim) final hidden states — bitwise equal to the training tape's
+    /// `xf` over the same prefix (the decode-parity anchor).
+    pub fn forward_full(&self, tokens: &[i32]) -> Result<Tensor> {
+        self.forward_inner(tokens, None)
+    }
+
+    /// [`Decoder::forward_full`] that additionally writes every layer's
+    /// K/V rows into `cache` (positions `0..tokens.len()`) and commits
+    /// them — the prompt-ingestion phase of a session.
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        cache: &mut KvCache,
+        pool: &mut PagePool,
+    ) -> Result<Tensor> {
+        if cache.len() != 0 {
+            bail!("prefill into a non-empty cache (len {})", cache.len());
+        }
+        self.forward_inner(tokens, Some((cache, pool)))
+    }
+
+    fn forward_inner(
+        &self,
+        tokens: &[i32],
+        mut sink: Option<(&mut KvCache, &mut PagePool)>,
+    ) -> Result<Tensor> {
+        self.check_tokens(tokens)?;
+        let (t, d) = (tokens.len(), self.cfg.dim);
+        let (ev, pv) = (self.emb_tok.f32s(), self.emb_pos.f32s());
+        let mut xbuf = arena::alloc_scratch(t * d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let erow = &ev[tok as usize * d..(tok as usize + 1) * d];
+            let prow = &pv[i * d..(i + 1) * d];
+            for ((x, &e), &p) in xbuf[i * d..(i + 1) * d].iter_mut().zip(erow).zip(prow) {
+                *x = e + p;
+            }
+        }
+        let mut x = Tensor::from_f32(&[t, d], xbuf);
+        let sh = AttnShape { batch: 1, heads: self.cfg.heads, s_q: t, s_k: t, causal: true };
+        for (l, lp) in self.layers.iter().enumerate() {
+            let (h, stats) = ops::layernorm_fwd(&x, lp.ln1_g, lp.ln1_b);
+            arena::recycle_buf(stats);
+            let (q, _) = ops::linear_fused(&h, lp.q_w, Some(lp.q_b), Act::None);
+            let (k, _) = ops::linear_fused(&h, lp.k_w, Some(lp.k_b), Act::None);
+            let (v, _) = ops::linear_fused(&h, lp.v_w, Some(lp.v_b), Act::None);
+            arena::recycle(h);
+            if let Some((cache, pool)) = sink.as_mut() {
+                let (kv, vv) = (k.f32s(), v.f32s());
+                for pos in 0..t {
+                    cache.write_kv(
+                        pool,
+                        l,
+                        pos,
+                        &kv[pos * d..(pos + 1) * d],
+                        &vv[pos * d..(pos + 1) * d],
+                    );
+                }
+            }
+            let (att, probs) = ops::attention_fwd(&q, &k, &v, &sh);
+            arena::recycle(probs);
+            arena::recycle(q);
+            arena::recycle(k);
+            arena::recycle(v);
+            let (o, _) = ops::linear_fused(&att, lp.o_w, Some(lp.o_b), Act::None);
+            arena::recycle(att);
+            for (xi, &oi) in x.f32s_mut().iter_mut().zip(o.f32s()) {
+                *xi += oi;
+            }
+            arena::recycle(o);
+            let (h2, stats) = ops::layernorm_fwd(&x, lp.ln2_g, lp.ln2_b);
+            arena::recycle_buf(stats);
+            let (a, pre) = ops::linear_fused(&h2, lp.fc1_w, Some(lp.fc1_b), Act::Gelu);
+            if let Some(pre) = pre {
+                arena::recycle(pre);
+            }
+            arena::recycle(h2);
+            let (f2, _) = ops::linear_fused(&a, lp.fc2_w, Some(lp.fc2_b), Act::None);
+            arena::recycle(a);
+            for (xi, &fi) in x.f32s_mut().iter_mut().zip(f2.f32s()) {
+                *xi += fi;
+            }
+            arena::recycle(f2);
+        }
+        let (xf, stats) = ops::layernorm_fwd(&x, self.final_ln_g, self.final_ln_b);
+        arena::recycle_buf(stats);
+        arena::recycle(x);
+        if let Some((cache, _)) = sink.as_mut() {
+            cache.commit(t);
+        }
+        Ok(xf)
+    }
+
+    /// One batched incremental decode step: each feed contributes one token
+    /// at its session's next position, attending over that session's cached
+    /// K/V (plus the row this step writes). Returns the (sessions, dim)
+    /// final-layernorm hidden states; every cache is committed by one
+    /// position. Per-session results are bitwise independent of the batch
+    /// composition (see the module docs), so any admit/evict interleaving
+    /// reproduces the solo token streams.
+    pub fn decode_step(
+        &self,
+        feeds: &[StepInput],
+        caches: &mut [KvCache],
+        pool: &mut PagePool,
+    ) -> Result<Tensor> {
+        let (s_n, d) = (feeds.len(), self.cfg.dim);
+        if s_n == 0 {
+            bail!("decode_step with no sessions");
+        }
+        if caches.len() != s_n {
+            bail!("decode_step: {} feeds vs {} caches", s_n, caches.len());
+        }
+        for (f, c) in feeds.iter().zip(caches.iter()) {
+            if f.token < 0 || f.token as usize >= self.cfg.vocab {
+                bail!("token id {} outside vocab {}", f.token, self.cfg.vocab);
+            }
+            if f.pos != c.len() {
+                bail!("feed pos {} != cache len {}", f.pos, c.len());
+            }
+            if f.pos >= self.cfg.seq {
+                bail!("position {} outside seq {} for '{}'", f.pos, self.cfg.seq, self.cfg.name);
+            }
+        }
+        let (ev, pv) = (self.emb_tok.f32s(), self.emb_pos.f32s());
+        let mut xbuf = arena::alloc_scratch(s_n * d);
+        for (s, f) in feeds.iter().enumerate() {
+            let erow = &ev[f.token as usize * d..(f.token as usize + 1) * d];
+            let prow = &pv[f.pos * d..(f.pos + 1) * d];
+            for ((x, &e), &p) in xbuf[s * d..(s + 1) * d].iter_mut().zip(erow).zip(prow) {
+                *x = e + p;
+            }
+        }
+        let mut x = Tensor::from_f32(&[s_n, d], xbuf);
+        let mut att = Tensor::from_f32(&[s_n, d], arena::alloc_scratch(s_n * d));
+        let mut scores = arena::alloc_scratch(self.cfg.seq);
+        for (l, lp) in self.layers.iter().enumerate() {
+            let (h, stats) = ops::layernorm_fwd(&x, lp.ln1_g, lp.ln1_b);
+            arena::recycle_buf(stats);
+            let q = ops::linear_dot(&h, lp.q_w, Some(lp.q_b), Act::None);
+            let k = ops::linear_dot(&h, lp.k_w, Some(lp.k_b), Act::None);
+            let v = ops::linear_dot(&h, lp.v_w, Some(lp.v_b), Act::None);
+            arena::recycle(h);
+            let (kv, vv) = (k.f32s(), v.f32s());
+            for (s, (f, cache)) in feeds.iter().zip(caches.iter_mut()).enumerate() {
+                cache.write_kv(pool, l, f.pos, &kv[s * d..(s + 1) * d], &vv[s * d..(s + 1) * d]);
+            }
+            {
+                let qv = q.f32s();
+                let av = att.f32s_mut();
+                for (s, (f, cache)) in feeds.iter().zip(caches.iter()).enumerate() {
+                    let kview = cache.k_view(pool, l, f.pos + 1);
+                    let vview = cache.v_view(pool, l, f.pos + 1);
+                    ops::attention_decode(
+                        &qv[s * d..(s + 1) * d],
+                        &kview,
+                        &vview,
+                        self.cfg.heads,
+                        &mut scores,
+                        &mut av[s * d..(s + 1) * d],
+                    );
+                }
+            }
+            arena::recycle(q);
+            arena::recycle(k);
+            arena::recycle(v);
+            let o = ops::linear_dot(&att, lp.o_w, Some(lp.o_b), Act::None);
+            for (xi, &oi) in x.f32s_mut().iter_mut().zip(o.f32s()) {
+                *xi += oi;
+            }
+            arena::recycle(o);
+            let (h2, stats) = ops::layernorm_fwd(&x, lp.ln2_g, lp.ln2_b);
+            arena::recycle_buf(stats);
+            let a = ops::linear_dot(&h2, lp.fc1_w, Some(lp.fc1_b), Act::Gelu);
+            arena::recycle(h2);
+            let f2 = ops::linear_dot(&a, lp.fc2_w, Some(lp.fc2_b), Act::None);
+            arena::recycle(a);
+            for (xi, &fi) in x.f32s_mut().iter_mut().zip(f2.f32s()) {
+                *xi += fi;
+            }
+            arena::recycle(f2);
+        }
+        scores.clear();
+        arena::recycle_buf(scores);
+        arena::recycle(att);
+        let (xf, stats) = ops::layernorm_fwd(&x, self.final_ln_g, self.final_ln_b);
+        arena::recycle_buf(stats);
+        arena::recycle(x);
+        for cache in caches.iter_mut() {
+            cache.commit(1);
+        }
+        Ok(xf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::store::Store;
+
+    fn gpt_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny_gpt".into(),
+            family: "gpt".into(),
+            layers: 2,
+            dim: 8,
+            heads: 2,
+            vocab: 24,
+            seq: 6,
+            batch: 2,
+            img: 0,
+            patch: 0,
+            channels: 3,
+            n_classes: 0,
+            cls_layers: 0,
+            ffn_mult: 4,
+        }
+    }
+
+    #[test]
+    fn decoder_rejects_non_gpt_and_bad_tokens() {
+        let mut cfg = gpt_cfg();
+        let params = Store::det_init(&param_shapes(&cfg), 1);
+        cfg.family = "bert".into();
+        assert!(Decoder::new(&cfg, &params).is_err());
+        cfg.family = "gpt".into();
+        let dec = Decoder::new(&cfg, &params).unwrap();
+        assert!(dec.forward_full(&[]).is_err());
+        assert!(dec.forward_full(&[0; 7]).is_err());
+        assert!(dec.forward_full(&[cfg.vocab as i32]).is_err());
+        assert!(dec.forward_full(&[0, 1, 2]).is_ok());
+    }
+
+    #[test]
+    fn prefill_then_steps_matches_full_forward_bitwise() {
+        // tiny shapes sit on the shared dot-product kernel path, so the
+        // incremental decode is *bitwise* equal to the full forward
+        let cfg = gpt_cfg();
+        let params = Store::det_init(&param_shapes(&cfg), 2);
+        let dec = Decoder::new(&cfg, &params).unwrap();
+        let tokens: Vec<i32> = vec![3, 1, 4, 1, 5];
+        let full = dec.forward_full(&tokens).unwrap();
+        let mut pool = PagePool::new(2 * cfg.dim);
+        let mut cache = KvCache::new(cfg.layers, 2, cfg.dim, cfg.seq);
+        let prefix = &tokens[..2];
+        let pre = dec.prefill(prefix, &mut cache, &mut pool).unwrap();
+        for (g, e) in pre.f32s().iter().zip(&full.f32s()[..2 * cfg.dim]) {
+            assert_eq!(g.to_bits(), e.to_bits(), "prefill rows == full forward rows");
+        }
+        arena::recycle(pre);
+        for (pos, &tok) in tokens.iter().enumerate().skip(2) {
+            let feeds = [StepInput { token: tok, pos }];
+            let xf = dec
+                .decode_step(&feeds, std::slice::from_mut(&mut cache), &mut pool)
+                .unwrap();
+            let want = &full.f32s()[pos * cfg.dim..(pos + 1) * cfg.dim];
+            for (g, e) in xf.f32s().iter().zip(want) {
+                assert_eq!(g.to_bits(), e.to_bits(), "step {pos} row == full forward row");
+            }
+            arena::recycle(xf);
+        }
+        cache.release(&mut pool);
+        assert_eq!(pool.live(), 0);
+        pool.clear();
+    }
+
+    #[test]
+    fn cache_release_returns_every_page() {
+        let cfg = gpt_cfg();
+        let params = Store::det_init(&param_shapes(&cfg), 3);
+        let dec = Decoder::new(&cfg, &params).unwrap();
+        let mut pool = PagePool::new(2 * cfg.dim);
+        let mut a = KvCache::new(cfg.layers, 2, cfg.dim, cfg.seq);
+        let mut b = KvCache::new(cfg.layers, 2, cfg.dim, cfg.seq);
+        arena::recycle(dec.prefill(&[1, 2, 3], &mut a, &mut pool).unwrap());
+        arena::recycle(dec.prefill(&[4, 5], &mut b, &mut pool).unwrap());
+        let before = pool.live();
+        assert!(before > 0);
+        a.release(&mut pool);
+        b.release(&mut pool);
+        assert_eq!(pool.live(), 0);
+        pool.check_invariants().unwrap();
+        // a new session reuses the freed pages — no fresh pages
+        let (fresh0, _) = pool.stats();
+        let mut c = KvCache::new(cfg.layers, 2, cfg.dim, cfg.seq);
+        arena::recycle(dec.prefill(&[1, 2, 3], &mut c, &mut pool).unwrap());
+        assert_eq!(pool.stats().0, fresh0, "steady-state admit allocates no fresh pages");
+        c.release(&mut pool);
+        pool.clear();
+    }
+}

@@ -34,6 +34,7 @@
 //! [`loss_and_grads`] on the expanded model through the LiGO expansion's
 //! analytic backward (`growth::ligo::ligo_apply_backward`) to get dL/dM.
 
+pub mod decode;
 pub mod shape;
 pub mod tape;
 mod text;

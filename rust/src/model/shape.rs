@@ -208,6 +208,17 @@ pub mod rules {
         masked_xent(&logits, n_labels)
     }
 
+    /// Streaming fused LM head `x @ w^T (+ b)` + top-k/top-p sampling:
+    /// one token id per row (the `ops::lm_head_sample` contract — logits
+    /// validated like [`lm_head_xent`] but never materialized).
+    pub fn lm_head_sample(x: &[usize], w: &[usize], b: Option<&[usize]>) -> Result<Vec<usize>> {
+        let logits = linear(x, w)?;
+        if let Some(bs) = b {
+            add_row(&logits, bs)?;
+        }
+        Ok(vec![logits[0]])
+    }
+
     /// (B, H, W, C) images -> (B*T, patch*patch*C) rows; the image side
     /// must tile exactly.
     pub fn patchify(images: &[usize], patch: usize) -> Result<Vec<usize>> {
@@ -496,6 +507,65 @@ impl ShapeTape {
         Ok(self.push("lm_head_xent", out, flops, 4 * rows * 3)) // [max, lse, label] rows
     }
 
+    /// Single-query attention against the paged KV cache (the
+    /// `ops::attention_decode` contract): only q lives on the tape — the
+    /// cached K/V rows are synthesized from `sh`, validated with the same
+    /// [`rules::attention`] rule. No backward, so nothing is saved.
+    pub fn attention_decode(&mut self, q: SVar, sh: AttnShape) -> Result<SVar> {
+        let qs = self.shape(q).to_vec();
+        if qs.len() != 2 {
+            bail!("q must be 2-D, got {qs:?}");
+        }
+        let kshape = vec![sh.batch * sh.s_k, qs[1]];
+        let out = rules::attention(&qs, &kshape, &kshape, &sh)
+            .with_context(|| self.ctx("attention_decode"))?;
+        let dh = out[1] / sh.heads;
+        let pairs = (sh.batch * sh.heads * sh.s_q * sh.s_k) as f64;
+        let flops = 4.0 * pairs * dh as f64 + 5.0 * pairs;
+        Ok(self.push("attention_decode", out, flops, 0))
+    }
+
+    /// Mirror of `ops::lm_head_sample`: streaming head + top-k/top-p pick,
+    /// one token id per row, logits never materialized, nothing saved.
+    pub fn lm_head_sample(&mut self, x: SVar, w: SVar, b: Option<SVar>) -> Result<SVar> {
+        let bs = b.map(|bv| self.shape(bv).to_vec());
+        let out = rules::lm_head_sample(self.shape(x), self.shape(w), bs.as_deref())
+            .with_context(|| self.ctx("lm_head_sample"))?;
+        let (rows, d) = (self.shape(x)[0], self.shape(x)[1]);
+        let v = self.shape(w)[0];
+        let flops = 2.0 * (rows * d * v) as f64 + 5.0 * (rows * v) as f64;
+        Ok(self.push("lm_head_sample", out, flops, 0))
+    }
+
+    /// Close a decode replay: no backward, and the peak model is the
+    /// serving one — decode recycles every activation per layer, so the
+    /// footprint is the KV cache (`4 * 2 * layers * kv_tokens * dim`
+    /// bytes) plus one block's transient working set, not the training
+    /// tape's full retained-activation sum.
+    fn finish_decode(
+        self,
+        cfg: &ModelConfig,
+        phase: &'static str,
+        out: SVar,
+        kv_tokens: usize,
+        working: usize,
+    ) -> Result<GraphSummary> {
+        if self.shape(out).len() != 1 {
+            bail!("sampled tokens must be rank-1, got {:?}", self.shape(out));
+        }
+        let params: usize = super::param_shapes(cfg).iter().map(|(_, s)| numel(s)).sum();
+        let fwd_flops: f64 = self.nodes.iter().map(|n| n.flops).sum();
+        let kv_bytes = 4 * 2 * cfg.layers * kv_tokens * cfg.dim;
+        Ok(GraphSummary {
+            name: format!("{}+{phase}", cfg.name),
+            nodes: self.nodes,
+            params,
+            fwd_flops,
+            bwd_flops: 0.0,
+            peak_bytes: kv_bytes + working,
+        })
+    }
+
     /// Close the replay: totals + the peak-arena estimate.
     fn finish(self, cfg: &ModelConfig, loss: SVar) -> Result<GraphSummary> {
         if numel(self.shape(loss)) != 1 {
@@ -721,6 +791,125 @@ pub fn summarize(cfg: &ModelConfig) -> Result<GraphSummary> {
     summarize_with(cfg, ops::fused_enabled(), ops::fused_xent_enabled())
 }
 
+/// Which serving phase a decode summary covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodePhase {
+    /// Prompt ingestion: one causal full-prefix forward over `tokens`
+    /// rows, writing every layer's K/V into the cache.
+    Prefill { tokens: usize },
+    /// One incremental step at position `pos`, attending over the
+    /// `pos + 1` cached K/V rows.
+    Step { pos: usize },
+}
+
+/// Symbolic twin of one `decode::decode_step` transformer block: same node
+/// sequence as [`sym_preln_block`] except attention reads the paged cache
+/// through [`ShapeTape::attention_decode`] (K/V are not tape operands).
+fn sym_decode_block(
+    st: &mut ShapeTape,
+    vars: &BTreeMap<String, SVar>,
+    prefix: &str,
+    x: SVar,
+    sh: AttnShape,
+) -> Result<SVar> {
+    let h = {
+        let g = svar(vars, &format!("{prefix}ln1_g"))?;
+        let b = svar(vars, &format!("{prefix}ln1_b"))?;
+        st.layernorm(x, g, b)?
+    };
+    let qkv = |n: &str| format!("{prefix}{n}");
+    let q = st.linear_bias(h, svar(vars, &qkv("q_w"))?, svar(vars, &qkv("q_b"))?)?;
+    let _k = st.linear_bias(h, svar(vars, &qkv("k_w"))?, svar(vars, &qkv("k_b"))?)?;
+    let _v = st.linear_bias(h, svar(vars, &qkv("v_w"))?, svar(vars, &qkv("v_b"))?)?;
+    let att = st.attention_decode(q, sh)?;
+    let o = st.linear_bias(
+        att,
+        svar(vars, &format!("{prefix}o_w"))?,
+        svar(vars, &format!("{prefix}o_b"))?,
+    )?;
+    let x = st.add(x, o)?;
+    let h2 = {
+        let g = svar(vars, &format!("{prefix}ln2_g"))?;
+        let b = svar(vars, &format!("{prefix}ln2_b"))?;
+        st.layernorm(x, g, b)?
+    };
+    let a = st.linear_bias_gelu(
+        h2,
+        svar(vars, &format!("{prefix}fc1_w"))?,
+        svar(vars, &format!("{prefix}fc1_b"))?,
+    )?;
+    let f2 = st.linear_bias(
+        a,
+        svar(vars, &format!("{prefix}fc2_w"))?,
+        svar(vars, &format!("{prefix}fc2_b"))?,
+    )?;
+    st.add(x, f2)
+}
+
+/// Symbolically replay the tape-free serving path of `decode.rs` and
+/// summarize it — shapes, FLOPs, and the serving peak-bytes model (KV
+/// cache + one block's working set; decode retains no activations and has
+/// no backward). Both phases append the **same node count**: the training
+/// graph's plus one, because decode splits the embedding into two gathers
+/// + add (position rows are a gather, not a batch tile) and ends in
+/// [`rules::lm_head_sample`] instead of the xent head — pinned against
+/// [`summarize_with`] in this module's tests and `tests/analyze_shapes.rs`.
+pub fn summarize_decode(cfg: &ModelConfig, phase: DecodePhase) -> Result<GraphSummary> {
+    if cfg.family != "gpt" {
+        bail!("decode graphs exist for the gpt family, not '{}' ('{}')", cfg.family, cfg.name);
+    }
+    if cfg.n_classes > 0 {
+        bail!("decode needs the tied LM head; '{}' is a probe config", cfg.name);
+    }
+    if cfg.vocab == 0 || cfg.seq == 0 {
+        bail!("decode config '{}' needs vocab > 0 and seq > 0", cfg.name);
+    }
+    let (rows, s_k, causal, tag) = match phase {
+        DecodePhase::Prefill { tokens } => {
+            if tokens == 0 || tokens > cfg.seq {
+                bail!("prefill length {tokens} outside [1, {}] for '{}'", cfg.seq, cfg.name);
+            }
+            (tokens, tokens, true, "prefill")
+        }
+        DecodePhase::Step { pos } => {
+            if pos >= cfg.seq {
+                bail!("step position {pos} outside seq {} for '{}'", cfg.seq, cfg.name);
+            }
+            (1, pos + 1, false, "step")
+        }
+    };
+    let mut st = ShapeTape::new(true, true);
+    let mut vars: BTreeMap<String, SVar> = BTreeMap::new();
+    for (name, shape) in super::param_shapes(cfg) {
+        let leaf = st.param(shape);
+        vars.insert(name, leaf);
+    }
+    let build = |st: &mut ShapeTape| -> Result<SVar> {
+        let x0 = st.gather(svar(&vars, "emb_tok")?, rows)?;
+        let p = st.gather(svar(&vars, "emb_pos")?, rows)?;
+        let mut x = st.add(x0, p)?;
+        let sh = AttnShape { batch: 1, heads: cfg.heads, s_q: rows, s_k, causal };
+        for l in 0..cfg.layers {
+            let prefix = format!("L{l:02}_");
+            x = match phase {
+                DecodePhase::Prefill { .. } => {
+                    sym_preln_block(st, &vars, &prefix, x, sh, false)?
+                }
+                DecodePhase::Step { .. } => sym_decode_block(st, &vars, &prefix, x, sh)?,
+            };
+        }
+        let xf = st.layernorm(x, svar(&vars, "final_ln_g")?, svar(&vars, "final_ln_b")?)?;
+        st.lm_head_sample(xf, svar(&vars, "emb_tok")?, Some(svar(&vars, "mlm_bias")?))
+    };
+    let out = build(&mut st)
+        .with_context(|| format!("static shape verification of '{}' {tag}", cfg.name))?;
+    // One block's transient working set: x/h/q/k/v/att/o-sized rows (6),
+    // the attention probabilities (scores for a step), and the fc1
+    // activation — everything decode holds at once before recycling.
+    let working = 4 * (6 * rows * cfg.dim + cfg.heads * rows * s_k + rows * cfg.ffn());
+    st.finish_decode(cfg, tag, out, s_k, working)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -908,6 +1097,44 @@ mod tests {
     }
 
     #[test]
+    fn decode_summaries_pin_node_counts_against_training() {
+        let cfg = text_cfg("gpt", 0);
+        let train = summarize_with(&cfg, true, true).unwrap();
+        let pre = summarize_decode(&cfg, DecodePhase::Prefill { tokens: cfg.seq }).unwrap();
+        let step = summarize_decode(&cfg, DecodePhase::Step { pos: cfg.seq - 1 }).unwrap();
+        // both phases: training + 1 (two gathers + add for the embedding,
+        // lm_head_sample for the head) — and equal to each other
+        assert_eq!(pre.node_count(), train.node_count() + 1);
+        assert_eq!(step.node_count(), pre.node_count());
+        let p = super::super::param_shapes(&cfg).len();
+        assert_eq!(pre.node_count(), p + 11 * cfg.layers + 5);
+        // serving accounting: no backward, step much cheaper than prefill
+        assert_eq!(step.bwd_flops, 0.0);
+        assert!(step.fwd_flops > 0.0 && step.fwd_flops < pre.fwd_flops);
+        // the KV cache grows with the attended prefix
+        let s0 = summarize_decode(&cfg, DecodePhase::Step { pos: 0 }).unwrap();
+        assert!(s0.peak_bytes < step.peak_bytes);
+        assert!(pre.name.ends_with("+prefill"), "{}", pre.name);
+        assert!(step.name.ends_with("+step"), "{}", step.name);
+        assert!(step.nodes.iter().any(|n| n.op == "attention_decode"));
+        assert!(step.nodes.iter().any(|n| n.op == "lm_head_sample"));
+        assert!(pre.nodes.iter().all(|n| n.op != "attention_decode"));
+    }
+
+    #[test]
+    fn decode_summaries_reject_bad_phases_and_families() {
+        let cfg = text_cfg("gpt", 0);
+        assert!(summarize_decode(&cfg, DecodePhase::Prefill { tokens: 0 }).is_err());
+        assert!(summarize_decode(&cfg, DecodePhase::Prefill { tokens: cfg.seq + 1 }).is_err());
+        assert!(summarize_decode(&cfg, DecodePhase::Step { pos: cfg.seq }).is_err());
+        assert!(summarize_decode(&text_cfg("bert", 0), DecodePhase::Step { pos: 0 }).is_err());
+        let err = summarize_decode(&text_cfg("gpt", 3), DecodePhase::Step { pos: 0 })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("probe"), "{err}");
+    }
+
+    #[test]
     fn rules_reject_each_operand_violation() {
         assert!(rules::linear(&[2, 3], &[4, 5]).is_err());
         assert_eq!(rules::linear(&[2, 3], &[4, 3]).unwrap(), vec![2, 4]);
@@ -922,6 +1149,8 @@ mod tests {
         assert!(rules::seq_first(&[5, 3], 2, 3).is_err());
         assert!(rules::masked_xent(&[4, 7], 3).is_err());
         assert!(rules::lm_head_xent(&[4, 3], &[7, 3], Some(&[6]), 4).is_err());
+        assert!(rules::lm_head_sample(&[4, 3], &[7, 3], Some(&[6])).is_err());
+        assert_eq!(rules::lm_head_sample(&[4, 3], &[7, 3], Some(&[7])).unwrap(), vec![4]);
         assert!(rules::patchify(&[1, 9, 9, 3], 4).is_err());
     }
 }

@@ -7,6 +7,7 @@ pub mod arena;
 pub mod init;
 pub mod io;
 pub mod ops;
+pub mod paged;
 pub mod store;
 
 /// Element type of a tensor (mirrors the manifest dtypes we emit).

@@ -55,6 +55,7 @@
 use std::cell::Cell;
 use std::sync::OnceLock;
 
+use crate::tensor::paged::PagedRows;
 use crate::util::par;
 
 use super::{arena, numel, Tensor};
@@ -450,6 +451,60 @@ pub fn linear_fused(
     };
     arena::recycle_buf(wt);
     (Tensor::from_f32(&[m, n], y), pre)
+}
+
+/// Decode-side linear: `x @ w^T (+ bias) (+ GELU)` via per-row dot
+/// products in the exact accumulation order of [`linear_fused`]'s
+/// dot-product path (k-ascending sum, bias added *after* the sum), for
+/// **any** row count. Two properties the decode path needs that the packed
+/// kernel cannot give:
+///
+/// 1. **Batch invariance.** Every output row depends only on its own input
+///    row and the weight, with one fixed summation order — so a session
+///    decoded alone and the same session decoded inside a batch produce
+///    bit-identical rows (the scheduler's determinism guarantee).
+/// 2. **Bit-parity with the tiny-operand training forward.** On shapes
+///    under [`NT_PACK_MIN_MACS`] (every decode-parity test model),
+///    [`linear_fused`] takes the same dot-product path, so incremental
+///    decode is bitwise equal to the full-sequence forward.
+///
+/// Rows are processed in [`MM_ROW_BLOCK`]-row groups with the j-loop
+/// outside: one streamed pass over `w` serves the whole group, which is
+/// where batched decode's throughput win over per-session sequential
+/// decode comes from (the weight matrix is the traffic; activations are
+/// resident).
+pub fn linear_dot(x: &Tensor, w: &Tensor, bias: Option<&Tensor>, act: Act) -> Tensor {
+    let (m, k) = (x.shape[0], x.shape[1]);
+    let (n, k2) = (w.shape[0], w.shape[1]);
+    assert_eq!(k, k2, "linear_dot inner dims: {k} vs {k2}");
+    if let Some(b) = bias {
+        assert_eq!(b.numel(), n, "linear_dot bias dim");
+    }
+    let (xv, wv) = (x.f32s(), w.f32s());
+    let bv = bias.map(|b| b.f32s());
+    let mut y = arena::alloc_scratch(m * n);
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + MM_ROW_BLOCK).min(m);
+        for j in 0..n {
+            let wrow = &wv[j * k..(j + 1) * k];
+            for r in r0..r1 {
+                let xrow = &xv[r * k..(r + 1) * k];
+                let s: f32 = xrow.iter().zip(wrow.iter()).map(|(a, b)| a * b).sum();
+                y[r * n + j] = match bv {
+                    Some(b) => s + b[j],
+                    None => s,
+                };
+            }
+        }
+        r0 = r1;
+    }
+    if matches!(act, Act::Gelu) {
+        for yj in y.iter_mut() {
+            *yj = gelu_scalar(*yj);
+        }
+    }
+    Tensor::from_f32(&[m, n], y)
 }
 
 /// The n x n identity matrix (width-expansion fallback when dims match).
@@ -903,6 +958,69 @@ pub fn attention_bwd(
         Tensor::from_f32(&k.shape, dk),
         Tensor::from_f32(&v.shape, dvv),
     )
+}
+
+/// Single-query attention for incremental decode: one new query row
+/// against `s_k` cached K/V rows scattered across a [`PagedRows`] view.
+/// Writes softmax(q k^T / sqrt(dh)) v into `out` (dim floats); `scores` is
+/// caller-provided scratch (>= s_k floats — the decode loop reuses one
+/// buffer across layers and sessions, keeping this kernel allocation-free).
+///
+/// The arithmetic replicates [`attention_fwd`]'s last causal row exactly:
+/// the same k-ascending score dots, the same running max, the same
+/// `exp`/normalize passes, and the same h-outer j-ascending output
+/// accumulation — so given bitwise-equal q/k/v rows, the decode output row
+/// is bitwise equal to the full-sequence forward's final row.
+pub fn attention_decode(
+    q: &[f32],
+    k: &PagedRows<'_>,
+    v: &PagedRows<'_>,
+    heads: usize,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    let dim = q.len();
+    assert_eq!(dim % heads, 0, "dim {dim} not divisible by {heads} heads");
+    let dh = dim / heads;
+    let s_k = k.len();
+    assert_eq!(v.len(), s_k, "K/V cache length mismatch");
+    assert_eq!(k.dim(), dim, "attention_decode k dim");
+    assert_eq!(v.dim(), dim, "attention_decode v dim");
+    assert!(s_k > 0, "attention_decode over an empty cache");
+    assert!(scores.len() >= s_k, "scores scratch too small");
+    assert_eq!(out.len(), dim, "attention_decode out dim");
+    let scale = 1.0 / (dh as f32).sqrt();
+    out.fill(0.0);
+    for h in 0..heads {
+        let qrow = &q[h * dh..(h + 1) * dh];
+        let prow = &mut scores[..s_k];
+        let mut m = f32::NEG_INFINITY;
+        for (j, p) in prow.iter_mut().enumerate() {
+            let krow = &k.row(j)[h * dh..(h + 1) * dh];
+            let s: f32 = qrow.iter().zip(krow).map(|(a, c)| a * c).sum();
+            *p = s * scale;
+            m = m.max(*p);
+        }
+        let mut z = 0.0f32;
+        for p in prow.iter_mut() {
+            *p = (*p - m).exp();
+            z += *p;
+        }
+        let inv = 1.0 / z;
+        for p in prow.iter_mut() {
+            *p *= inv;
+        }
+        let orow = &mut out[h * dh..(h + 1) * dh];
+        for (j, &p) in prow.iter().enumerate() {
+            if p == 0.0 {
+                continue;
+            }
+            let vrow = &v.row(j)[h * dh..(h + 1) * dh];
+            for (o, &vj) in orow.iter_mut().zip(vrow) {
+                *o += p * vj;
+            }
+        }
+    }
 }
 
 /// Masked mean cross-entropy over the rows of `logits` (n, v): rows with
@@ -1430,6 +1548,176 @@ pub fn lm_head_argmax(x: &Tensor, w: &Tensor, b: Option<&Tensor>) -> Vec<usize> 
     }
     arena::recycle_buf(wt);
     best
+}
+
+/// Per-row sampling spec for [`lm_head_sample`]: keep the `top_k` highest
+/// logits (clamped to [`SAMPLE_MAX_TOPK`]), restrict to the smallest
+/// descending-probability prefix whose cumulative softmax mass reaches
+/// `top_p`, then pick via the uniform draw `u` in [0, 1). `top_k = 1`
+/// is greedy decoding regardless of `top_p`/`u`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SampleSpec {
+    pub top_k: usize,
+    pub top_p: f32,
+    pub u: f32,
+}
+
+impl SampleSpec {
+    /// Greedy (argmax) decoding.
+    pub fn greedy() -> SampleSpec {
+        SampleSpec { top_k: 1, top_p: 1.0, u: 0.0 }
+    }
+}
+
+/// Candidate-list capacity of [`lm_head_sample`]: top-k requests are
+/// clamped here so the per-row state stays a fixed stack array inside the
+/// streaming tile loop.
+pub const SAMPLE_MAX_TOPK: usize = 64;
+
+/// Streamed per-row top-k candidates + online logsumexp for one row block.
+struct SampleRow {
+    vals: [f32; SAMPLE_MAX_TOPK],
+    ids: [usize; SAMPLE_MAX_TOPK],
+    cnt: usize,
+    keep: usize,
+    m: f32,
+    l: f32,
+}
+
+impl SampleRow {
+    fn new(keep: usize) -> SampleRow {
+        SampleRow {
+            vals: [f32::NEG_INFINITY; SAMPLE_MAX_TOPK],
+            ids: [0; SAMPLE_MAX_TOPK],
+            cnt: 0,
+            keep,
+            m: f32::NEG_INFINITY,
+            l: 0.0,
+        }
+    }
+
+    /// Fold one logits tile in: update the online LSE (exactly the
+    /// [`lm_head_fwd_block`] recurrence) and merge the tile's entries into
+    /// the descending candidate list. Strict `>` on insertion keeps the
+    /// earliest column on ties — the [`lm_head_argmax`] tie-break, so
+    /// `top_k = 1` reproduces argmax exactly.
+    fn fold_tile(&mut self, row: &[f32], j0: usize) {
+        let tm = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let new_m = self.m.max(tm);
+        let mut tl = 0.0f32;
+        for &z in row {
+            tl += (z - new_m).exp();
+        }
+        self.l = self.l * (self.m - new_m).exp() + tl;
+        self.m = new_m;
+        for (jj, &z) in row.iter().enumerate() {
+            if self.cnt == self.keep && z <= self.vals[self.cnt - 1] {
+                continue;
+            }
+            let mut pos = self.cnt.min(self.keep - 1);
+            while pos > 0 && z > self.vals[pos - 1] {
+                self.vals[pos] = self.vals[pos - 1];
+                self.ids[pos] = self.ids[pos - 1];
+                pos -= 1;
+            }
+            self.vals[pos] = z;
+            self.ids[pos] = j0 + jj;
+            self.cnt = (self.cnt + 1).min(self.keep);
+        }
+    }
+
+    /// Nucleus-restricted categorical draw over the surviving candidates.
+    fn pick(&self, top_p: f32, u: f32) -> usize {
+        let lse = self.m + self.l.ln();
+        // smallest descending prefix with cumulative full-vocab softmax
+        // mass >= top_p (every candidate when the kept mass falls short)
+        let mut take = self.cnt;
+        let mut cum = 0.0f32;
+        for (c, &z) in self.vals[..self.cnt].iter().enumerate() {
+            cum += (z - lse).exp();
+            if cum >= top_p {
+                take = c + 1;
+                break;
+            }
+        }
+        let mass: f32 = self.vals[..take].iter().map(|&z| (z - lse).exp()).sum();
+        let target = u * mass;
+        let mut acc = 0.0f32;
+        for (&id, &z) in self.ids[..take].iter().zip(&self.vals[..take]) {
+            acc += (z - lse).exp();
+            if target < acc {
+                return id;
+            }
+        }
+        self.ids[take - 1] // float exhaustion: last survivor
+    }
+}
+
+/// Streaming top-k/top-p sampling over `x @ w^T (+ b)` — the decode-side
+/// companion of [`lm_head_argmax`]: one vocab-tile pass keeps, per row, the
+/// top-k logits and an online logsumexp, so the `(rows, vocab)` logits are
+/// never materialized and the softmax normalizer is exact over the *full*
+/// vocabulary (truncation only restricts which candidates may be drawn,
+/// not their probabilities). Tiles are bitwise equal to the packed
+/// [`linear_fused`] logits; with `top_k = 1` the result is exactly
+/// [`lm_head_argmax`]. Serial like argmax: callers pass batch-sized row
+/// counts.
+pub fn lm_head_sample(
+    x: &Tensor,
+    w: &Tensor,
+    b: Option<&Tensor>,
+    specs: &[SampleSpec],
+) -> Vec<usize> {
+    let (n, d) = (x.shape[0], x.shape[1]);
+    let (v, d2) = (w.shape[0], w.shape[1]);
+    assert_eq!(d, d2, "lm_head_sample inner dims: {d} vs {d2}");
+    assert_eq!(specs.len(), n, "one sampling spec per row");
+    if let Some(bb) = b {
+        assert_eq!(bb.numel(), v, "lm_head_sample bias dim");
+    }
+    // lint:allow(fresh_alloc) usize result buffer — the pool is f32-only
+    let mut out = vec![0usize; n];
+    if n == 0 || v == 0 {
+        return out;
+    }
+    let (xv, wv) = (x.f32s(), w.f32s());
+    let bv = b.map(|t| t.f32s());
+    let wt = pack_transposed(wv, v, d);
+    let ctx = HeadCtx { xv, wt: &wt, bv, d, v, labels: &[] };
+    let mut acc = [[0.0f32; XENT_TILE_V]; XENT_ROW_BLOCK];
+    let mut idxbuf = [0usize; XENT_ROW_BLOCK];
+    let mut i0 = 0;
+    while i0 < n {
+        let i1 = (i0 + XENT_ROW_BLOCK).min(n);
+        for (r, i) in (i0..i1).enumerate() {
+            idxbuf[r] = i;
+        }
+        let idx = &idxbuf[..i1 - i0];
+        let mut rows: [SampleRow; XENT_ROW_BLOCK] = std::array::from_fn(|r| {
+            let keep = if i0 + r < n {
+                specs[i0 + r].top_k.clamp(1, SAMPLE_MAX_TOPK).min(v)
+            } else {
+                1
+            };
+            SampleRow::new(keep)
+        });
+        let mut j0 = 0;
+        while j0 < v {
+            let j1 = (j0 + XENT_TILE_V).min(v);
+            lm_head_tile(&ctx, idx, j0, j1, &mut acc);
+            for (r, row) in rows[..idx.len()].iter_mut().enumerate() {
+                row.fold_tile(&acc[r][..j1 - j0], j0);
+            }
+            j0 = j1;
+        }
+        for (r, &i) in idx.iter().enumerate() {
+            let p = specs[i].top_p.clamp(f32::MIN_POSITIVE, 1.0);
+            out[i] = rows[r].pick(p, specs[i].u);
+        }
+        i0 = i1;
+    }
+    arena::recycle_buf(wt);
+    out
 }
 
 /// Row-wise argmax of a 2-D tensor (classification-metric helper).
@@ -2067,5 +2355,124 @@ mod tests {
         set_fused_xent_override(Some(true));
         assert!(fused_xent_enabled());
         set_fused_xent_override(None);
+    }
+
+    #[test]
+    fn linear_dot_matches_dot_path_bitwise_and_packed_close() {
+        let mut rng = crate::util::rng::Rng::new(47);
+        // tiny shape: linear_fused takes the dot path -> bitwise equality
+        let x = rand_t(&[3, 5], -2.0, 2.0, &mut rng);
+        let w = rand_t(&[4, 5], -1.0, 1.0, &mut rng);
+        let b = rand_t(&[4], -0.5, 0.5, &mut rng);
+        for (bias, act) in
+            [(Some(&b), Act::None), (None, Act::None), (Some(&b), Act::Gelu), (None, Act::Gelu)]
+        {
+            let (want, _) = linear_fused(&x, &w, bias, act);
+            let got = linear_dot(&x, &w, bias, act);
+            assert_eq!(got.shape, want.shape);
+            for (g, e) in got.f32s().iter().zip(want.f32s()) {
+                assert_eq!(g.to_bits(), e.to_bits(), "dot-path bit parity");
+            }
+        }
+        // packed-path shape (16*8*200 MACs >= NT_PACK_MIN_MACS): the packed
+        // kernel reassociates, so agreement is <= 1e-5 relative, not bitwise
+        let (n, d, v) = (16usize, 8usize, 200usize);
+        assert!(n * d * v >= NT_PACK_MIN_MACS);
+        let x = rand_t(&[n, d], -2.0, 2.0, &mut rng);
+        let w = rand_t(&[v, d], -1.0, 1.0, &mut rng);
+        let (want, _) = linear_fused(&x, &w, None, Act::None);
+        let got = linear_dot(&x, &w, None, Act::None);
+        assert_close(&got, &want, 1e-5, "linear_dot vs packed linear_fused");
+    }
+
+    #[test]
+    fn linear_dot_is_batch_invariant() {
+        // row r of an m-row call is bitwise equal to a 1-row call on row r —
+        // the property the decode scheduler's determinism rests on
+        let mut rng = crate::util::rng::Rng::new(48);
+        let x = rand_t(&[5, 6], -2.0, 2.0, &mut rng);
+        let w = rand_t(&[7, 6], -1.0, 1.0, &mut rng);
+        let b = rand_t(&[7], -0.5, 0.5, &mut rng);
+        let all = linear_dot(&x, &w, Some(&b), Act::Gelu);
+        for r in 0..5 {
+            let xr = t2([1, 6], x.f32s()[r * 6..(r + 1) * 6].to_vec());
+            let solo = linear_dot(&xr, &w, Some(&b), Act::Gelu);
+            for (g, e) in solo.f32s().iter().zip(&all.f32s()[r * 7..(r + 1) * 7]) {
+                assert_eq!(g.to_bits(), e.to_bits(), "row {r} batch invariance");
+            }
+        }
+    }
+
+    #[test]
+    fn attention_decode_matches_last_causal_row_bitwise() {
+        use crate::tensor::paged::{PagePool, PagedRows};
+        let (heads, dh, s) = (2usize, 3usize, 5usize);
+        let dim = heads * dh;
+        let mut rng = crate::util::rng::Rng::new(49);
+        let q = rand_t(&[s, dim], -1.0, 1.0, &mut rng);
+        let k = rand_t(&[s, dim], -1.0, 1.0, &mut rng);
+        let v = rand_t(&[s, dim], -1.0, 1.0, &mut rng);
+        let sh = AttnShape { batch: 1, heads, s_q: s, s_k: s, causal: true };
+        let (full, _probs) = attention_fwd(&q, &k, &v, &sh);
+        // scatter K/V into 2-row pages and decode the final position
+        let rows_per_page = 2;
+        let mut pool = PagePool::new(rows_per_page * dim);
+        let table: Vec<usize> = (0..s.div_ceil(rows_per_page)).map(|_| pool.alloc()).collect();
+        for t in 0..s {
+            let page = pool.page_mut(table[t / rows_per_page]);
+            let off = (t % rows_per_page) * dim;
+            page[off..off + dim].copy_from_slice(&k.f32s()[t * dim..(t + 1) * dim]);
+        }
+        let mut vpool = PagePool::new(rows_per_page * dim);
+        let vtable: Vec<usize> = (0..s.div_ceil(rows_per_page)).map(|_| vpool.alloc()).collect();
+        for t in 0..s {
+            let page = vpool.page_mut(vtable[t / rows_per_page]);
+            let off = (t % rows_per_page) * dim;
+            page[off..off + dim].copy_from_slice(&v.f32s()[t * dim..(t + 1) * dim]);
+        }
+        let kview = PagedRows::new(&pool, &table, rows_per_page, dim, s);
+        let vview = PagedRows::new(&vpool, &vtable, rows_per_page, dim, s);
+        let mut scores = [0.0f32; 8];
+        let mut out = [0.0f32; 6];
+        let qlast = &q.f32s()[(s - 1) * dim..s * dim];
+        attention_decode(qlast, &kview, &vview, heads, &mut scores, &mut out);
+        for (g, e) in out.iter().zip(&full.f32s()[(s - 1) * dim..s * dim]) {
+            assert_eq!(g.to_bits(), e.to_bits(), "decode vs last causal row");
+        }
+    }
+
+    #[test]
+    fn lm_head_sample_greedy_matches_argmax() {
+        // v spans 3 tiles and n exercises both the full 4-row block and the
+        // remainder path; top_k = 1 must reproduce argmax exactly.
+        let (n, d, v) = (7usize, 6usize, 300usize);
+        let mut rng = crate::util::rng::Rng::new(50);
+        let x = rand_t(&[n, d], -2.0, 2.0, &mut rng);
+        let w = rand_t(&[v, d], -1.0, 1.0, &mut rng);
+        let b = rand_t(&[v], -0.5, 0.5, &mut rng);
+        for bias in [Some(&b), None] {
+            let specs = vec![SampleSpec::greedy(); n];
+            assert_eq!(lm_head_sample(&x, &w, bias, &specs), lm_head_argmax(&x, &w, bias));
+            // a nonzero draw must not change greedy decoding
+            let specs = vec![SampleSpec { top_k: 1, top_p: 0.3, u: 0.999 }; n];
+            assert_eq!(lm_head_sample(&x, &w, bias, &specs), lm_head_argmax(&x, &w, bias));
+        }
+    }
+
+    #[test]
+    fn lm_head_sample_nucleus_hand_case() {
+        // identity head on a 1x4 "logit" row: softmax of [2, 1, 0, -1].
+        // descending probs ~ [.644, .237, .087, .032]; top_p = 0.7 keeps
+        // {2, 1}, so u below .644/.881 picks column 0, above picks column 1.
+        let x = t2([1, 4], vec![2.0, 1.0, 0.0, -1.0]);
+        let w = eye(4);
+        let pick = |top_p: f32, u: f32| {
+            lm_head_sample(&x, &w, None, &[SampleSpec { top_k: 4, top_p, u }])[0]
+        };
+        assert_eq!(pick(0.7, 0.0), 0);
+        assert_eq!(pick(0.7, 0.5), 0);
+        assert_eq!(pick(0.7, 0.99), 1); // nucleus kept column 1 alive
+        assert_eq!(pick(0.5, 0.99), 0); // p=0.5: only column 0 survives
+        assert_eq!(pick(1.0, 0.95), 2); // full nucleus: tail reachable
     }
 }

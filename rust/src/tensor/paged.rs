@@ -1,0 +1,239 @@
+//! Paged f32 buffer pool for KV caches.
+//!
+//! Decode sessions come and go continuously, so the KV cache cannot be one
+//! monolithic buffer per session: a finished session must hand its memory
+//! straight to the next admit without touching the allocator. `PagePool`
+//! carves fixed-size pages out of `tensor/arena.rs` buffers and recycles
+//! them through a free list — after warm-up, admitting/evicting sessions
+//! performs **zero** fresh allocations (the same discipline the trainer's
+//! steady-state tests enforce on the training arena, observable here via
+//! `PagePool::stats`).
+//!
+//! Sessions never hold pages directly; they hold *page tables* (`Vec<usize>`
+//! of page indices) and read rows through the [`PagedRows`] view, which maps
+//! a logical row index to `(page, offset)` on the fly. That keeps the K/V
+//! layout fully scattered — growing a session by one page never moves
+//! existing rows.
+
+use crate::tensor::arena;
+
+/// Fixed-size page pool. Every page holds `page_floats` f32s drawn from the
+/// arena; freed pages go on a free list and are reused before any new page
+/// is created.
+#[derive(Debug, Default)]
+pub struct PagePool {
+    page_floats: usize,
+    pages: Vec<Vec<f32>>,
+    free: Vec<usize>,
+    live: Vec<bool>,
+    fresh: u64,
+    reused: u64,
+}
+
+impl PagePool {
+    pub fn new(page_floats: usize) -> PagePool {
+        assert!(page_floats > 0, "page size must be positive");
+        PagePool { page_floats, ..Default::default() }
+    }
+
+    /// Floats per page.
+    pub fn page_floats(&self) -> usize {
+        self.page_floats
+    }
+
+    /// Allocate a page, reusing the free list when possible. Reused pages
+    /// are zeroed so a new session never observes a dead session's K/V.
+    pub fn alloc(&mut self) -> usize {
+        if let Some(idx) = self.free.pop() {
+            debug_assert!(!self.live[idx]);
+            self.pages[idx].fill(0.0);
+            self.live[idx] = true;
+            self.reused += 1;
+            return idx;
+        }
+        self.fresh += 1;
+        self.pages.push(arena::alloc_zeroed(self.page_floats));
+        self.live.push(true);
+        self.pages.len() - 1
+    }
+
+    /// Return a page to the free list. Panics on double-free.
+    pub fn free(&mut self, idx: usize) {
+        assert!(self.live[idx], "double free of page {idx}");
+        self.live[idx] = false;
+        self.free.push(idx);
+    }
+
+    pub fn page(&self, idx: usize) -> &[f32] {
+        debug_assert!(self.live[idx], "read of freed page {idx}");
+        &self.pages[idx]
+    }
+
+    pub fn page_mut(&mut self, idx: usize) -> &mut [f32] {
+        debug_assert!(self.live[idx], "write to freed page {idx}");
+        &mut self.pages[idx]
+    }
+
+    /// Number of currently-live pages.
+    pub fn live(&self) -> usize {
+        self.live.iter().filter(|l| **l).count()
+    }
+
+    /// Total pages ever created (live + free).
+    pub fn total(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    /// `(fresh, reused)` page-allocation counters — at steady state only
+    /// `reused` moves.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.fresh, self.reused)
+    }
+
+    /// Structural self-check: the free list and the live flags must be
+    /// exact complements of each other.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.pages.len() != self.live.len() {
+            return Err("pages/live length mismatch".into());
+        }
+        let mut on_free = vec![false; self.pages.len()];
+        for &idx in &self.free {
+            if idx >= self.pages.len() {
+                return Err(format!("free-list entry {idx} out of range"));
+            }
+            if on_free[idx] {
+                return Err(format!("page {idx} appears twice on the free list"));
+            }
+            on_free[idx] = true;
+        }
+        for (idx, (&live, &free)) in self.live.iter().zip(&on_free).enumerate() {
+            if live == free {
+                return Err(format!("page {idx}: live={live} but on_free={free}"));
+            }
+            if self.pages[idx].len() != self.page_floats {
+                return Err(format!("page {idx} has wrong size"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop every page back into the arena. All pages must be freed first.
+    pub fn clear(&mut self) {
+        assert_eq!(self.live(), 0, "clear with live pages");
+        for page in self.pages.drain(..) {
+            arena::recycle_buf(page);
+        }
+        self.free.clear();
+        self.live.clear();
+    }
+}
+
+/// Read-only view of `len` rows of width `dim` scattered across a page
+/// table. Row `t` lives in page `table[t / rows_per_page]` at row offset
+/// `t % rows_per_page`.
+pub struct PagedRows<'a> {
+    pool: &'a PagePool,
+    table: &'a [usize],
+    rows_per_page: usize,
+    dim: usize,
+    len: usize,
+}
+
+impl<'a> PagedRows<'a> {
+    pub fn new(
+        pool: &'a PagePool,
+        table: &'a [usize],
+        rows_per_page: usize,
+        dim: usize,
+        len: usize,
+    ) -> PagedRows<'a> {
+        assert!(rows_per_page * dim <= pool.page_floats(), "rows overflow the page");
+        assert!(len <= table.len() * rows_per_page, "len exceeds the page table");
+        PagedRows { pool, table, rows_per_page, dim, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The `dim` floats of logical row `t`.
+    pub fn row(&self, t: usize) -> &[f32] {
+        debug_assert!(t < self.len, "row {t} out of {}", self.len);
+        let page = self.pool.page(self.table[t / self.rows_per_page]);
+        &page[(t % self.rows_per_page) * self.dim..][..self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_reuses_pages() {
+        let mut pool = PagePool::new(8);
+        let a = pool.alloc();
+        let b = pool.alloc();
+        assert_eq!(pool.stats(), (2, 0));
+        pool.page_mut(a)[0] = 7.0;
+        pool.free(a);
+        let c = pool.alloc();
+        assert_eq!(c, a, "free list is LIFO");
+        assert_eq!(pool.page(c)[0], 0.0, "reused pages are zeroed");
+        assert_eq!(pool.stats(), (2, 1));
+        pool.free(b);
+        pool.free(c);
+        pool.check_invariants().unwrap();
+        pool.clear();
+        assert_eq!(pool.total(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut pool = PagePool::new(4);
+        let a = pool.alloc();
+        pool.free(a);
+        pool.free(a);
+    }
+
+    #[test]
+    fn paged_rows_maps_rows_across_pages() {
+        let mut pool = PagePool::new(12); // 3 rows of dim 4 per page
+        let table = [pool.alloc(), pool.alloc()];
+        for (p, &idx) in table.iter().enumerate() {
+            for (i, x) in pool.page_mut(idx).iter_mut().enumerate() {
+                *x = (p * 12 + i) as f32;
+            }
+        }
+        let rows = PagedRows::new(&pool, &table, 3, 4, 5);
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows.dim(), 4);
+        assert_eq!(rows.row(0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(rows.row(2), &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(rows.row(3), &[12.0, 13.0, 14.0, 15.0]); // second page
+        assert_eq!(rows.row(4), &[16.0, 17.0, 18.0, 19.0]);
+    }
+
+    #[test]
+    fn invariants_catch_corruption() {
+        let mut pool = PagePool::new(4);
+        let a = pool.alloc();
+        pool.check_invariants().unwrap();
+        pool.free(a);
+        pool.check_invariants().unwrap();
+        pool.free.push(a); // corrupt: duplicate free entry
+        assert!(pool.check_invariants().is_err());
+    }
+}

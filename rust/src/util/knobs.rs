@@ -102,6 +102,18 @@ pub const REGISTRY: &[Knob] = &[
         default: "unset (no gate)",
         doc: "growth_ops bench: fail when the ligo_task_native mean exceeds the budget",
     },
+    Knob {
+        name: "LIGO_DECODE_SESSIONS",
+        ty: "usize >= 1",
+        default: "4",
+        doc: "ligo serve: max concurrent decode sessions per batched step",
+    },
+    Knob {
+        name: "LIGO_DECODE_PAGE",
+        ty: "usize >= 1",
+        default: "16",
+        doc: "ligo serve: tokens per KV-cache page (per layer, per K/V side)",
+    },
 ];
 
 /// Look a knob up in [`REGISTRY`] (e.g. for doc rendering).
@@ -231,6 +243,26 @@ mod tests {
         std::env::set_var("LIGO_TEST_FLAG", "1");
         assert!(flag_enabled("LIGO_TEST_FLAG"));
         assert!(is_set("LIGO_TEST_FLAG"));
+    }
+
+    #[test]
+    fn mis_parsed_worker_knobs_warn_exactly_once_each() {
+        // The regression the registry exists for: a typo'd LIGO_WORKERS=two
+        // must warn (not silently fall back to the serial loop), and a knob
+        // re-read in a hot path must not warn again. The warned-set is the
+        // warn hook's once-per-knob record — observable directly here.
+        for name in ["LIGO_WORKERS", "LIGO_THREADS"] {
+            {
+                let seen = warned().lock().unwrap_or_else(|p| p.into_inner());
+                assert!(!seen.contains(name), "{name} must start unwarned");
+            }
+            std::env::set_var(name, if name == "LIGO_WORKERS" { "two" } else { "many" });
+            assert_eq!(usize_env(name), None, "{name} mis-parse reads as unset");
+            assert_eq!(usize_env(name), None, "second read stays unset");
+            std::env::remove_var(name);
+            let seen = warned().lock().unwrap_or_else(|p| p.into_inner());
+            assert!(seen.contains(name), "{name} must be recorded after the first warn");
+        }
     }
 
     #[test]

@@ -1,0 +1,466 @@
+//! Decode-vs-training parity harness — the acceptance suite for the
+//! KV-cached incremental decode path and the continuous-batching scheduler.
+//!
+//! Four claims are pinned here:
+//!
+//! * **(a) decode == training.** `Decoder::forward_full` is the training
+//!   forward (bitwise, via the fused head loss), and prefill + N
+//!   incremental `decode_step`s reproduce it — bitwise on dot-path shapes
+//!   (the tiny and LEMON-grown models) and to ≤1e-5 relative on every GPT
+//!   registry preset, with greedy-token agreement.
+//! * **(b) scheduler determinism.** Any admission order, concurrency cap,
+//!   or staggered interleaving of S sessions yields per-session token
+//!   streams identical to each session decoded alone.
+//! * **(c) paged allocator safety.** Random alloc/free workloads never
+//!   leak or alias pages, and a warm decode loop performs zero fresh
+//!   arena allocations and zero fresh pool pages.
+//! * **(d) sampling parity.** Streaming `lm_head_sample` is exactly
+//!   `lm_head_argmax` at `top_k = 1` (multi-tile vocab), and matches a
+//!   materialized-softmax nucleus reference on a small vocabulary.
+
+use ligo::config::{ModelConfig, Registry};
+use ligo::coordinator::serve::{Completion, Request, Scheduler, ServeOptions};
+use ligo::growth::lemon::Lemon;
+use ligo::model::decode::{Decoder, KvCache, StepInput};
+use ligo::model::{loss_only, param_shapes};
+use ligo::tensor::arena;
+use ligo::tensor::ops::{self, Act, SampleSpec};
+use ligo::tensor::paged::PagePool;
+use ligo::tensor::store::Store;
+use ligo::tensor::Tensor;
+use ligo::util::knobs;
+use ligo::util::rng::Rng;
+
+fn tiny_gpt(name: &str, layers: usize, dim: usize, heads: usize, vocab: usize, seq: usize) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        family: "gpt".into(),
+        layers,
+        dim,
+        heads,
+        vocab,
+        seq,
+        batch: 2,
+        img: 0,
+        patch: 0,
+        channels: 3,
+        n_classes: 0,
+        cls_layers: 0,
+        ffn_mult: 4,
+    }
+}
+
+fn gpt_presets(reg: &Registry) -> Vec<ModelConfig> {
+    reg.models
+        .values()
+        .filter(|c| c.family == "gpt" && c.n_classes == 0)
+        .cloned()
+        .collect()
+}
+
+fn rel_err(a: f32, b: f32) -> f32 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1.0)
+}
+
+/// One logit of the tied head: `dot(xrow, w[id]) + b[id]`.
+fn head_logit(xrow: &[f32], w: &Tensor, b: &Tensor, id: usize) -> f32 {
+    let d = xrow.len();
+    let wrow = &w.f32s()[id * d..(id + 1) * d];
+    let s: f32 = xrow.iter().zip(wrow).map(|(a, c)| a * c).sum();
+    s + b.f32s()[id]
+}
+
+// ---------------------------------------------------------------- (a) ---
+
+#[test]
+fn forward_full_is_the_training_forward_bitwise() {
+    // Project forward_full's final hidden states through the fused head
+    // and compare the loss to the training tape's, bitwise: both paths
+    // must run the *same* kernels in the same order at batch 1.
+    let reg = Registry::builtin();
+    ops::set_fused_override(Some(true));
+    ops::set_fused_xent_override(Some(true));
+    for preset in gpt_presets(&reg) {
+        let mut cfg = preset.clone();
+        cfg.batch = 1;
+        let params = Store::det_init(&param_shapes(&cfg), 7);
+        let mut rng = Rng::new(11);
+        let tokens: Vec<i32> = (0..cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let mut labels: Vec<i32> = tokens[1..].to_vec();
+        labels.push(-1);
+        let mut batch = Store::new();
+        batch.insert("tokens", Tensor::from_i32(&[1, cfg.seq], tokens.clone()));
+        batch.insert("labels", Tensor::from_i32(&[1, cfg.seq], labels.clone()));
+        let (train_loss, _) = loss_only(&cfg, &params, &batch).unwrap();
+        let dec = Decoder::new(&cfg, &params).unwrap();
+        let xf = dec.forward_full(&tokens).unwrap();
+        let (w, b) = dec.head();
+        let (head_loss, _count, stats) = ops::lm_head_xent_fwd(&xf, w, Some(b), &labels);
+        arena::recycle_buf(stats);
+        arena::recycle(xf);
+        assert_eq!(
+            train_loss.to_bits(),
+            head_loss.to_bits(),
+            "'{}': training loss {train_loss} != decode-anchor loss {head_loss}",
+            cfg.name
+        );
+    }
+    ops::set_fused_override(None);
+    ops::set_fused_xent_override(None);
+}
+
+#[test]
+fn incremental_decode_matches_full_forward_on_every_gpt_preset() {
+    let reg = Registry::builtin();
+    let presets = gpt_presets(&reg);
+    assert!(presets.len() >= 2, "registry lost its gpt presets");
+    for (pi, cfg) in presets.iter().enumerate() {
+        let params = Store::det_init(&param_shapes(cfg), 9);
+        let dec = Decoder::new(cfg, &params).unwrap();
+        let mut rng = Rng::new(0xD0 + pi as u64);
+        let t = cfg.seq.min(16);
+        let tokens: Vec<i32> = (0..t).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let full = dec.forward_full(&tokens).unwrap();
+        // odd page size: steps cross page boundaries mid-run
+        let page_tokens = 3;
+        let mut pool = PagePool::new(page_tokens * cfg.dim);
+        let mut cache = KvCache::new(cfg.layers, page_tokens, cfg.dim, cfg.seq);
+        let prefix = (t / 2).max(1);
+        let pre = dec.prefill(&tokens[..prefix], &mut cache, &mut pool).unwrap();
+        for (i, (g, e)) in pre.f32s().iter().zip(full.f32s()).enumerate() {
+            assert!(
+                rel_err(*g, *e) <= 1e-5,
+                "'{}' prefill elem {i}: {g} vs {e}",
+                cfg.name
+            );
+        }
+        arena::recycle(pre);
+        let (w, b) = dec.head();
+        for (pos, &tok) in tokens.iter().enumerate().skip(prefix) {
+            let feeds = [StepInput { token: tok, pos }];
+            let xf = dec
+                .decode_step(&feeds, std::slice::from_mut(&mut cache), &mut pool)
+                .unwrap();
+            let want = &full.f32s()[pos * cfg.dim..(pos + 1) * cfg.dim];
+            for (i, (g, e)) in xf.f32s().iter().zip(want).enumerate() {
+                assert!(
+                    rel_err(*g, *e) <= 1e-5,
+                    "'{}' step {pos} elem {i}: {g} vs {e}",
+                    cfg.name
+                );
+            }
+            // greedy-token parity against the full forward's row; a
+            // near-tie (top-2 gap inside float noise) is the only
+            // acceptable divergence
+            let inc = ops::lm_head_sample(&xf, w, Some(b), &[SampleSpec::greedy()])[0];
+            let row = Tensor::from_f32(&[1, cfg.dim], want.to_vec());
+            let am = ops::lm_head_argmax(&row, w, Some(b))[0];
+            if inc != am {
+                let zi = head_logit(xf.f32s(), w, b, inc);
+                let za = head_logit(want, w, b, am);
+                assert!(
+                    (zi - za).abs() <= 1e-4 * zi.abs().max(za.abs()).max(1.0),
+                    "'{}' step {pos}: greedy {inc} != argmax {am} and logits differ ({zi} vs {za})",
+                    cfg.name
+                );
+            }
+            arena::recycle(xf);
+        }
+        arena::recycle(full);
+        cache.release(&mut pool);
+        assert_eq!(pool.live(), 0, "'{}' leaked KV pages", cfg.name);
+        pool.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn lemon_grown_model_decodes_bitwise_like_its_full_forward() {
+    // A grown model must serve exactly like a scratch one: LEMON-expand
+    // the in-regime tiny pair and require *bitwise* prefill/step parity
+    // (all shapes sit on the shared dot-product kernel path).
+    let cfg_s = tiny_gpt("lemon_gpt_s", 2, 8, 2, 24, 6);
+    let cfg_l = tiny_gpt("lemon_gpt_l", 3, 16, 4, 24, 6);
+    Lemon::check_pair(&cfg_s, &cfg_l).unwrap();
+    let small = Store::det_init(&param_shapes(&cfg_s), 21);
+    let grown = Lemon.expand(&small, &cfg_s, &cfg_l).unwrap();
+    let dec = Decoder::new(&cfg_l, &grown).unwrap();
+    let tokens: Vec<i32> = vec![2, 7, 1, 19, 0, 23];
+    let full = dec.forward_full(&tokens).unwrap();
+    let mut pool = PagePool::new(2 * cfg_l.dim);
+    let mut cache = KvCache::new(cfg_l.layers, 2, cfg_l.dim, cfg_l.seq);
+    let prefix = 3;
+    let pre = dec.prefill(&tokens[..prefix], &mut cache, &mut pool).unwrap();
+    for (g, e) in pre.f32s().iter().zip(full.f32s()) {
+        assert_eq!(g.to_bits(), e.to_bits(), "grown prefill must be bitwise");
+    }
+    arena::recycle(pre);
+    let (w, b) = dec.head();
+    for (pos, &tok) in tokens.iter().enumerate().skip(prefix) {
+        let feeds = [StepInput { token: tok, pos }];
+        let xf = dec
+            .decode_step(&feeds, std::slice::from_mut(&mut cache), &mut pool)
+            .unwrap();
+        let want = &full.f32s()[pos * cfg_l.dim..(pos + 1) * cfg_l.dim];
+        for (g, e) in xf.f32s().iter().zip(want) {
+            assert_eq!(g.to_bits(), e.to_bits(), "grown step {pos} must be bitwise");
+        }
+        let inc = ops::lm_head_sample(&xf, w, Some(b), &[SampleSpec::greedy()])[0];
+        let row = Tensor::from_f32(&[1, cfg_l.dim], want.to_vec());
+        assert_eq!(inc, ops::lm_head_argmax(&row, w, Some(b))[0]);
+        arena::recycle(xf);
+    }
+    arena::recycle(full);
+    cache.release(&mut pool);
+    assert_eq!(pool.live(), 0);
+}
+
+// ---------------------------------------------------------------- (b) ---
+
+#[test]
+fn any_admission_interleaving_reproduces_solo_token_streams() {
+    let cfg = tiny_gpt("sched_gpt", 2, 8, 2, 48, 16);
+    let params = Store::det_init(&param_shapes(&cfg), 33);
+    let dec = Decoder::new(&cfg, &params).unwrap();
+    let plens = [2usize, 5, 3, 7, 1];
+    let news = [6usize, 3, 8, 2, 5];
+    let ks = [1usize, 4, 8, 2, 6];
+    let ps = [1.0f32, 0.9, 0.6, 1.0, 0.8];
+    let mut rng = Rng::new(0xAB);
+    let reqs: Vec<Request> = (0..5)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..plens[i]).map(|_| rng.below(cfg.vocab) as i32).collect(),
+            max_new: news[i],
+            top_k: ks[i],
+            top_p: ps[i],
+            seed: 100 + i as u64,
+        })
+        .collect();
+    let opts = |ms: usize| ServeOptions { max_sessions: ms, page_tokens: 4 };
+
+    // ground truth: each session decoded entirely alone
+    let mut solo: Vec<Completion> = reqs
+        .iter()
+        .map(|r| {
+            let mut s = Scheduler::new(&dec, opts(1));
+            s.submit(r.clone()).unwrap();
+            s.run().unwrap();
+            assert_eq!(s.pool().live(), 0);
+            let mut done = s.take_done();
+            assert_eq!(done.len(), 1);
+            done.pop().unwrap()
+        })
+        .collect();
+    solo.sort_by_key(|c| c.id);
+
+    let check = |mut done: Vec<Completion>, what: &str| {
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done, solo, "{what} changed a token stream");
+    };
+
+    for ms in [2usize, 3, 5] {
+        let mut s = Scheduler::new(&dec, opts(ms));
+        for r in &reqs {
+            s.submit(r.clone()).unwrap();
+        }
+        s.run().unwrap();
+        assert_eq!(s.pool().live(), 0);
+        check(s.take_done(), &format!("batched run (max_sessions {ms})"));
+
+        let mut s = Scheduler::new(&dec, opts(ms));
+        for r in reqs.iter().rev() {
+            s.submit(r.clone()).unwrap();
+        }
+        s.run().unwrap();
+        check(s.take_done(), &format!("reversed admission (max_sessions {ms})"));
+    }
+
+    // staggered admissions: late arrivals join mid-flight sessions
+    let mut s = Scheduler::new(&dec, opts(3));
+    for r in &reqs[..2] {
+        s.submit(r.clone()).unwrap();
+    }
+    s.step().unwrap();
+    s.step().unwrap();
+    for r in &reqs[2..] {
+        s.submit(r.clone()).unwrap();
+    }
+    s.run().unwrap();
+    assert_eq!(s.pool().live(), 0);
+    check(s.take_done(), "staggered admission");
+}
+
+// ---------------------------------------------------------------- (c) ---
+
+#[test]
+fn page_pool_random_workloads_never_leak_or_alias() {
+    // Seeded random alloc/free against a mirror model; a unique sentinel
+    // fill per allocation catches aliasing, live-count tracking catches
+    // leaks, and check_invariants runs after every operation.
+    let seeds: Vec<u64> = match knobs::u64_env("LIGO_PROP_SEED") {
+        Some(s) => vec![s],
+        None => (0..8).collect(),
+    };
+    for seed in seeds {
+        let mut pool = PagePool::new(16);
+        let mut rng = Rng::new(seed);
+        let mut live: Vec<(usize, f32)> = Vec::new();
+        for op in 0..400u32 {
+            if live.is_empty() || rng.coin(0.55) {
+                let idx = pool.alloc();
+                let sentinel = (seed as u32 * 1000 + op) as f32;
+                pool.page_mut(idx).fill(sentinel);
+                live.push((idx, sentinel));
+            } else {
+                let j = rng.below(live.len());
+                let (idx, sentinel) = live.swap_remove(j);
+                assert!(
+                    pool.page(idx).iter().all(|&x| x == sentinel),
+                    "seed {seed} op {op}: page {idx} clobbered (aliased)"
+                );
+                pool.free(idx);
+            }
+            pool.check_invariants().unwrap_or_else(|e| panic!("seed {seed} op {op}: {e}"));
+            assert_eq!(pool.live(), live.len(), "seed {seed} op {op}: leak");
+            if op % 16 == 0 {
+                for &(idx, sentinel) in &live {
+                    assert!(
+                        pool.page(idx).iter().all(|&x| x == sentinel),
+                        "seed {seed} op {op}: live page {idx} lost its sentinel"
+                    );
+                }
+            }
+        }
+        // steady state: a drained pool re-serves everything from the free
+        // list — the fresh-page counter must not move
+        let total = pool.total();
+        for (idx, _) in live.drain(..) {
+            pool.free(idx);
+        }
+        assert_eq!(pool.live(), 0);
+        let (fresh, _) = pool.stats();
+        let held: Vec<usize> = (0..total).map(|_| pool.alloc()).collect();
+        assert_eq!(pool.stats().0, fresh, "seed {seed}: steady-state alloc went fresh");
+        for idx in held {
+            pool.free(idx);
+        }
+        pool.check_invariants().unwrap();
+        pool.clear();
+    }
+}
+
+#[test]
+fn warm_decode_loop_performs_zero_fresh_allocations() {
+    if !arena::enabled() {
+        return;
+    }
+    let cfg = tiny_gpt("steady_gpt", 2, 8, 2, 24, 8);
+    let params = Store::det_init(&param_shapes(&cfg), 41);
+    let dec = Decoder::new(&cfg, &params).unwrap();
+    let mut pool = PagePool::new(2 * cfg.dim);
+    let run = |pool: &mut PagePool| {
+        let mut cache = KvCache::new(cfg.layers, 2, cfg.dim, cfg.seq);
+        arena::recycle(dec.prefill(&[1, 2, 3], &mut cache, pool).unwrap());
+        let (w, b) = dec.head();
+        let mut tok = 5i32;
+        for pos in 3..cfg.seq {
+            let feeds = [StepInput { token: tok, pos }];
+            let xf = dec.decode_step(&feeds, std::slice::from_mut(&mut cache), pool).unwrap();
+            tok = ops::lm_head_sample(&xf, w, Some(b), &[SampleSpec::greedy()])[0] as i32;
+            arena::recycle(xf);
+        }
+        cache.release(pool);
+    };
+    run(&mut pool); // warm: populate the recycle pools and the page pool
+    arena::reset_stats();
+    let fresh_pages = pool.stats().0;
+    run(&mut pool);
+    let (fresh, reused) = arena::stats();
+    assert_eq!(fresh, 0, "warm decode loop allocated {fresh} fresh arena buffers");
+    assert!(reused > 0, "warm decode loop must be recycling buffers");
+    assert_eq!(pool.stats().0, fresh_pages, "warm decode loop allocated fresh pages");
+    assert_eq!(pool.live(), 0);
+}
+
+// ---------------------------------------------------------------- (d) ---
+
+#[test]
+fn greedy_sampling_is_argmax_on_a_multi_tile_vocab() {
+    // vocab 300 spans three streaming tiles; top_k = 1 must reproduce
+    // lm_head_argmax exactly, whatever top_p/u say.
+    let (n, d, v) = (5usize, 16usize, 300usize);
+    let mut rng = Rng::new(0x5A);
+    let x = Tensor::from_f32(&[n, d], (0..n * d).map(|_| rng.normal()).collect());
+    let w = Tensor::from_f32(&[v, d], (0..v * d).map(|_| rng.normal()).collect());
+    let b = Tensor::from_f32(&[v], (0..v).map(|_| rng.normal()).collect());
+    let am = ops::lm_head_argmax(&x, &w, Some(&b));
+    let greedy = ops::lm_head_sample(&x, &w, Some(&b), &vec![SampleSpec::greedy(); n]);
+    assert_eq!(greedy, am);
+    let tricky: Vec<SampleSpec> =
+        (0..n).map(|_| SampleSpec { top_k: 1, top_p: 0.01, u: 0.97 }).collect();
+    assert_eq!(
+        ops::lm_head_sample(&x, &w, Some(&b), &tricky),
+        am,
+        "top_k = 1 is greedy regardless of top_p/u"
+    );
+}
+
+#[test]
+fn top_p_sampling_matches_a_materialized_softmax_reference() {
+    // Packed-path shape (m*k*v hits the packing threshold) so the
+    // materialized linear_fused logits are bitwise the streamed tiles;
+    // one-tile vocab so the reference can replay the online-LSE
+    // arithmetic exactly. The reference materializes the softmax, builds
+    // the descending candidate list (stable sort keeps the earliest
+    // column on ties, like the streaming insert), truncates to the
+    // nucleus, and draws — every pick must agree exactly.
+    let (n, d, v) = (8usize, 32usize, 64usize);
+    let mut rng = Rng::new(0x7E);
+    let x = Tensor::from_f32(&[n, d], (0..n * d).map(|_| rng.normal()).collect());
+    let w = Tensor::from_f32(&[v, d], (0..v * d).map(|_| rng.normal()).collect());
+    let b = Tensor::from_f32(&[v], (0..v).map(|_| rng.normal()).collect());
+    let ks = [64usize, 5, 3, 1, 8, 64, 2, 7];
+    let ps = [1.0f32, 0.9, 0.5, 0.7, 0.2, 1e-6, 0.85, 0.65];
+    let us = [0.0f32, 0.37, 0.93, 0.5, 0.99, 0.1, 0.77, 0.42];
+    let specs: Vec<SampleSpec> =
+        (0..n).map(|i| SampleSpec { top_k: ks[i], top_p: ps[i], u: us[i] }).collect();
+    let got = ops::lm_head_sample(&x, &w, Some(&b), &specs);
+
+    let (logits, _) = ops::linear_fused(&x, &w, Some(&b), Act::None);
+    let am = ops::lm_head_argmax(&x, &w, Some(&b));
+    for (i, spec) in specs.iter().enumerate() {
+        let row = &logits.f32s()[i * v..(i + 1) * v];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &z| a.max(z));
+        let l: f32 = row.iter().map(|&z| (z - m).exp()).sum();
+        let lse = m + l.ln();
+        let mut order: Vec<usize> = (0..v).collect();
+        order.sort_by(|&a, &c| row[c].partial_cmp(&row[a]).unwrap());
+        let keep = spec.top_k.clamp(1, ops::SAMPLE_MAX_TOPK).min(v);
+        let cand = &order[..keep];
+        let mut take = keep;
+        let mut cum = 0.0f32;
+        for (c, &id) in cand.iter().enumerate() {
+            cum += (row[id] - lse).exp();
+            if cum >= spec.top_p {
+                take = c + 1;
+                break;
+            }
+        }
+        let mass: f32 = cand[..take].iter().map(|&id| (row[id] - lse).exp()).sum();
+        let target = spec.u * mass;
+        let mut acc = 0.0f32;
+        let mut expect = cand[take - 1];
+        for &id in &cand[..take] {
+            acc += (row[id] - lse).exp();
+            if target < acc {
+                expect = id;
+                break;
+            }
+        }
+        assert_eq!(got[i], expect, "row {i} ({spec:?})");
+        if spec.top_p <= 1e-6 {
+            assert_eq!(got[i], am[i], "row {i}: tiny nucleus must collapse to argmax");
+        }
+    }
+    arena::recycle(logits);
+}

@@ -1,0 +1,90 @@
+//! Smoke coverage for the public fine-tune entry points (`eval/finetune`)
+//! and the paper-table driver (`experiments/tables`) on the probe preset,
+//! over the synthesized native engine. The claim is small: the entry
+//! points run end to end from a clean checkout and report finite,
+//! in-range metrics — the accuracy *values* belong to the experiments
+//! ledger, not to CI.
+
+use ligo::config::{Registry, TrainConfig};
+use ligo::data::corpus::Corpus;
+use ligo::data::downstream::{Probe, ProbeKind};
+use ligo::eval::finetune::{attach_head, finetune_probe};
+use ligo::model::param_shapes;
+use ligo::runtime::Runtime;
+use ligo::tensor::store::Store;
+use ligo::util::knobs;
+use ligo::util::rng::Rng;
+
+fn native_runtime() -> Option<Runtime> {
+    let rt = Runtime::cpu(std::env::temp_dir().join("ligo_finetune_smoke")).unwrap();
+    if rt.backend_name() != "native" {
+        // pjrt build with a live XLA client: the artifact suite covers it
+        return None;
+    }
+    Some(rt)
+}
+
+#[test]
+fn attach_head_carries_the_body_and_det_inits_the_head() {
+    let reg = Registry::builtin();
+    let probe_cfg = reg.model("probe_bert_small").unwrap().clone();
+    let body_cfg = reg.model("bert_small").unwrap().clone();
+    let shapes = param_shapes(&probe_cfg);
+    let body = Store::det_init(&param_shapes(&body_cfg), 3);
+    let full = attach_head(&shapes, &body, 9);
+    for (name, shape) in &shapes {
+        assert_eq!(&full.get(name).unwrap().shape, shape, "missing or misshaped '{name}'");
+    }
+    // body tensors ride along bit-for-bit; the head is deterministic in
+    // the seed (a rerun must reproduce it exactly)
+    let carried = "L00_q_w";
+    assert_eq!(
+        full.get(carried).unwrap().f32s(),
+        body.get(carried).unwrap().f32s(),
+        "body tensor must be carried verbatim"
+    );
+    let again = attach_head(&shapes, &body, 9);
+    assert_eq!(
+        full.get("head_w").unwrap().f32s(),
+        again.get("head_w").unwrap().f32s(),
+        "head init must be deterministic in the seed"
+    );
+}
+
+#[test]
+fn finetune_probe_reports_finite_metrics_on_the_probe_preset() {
+    let Some(rt) = native_runtime() else { return };
+    let reg = Registry::builtin();
+    let probe_cfg = reg.model("probe_bert_small").unwrap().clone();
+    let body_cfg = reg.model("bert_small").unwrap().clone();
+    // a det-init body stands in for a pretrained checkpoint: the smoke
+    // claim is that the entry point trains a head and evaluates it
+    let body = Store::det_init(&param_shapes(&body_cfg), 17);
+    let corpus = Corpus::new(probe_cfg.vocab, 0);
+    let probe = Probe::new(ProbeKind::Sst2, corpus);
+    let tc = TrainConfig::finetune(5);
+    let p1 = probe.clone();
+    let c1 = probe_cfg.clone();
+    let mut trb = move |s: usize| p1.batch(&c1, &mut Rng::new(0xF7 + s as u64));
+    let c2 = probe_cfg.clone();
+    let mut evb = move |s: usize| probe.batch(&c2, &mut Rng::new(0xE7A1 + s as u64));
+    let res = finetune_probe(&rt, "probe_bert_small", "sst2_smoke", &body, &tc, &mut trb, &mut evb)
+        .unwrap();
+    assert_eq!(res.task, "sst2_smoke");
+    assert!(res.final_loss.is_finite() && res.final_loss > 0.0, "{res:?}");
+    assert!((0.0..=1.0).contains(&res.accuracy), "{res:?}");
+}
+
+#[test]
+fn table5_finetune_transfer_runs_end_to_end() {
+    // Minutes-scale in debug builds: the CI e2e-serve job runs it in
+    // release under LIGO_TEST_HEAVY=1; plain `cargo test` skips it.
+    if !knobs::is_set("LIGO_TEST_HEAVY") {
+        return;
+    }
+    let Some(rt) = native_runtime() else { return };
+    let reg = Registry::builtin();
+    let out = std::env::temp_dir().join("ligo_table5_smoke");
+    std::fs::create_dir_all(&out).unwrap();
+    ligo::experiments::tables::table5(&rt, &reg, 0.0, &out).unwrap();
+}

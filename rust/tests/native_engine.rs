@@ -166,6 +166,7 @@ fn streaming_and_materialized_lm_head_agree_end_to_end() {
     // materialized linear+masked_xent chain to float noise, on both a
     // tied-head LM preset and a vision classifier (which also reports the
     // streamed accuracy metric).
+    let _guard = XENT_OVERRIDE.lock().unwrap_or_else(|e| e.into_inner());
     let Some(rt) = native_runtime() else { return };
     let reg = Registry::builtin();
     let cfg = reg.model("bert_small").unwrap().clone();
@@ -194,6 +195,51 @@ fn streaming_and_materialized_lm_head_agree_end_to_end() {
     ligo::tensor::ops::set_fused_xent_override(None);
     assert!((vlf - vlu).abs() <= 1e-4 * vlf.abs().max(1.0), "vision {vlf} vs {vlu}");
     assert_eq!(vmf, vmu, "the streamed accuracy metric must not depend on the lowering");
+}
+
+/// Serializes tests that flip the process-global LIGO_FUSED_XENT override.
+static XENT_OVERRIDE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[test]
+fn unfused_xent_all_masked_batch_has_exactly_zero_loss_and_grads() {
+    // The count = 0 edge of the *materialized* masked_xent lowering (the
+    // fused path's all-masked guard is pinned in ops.rs unit tests; this
+    // is the missing unfused counterpart): with every label masked the
+    // loss is exactly 0.0, every gradient is exactly 0.0, and perturbing
+    // parameters moves nothing — the finite-difference view of "no
+    // supervised rows means no signal", not merely "small loss".
+    let _guard = XENT_OVERRIDE.lock().unwrap_or_else(|e| e.into_inner());
+    let reg = Registry::builtin();
+    let mut cfg = reg.model("bert_small").unwrap().clone();
+    cfg.batch = 2; // keep the debug-mode tape cheap
+    let params = ligo::tensor::store::Store::det_init(&ligo::model::param_shapes(&cfg), 13);
+    let corpus = Corpus::new(cfg.vocab, 0);
+    let mut batch = mlm_batch(&corpus, &cfg, &mut Rng::new(4));
+    let shape = batch.get("labels").unwrap().shape.clone();
+    let n = batch.get("labels").unwrap().numel();
+    batch.insert("labels", ligo::tensor::Tensor::from_i32(&shape, vec![-1; n]));
+    ligo::tensor::ops::set_fused_xent_override(Some(false));
+    let (loss, grads, _) = ligo::model::loss_and_grads(&cfg, &params, &batch).unwrap();
+    assert_eq!(loss.to_bits(), 0.0f32.to_bits(), "all-masked loss must be exactly 0, got {loss}");
+    for (name, g) in grads.iter() {
+        if let ligo::tensor::TensorData::F32(_) = g.data {
+            assert!(
+                g.f32s().iter().all(|&v| v == 0.0),
+                "all-masked grad '{name}' must be exactly zero"
+            );
+        }
+    }
+    // FD: a perturbed parameter set sees the same exactly-zero loss
+    let mut p2 = params.clone();
+    let t = p2.get("L00_q_w").unwrap();
+    let mut v = t.f32s().to_vec();
+    v[0] += 0.75;
+    v[7] -= 0.5;
+    let shape_w = t.shape.clone();
+    p2.insert("L00_q_w", ligo::tensor::Tensor::from_f32(&shape_w, v));
+    let (loss2, _) = ligo::model::loss_only(&cfg, &p2, &batch).unwrap();
+    assert_eq!(loss2.to_bits(), 0.0f32.to_bits(), "perturbation changed an all-masked loss");
+    ligo::tensor::ops::set_fused_xent_override(None);
 }
 
 #[test]
