@@ -44,6 +44,16 @@ decode-gate FILE [FACTOR]
     the serve scheduler has lost its reason to exist. Skips (exit 0) on
     hosts with fewer than 4 CPUs. Exits non-zero on violation.
 
+search-gate FILE [MIN_RATE]
+    Static-filter coverage gate for `ligo search`: FILE is a captured
+    `ligo search --smoke` output. Its summary line
+    ("search space: R raw candidates, P pruned statically, S probed,
+    prune rate F") must report a raw space of at least 20 candidates and
+    a prune rate of at least MIN_RATE (default 0.5) — the symbolic filter
+    must keep killing at least half the smoke space before any probe
+    runs. Also requires a non-empty ranked finalist table and the winner
+    re-execution line. Exits non-zero on violation.
+
 record
     Run the full protocol on this host (requires cargo): serial growth_ops,
     parallel growth_ops, quickstart wall-clock; append the resulting rows
@@ -183,6 +193,51 @@ def cmd_decode_gate(path, factor=1.5):
     )
 
 
+SEARCH_RE = re.compile(
+    r"^search space: (?P<raw>\d+) raw candidates, (?P<pruned>\d+) pruned statically, "
+    r"(?P<probed>\d+) probed, prune rate (?P<rate>[\d.]+)"
+)
+
+
+def cmd_search_gate(path, min_rate=0.5):
+    with open(path, encoding="utf-8") as fh:
+        lines = [ln.rstrip() for ln in fh]
+    summary = None
+    for ln in lines:
+        m = SEARCH_RE.match(ln)
+        if m:
+            summary = m
+            break
+    if summary is None:
+        sys.exit(f"no 'search space:' summary line found in {path}")
+    raw = int(summary.group("raw"))
+    pruned = int(summary.group("pruned"))
+    probed = int(summary.group("probed"))
+    rate = float(summary.group("rate"))
+    if raw < 20:
+        sys.exit(f"REGRESSION: smoke space enumerated only {raw} raw candidates (< 20)")
+    if pruned + probed != raw:
+        sys.exit(f"REGRESSION: pruned {pruned} + probed {probed} != raw {raw}")
+    if rate < min_rate:
+        sys.exit(
+            f"REGRESSION: static filter pruned {pruned}/{raw} candidates "
+            f"(rate {rate:.3f} < {min_rate})"
+        )
+    # ranked finalists: at least one markdown data row under the header
+    ranked = [
+        ln for ln in lines
+        if ln.startswith("|") and not ln.startswith("| rank") and not ln.startswith("|--")
+    ]
+    if not ranked:
+        sys.exit(f"REGRESSION: no ranked finalist rows in {path}")
+    if not any(ln.startswith("winner re-executed from") for ln in lines):
+        sys.exit(f"REGRESSION: winner plan was not re-executed in {path}")
+    print(
+        f"search gate ok: {raw} raw, {pruned} pruned statically (rate {rate:.3f} >= "
+        f"{min_rate}), {len(ranked)} finalist(s) ranked, winner re-executed"
+    )
+
+
 def cmd_record():
     host = f"{os.uname().nodename} ({os.cpu_count()} cores)"
     print(f"== recording bench baseline for {host} ==")
@@ -242,6 +297,9 @@ def main():
     elif cmd == "decode-gate":
         factor = float(sys.argv[3]) if len(sys.argv) > 3 else 1.5
         cmd_decode_gate(sys.argv[2], factor)
+    elif cmd == "search-gate":
+        min_rate = float(sys.argv[3]) if len(sys.argv) > 3 else 0.5
+        cmd_search_gate(sys.argv[2], min_rate)
     elif cmd == "record":
         cmd_record()
     else:

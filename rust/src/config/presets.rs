@@ -50,7 +50,31 @@ impl ModelConfig {
         self.batch * self.tokens()
     }
 
-    fn from_json(j: &Json) -> Result<ModelConfig> {
+    /// Serialize the full geometry (every field, no registry indirection) —
+    /// the shape a [`crate::coordinator::plan::GrowthPlan`] file embeds, so
+    /// a synthesized search rung deserializes without a preset table.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("family", Json::Str(self.family.clone())),
+            ("layers", Json::Num(self.layers as f64)),
+            ("dim", Json::Num(self.dim as f64)),
+            ("heads", Json::Num(self.heads as f64)),
+            ("vocab", Json::Num(self.vocab as f64)),
+            ("seq", Json::Num(self.seq as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("img", Json::Num(self.img as f64)),
+            ("patch", Json::Num(self.patch as f64)),
+            ("channels", Json::Num(self.channels as f64)),
+            ("n_classes", Json::Num(self.n_classes as f64)),
+            ("cls_layers", Json::Num(self.cls_layers as f64)),
+            ("ffn_mult", Json::Num(self.ffn_mult as f64)),
+        ])
+    }
+
+    /// Parse a config from its JSON object form (see [`ModelConfig::to_json`]
+    /// and `artifacts/configs.json`).
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
         let s = |k: &str| -> Result<String> {
             Ok(j.get(k).and_then(Json::as_str).context(k.to_string())?.to_string())
         };
@@ -295,6 +319,16 @@ mod tests {
         let per_layer = 4 * 48 * 48 + 4 * 48 + 192 * 48 + 192 + 48 * 192 + 48 + 4 * 48;
         let want = 512 * 48 + 32 * 48 + 512 + 2 * 48 + 3 * per_layer;
         assert_eq!(r.param_counts[&small.name], want);
+    }
+
+    #[test]
+    fn model_config_json_round_trips() {
+        let r = Registry::builtin();
+        for cfg in r.models.values() {
+            let j = Json::parse(&cfg.to_json().to_string()).unwrap();
+            let back = ModelConfig::from_json(&j).unwrap();
+            assert_eq!(&back, cfg, "{}", cfg.name);
+        }
     }
 
     #[test]

@@ -17,13 +17,16 @@
 //! [`crate::growth::verify`]) so a plan that builds is a plan the trainer
 //! can execute.
 
+use std::path::Path;
+
 use crate::bail;
 use crate::config::ModelConfig;
-use crate::error::{Context, Result};
+use crate::error::{Context, Error, Result};
 use crate::growth::{verify, LigoOptions};
+use crate::util::json::Json;
 
 /// One growth stage: at `at_step`, grow into `target` via `operator`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GrowthStage {
     /// Optimizer step (absolute, within the run) at which to grow.
     pub at_step: usize,
@@ -35,10 +38,41 @@ pub struct GrowthStage {
 }
 
 /// A validated multi-stage growth schedule (see the module docs).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GrowthPlan {
     initial: ModelConfig,
     stages: Vec<GrowthStage>,
+}
+
+fn opts_to_json(o: &LigoOptions) -> Json {
+    Json::obj(vec![
+        ("steps", Json::Num(o.steps as f64)),
+        ("lr", Json::Num(o.lr as f64)),
+        ("momentum", Json::Num(o.momentum as f64)),
+        ("init_noise", Json::Num(o.init_noise as f64)),
+        // seeds are u64: a string survives the f64 number representation
+        ("seed", Json::Str(o.seed.to_string())),
+    ])
+}
+
+fn opts_from_json(j: &Json) -> Result<LigoOptions> {
+    let d = LigoOptions::default();
+    let num = |k: &str, dflt: f64| j.get(k).and_then(Json::as_f64).unwrap_or(dflt);
+    let seed = match j.get("seed") {
+        None => d.seed,
+        Some(Json::Str(s)) => s
+            .parse::<u64>()
+            .map_err(|_| Error::msg(format!("plan JSON: bad opts.seed {s:?}")))?,
+        Some(v) => v.as_f64().context("plan JSON: opts.seed must be a number or string")?
+            as u64,
+    };
+    Ok(LigoOptions {
+        steps: num("steps", d.steps as f64) as usize,
+        lr: num("lr", d.lr as f64) as f32,
+        momentum: num("momentum", d.momentum as f64) as f32,
+        init_noise: num("init_noise", d.init_noise as f64) as f32,
+        seed,
+    })
 }
 
 impl GrowthPlan {
@@ -59,6 +93,83 @@ impl GrowthPlan {
     /// The final config the run ends on.
     pub fn final_config(&self) -> &ModelConfig {
         self.stages.last().map(|s| &s.target).unwrap_or(&self.initial)
+    }
+
+    /// Serialize the whole schedule as an executable JSON document: full
+    /// configs are embedded (not preset names), so a plan over synthesized
+    /// search rungs loads on a machine with no registry entry for them.
+    pub fn to_json(&self) -> Json {
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("at_step", Json::Num(s.at_step as f64)),
+                    ("operator", Json::Str(s.operator.clone())),
+                    ("target", s.target.to_json()),
+                    ("opts", opts_to_json(&s.opts)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("initial", self.initial.to_json()),
+            ("stages", Json::Arr(stages)),
+        ])
+    }
+
+    /// Deserialize a plan by replaying the document through the builder —
+    /// a hand-edited file gets exactly the plan-time diagnostics code gets
+    /// (monotone steps, growing targets, operator regimes, symbolic shape
+    /// replay), so a [`GrowthPlan`] from JSON is as validated as one built
+    /// in-process.
+    pub fn from_json(j: &Json) -> Result<GrowthPlan> {
+        let initial = ModelConfig::from_json(j.get("initial").context("plan JSON: 'initial'")?)
+            .context("plan JSON: initial config")?;
+        let mut b = GrowthPlan::builder(&initial);
+        let stages = j.get("stages").and_then(Json::as_arr).context("plan JSON: 'stages'")?;
+        for (i, sj) in stages.iter().enumerate() {
+            let at_step = sj
+                .get("at_step")
+                .and_then(Json::as_usize)
+                .with_context(|| format!("plan JSON: stage {i} 'at_step'"))?;
+            let operator = sj
+                .get("operator")
+                .and_then(Json::as_str)
+                .with_context(|| format!("plan JSON: stage {i} 'operator'"))?;
+            let target = ModelConfig::from_json(
+                sj.get("target").with_context(|| format!("plan JSON: stage {i} 'target'"))?,
+            )
+            .with_context(|| format!("plan JSON: stage {i} target config"))?;
+            let opts = match sj.get("opts") {
+                Some(o) => opts_from_json(o).with_context(|| format!("plan JSON: stage {i}"))?,
+                None => LigoOptions::default(),
+            };
+            b = b.grow_at_with(at_step, &target, operator, opts);
+        }
+        b.build().context("plan JSON: schedule validation")
+    }
+
+    /// Parse a plan from JSON text (see [`GrowthPlan::from_json`]).
+    pub fn parse(text: &str) -> Result<GrowthPlan> {
+        GrowthPlan::from_json(&Json::parse(text).map_err(Error::msg)?)
+    }
+
+    /// Write the plan as a JSON file (`ligo search` emits these; `ligo
+    /// experiment progressive --plan FILE` executes them).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create plan dir {dir:?}"))?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("write plan {path:?}"))
+    }
+
+    /// Load and re-validate a plan file (see [`GrowthPlan::from_json`]).
+    pub fn load(path: &Path) -> Result<GrowthPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read plan {path:?}"))?;
+        GrowthPlan::parse(&text).with_context(|| format!("plan file {path:?}"))
     }
 }
 
@@ -205,6 +316,57 @@ mod tests {
             .to_string();
         assert!(err.contains("unknown growth operator"), "{err}");
         assert!(err.contains("stackbert"), "must list known names: {err}");
+    }
+
+    #[test]
+    fn plan_json_round_trips_to_equality() {
+        let a = mk_cfg(2, 8, 2);
+        let b = mk_cfg(4, 8, 2);
+        let c = mk_cfg(4, 12, 3);
+        let opts = LigoOptions { steps: 7, lr: 0.5, seed: 0x9E37_79B9_7F4A_7C15, ..Default::default() };
+        let plan = GrowthPlan::builder(&a)
+            .grow_at(10, &b, "stackbert")
+            .grow_at_with(20, &c, "ligo", opts)
+            .build()
+            .unwrap();
+        let text = plan.to_json().to_string();
+        let back = GrowthPlan::parse(&text).unwrap();
+        assert_eq!(back, plan, "round-trip must be exact:\n{text}");
+        // u64 seeds survive (string-encoded: f64 would round 2^63-ish seeds)
+        assert_eq!(back.stages()[1].opts.seed, 0x9E37_79B9_7F4A_7C15);
+        // and the empty plan round-trips too
+        let empty = GrowthPlan::builder(&a).build().unwrap();
+        assert_eq!(GrowthPlan::parse(&empty.to_json().to_string()).unwrap(), empty);
+    }
+
+    #[test]
+    fn from_json_revalidates_through_the_builder() {
+        let a = mk_cfg(2, 8, 2);
+        let b = mk_cfg(4, 8, 2);
+        let plan = GrowthPlan::builder(&a).grow_at(10, &b, "stackbert").build().unwrap();
+        // tamper: at_step 0 must hit the builder's own diagnostic
+        let text = plan.to_json().to_string().replace("\"at_step\":10", "\"at_step\":0");
+        let err = GrowthPlan::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("at_step must be > 0"), "{err}");
+        // tamper: unknown operator resolves through the registry listing
+        let text = plan.to_json().to_string().replace("stackbert", "nope");
+        let err = GrowthPlan::parse(&text).unwrap_err().to_string();
+        assert!(err.contains("unknown growth operator"), "{err}");
+        // malformed document: missing stages
+        let err = GrowthPlan::parse("{\"initial\": {}}").unwrap_err().to_string();
+        assert!(err.contains("plan JSON"), "{err}");
+    }
+
+    #[test]
+    fn plan_files_save_and_load() {
+        let dir = std::env::temp_dir().join("ligo_plan_io_test");
+        let path = dir.join("plan.json");
+        let a = mk_cfg(2, 8, 2);
+        let b = mk_cfg(4, 8, 2);
+        let plan = GrowthPlan::builder(&a).grow_at(5, &b, "net2net").build().unwrap();
+        plan.save(&path).unwrap();
+        assert_eq!(GrowthPlan::load(&path).unwrap(), plan);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use std::path::Path;
 
 use crate::config::Registry;
+use crate::coordinator::plan::GrowthPlan;
 use crate::coordinator::strategies::progressive_plan;
 use crate::coordinator::trainer::Trainer;
 use crate::data::corpus::Corpus;
@@ -17,6 +18,65 @@ use crate::log_info;
 use crate::runtime::Runtime;
 
 use super::common::{recipe_for, report, scaled, text_batches, LARGE_TRAIN_STEPS};
+
+/// Execute a serialized [`GrowthPlan`] file (e.g. `ligo search`'s
+/// `best_plan.json`) against the scratch baseline of its final config —
+/// the round-trip half of `ligo search`: search output is training input.
+///
+/// The plan's configs may be synthesized search rungs rather than presets,
+/// so this builds its own native runtime that knows every stage target;
+/// the run length is the scaled budget, extended if needed so the last
+/// scheduled stage stays reachable (`run_plan` rejects unreachable stages).
+pub fn from_plan_file(plan_path: &Path, scale: f64, out: &Path) -> Result<()> {
+    let plan = GrowthPlan::load(plan_path)?;
+    let rt = crate::search::probe::runtime_for(
+        std::iter::once(plan.initial()).chain(plan.stages().iter().map(|s| &s.target)),
+    );
+    let last_at = plan.stages().last().map(|s| s.at_step).unwrap_or(0);
+    let steps = scaled(LARGE_TRAIN_STEPS, scale).max(last_at + (last_at / 2).max(10));
+    let initial = plan.initial().clone();
+    let large = plan.final_config().clone();
+    let mut curves = Vec::new();
+
+    // scratch baseline: the plan's final config for the whole budget
+    // (probe_batches handles text and vision configs alike)
+    let params = Trainer::scratch_params(&rt, &large, 1)?;
+    let mut tr = Trainer::new(&rt, &large, recipe_for(&large, steps), params)?;
+    let mut b = crate::search::probe::probe_batches(&large, 0x9A01);
+    curves.push(tr.run("Scratch", &mut b, steps)?);
+
+    // the plan itself, from the initial config's scratch params
+    let params = Trainer::scratch_params(&rt, &initial, 0)?;
+    let mut tr = Trainer::new(&rt, &initial, recipe_for(&initial, steps), params)?;
+    let mut b = crate::search::probe::probe_batches(&initial, 0x9A02);
+    let curve = tr.run_plan(&rt, "PlanFile", &mut b, steps, &plan)?;
+    if curve.marks.len() != plan.stages().len() {
+        crate::bail!(
+            "plan file scheduled {} stage(s) but the run recorded {} growth mark(s)",
+            plan.stages().len(),
+            curve.marks.len()
+        );
+    }
+    for (step, label) in &curve.marks {
+        log_info!("PlanFile mark @{step}: {label}");
+    }
+    curves.push(curve);
+
+    report(
+        "progressive_plan",
+        &format!(
+            "Serialized growth plan {} ({} -> {}) vs. scratch {}",
+            plan_path.display(),
+            initial.name,
+            large.name,
+            large.name
+        ),
+        &curves,
+        &[],
+        false,
+        out,
+    )
+}
 
 /// `bert_small -> bert_d6w48 -> bert_base`, growing at 1/3 and 2/3 of the
 /// budget, vs. training BERT-Base from scratch for the whole budget.

@@ -48,8 +48,9 @@ impl fmt::Display for Capability {
 }
 
 /// Hyperparameters of the M-learning phase (learned operators only; the
-/// non-learned zoo ignores them).
-#[derive(Debug, Clone)]
+/// non-learned zoo ignores them). `PartialEq` because plan files embed
+/// these and the round-trip tests compare whole plans.
+#[derive(Debug, Clone, PartialEq)]
 pub struct LigoOptions {
     pub steps: usize,
     pub lr: f32,

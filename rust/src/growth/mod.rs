@@ -126,10 +126,22 @@ pub fn by_name(name: &str) -> Result<Box<dyn GrowthOperator>> {
         "lemon" => Ok(Box::new(lemon::Lemon)),
         "ligo" => Ok(Box::new(ligo::Ligo::default())),
         other => bail!(
-            "unknown growth operator '{other}'; known operators: {}",
-            KNOWN.join(", ")
+            "unknown growth operator '{other}'; known operators:\n{}",
+            registry_summary()
         ),
     }
+}
+
+/// The registry listing with each operator's one-line static-regime
+/// summary — what [`by_name`]'s unknown-operator diagnostic, `ligo inspect
+/// operators` and the `ligo search` prune log all print, so every surface
+/// describes an operator's constraints in the same words.
+pub fn registry_summary() -> String {
+    KNOWN
+        .iter()
+        .map(|name| format!("  {name:<14} {}", verify::regime_summary(name)))
+        .collect::<Vec<_>>()
+        .join("\n")
 }
 
 /// One-shot parameter-space growth through the unified entry point: builds
@@ -197,6 +209,9 @@ mod tests {
         for name in KNOWN {
             assert!(err.contains(name), "error must list '{name}': {err}");
         }
+        // the listing carries each operator's static-regime summary, so the
+        // diagnostic and `ligo inspect operators` agree on the constraints
+        assert!(err.contains("integer width factors"), "{err}");
     }
 
     #[test]

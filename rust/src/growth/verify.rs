@@ -62,6 +62,28 @@ pub fn check_growth_step(from: &ModelConfig, to: &ModelConfig) -> Result<()> {
     Ok(())
 }
 
+/// One-line static-regime summary per registry operator: which transitions
+/// the operator accepts *beyond* the schedule checks every stage passes.
+/// `ligo inspect operators`, [`super::by_name`]'s unknown-operator
+/// diagnostic and the `ligo search` prune log all print these, so the CLI
+/// and the search reports agree on why a candidate was rejected.
+pub fn regime_summary(name: &str) -> &'static str {
+    match name {
+        "direct_copy" => "any growing pair (copy into the corner, random elsewhere)",
+        "net2net" => "any growing pair (function-preserving width, stacked depth)",
+        "aki" => "any growing pair (width FPI + advanced knowledge from layer i+1)",
+        "stackbert" => "any growing pair (depth by block duplication, width FPI)",
+        "interpolation" => "any growing pair (depth by interleaving, width FPI)",
+        "mslt" => "any growing pair (depth appended on top, width FPI)",
+        "lemon" => {
+            "exact only on integer width factors with fixed per-head dim \
+             (and matching vocab/seq or image geometry)"
+        }
+        "ligo" => "any growing pair (learned M; route negotiated from the context)",
+        _ => "unknown operator (see `ligo inspect operators`)",
+    }
+}
+
 /// The two [`GraphSummary`]s a verified transition produces: what the
 /// trainer executes before the growth step and after it.
 #[derive(Debug, Clone)]
@@ -115,6 +137,42 @@ pub fn verify_plan(plan: &GrowthPlan) -> Result<Vec<PairVerification>> {
         prev = &stage.target;
     }
     Ok(out)
+}
+
+/// Statically verify one *chain* of transitions `initial -> targets[0] ->
+/// targets[1] -> …`, all under `operator` — the shape of one growth-search
+/// candidate before it has step numbers. Returns the per-transition
+/// summaries in chain order; the first violated requirement aborts the
+/// chain with a stage-indexed diagnostic.
+pub fn verify_chain(
+    operator: &str,
+    initial: &ModelConfig,
+    targets: &[ModelConfig],
+) -> Result<Vec<PairVerification>> {
+    let mut prev = initial;
+    let mut out = Vec::with_capacity(targets.len());
+    for (i, target) in targets.iter().enumerate() {
+        out.push(
+            verify_pair(operator, prev, target)
+                .with_context(|| format!("chain stage {i} ({} -> {})", prev.name, target.name))?,
+        );
+        prev = target;
+    }
+    Ok(out)
+}
+
+/// Batch verification over many candidate chains: every chain gets its own
+/// verdict (no early exit across candidates), so an enumerated search space
+/// can be partitioned into survivors and typed rejections in one pass —
+/// entirely symbolically, before any kernel runs.
+pub fn verify_batch(
+    initial: &ModelConfig,
+    chains: &[(String, Vec<ModelConfig>)],
+) -> Vec<Result<Vec<PairVerification>>> {
+    chains
+        .iter()
+        .map(|(operator, targets)| verify_chain(operator, initial, targets))
+        .collect()
 }
 
 #[cfg(test)]
@@ -179,6 +237,43 @@ mod tests {
         let err = verify_pair("stackbert", &a, &b).unwrap_err().to_string();
         assert!(err.contains("divisible"), "{err}");
         assert!(err.contains("attention"), "{err}");
+    }
+
+    #[test]
+    fn chains_verify_in_order_and_batches_keep_per_chain_verdicts() {
+        let a = mk_cfg(2, 8, 2);
+        let b = mk_cfg(4, 8, 2);
+        let c = mk_cfg(4, 12, 3);
+        let pvs = verify_chain("stackbert", &a, &[b.clone(), c.clone()]).unwrap();
+        assert_eq!(pvs.len(), 2);
+        assert_eq!(pvs[0].small.name, a.name);
+        assert_eq!(pvs[1].large.name, c.name);
+        // a later-stage violation names its stage index
+        let err = verify_chain("stackbert", &a, &[b.clone(), b.clone()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("chain stage 1"), "{err}");
+        assert!(err.contains("not larger"), "{err}");
+        // batch: one bad chain does not sink the others
+        let chains = vec![
+            ("stackbert".to_string(), vec![b.clone(), c.clone()]),
+            ("lemon".to_string(), vec![c.clone()]), // 8 -> 12: not integer
+            ("net2net".to_string(), vec![c.clone()]),
+        ];
+        let verdicts = verify_batch(&a, &chains);
+        assert!(verdicts[0].is_ok() && verdicts[2].is_ok());
+        let err = verdicts[1].as_ref().unwrap_err().to_string();
+        assert!(err.contains("integer factor"), "{err}");
+    }
+
+    #[test]
+    fn every_known_operator_has_a_regime_summary() {
+        for name in crate::growth::KNOWN {
+            let s = regime_summary(name);
+            assert!(!s.contains("unknown"), "{name}: {s}");
+        }
+        assert!(regime_summary("lemon").contains("integer"));
+        assert!(regime_summary("bogus").contains("unknown"));
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod experiments;
 pub mod growth;
 pub mod model;
 pub mod runtime;
+pub mod search;
 pub mod tensor;
 pub mod util;
 

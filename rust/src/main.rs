@@ -5,6 +5,9 @@
 //!   grow       --from SMALL --to LARGE [--op ligo|stackbert|...] [--m-steps N]
 //!   eval       --model NAME --ckpt PATH
 //!   experiment ID|all [--scale F --out DIR]     (fig2..fig8, table1..table6)
+//!   experiment progressive --plan FILE          (execute a serialized GrowthPlan)
+//!   search     [--smoke | --from A --to B] [--ops a,b --probe-steps N --budget N
+//!              --topk K --steps N --seed N]     (growth-policy plan search)
 //!   analyze    (static shape/plan verification: every preset, pair, operator)
 //!   serve      --model NAME [--ckpt PATH --sessions N --max-new N --seed N | --self-test]
 //!   inspect    configs|operators|artifacts|knobs
@@ -33,13 +36,16 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ligo <train|grow|eval|experiment|analyze|inspect> [options]\n\
+        "usage: ligo <train|grow|eval|experiment|search|analyze|serve|inspect> [options]\n\
          \n\
          ligo train --model bert_small --steps 300 --out reports\n\
          ligo grow --from bert_small --to bert_base --op ligo --m-steps 100\n\
          ligo eval --model bert_base --ckpt reports/ckpt/bert_base_LiGO_600steps.lgck\n\
          ligo experiment fig2 --scale 1.0 --out reports\n\
          ligo experiment all --scale 0.25\n\
+         ligo experiment progressive --plan reports/search/best_plan.json\n\
+         ligo search --smoke\n\
+         ligo search --from bert_small --to bert_base --ops stackbert,ligo --topk 4\n\
          ligo analyze\n\
          ligo serve --model gpt_base --sessions 4 --max-new 16\n\
          ligo serve --model gpt_base --self-test\n\
@@ -160,11 +166,110 @@ fn run() -> Result<()> {
             println!("{name}: loss {loss:.4} ppl {:.2} metric {metric:?}", loss.exp());
         }
         "experiment" => {
-            let rt = Runtime::cpu(artifacts_dir())?;
-            let reg = Registry::load_or_builtin(&artifacts_dir());
             let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
             let scale = args.get_f32("scale", 0.25) as f64;
-            experiments::run(&rt, &reg, id, scale, &out_dir)?;
+            if let Some(plan_file) = args.get("plan") {
+                // a serialized plan (e.g. `ligo search` output) brings its
+                // own configs — possibly synthesized rungs, not presets —
+                // so this path builds its own runtime around the plan
+                if id != "progressive" {
+                    bail!("--plan is the progressive experiment's input \
+                           (use `ligo experiment progressive --plan FILE`)");
+                }
+                experiments::progressive::from_plan_file(
+                    std::path::Path::new(plan_file), scale, &out_dir)?;
+            } else {
+                let rt = Runtime::cpu(artifacts_dir())?;
+                let reg = Registry::load_or_builtin(&artifacts_dir());
+                experiments::run(&rt, &reg, id, scale, &out_dir)?;
+            }
+        }
+        "search" => {
+            // growth-policy search: enumerate operator x rung x fraction
+            // schedules, statically filter them (symbolically — the driver
+            // asserts zero kernel buffers), probe the survivors under
+            // successive halving, emit the winner as an executable plan
+            // file, then re-execute that file end-to-end as a round-trip
+            // check. `--smoke` is the CI configuration: a small operator
+            // set over the bert_small -> bert_base ladder.
+            use ligo::search::{probe, ProbeConfig, SearchSpace};
+            let reg = Registry::load_or_builtin(&artifacts_dir());
+            let smoke = args.has_flag("smoke");
+            let from_name = args.get("from").unwrap_or("bert_small");
+            let to_name = args.get("to").unwrap_or("bert_base");
+            let initial = reg.model(from_name)?.clone();
+            let goal = reg.model(to_name)?.clone();
+            let ops: Vec<String> = match args.get("ops") {
+                Some(list) => list.split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect(),
+                None if smoke => ["stackbert", "net2net", "ligo", "lemon"]
+                    .map(String::from).to_vec(),
+                None => ligo::growth::KNOWN.map(String::from).to_vec(),
+            };
+            let ops_ref: Vec<&str> = ops.iter().map(String::as_str).collect();
+            let space = SearchSpace::ladder(&initial, &goal, &ops_ref);
+            let mut pc = ProbeConfig::from_env();
+            if smoke {
+                // CI-sized defaults; explicit knobs still win
+                if ligo::util::knobs::usize_env("LIGO_SEARCH_PROBE_STEPS").is_none() {
+                    pc.horizon = 12;
+                }
+                if ligo::util::knobs::usize_env("LIGO_SEARCH_BUDGET").is_none() {
+                    pc.budget_steps = 600;
+                }
+                pc.m_steps = 2;
+            }
+            if let Some(v) = args.get("probe-steps") {
+                pc.horizon = v.parse().context("--probe-steps")?;
+            }
+            if let Some(v) = args.get("budget") {
+                pc.budget_steps = v.parse().context("--budget")?;
+            }
+            if let Some(v) = args.get("topk") {
+                pc.topk = v.parse().context("--topk")?;
+            }
+            pc.seed = args.get_u64("seed", pc.seed);
+            // horizon the emitted plan schedules against (and the winner
+            // re-execution length): short for smoke, a real budget otherwise
+            let plan_horizon =
+                args.get_usize("steps", if smoke { pc.horizon * 2 } else { 600 });
+
+            let rep = ligo::search::run_and_write(&space, &pc, plan_horizon, &out_dir)?;
+            println!("{}", rep.summary_line());
+            if !rep.pruned.is_empty() {
+                println!("statically pruned (typed diagnostics, zero kernels):");
+                print!("{}", rep.prune_log());
+            }
+            println!("\nranked finalists ({} -> {}, probe horizon {}):",
+                initial.name, goal.name, pc.horizon);
+            print!("{}", rep.table());
+
+            // round-trip: reload the persisted winner and run it for real
+            let plan_path = out_dir.join("search").join("best_plan.json");
+            let plan = GrowthPlan::load(&plan_path)?;
+            let rt = probe::runtime_for(
+                std::iter::once(plan.initial())
+                    .chain(plan.stages().iter().map(|s| &s.target)),
+            );
+            let curve = probe::execute_plan(&rt, "winner", &plan, plan_horizon, pc.seed)?;
+            if curve.marks.len() != plan.stages().len() {
+                bail!(
+                    "winner plan scheduled {} stage(s) but recorded {} growth mark(s)",
+                    plan.stages().len(),
+                    curve.marks.len()
+                );
+            }
+            println!(
+                "\nwinner re-executed from {}: {} steps, {} growth mark(s), \
+                 loss {:.4} -> {:.4}",
+                plan_path.display(),
+                plan_horizon,
+                curve.marks.len(),
+                curve.loss.first().copied().unwrap_or(f32::NAN),
+                curve.final_loss()
+            );
         }
         "analyze" => {
             // Static shape/plan verification: replay every builtin preset,
@@ -337,12 +442,17 @@ fn run() -> Result<()> {
                     }
                 }
                 "operators" => {
-                    println!("{:<14} {}", "operator", "capabilities");
+                    println!("{:<14} {:<34} {}", "operator", "capabilities", "static regime");
                     for name in ligo::growth::KNOWN {
                         let op = ligo::growth::by_name(name)?;
                         let caps: Vec<&str> =
                             op.capabilities().iter().map(|c| c.as_str()).collect();
-                        println!("{:<14} {}", name, caps.join(", "));
+                        println!(
+                            "{:<14} {:<34} {}",
+                            name,
+                            caps.join(", "),
+                            verify::regime_summary(name)
+                        );
                     }
                     println!(
                         "\nall operators share one entry point: grow(GrowthContext). \

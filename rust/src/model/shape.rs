@@ -791,6 +791,48 @@ pub fn summarize(cfg: &ModelConfig) -> Result<GraphSummary> {
     summarize_with(cfg, ops::fused_enabled(), ops::fused_xent_enabled())
 }
 
+/// Compact cost row of one config's training graph, derived from
+/// [`summarize`]: the totals the growth-search static filter ranks and
+/// budget-checks candidates by.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GraphCost {
+    /// Parameter scalars.
+    pub params: usize,
+    /// One training step's FLOPs (forward + backward) per microbatch.
+    pub step_flops: f64,
+    /// Peak-arena estimate in bytes.
+    pub peak_bytes: usize,
+}
+
+/// Memoized [`summarize`]-derived cost lookup. Plan-space enumeration asks
+/// for the same endpoint config's cost once per candidate that shares it
+/// (dozens of times per rung); the symbolic replay is cheap but not free,
+/// so costs are cached process-wide — keyed by the full geometry *and* the
+/// lowering knobs the summary depends on, never by the config's name
+/// (synthesized search rungs are not registry entries).
+pub fn cost_of(cfg: &ModelConfig) -> Result<GraphCost> {
+    use std::sync::{Mutex, OnceLock};
+    let (fused, fused_xent) = (ops::fused_enabled(), ops::fused_xent_enabled());
+    let key = format!(
+        "{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{}|{fused}|{fused_xent}",
+        cfg.family, cfg.layers, cfg.dim, cfg.heads, cfg.vocab, cfg.seq, cfg.batch,
+        cfg.img, cfg.patch, cfg.channels, cfg.n_classes, cfg.cls_layers, cfg.ffn_mult,
+    );
+    static CACHE: OnceLock<Mutex<BTreeMap<String, GraphCost>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+    if let Some(cost) = cache.lock().unwrap_or_else(|p| p.into_inner()).get(&key) {
+        return Ok(*cost);
+    }
+    let s = summarize_with(cfg, fused, fused_xent)?;
+    let cost = GraphCost {
+        params: s.params,
+        step_flops: s.fwd_flops + s.bwd_flops,
+        peak_bytes: s.peak_bytes,
+    };
+    cache.lock().unwrap_or_else(|p| p.into_inner()).insert(key, cost);
+    Ok(cost)
+}
+
 /// Which serving phase a decode summary covers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DecodePhase {
@@ -934,6 +976,24 @@ mod tests {
             cls_layers: 0,
             ffn_mult: 4,
         }
+    }
+
+    #[test]
+    fn cost_of_matches_summarize_and_ignores_the_name() {
+        let cfg = text_cfg("bert", 0);
+        let s = summarize(&cfg).unwrap();
+        let c = cost_of(&cfg).unwrap();
+        assert_eq!(c.params, s.params);
+        assert_eq!(c.step_flops, s.fwd_flops + s.bwd_flops);
+        assert_eq!(c.peak_bytes, s.peak_bytes);
+        // cache keys on geometry, not name: a renamed clone hits the same row
+        let mut renamed = cfg.clone();
+        renamed.name = "synth_rung_x".into();
+        assert_eq!(cost_of(&renamed).unwrap(), c);
+        // an unsupported family still surfaces its typed error
+        let mut bad = cfg;
+        bad.family = "rnn".into();
+        assert!(cost_of(&bad).is_err());
     }
 
     fn vision_cfg(family: &str) -> ModelConfig {

@@ -1,0 +1,138 @@
+//! Growth-policy search: enumerate the plan space, statically filter it,
+//! probe the survivors, and emit the winning [`GrowthPlan`] as executable
+//! JSON — the `ligo search` subsystem.
+//!
+//! The pipeline is three phases with a hard boundary between the first
+//! two and the engine:
+//!
+//! 1. **Enumerate** ([`space`]) — cross operators x intermediate rungs x
+//!    growth fractions into raw [`space::Candidate`]s, enumo-style: plug
+//!    everything, including rungs that cannot work.
+//! 2. **Filter** ([`space`]) — replay every candidate chain through the
+//!    symbolic verifier ([`crate::growth::verify`]) and the shape-level
+//!    cost model ([`crate::model::shape::cost_of`]). Purely symbolic: the
+//!    driver resets the tensor-arena counters before this phase and
+//!    refuses to continue if a single fresh buffer was allocated, so
+//!    "invalid candidates die before any kernel runs" is a checked
+//!    invariant, not a comment.
+//! 3. **Probe** ([`probe`]) — train each survivor through its plan for a
+//!    short seeded horizon on the native engine under successive halving,
+//!    rank by FLOPs-normalized loss improvement, and report the top-k
+//!    ([`report`]); the winner is persisted as a plan file that
+//!    `ligo experiment progressive --plan` re-executes.
+//!
+//! [`GrowthPlan`]: crate::coordinator::plan::GrowthPlan
+
+pub mod probe;
+pub mod report;
+pub mod space;
+
+use std::path::Path;
+
+use crate::bail;
+use crate::error::Result;
+use crate::log_info;
+use crate::tensor::arena;
+
+pub use probe::{ProbeConfig, Scored};
+pub use report::SearchReport;
+pub use space::{Candidate, Enumerated, SearchSpace};
+
+/// Run one full search: enumerate, statically filter (asserting the
+/// zero-kernel invariant), probe under successive halving, and return the
+/// report. Writing artifacts and re-executing the winner are the caller's
+/// choice (the CLI does both).
+pub fn run(space: &SearchSpace, probe_cfg: &ProbeConfig) -> Result<SearchReport> {
+    let raw = space.enumerate();
+    log_info!(
+        "search: {} -> {}: {} operators x {} rungs x {} fracs = {} raw candidates",
+        space.initial.name,
+        space.goal.name,
+        space.operators.len(),
+        space.rungs.len(),
+        space.fracs.len(),
+        raw.len()
+    );
+    arena::reset_stats();
+    let enumerated = space.filter(raw)?;
+    let (fresh, _) = arena::stats();
+    if fresh > 0 {
+        bail!(
+            "static filter allocated {fresh} tensor buffer(s); the \
+             enumeration/filter phase must stay symbolic (kernel-free)"
+        );
+    }
+    log_info!(
+        "search: statically pruned {}/{} candidates ({} survive; zero kernel buffers)",
+        enumerated.pruned.len(),
+        enumerated.raw,
+        enumerated.survivors.len()
+    );
+    let rt = probe::runtime_for(
+        enumerated
+            .survivors
+            .iter()
+            .flat_map(|c| c.stages.iter().map(|s| &s.target))
+            .chain([&space.initial]),
+    );
+    let ranked = probe::probe_all(&rt, &space.initial, &enumerated.survivors, probe_cfg)?;
+    Ok(SearchReport::new(
+        &space.initial.name,
+        &space.goal.name,
+        &enumerated,
+        ranked,
+        probe_cfg.horizon,
+    ))
+}
+
+/// Run a search and persist its artifacts under `out_dir/search/`,
+/// returning the report and the winner's plan instantiated at
+/// `plan_horizon` steps (the horizon the emitted plan file schedules its
+/// `at_step`s against).
+pub fn run_and_write(
+    space: &SearchSpace,
+    probe_cfg: &ProbeConfig,
+    plan_horizon: usize,
+    out_dir: &Path,
+) -> Result<SearchReport> {
+    let rep = run(space, probe_cfg)?;
+    let winner_plan = match rep.winner() {
+        Some(sc) => Some(sc.candidate.plan_for(
+            &space.initial,
+            plan_horizon,
+            probe_cfg.m_steps,
+            probe_cfg.seed,
+        )?),
+        None => None,
+    };
+    let (report_path, plan_path) = rep.write(out_dir, winner_plan.as_ref())?;
+    log_info!("search: report at {}", report_path.display());
+    if let Some(p) = plan_path {
+        log_info!("search: winning plan at {}", p.display());
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::mk_cfg;
+
+    #[test]
+    fn end_to_end_search_ranks_and_the_winner_plan_is_executable() {
+        let small = mk_cfg(2, 8, 2);
+        let big = mk_cfg(3, 12, 3);
+        let mut space = SearchSpace::ladder(&small, &big, &["stackbert", "net2net"]);
+        // keep the unit test tiny: no intermediate rungs, single-stage only
+        space.rungs.clear();
+        let cfg = ProbeConfig { horizon: 4, topk: 2, budget_steps: 64, m_steps: 2, seed: 5 };
+        let rep = run(&space, &cfg).unwrap();
+        assert_eq!(rep.raw, 4, "2 ops x 2 fracs, no rungs");
+        assert!(!rep.ranked.is_empty());
+        let winner = rep.winner().unwrap();
+        let plan = winner.candidate.plan_for(&small, 6, cfg.m_steps, cfg.seed).unwrap();
+        let rt = probe::runtime_for([&small, &big]);
+        let curve = probe::execute_plan(&rt, "winner", &plan, 6, cfg.seed).unwrap();
+        assert_eq!(curve.marks.len(), 1, "winner re-executes with its growth mark");
+    }
+}

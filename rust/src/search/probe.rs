@@ -1,0 +1,347 @@
+//! Cheap-probe scoring: execute static survivors for a short seeded
+//! horizon and rank them by FLOPs-normalized loss improvement.
+//!
+//! Each probe trains the *same* det-init small model through the
+//! candidate's [`GrowthPlan`] on the native engine, then scores the run
+//! LAG-style: short-horizon loss delta divided by the probe's analytic
+//! FLOPs (growth cost included, so an expensive learned-M schedule must
+//! earn its extra compute). Ranking never reads the wall clock — the FLOPs
+//! ledger is deterministic, the wall is not.
+//!
+//! Probes are bitwise reproducible by construction:
+//! * every candidate gets a *fresh* batch source seeded from the probe
+//!   seed, pure in the global microbatch index — so probe order, worker
+//!   count (`LIGO_WORKERS`), and repeated runs cannot perturb the data a
+//!   candidate sees;
+//! * the probe recipe pins `grad_accum = 1`, the regime where the serial
+//!   and sharded step loops are bit-identical;
+//! * scratch params come from [`Trainer::scratch_params`] under the same
+//!   seed for every candidate, so schedules (not inits) are what differ.
+//!
+//! Successive halving keeps the probe bill sublinear in the survivor
+//! count: everyone trains at a quarter horizon first, the worse half is
+//! discarded, the horizon doubles, until the full horizon ranks the
+//! finalists. A step budget (`LIGO_SEARCH_BUDGET`) caps the total; budget
+//! clamps are logged, never silent.
+
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+
+use crate::bail;
+use crate::config::{artifacts_dir, ModelConfig, Registry};
+use crate::coordinator::metrics::Curve;
+use crate::coordinator::plan::GrowthPlan;
+use crate::coordinator::trainer::{Batches, Trainer};
+use crate::data::corpus::Corpus;
+use crate::data::vision::VisionTask;
+use crate::error::{Context, Result};
+use crate::experiments::common;
+use crate::log_info;
+use crate::runtime::{NativeBackend, Runtime};
+use crate::util::knobs;
+
+use super::space::Candidate;
+
+/// Probe-phase configuration, defaulted from the `LIGO_SEARCH_*` knobs.
+#[derive(Debug, Clone)]
+pub struct ProbeConfig {
+    /// Full probe horizon (steps) a finalist trains for.
+    pub horizon: usize,
+    /// Ranked candidates kept through halving and reported.
+    pub topk: usize,
+    /// Total probe optimizer steps across all halving rounds.
+    pub budget_steps: usize,
+    /// M-learning steps per stage for learned-operator candidates.
+    pub m_steps: usize,
+    /// One seed for scratch params, batch streams and stage options.
+    pub seed: u64,
+}
+
+impl ProbeConfig {
+    pub fn from_env() -> ProbeConfig {
+        ProbeConfig {
+            horizon: knobs::usize_env("LIGO_SEARCH_PROBE_STEPS").unwrap_or(24).max(1),
+            topk: knobs::usize_env("LIGO_SEARCH_TOPK").unwrap_or(4).max(1),
+            budget_steps: knobs::usize_env("LIGO_SEARCH_BUDGET").unwrap_or(2000).max(1),
+            m_steps: 8,
+            seed: 0x5EA2_C411,
+        }
+    }
+}
+
+/// What one probe measured.
+#[derive(Debug, Clone)]
+pub struct ProbeScore {
+    pub init_loss: f32,
+    pub final_loss: f32,
+    /// Analytic FLOPs the probe spent (training + growth, from the ledger).
+    pub flops: f64,
+    /// Horizon the final scoring round ran at.
+    pub steps: usize,
+    /// Growth marks the run recorded, in order.
+    pub marks: Vec<(usize, String)>,
+}
+
+impl ProbeScore {
+    /// The ranking statistic: loss improvement per probe GFLOP.
+    pub fn per_gflop(&self) -> f64 {
+        (self.init_loss as f64 - self.final_loss as f64) / (self.flops / 1e9).max(1e-9)
+    }
+}
+
+/// A candidate with its probe verdict.
+#[derive(Debug, Clone)]
+pub struct Scored {
+    pub candidate: Candidate,
+    pub score: ProbeScore,
+}
+
+/// A native-engine runtime whose backend knows every config in `extra` in
+/// addition to the artifact registry — synthesized search rungs are not
+/// presets, so the default registry cannot compile them.
+pub fn runtime_for<'a>(extra: impl IntoIterator<Item = &'a ModelConfig>) -> Runtime {
+    let mut models: BTreeMap<String, ModelConfig> =
+        Registry::load_or_builtin(&artifacts_dir()).models;
+    for cfg in extra {
+        models.insert(cfg.name.clone(), cfg.clone());
+    }
+    Runtime::with_backend(Box::new(NativeBackend::new(models)), artifacts_dir())
+}
+
+/// A probe batch source for `cfg`: pure in the global microbatch index and
+/// freshly seeded per call, so scores are identical across `LIGO_WORKERS`
+/// settings, probe orders and repeated runs.
+pub fn probe_batches(cfg: &ModelConfig, seed: u64) -> Batches {
+    if cfg.is_vision() {
+        common::vision_batches(&VisionTask::pretrain(), cfg, seed)
+    } else {
+        let corpus = Corpus::new(cfg.vocab, seed);
+        common::text_batches(&corpus, cfg, seed)
+    }
+}
+
+/// Execute one plan from det-init scratch params for `steps` and return
+/// the curve. Shared by the probe loop and the winner re-execution check.
+pub fn execute_plan(
+    rt: &Runtime,
+    label: &str,
+    plan: &GrowthPlan,
+    steps: usize,
+    seed: u64,
+) -> Result<Curve> {
+    let initial = plan.initial();
+    let params = Trainer::scratch_params(rt, initial, seed)?;
+    let mut tc = common::recipe_for(initial, steps);
+    // grad_accum == 1 keeps serial and sharded loops bit-identical, so
+    // probe scores cannot depend on LIGO_WORKERS
+    tc.grad_accum = 1;
+    tc.eval_every = steps.max(1);
+    let mut tr = Trainer::new(rt, initial, tc, params)?;
+    let mut batches = probe_batches(initial, seed);
+    tr.run_plan(rt, label, &mut batches, steps, plan)
+}
+
+fn probe_one(
+    rt: &Runtime,
+    initial: &ModelConfig,
+    cand: &Candidate,
+    horizon: usize,
+    cfg: &ProbeConfig,
+) -> Result<Scored> {
+    let plan = cand
+        .plan_for(initial, horizon, cfg.m_steps, cfg.seed)
+        .with_context(|| format!("candidate #{} ({})", cand.id, cand.describe()))?;
+    let label = format!("probe#{:03}", cand.id);
+    let curve = execute_plan(rt, &label, &plan, horizon, cfg.seed)
+        .with_context(|| format!("probing candidate #{} ({})", cand.id, cand.describe()))?;
+    let (first, last) = (
+        *curve.loss.first().context("probe curve has no eval points")?,
+        *curve.loss.last().context("probe curve has no eval points")?,
+    );
+    let flops = curve.flops.last().copied().unwrap_or(0.0);
+    Ok(Scored {
+        candidate: cand.clone(),
+        score: ProbeScore {
+            init_loss: first,
+            final_loss: last,
+            flops,
+            steps: horizon,
+            marks: curve.marks.clone(),
+        },
+    })
+}
+
+/// Deterministic ranking: score descending, enumeration id as tie-break
+/// (incomparable scores — NaN from a diverged probe — fall to the id).
+fn rank(scored: &mut [Scored]) {
+    scored.sort_by(|a, b| {
+        b.score
+            .per_gflop()
+            .partial_cmp(&a.score.per_gflop())
+            .unwrap_or(Ordering::Equal)
+            .then(a.candidate.id.cmp(&b.candidate.id))
+    });
+}
+
+/// Probe all survivors under successive halving and return the top-k of
+/// the final round, ranked best-first.
+pub fn probe_all(
+    rt: &Runtime,
+    initial: &ModelConfig,
+    survivors: &[Candidate],
+    cfg: &ProbeConfig,
+) -> Result<Vec<Scored>> {
+    if survivors.is_empty() {
+        bail!("no candidates survived the static filter; nothing to probe");
+    }
+    let mut active: Vec<Candidate> = survivors.to_vec();
+    // shortest horizon any multi-stage plan can schedule into
+    let min_h = active.iter().map(|c| c.stages.len()).max().unwrap_or(0) + 1;
+    let full_h = cfg.horizon.max(min_h);
+    let mut h = (full_h / 4).clamp(min_h, full_h);
+    let mut spent = 0usize;
+    let mut round = 0usize;
+    loop {
+        // budget clamp is explicit in the log, never silent
+        if spent + active.len() * h > cfg.budget_steps {
+            let per = (cfg.budget_steps.saturating_sub(spent) / active.len()).max(min_h);
+            if per < h {
+                log_info!(
+                    "search: probe budget clamps round {round} horizon {h} -> {per} \
+                     ({} candidates, {spent}/{} steps spent)",
+                    active.len(),
+                    cfg.budget_steps
+                );
+                h = per;
+            }
+        }
+        let mut scored = Vec::with_capacity(active.len());
+        for cand in &active {
+            scored.push(probe_one(rt, initial, cand, h, cfg)?);
+        }
+        spent += active.len() * h;
+        rank(&mut scored);
+        log_info!(
+            "search: round {round} probed {} candidates at horizon {h} \
+             (best {:+.3e} Δloss/GFLOP, {spent} steps spent)",
+            scored.len(),
+            scored[0].score.per_gflop()
+        );
+        if h >= full_h || spent >= cfg.budget_steps {
+            if h < full_h {
+                log_info!(
+                    "search: probe budget {} exhausted at horizon {h} < {full_h}; \
+                     ranking finalists from the last completed round",
+                    cfg.budget_steps
+                );
+            }
+            scored.truncate(cfg.topk);
+            return Ok(scored);
+        }
+        // halve: drop the worse half, floor at top-k finalists
+        let keep = (active.len() / 2).max(cfg.topk).max(1).min(active.len());
+        scored.truncate(keep);
+        active = scored.into_iter().map(|s| s.candidate).collect();
+        h = (h * 2).min(full_h);
+        round += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::mk_cfg;
+    use crate::search::space::CandidateStage;
+
+    fn tiny_rt(small: &ModelConfig, cands: &[Candidate]) -> Runtime {
+        runtime_for(cands.iter().flat_map(|c| c.stages.iter().map(|s| &s.target)).chain([small]))
+    }
+
+    fn tiny_candidates() -> (ModelConfig, Vec<Candidate>) {
+        let small = mk_cfg(2, 8, 2);
+        let big = mk_cfg(3, 12, 3);
+        let cands = vec![
+            Candidate {
+                id: 0,
+                operator: "stackbert".into(),
+                stages: vec![CandidateStage { frac: 0.5, target: big.clone() }],
+            },
+            Candidate {
+                id: 1,
+                operator: "net2net".into(),
+                stages: vec![CandidateStage { frac: 0.5, target: big.clone() }],
+            },
+        ];
+        (small, cands)
+    }
+
+    #[test]
+    fn probes_train_through_the_plan_and_record_growth_marks() {
+        let (small, cands) = tiny_candidates();
+        let rt = tiny_rt(&small, &cands);
+        let cfg = ProbeConfig { horizon: 4, topk: 2, budget_steps: 100, m_steps: 2, seed: 11 };
+        let ranked = probe_all(&rt, &small, &cands, &cfg).unwrap();
+        assert_eq!(ranked.len(), 2);
+        for s in &ranked {
+            assert_eq!(s.score.steps, 4);
+            assert_eq!(s.score.marks.len(), 1, "one growth stage -> one mark");
+            assert!(s.score.flops > 0.0);
+            assert!(s.score.init_loss.is_finite() && s.score.final_loss.is_finite());
+        }
+    }
+
+    #[test]
+    fn identical_probes_score_identically_and_ranking_is_deterministic() {
+        let (small, cands) = tiny_candidates();
+        let rt = tiny_rt(&small, &cands);
+        let cfg = ProbeConfig { horizon: 4, topk: 2, budget_steps: 100, m_steps: 2, seed: 11 };
+        let a = probe_all(&rt, &small, &cands, &cfg).unwrap();
+        let b = probe_all(&rt, &small, &cands, &cfg).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.candidate.id, y.candidate.id);
+            assert_eq!(x.score.final_loss.to_bits(), y.score.final_loss.to_bits());
+            assert_eq!(x.score.flops.to_bits(), y.score.flops.to_bits());
+        }
+    }
+
+    #[test]
+    fn probe_scores_are_bitwise_identical_across_worker_counts() {
+        use crate::coordinator::parallel::set_workers_override;
+        let (small, cands) = tiny_candidates();
+        let rt = tiny_rt(&small, &cands);
+        let cfg = ProbeConfig { horizon: 4, topk: 2, budget_steps: 100, m_steps: 2, seed: 11 };
+        set_workers_override(Some(1));
+        let serial = probe_all(&rt, &small, &cands, &cfg).unwrap();
+        set_workers_override(Some(2));
+        let sharded = probe_all(&rt, &small, &cands, &cfg).unwrap();
+        set_workers_override(None);
+        for (x, y) in serial.iter().zip(&sharded) {
+            assert_eq!(x.candidate.id, y.candidate.id, "ranking must not depend on workers");
+            assert_eq!(
+                x.score.final_loss.to_bits(),
+                y.score.final_loss.to_bits(),
+                "candidate #{} loss must be bit-identical across LIGO_WORKERS",
+                x.candidate.id
+            );
+        }
+    }
+
+    #[test]
+    fn budget_clamp_still_returns_a_full_ranking() {
+        let (small, cands) = tiny_candidates();
+        let rt = tiny_rt(&small, &cands);
+        // budget forces horizon below the requested 16 on the first round
+        let cfg = ProbeConfig { horizon: 16, topk: 2, budget_steps: 8, m_steps: 2, seed: 3 };
+        let ranked = probe_all(&rt, &small, &cands, &cfg).unwrap();
+        assert_eq!(ranked.len(), 2);
+        assert!(ranked[0].score.steps < 16, "clamped horizon, got {}", ranked[0].score.steps);
+    }
+
+    #[test]
+    fn empty_survivor_set_is_a_typed_error() {
+        let (small, _) = tiny_candidates();
+        let rt = runtime_for([&small]);
+        let err = probe_all(&rt, &small, &[], &ProbeConfig::from_env()).unwrap_err().to_string();
+        assert!(err.contains("static filter"), "{err}");
+    }
+}

@@ -1,0 +1,272 @@
+//! Search reporting: the ranked comparison table, the per-candidate prune
+//! log, and the winning [`GrowthPlan`] as executable JSON.
+//!
+//! The winner artifact is the whole point of `ligo search`: a plan file
+//! that round-trips through [`GrowthPlan::load`] straight into
+//! `ligo experiment progressive --plan <file>` (and into
+//! [`crate::coordinator::trainer::Trainer::run_plan`] directly) — search
+//! output *is* training input, no transcription step.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::plan::GrowthPlan;
+use crate::error::{Context, Result};
+use crate::util::json::Json;
+
+use super::probe::Scored;
+use super::space::{Enumerated, Pruned};
+
+/// Everything one `ligo search` run decided, ready to render and persist.
+#[derive(Debug, Clone)]
+pub struct SearchReport {
+    pub initial: String,
+    pub goal: String,
+    /// Size of the raw enumerated space.
+    pub raw: usize,
+    /// Statically-rejected candidates with their typed diagnostics.
+    pub pruned: Vec<Pruned>,
+    /// Probe finalists, ranked best-first.
+    pub ranked: Vec<Scored>,
+    /// Full probe horizon the finalists were ranked at.
+    pub horizon: usize,
+}
+
+impl SearchReport {
+    pub fn new(
+        initial: &str,
+        goal: &str,
+        e: &Enumerated,
+        ranked: Vec<Scored>,
+        horizon: usize,
+    ) -> SearchReport {
+        SearchReport {
+            initial: initial.to_string(),
+            goal: goal.to_string(),
+            raw: e.raw,
+            pruned: e.pruned.clone(),
+            ranked,
+            horizon,
+        }
+    }
+
+    pub fn prune_rate(&self) -> f64 {
+        if self.raw == 0 {
+            return 0.0;
+        }
+        self.pruned.len() as f64 / self.raw as f64
+    }
+
+    /// The machine-parsable one-liner `bench_baseline.py search-gate`
+    /// checks (keep the format stable).
+    pub fn summary_line(&self) -> String {
+        format!(
+            "search space: {} raw candidates, {} pruned statically, {} probed, prune rate {:.3}",
+            self.raw,
+            self.pruned.len(),
+            self.raw - self.pruned.len(),
+            self.prune_rate()
+        )
+    }
+
+    /// Markdown comparison table of the ranked finalists.
+    pub fn table(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "| rank | operator | schedule | init loss | final loss | Δloss/GFLOP | probe steps |"
+        );
+        let _ = writeln!(
+            s,
+            "|------|----------|----------|-----------|------------|-------------|-------------|"
+        );
+        for (i, sc) in self.ranked.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "| {} | {} | {} | {:.4} | {:.4} | {:+.4e} | {} |",
+                i + 1,
+                sc.candidate.operator,
+                sc.candidate.schedule(),
+                sc.score.init_loss,
+                sc.score.final_loss,
+                sc.score.per_gflop(),
+                sc.score.steps,
+            );
+        }
+        s
+    }
+
+    /// Per-candidate prune log: every statically-rejected route and why.
+    pub fn prune_log(&self) -> String {
+        let mut s = String::new();
+        for p in &self.pruned {
+            let route = p.candidate.describe();
+            let _ = writeln!(s, "  pruned #{:03} {}: {}", p.candidate.id, route, p.reason);
+        }
+        s
+    }
+
+    /// The best finalist, if any candidate survived to the probe phase.
+    pub fn winner(&self) -> Option<&Scored> {
+        self.ranked.first()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("initial", Json::Str(self.initial.clone())),
+            ("goal", Json::Str(self.goal.clone())),
+            ("raw", Json::Num(self.raw as f64)),
+            ("pruned", Json::Num(self.pruned.len() as f64)),
+            ("prune_rate", Json::Num(self.prune_rate())),
+            ("horizon", Json::Num(self.horizon as f64)),
+            (
+                "ranked",
+                Json::Arr(
+                    self.ranked
+                        .iter()
+                        .map(|sc| {
+                            Json::obj(vec![
+                                ("id", Json::Num(sc.candidate.id as f64)),
+                                ("operator", Json::Str(sc.candidate.operator.clone())),
+                                ("schedule", Json::Str(sc.candidate.schedule())),
+                                ("init_loss", Json::Num(sc.score.init_loss as f64)),
+                                ("final_loss", Json::Num(sc.score.final_loss as f64)),
+                                ("score_per_gflop", Json::Num(sc.score.per_gflop())),
+                                ("probe_steps", Json::Num(sc.score.steps as f64)),
+                                ("probe_flops", Json::Num(sc.score.flops)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "pruned_log",
+                Json::Arr(
+                    self.pruned
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("id", Json::Num(p.candidate.id as f64)),
+                                ("route", Json::Str(p.candidate.describe())),
+                                ("reason", Json::Str(p.reason.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Persist the run: `search/report.json` plus (when a winner exists)
+    /// `search/best_plan.json`, the executable plan artifact. Returns the
+    /// report path and the plan path.
+    pub fn write(
+        &self,
+        out_dir: &Path,
+        winner_plan: Option<&GrowthPlan>,
+    ) -> Result<(PathBuf, Option<PathBuf>)> {
+        let dir = out_dir.join("search");
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating search output dir {}", dir.display()))?;
+        let report_path = dir.join("report.json");
+        fs::write(&report_path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", report_path.display()))?;
+        let plan_path = match winner_plan {
+            Some(plan) => {
+                let p = dir.join("best_plan.json");
+                plan.save(&p)?;
+                Some(p)
+            }
+            None => None,
+        };
+        Ok((report_path, plan_path))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::growth::testutil::mk_cfg;
+    use crate::search::probe::ProbeScore;
+    use crate::search::space::{Candidate, CandidateStage};
+
+    fn mk_report() -> SearchReport {
+        let big = mk_cfg(3, 12, 3);
+        let cand = Candidate {
+            id: 4,
+            operator: "stackbert".into(),
+            stages: vec![CandidateStage { frac: 0.5, target: big.clone() }],
+        };
+        let bad = Candidate {
+            id: 9,
+            operator: "lemon".into(),
+            stages: vec![CandidateStage { frac: 0.5, target: big }],
+        };
+        SearchReport {
+            initial: "bert_2x8".into(),
+            goal: "bert_3x12".into(),
+            raw: 10,
+            pruned: vec![Pruned {
+                candidate: bad,
+                reason: "lemon: width must grow by an integer factor".into(),
+            }],
+            ranked: vec![Scored {
+                candidate: cand,
+                score: ProbeScore {
+                    init_loss: 4.5,
+                    final_loss: 4.0,
+                    flops: 2.0e9,
+                    steps: 8,
+                    marks: vec![(4, "stackbert".into())],
+                },
+            }],
+            horizon: 8,
+        }
+    }
+
+    #[test]
+    fn summary_line_and_table_render_the_decision() {
+        let r = mk_report();
+        let line = r.summary_line();
+        assert!(line.contains("10 raw candidates"), "{line}");
+        assert!(line.contains("1 pruned statically"), "{line}");
+        assert!(line.contains("prune rate 0.1"), "{line}");
+        let table = r.table();
+        assert!(table.contains("| 1 | stackbert |"), "{table}");
+        assert!(table.contains("@0.50->bert_3x12"), "{table}");
+        assert!(r.prune_log().contains("integer factor"));
+        assert_eq!(r.winner().unwrap().candidate.id, 4);
+    }
+
+    #[test]
+    fn report_json_serializes_rankings_and_prunes() {
+        let r = mk_report();
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("raw").and_then(Json::as_usize), Some(10));
+        let ranked = j.get("ranked").and_then(Json::as_arr).unwrap();
+        assert_eq!(ranked.len(), 1);
+        assert_eq!(ranked[0].get("operator").and_then(Json::as_str), Some("stackbert"));
+        let pruned = j.get("pruned_log").and_then(Json::as_arr).unwrap();
+        assert_eq!(pruned.len(), 1);
+        assert!(pruned[0].get("reason").and_then(Json::as_str).unwrap().contains("integer"));
+    }
+
+    #[test]
+    fn write_persists_report_and_winner_plan() {
+        let r = mk_report();
+        let small = mk_cfg(2, 8, 2);
+        let plan = GrowthPlan::builder(&small)
+            .grow_at(4, &mk_cfg(3, 12, 3), "stackbert")
+            .build()
+            .unwrap();
+        let dir = std::env::temp_dir().join("ligo_search_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (report_path, plan_path) = r.write(&dir, Some(&plan)).unwrap();
+        assert!(report_path.exists());
+        let plan_path = plan_path.unwrap();
+        let reloaded = GrowthPlan::load(&plan_path).unwrap();
+        assert_eq!(reloaded, plan, "persisted winner must round-trip");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,378 @@
+//! Plan-space enumeration: the combinator DSL behind `ligo search`.
+//!
+//! A [`SearchSpace`] describes one growth-policy question — "starting from
+//! `initial`, which operator / intermediate-rung / step-fraction schedule
+//! reaches `goal` best?" — as three orthogonal axes that are crossed
+//! enumo-style: *plug* every combination into a [`Candidate`], then *filter*
+//! the raw set through the symbolic verifier before a single kernel runs.
+//!
+//! The rung ladder is deliberately over-generated: width quarter-points
+//! between `initial.dim` and `goal.dim` are synthesized by raw arithmetic
+//! (no snapping to head multiples), so geometrically impossible rungs (odd
+//! head splits, lateral non-growth, LEMON non-integer factors) are present
+//! in the raw space and must be pruned by [`SearchSpace::filter`] with a
+//! typed diagnostic — which is exactly what the enumeration smoke test
+//! pins. Filtering is 100% static: [`verify::verify_batch`] replays every
+//! chain through the symbolic shape checker and [`shape::cost_of`] prices
+//! each stage endpoint, so invalid or over-budget candidates die without
+//! allocating a tensor (`ligo search` self-asserts the arena fresh-buffer
+//! counter is zero across this phase).
+
+use crate::bail;
+use crate::config::ModelConfig;
+use crate::coordinator::plan::GrowthPlan;
+use crate::error::Result;
+use crate::growth::{verify, LigoOptions};
+use crate::model::shape;
+
+/// One scheduled transition of a candidate: grow into `target` when the
+/// run reaches `frac` of its horizon. Fractions (not absolute steps) keep a
+/// candidate reusable across probe horizons — successive halving re-probes
+/// the same candidate at doubling horizons.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CandidateStage {
+    pub frac: f64,
+    pub target: ModelConfig,
+}
+
+/// One point of the plan space: an operator plus an ordered stage schedule
+/// ending at the space's goal config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    /// Stable enumeration index — the tie-break key for ranking, so equal
+    /// scores order deterministically.
+    pub id: usize,
+    pub operator: String,
+    pub stages: Vec<CandidateStage>,
+}
+
+impl Candidate {
+    /// The chain of stage targets (for [`verify::verify_chain`]).
+    pub fn targets(&self) -> Vec<ModelConfig> {
+        self.stages.iter().map(|s| s.target.clone()).collect()
+    }
+
+    /// Human-readable one-liner: `stackbert @0.33->bert_d4w60 @0.67->bert_base`.
+    pub fn describe(&self) -> String {
+        let mut s = self.operator.clone();
+        for st in &self.stages {
+            s.push_str(&format!(" @{:.2}->{}", st.frac, st.target.name));
+        }
+        s
+    }
+
+    /// The schedule column of [`Candidate::describe`] (without the operator).
+    pub fn schedule(&self) -> String {
+        self.stages
+            .iter()
+            .map(|st| format!("@{:.2}->{}", st.frac, st.target.name))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Instantiate this candidate as an executable [`GrowthPlan`] for a
+    /// concrete horizon: fractions map to strictly-increasing `at_step`s in
+    /// `1..horizon`, clamped so every later stage still fits (`run_plan`
+    /// rejects unreachable stages). Every stage shares one seeded
+    /// [`LigoOptions`], so learned-operator candidates probe reproducibly.
+    pub fn plan_for(
+        &self,
+        initial: &ModelConfig,
+        horizon: usize,
+        m_steps: usize,
+        seed: u64,
+    ) -> Result<GrowthPlan> {
+        let n = self.stages.len();
+        if horizon < n + 1 {
+            bail!(
+                "probe horizon {horizon} cannot schedule {n} growth stage(s) \
+                 (needs at least {} steps)",
+                n + 1
+            );
+        }
+        let mut b = GrowthPlan::builder(initial);
+        let mut prev = 0usize;
+        for (i, st) in self.stages.iter().enumerate() {
+            let remaining = n - 1 - i;
+            // latest step that still leaves room for `remaining` stages
+            let hi = horizon - 1 - remaining;
+            let ideal = (st.frac * horizon as f64).round() as usize;
+            let at = ideal.clamp(prev + 1, hi.max(prev + 1));
+            let opts = LigoOptions { steps: m_steps, seed, ..LigoOptions::default() };
+            b = b.grow_at_with(at, &st.target, &self.operator, opts);
+            prev = at;
+        }
+        b.build()
+    }
+}
+
+/// A statically-rejected candidate with its typed diagnostic (the full
+/// error chain from the symbolic verifier or the cost budget).
+#[derive(Debug, Clone)]
+pub struct Pruned {
+    pub candidate: Candidate,
+    pub reason: String,
+}
+
+/// The outcome of the static phase: how big the raw space was, who
+/// survived, and why everyone else died.
+#[derive(Debug, Clone)]
+pub struct Enumerated {
+    pub raw: usize,
+    pub survivors: Vec<Candidate>,
+    pub pruned: Vec<Pruned>,
+}
+
+impl Enumerated {
+    /// Fraction of the raw space the static filter removed.
+    pub fn prune_rate(&self) -> f64 {
+        if self.raw == 0 {
+            return 0.0;
+        }
+        self.pruned.len() as f64 / self.raw as f64
+    }
+}
+
+/// The three crossed axes of one growth-policy search, plus optional
+/// static cost caps.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub initial: ModelConfig,
+    pub goal: ModelConfig,
+    /// Registry operator names ([`crate::growth::by_name`] vocabulary).
+    pub operators: Vec<String>,
+    /// Horizon fractions at which a stage may fire, in (0, 1).
+    pub fracs: Vec<f64>,
+    /// Intermediate rungs for multi-stage schedules (over-generated; the
+    /// static filter owns validity).
+    pub rungs: Vec<ModelConfig>,
+    /// Per-stage-endpoint peak-arena cap in bytes (symbolic estimate).
+    pub max_peak_bytes: Option<usize>,
+    /// Per-stage-endpoint fwd+bwd FLOPs/step cap (symbolic estimate).
+    pub max_step_flops: Option<f64>,
+}
+
+/// Synthesize the rung ladder between two geometries: quarter-point depths
+/// x quarter-point widths, raw arithmetic. A width that doesn't divide by
+/// the initial per-head dim keeps the initial head count — if that head
+/// count doesn't divide the width either, the rung is *intentionally*
+/// invalid and exists to exercise the static filter. The goal geometry
+/// itself is excluded (it is every candidate's final stage already).
+pub fn ladder_rungs(initial: &ModelConfig, goal: &ModelConfig) -> Vec<ModelConfig> {
+    let quarter_points = |from: usize, to: usize| -> Vec<usize> {
+        let delta = to.saturating_sub(from) as f64;
+        let mut v: Vec<usize> = [0.0, 0.25, 0.5, 0.75, 1.0]
+            .iter()
+            .map(|q| from + (q * delta).round() as usize)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let per_head = (initial.dim / initial.heads.max(1)).max(1);
+    let mut rungs = Vec::new();
+    for layers in quarter_points(initial.layers, goal.layers) {
+        for dim in quarter_points(initial.dim, goal.dim) {
+            if layers == goal.layers && dim == goal.dim {
+                continue;
+            }
+            let heads = if dim % per_head == 0 { dim / per_head } else { initial.heads };
+            let mut cfg = initial.clone();
+            cfg.name = format!("{}_d{layers}w{dim}", cfg.family);
+            cfg.layers = layers;
+            cfg.dim = dim;
+            cfg.heads = heads;
+            rungs.push(cfg);
+        }
+    }
+    rungs
+}
+
+impl SearchSpace {
+    /// The default ladder space: the given operators x the synthesized
+    /// rung ladder x two growth points (1/3 and 2/3 of the horizon).
+    pub fn ladder(initial: &ModelConfig, goal: &ModelConfig, operators: &[&str]) -> SearchSpace {
+        SearchSpace {
+            initial: initial.clone(),
+            goal: goal.clone(),
+            operators: operators.iter().map(|s| s.to_string()).collect(),
+            fracs: vec![1.0 / 3.0, 2.0 / 3.0],
+            rungs: ladder_rungs(initial, goal),
+            max_peak_bytes: None,
+            max_step_flops: None,
+        }
+    }
+
+    /// Cross the axes into the raw candidate list (plugging; no validity
+    /// judgement here — that is [`SearchSpace::filter`]'s job):
+    /// per operator, every 1-stage schedule `[(f, goal)]` and every 2-stage
+    /// schedule `[(f_i, rung), (f_j, goal)]` with `f_i < f_j`.
+    pub fn enumerate(&self) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        let mut id = 0usize;
+        let mut push = |op: &String, stages: Vec<CandidateStage>| {
+            out.push(Candidate { id, operator: op.clone(), stages });
+            id += 1;
+        };
+        for op in &self.operators {
+            for f in &self.fracs {
+                push(op, vec![CandidateStage { frac: *f, target: self.goal.clone() }]);
+            }
+            for rung in &self.rungs {
+                for (i, f1) in self.fracs.iter().enumerate() {
+                    for f2 in &self.fracs[i + 1..] {
+                        push(
+                            op,
+                            vec![
+                                CandidateStage { frac: *f1, target: rung.clone() },
+                                CandidateStage { frac: *f2, target: self.goal.clone() },
+                            ],
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Check one candidate's stage endpoints against the cost caps.
+    /// Symbolic prices only ([`shape::cost_of`] memoizes per geometry).
+    fn over_budget(&self, cand: &Candidate) -> Result<Option<String>> {
+        for st in &cand.stages {
+            let cost = shape::cost_of(&st.target)?;
+            if let Some(cap) = self.max_peak_bytes {
+                if cost.peak_bytes > cap {
+                    return Ok(Some(format!(
+                        "stage '{}' peak arena {} bytes exceeds the {cap}-byte budget",
+                        st.target.name, cost.peak_bytes
+                    )));
+                }
+            }
+            if let Some(cap) = self.max_step_flops {
+                if cost.step_flops > cap {
+                    return Ok(Some(format!(
+                        "stage '{}' costs {:.3e} FLOPs/step, over the {cap:.3e} budget",
+                        st.target.name, cost.step_flops
+                    )));
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// The static filter: split `candidates` into survivors and pruned.
+    /// Every chain goes through [`verify::verify_batch`] (symbolic shape
+    /// replay, operator-regime checks) and then the cost caps; rejects
+    /// carry the full diagnostic chain. No kernels run here.
+    pub fn filter(&self, candidates: Vec<Candidate>) -> Result<Enumerated> {
+        let raw = candidates.len();
+        let chains: Vec<(String, Vec<ModelConfig>)> =
+            candidates.iter().map(|c| (c.operator.clone(), c.targets())).collect();
+        let verdicts = verify::verify_batch(&self.initial, &chains);
+        let mut survivors = Vec::new();
+        let mut pruned = Vec::new();
+        for (cand, verdict) in candidates.into_iter().zip(verdicts) {
+            match verdict {
+                Err(e) => pruned.push(Pruned { candidate: cand, reason: format!("{e:#}") }),
+                Ok(_) => match self.over_budget(&cand)? {
+                    Some(reason) => pruned.push(Pruned { candidate: cand, reason }),
+                    None => survivors.push(cand),
+                },
+            }
+        }
+        Ok(Enumerated { raw, survivors, pruned })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Registry;
+    use crate::tensor::arena;
+
+    fn smoke_space() -> SearchSpace {
+        let reg = Registry::builtin();
+        SearchSpace::ladder(
+            &reg.models["bert_small"],
+            &reg.models["bert_base"],
+            &["stackbert", "net2net", "ligo", "lemon"],
+        )
+    }
+
+    #[test]
+    fn ladder_over_generates_and_the_filter_prunes_statically() {
+        let space = smoke_space();
+        // 4x5 quarter-point grid minus the goal geometry
+        let names: Vec<&String> = space.rungs.iter().map(|r| &r.name).collect();
+        assert_eq!(space.rungs.len(), 19, "{names:?}");
+        let raw = space.enumerate();
+        assert!(raw.len() >= 20, "smoke space must enumerate >=20 raw, got {}", raw.len());
+        // zero-kernel proof: the whole static phase allocates no arena buffer
+        arena::reset_stats();
+        let e = space.filter(raw).unwrap();
+        let (fresh, _) = arena::stats();
+        assert_eq!(fresh, 0, "static filter must not execute kernels");
+        assert_eq!(e.raw, 4 * (2 + 19));
+        assert!(!e.survivors.is_empty());
+        assert!(e.prune_rate() >= 0.5, "rate {}", e.prune_rate());
+        // every survivor's final stage is the goal
+        for c in &e.survivors {
+            assert_eq!(c.stages.last().unwrap().target.name, "bert_base");
+        }
+    }
+
+    #[test]
+    fn pruned_candidates_carry_typed_diagnostics() {
+        let space = smoke_space();
+        let e = space.filter(space.enumerate()).unwrap();
+        let reasons: Vec<&str> = e.pruned.iter().map(|p| p.reason.as_str()).collect();
+        // odd head split from a raw-arithmetic width rung (54 or 66)
+        assert!(
+            reasons.iter().any(|r| r.contains("divisible") || r.contains("heads")),
+            "{reasons:#?}"
+        );
+        // lateral rung (initial geometry): growth must strictly grow
+        assert!(reasons.iter().any(|r| r.contains("not larger")), "{reasons:#?}");
+        // LEMON out-of-regime: 48 -> 72 is not an integer width factor
+        assert!(reasons.iter().any(|r| r.contains("integer factor")), "{reasons:#?}");
+        // every lemon candidate dies on this ladder (72 = 1.5 * 48)
+        assert!(e.pruned.iter().filter(|p| p.candidate.operator == "lemon").count() > 0);
+        assert!(!e.survivors.iter().any(|c| c.operator == "lemon"));
+        // diagnostics are stage-indexed so multi-stage rejects are locatable
+        assert!(reasons.iter().any(|r| r.contains("chain stage")), "{reasons:#?}");
+    }
+
+    #[test]
+    fn cost_caps_prune_over_budget_survivors() {
+        let mut space = smoke_space();
+        space.max_step_flops = Some(1.0); // absurdly tight: everything is over
+        let e = space.filter(space.enumerate()).unwrap();
+        assert!(e.survivors.is_empty());
+        assert!(e.pruned.iter().any(|p| p.reason.contains("FLOPs/step")));
+    }
+
+    #[test]
+    fn plans_schedule_fractions_into_strictly_increasing_reachable_steps() {
+        let space = smoke_space();
+        let e = space.filter(space.enumerate()).unwrap();
+        let two_stage = e
+            .survivors
+            .iter()
+            .find(|c| c.stages.len() == 2)
+            .expect("ladder space has 2-stage survivors");
+        for horizon in [3usize, 6, 24] {
+            let plan = two_stage.plan_for(&space.initial, horizon, 4, 7).unwrap();
+            let steps: Vec<usize> = plan.stages().iter().map(|s| s.at_step).collect();
+            assert_eq!(steps.len(), 2);
+            assert!(steps[0] >= 1 && steps[1] > steps[0], "{steps:?} @ {horizon}");
+            assert!(steps[1] < horizon, "{steps:?} @ {horizon}");
+            for st in plan.stages() {
+                assert_eq!(st.opts.steps, 4);
+                assert_eq!(st.opts.seed, 7);
+            }
+        }
+        // too-short horizon is a typed error, not a silent mis-schedule
+        let err = two_stage.plan_for(&space.initial, 2, 4, 7).unwrap_err().to_string();
+        assert!(err.contains("horizon"), "{err}");
+    }
+}

@@ -114,6 +114,24 @@ pub const REGISTRY: &[Knob] = &[
         default: "16",
         doc: "ligo serve: tokens per KV-cache page (per layer, per K/V side)",
     },
+    Knob {
+        name: "LIGO_SEARCH_BUDGET",
+        ty: "usize >= 1",
+        default: "2000",
+        doc: "ligo search: total probe optimizer steps across all halving rounds",
+    },
+    Knob {
+        name: "LIGO_SEARCH_PROBE_STEPS",
+        ty: "usize >= 1",
+        default: "24",
+        doc: "ligo search: full probe horizon (steps) a finalist candidate trains for",
+    },
+    Knob {
+        name: "LIGO_SEARCH_TOPK",
+        ty: "usize >= 1",
+        default: "4",
+        doc: "ligo search: ranked candidates kept through halving and reported",
+    },
 ];
 
 /// Look a knob up in [`REGISTRY`] (e.g. for doc rendering).

@@ -1,0 +1,152 @@
+//! Acceptance tests for the growth-policy search subsystem (`ligo search`):
+//! the enumerated space over-generates, the static filter kills every
+//! invalid candidate with a typed diagnostic *before any kernel runs*
+//! (proven by the thread-local arena counters), probe scores are bitwise
+//! deterministic — across repeated runs and across `LIGO_WORKERS` — and
+//! the winning plan round-trips through its JSON file back into
+//! `Trainer::run_plan`.
+
+use ligo::coordinator::parallel::set_workers_override;
+use ligo::coordinator::plan::GrowthPlan;
+use ligo::growth::testutil::mk_cfg;
+use ligo::search::{probe, ProbeConfig, SearchSpace};
+use ligo::tensor::arena;
+
+/// The CI smoke configuration: the real bert_small -> bert_base ladder
+/// with the smoke operator set. Static phases only here — probing presets
+/// is the e2e CI job's business, not a unit-speed test's.
+fn smoke_space() -> SearchSpace {
+    let reg = ligo::config::Registry::builtin();
+    SearchSpace::ladder(
+        &reg.models["bert_small"],
+        &reg.models["bert_base"],
+        &["stackbert", "net2net", "ligo", "lemon"],
+    )
+}
+
+/// A probe-speed space over tiny test configs (vocab 64, seq 16, batch 4).
+fn tiny_space() -> SearchSpace {
+    SearchSpace::ladder(&mk_cfg(2, 8, 2), &mk_cfg(3, 12, 3), &["stackbert", "net2net"])
+}
+
+fn tiny_probe() -> ProbeConfig {
+    ProbeConfig { horizon: 4, topk: 2, budget_steps: 200, m_steps: 2, seed: 11 }
+}
+
+#[test]
+fn smoke_space_prunes_over_half_statically_with_zero_kernels() {
+    let space = smoke_space();
+    let raw = space.enumerate();
+    assert!(raw.len() >= 20, "smoke space must enumerate >=20 candidates, got {}", raw.len());
+
+    arena::reset_stats();
+    let e = space.filter(raw).unwrap();
+    if arena::enabled() {
+        assert_eq!(arena::stats().0, 0, "static filter must not allocate kernel buffers");
+        assert_eq!(arena::peak_request(), 0, "static filter must not request kernel buffers");
+    }
+
+    assert!(e.prune_rate() >= 0.5, "prune rate {:.3} below the 50% floor", e.prune_rate());
+    assert!(!e.survivors.is_empty(), "the filter must not kill the whole space");
+
+    // every rejection carries a typed, non-empty diagnostic
+    for p in &e.pruned {
+        assert!(!p.reason.is_empty(), "#{} pruned without a reason", p.candidate.id);
+    }
+    // the three engineered failure classes are all present and named
+    let reasons: Vec<&str> = e.pruned.iter().map(|p| p.reason.as_str()).collect();
+    assert!(reasons.iter().any(|r| r.contains("divisible")), "odd head split: {reasons:#?}");
+    assert!(reasons.iter().any(|r| r.contains("not larger")), "lateral rung: {reasons:#?}");
+    assert!(reasons.iter().any(|r| r.contains("integer factor")), "lemon regime: {reasons:#?}");
+    // lemon cannot reach bert_base from bert_small (72 = 1.5 * 48): every
+    // lemon candidate must die statically
+    assert!(!e.survivors.iter().any(|c| c.operator == "lemon"));
+}
+
+#[test]
+fn search_ranking_is_identical_across_runs_and_worker_counts() {
+    let space = tiny_space();
+    let pc = tiny_probe();
+
+    let run = || ligo::search::run(&space, &pc).unwrap();
+    let a = run();
+    let b = run();
+    assert_eq!(a.ranked.len(), b.ranked.len());
+    for (x, y) in a.ranked.iter().zip(&b.ranked) {
+        assert_eq!(x.candidate.id, y.candidate.id, "repeat run reordered the ranking");
+        assert_eq!(
+            x.score.final_loss.to_bits(),
+            y.score.final_loss.to_bits(),
+            "candidate #{} rescored differently on a repeat run",
+            x.candidate.id
+        );
+        assert_eq!(x.score.flops.to_bits(), y.score.flops.to_bits());
+    }
+
+    // LIGO_WORKERS must not perturb scores or order: probes pin
+    // grad_accum = 1 and use index-pure seeded batch sources
+    set_workers_override(Some(2));
+    let sharded = run();
+    set_workers_override(None);
+    for (x, y) in a.ranked.iter().zip(&sharded.ranked) {
+        assert_eq!(x.candidate.id, y.candidate.id, "worker count reordered the ranking");
+        assert_eq!(
+            x.score.final_loss.to_bits(),
+            y.score.final_loss.to_bits(),
+            "candidate #{} scores differently under LIGO_WORKERS=2",
+            x.candidate.id
+        );
+    }
+}
+
+#[test]
+fn winner_plan_file_round_trips_and_reexecutes_with_marks() {
+    let space = tiny_space();
+    let pc = tiny_probe();
+    let out = std::env::temp_dir().join("ligo_search_smoke_test");
+    let _ = std::fs::remove_dir_all(&out);
+
+    let plan_horizon = 8;
+    let rep = ligo::search::run_and_write(&space, &pc, plan_horizon, &out).unwrap();
+    let winner = rep.winner().expect("tiny space has survivors").clone();
+
+    // the persisted file is exactly the winner's plan at the emit horizon
+    let plan_path = out.join("search").join("best_plan.json");
+    let loaded = GrowthPlan::load(&plan_path).unwrap();
+    let expected = winner
+        .candidate
+        .plan_for(&space.initial, plan_horizon, pc.m_steps, pc.seed)
+        .unwrap();
+    assert_eq!(loaded, expected, "plan file must round-trip to builder equality");
+
+    // and it executes end-to-end: every scheduled stage leaves a mark
+    let rt = probe::runtime_for(
+        std::iter::once(loaded.initial()).chain(loaded.stages().iter().map(|s| &s.target)),
+    );
+    let curve = probe::execute_plan(&rt, "winner", &loaded, plan_horizon, pc.seed).unwrap();
+    assert_eq!(curve.marks.len(), loaded.stages().len());
+    assert!(curve.flops.last().copied().unwrap_or(0.0) > 0.0);
+
+    // report artifact exists alongside the plan
+    assert!(out.join("search").join("report.json").exists());
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn plan_file_drives_the_progressive_experiment() {
+    let out = std::env::temp_dir().join("ligo_search_plan_exp_test");
+    let _ = std::fs::remove_dir_all(&out);
+
+    // hand-write a plan file the way `ligo search` would emit one
+    let small = mk_cfg(2, 8, 2);
+    let big = mk_cfg(3, 12, 3);
+    let plan = GrowthPlan::builder(&small).grow_at(5, &big, "stackbert").build().unwrap();
+    std::fs::create_dir_all(&out).unwrap();
+    let plan_path = out.join("best_plan.json");
+    plan.save(&plan_path).unwrap();
+
+    // tiny scale: `scaled` floors at 20 steps, both runs stay test-sized
+    ligo::experiments::progressive::from_plan_file(&plan_path, 0.01, &out).unwrap();
+    assert!(out.join("progressive_plan.json").exists());
+    let _ = std::fs::remove_dir_all(&out);
+}
