@@ -156,7 +156,9 @@ fn lint_env_var(rust_root: &Path, files: &[PathBuf], findings: &mut Vec<String>)
     }
 }
 
-/// Pull every `LIGO_[A-Z0-9_]+` token out of a line.
+/// Pull every `LIGO_[A-Z0-9_]+` token out of a line, untrimmed — a
+/// trailing `_` marks a family reference (`LIGO_DECODE_*` in prose) that
+/// the caller resolves against the registry by prefix.
 fn knob_tokens(line: &str, out: &mut Vec<String>) {
     let bytes = line.as_bytes();
     let mut i = 0;
@@ -169,7 +171,7 @@ fn knob_tokens(line: &str, out: &mut Vec<String>) {
             end += 1;
         }
         if end > start + "LIGO_".len() {
-            out.push(line[start..end].trim_end_matches('_').to_string());
+            out.push(line[start..end].to_string());
         }
         i = end;
     }
@@ -214,7 +216,13 @@ fn lint_knobs(rust_root: &Path, repo_root: &Path, files: &[PathBuf], findings: &
         for (_, line) in non_test_region(&text) {
             let mut toks = Vec::new();
             knob_tokens(line, &mut toks);
-            for tok in toks {
+            for raw in toks {
+                if raw.ends_with('_') && registry.iter().any(|n| n.starts_with(raw.as_str())) {
+                    // `LIGO_DECODE_*`-style family reference in prose: it
+                    // names a registered prefix, not a knob read
+                    continue;
+                }
+                let tok = raw.trim_end_matches('_').to_string();
                 if tok.starts_with("LIGO_TEST") {
                     continue; // accessor-contract fixtures, deliberately unregistered
                 }

@@ -33,6 +33,7 @@ fn requests(cfg: &ModelConfig, n: usize) -> Vec<Request> {
                 top_k: 8,
                 top_p: 0.95,
                 seed: 42 + i as u64,
+                deadline_steps: 0,
             }
         })
         .collect()
@@ -41,7 +42,8 @@ fn requests(cfg: &ModelConfig, n: usize) -> Vec<Request> {
 /// Drain `reqs` through a scheduler with the given concurrency; returns
 /// the tokens sampled (constant across iterations — asserted).
 fn run_workload(dec: &Decoder<'_>, max_sessions: usize, reqs: &[Request]) -> u64 {
-    let mut sched = Scheduler::new(dec, ServeOptions { max_sessions, page_tokens: 16 });
+    let mut sched =
+        Scheduler::new(dec, ServeOptions { max_sessions, page_tokens: 16, max_pages: 0 });
     for r in reqs {
         sched.submit(r.clone()).unwrap();
     }

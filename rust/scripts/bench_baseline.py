@@ -54,6 +54,15 @@ search-gate FILE [MIN_RATE]
     runs. Also requires a non-empty ranked finalist table and the winner
     re-execution line. Exits non-zero on violation.
 
+ckpt-gate BIN [FACTOR]
+    Self-calibrating checkpoint-overhead gate: BIN is the built `ligo`
+    binary. Times `BIN train --model bert_small --steps 60` twice with
+    checkpointing off and twice with LIGO_CKPT_EVERY=10 (interleaved,
+    best-of-two per arm to shed scheduler noise); the checkpointed wall
+    must come in under FACTOR (default 1.05) x the uncheckpointed wall
+    plus a small absolute grace for sub-second runs where fixed I/O
+    costs dominate the ratio. Exits non-zero on violation.
+
 record
     Run the full protocol on this host (requires cargo): serial growth_ops,
     parallel growth_ops, quickstart wall-clock; append the resulting rows
@@ -238,6 +247,44 @@ def cmd_search_gate(path, min_rate=0.5):
     )
 
 
+def cmd_ckpt_gate(bin_path, factor=1.05, grace_s=0.5):
+    import shutil
+    import tempfile
+
+    base = tempfile.mkdtemp(prefix="ligo_ckpt_gate_")
+
+    def run_train(env_extra, out):
+        env = dict(os.environ, **env_extra)
+        t0 = time.time()
+        subprocess.run(
+            [bin_path, "train", "--model", "bert_small", "--steps", "60", "--out", out],
+            env=env, check=True, capture_output=True,
+        )
+        return time.time() - t0
+
+    # interleave the arms so a runner slowdown hits both; best-of-two per
+    # arm sheds one-off scheduler noise
+    offs, ons = [], []
+    for i in range(2):
+        offs.append(run_train({}, os.path.join(base, f"off{i}")))
+        ons.append(
+            run_train({"LIGO_CKPT_EVERY": "10"}, os.path.join(base, f"on{i}"))
+        )
+    shutil.rmtree(base, ignore_errors=True)
+    off, on = min(offs), min(ons)
+    budget = off * factor + grace_s
+    if on > budget:
+        sys.exit(
+            f"REGRESSION: checkpointed train wall {on:.3f}s > "
+            f"{factor} x uncheckpointed {off:.3f}s + {grace_s}s grace "
+            f"(overhead {(on / off - 1) * 100:.1f}%)"
+        )
+    print(
+        f"ckpt gate ok: checkpointed {on:.3f}s <= {factor} x off {off:.3f}s "
+        f"+ {grace_s}s grace (overhead {(on / off - 1) * 100:.1f}%)"
+    )
+
+
 def cmd_record():
     host = f"{os.uname().nodename} ({os.cpu_count()} cores)"
     print(f"== recording bench baseline for {host} ==")
@@ -300,6 +347,9 @@ def main():
     elif cmd == "search-gate":
         min_rate = float(sys.argv[3]) if len(sys.argv) > 3 else 0.5
         cmd_search_gate(sys.argv[2], min_rate)
+    elif cmd == "ckpt-gate":
+        factor = float(sys.argv[3]) if len(sys.argv) > 3 else 1.05
+        cmd_ckpt_gate(sys.argv[2], factor)
     elif cmd == "record":
         cmd_record()
     else:

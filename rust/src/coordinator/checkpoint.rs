@@ -1,0 +1,370 @@
+//! Full-state training checkpoints: crash-safe snapshot and resume.
+//!
+//! A [`TrainState`] captures everything a [`crate::coordinator::trainer::Trainer`]
+//! needs to continue a run **bit-for-bit**: the model config and parameter
+//! `Store`, the sharded AdamW moments and bias-correction step, the growth
+//! plan stage cursor, the training curve (losses, FLOPs, wall, marks), the
+//! FLOPs counter, and any named RNG streams. The data cursor needs no
+//! separate state: batch sources are index-pure (`batch = f(global
+//! microbatch index, seed)`), so restoring the step counter restores the
+//! loader position exactly.
+//!
+//! On disk a snapshot is one LGCK v2 file (`tensor/io`) of five sections —
+//! `meta` (JSON), `params` / `opt_m` / `opt_v` (tensor streams), `curve`
+//! (JSON) — written atomically (temp file → fsync → rename) with a CRC32
+//! per section. [`write_retained`] keeps the last `keep` snapshots;
+//! [`latest_good`] scans newest-first and falls back past any snapshot
+//! whose CRCs (or headers) fail verification, so a torn or bit-flipped
+//! newest checkpoint degrades to the previous good one instead of killing
+//! the resume.
+//!
+//! Exact-resume float round-trips: `f64`/`f32` scalars ride in JSON, which
+//! this crate prints shortest-roundtrip (`util/json`), so `flops_spent`,
+//! curve losses, etc. restore bitwise. `u64` RNG states are stored as
+//! strings (a JSON number is an `f64` and cannot hold all of `u64`), the
+//! same convention `coordinator/plan` uses for seeds.
+
+use std::path::{Path, PathBuf};
+
+use crate::bail;
+use crate::config::ModelConfig;
+use crate::coordinator::metrics::Curve;
+use crate::error::{Context, Error, Result};
+use crate::log_warn;
+use crate::tensor::io;
+use crate::tensor::store::Store;
+use crate::util::json::Json;
+
+/// Everything needed to resume training bit-for-bit. Field-for-field what
+/// `Trainer::snapshot` captures and `Trainer::resume` restores.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    /// Config of the model being trained *at the snapshot step* (mid-plan
+    /// this is the current stage's target, not the plan's initial config).
+    pub cfg: ModelConfig,
+    /// Completed optimizer steps (the trainer's global step counter; also
+    /// the data cursor — batch sources are indexed by `step * accum + µ`).
+    pub step: usize,
+    /// Index of the next unexecuted [`crate::coordinator::plan::GrowthPlan`]
+    /// stage (0 = none executed; `stages().len()` = all done).
+    pub next_stage: usize,
+    /// Global step at which the interrupted `run*` call started (anchors
+    /// eval cadence and the step budget).
+    pub run_start: usize,
+    /// Optimizer bias-correction step counter (resets at growth, so it is
+    /// not derivable from `step`).
+    pub opt_t: usize,
+    /// Microbatches per optimizer step the run was using; resuming under a
+    /// different accumulation would silently change the data stream.
+    pub grad_accum: usize,
+    /// Cumulative training FLOPs at the snapshot (bit-exact `f64`).
+    pub flops_spent: f64,
+    /// Wall seconds consumed before the snapshot (informational; wall time
+    /// is the one series the bit-identity invariant does not cover).
+    pub wall_s: f64,
+    /// Model parameters.
+    pub params: Store,
+    /// AdamW first moments (merged across shards).
+    pub opt_m: Store,
+    /// AdamW second moments.
+    pub opt_v: Store,
+    /// The training curve so far, marks included.
+    pub curve: Curve,
+    /// Named RNG stream positions (`util/rng::Rng::state`). The core loop
+    /// is RNG-free at step granularity, but callers with live streams
+    /// (e.g. future data augmentation) snapshot them here.
+    pub rng_streams: Vec<(String, u64)>,
+}
+
+impl TrainState {
+    fn meta_json(&self) -> Json {
+        Json::obj(vec![
+            ("config", self.cfg.to_json()),
+            ("step", Json::Num(self.step as f64)),
+            ("next_stage", Json::Num(self.next_stage as f64)),
+            ("run_start", Json::Num(self.run_start as f64)),
+            ("opt_t", Json::Num(self.opt_t as f64)),
+            ("grad_accum", Json::Num(self.grad_accum as f64)),
+            ("flops_spent", Json::Num(self.flops_spent)),
+            ("wall_s", Json::Num(self.wall_s)),
+            (
+                "rng",
+                Json::Arr(
+                    self.rng_streams
+                        .iter()
+                        .map(|(name, state)| {
+                            Json::obj(vec![
+                                ("name", Json::Str(name.clone())),
+                                ("state", Json::Str(state.to_string())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the snapshot to `path` as one atomic LGCK v2 file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        io::write_sections(
+            path,
+            &[
+                ("meta", self.meta_json().to_string().into_bytes()),
+                ("params", io::encode_store(&self.params)),
+                ("opt_m", io::encode_store(&self.opt_m)),
+                ("opt_v", io::encode_store(&self.opt_v)),
+                ("curve", self.curve.to_json().to_string().into_bytes()),
+            ],
+        )
+    }
+
+    /// Load and fully verify a snapshot. Any damage — CRC mismatch,
+    /// truncation, missing section, malformed JSON — is a typed error.
+    pub fn load(path: impl AsRef<Path>) -> Result<TrainState> {
+        let path = path.as_ref();
+        let mut meta = None;
+        let mut params = None;
+        let mut opt_m = None;
+        let mut opt_v = None;
+        let mut curve = None;
+        for (name, payload) in io::read_sections(path)? {
+            let ctx = |e: Error| Error::msg(format!("{path:?}: section '{name}': {e}"));
+            match name.as_str() {
+                "meta" => meta = Some(parse_json(&payload).map_err(ctx)?),
+                "curve" => {
+                    curve = Some(Curve::from_json(&parse_json(&payload).map_err(ctx)?).map_err(ctx)?)
+                }
+                "params" => params = Some(io::decode_store(&payload).map_err(ctx)?),
+                "opt_m" => opt_m = Some(io::decode_store(&payload).map_err(ctx)?),
+                "opt_v" => opt_v = Some(io::decode_store(&payload).map_err(ctx)?),
+                _ => {}
+            }
+        }
+        let missing = |what: &str| format!("{path:?}: snapshot has no '{what}' section");
+        let meta = meta.with_context(|| missing("meta"))?;
+        let params = params.with_context(|| missing("params"))?;
+        let opt_m = opt_m.with_context(|| missing("opt_m"))?;
+        let opt_v = opt_v.with_context(|| missing("opt_v"))?;
+        let curve = curve.with_context(|| missing("curve"))?;
+
+        let num = |k: &str| -> Result<f64> {
+            meta.get(k).and_then(Json::as_f64).with_context(|| format!("{path:?}: meta missing '{k}'"))
+        };
+        let cfg = ModelConfig::from_json(
+            meta.get("config").with_context(|| format!("{path:?}: meta missing 'config'"))?,
+        )
+        .with_context(|| format!("{path:?}: meta 'config'"))?;
+        let mut rng_streams = Vec::new();
+        if let Some(arr) = meta.get("rng").and_then(Json::as_arr) {
+            for s in arr {
+                let name = s
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("{path:?}: rng stream missing 'name'"))?;
+                let state = s
+                    .get("state")
+                    .and_then(Json::as_str)
+                    .and_then(|v| v.parse::<u64>().ok())
+                    .with_context(|| format!("{path:?}: rng stream '{name}' has a bad 'state'"))?;
+                rng_streams.push((name.to_string(), state));
+            }
+        }
+        Ok(TrainState {
+            cfg,
+            step: num("step")? as usize,
+            next_stage: num("next_stage")? as usize,
+            run_start: num("run_start")? as usize,
+            opt_t: num("opt_t")? as usize,
+            grad_accum: num("grad_accum")? as usize,
+            flops_spent: num("flops_spent")?,
+            wall_s: num("wall_s")?,
+            params,
+            opt_m,
+            opt_v,
+            curve,
+            rng_streams,
+        })
+    }
+}
+
+fn parse_json(payload: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(payload).map_err(|e| Error::msg(format!("not UTF-8: {e}")))?;
+    Json::parse(text).map_err(Error::msg)
+}
+
+/// Canonical snapshot file name for a step: `state_step00000120.lgck`
+/// (zero-padded so lexicographic order is step order).
+pub fn checkpoint_path(dir: &Path, step: usize) -> PathBuf {
+    dir.join(format!("state_step{step:08}.lgck"))
+}
+
+/// All snapshot files under `dir`, ascending by step. A missing directory
+/// is an empty list, not an error (nothing has been checkpointed yet).
+pub fn list_checkpoints(dir: &Path) -> Result<Vec<(usize, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out),
+    };
+    for entry in entries {
+        let path = entry.with_context(|| format!("scan {dir:?}"))?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let Some(step) = name
+            .strip_prefix("state_step")
+            .and_then(|s| s.strip_suffix(".lgck"))
+            .and_then(|s| s.parse::<usize>().ok())
+        else {
+            continue;
+        };
+        out.push((step, path));
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Save `state` under its canonical name in `dir`, then prune the oldest
+/// snapshots beyond the newest `keep`. Returns the written path.
+pub fn write_retained(state: &TrainState, dir: &Path, keep: usize) -> Result<PathBuf> {
+    let keep = keep.max(1);
+    let path = checkpoint_path(dir, state.step);
+    state.save(&path)?;
+    let all = list_checkpoints(dir)?;
+    if all.len() > keep {
+        for (_, old) in &all[..all.len() - keep] {
+            if let Err(e) = std::fs::remove_file(old) {
+                log_warn!("could not prune old checkpoint {old:?}: {e}");
+            }
+        }
+    }
+    Ok(path)
+}
+
+/// The newest snapshot in `dir` that passes full verification. A corrupt
+/// newer snapshot (torn write, bit flip) logs a warning and falls back to
+/// the next older one; `Ok(None)` means no usable snapshot exists.
+pub fn latest_good(dir: &Path) -> Result<Option<(PathBuf, TrainState)>> {
+    for (_, path) in list_checkpoints(dir)?.into_iter().rev() {
+        match TrainState::load(&path) {
+            Ok(state) => return Ok(Some((path, state))),
+            Err(e) => log_warn!("checkpoint {path:?} failed verification ({e}); falling back"),
+        }
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::Registry;
+    use crate::tensor::Tensor;
+    use crate::util::fault::{self, Fault};
+
+    fn sample_state(step: usize) -> TrainState {
+        let cfg = Registry::builtin().model("bert_small").expect("builtin config").clone();
+        let mut params = Store::new();
+        params.insert("w", Tensor::from_f32(&[2, 2], vec![0.5, -1.25, 3.0, 0.1]));
+        let mut opt_m = Store::new();
+        opt_m.insert("w", Tensor::from_f32(&[2, 2], vec![0.01, 0.02, -0.03, 0.0]));
+        let mut opt_v = Store::new();
+        opt_v.insert("w", Tensor::from_f32(&[2, 2], vec![1e-4, 2e-4, 3e-4, 4e-4]));
+        let mut curve = Curve::new("test");
+        curve.push(0, 0.0, 0.0, 4.7, None);
+        curve.push(step, 1.5e9, 2.25, 3.3, None);
+        curve.mark(step, "grew a -> b via ligo (test)");
+        TrainState {
+            cfg,
+            step,
+            next_stage: 1,
+            run_start: 0,
+            opt_t: step,
+            grad_accum: 2,
+            flops_spent: 1.5e9 + 0.125,
+            wall_s: 2.25,
+            params,
+            opt_m,
+            opt_v,
+            curve,
+            rng_streams: vec![("aug".to_string(), u64::MAX - 3)],
+        }
+    }
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("ligo_ckpt_test").join(name);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_bitwise() {
+        let dir = test_dir("roundtrip");
+        let s = sample_state(12);
+        let path = checkpoint_path(&dir, s.step);
+        s.save(&path).unwrap();
+        let l = TrainState::load(&path).unwrap();
+        assert_eq!(l.cfg.name, s.cfg.name);
+        assert_eq!(
+            (l.step, l.next_stage, l.run_start, l.opt_t, l.grad_accum),
+            (s.step, s.next_stage, s.run_start, s.opt_t, s.grad_accum)
+        );
+        assert_eq!(l.flops_spent.to_bits(), s.flops_spent.to_bits());
+        assert_eq!(l.wall_s.to_bits(), s.wall_s.to_bits());
+        assert_eq!(l.params, s.params);
+        assert_eq!(l.opt_m, s.opt_m);
+        assert_eq!(l.opt_v, s.opt_v);
+        assert_eq!(l.rng_streams, s.rng_streams);
+        assert_eq!(l.curve.marks, s.curve.marks);
+        for (a, b) in s.curve.loss.iter().zip(&l.curve.loss) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn retention_keeps_the_newest_k() {
+        let dir = test_dir("retention");
+        for step in [10, 20, 30, 40] {
+            write_retained(&sample_state(step), &dir, 2).unwrap();
+        }
+        let steps: Vec<usize> = list_checkpoints(&dir).unwrap().into_iter().map(|(s, _)| s).collect();
+        assert_eq!(steps, vec![30, 40]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn latest_good_falls_back_past_a_corrupted_newest() {
+        let dir = test_dir("fallback");
+        write_retained(&sample_state(10), &dir, 3).unwrap();
+        write_retained(&sample_state(20), &dir, 3).unwrap();
+        // Corrupt the newest on disk.
+        let newest = checkpoint_path(&dir, 20);
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (path, state) = latest_good(&dir).unwrap().expect("older snapshot survives");
+        assert_eq!(path, checkpoint_path(&dir, 10));
+        assert_eq!(state.step, 10);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn latest_good_falls_back_past_an_injected_torn_write() {
+        let dir = test_dir("torn");
+        write_retained(&sample_state(10), &dir, 3).unwrap();
+        fault::set_override(Some(Fault::TornWrite));
+        write_retained(&sample_state(20), &dir, 3).unwrap();
+        fault::clear_override();
+        let (_, state) = latest_good(&dir).unwrap().expect("older snapshot survives");
+        assert_eq!(state.step, 10, "torn newest must be skipped");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn latest_good_is_none_for_missing_or_empty_dir() {
+        let dir = test_dir("empty");
+        assert!(latest_good(&dir).unwrap().is_none());
+        assert!(latest_good(&dir.join("never_created")).unwrap().is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

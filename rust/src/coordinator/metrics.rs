@@ -119,6 +119,51 @@ impl Curve {
             ),
         ])
     }
+
+    /// Rebuild a curve from its [`Curve::to_json`] form. Numeric series
+    /// round-trip bitwise (the JSON writer prints floats shortest-roundtrip
+    /// and `f32` widens to `f64` exactly), which the checkpoint/resume
+    /// bit-identity invariant relies on.
+    pub fn from_json(j: &Json) -> crate::error::Result<Curve> {
+        use crate::error::Context;
+        let name =
+            j.get("name").and_then(Json::as_str).context("curve: missing 'name'")?.to_string();
+        let nums = |key: &str| -> crate::error::Result<Vec<f64>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("curve '{name}': missing series '{key}'"))?
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .with_context(|| format!("curve '{name}': non-numeric '{key}' entry"))
+                })
+                .collect()
+        };
+        let steps: Vec<usize> = nums("steps")?.iter().map(|&x| x as usize).collect();
+        let flops = nums("flops")?;
+        let wall = nums("wall")?;
+        let loss: Vec<f32> = nums("loss")?.iter().map(|&x| x as f32).collect();
+        let metric: Vec<f32> = nums("metric")?.iter().map(|&x| x as f32).collect();
+        if flops.len() != steps.len() || wall.len() != steps.len() || loss.len() != steps.len() {
+            crate::bail!("curve '{name}': series lengths disagree");
+        }
+        let mut marks = Vec::new();
+        if let Some(arr) = j.get("marks").and_then(Json::as_arr) {
+            for m in arr {
+                let step = m
+                    .get("step")
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("curve '{name}': mark missing 'step'"))?;
+                let label = m
+                    .get("label")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("curve '{name}': mark missing 'label'"))?
+                    .to_string();
+                marks.push((step, label));
+            }
+        }
+        Ok(Curve { name, steps, flops, wall, loss, metric, marks })
+    }
 }
 
 /// The paper's savings statistic: 1 - cost(method)/cost(scratch), where cost
@@ -224,5 +269,41 @@ mod tests {
     fn final_loss_averages_tail() {
         let c = mk("x", &[5.0, 1.0, 1.0, 1.0], 1.0);
         assert!((c.final_loss() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_roundtrip_is_bitwise() {
+        let mut c = Curve::new("rt");
+        // Deliberately awkward floats: non-terminating binary fractions,
+        // tiny and huge magnitudes, values with no short decimal form.
+        c.push(0, 1.0e12 + 0.3, 0.000_123_456, 1.234_567_9, Some(0.1));
+        c.push(7, 2.5e15, 17.25, std::f32::consts::PI, None);
+        c.mark(7, "grew bert_small -> bert_base via ligo (x)");
+        let text = c.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let back = Curve::from_json(&parsed).unwrap();
+        assert_eq!(back.name, c.name);
+        assert_eq!(back.steps, c.steps);
+        assert_eq!(back.marks, c.marks);
+        for (a, b) in c.flops.iter().zip(&back.flops) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in c.wall.iter().zip(&back.wall) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in c.loss.iter().zip(&back.loss) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.metric.len(), 1);
+        assert_eq!(back.metric[0].to_bits(), 0.1f32.to_bits());
+    }
+
+    #[test]
+    fn from_json_rejects_ragged_series() {
+        let mut j = mk("x", &[1.0, 0.5], 2.0).to_json();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.insert("loss".into(), crate::util::json::Json::Arr(vec![]));
+        }
+        assert!(Curve::from_json(&j).is_err());
     }
 }

@@ -5,6 +5,10 @@
 //! * [`metrics`] — loss curves, savings-at-threshold, CSV/JSON reports
 //! * [`trainer`] — the step loop (accumulation, freezing, eval hooks) and
 //!   mid-run [`plan::GrowthPlan`] execution
+//! * [`checkpoint`] — crash-safe full-state snapshots (params + optimizer
+//!   moments + plan cursor + curve + FLOPs) with retention and
+//!   corrupt-newest fallback; resume is bit-identical to an uninterrupted
+//!   run
 //! * [`parallel`] — the `LIGO_WORKERS` sharded data-parallel worker pool:
 //!   per-worker microbatch shards feeding the deterministic tree all-reduce
 //!   (`util::allreduce`), bit-identical to the serial path for any worker
@@ -19,6 +23,7 @@
 //!   paged KV sessions multiplexed through one batched decode step, with
 //!   interleaving-invariant per-session token streams
 
+pub mod checkpoint;
 pub mod flops;
 pub mod growth_manager;
 pub mod metrics;

@@ -397,6 +397,56 @@ impl ShardedAdamW {
         }
         gnorm
     }
+
+    /// Snapshot the full optimizer state for checkpointing: the merged
+    /// first/second moment Stores (cloned; the live shards are untouched)
+    /// plus the bias-correction step counter.
+    pub fn export_state(&self) -> (Store, Store, usize) {
+        let mut m = Store::new();
+        let mut v = Store::new();
+        for sh in &self.shards {
+            for (k, t) in sh.m.iter() {
+                m.insert(k.clone(), t.clone());
+            }
+            for (k, t) in sh.v.iter() {
+                v.insert(k.clone(), t.clone());
+            }
+        }
+        (m, v, self.t)
+    }
+
+    /// Restore a snapshot captured by [`export_state`](Self::export_state).
+    /// Moments are re-partitioned over the *current* shard count exactly
+    /// like [`reshard`](Self::reshard) — tensors moved, never recomputed,
+    /// so a resumed run continues bit-for-bit even under a different
+    /// `LIGO_WORKERS` — and the step counter resumes bias correction where
+    /// it left off. The freeze set is cleared (freezing is a schedule
+    /// decision, re-applied by whoever drives the resumed run).
+    pub fn import_state(&mut self, m: Store, v: Store, t: usize) -> crate::error::Result<()> {
+        if m.len() != v.len()
+            || m.iter().map(|(k, _)| k).ne(v.iter().map(|(k, _)| k))
+        {
+            crate::bail!(
+                "optimizer state: m/v moment key sets disagree ({} vs {} entries)",
+                m.len(),
+                v.len()
+            );
+        }
+        let n = self.shards.len().max(1);
+        self.assign = partition(m.iter().map(|(k, t)| (k, t.numel())), n);
+        self.shards = (0..n).map(|_| MomentShard { m: Store::new(), v: Store::new() }).collect();
+        for (k, t) in m.into_entries() {
+            let s = self.assign[&k];
+            self.shards[s].m.insert(k, t);
+        }
+        for (k, t) in v.into_entries() {
+            let s = self.assign[&k];
+            self.shards[s].v.insert(k, t);
+        }
+        self.t = t;
+        self.frozen.clear();
+        Ok(())
+    }
 }
 
 /// Plain SGD with momentum — what the paper uses for the 100 LiGO M-steps.
@@ -642,6 +692,42 @@ mod tests {
         sopt.step(&mut p, &g, 1e-2);
         sopt.step(&mut p, &g, 1e-2);
         assert_eq!(bits(&p), bits(&reference), "reshard changed the trajectory");
+    }
+
+    #[test]
+    fn export_import_resumes_the_trajectory_bitwise_across_shard_counts() {
+        // 2 steps, snapshot, 2 more steps == 4 uninterrupted steps, bit for
+        // bit — including when the snapshot is imported into an optimizer
+        // with a different shard count (the LIGO_WORKERS∈{1,2} resume case).
+        let (p0, g) = varied_params();
+        let mut reference = p0.clone();
+        let mut ropt = ShardedAdamW::new(&reference, 1, 0.9, 0.999, 1e-8, 0.01, 0.5);
+        for step in 0..4 {
+            ropt.step(&mut reference, &g, 1e-2 * (step + 1) as f32);
+        }
+        let mut p = p0.clone();
+        let mut opt = ShardedAdamW::new(&p, 2, 0.9, 0.999, 1e-8, 0.01, 0.5);
+        opt.step(&mut p, &g, 1e-2);
+        opt.step(&mut p, &g, 2e-2);
+        let (m, v, t) = opt.export_state();
+        assert_eq!(t, 2);
+        for shards in [1, 2, 3] {
+            let mut rp = p.clone();
+            let mut ropt2 = ShardedAdamW::new(&rp, shards, 0.9, 0.999, 1e-8, 0.01, 0.5);
+            ropt2.import_state(m.clone(), v.clone(), t).unwrap();
+            ropt2.step(&mut rp, &g, 3e-2);
+            ropt2.step(&mut rp, &g, 4e-2);
+            assert_eq!(bits(&rp), bits(&reference), "resume on {shards} shards diverged");
+        }
+    }
+
+    #[test]
+    fn import_state_rejects_mismatched_moment_keys() {
+        let (p, _) = varied_params();
+        let mut opt = ShardedAdamW::new(&p, 2, 0.9, 0.999, 1e-8, 0.0, 0.0);
+        let (m, mut v, t) = opt.export_state();
+        v.remove("att_w");
+        assert!(opt.import_state(m, v, t).is_err());
     }
 
     #[test]

@@ -15,6 +15,20 @@
 //! [`PagePool`] (evicted sessions recycle their pages to the next admit)
 //! and activations from the arena, so a warm serve loop performs zero
 //! fresh allocations.
+//!
+//! **Degradation is graceful, never a panic.** When the pool is capped
+//! (`ServeOptions::max_pages`), admission reserves each session's
+//! worst-case page demand up front and applies strict-FIFO backpressure:
+//! the queue head waits until enough reservation frees up, and later
+//! requests wait behind it (head-of-line blocking keeps the admission
+//! order — and therefore the batch composition — deterministic). A request
+//! that could *never* fit is rejected at [`Scheduler::submit`] with a
+//! typed error. Per-session `deadline_steps` budgets bound decode work:
+//! a session that exhausts its budget is evicted with a partial
+//! [`Completion`] (`complete == false`). Because every active session
+//! participates in every batched step, the budget is counted in steps the
+//! session itself ran — an interleaving-invariant measure — so the tokens
+//! of a deadline-evicted session still match its solo stream prefix.
 
 use std::collections::VecDeque;
 
@@ -37,6 +51,9 @@ pub struct ServeOptions {
     pub max_sessions: usize,
     /// Tokens per KV page (per layer, per K/V side).
     pub page_tokens: usize,
+    /// KV page-pool cap; 0 = unbounded. When set, admission reserves each
+    /// session's worst-case pages and exerts backpressure at the cap.
+    pub max_pages: usize,
 }
 
 impl ServeOptions {
@@ -44,6 +61,7 @@ impl ServeOptions {
         ServeOptions {
             max_sessions: knobs::usize_env("LIGO_DECODE_SESSIONS").unwrap_or(4).max(1),
             page_tokens: knobs::usize_env("LIGO_DECODE_PAGE").unwrap_or(16).max(1),
+            max_pages: 0,
         }
     }
 }
@@ -59,14 +77,21 @@ pub struct Request {
     pub top_k: usize,
     pub top_p: f32,
     pub seed: u64,
+    /// Decode-step budget for this session; 0 = unlimited. A session that
+    /// runs this many batched steps without finishing is evicted with a
+    /// partial [`Completion`].
+    pub deadline_steps: u64,
 }
 
 /// A finished session: the generated tokens (prompt excluded).
+/// `complete == false` marks a deadline eviction — the stream is a prefix
+/// of what the request would have produced with an unlimited budget.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Completion {
     pub id: u64,
     pub prompt_len: usize,
     pub tokens: Vec<i32>,
+    pub complete: bool,
 }
 
 struct Session {
@@ -78,12 +103,29 @@ struct Session {
     rng: Rng,
     /// Generated tokens so far; the last one is the next step's feed.
     generated: Vec<i32>,
+    /// Worst-case pages reserved for this session at admission (0 when
+    /// the pool is uncapped).
+    reserved: usize,
+    deadline_steps: u64,
+    /// Batched decode steps this session has participated in. Every active
+    /// session steps each tick, so this count is interleaving-invariant.
+    steps_taken: u64,
 }
 
 impl Session {
     fn done(&self) -> bool {
         self.generated.len() >= self.max_new
     }
+
+    fn expired(&self) -> bool {
+        self.deadline_steps > 0 && self.steps_taken >= self.deadline_steps
+    }
+}
+
+/// Worst-case KV pages a session can ever hold: one K and one V table per
+/// layer, each spanning every position the session may write.
+fn session_pages(cfg: &ModelConfig, page_tokens: usize, prompt_len: usize, max_new: usize) -> usize {
+    cfg.layers * 2 * (prompt_len + max_new).div_ceil(page_tokens)
 }
 
 /// The continuous-batching scheduler: one decoder, one page pool, a FIFO
@@ -98,6 +140,8 @@ pub struct Scheduler<'a> {
     done: Vec<Completion>,
     generated: u64,
     steps: u64,
+    /// Sum of the active sessions' worst-case page reservations.
+    reserved: usize,
 }
 
 impl<'a> Scheduler<'a> {
@@ -106,13 +150,14 @@ impl<'a> Scheduler<'a> {
         Scheduler {
             dec,
             opts,
-            pool: PagePool::new(page_floats),
+            pool: PagePool::with_capacity(page_floats, opts.max_pages),
             queue: VecDeque::new(),
             active: Vec::new(),
             caches: Vec::new(),
             done: Vec::new(),
             generated: 0,
             steps: 0,
+            reserved: 0,
         }
     }
 
@@ -137,6 +182,17 @@ impl<'a> Scheduler<'a> {
         }
         if let Some(&bad) = req.prompt.iter().find(|&&t| t < 0 || t as usize >= cfg.vocab) {
             bail!("request {}: token {bad} outside vocab {}", req.id, cfg.vocab);
+        }
+        if self.opts.max_pages > 0 {
+            let need = session_pages(cfg, self.opts.page_tokens, req.prompt.len(), req.max_new);
+            if need > self.opts.max_pages {
+                bail!(
+                    "request {}: needs {need} KV pages but the pool is capped at {} — \
+                     can never be admitted",
+                    req.id,
+                    self.opts.max_pages
+                );
+            }
         }
         self.queue.push_back(req);
         Ok(())
@@ -178,7 +234,23 @@ impl<'a> Scheduler<'a> {
     fn admit(&mut self) -> Result<()> {
         let cfg = self.dec.cfg();
         while self.active.len() < self.opts.max_sessions {
-            let Some(req) = self.queue.pop_front() else { break };
+            let Some(front) = self.queue.front() else { break };
+            // capped pool: reserve the head's worst case or block. Strict
+            // FIFO with head-of-line blocking — never skip ahead to a
+            // smaller request, so the admission order (and with it every
+            // batch composition downstream) is a pure function of the
+            // submit order.
+            let need = if self.opts.max_pages > 0 {
+                let n =
+                    session_pages(cfg, self.opts.page_tokens, front.prompt.len(), front.max_new);
+                if self.reserved + n > self.opts.max_pages {
+                    break;
+                }
+                n
+            } else {
+                0
+            };
+            let req = self.queue.pop_front().expect("front() was Some");
             let mut cache =
                 KvCache::new(cfg.layers, self.opts.page_tokens, cfg.dim, cfg.seq);
             let xf = self.dec.prefill(&req.prompt, &mut cache, &mut self.pool)?;
@@ -195,7 +267,11 @@ impl<'a> Scheduler<'a> {
                 top_p: req.top_p,
                 rng: Rng::new(req.seed),
                 generated: Vec::new(),
+                reserved: need,
+                deadline_steps: req.deadline_steps,
+                steps_taken: 0,
             };
+            self.reserved += need;
             let spec = SampleSpec { top_k: sess.top_k, top_p: sess.top_p, u: sess.rng.next_f32() };
             let first = self.sample(xrow, &[spec])[0];
             sess.generated.push(first);
@@ -208,13 +284,15 @@ impl<'a> Scheduler<'a> {
     fn evict_finished(&mut self) {
         let mut s = 0;
         while s < self.active.len() {
-            if self.active[s].done() {
+            if self.active[s].done() || self.active[s].expired() {
                 let sess = self.active.swap_remove(s);
                 let mut cache = self.caches.swap_remove(s);
                 cache.release(&mut self.pool);
+                self.reserved -= sess.reserved;
                 self.done.push(Completion {
                     id: sess.id,
                     prompt_len: sess.prompt_len,
+                    complete: sess.done(),
                     tokens: sess.generated,
                 });
             } else {
@@ -223,9 +301,10 @@ impl<'a> Scheduler<'a> {
         }
     }
 
-    /// One scheduler tick: admit into free slots, run one batched decode
-    /// step over every active session, evict the finished. Returns `false`
-    /// once both the queue and the active set are empty.
+    /// One scheduler tick: admit into free slots (subject to page
+    /// backpressure), run one batched decode step over every active
+    /// session, evict the finished and the deadline-expired. Returns
+    /// `false` once both the queue and the active set are empty.
     pub fn step(&mut self) -> Result<bool> {
         self.admit()?;
         self.evict_finished(); // max_new == 1 sessions finish at admit
@@ -252,6 +331,7 @@ impl<'a> Scheduler<'a> {
             let toks = self.sample(xf, &specs);
             for (sess, tok) in self.active.iter_mut().zip(toks) {
                 sess.generated.push(tok);
+                sess.steps_taken += 1;
             }
             self.steps += 1;
             self.evict_finished();
@@ -283,6 +363,7 @@ fn self_test_requests(cfg: &ModelConfig) -> Vec<Request> {
                 top_k: [1, 4, 8, 2][i],
                 top_p: [1.0, 0.9, 0.7, 1.0][i],
                 seed: 1000 + i as u64,
+                deadline_steps: 0,
             }
         })
         .collect()
@@ -327,7 +408,11 @@ fn run_requests<'a>(
 /// printable summary line.
 pub fn self_test<P: ParamView>(cfg: &ModelConfig, params: &P) -> Result<String> {
     let dec = Decoder::new(cfg, params)?;
-    let opts = ServeOptions { page_tokens: ServeOptions::from_env().page_tokens, max_sessions: 4 };
+    let opts = ServeOptions {
+        page_tokens: ServeOptions::from_env().page_tokens,
+        max_sessions: 4,
+        max_pages: 0,
+    };
     let reqs = self_test_requests(cfg);
 
     // per-session ground truth: each request decoded entirely alone
@@ -409,9 +494,17 @@ mod tests {
         let cfg = gpt_cfg();
         let params = Store::det_init(&param_shapes(&cfg), 1);
         let dec = Decoder::new(&cfg, &params).unwrap();
-        let opts = ServeOptions { max_sessions: 2, page_tokens: 4 };
+        let opts = ServeOptions { max_sessions: 2, page_tokens: 4, max_pages: 0 };
         let mut sched = Scheduler::new(&dec, opts);
-        let ok = Request { id: 0, prompt: vec![1, 2], max_new: 3, top_k: 1, top_p: 1.0, seed: 7 };
+        let ok = Request {
+            id: 0,
+            prompt: vec![1, 2],
+            max_new: 3,
+            top_k: 1,
+            top_p: 1.0,
+            seed: 7,
+            deadline_steps: 0,
+        };
         sched.submit(ok.clone()).unwrap();
         assert!(sched.submit(Request { prompt: vec![], ..ok.clone() }).is_err());
         assert!(sched.submit(Request { max_new: 0, ..ok.clone() }).is_err());
@@ -423,7 +516,137 @@ mod tests {
         let done = sched.take_done();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].tokens.len(), 3);
+        assert!(done[0].complete);
         assert_eq!(sched.pool().live(), 0);
+    }
+
+    #[test]
+    fn capped_pool_backpressure_serializes_admission_without_changing_streams() {
+        let cfg = gpt_cfg();
+        let params = Store::det_init(&param_shapes(&cfg), 5);
+        let dec = Decoder::new(&cfg, &params).unwrap();
+        let mk = |i: u64| Request {
+            id: i,
+            prompt: vec![1, 2, 3, 4],
+            max_new: 3,
+            top_k: 4,
+            top_p: 0.9,
+            seed: 50 + i,
+            deadline_steps: 0,
+        };
+        let uncapped = ServeOptions { max_sessions: 3, page_tokens: 4, max_pages: 0 };
+        let mut solo = Vec::new();
+        for i in 0..3 {
+            let mut s = Scheduler::new(&dec, ServeOptions { max_sessions: 1, ..uncapped });
+            s.submit(mk(i)).unwrap();
+            s.run().unwrap();
+            solo.extend(s.take_done());
+        }
+        // one session needs layers*2*ceil((4+3)/4) = 8 pages, so an 8-page
+        // cap admits exactly one at a time even with 3 free slots
+        let mut s = Scheduler::new(&dec, ServeOptions { max_pages: 8, ..uncapped });
+        for i in 0..3 {
+            s.submit(mk(i)).unwrap();
+        }
+        loop {
+            let more = s.step().unwrap();
+            assert!(s.active_sessions() <= 1, "backpressure must hold admissions at the cap");
+            assert!(s.pool().total() <= 8, "pool grew past its cap");
+            if !more {
+                break;
+            }
+        }
+        let mut done = s.take_done();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done, solo, "backpressure changed a token stream");
+        assert!(done.iter().all(|c| c.complete));
+        assert_eq!(s.pool().live(), 0);
+    }
+
+    #[test]
+    fn deadline_evicts_with_a_partial_prefix_completion() {
+        let cfg = gpt_cfg();
+        let params = Store::det_init(&param_shapes(&cfg), 6);
+        let dec = Decoder::new(&cfg, &params).unwrap();
+        let opts = ServeOptions { max_sessions: 2, page_tokens: 4, max_pages: 0 };
+        let full = Request {
+            id: 0,
+            prompt: vec![3, 1, 4],
+            max_new: 8,
+            top_k: 4,
+            top_p: 0.9,
+            seed: 9,
+            deadline_steps: 0,
+        };
+        let mut s = Scheduler::new(&dec, opts);
+        s.submit(full.clone()).unwrap();
+        s.run().unwrap();
+        let reference = s.take_done().pop().unwrap();
+        assert!(reference.complete);
+        assert_eq!(reference.tokens.len(), 8);
+
+        // a 3-step budget yields 1 admit token + 3 decode tokens, then a
+        // partial completion that prefixes the unlimited stream
+        let mut s = Scheduler::new(&dec, opts);
+        s.submit(Request { deadline_steps: 3, ..full.clone() }).unwrap();
+        s.run().unwrap();
+        let partial = s.take_done().pop().unwrap();
+        assert!(!partial.complete);
+        assert_eq!(partial.tokens.len(), 4);
+        assert_eq!(partial.tokens[..], reference.tokens[..4], "partial stream must be a prefix");
+        assert_eq!(s.pool().live(), 0, "deadline eviction must release its pages");
+
+        // the cut point is interleaving-invariant: a long-running peer in
+        // the same batch must not move it
+        let peer = Request { id: 1, seed: 77, max_new: 6, ..full.clone() };
+        let mut s = Scheduler::new(&dec, opts);
+        s.submit(Request { deadline_steps: 3, ..full }).unwrap();
+        s.submit(peer).unwrap();
+        s.run().unwrap();
+        let mut done = s.take_done();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done[0].tokens, partial.tokens, "peer interleaving moved the deadline cut");
+        assert!(!done[0].complete);
+        assert!(done[1].complete);
+        assert_eq!(s.pool().live(), 0);
+    }
+
+    #[test]
+    fn never_fitting_request_is_rejected_at_submit_not_mid_flight() {
+        let cfg = gpt_cfg();
+        let params = Store::det_init(&param_shapes(&cfg), 7);
+        let dec = Decoder::new(&cfg, &params).unwrap();
+        let opts = ServeOptions { max_sessions: 2, page_tokens: 4, max_pages: 4 };
+        let mut s = Scheduler::new(&dec, opts);
+        // needs layers*2*ceil((6+6)/4) = 12 pages against a 4-page cap
+        let big = Request {
+            id: 0,
+            prompt: vec![1; 6],
+            max_new: 6,
+            top_k: 1,
+            top_p: 1.0,
+            seed: 1,
+            deadline_steps: 0,
+        };
+        let err = s.submit(big).unwrap_err().to_string();
+        assert!(err.contains("capped at 4"), "{err}");
+        assert_eq!(s.queued(), 0, "rejected request must not enter the queue");
+        // a fitting request (exactly 4 pages) still flows to completion
+        let small = Request {
+            id: 1,
+            prompt: vec![2],
+            max_new: 1,
+            top_k: 1,
+            top_p: 1.0,
+            seed: 2,
+            deadline_steps: 0,
+        };
+        s.submit(small).unwrap();
+        s.run().unwrap();
+        let done = s.take_done();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].complete);
+        assert_eq!(s.pool().live(), 0);
     }
 
     #[test]

@@ -16,11 +16,13 @@
 //! set ([`Trainer::adopt_grown`]). Unset, the historical serial path runs
 //! byte for byte.
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::bail;
 use crate::config::{ModelConfig, TrainConfig};
-use crate::error::Result;
+use crate::error::{Context, Result};
+use crate::coordinator::checkpoint::{self, TrainState};
 use crate::coordinator::flops;
 use crate::coordinator::metrics::Curve;
 use crate::coordinator::optim::{accumulate, ShardedAdamW};
@@ -31,6 +33,7 @@ use crate::runtime::{Executable, RunOutputs, Runtime};
 use crate::tensor::{arena, store::Store};
 use crate::util::allreduce;
 use crate::util::timer::Timer;
+use crate::util::{fault, knobs};
 
 /// A train-batch source. [`Serial`](TrainSource::Serial) is the historical
 /// stateful closure — it can only be consumed in order, on one thread.
@@ -106,6 +109,26 @@ pub struct Trainer {
     /// (empty until [`Trainer::train_step_sharded`] has run).
     last_worker_stats: Vec<arena::WorkerStats>,
     step: usize,
+    /// Periodic crash-safe checkpointing ([`Trainer::checkpoint_every`]).
+    ckpt: Option<CkptCfg>,
+}
+
+/// Periodic checkpoint settings: cadence, directory, retention.
+#[derive(Clone)]
+struct CkptCfg {
+    every: usize,
+    dir: PathBuf,
+    keep: usize,
+}
+
+/// The run-loop context a resumed run carries beyond the trainer fields:
+/// the curve recorded so far, the growth-plan stage cursor, and the global
+/// step at which the interrupted `run*` call started (which anchors the
+/// eval cadence and the step budget).
+pub struct Resumed {
+    pub curve: Curve,
+    pub next_stage: usize,
+    pub run_start: usize,
 }
 
 impl Trainer {
@@ -145,6 +168,7 @@ impl Trainer {
             extra: Vec::new(),
             last_worker_stats: Vec::new(),
             step: 0,
+            ckpt: None,
         })
     }
 
@@ -156,6 +180,91 @@ impl Trainer {
 
     pub fn step_count(&self) -> usize {
         self.step
+    }
+
+    /// Enable periodic crash-safe checkpointing: every `every` optimizer
+    /// steps (0 disables) the full [`TrainState`] — params, optimizer
+    /// moments + step, plan cursor, curve, FLOPs — is written atomically
+    /// under `dir`, retaining the newest `LIGO_CKPT_KEEP` (default 3)
+    /// snapshots. Resuming from any of them reproduces the uninterrupted
+    /// run bit for bit ([`Trainer::resume`]).
+    pub fn checkpoint_every(&mut self, every: usize, dir: impl Into<PathBuf>) {
+        if every == 0 {
+            self.ckpt = None;
+            return;
+        }
+        let keep = knobs::usize_env("LIGO_CKPT_KEEP").unwrap_or(3).max(1);
+        self.ckpt = Some(CkptCfg { every, dir: dir.into(), keep });
+    }
+
+    /// Capture the full training state at the current step (the data
+    /// cursor is `step` itself: batch sources are index-pure).
+    fn snapshot(
+        &self,
+        run_start: usize,
+        next_stage: usize,
+        flops_spent: f64,
+        wall_s: f64,
+        curve: &Curve,
+    ) -> TrainState {
+        let (opt_m, opt_v, opt_t) = self.opt.export_state();
+        TrainState {
+            cfg: self.cfg.clone(),
+            step: self.step,
+            next_stage,
+            run_start,
+            opt_t,
+            grad_accum: self.tc.grad_accum.max(1),
+            flops_spent,
+            wall_s,
+            params: self.params.clone(),
+            opt_m,
+            opt_v,
+            curve: curve.clone(),
+            rng_streams: Vec::new(),
+        }
+    }
+
+    /// Rebuild a trainer from a verified [`TrainState`] snapshot,
+    /// positioned exactly at the snapshot step: parameters, optimizer
+    /// moments and bias-correction step, step counter, and FLOPs/wall
+    /// offsets all restore bitwise. `tc` must be the recipe the
+    /// interrupted run used — at minimum the same `grad_accum`, or the
+    /// index-pure microbatch stream would silently shift. Returns the
+    /// [`Resumed`] context to pass to [`run_resumed`](Self::run_resumed) /
+    /// [`run_plan_resumed`](Self::run_plan_resumed).
+    pub fn resume(rt: &Runtime, tc: TrainConfig, state: TrainState) -> Result<(Trainer, Resumed)> {
+        if tc.grad_accum.max(1) != state.grad_accum {
+            bail!(
+                "resume: recipe grad_accum {} differs from the checkpoint's {} — \
+                 the microbatch stream would not line up",
+                tc.grad_accum.max(1),
+                state.grad_accum
+            );
+        }
+        let mut tr = Trainer::new(rt, &state.cfg, tc, state.params)?;
+        tr.opt.import_state(state.opt_m, state.opt_v, state.opt_t)?;
+        tr.step = state.step;
+        tr.flops_offset = state.flops_spent;
+        tr.wall_offset = state.wall_s;
+        Ok((
+            tr,
+            Resumed {
+                curve: state.curve,
+                next_stage: state.next_stage,
+                run_start: state.run_start,
+            },
+        ))
+    }
+
+    /// Resume from the newest checkpoint under `dir` that passes full
+    /// verification ([`checkpoint::latest_good`] — a corrupt newest
+    /// snapshot is skipped with a warning). Errors if none verifies.
+    pub fn resume_latest(rt: &Runtime, tc: TrainConfig, dir: &Path) -> Result<(Trainer, Resumed)> {
+        let (path, state) = checkpoint::latest_good(dir)?
+            .with_context(|| format!("no usable checkpoint under {dir:?}"))?;
+        log_info!("resuming from {path:?} (step {})", state.step);
+        Self::resume(rt, tc, state)
     }
 
     /// One optimizer step (grad_accum microbatches). Returns mean loss.
@@ -252,7 +361,23 @@ impl Trainer {
     /// Full training run: returns the curve, evaluating every
     /// `tc.eval_every` steps.
     pub fn run(&mut self, name: &str, batches: &mut Batches, steps: usize) -> Result<Curve> {
-        self.run_inner(name, batches, steps, None)
+        self.run_inner(name, batches, steps, None, None)
+    }
+
+    /// Continue an interrupted [`run`](Self::run) from a [`Trainer::resume`]d
+    /// trainer. `steps` is the interrupted run's ORIGINAL total budget —
+    /// the resumed run completes the remaining
+    /// `resumed.run_start + steps - step_count()` steps, so the eval
+    /// cadence, final step, and returned curve line up bitwise with the
+    /// uninterrupted run.
+    pub fn run_resumed(
+        &mut self,
+        name: &str,
+        batches: &mut Batches,
+        steps: usize,
+        resumed: Resumed,
+    ) -> Result<Curve> {
+        self.run_inner(name, batches, steps, None, Some(resumed))
     }
 
     /// Full training run executing a [`GrowthPlan`] mid-run: whenever the
@@ -291,7 +416,54 @@ impl Trainer {
                 self.step + steps
             );
         }
-        self.run_inner(name, batches, steps, Some((rt, plan)))
+        self.run_inner(name, batches, steps, Some((rt, plan)), None)
+    }
+
+    /// Continue an interrupted [`run_plan`](Self::run_plan). `steps` is the
+    /// ORIGINAL total budget (see [`run_resumed`](Self::run_resumed)); the
+    /// stage cursor in `resumed` selects which stages are still pending —
+    /// mid-plan the trainer holds a stage target config, not the plan's
+    /// initial one, and is validated accordingly.
+    pub fn run_plan_resumed(
+        &mut self,
+        rt: &Runtime,
+        name: &str,
+        batches: &mut Batches,
+        steps: usize,
+        plan: &GrowthPlan,
+        resumed: Resumed,
+    ) -> Result<Curve> {
+        let stages = plan.stages();
+        if resumed.next_stage > stages.len() {
+            bail!(
+                "resume: checkpoint stage cursor {} exceeds the plan's {} stages",
+                resumed.next_stage,
+                stages.len()
+            );
+        }
+        let expected = if resumed.next_stage == 0 {
+            &plan.initial().name
+        } else {
+            &stages[resumed.next_stage - 1].target.name
+        };
+        if *expected != self.cfg.name {
+            bail!(
+                "resume: checkpoint holds '{}' but the plan expects '{}' at stage cursor {}",
+                self.cfg.name,
+                expected,
+                resumed.next_stage
+            );
+        }
+        let end = resumed.run_start + steps;
+        if let Some(st) = stages.iter().skip(resumed.next_stage).find(|st| st.at_step >= end) {
+            bail!(
+                "growth plan stage at step {} is unreachable in this resumed run \
+                 (steps end at {}); extend `steps` or split the plan",
+                st.at_step,
+                end
+            );
+        }
+        self.run_inner(name, batches, steps, Some((rt, plan)), Some(resumed))
     }
 
     fn run_inner(
@@ -300,8 +472,8 @@ impl Trainer {
         batches: &mut Batches,
         steps: usize,
         plan: Option<(&Runtime, &GrowthPlan)>,
+        resumed: Option<Resumed>,
     ) -> Result<Curve> {
-        let mut curve = Curve::new(name);
         let timer = Timer::new();
         let accum = self.tc.grad_accum.max(1) as f64;
         // resolve the worker pool once per run: Some(w) + a shared train
@@ -324,15 +496,31 @@ impl Trainer {
             (None, _) => None,
         };
         let mut spent = self.flops_offset;
-        // record the starting point (growth quality shows at step 0)
-        let (l0, m0) = self.evaluate(&mut batches.eval, 4)?;
-        curve.push(self.step, spent, self.wall_offset, l0, m0);
-        let mut next_stage = 0usize;
-        for s in 0..steps {
+        // A fresh run records its starting point (growth quality shows at
+        // step 0) and anchors the step budget at the current step. A
+        // resumed run continues the saved curve — it already holds every
+        // eval point up to the snapshot step — and keeps the interrupted
+        // run's anchor, so `(self.step - run_start)` counts completed run
+        // steps identically on both paths (for a fresh run it equals the
+        // old loop's `s + 1` after each train step).
+        let (mut curve, mut next_stage, run_start) = match resumed {
+            Some(r) => (r.curve, r.next_stage, r.run_start),
+            None => {
+                let mut curve = Curve::new(name);
+                let (l0, m0) = self.evaluate(&mut batches.eval, 4)?;
+                curve.push(self.step, spent, self.wall_offset, l0, m0);
+                (curve, 0usize, self.step)
+            }
+        };
+        let end = run_start + steps;
+        while self.step < end {
             if let Some((rt, plan)) = plan {
                 // strictly-increasing stage steps: at most one fires per
                 // step; `<=` also executes stages a resumed trainer is
-                // already past, in order, rather than skipping them
+                // already past, in order, rather than skipping them. A
+                // checkpoint taken at a stage's `at_step` is written at the
+                // end of the *previous* iteration, before the stage fires,
+                // so resuming from it replays the growth exactly once.
                 while next_stage < plan.stages().len()
                     && plan.stages()[next_stage].at_step <= self.step
                 {
@@ -353,9 +541,24 @@ impl Trainer {
                 }
             };
             spent += self.flops_per_microbatch * accum;
-            if (s + 1) % self.tc.eval_every == 0 || s + 1 == steps {
+            let done = self.step - run_start; // completed steps of this run
+            if done % self.tc.eval_every == 0 || self.step == end {
                 let (loss, metric) = self.evaluate(&mut batches.eval, 4)?;
                 curve.push(self.step, spent, self.wall_offset + timer.elapsed(), loss, metric);
+            }
+            // Checkpoint after the step's eval so the snapshot curve holds
+            // this step's point; then honor an armed kill fault (the CI
+            // crash probe dies right after the checkpoint it will resume
+            // from).
+            if let Some(ck) = &self.ckpt {
+                if done % ck.every == 0 {
+                    let wall = self.wall_offset + timer.elapsed();
+                    let state = self.snapshot(run_start, next_stage, spent, wall, &curve);
+                    checkpoint::write_retained(&state, &ck.dir, ck.keep)?;
+                }
+            }
+            if fault::kill_due(self.step) {
+                bail!("fault injection: killed training at step {}", self.step);
             }
         }
         Ok(curve)

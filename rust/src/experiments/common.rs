@@ -15,8 +15,9 @@ use crate::error::Result;
 use crate::growth;
 use crate::runtime::Runtime;
 use crate::tensor::{io, store::Store};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::log_info;
+use crate::{log_info, log_warn};
 
 /// Default pretraining steps for source models (at scale=1.0).
 pub const SMALL_PRETRAIN_STEPS: usize = 300;
@@ -130,7 +131,17 @@ fn ckpt_path(out_dir: &Path, cfg: &ModelConfig, steps: usize) -> PathBuf {
     out_dir.join("ckpt").join(format!("{}_{}steps.lgck", cfg.name, steps))
 }
 
-/// Pretrain (or load a cached checkpoint of) a source model.
+/// The provenance stamp saved alongside a cached pretrain checkpoint and
+/// required to match before the cache is reused.
+fn pretrain_meta(cfg: &ModelConfig, steps: usize) -> Json {
+    Json::obj(vec![("config", cfg.to_json()), ("steps", Json::Num(steps as f64))])
+}
+
+/// Pretrain (or load a cached checkpoint of) a source model. A cached file
+/// is reused only if it passes the LGCK integrity checks **and** its meta
+/// stamp matches this (config, steps) request — a corrupt, truncated, or
+/// stale checkpoint (e.g. after a preset change) is re-pretrained, never
+/// silently loaded.
 pub fn ensure_pretrained(
     rt: &Runtime,
     cfg: &ModelConfig,
@@ -139,9 +150,20 @@ pub fn ensure_pretrained(
     out_dir: &Path,
 ) -> Result<Store> {
     let path = ckpt_path(out_dir, cfg, steps);
+    let want = pretrain_meta(cfg, steps).to_string();
     if path.exists() {
-        log_info!("loading cached checkpoint {path:?}");
-        return io::load(&path);
+        match io::load_with_meta(&path) {
+            Ok((params, Some(meta))) if meta.to_string() == want => {
+                log_info!("loading cached checkpoint {path:?}");
+                return Ok(params);
+            }
+            Ok(_) => {
+                log_warn!("cached checkpoint {path:?} has a stale or missing provenance stamp; re-pretraining");
+            }
+            Err(e) => {
+                log_warn!("cached checkpoint {path:?} failed verification ({e}); re-pretraining");
+            }
+        }
     }
     log_info!("pretraining {} for {} steps", cfg.name, steps);
     let params = Trainer::scratch_params(rt, cfg, 0)?;
@@ -149,7 +171,7 @@ pub fn ensure_pretrained(
     let mut tr = Trainer::new(rt, cfg, tc, params)?;
     let mut b = batches_for(cfg, corpus, 0x50A0);
     tr.run(&format!("pretrain_{}", cfg.name), &mut b, steps)?;
-    io::save(&tr.params, &path)?;
+    io::save_with_meta(&tr.params, &path, &pretrain_meta(cfg, steps))?;
     Ok(tr.params)
 }
 

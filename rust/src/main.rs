@@ -1,7 +1,9 @@
 //! `ligo` — the coordinator CLI.
 //!
 //! Subcommands:
-//!   train      --model NAME [--steps N --lr F --seed N --out DIR]
+//!   train      --model NAME [--steps N --lr F --seed N --out DIR --resume]
+//!              (LIGO_CKPT_EVERY=K writes crash-safe checkpoints under
+//!               OUT/state/NAME; --resume continues from the latest good one)
 //!   grow       --from SMALL --to LARGE [--op ligo|stackbert|...] [--m-steps N]
 //!   eval       --model NAME --ckpt PATH
 //!   experiment ID|all [--scale F --out DIR]     (fig2..fig8, table1..table6)
@@ -9,7 +11,8 @@
 //!   search     [--smoke | --from A --to B] [--ops a,b --probe-steps N --budget N
 //!              --topk K --steps N --seed N]     (growth-policy plan search)
 //!   analyze    (static shape/plan verification: every preset, pair, operator)
-//!   serve      --model NAME [--ckpt PATH --sessions N --max-new N --seed N | --self-test]
+//!   serve      --model NAME [--ckpt PATH --sessions N --max-new N --seed N
+//!               --max-pages N | --self-test]
 //!   inspect    configs|operators|artifacts|knobs
 //!
 //! Python never runs here: artifacts must exist (run `make artifacts` once).
@@ -39,6 +42,7 @@ fn usage() -> ! {
         "usage: ligo <train|grow|eval|experiment|search|analyze|serve|inspect> [options]\n\
          \n\
          ligo train --model bert_small --steps 300 --out reports\n\
+         LIGO_CKPT_EVERY=10 ligo train --model bert_small --steps 300 --resume\n\
          ligo grow --from bert_small --to bert_base --op ligo --m-steps 100\n\
          ligo eval --model bert_base --ckpt reports/ckpt/bert_base_LiGO_600steps.lgck\n\
          ligo experiment fig2 --scale 1.0 --out reports\n\
@@ -71,14 +75,26 @@ fn run() -> Result<()> {
             if let Some(lr) = args.get("lr") {
                 tc.lr = lr.parse().context("--lr")?;
             }
-            let mut tr = Trainer::new(&rt, &cfg, tc, params)?;
+            let state_dir = out_dir.join("state").join(name);
+            let (mut tr, resumed) = if args.has_flag("resume") {
+                let (tr, r) = Trainer::resume_latest(&rt, tc, &state_dir)?;
+                (tr, Some(r))
+            } else {
+                (Trainer::new(&rt, &cfg, tc, params)?, None)
+            };
+            if let Some(every) = ligo::util::knobs::usize_env("LIGO_CKPT_EVERY") {
+                tr.checkpoint_every(every, &state_dir);
+            }
             let mut b = if cfg.is_vision() {
                 ligo::experiments::common::vision_batches(
                     &ligo::data::vision::VisionTask::pretrain(), &cfg, 1)
             } else {
                 ligo::experiments::common::text_batches(&corpus, &cfg, 1)
             };
-            let curve = tr.run(name, &mut b, steps)?;
+            let curve = match resumed {
+                Some(r) => tr.run_resumed(name, &mut b, steps, r)?,
+                None => tr.run(name, &mut b, steps)?,
+            };
             let path = out_dir.join("ckpt").join(format!("{name}_{steps}steps.lgck"));
             io::save(&tr.params, &path)?;
             println!(
@@ -388,6 +404,9 @@ fn run() -> Result<()> {
             if let Some(s) = args.get("sessions") {
                 opts.max_sessions = s.parse().context("--sessions")?;
             }
+            if let Some(p) = args.get("max-pages") {
+                opts.max_pages = p.parse().context("--max-pages")?;
+            }
             let dec = ligo::model::decode::Decoder::new(&cfg, &params)?;
             let mut sched = Scheduler::new(&dec, opts);
             let n = args.get_usize("requests", opts.max_sessions.max(1));
@@ -403,6 +422,7 @@ fn run() -> Result<()> {
                     top_k: 8,
                     top_p: 0.95,
                     seed: 42 + i as u64,
+                    deadline_steps: 0,
                 })?;
             }
             let t0 = std::time::Instant::now();

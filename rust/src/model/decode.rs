@@ -82,7 +82,10 @@ impl KvCache {
     /// Write one K and one V row at `pos` of `layer`, growing the page
     /// tables from the pool as `pos` crosses page boundaries. `pos` must
     /// lie in `[len, capacity)` — prefill writes a run of positions before
-    /// one commit; a decode step writes exactly `len`.
+    /// one commit; a decode step writes exactly `len`. On a capped pool
+    /// ([`PagePool::with_capacity`]) exhaustion surfaces as a typed error
+    /// — the serve scheduler's admission sizing makes it unreachable there,
+    /// but the cache itself must degrade gracefully, never panic.
     pub fn write_kv(
         &mut self,
         pool: &mut PagePool,
@@ -90,23 +93,34 @@ impl KvCache {
         pos: usize,
         krow: &[f32],
         vrow: &[f32],
-    ) {
+    ) -> Result<()> {
         assert!(pos >= self.len && pos < self.capacity, "write_kv pos {pos} outside [{}, {})", self.len, self.capacity);
         assert_eq!(krow.len(), self.dim);
         assert_eq!(vrow.len(), self.dim);
         assert_eq!(pool.page_floats(), self.page_tokens * self.dim, "pool page size mismatch");
         let need = self.pages_for(pos + 1);
-        while self.k_tables[layer].len() < need {
-            self.k_tables[layer].push(pool.alloc());
-        }
-        while self.v_tables[layer].len() < need {
-            self.v_tables[layer].push(pool.alloc());
+        while self.k_tables[layer].len() < need || self.v_tables[layer].len() < need {
+            let table = if self.k_tables[layer].len() < need {
+                &mut self.k_tables[layer]
+            } else {
+                &mut self.v_tables[layer]
+            };
+            match pool.try_alloc() {
+                Some(page) => table.push(page),
+                None => bail!(
+                    "page pool exhausted: {} pages live at the {} page cap \
+                     (KV write at layer {layer}, pos {pos})",
+                    pool.live(),
+                    pool.capacity()
+                ),
+            }
         }
         let off = (pos % self.page_tokens) * self.dim;
         let kp = pool.page_mut(self.k_tables[layer][pos / self.page_tokens]);
         kp[off..off + self.dim].copy_from_slice(krow);
         let vp = pool.page_mut(self.v_tables[layer][pos / self.page_tokens]);
         vp[off..off + self.dim].copy_from_slice(vrow);
+        Ok(())
     }
 
     /// Commit `n` freshly written positions (all layers must have been
@@ -308,7 +322,7 @@ impl<'a> Decoder<'a> {
                         pos,
                         &kv[pos * d..(pos + 1) * d],
                         &vv[pos * d..(pos + 1) * d],
-                    );
+                    )?;
                 }
             }
             let (att, probs) = ops::attention_fwd(&q, &k, &v, &sh);
@@ -397,7 +411,7 @@ impl<'a> Decoder<'a> {
             arena::recycle(h);
             let (kv, vv) = (k.f32s(), v.f32s());
             for (s, (f, cache)) in feeds.iter().zip(caches.iter_mut()).enumerate() {
-                cache.write_kv(pool, l, f.pos, &kv[s * d..(s + 1) * d], &vv[s * d..(s + 1) * d]);
+                cache.write_kv(pool, l, f.pos, &kv[s * d..(s + 1) * d], &vv[s * d..(s + 1) * d])?;
             }
             {
                 let qv = q.f32s();

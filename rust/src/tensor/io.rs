@@ -1,133 +1,411 @@
-//! Checkpoint I/O: a simple self-describing binary format (LGCK).
+//! Checkpoint I/O: the LGCK v2 sectioned binary format.
 //!
-//! Layout:  magic "LGCK" | u32 version | u32 n_tensors | per tensor:
-//!   u32 name_len | name bytes | u8 dtype (0=f32,1=i32) | u32 rank |
-//!   u64 dims[rank] | raw little-endian data.
+//! Layout:
+//!
+//! ```text
+//! magic "LGCK" | u32 version=2 | u32 n_sections | per section:
+//!   u32 name_len | name bytes | u64 payload_len | payload | u32 crc32(payload)
+//! ```
+//!
+//! A bare parameter [`Store`] saves as one `tensors` section; full training
+//! snapshots (`coordinator/checkpoint`) add `meta` / optimizer-moment /
+//! curve sections on top of the same primitives. The `tensors` payload is
+//! the self-describing v1 tensor stream (`u32 n | per tensor: u32 name_len
+//! | name | u8 dtype (0=f32,1=i32) | u32 rank | u64 dims[rank] | raw
+//! little-endian data`), now CRC-guarded and bounds-checked.
+//!
+//! Robustness contract (the crash-safety tentpole):
+//!
+//! - **Atomic, durable writes** — [`write_atomic`] writes a temp file in
+//!   the destination directory, `fsync`s it, then `rename`s over the
+//!   target, so a crash mid-save can never leave a half-written file under
+//!   the checkpoint's name.
+//! - **Integrity-checked reads** — every section payload carries a CRC32;
+//!   corruption errors name the damaged section. All header lengths are
+//!   validated against the actual file size *before* any allocation, so a
+//!   malformed file yields a typed [`crate::error::Error`], never a panic
+//!   or an absurd allocation.
+//! - **Fault hooks** — [`write_atomic`] consults `util/fault` so the test
+//!   harness can inject torn or bit-flipped writes and assert that the
+//!   next load detects them.
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::Write;
 use std::path::Path;
+use std::sync::OnceLock;
 
 use crate::bail;
-use crate::error::{Context, Result};
+use crate::error::{Context, Error, Result};
+use crate::util::fault::{self, Fault};
+use crate::util::json::Json;
 
 use super::store::Store;
-use super::{numel, Tensor, TensorData};
+use super::{Tensor, TensorData};
 
 const MAGIC: &[u8; 4] = b"LGCK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-pub fn save(store: &Store, path: impl AsRef<Path>) -> Result<()> {
+/// Maximum tensor rank a checkpoint may declare; real models use ≤ 4, and
+/// the cap keeps a corrupted rank field from driving a huge shape loop.
+const MAX_RANK: usize = 32;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE, poly 0xEDB88320) — the zlib/PNG checksum.
+
+fn crc32_table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC32 of a byte slice (IEEE polynomial, as in zlib).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let t = crc32_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = t[((c ^ u32::from(b)) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Bounds-checked cursor over an in-memory file image.
+
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!(
+                "corrupt checkpoint: truncated reading {what} ({n} bytes needed at offset {}, {} available)",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomic durable writes.
+
+/// Write `bytes` to `path` atomically and durably: temp file in the same
+/// directory → `fsync` → `rename`. Honors an armed `util/fault` write
+/// fault (torn write / bit flip) for the crash-safety harness.
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
     let path = path.as_ref();
     if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("create dir {dir:?}"))?;
+        }
     }
-    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(store.len() as u32).to_le_bytes())?;
+    let name = path
+        .file_name()
+        .with_context(|| format!("checkpoint path {path:?} has no file name"))?;
+    let tmp = path.with_file_name(format!(".{}.tmp", name.to_string_lossy()));
+    {
+        let mut f = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        match fault::take_write_fault() {
+            Some(Fault::TornWrite) => f.write_all(&bytes[..bytes.len() * 2 / 3])?,
+            Some(Fault::BitFlip) if !bytes.is_empty() => {
+                let mut b = bytes.to_vec();
+                let i = b.len() * 2 / 3;
+                b[i] ^= 0x40;
+                f.write_all(&b)?;
+            }
+            _ => f.write_all(bytes)?,
+        }
+        f.sync_all().with_context(|| format!("fsync {tmp:?}"))?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
+    // Durability of the rename itself needs a directory fsync; best-effort
+    // (some filesystems reject opening a directory for sync).
+    #[cfg(unix)]
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Section layer.
+
+/// Write named sections to `path` in LGCK v2 framing (atomic + CRC32).
+pub fn write_sections(path: impl AsRef<Path>, sections: &[(&str, Vec<u8>)]) -> Result<()> {
+    let total: usize = sections.iter().map(|(n, p)| 16 + n.len() + p.len()).sum();
+    let mut out = Vec::with_capacity(12 + total);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for (name, payload) in sections {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(payload);
+        out.extend_from_slice(&crc32(payload).to_le_bytes());
+    }
+    write_atomic(path, &out)
+}
+
+fn parse_sections(bytes: &[u8]) -> Result<Vec<(String, Vec<u8>)>> {
+    let mut c = Cur::new(bytes);
+    if c.take(4, "magic").map_err(|_| Error::msg("not a LGCK checkpoint (too short)"))? != MAGIC {
+        bail!("not a LGCK checkpoint (bad magic)");
+    }
+    let version = c.u32("format version")?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version} (this build reads v{VERSION})");
+    }
+    let n = c.u32("section count")? as usize;
+    // Every section occupies ≥ 16 header/CRC bytes, so a count that cannot
+    // fit in the remaining file is rejected before any per-section work.
+    if n > c.remaining() / 16 {
+        bail!("corrupt checkpoint: section count {n} exceeds file size");
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let name_len = c.u32("section name length")? as usize;
+        if name_len > c.remaining() {
+            bail!("corrupt checkpoint: section {i} name length {name_len} exceeds file size");
+        }
+        let name = std::str::from_utf8(c.take(name_len, "section name")?)
+            .map_err(|e| Error::msg(format!("corrupt checkpoint: section {i} name is not UTF-8: {e}")))?
+            .to_string();
+        let payload_len = c.u64("section payload length")?;
+        if payload_len > c.remaining() as u64 {
+            bail!("corrupt checkpoint: section '{name}' length {payload_len} exceeds file size");
+        }
+        let payload = c.take(payload_len as usize, "section payload")?;
+        let stored = c.u32("section CRC")?;
+        let actual = crc32(payload);
+        if actual != stored {
+            bail!(
+                "corrupt checkpoint: section '{name}' CRC mismatch (stored {stored:#010x}, computed {actual:#010x})"
+            );
+        }
+        out.push((name, payload.to_vec()));
+    }
+    Ok(out)
+}
+
+/// Read and CRC-verify all sections of an LGCK v2 file. Any malformation —
+/// truncation, impossible lengths, checksum mismatch — is a typed error
+/// naming the file and (where known) the damaged section.
+pub fn read_sections(path: impl AsRef<Path>) -> Result<Vec<(String, Vec<u8>)>> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("open {path:?}"))?;
+    parse_sections(&bytes).with_context(|| format!("load {path:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Tensor-stream payload codec.
+
+/// Encode a [`Store`] as the self-describing tensor-stream payload.
+pub fn encode_store(store: &Store) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(store.len() as u32).to_le_bytes());
     for (name, t) in store.iter() {
-        w.write_all(&(name.len() as u32).to_le_bytes())?;
-        w.write_all(name.as_bytes())?;
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
         let dtype = match t.data {
             TensorData::F32(_) => 0u8,
             TensorData::I32(_) => 1u8,
         };
-        w.write_all(&[dtype])?;
-        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        out.push(dtype);
+        out.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
         for d in &t.shape {
-            w.write_all(&(*d as u64).to_le_bytes())?;
+            out.extend_from_slice(&(*d as u64).to_le_bytes());
         }
         match &t.data {
             TensorData::F32(v) => {
                 for x in v {
-                    w.write_all(&x.to_le_bytes())?;
+                    out.extend_from_slice(&x.to_le_bytes());
                 }
             }
             TensorData::I32(v) => {
                 for x in v {
-                    w.write_all(&x.to_le_bytes())?;
+                    out.extend_from_slice(&x.to_le_bytes());
                 }
             }
         }
     }
-    w.flush()?;
-    Ok(())
+    out
 }
 
-pub fn load(path: impl AsRef<Path>) -> Result<Store> {
-    let path = path.as_ref();
-    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{path:?}: not a LGCK checkpoint");
+/// Decode a tensor-stream payload, validating every length against the
+/// payload size before allocating.
+pub fn decode_store(bytes: &[u8]) -> Result<Store> {
+    let mut c = Cur::new(bytes);
+    let n = c.u32("tensor count")? as usize;
+    // Each tensor record occupies ≥ 9 bytes of header.
+    if n > c.remaining() / 9 {
+        bail!("corrupt checkpoint: tensor count {n} exceeds payload size");
     }
-    let version = read_u32(&mut r)?;
-    if version != VERSION {
-        bail!("{path:?}: unsupported checkpoint version {version}");
-    }
-    let n = read_u32(&mut r)? as usize;
     let mut store = Store::new();
-    for _ in 0..n {
-        let name_len = read_u32(&mut r)? as usize;
-        let mut name = vec![0u8; name_len];
-        r.read_exact(&mut name)?;
-        let name = String::from_utf8(name)?;
-        let mut dtype = [0u8; 1];
-        r.read_exact(&mut dtype)?;
-        let rank = read_u32(&mut r)? as usize;
+    for i in 0..n {
+        let name_len = c.u32("tensor name length")? as usize;
+        if name_len > c.remaining() {
+            bail!("corrupt checkpoint: tensor {i} name length {name_len} exceeds payload");
+        }
+        let name = std::str::from_utf8(c.take(name_len, "tensor name")?)
+            .map_err(|e| Error::msg(format!("corrupt checkpoint: tensor {i} name is not UTF-8: {e}")))?
+            .to_string();
+        let dtype = c.u8("dtype tag")?;
+        let rank = c.u32("tensor rank")? as usize;
+        if rank > MAX_RANK {
+            bail!("corrupt checkpoint: tensor '{name}' rank {rank} exceeds limit {MAX_RANK}");
+        }
         let mut shape = Vec::with_capacity(rank);
         for _ in 0..rank {
-            let mut b = [0u8; 8];
-            r.read_exact(&mut b)?;
-            shape.push(u64::from_le_bytes(b) as usize);
+            let d = c.u64("tensor dim")?;
+            shape.push(usize::try_from(d).map_err(|_| {
+                Error::msg(format!("corrupt checkpoint: tensor '{name}' dim {d} overflows usize"))
+            })?);
         }
-        let count = numel(&shape);
-        let t = match dtype[0] {
-            0 => {
-                let mut raw = vec![0u8; count * 4];
-                r.read_exact(&mut raw)?;
-                let data = raw
-                    .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect();
-                Tensor::from_f32(&shape, data)
-            }
-            1 => {
-                let mut raw = vec![0u8; count * 4];
-                r.read_exact(&mut raw)?;
-                let data = raw
-                    .chunks_exact(4)
-                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                    .collect();
-                Tensor::from_i32(&shape, data)
-            }
-            d => bail!("bad dtype tag {d}"),
+        let nbytes = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .and_then(|count| count.checked_mul(4))
+            .with_context(|| format!("corrupt checkpoint: tensor '{name}' shape {shape:?} overflows"))?;
+        if nbytes > c.remaining() {
+            bail!(
+                "corrupt checkpoint: tensor '{name}' needs {nbytes} data bytes, {} available",
+                c.remaining()
+            );
+        }
+        let raw = c.take(nbytes, "tensor data")?;
+        let t = match dtype {
+            0 => Tensor::from_f32(
+                &shape,
+                raw.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect(),
+            ),
+            1 => Tensor::from_i32(
+                &shape,
+                raw.chunks_exact(4).map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect(),
+            ),
+            d => bail!("corrupt checkpoint: tensor '{name}' has bad dtype tag {d}"),
         };
         store.insert(name, t);
+    }
+    if c.remaining() != 0 {
+        bail!("corrupt checkpoint: {} trailing bytes after last tensor", c.remaining());
     }
     Ok(store)
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+// ---------------------------------------------------------------------------
+// Store-level API.
+
+/// Save a parameter [`Store`] (one `tensors` section), atomically.
+pub fn save(store: &Store, path: impl AsRef<Path>) -> Result<()> {
+    write_sections(path, &[("tensors", encode_store(store))])
+}
+
+/// Save a [`Store`] plus a JSON `meta` section (provenance: config,
+/// pretrain steps, …) in one atomic file.
+pub fn save_with_meta(store: &Store, path: impl AsRef<Path>, meta: &Json) -> Result<()> {
+    write_sections(
+        path,
+        &[("meta", meta.to_string().into_bytes()), ("tensors", encode_store(store))],
+    )
+}
+
+/// Load a parameter [`Store`], verifying framing and CRCs.
+pub fn load(path: impl AsRef<Path>) -> Result<Store> {
+    Ok(load_with_meta(path)?.0)
+}
+
+/// Load a [`Store`] along with its `meta` section (if present). Unknown
+/// sections are ignored for forward compatibility.
+pub fn load_with_meta(path: impl AsRef<Path>) -> Result<(Store, Option<Json>)> {
+    let path = path.as_ref();
+    let mut store = None;
+    let mut meta = None;
+    for (name, payload) in read_sections(path)? {
+        match name.as_str() {
+            "tensors" => {
+                store = Some(
+                    decode_store(&payload).with_context(|| format!("{path:?}: section 'tensors'"))?,
+                );
+            }
+            "meta" => {
+                let text = std::str::from_utf8(&payload)
+                    .map_err(|e| Error::msg(format!("{path:?}: section 'meta' is not UTF-8: {e}")))?;
+                meta = Some(
+                    Json::parse(text)
+                        .map_err(|e| Error::msg(format!("{path:?}: section 'meta': {e}")))?,
+                );
+            }
+            _ => {}
+        }
+    }
+    let store = store.with_context(|| format!("{path:?}: checkpoint has no 'tensors' section"))?;
+    Ok((store, meta))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
 
-    #[test]
-    fn roundtrip() {
+    fn sample_store() -> Store {
         let mut s = Store::new();
         s.insert("w", Tensor::from_f32(&[2, 3], vec![1., -2., 3., 4., 5.5, -6.]));
         s.insert("idx", Tensor::from_i32(&[4], vec![1, 2, 3, -4]));
         s.insert("scalar", Tensor::scalar_f32(7.25));
+        s
+    }
+
+    fn test_dir() -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("ligo_io_test");
-        let path = dir.join("ck.lgck");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = sample_store();
+        let path = test_dir().join("ck.lgck");
         save(&s, &path).unwrap();
         let l = load(&path).unwrap();
         assert_eq!(s, l);
@@ -135,17 +413,163 @@ mod tests {
     }
 
     #[test]
+    fn meta_roundtrip_and_plain_load_ignores_meta() {
+        let s = sample_store();
+        let path = test_dir().join("ck_meta.lgck");
+        let meta = Json::obj(vec![("steps", Json::Num(40.0)), ("name", Json::Str("m".into()))]);
+        save_with_meta(&s, &path, &meta).unwrap();
+        let (l, m) = load_with_meta(&path).unwrap();
+        assert_eq!(s, l);
+        assert_eq!(m.unwrap().to_string(), meta.to_string());
+        assert_eq!(load(&path).unwrap(), s);
+        // A bare save has no meta.
+        save(&s, &path).unwrap();
+        assert!(load_with_meta(&path).unwrap().1.is_none());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn rejects_bad_magic() {
-        let dir = std::env::temp_dir().join("ligo_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("junk.bin");
+        let path = test_dir().join("junk.bin");
         std::fs::write(&path, b"NOPE....").unwrap();
-        assert!(load(&path).is_err());
+        let e = load(&path).unwrap_err().to_string();
+        assert!(e.contains("not a LGCK checkpoint"), "{e}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_v1_files_with_version_error() {
+        let path = test_dir().join("v1.lgck");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let e = load(&path).unwrap_err().to_string();
+        assert!(e.contains("unsupported checkpoint version 1"), "{e}");
         std::fs::remove_file(path).ok();
     }
 
     #[test]
     fn missing_file_errors() {
         assert!(load("/nonexistent/path/x.lgck").is_err());
+    }
+
+    #[test]
+    fn bit_flip_on_disk_is_detected_with_section_name() {
+        let s = sample_store();
+        let path = test_dir().join("flip.lgck");
+        save(&s, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2; // lands inside the tensors payload
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let e = load(&path).unwrap_err().to_string();
+        assert!(e.contains("CRC mismatch") && e.contains("'tensors'"), "{e}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error_not_a_panic() {
+        let s = sample_store();
+        let path = test_dir().join("trunc.lgck");
+        save(&s, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let e = load(&path).unwrap_err().to_string();
+        assert!(e.contains("corrupt checkpoint"), "{e}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn injected_torn_write_is_caught_on_load() {
+        let s = sample_store();
+        let path = test_dir().join("torn.lgck");
+        crate::util::fault::set_override(Some(Fault::TornWrite));
+        save(&s, &path).unwrap(); // reports success — the tear is silent
+        crate::util::fault::clear_override();
+        assert!(load(&path).is_err(), "torn checkpoint must fail verification");
+        // The fault is one-shot: a re-save heals the file.
+        save(&s, &path).unwrap();
+        assert_eq!(load(&path).unwrap(), s);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn injected_bit_flip_is_caught_on_load() {
+        let s = sample_store();
+        let path = test_dir().join("bitflip.lgck");
+        crate::util::fault::set_override(Some(Fault::BitFlip));
+        save(&s, &path).unwrap();
+        crate::util::fault::clear_override();
+        let e = load(&path).unwrap_err().to_string();
+        assert!(e.contains("corrupt checkpoint"), "{e}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn garbage_corpus_never_panics_and_mutations_are_detected() {
+        let s = sample_store();
+        let valid = {
+            let path = test_dir().join("prop_base.lgck");
+            save(&s, &path).unwrap();
+            let b = std::fs::read(&path).unwrap();
+            std::fs::remove_file(path).ok();
+            b
+        };
+        prop::check("io_garbage", 32, |g| {
+            let path = test_dir().join(format!("prop_{}.lgck", g.seed));
+            let bytes = match g.usize_in(0, 2) {
+                // Pure random garbage (sometimes starting with the magic).
+                0 => {
+                    let n = g.usize_in(0, 96);
+                    let mut b: Vec<u8> =
+                        (0..n).map(|_| (g.rng.next_u64() & 0xFF) as u8).collect();
+                    if g.bool() && b.len() >= 4 {
+                        b[..4].copy_from_slice(MAGIC);
+                    }
+                    b
+                }
+                // A valid checkpoint with one byte flipped: every byte is
+                // covered by magic/version/length validation or a CRC, so
+                // any single flip must be detected.
+                1 => {
+                    let mut b = valid.clone();
+                    let i = g.usize_in(0, b.len() - 1);
+                    let bit = 1u8 << g.usize_in(0, 7);
+                    b[i] ^= bit;
+                    b
+                }
+                // A valid checkpoint truncated at a random point.
+                _ => {
+                    let cut = g.usize_in(0, valid.len() - 1);
+                    valid[..cut].to_vec()
+                }
+            };
+            std::fs::write(&path, &bytes).unwrap();
+            let r = load(&path); // must return, never panic
+            assert!(r.is_err(), "mutated/garbage checkpoint accepted at seed {}", g.seed);
+            std::fs::remove_file(path).ok();
+        });
+    }
+
+    #[test]
+    fn decode_store_rejects_absurd_lengths_without_allocating() {
+        // Tensor count far beyond payload size.
+        let mut b = Vec::new();
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        let e = decode_store(&b).unwrap_err().to_string();
+        assert!(e.contains("tensor count"), "{e}");
+        // One tensor whose dims multiply past usize.
+        let mut b = Vec::new();
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(b'x');
+        b.push(0); // dtype f32
+        b.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+        b.extend_from_slice(&(u64::from(u32::MAX)).to_le_bytes());
+        b.extend_from_slice(&(u64::from(u32::MAX)).to_le_bytes());
+        let e = decode_store(&b).unwrap_err().to_string();
+        assert!(e.contains("overflow") || e.contains("needs"), "{e}");
     }
 }

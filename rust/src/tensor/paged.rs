@@ -28,6 +28,8 @@ pub struct PagePool {
     live: Vec<bool>,
     fresh: u64,
     reused: u64,
+    /// Maximum pages this pool may ever hold; 0 = unbounded.
+    max_pages: usize,
 }
 
 impl PagePool {
@@ -36,25 +38,57 @@ impl PagePool {
         PagePool { page_floats, ..Default::default() }
     }
 
+    /// A pool capped at `max_pages` pages (0 = unbounded). At the cap,
+    /// [`try_alloc`](Self::try_alloc) returns `None` instead of growing —
+    /// the serve scheduler's backpressure signal.
+    pub fn with_capacity(page_floats: usize, max_pages: usize) -> PagePool {
+        let mut p = PagePool::new(page_floats);
+        p.max_pages = max_pages;
+        p
+    }
+
     /// Floats per page.
     pub fn page_floats(&self) -> usize {
         self.page_floats
     }
 
+    /// The page cap (0 = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.max_pages
+    }
+
     /// Allocate a page, reusing the free list when possible. Reused pages
     /// are zeroed so a new session never observes a dead session's K/V.
-    pub fn alloc(&mut self) -> usize {
+    /// Returns `None` when the pool is capped, fully live, and has nothing
+    /// on the free list — exhaustion is a typed condition here, never a
+    /// panic.
+    pub fn try_alloc(&mut self) -> Option<usize> {
         if let Some(idx) = self.free.pop() {
             debug_assert!(!self.live[idx]);
             self.pages[idx].fill(0.0);
             self.live[idx] = true;
             self.reused += 1;
-            return idx;
+            return Some(idx);
+        }
+        if self.max_pages > 0 && self.pages.len() >= self.max_pages {
+            return None;
         }
         self.fresh += 1;
         self.pages.push(arena::alloc_zeroed(self.page_floats));
         self.live.push(true);
-        self.pages.len() - 1
+        Some(self.pages.len() - 1)
+    }
+
+    /// [`try_alloc`](Self::try_alloc) for callers that sized their demand
+    /// up front (uncapped pools, tests). Panics on exhaustion.
+    pub fn alloc(&mut self) -> usize {
+        self.try_alloc().unwrap_or_else(|| {
+            panic!(
+                "page pool exhausted: {} pages live at the {} page cap",
+                self.live(),
+                self.max_pages
+            )
+        })
     }
 
     /// Return a page to the free list. Panics on double-free.
@@ -197,6 +231,27 @@ mod tests {
         pool.check_invariants().unwrap();
         pool.clear();
         assert_eq!(pool.total(), 0);
+    }
+
+    #[test]
+    fn capped_pool_signals_exhaustion_and_recovers_after_free() {
+        let mut pool = PagePool::with_capacity(4, 2);
+        assert_eq!(pool.capacity(), 2);
+        let a = pool.try_alloc().unwrap();
+        let _b = pool.try_alloc().unwrap();
+        assert_eq!(pool.try_alloc(), None, "at cap with nothing free");
+        pool.free(a);
+        assert_eq!(pool.try_alloc(), Some(a), "freed page satisfies the next alloc");
+        assert_eq!(pool.try_alloc(), None);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "page pool exhausted")]
+    fn infallible_alloc_panics_at_the_cap() {
+        let mut pool = PagePool::with_capacity(4, 1);
+        let _a = pool.alloc();
+        let _b = pool.alloc();
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Fault injection for the crash-safety harness.
+//!
+//! A single process-wide knob, `LIGO_FAULT`, arms exactly one fault:
+//!
+//! - `kill@step:K` — the trainer aborts (with an error, not a panic) right
+//!   after completing optimizer step `K`, after any checkpoint due at `K`
+//!   has been written. This is the CI kill/resume probe.
+//! - `torn_write` — the next atomic checkpoint write stops partway through
+//!   the temp file but still renames it into place, simulating a crash
+//!   between `write` and `fsync` on a filesystem that reordered the ops.
+//! - `bit_flip` — the next checkpoint write lands fully but with one byte
+//!   corrupted, simulating media rot. Both write faults must be caught by
+//!   the LGCK v2 section CRCs on the next load.
+//!
+//! Tests arm faults through [`set_override`] (thread-local, like
+//! `ops::set_fused_override`) so parallel test threads cannot interfere;
+//! the env knob is the CI / command-line path. Every fault fires **once**
+//! per arming: a consumed fault stays consumed until re-armed, so a
+//! resumed run does not re-kill itself.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+use crate::util::knobs;
+
+/// One armed fault, parsed from a `LIGO_FAULT` spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Abort training right after optimizer step `K` completes.
+    KillAtStep(usize),
+    /// Truncate the next checkpoint write but report success.
+    TornWrite,
+    /// Corrupt one byte of the next checkpoint write.
+    BitFlip,
+}
+
+/// Parse a `LIGO_FAULT` spec (`kill@step:K` | `torn_write` | `bit_flip`).
+pub fn parse(spec: &str) -> Option<Fault> {
+    match spec {
+        "torn_write" => Some(Fault::TornWrite),
+        "bit_flip" => Some(Fault::BitFlip),
+        _ => spec
+            .strip_prefix("kill@step:")
+            .and_then(|k| k.parse::<usize>().ok())
+            .map(Fault::KillAtStep),
+    }
+}
+
+/// The env-armed fault, parsed once per process. An unparsable value warns
+/// once (via the knob registry) and reads as unset.
+fn env_fault() -> Option<Fault> {
+    static ENV: OnceLock<Option<Fault>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        let spec = knobs::raw("LIGO_FAULT")?;
+        let f = parse(&spec);
+        if f.is_none() {
+            knobs::warn_rejected("LIGO_FAULT", &spec, "kill@step:K | torn_write | bit_flip");
+        }
+        f
+    })
+}
+
+// Thread-local override + fired flags. `OVERRIDE` holds 0 = defer to env,
+// 1 = forced off, 2 = forced on (fault in FORCED). The fired flags make
+// each arming one-shot; `set_override` re-arms them.
+thread_local! {
+    static OVERRIDE: Cell<u8> = const { Cell::new(0) };
+    static FORCED: Cell<Option<Fault>> = const { Cell::new(None) };
+    static KILL_FIRED: Cell<bool> = const { Cell::new(false) };
+    static WRITE_FIRED: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Test-only arming: `Some(f)` forces fault `f` for this thread, `Some`
+/// with no fault is expressed as `set_override(None)` restoring the env
+/// default. Re-arming resets the one-shot fired state.
+pub fn set_override(f: Option<Fault>) {
+    OVERRIDE.with(|o| o.set(if f.is_some() { 2 } else { 0 }));
+    FORCED.with(|c| c.set(f));
+    KILL_FIRED.with(|c| c.set(false));
+    WRITE_FIRED.with(|c| c.set(false));
+}
+
+/// Disarm all faults for this thread regardless of the env knob (used by
+/// harness code that must not inherit a CI-armed fault, e.g. a resumed run
+/// inside one test process).
+pub fn clear_override() {
+    OVERRIDE.with(|o| o.set(1));
+    FORCED.with(|c| c.set(None));
+    KILL_FIRED.with(|c| c.set(false));
+    WRITE_FIRED.with(|c| c.set(false));
+}
+
+fn active() -> Option<Fault> {
+    match OVERRIDE.with(|o| o.get()) {
+        1 => None,
+        2 => FORCED.with(|c| c.get()),
+        _ => env_fault(),
+    }
+}
+
+/// True exactly once per arming when a `kill@step:K` fault is armed and
+/// training has just completed optimizer step `step`.
+pub fn kill_due(step: usize) -> bool {
+    match active() {
+        Some(Fault::KillAtStep(k)) if k == step => {
+            let fresh = !KILL_FIRED.with(|c| c.get());
+            KILL_FIRED.with(|c| c.set(true));
+            fresh
+        }
+        _ => false,
+    }
+}
+
+/// Consume an armed write fault (`TornWrite` / `BitFlip`), once per arming.
+/// Called by the atomic checkpoint writer.
+pub fn take_write_fault() -> Option<Fault> {
+    match active() {
+        Some(f @ (Fault::TornWrite | Fault::BitFlip)) => {
+            if WRITE_FIRED.with(|c| c.get()) {
+                None
+            } else {
+                WRITE_FIRED.with(|c| c.set(true));
+                Some(f)
+            }
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_three_specs() {
+        assert_eq!(parse("torn_write"), Some(Fault::TornWrite));
+        assert_eq!(parse("bit_flip"), Some(Fault::BitFlip));
+        assert_eq!(parse("kill@step:37"), Some(Fault::KillAtStep(37)));
+        assert_eq!(parse("kill@step:"), None);
+        assert_eq!(parse("kill@step:x"), None);
+        assert_eq!(parse("explode"), None);
+        assert_eq!(parse(""), None);
+    }
+
+    #[test]
+    fn kill_fires_once_at_the_armed_step() {
+        set_override(Some(Fault::KillAtStep(5)));
+        assert!(!kill_due(4));
+        assert!(kill_due(5));
+        assert!(!kill_due(5), "one-shot: a fired kill stays consumed");
+        assert!(!kill_due(6));
+        set_override(Some(Fault::KillAtStep(5)));
+        assert!(kill_due(5), "re-arming resets the one-shot state");
+        clear_override();
+        assert!(!kill_due(5));
+    }
+
+    #[test]
+    fn write_faults_fire_once_and_kill_does_not_leak_into_writes() {
+        set_override(Some(Fault::TornWrite));
+        assert_eq!(take_write_fault(), Some(Fault::TornWrite));
+        assert_eq!(take_write_fault(), None);
+        set_override(Some(Fault::BitFlip));
+        assert_eq!(take_write_fault(), Some(Fault::BitFlip));
+        assert_eq!(take_write_fault(), None);
+        set_override(Some(Fault::KillAtStep(3)));
+        assert_eq!(take_write_fault(), None, "kill faults never corrupt writes");
+        clear_override();
+    }
+}

@@ -115,6 +115,24 @@ pub const REGISTRY: &[Knob] = &[
         doc: "ligo serve: tokens per KV-cache page (per layer, per K/V side)",
     },
     Knob {
+        name: "LIGO_CKPT_EVERY",
+        ty: "usize >= 1",
+        default: "unset (checkpointing off)",
+        doc: "ligo train: write a full-state crash-safe checkpoint every K optimizer steps",
+    },
+    Knob {
+        name: "LIGO_CKPT_KEEP",
+        ty: "usize >= 1",
+        default: "3",
+        doc: "checkpoint retention: newest snapshots kept when pruning after each write",
+    },
+    Knob {
+        name: "LIGO_FAULT",
+        ty: "kill@step:K | torn_write | bit_flip",
+        default: "unset (no injection)",
+        doc: "fault injection for crash-safety tests: die at step K, or corrupt the next atomic write",
+    },
+    Knob {
         name: "LIGO_SEARCH_BUDGET",
         ty: "usize >= 1",
         default: "2000",

@@ -9,6 +9,7 @@
 pub mod allreduce;
 pub mod bench;
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod knobs;
 pub mod logging;

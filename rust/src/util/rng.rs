@@ -13,6 +13,18 @@ impl Rng {
         Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
     }
 
+    /// The raw stream position, for checkpointing. Restoring a stream with
+    /// [`Rng::from_state`] continues it bit-for-bit.
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Rebuild an RNG at an exact stream position captured by [`Rng::state`]
+    /// (note: this is the raw state, not a seed for [`Rng::new`]).
+    pub fn from_state(state: u64) -> Self {
+        Rng { state }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
@@ -101,6 +113,18 @@ mod tests {
     #[test]
     fn deterministic_across_instances() {
         let (mut a, mut b) = (Rng::new(42), Rng::new(42));
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_stream_bitwise() {
+        let mut a = Rng::new(42);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }

@@ -1,0 +1,223 @@
+//! Crash-safe training acceptance suite: a run killed at an arbitrary
+//! step and resumed from its latest checkpoint must be **bit-identical**
+//! to the uninterrupted run — every eval loss, every FLOPs point, every
+//! growth mark, and every final parameter byte. The kill points straddle
+//! both stages of a 2-stage growth plan (before the first growth, exactly
+//! at each stage boundary, and after the last), the worker-sharded step
+//! loop (`LIGO_WORKERS` 1 and 2), and a corrupted-newest checkpoint that
+//! forces the resume to fall back one snapshot and replay further.
+//!
+//! Runs on the synthesized native engine only (like `native_engine.rs`);
+//! a pjrt build with a live XLA client skips.
+
+use std::path::PathBuf;
+
+use ligo::config::{ModelConfig, Registry, TrainConfig};
+use ligo::coordinator::checkpoint;
+use ligo::coordinator::metrics::Curve;
+use ligo::coordinator::parallel;
+use ligo::coordinator::plan::GrowthPlan;
+use ligo::coordinator::trainer::{Batches, Trainer};
+use ligo::data::batches::mlm_batch;
+use ligo::data::corpus::Corpus;
+use ligo::growth::LigoOptions;
+use ligo::runtime::Runtime;
+use ligo::tensor::store::Store;
+use ligo::util::fault::{self, Fault};
+use ligo::util::rng::Rng;
+
+/// Original step budget of every run in this suite; the plan's stages at
+/// 10 and 20 split it into three config regimes.
+const STEPS: usize = 30;
+
+fn native_runtime() -> Option<Runtime> {
+    let rt = Runtime::cpu(std::env::temp_dir().join("ligo_ckpt_resume")).unwrap();
+    if rt.backend_name() != "native" {
+        // pjrt build with a live XLA client: the artifact suite covers it
+        return None;
+    }
+    Some(rt)
+}
+
+fn tc() -> TrainConfig {
+    TrainConfig { lr: 3e-3, total_steps: STEPS, warmup_steps: 3, eval_every: 5, ..Default::default() }
+}
+
+/// The two-stage fixture: stack bert_small's depth at step 10, then
+/// LiGO-grow the width at step 20 (a short M-learning fit — enough to
+/// exercise the growth-replay path, cheap enough for CI).
+fn fixture(reg: &Registry) -> (ModelConfig, GrowthPlan, Corpus) {
+    let small = reg.model("bert_small").unwrap().clone();
+    let mid = reg.model("bert_d6w48").unwrap().clone();
+    let large = reg.model("bert_base").unwrap().clone();
+    let plan = GrowthPlan::builder(&small)
+        .grow_at(10, &mid, "stackbert")
+        .grow_at_with(20, &large, "ligo", LigoOptions { steps: 3, ..Default::default() })
+        .build()
+        .unwrap();
+    let corpus = Corpus::new(small.vocab, 0);
+    (small, plan, corpus)
+}
+
+/// Index-pure batch source — the property that makes the step counter the
+/// entire data cursor, so both runs see byte-identical microbatches.
+fn mk_batches(corpus: &Corpus, cfg: &ModelConfig) -> Batches {
+    let c1 = corpus.clone();
+    let s1 = cfg.clone();
+    let c2 = corpus.clone();
+    let s2 = cfg.clone();
+    Batches::shared(
+        move |step| mlm_batch(&c1, &s1, &mut Rng::new(step as u64)),
+        move |i| mlm_batch(&c2, &s2, &mut Rng::new(0x55AA + i as u64)),
+    )
+}
+
+fn reference_run(
+    rt: &Runtime,
+    small: &ModelConfig,
+    plan: &GrowthPlan,
+    corpus: &Corpus,
+) -> (Curve, Store) {
+    let params = Trainer::scratch_params(rt, small, 0).unwrap();
+    let mut tr = Trainer::new(rt, small, tc(), params).unwrap();
+    let mut b = mk_batches(corpus, small);
+    let curve = tr.run_plan(rt, "run", &mut b, STEPS, plan).unwrap();
+    (curve, tr.params)
+}
+
+/// Train with a `every`-step checkpoint cadence, die at `kill_at`, resume
+/// from the latest good snapshot, and finish the original budget.
+fn kill_and_resume(
+    rt: &Runtime,
+    small: &ModelConfig,
+    plan: &GrowthPlan,
+    corpus: &Corpus,
+    kill_at: usize,
+    every: usize,
+    dir: &PathBuf,
+) -> (Curve, Store) {
+    std::fs::remove_dir_all(dir).ok();
+    let params = Trainer::scratch_params(rt, small, 0).unwrap();
+    let mut tr = Trainer::new(rt, small, tc(), params).unwrap();
+    tr.checkpoint_every(every, dir.clone());
+    let mut b = mk_batches(corpus, small);
+    fault::set_override(Some(Fault::KillAtStep(kill_at)));
+    let err = tr.run_plan(rt, "run", &mut b, STEPS, plan).unwrap_err();
+    assert!(err.to_string().contains("fault injection"), "{err}");
+    fault::clear_override();
+    drop(tr); // the crashed process is gone; only the disk survives
+
+    let (mut tr, resumed) = Trainer::resume_latest(rt, tc(), dir).unwrap();
+    assert_eq!(
+        tr.step_count(),
+        (kill_at / every) * every,
+        "kill@{kill_at}: resumed from the wrong snapshot"
+    );
+    let mut b = mk_batches(corpus, small);
+    let curve = tr.run_plan_resumed(rt, "run", &mut b, STEPS, plan, resumed).unwrap();
+    (curve, tr.params)
+}
+
+/// Bitwise curve equality on everything the invariant covers (wall time is
+/// real time and exempt).
+fn assert_curves_bitwise(got: &Curve, want: &Curve, what: &str) {
+    assert_eq!(got.steps, want.steps, "{what}: eval steps diverged");
+    assert_eq!(got.marks, want.marks, "{what}: growth marks diverged");
+    assert_eq!(got.metric.len(), want.metric.len(), "{what}: metric series length");
+    for (i, (a, b)) in got.loss.iter().zip(&want.loss).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: loss[{i}] {a} vs {b}");
+    }
+    for (i, (a, b)) in got.flops.iter().zip(&want.flops).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: flops[{i}] {a} vs {b}");
+    }
+    for (i, (a, b)) in got.metric.iter().zip(&want.metric).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: metric[{i}] {a} vs {b}");
+    }
+}
+
+fn assert_stores_bitwise(got: &Store, want: &Store, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: tensor count");
+    for ((ka, ta), (kb, tb)) in got.iter().zip(want.iter()) {
+        assert_eq!(ka, kb, "{what}: tensor name order");
+        assert_eq!(ta.shape, tb.shape, "{what}: '{ka}' shape");
+        for (i, (x, y)) in ta.f32s().iter().zip(tb.f32s()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: '{ka}'[{i}] {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn kill_and_resume_is_bitwise_across_growth_boundaries() {
+    let Some(rt) = native_runtime() else { return };
+    let reg = Registry::builtin();
+    let (small, plan, corpus) = fixture(&reg);
+    let (ref_curve, ref_params) = reference_run(&rt, &small, &plan, &corpus);
+    let dir = std::env::temp_dir().join("ligo_ckpt_resume").join("kills");
+    // before the first growth, exactly at each stage boundary (the
+    // checkpoint precedes the stage, so resume replays the growth once),
+    // and after the plan completes
+    for kill_at in [7usize, 10, 20, 25] {
+        let (curve, params) =
+            kill_and_resume(&rt, &small, &plan, &corpus, kill_at, 1, &dir);
+        assert_curves_bitwise(&curve, &ref_curve, &format!("kill@{kill_at}"));
+        assert_stores_bitwise(&params, &ref_params, &format!("kill@{kill_at}"));
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn resume_is_bitwise_under_worker_sharding() {
+    let Some(rt) = native_runtime() else { return };
+    let reg = Registry::builtin();
+    let (small, plan, corpus) = fixture(&reg);
+    let dir = std::env::temp_dir().join("ligo_ckpt_resume").join("workers");
+    let mut finals: Vec<Store> = Vec::new();
+    for w in [1usize, 2] {
+        parallel::set_workers_override(Some(w));
+        let (ref_curve, ref_params) = reference_run(&rt, &small, &plan, &corpus);
+        let (curve, params) = kill_and_resume(&rt, &small, &plan, &corpus, 15, 5, &dir);
+        parallel::set_workers_override(None);
+        assert_curves_bitwise(&curve, &ref_curve, &format!("workers {w}"));
+        assert_stores_bitwise(&params, &ref_params, &format!("workers {w}"));
+        finals.push(ref_params);
+    }
+    // and the sharded path itself is worker-count invariant, so the two
+    // reference runs agree with each other too
+    assert_stores_bitwise(&finals[1], &finals[0], "workers 2 vs 1");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn resume_falls_back_past_a_corrupted_newest_checkpoint() {
+    let Some(rt) = native_runtime() else { return };
+    let reg = Registry::builtin();
+    let (small, plan, corpus) = fixture(&reg);
+    let (ref_curve, ref_params) = reference_run(&rt, &small, &plan, &corpus);
+    let dir = std::env::temp_dir().join("ligo_ckpt_resume").join("fallback");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let params = Trainer::scratch_params(&rt, &small, 0).unwrap();
+    let mut tr = Trainer::new(&rt, &small, tc(), params).unwrap();
+    tr.checkpoint_every(5, dir.clone());
+    let mut b = mk_batches(&corpus, &small);
+    fault::set_override(Some(Fault::KillAtStep(17)));
+    tr.run_plan(&rt, "run", &mut b, STEPS, &plan).unwrap_err();
+    fault::clear_override();
+    drop(tr);
+
+    // flip one byte mid-file in the newest snapshot (step 15): its CRC
+    // check must fail and the resume must fall back to step 10
+    let newest = checkpoint::checkpoint_path(&dir, 15);
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&newest, &bytes).unwrap();
+
+    let (mut tr, resumed) = Trainer::resume_latest(&rt, tc(), &dir).unwrap();
+    assert_eq!(tr.step_count(), 10, "resume must skip the corrupted snapshot");
+    let mut b = mk_batches(&corpus, &small);
+    let curve = tr.run_plan_resumed(&rt, "run", &mut b, STEPS, &plan, resumed).unwrap();
+    assert_curves_bitwise(&curve, &ref_curve, "fallback resume");
+    assert_stores_bitwise(&tr.params, &ref_params, "fallback resume");
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -10,7 +10,11 @@
 //!   registry preset, with greedy-token agreement.
 //! * **(b) scheduler determinism.** Any admission order, concurrency cap,
 //!   or staggered interleaving of S sessions yields per-session token
-//!   streams identical to each session decoded alone.
+//!   streams identical to each session decoded alone — including under
+//!   page-pool backpressure (capped pools serialize admission but never
+//!   change a stream or panic) and per-session deadline budgets (expired
+//!   sessions are evicted with a partial completion that prefixes their
+//!   solo stream, at the same cut point under every interleaving).
 //! * **(c) paged allocator safety.** Random alloc/free workloads never
 //!   leak or alias pages, and a warm decode loop performs zero fresh
 //!   arena allocations and zero fresh pool pages.
@@ -234,9 +238,10 @@ fn any_admission_interleaving_reproduces_solo_token_streams() {
             top_k: ks[i],
             top_p: ps[i],
             seed: 100 + i as u64,
+            deadline_steps: 0,
         })
         .collect();
-    let opts = |ms: usize| ServeOptions { max_sessions: ms, page_tokens: 4 };
+    let opts = |ms: usize| ServeOptions { max_sessions: ms, page_tokens: 4, max_pages: 0 };
 
     // ground truth: each session decoded entirely alone
     let mut solo: Vec<Completion> = reqs
@@ -288,6 +293,94 @@ fn any_admission_interleaving_reproduces_solo_token_streams() {
     s.run().unwrap();
     assert_eq!(s.pool().live(), 0);
     check(s.take_done(), "staggered admission");
+}
+
+#[test]
+fn backpressure_and_deadlines_preserve_scheduler_determinism() {
+    let cfg = tiny_gpt("robust_gpt", 2, 8, 2, 48, 16);
+    let params = Store::det_init(&param_shapes(&cfg), 33);
+    let dec = Decoder::new(&cfg, &params).unwrap();
+    let plens = [2usize, 5, 3, 7, 1];
+    let news = [6usize, 3, 8, 2, 5];
+    let mut rng = Rng::new(0xAC);
+    let reqs: Vec<Request> = (0..5)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..plens[i]).map(|_| rng.below(cfg.vocab) as i32).collect(),
+            max_new: news[i],
+            top_k: [1usize, 4, 8, 2, 6][i],
+            top_p: [1.0f32, 0.9, 0.6, 1.0, 0.8][i],
+            seed: 200 + i as u64,
+            deadline_steps: 0,
+        })
+        .collect();
+    let opts = ServeOptions { max_sessions: 3, page_tokens: 4, max_pages: 0 };
+
+    // ground truth: each session decoded alone on an uncapped pool
+    let mut solo: Vec<Completion> = reqs
+        .iter()
+        .map(|r| {
+            let mut s = Scheduler::new(&dec, ServeOptions { max_sessions: 1, ..opts });
+            s.submit(r.clone()).unwrap();
+            s.run().unwrap();
+            s.take_done().pop().unwrap()
+        })
+        .collect();
+    solo.sort_by_key(|c| c.id);
+
+    // the largest session needs layers*2*ceil((3+8)/4) = 12 pages; caps
+    // from barely-one-session up to comfortable must all reproduce the
+    // solo streams, with the pool never growing past its cap
+    for cap in [12usize, 16, 20, 48] {
+        let mut s = Scheduler::new(&dec, ServeOptions { max_pages: cap, ..opts });
+        for r in &reqs {
+            s.submit(r.clone()).unwrap();
+        }
+        while s.step().unwrap() {
+            assert!(s.pool().total() <= cap, "cap {cap}: pool grew past its cap");
+        }
+        assert_eq!(s.pool().live(), 0, "cap {cap}: leaked pages");
+        let mut done = s.take_done();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done, solo, "cap {cap} changed a token stream");
+    }
+
+    // a request that can never fit is a typed submit error, not a panic
+    let mut s = Scheduler::new(&dec, ServeOptions { max_pages: 4, ..opts });
+    let err = s.submit(reqs[2].clone()).unwrap_err().to_string();
+    assert!(err.contains("capped at 4"), "{err}");
+
+    // deadline budgets: capping session 2 (max_new 8) at 3 decode steps
+    // must yield a 4-token prefix of its solo stream (complete == false)
+    // while every peer is untouched — under every concurrency level
+    let deadline = 3u64;
+    for ms in [1usize, 2, 3, 5] {
+        let mut s = Scheduler::new(&dec, ServeOptions { max_sessions: ms, ..opts });
+        for r in &reqs {
+            let mut r = r.clone();
+            if r.id == 2 {
+                r.deadline_steps = deadline;
+            }
+            s.submit(r).unwrap();
+        }
+        s.run().unwrap();
+        assert_eq!(s.pool().live(), 0, "ms {ms}: deadline eviction leaked pages");
+        let mut done = s.take_done();
+        done.sort_by_key(|c| c.id);
+        for (got, want) in done.iter().zip(&solo) {
+            if got.id == 2 {
+                assert!(!got.complete, "ms {ms}: expired session marked complete");
+                assert_eq!(got.tokens.len(), 1 + deadline as usize);
+                assert_eq!(
+                    got.tokens[..],
+                    want.tokens[..got.tokens.len()],
+                    "ms {ms}: partial stream is not a solo prefix"
+                );
+            } else {
+                assert_eq!(got, want, "ms {ms}: deadline on session 2 disturbed session {}", got.id);
+            }
+        }
+    }
 }
 
 // ---------------------------------------------------------------- (c) ---
